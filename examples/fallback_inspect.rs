@@ -1,0 +1,82 @@
+//! Numeric-format tour: inspect what dynamic block-level fallback does
+//! to a GLU activation tensor, entirely in the Rust core library.
+//!
+//!     cargo run --release --example fallback_inspect
+//!
+//! Prints the paper's §4.1 outlier anatomy (Table 1-style stats), the
+//! block fallback map (Fig 4a), the RMSE story (Fig 3b: fallback vs
+//! INT8 vs INT16), and the underflow rates that motivate the method.
+
+use dbfq::outlier::{column_concentration, fallback_map, outlier_stats,
+                    ActivationModel};
+use dbfq::quant::{self, metrics, Criterion, Rounding, INT8_LEVELS};
+use dbfq::util::bench::Table;
+
+fn main() {
+    // 1. A GLU activation with the paper's outlier structure.
+    let act = ActivationModel::glu_llm(512, 1024).sample(7);
+    let s = outlier_stats(&act);
+    println!("== outlier anatomy (paper §4.1 / Table 1) ==");
+    println!("token-wise max |x|  : {:8.1}", s.token_wise);
+    println!("channel-wise max |x|: {:8.1}", s.channel_wise);
+    println!("others max |x|      : {:8.1}   (P2: unstructured)",
+             s.others);
+    println!("fraction < 1% of max: {:8.3}   (P3: sparsity)\n",
+             s.sparsity_99);
+
+    // 2. Quantization error of the candidate formats (Fig 3b).
+    let mut t = Table::new(&["format", "rmse", "underflow"]);
+    let bq = quant::block_quant(&act, 128, INT8_LEVELS, Rounding::Nearest);
+    t.row(&[
+        "INT8 128x128".into(),
+        format!("{:.5}", metrics::rmse(&bq.dequant().data, &act.data)),
+        format!("{:.3}", metrics::underflow_rate(&act.data, &bq.q)),
+    ]);
+    let i16 = quant::int16_block_quant(&act, 128);
+    t.row(&[
+        "INT16 128x128".into(),
+        format!("{:.5}", metrics::rmse(&i16.dequant().data, &act.data)),
+        "-".into(),
+    ]);
+    for rate in [0.1, 0.2, 0.5, 1.0] {
+        let probe = quant::fallback_quant(&act, f32::INFINITY, 128,
+                                          INT8_LEVELS, Criterion::AbsMax);
+        let theta = quant::theta_for_rate(&probe.metric, rate);
+        let fq = quant::fallback_quant(&act, theta, 128, INT8_LEVELS,
+                                       Criterion::AbsMax);
+        t.row(&[
+            format!("Fallback {:.0}%", 100.0 * fq.fallback_rate()),
+            format!("{:.5}", metrics::rmse(&fq.dequant().data, &act.data)),
+            "-".into(),
+        ]);
+    }
+    println!("== representation error (Fig 3b story) ==");
+    t.print();
+
+    // 3. The fallback map (Fig 4a): which blocks fall back at 20%?
+    let (u, rb, cb) = fallback_map(&act, 128, 0.2);
+    println!("\n== fallback block map (Fig 4a, {rb}x{cb} blocks, \
+              20% rate) ==");
+    for r in 0..rb {
+        let row: String = (0..cb)
+            .map(|c| if u[r * cb + c] { '#' } else { '.' })
+            .collect();
+        println!("  {row}");
+    }
+    println!(
+        "column concentration (top-2 cols): {:.2} — channel-wise \
+         pattern with occasional scatter",
+        column_concentration(&u, rb, cb, 2)
+    );
+
+    // 4. ACT-MEM math (paper §5.2): INT10 1x128 context = 5/8 of BF16.
+    let gq = quant::group_quant(&act, 128, 10);
+    let bf16 = act.data.len() * 2;
+    println!(
+        "\nnon-linear context: INT10 1x128 = {} bytes vs BF16 {} \
+         ({:.0}%)",
+        gq.bytes(),
+        bf16,
+        100.0 * gq.bytes() as f64 / bf16 as f64
+    );
+}

@@ -1,0 +1,67 @@
+//! Quickstart: train a tiny GLU transformer with dynamic block-level
+//! fallback INT8 quantization, entirely from Rust.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Walks through the public API surface: open the artifact runtime,
+//! build a trainer, stream synthetic data, watch the delay-threshold
+//! controller (Algorithm 2) keep the fallback rate inside [0.1, 0.3],
+//! then evaluate.
+
+use anyhow::Result;
+
+use dbfq::coordinator::{TrainConfig, Trainer};
+use dbfq::data::Corpus;
+use dbfq::model::Method;
+use dbfq::runtime::{artifacts_dir, Runtime};
+use dbfq::util::rng::Pcg64;
+
+fn main() -> Result<()> {
+    // 1. Open the AOT artifact registry (HLO text + manifest).
+    let rt = Runtime::open(&artifacts_dir())?;
+    let prof = rt.profile("tiny")?.clone();
+    println!(
+        "model: d={} layers={} params={}  platform={}",
+        prof.d_model, prof.n_layers, prof.n_params, rt.platform()
+    );
+
+    // 2. Configure fallback-quantized training (paper defaults:
+    //    INT8 blocks, SR for gradients, rate band [0.1, 0.3], alpha 1.3).
+    let steps = 60;
+    let cfg = TrainConfig::new("tiny", Method::Fallback, 42, steps);
+
+    // 3. Data: synthetic Zipfian byte corpus.
+    let corpus = Corpus::synthetic(100_000, prof.vocab, 7);
+    let mut rng = Pcg64::new(42);
+
+    // 4. Train.
+    let mut trainer = Trainer::new(&rt, cfg)?;
+    for s in 0..steps {
+        let tokens = corpus.sample_batch(prof.batch, prof.seq_len, &mut rng);
+        let st = trainer.step_on(&tokens)?;
+        if s % 10 == 0 || s + 1 == steps {
+            println!(
+                "step {:3}  loss {:.4}  fallback-rate {:.3}  θ̄ {:.3}",
+                st.step, st.loss, st.mean_fallback_rate, st.mean_theta
+            );
+        }
+    }
+
+    // 5. Evaluate.
+    let eval = corpus.eval_batches(prof.batch, prof.seq_len, 8);
+    let loss = trainer.eval_on(&eval)?;
+    println!("eval: loss {loss:.4}  ppl {:.2}", loss.exp());
+
+    // 6. The same numeric format, natively in Rust (no PJRT):
+    let mut mrng = Pcg64::new(1);
+    let x = dbfq::util::Mat::randn(256, 256, 1.0, &mut mrng);
+    let w = dbfq::util::Mat::randn(256, 256, 1.0, &mut mrng);
+    let exact = dbfq::gemm::matmul(&x, &w, 1);
+    let (c, rate) = dbfq::gemm::fallback_matmul(&x, &w, 4.0, 128, 1);
+    println!(
+        "rust fallback GEMM: rate {:.3}, rel-err {:.5}",
+        rate,
+        dbfq::quant::metrics::rel_err(&c.data, &exact.data)
+    );
+    Ok(())
+}

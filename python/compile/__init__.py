@@ -1,0 +1,5 @@
+"""DBFQ compile-time Python package (L1 Pallas kernels + L2 JAX model).
+
+Runs only at ``make artifacts`` time; never imported on the Rust request
+path.
+"""

@@ -1,0 +1,309 @@
+"""AOT driver: lower every L2 entry point to HLO *text* artifacts.
+
+HLO text (not serialized HloModuleProto) is the interchange format — the
+``xla`` crate's xla_extension 0.5.1 rejects jax>=0.5 protos with 64-bit
+instruction ids; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Emits ``artifacts/<name>.hlo.txt`` plus ``artifacts/manifest.json``
+describing every artifact's I/O signature and each model profile's
+parameter layout, so the Rust runtime is fully self-describing.
+
+Profiles:
+  tiny   — test-sized model (fast; used by cargo test + quickstart)
+  probe  — ablation model for gradient-cosine sweeps (Figs 3c/5/7a)
+  small  — pretraining-comparison model (Fig 7b/8, Table 4)
+  e2e    — ~100M-parameter model for the end-to-end example
+
+Python runs only here (``make artifacts``); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import quantized as Q
+from . import trainstep as T
+from .kernels import block_quant as kbq
+from .kernels import fallback_gemm as kfg
+from .kernels import group_quant as kgq
+
+MODES = [Q.BF16, Q.BLOCK, Q.FALLBACK, Q.JETFIRE]
+
+
+@dataclasses.dataclass(frozen=True)
+class Profile:
+    name: str
+    mcfg: M.ModelConfig
+    batch: int
+    block: int
+    group: int
+
+
+PROFILES = {
+    "tiny": Profile(
+        "tiny",
+        M.ModelConfig(vocab=64, d_model=64, n_layers=2, n_heads=2,
+                      d_ff=128, seq_len=32),
+        batch=2, block=16, group=16),
+    "probe": Profile(
+        "probe",
+        M.ModelConfig(vocab=256, d_model=256, n_layers=4, n_heads=4,
+                      d_ff=1024, seq_len=128),
+        batch=2, block=128, group=128),
+    "small": Profile(
+        "small",
+        M.ModelConfig(vocab=256, d_model=384, n_layers=6, n_heads=6,
+                      d_ff=1536, seq_len=256),
+        batch=2, block=128, group=128),
+    "e2e": Profile(
+        "e2e",
+        M.ModelConfig(vocab=256, d_model=768, n_layers=12, n_heads=12,
+                      d_ff=3072, seq_len=256),
+        batch=2, block=128, group=128),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dt(s):
+    return str(s.dtype)
+
+
+class Emitter:
+    def __init__(self, outdir: str):
+        self.outdir = outdir
+        self.manifest = {"artifacts": {}, "profiles": {}}
+
+    def emit(self, name: str, fn, specs, input_names, output_names):
+        lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *specs)
+        outs = jax.tree.leaves(out_avals)
+        self.manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [{"name": n, "shape": list(s.shape), "dtype": _dt(s)}
+                       for n, s in zip(input_names, specs)],
+            "outputs": [{"name": n, "shape": list(o.shape), "dtype": _dt(o)}
+                        for n, o in zip(output_names, outs)],
+        }
+        print(f"  wrote {name}: {len(text)/1e6:.2f} MB")
+
+    def profile_meta(self, prof: Profile):
+        layout, n_params = M.param_layout(prof.mcfg)
+        mc = prof.mcfg
+        self.manifest["profiles"][prof.name] = {
+            "model": {
+                "vocab": mc.vocab, "d_model": mc.d_model,
+                "n_layers": mc.n_layers, "n_heads": mc.n_heads,
+                "d_ff": mc.d_ff, "seq_len": mc.seq_len, "glu": mc.glu,
+            },
+            "batch": prof.batch, "block": prof.block, "group": prof.group,
+            "n_params": n_params,
+            "n_sites": 4 * mc.n_layers + 1,
+            "param_layout": layout,
+        }
+
+    def save_manifest(self):
+        with open(os.path.join(self.outdir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1)
+
+
+def emit_profile(em: Emitter, prof: Profile, modes, train=True,
+                 eval_=True, prefix_eval=False, probe=False,
+                 act_probe=False, blocksize_sweep=False,
+                 nonglu=False):
+    mc = prof.mcfg
+    em.profile_meta(prof)
+    P = mc.n_params()
+    n_sites = 4 * mc.n_layers + 1
+    tok = _spec((prof.batch, mc.seq_len + 1), jnp.int32)
+    theta = _spec((n_sites,))
+    qs = _spec((len(T.QSCALAR_NAMES),))
+    pv = _spec((P,))
+
+    # init (mode-independent)
+    em.emit(f"init_{prof.name}", T.make_init(mc),
+            [_spec((), jnp.int32)], ["seed"], ["params"])
+
+    for mode in modes:
+        qcfg = Q.QuantConfig(
+            mode=mode,
+            block=32 if mode == Q.JETFIRE else prof.block,
+            group=prof.group,
+            nonlinear_int8=(mode == Q.JETFIRE))
+        tag = f"{prof.name}_{mode}"
+        if train:
+            em.emit(
+                f"train_{tag}", T.make_train_step(qcfg, mc),
+                [pv, pv, pv, _spec(()), tok, _spec((), jnp.int32),
+                 theta, qs, _spec((3,))],
+                ["params", "m", "v", "step", "tokens", "seed", "theta",
+                 "qscalars", "opt"],
+                ["params", "m", "v", "loss", "rates", "grad_norm"])
+        if eval_:
+            em.emit(
+                f"eval_{tag}", T.make_eval_step(qcfg, mc),
+                [pv, tok, theta, qs],
+                ["params", "tokens", "theta", "qscalars"],
+                ["loss", "per_token_loss", "rates"])
+        if prefix_eval and mode != Q.BF16:
+            em.emit(
+                f"evalp_{tag}", T.make_eval_step(qcfg, mc, with_prefix=True),
+                [pv, _spec((1, mc.seq_len + 1), jnp.int32), theta, qs,
+                 _spec((), jnp.int32)],
+                ["params", "tokens", "theta", "qscalars", "prefix_len"],
+                ["loss", "per_token_loss", "rates"])
+        if probe:
+            em.emit(
+                f"grads_{tag}", T.make_probe_grads(qcfg, mc),
+                [pv, tok, _spec((), jnp.int32), theta, qs],
+                ["params", "tokens", "seed", "theta", "qscalars"],
+                ["loss", "grads", "rates"])
+
+    if act_probe:
+        # Capture the DownProj input (GLU output) of the last layer in
+        # *unquantized* form — feeds the outlier analyses (Fig 2c, 4a).
+        qcfg = Q.QuantConfig(mode=Q.BF16, block=prof.block, group=prof.group)
+        em.emit(
+            f"act_{prof.name}",
+            T.make_activation_probe(qcfg, mc, mc.n_layers - 1),
+            [pv, tok, theta, qs],
+            ["params", "tokens", "theta", "qscalars"],
+            ["act"])
+
+    if nonglu:
+        # Matched non-GLU (GELU) variant for Table 1 / Fig 2 comparisons.
+        mc_ng = dataclasses.replace(mc, glu=False, d_ff=2 * mc.d_ff)
+        prof_ng = Profile(prof.name + "_nonglu", mc_ng, prof.batch,
+                          prof.block, prof.group)
+        em.profile_meta(prof_ng)
+        P_ng = mc_ng.n_params()
+        pv_ng = _spec((P_ng,))
+        em.emit(f"init_{prof_ng.name}", T.make_init(mc_ng),
+                [_spec((), jnp.int32)], ["seed"], ["params"])
+        qcfg = Q.QuantConfig(mode=Q.BF16, block=prof.block, group=prof.group)
+        em.emit(
+            f"train_{prof_ng.name}_bf16", T.make_train_step(qcfg, mc_ng),
+            [pv_ng, pv_ng, pv_ng, _spec(()), tok, _spec((), jnp.int32),
+             theta, qs, _spec((3,))],
+            ["params", "m", "v", "step", "tokens", "seed", "theta",
+             "qscalars", "opt"],
+            ["params", "m", "v", "loss", "rates", "grad_norm"])
+        em.emit(
+            f"act_{prof_ng.name}",
+            T.make_activation_probe(qcfg, mc_ng, mc_ng.n_layers - 1),
+            [pv_ng, tok, theta, qs],
+            ["params", "tokens", "theta", "qscalars"],
+            ["act"])
+
+    if blocksize_sweep:
+        # Fig 4(b): PPL vs quantization block size, naive vs fallback.
+        for bs in [32, 64, 128, 256]:
+            for mode in [Q.BLOCK, Q.FALLBACK]:
+                qcfg = Q.QuantConfig(mode=mode, block=bs, group=prof.group)
+                em.emit(
+                    f"eval_{prof.name}_{mode}_bs{bs}",
+                    T.make_eval_step(qcfg, mc),
+                    [pv, tok, theta, qs],
+                    ["params", "tokens", "theta", "qscalars"],
+                    ["loss", "per_token_loss", "rates"])
+
+
+def emit_kernel_ops(em: Emitter):
+    """Op-level artifacts lowered from the *actual Pallas kernels* —
+    executed by the Rust runtime tests to prove the L1→L3 path and to
+    cross-validate the Rust quant/gemm implementations bitwise."""
+    m, n, k, b = 64, 48, 80, 16
+    mb, nb, kb = m // b, n // b, k // b
+
+    def fb_gemm_op(qa, sa, rqa, rsa, u, qb, sb):
+        return kfg.fallback_gemm(qa, sa, rqa, rsa, u, qb, sb, block=b)
+
+    em.emit("op_fallback_gemm", fb_gemm_op,
+            [_spec((m, k)), _spec((mb, kb)), _spec((m, k)), _spec((mb, kb)),
+             _spec((mb, kb)), _spec((k, n)), _spec((kb, nb))],
+            ["qa", "sa", "rqa", "rsa", "u", "qb", "sb"], ["c"])
+
+    def bq_op(x, theta):
+        return kbq.fallback_quant(x, theta, block=b)
+
+    em.emit("op_fallback_quant", bq_op,
+            [_spec((m, k)), _spec(())],
+            ["x", "theta"],
+            ["absmax", "q", "rq", "rscale", "scale", "u"])  # dict sorted
+
+    def gq_op(x, bits):
+        return kgq.group_quant(x, bits, group=16)
+
+    em.emit("op_group_quant", gq_op,
+            [_spec((m, k)), _spec(())],
+            ["x", "bits"], ["q", "scale"])
+
+    def block_gemm_op(qa, sa, qb, sb):
+        return kfg.block_gemm(qa, sa, qb, sb, block=b)
+
+    em.emit("op_block_gemm", block_gemm_op,
+            [_spec((m, k)), _spec((mb, kb)), _spec((k, n)), _spec((kb, nb))],
+            ["qa", "sa", "qb", "sb"], ["c"])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--profiles", default="tiny,probe,small,e2e",
+                    help="comma list; e2e lowers ~100M-param graphs")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    em = Emitter(args.out)
+
+    wanted = args.profiles.split(",")
+
+    if "tiny" in wanted:
+        print("profile tiny")
+        emit_profile(em, PROFILES["tiny"], MODES, train=True, eval_=True,
+                     prefix_eval=True, probe=True, act_probe=True,
+                     nonglu=True)
+    if "probe" in wanted:
+        print("profile probe")
+        emit_profile(em, PROFILES["probe"], [Q.FALLBACK], train=False,
+                     eval_=False, probe=True)
+    if "small" in wanted:
+        print("profile small")
+        emit_profile(em, PROFILES["small"], MODES, train=True, eval_=True,
+                     prefix_eval=True, probe=False, act_probe=True,
+                     blocksize_sweep=True, nonglu=True)
+    if "e2e" in wanted:
+        print("profile e2e")
+        emit_profile(em, PROFILES["e2e"], [Q.BF16, Q.FALLBACK], train=True,
+                     eval_=True)
+
+    print("kernel ops")
+    emit_kernel_ops(em)
+    em.save_manifest()
+    print("manifest written")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""L1 Pallas kernels for DBFQ (interpret=True; see DESIGN.md).
+
+Modules:
+  ref           — pure-jnp oracles (also reused by the L2 model)
+  block_quant   — block / stochastic / fused-fallback quantization kernels
+  fallback_gemm — Algorithm 1 mixed-precision GEMM + plain block GEMM
+  group_quant   — 1 x 128 n-bit context compression kernels
+"""
+
+from . import ref  # noqa: F401
+from . import block_quant  # noqa: F401
+from . import fallback_gemm  # noqa: F401
+from . import group_quant  # noqa: F401

@@ -1,0 +1,164 @@
+"""L1 Pallas kernels: block quantization (round-to-nearest / stochastic).
+
+One grid step handles one ``B x B`` quantization block: the block is the
+Pallas BlockSpec unit, so the HBM→VMEM schedule *is* the quantization
+grouping (DESIGN.md §Hardware-Adaptation). All kernels run with
+``interpret=True`` — the CPU PJRT client cannot execute Mosaic
+custom-calls; correctness is asserted against :mod:`ref` by pytest.
+
+VMEM per grid step (B = 128, f32 staging): in-block 64 KiB + out q-block
+64 KiB + scalars — far below the ~16 MiB budget, leaving headroom for
+double-buffering on real hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+INT8_L = ref.INT8_L
+
+
+def _quant_kernel(x_ref, q_ref, s_ref, m_ref, *, levels: float):
+    """Round-to-nearest INT8 quantization of one block."""
+    x = x_ref[...]
+    absmax = jnp.max(jnp.abs(x))
+    scale = jnp.where(absmax > 0, absmax * (1.0 / levels), 1.0)
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -levels, levels)
+    s_ref[0, 0] = scale
+    m_ref[0, 0] = absmax
+
+
+def _quant_stochastic_kernel(x_ref, n_ref, q_ref, s_ref, m_ref, *,
+                             levels: float):
+    """Stochastic-rounding INT8 quantization of one block.
+
+    ``n_ref`` holds uniform[0,1) noise; q = floor(x/a + u) is unbiased.
+    """
+    x = x_ref[...]
+    absmax = jnp.max(jnp.abs(x))
+    scale = jnp.where(absmax > 0, absmax * (1.0 / levels), 1.0)
+    q = jnp.floor(x / scale + n_ref[...])
+    q_ref[...] = jnp.clip(q, -levels, levels)
+    s_ref[0, 0] = scale
+    m_ref[0, 0] = absmax
+
+
+def _fallback_kernel(x_ref, t_ref, q_ref, s_ref, rq_ref, rs_ref, u_ref,
+                     m_ref, *, levels: float):
+    """Two-step fallback quantization of one block (paper §4.3).
+
+    Step 1 quantizes the block; step 2 quantizes the residual. The
+    fallback indicator u = [absmax > theta] is emitted per block so the
+    GEMM kernel (and the Rust coordinator's threshold controller) can
+    consume it.
+    """
+    x = x_ref[...]
+    theta = t_ref[0, 0]
+    absmax = jnp.max(jnp.abs(x))
+    scale = jnp.where(absmax > 0, absmax * (1.0 / levels), 1.0)
+    q = jnp.clip(jnp.round(x / scale), -levels, levels)
+    resid = x - q * scale
+    rabsmax = jnp.max(jnp.abs(resid))
+    rscale = jnp.where(rabsmax > 0, rabsmax * (1.0 / levels), 1.0)
+    rq = jnp.clip(jnp.round(resid / rscale), -levels, levels)
+    q_ref[...] = q
+    s_ref[0, 0] = scale
+    rq_ref[...] = rq
+    rs_ref[0, 0] = rscale
+    u_ref[0, 0] = (absmax > theta).astype(x.dtype)
+    m_ref[0, 0] = absmax
+
+
+def _grid2d(m: int, n: int, block: int):
+    assert m % block == 0 and n % block == 0, \
+        f"block_quant kernels need block-aligned shapes, got {(m, n)}"
+    return (m // block, n // block)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "levels"))
+def block_quant(x: jnp.ndarray, block: int = 128, levels: float = INT8_L):
+    """Pallas round-to-nearest block quantization.
+
+    Returns (q, scale, absmax): q int8-valued f32 (M, N); scale/absmax
+    (M/B, N/B). Matches :func:`ref.block_quant_ref` exactly (pytest).
+    """
+    m, n = x.shape
+    grid = _grid2d(m, n, block)
+    blk = pl.BlockSpec((block, block), lambda i, j: (i, j))
+    scl = pl.BlockSpec((1, 1), lambda i, j: (i, j))
+    q, s, am = pl.pallas_call(
+        functools.partial(_quant_kernel, levels=levels),
+        grid=grid,
+        in_specs=[blk],
+        out_specs=[blk, scl, scl],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), x.dtype),
+            jax.ShapeDtypeStruct((grid[0], grid[1]), x.dtype),
+            jax.ShapeDtypeStruct((grid[0], grid[1]), x.dtype),
+        ],
+        interpret=True,
+    )(x)
+    return q, s, am
+
+
+@functools.partial(jax.jit, static_argnames=("block", "levels"))
+def block_quant_stochastic(x: jnp.ndarray, noise: jnp.ndarray,
+                           block: int = 128, levels: float = INT8_L):
+    """Pallas stochastic-rounding block quantization (q, scale, absmax)."""
+    m, n = x.shape
+    grid = _grid2d(m, n, block)
+    blk = pl.BlockSpec((block, block), lambda i, j: (i, j))
+    scl = pl.BlockSpec((1, 1), lambda i, j: (i, j))
+    q, s, am = pl.pallas_call(
+        functools.partial(_quant_stochastic_kernel, levels=levels),
+        grid=grid,
+        in_specs=[blk, blk],
+        out_specs=[blk, scl, scl],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), x.dtype),
+            jax.ShapeDtypeStruct((grid[0], grid[1]), x.dtype),
+            jax.ShapeDtypeStruct((grid[0], grid[1]), x.dtype),
+        ],
+        interpret=True,
+    )(x, noise)
+    return q, s, am
+
+
+@functools.partial(jax.jit, static_argnames=("block", "levels"))
+def fallback_quant(x: jnp.ndarray, theta: jnp.ndarray, block: int = 128,
+                   levels: float = INT8_L):
+    """Pallas fused fallback quantization (paper §5.3: "fuse dynamic
+    fallback quantization into a quantization kernel").
+
+    theta: scalar threshold (traced — runtime-adjustable by the Rust
+    delay-threshold controller without recompilation).
+    Returns dict matching :func:`ref.fallback_quant_ref`.
+    """
+    m, n = x.shape
+    grid = _grid2d(m, n, block)
+    blk = pl.BlockSpec((block, block), lambda i, j: (i, j))
+    scl = pl.BlockSpec((1, 1), lambda i, j: (i, j))
+    tsp = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    theta_arr = jnp.asarray(theta, x.dtype).reshape(1, 1)
+    q, s, rq, rs, u, am = pl.pallas_call(
+        functools.partial(_fallback_kernel, levels=levels),
+        grid=grid,
+        in_specs=[blk, tsp],
+        out_specs=[blk, scl, blk, scl, scl, scl],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), x.dtype),
+            jax.ShapeDtypeStruct((grid[0], grid[1]), x.dtype),
+            jax.ShapeDtypeStruct((m, n), x.dtype),
+            jax.ShapeDtypeStruct((grid[0], grid[1]), x.dtype),
+            jax.ShapeDtypeStruct((grid[0], grid[1]), x.dtype),
+            jax.ShapeDtypeStruct((grid[0], grid[1]), x.dtype),
+        ],
+        interpret=True,
+    )(x, theta_arr)
+    return {"q": q, "scale": s, "rq": rq, "rscale": rs, "u": u, "absmax": am}

@@ -1,0 +1,137 @@
+"""L1 Pallas kernel: fallback-quantized GEMM (paper Algorithm 1).
+
+The paper's CUDA kernel assigns one threadblock per C tile and walks the
+K dimension, conditionally loading the residual ("fallback") A block when
+u(i,k) = 1. The TPU-flavoured Pallas mapping (DESIGN.md
+§Hardware-Adaptation):
+
+  * grid = (M/B, N/B, K/B) with k innermost — the BlockSpec index maps
+    express the paper's HBM→VMEM tile schedule;
+  * the INT8 TensorCore MMA becomes an int8 x int8 → int32
+    ``lax.dot_general`` (MXU path on real hardware; exact under
+    interpret=True);
+  * inter-block accumulation is fp32 in the output ref (paper Eq. 1:
+    INT32 block product, FP32 accumulator);
+  * the conditional residual load becomes a multiply by the 0/1 mask
+    u(i,k) — HLO shapes are static, so we always compute and mask;
+    numerics are identical, and the *cost* of conditionality is
+    exercised for real in the Rust CPU GEMM substrate.
+
+VMEM per grid step at B = 128: qa 64 KiB + rqa 64 KiB + qb 64 KiB +
+C accumulator 64 KiB + scalars ≈ 256 KiB (f32 staging; 112 KiB with
+native i8 tiles) — far below ~16 MiB, double-buffering friendly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fallback_gemm_kernel(qa_ref, sa_ref, rqa_ref, rsa_ref, u_ref,
+                          qb_ref, sb_ref, o_ref):
+    """One (i, j, k) grid step: C_ij += deq(A_ik · B_kj) [+ residual]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    qa = qa_ref[...].astype(jnp.int32)
+    qb = qb_ref[...].astype(jnp.int32)
+    # INT8 x INT8 -> INT32 block product (TensorCore / MXU path).
+    prod = jax.lax.dot_general(
+        qa, qb, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    ).astype(jnp.float32)
+    scale = sa_ref[0, 0] * sb_ref[0, 0]
+    acc = prod * scale
+
+    # Fallback block (Algorithm 1 lines 13-16): masked residual product.
+    rqa = rqa_ref[...].astype(jnp.int32)
+    rprod = jax.lax.dot_general(
+        rqa, qb, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    ).astype(jnp.float32)
+    rscale = u_ref[0, 0] * rsa_ref[0, 0] * sb_ref[0, 0]
+    acc = acc + rprod * rscale
+
+    o_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def fallback_gemm(qa, sa, rqa, rsa, u, qb, sb, block: int = 128):
+    """Mixed-precision GEMM per Algorithm 1.
+
+    Args (all f32; q tensors hold int8-valued entries):
+      qa, rqa : (M, K) first-step and residual quantized A
+      sa, rsa : (M/B, K/B) scales
+      u       : (M/B, K/B) {0,1} fallback indicators
+      qb      : (K, N) quantized B
+      sb      : (K/B, N/B) scales
+    Returns C : (M, N) f32.
+    """
+    m, k = qa.shape
+    k2, n = qb.shape
+    assert k == k2
+    assert m % block == 0 and n % block == 0 and k % block == 0
+    grid = (m // block, n // block, k // block)
+
+    a_spec = pl.BlockSpec((block, block), lambda i, j, kk: (i, kk))
+    b_spec = pl.BlockSpec((block, block), lambda i, j, kk: (kk, j))
+    o_spec = pl.BlockSpec((block, block), lambda i, j, kk: (i, j))
+    sa_spec = pl.BlockSpec((1, 1), lambda i, j, kk: (i, kk))
+    sb_spec = pl.BlockSpec((1, 1), lambda i, j, kk: (kk, j))
+
+    return pl.pallas_call(
+        _fallback_gemm_kernel,
+        grid=grid,
+        in_specs=[a_spec, sa_spec, a_spec, sa_spec, sa_spec, b_spec, sb_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(qa, sa, rqa, rsa, u, qb, sb)
+
+
+def _block_gemm_kernel(qa_ref, sa_ref, qb_ref, sb_ref, o_ref):
+    """Plain block-quantized GEMM step (paper Eq. 1, no fallback)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    prod = jax.lax.dot_general(
+        qa_ref[...].astype(jnp.int32), qb_ref[...].astype(jnp.int32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    ).astype(jnp.float32)
+    o_ref[...] += prod * (sa_ref[0, 0] * sb_ref[0, 0])
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def block_gemm(qa, sa, qb, sb, block: int = 128):
+    """Plain block-quantized GEMM (paper Eq. 1) as a Pallas kernel."""
+    m, k = qa.shape
+    k2, n = qb.shape
+    assert k == k2
+    assert m % block == 0 and n % block == 0 and k % block == 0
+    grid = (m // block, n // block, k // block)
+
+    a_spec = pl.BlockSpec((block, block), lambda i, j, kk: (i, kk))
+    b_spec = pl.BlockSpec((block, block), lambda i, j, kk: (kk, j))
+    o_spec = pl.BlockSpec((block, block), lambda i, j, kk: (i, j))
+    sa_spec = pl.BlockSpec((1, 1), lambda i, j, kk: (i, kk))
+    sb_spec = pl.BlockSpec((1, 1), lambda i, j, kk: (kk, j))
+
+    return pl.pallas_call(
+        _block_gemm_kernel,
+        grid=grid,
+        in_specs=[a_spec, sa_spec, b_spec, sb_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(qa, sa, qb, sb)

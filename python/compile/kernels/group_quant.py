@@ -1,0 +1,84 @@
+"""L1 Pallas kernels: 1 x G per-group quantization for non-linear
+activation contexts (paper §5.2).
+
+The paper compresses the inputs of Normalization/Activation layers to
+INT10 with 1 x 128 groups before storing them as backward context (5/8 of
+BF16 memory), dequantizing them in the backward kernel. Per-token groups
+make this fusable into the non-linear kernels themselves.
+
+Grid maps one (row-tile, group) pair per step; ``bits`` is a *traced*
+scalar so the Rust side can sweep context precision (Fig 6a / 7a) without
+recompiling artifacts.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 8  # rows handled per grid step; groups stay 1 x G logically
+
+
+def _group_quant_kernel(x_ref, l_ref, q_ref, s_ref):
+    """Quantize ROW_TILE rows x one group of G channels."""
+    x = x_ref[...]
+    levels = l_ref[0, 0]
+    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax * (1.0 / levels), 1.0)
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -levels, levels)
+    s_ref[...] = scale
+
+
+def _group_dequant_kernel(q_ref, s_ref, x_ref):
+    x_ref[...] = q_ref[...] * s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("group",))
+def group_quant(x: jnp.ndarray, bits: jnp.ndarray, group: int = 128):
+    """Per-(1 x group) quantization at a runtime-chosen bit width.
+
+    Returns (q, scale): q shaped like x (integer-valued f32), scale
+    (M, N/G). Matches :func:`ref.group_quant_ref` exactly.
+    """
+    m, n = x.shape
+    assert m % ROW_TILE == 0 and n % group == 0
+    grid = (m // ROW_TILE, n // group)
+    levels = (2.0 ** (jnp.asarray(bits, jnp.float32) - 1.0) - 1.0)
+    levels = levels.reshape(1, 1)
+
+    x_spec = pl.BlockSpec((ROW_TILE, group), lambda i, j: (i, j))
+    l_spec = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    s_spec = pl.BlockSpec((ROW_TILE, 1), lambda i, j: (i, j))
+    q, s = pl.pallas_call(
+        _group_quant_kernel,
+        grid=grid,
+        in_specs=[x_spec, l_spec],
+        out_specs=[x_spec, s_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), x.dtype),
+            jax.ShapeDtypeStruct((m, n // group), x.dtype),
+        ],
+        interpret=True,
+    )(x, levels)
+    return q, s
+
+
+@functools.partial(jax.jit, static_argnames=("group",))
+def group_dequant(q: jnp.ndarray, scale: jnp.ndarray, group: int = 128):
+    """Dequantize a 1 x group representation back to dense."""
+    m, n = q.shape
+    assert m % ROW_TILE == 0 and n % group == 0
+    grid = (m // ROW_TILE, n // group)
+    q_spec = pl.BlockSpec((ROW_TILE, group), lambda i, j: (i, j))
+    s_spec = pl.BlockSpec((ROW_TILE, 1), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _group_dequant_kernel,
+        grid=grid,
+        in_specs=[q_spec, s_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), q.dtype),
+        interpret=True,
+    )(q, scale)

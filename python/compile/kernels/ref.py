@@ -1,0 +1,263 @@
+"""Pure-jnp reference oracles for the DBFQ numeric format.
+
+These are the ground truth the Pallas kernels (and the Rust `quant`/`gemm`
+modules, via exported HLO artifacts) are validated against. Everything here
+is written with plain vectorized jnp ops — no Pallas — so it lowers to
+fast, fusable HLO; the L2 model reuses these same functions so the
+train-step artifacts stay tractable on the CPU PJRT backend while being
+bit-identical (asserted by pytest) to the L1 kernels.
+
+Conventions (paper §3.1, §4.3):
+  * A quantization *block* is a ``B x B`` tile (default ``B = 128``).
+  * Scale ``a = absmax / L`` with ``L = 127`` for INT8; zero blocks get
+    scale 1.0 so dequantization is exact.
+  * Fallback representation of a block G is ``[Q(G), Q(G - Q(G))]`` — two
+    INT8 blocks with independent scales (paper §4.3).
+  * Int products inside a block accumulate exactly (int32); across K
+    blocks accumulation is fp32 (paper Eq. 1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INT8_L = 127.0
+
+
+# ---------------------------------------------------------------------------
+# Block partitioning helpers
+# ---------------------------------------------------------------------------
+
+def pad_to_block(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Zero-pad a 2-D matrix so both dims are multiples of ``block``."""
+    m, n = x.shape
+    pm = (-m) % block
+    pn = (-n) % block
+    if pm == 0 and pn == 0:
+        return x
+    return jnp.pad(x, ((0, pm), (0, pn)))
+
+
+def to_blocks(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    """(M, N) -> (M/B, N/B, B, B) view of block tiles (pads first)."""
+    x = pad_to_block(x, block)
+    m, n = x.shape
+    x = x.reshape(m // block, block, n // block, block)
+    return x.transpose(0, 2, 1, 3)
+
+
+def from_blocks(xb: jnp.ndarray, shape) -> jnp.ndarray:
+    """Inverse of :func:`to_blocks`; crops padding back to ``shape``."""
+    mb, nb, b, _ = xb.shape
+    x = xb.transpose(0, 2, 1, 3).reshape(mb * b, nb * b)
+    return x[: shape[0], : shape[1]]
+
+
+# ---------------------------------------------------------------------------
+# Core block quantization
+# ---------------------------------------------------------------------------
+
+def _safe_scale(absmax: jnp.ndarray, levels) -> jnp.ndarray:
+    """absmax/L with zero blocks mapped to scale 1 (so q = 0 exactly)."""
+    inv = 1.0 / jnp.asarray(levels, jnp.float32)
+    return jnp.where(absmax > 0, absmax * inv, 1.0)
+
+
+def block_quant_ref(x: jnp.ndarray, block: int = 128,
+                    levels: float = INT8_L):
+    """Per-block round-to-nearest quantization.
+
+    Returns ``(q, scale, absmax)`` where ``q`` is int8-valued (stored f32
+    for composability), ``scale``/``absmax`` have shape (M/B, N/B).
+    """
+    xb = to_blocks(x, block)
+    absmax = jnp.max(jnp.abs(xb), axis=(2, 3))
+    scale = _safe_scale(absmax, levels)
+    q = jnp.clip(jnp.round(xb / scale[:, :, None, None]), -levels, levels)
+    return q, scale, absmax
+
+
+def block_quant_stochastic_ref(x: jnp.ndarray, noise: jnp.ndarray,
+                               block: int = 128, levels: float = INT8_L):
+    """Per-block *stochastic rounding* quantization (paper §3.1).
+
+    ``noise`` is uniform[0,1) with the same shape as ``x``. x/a is rounded
+    to floor(x/a + u): an unbiased estimator, E[Q_s(x)] = x.
+    """
+    xb = to_blocks(x, block)
+    nb = to_blocks(noise, block)
+    absmax = jnp.max(jnp.abs(xb), axis=(2, 3))
+    scale = _safe_scale(absmax, levels)
+    q = jnp.floor(xb / scale[:, :, None, None] + nb)
+    q = jnp.clip(q, -levels, levels)
+    return q, scale, absmax
+
+
+def block_dequant_ref(q: jnp.ndarray, scale: jnp.ndarray, shape):
+    """Dequantize block representation back to a dense (M, N) matrix."""
+    return from_blocks(q * scale[:, :, None, None], shape)
+
+
+# ---------------------------------------------------------------------------
+# Fallback (residual) quantization — paper §4.3
+# ---------------------------------------------------------------------------
+
+def fallback_quant_ref(x: jnp.ndarray, theta,
+                       block: int = 128, levels: float = INT8_L):
+    """Two-step fallback quantization of outlier blocks.
+
+    Returns a dict with
+      q, scale      — first-step INT8 block representation
+      rq, rscale    — residual INT8 block representation
+      u             — (M/B, N/B) {0,1} fallback indicator, AbsMax > theta
+      absmax        — first-step block AbsMax (used for threshold control)
+    """
+    q, scale, absmax = block_quant_ref(x, block, levels)
+    xb = to_blocks(x, block)
+    resid = xb - q * scale[:, :, None, None]
+    rabsmax = jnp.max(jnp.abs(resid), axis=(2, 3))
+    rscale = _safe_scale(rabsmax, levels)
+    rq = jnp.clip(jnp.round(resid / rscale[:, :, None, None]), -levels, levels)
+    u = (absmax > theta).astype(x.dtype)
+    return {"q": q, "scale": scale, "rq": rq, "rscale": rscale,
+            "u": u, "absmax": absmax}
+
+
+def fallback_dequant_ref(fq: dict, shape) -> jnp.ndarray:
+    """Dequantize the fallback representation (Q + u * ΔQ)."""
+    d = fq["q"] * fq["scale"][:, :, None, None]
+    d = d + fq["u"][:, :, None, None] * fq["rq"] * fq["rscale"][:, :, None, None]
+    return from_blocks(d, shape)
+
+
+def int16_block_quant_ref(x: jnp.ndarray, block: int = 128):
+    """"Double-bit" INT16 comparator for Fig 3(b): one scale, 2^15-1 levels."""
+    return block_quant_ref(x, block, levels=32767.0)
+
+
+# ---------------------------------------------------------------------------
+# Block-quantized GEMM (paper Eq. 1) and fallback GEMM (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def block_gemm_ref(qa, sa, qb, sb) -> jnp.ndarray:
+    """C = sum_k [Q(A_ik) Q(B_kj)]_int * a_ik * b_kj  (paper Eq. 1).
+
+    qa: (Mb, Kb, B, B) int8-valued blocks of A, sa: (Mb, Kb) scales.
+    qb: (Kb, Nb, B, B) int8-valued blocks of B, sb: (Kb, Nb) scales.
+    Returns dense (Mb*B, Nb*B) f32 (caller crops padding).
+
+    Int products inside a block accumulate exactly in int32 (the INT8
+    TensorCore / MXU path); across K blocks accumulation is f32.
+    """
+    mb, kb, b, _ = qa.shape
+    _, nb, _, _ = qb.shape
+
+    def body(k, acc):
+        prod = jnp.einsum(
+            "iab,jbc->ijac",
+            qa[:, k].astype(jnp.int32), qb[k].astype(jnp.int32),
+        ).astype(jnp.float32)
+        w = sa[:, k][:, None] * sb[k][None, :]
+        return acc + prod * w[:, :, None, None]
+
+    acc = jnp.zeros((mb, nb, b, b), jnp.float32)
+    acc = jax.lax.fori_loop(0, kb, body, acc)
+    return acc.transpose(0, 2, 1, 3).reshape(mb * b, nb * b)
+
+
+def fallback_gemm_ref(qa, sa, rqa, rsa, u, qb, sb) -> jnp.ndarray:
+    """Algorithm 1: block GEMM + conditional residual accumulation.
+
+    u: (Mb, Kb) {0,1}. The residual product is masked by u — numerically
+    identical to the paper's conditional load/compute (the *cost* of the
+    conditionality is exercised in the Rust CPU GEMM and the roofline
+    cost model; see DESIGN.md §Hardware-Adaptation).
+    """
+    mb, kb, b, _ = qa.shape
+    _, nb, _, _ = qb.shape
+
+    def body(k, acc):
+        qbk = qb[k].astype(jnp.int32)
+        prod = jnp.einsum("iab,jbc->ijac", qa[:, k].astype(jnp.int32), qbk)
+        rprod = jnp.einsum("iab,jbc->ijac", rqa[:, k].astype(jnp.int32), qbk)
+        w = sa[:, k][:, None] * sb[k][None, :]
+        rw = (u[:, k] * rsa[:, k])[:, None] * sb[k][None, :]
+        out = prod.astype(jnp.float32) * w[:, :, None, None]
+        out = out + rprod.astype(jnp.float32) * rw[:, :, None, None]
+        return acc + out
+
+    acc = jnp.zeros((mb, nb, b, b), jnp.float32)
+    acc = jax.lax.fori_loop(0, kb, body, acc)
+    return acc.transpose(0, 2, 1, 3).reshape(mb * b, nb * b)
+
+
+# ---------------------------------------------------------------------------
+# 1 x G per-group quantization for non-linear activation contexts (§5.2)
+# ---------------------------------------------------------------------------
+
+def group_quant_ref(x: jnp.ndarray, group: int = 128, bits=10.0):
+    """1 x ``group`` per-row-group quantization with ``bits``-bit levels.
+
+    ``bits`` may be a traced scalar (runtime-selectable precision): the
+    level count L = 2^(bits-1) - 1 only affects values, not shapes.
+    Returns (q, scale) with q shaped like x and scale (M, N/G).
+    """
+    m, n = x.shape
+    assert n % group == 0, "channel dim must divide the group size"
+    levels = 2.0 ** (jnp.asarray(bits, jnp.float32) - 1.0) - 1.0
+    xg = x.reshape(m, n // group, group)
+    absmax = jnp.max(jnp.abs(xg), axis=2)
+    scale = _safe_scale(absmax, levels)
+    q = jnp.clip(jnp.round(xg / scale[:, :, None]), -levels, levels)
+    return q.reshape(m, n), scale
+
+
+def group_dequant_ref(q: jnp.ndarray, scale: jnp.ndarray, group: int = 128):
+    m, n = q.shape
+    qg = q.reshape(m, n // group, group)
+    return (qg * scale[:, :, None]).reshape(m, n)
+
+
+# ---------------------------------------------------------------------------
+# Fallback-criterion metrics (§4.4): AbsMax / L1 / L1-Rel per block
+# ---------------------------------------------------------------------------
+
+def criterion_metrics_ref(x: jnp.ndarray, block: int = 128,
+                          levels: float = INT8_L):
+    """Per-block values of the three candidate fallback criteria.
+
+    Returns dict of (M/B, N/B) arrays: absmax, l1 (absolute quantization
+    error), l1rel (relative quantization error).
+    """
+    q, scale, absmax = block_quant_ref(x, block, levels)
+    xb = to_blocks(x, block)
+    err = jnp.sum(jnp.abs(xb - q * scale[:, :, None, None]), axis=(2, 3))
+    tot = jnp.sum(jnp.abs(xb), axis=(2, 3))
+    l1rel = jnp.where(tot > 0, err / tot, 0.0)
+    return {"absmax": absmax, "l1": err, "l1rel": l1rel}
+
+
+# ---------------------------------------------------------------------------
+# Convenience end-to-end quantized matmuls (used by tests and the L2 model)
+# ---------------------------------------------------------------------------
+
+def quantized_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, block: int = 128,
+                         levels: float = INT8_L) -> jnp.ndarray:
+    """Plain block-quantized A @ B (both round-to-nearest)."""
+    qa, sa, _ = block_quant_ref(a, block, levels)
+    qbm, sbm, _ = block_quant_ref(b, block, levels)
+    c = block_gemm_ref(qa, sa, qbm, sbm)
+    return c[: a.shape[0], : b.shape[1]]
+
+
+def fallback_matmul_ref(a: jnp.ndarray, b: jnp.ndarray,
+                        theta, block: int = 128,
+                        levels: float = INT8_L):
+    """Fallback A (per Alg 1) times block-quantized B; returns (C, rate)."""
+    fa = fallback_quant_ref(a, theta, block, levels)
+    qbm, sbm, _ = block_quant_ref(b, block, levels)
+    c = fallback_gemm_ref(fa["q"], fa["scale"], fa["rq"], fa["rscale"],
+                          fa["u"], qbm, sbm)
+    rate = jnp.mean(fa["u"])
+    return c[: a.shape[0], : b.shape[1]], rate

@@ -1,0 +1,256 @@
+"""L2 model: Llama-style transformer with GLU, built on quantized ops.
+
+Architecture (paper §6.2 pretraining config, scaled): token embedding →
+N pre-norm blocks (RMSNorm → MHA with RoPE → RMSNorm → SwiGLU MLP) →
+final RMSNorm → LM head. A ``glu=False`` variant (GELU MLP, GPT-2-style)
+supports the paper's GLU-vs-non-GLU outlier analysis (Table 1, Fig 2).
+
+Every linear layer is a :func:`quantized.quantized_linear` *site*; sites
+are numbered (layer, j) with j ∈ {0: attn-in, 1: attn-out, 2: mlp-in,
+3: mlp-down} plus one LM-head site, matching the per-layer fallback
+thresholds θ the Rust delay-threshold controller maintains (Alg 2).
+
+Layers are stacked and scanned (homogeneous pytrees), keeping the lowered
+HLO compact regardless of depth. Attention stays in high precision
+(paper §5.3: FlashAttention is kept BF16 — not part of the contribution).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import quantized as Q
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 256            # byte-level tokenizer (data pipeline, L3)
+    d_model: int = 512
+    n_layers: int = 8
+    n_heads: int = 8
+    d_ff: int = 2048            # GLU intermediate size
+    seq_len: int = 256
+    glu: bool = True            # False -> GELU MLP (GPT-2-style)
+    tie_embeddings: bool = True
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        leaves, _ = _shape_leaves(param_shapes(self))
+        total = 0
+        for shape in leaves:
+            size = 1
+            for s in shape:
+                size *= int(s)
+            total += size
+        return total
+
+
+def _is_shape(x) -> bool:
+    return isinstance(x, tuple)
+
+
+def _shape_leaves(shapes):
+    return jax.tree.flatten(shapes, is_leaf=_is_shape)
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Any]:
+    """Pytree of parameter shapes (stacked per-layer leading dim)."""
+    d, f, L = cfg.d_model, cfg.d_ff, cfg.n_layers
+    mlp_in = (2 * f, d) if cfg.glu else (f, d)
+    shapes = {
+        "emb": (cfg.vocab, d),
+        "blocks": {
+            "ln1": (L, d),
+            "wqkv": (L, 3 * d, d),
+            "wo": (L, d, d),
+            "ln2": (L, d),
+            "win": (L,) + mlp_in,
+            "wdown": (L, d, f),
+        },
+        "ln_f": (d,),
+    }
+    if not cfg.tie_embeddings:
+        shapes["head"] = (cfg.vocab, d)
+    return shapes
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    """GPT-2-style init: N(0, 0.02), residual projections scaled 1/sqrt(2L)."""
+    shapes = param_shapes(cfg)
+    leaves, treedef = _shape_leaves(shapes)
+    keys = jax.random.split(key, len(leaves))
+    std = 0.02
+    resid_std = std / jnp.sqrt(2.0 * cfg.n_layers)
+
+    flat_names = _leaf_names(shapes)
+    out = []
+    for k, shape, name in zip(keys, leaves, flat_names):
+        if name.endswith("ln1") or name.endswith("ln2") or name.endswith("ln_f"):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith("wo") or name.endswith("wdown"):
+            out.append(jax.random.normal(k, shape, jnp.float32) * resid_std)
+        else:
+            out.append(jax.random.normal(k, shape, jnp.float32) * std)
+    return jax.tree.unflatten(treedef, out)
+
+
+def _leaf_names(tree, prefix=""):
+    """Deterministic dotted names for pytree leaves (dict keys sorted)."""
+    names = []
+    if isinstance(tree, dict):
+        for k in sorted(tree.keys()):
+            names.extend(_leaf_names(tree[k], prefix + k + "."))
+    else:
+        assert _is_shape(tree)
+        names.append(prefix[:-1])
+    return names
+
+
+def param_layout(cfg: ModelConfig):
+    """(name, shape, offset) table for the flat f32 parameter vector.
+
+    The Rust runtime uses this layout (via the artifact manifest) to
+    inspect or checkpoint parameters without Python.
+    """
+    shapes = param_shapes(cfg)
+    leaves, _ = _shape_leaves(shapes)
+    names = _leaf_names(shapes)
+    layout, off = [], 0
+    for name, shape in zip(names, leaves):
+        size = 1
+        for s in shape:
+            size *= int(s)
+        layout.append({"name": name, "shape": list(shape), "offset": off,
+                       "size": size})
+        off += size
+    return layout, off
+
+
+def flatten_params(params) -> jnp.ndarray:
+    return jnp.concatenate([p.reshape(-1) for p in jax.tree.leaves(params)])
+
+
+def unflatten_params(cfg: ModelConfig, flat: jnp.ndarray):
+    shapes = param_shapes(cfg)
+    leaves, treedef = _shape_leaves(shapes)
+    out, off = [], 0
+    for shape in leaves:
+        size = 1
+        for s in shape:
+            size *= int(s)
+        out.append(flat[off: off + size].reshape(shape))
+        off += size
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# forward pass
+# ---------------------------------------------------------------------------
+
+def _rope(x: jnp.ndarray) -> jnp.ndarray:
+    """Rotary position embedding over (B, T, H, Dh)."""
+    _, t, _, dh = x.shape
+    half = dh // 2
+    freqs = 10000.0 ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = jnp.arange(t, dtype=jnp.float32)[:, None] * freqs[None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)  # (T, half)
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def _attention(q, k, v, head_dim):
+    """Causal MHA in high precision (paper keeps attention BF16)."""
+    att = jnp.einsum("bthd,bshd->bhts", q, k) / jnp.sqrt(float(head_dim))
+    t = q.shape[1]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    return jnp.einsum("bhts,bshd->bthd", att, v)
+
+
+def _block_apply(qcfg: Q.QuantConfig, mcfg: ModelConfig, x, blk, theta_row,
+                 qp, key, quant_prefix_len=None):
+    """One transformer block; returns (x, rates(4,))."""
+    b, t, d = x.shape
+    nh, hd = mcfg.n_heads, mcfg.head_dim
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+
+    h = rmsnorm_masked(qcfg, x, blk["ln1"], qp, quant_prefix_len)
+    qkv, r0 = Q.quantized_linear(qcfg, h, blk["wqkv"], qp, theta_row[0], k0)
+    qkv = qkv.reshape(b, t, 3, nh, hd)
+    qh = _rope(qkv[:, :, 0])
+    kh = _rope(qkv[:, :, 1])
+    vh = qkv[:, :, 2]
+    a = _attention(qh, kh, vh, hd).reshape(b, t, d)
+    ao, r1 = Q.quantized_linear(qcfg, a, blk["wo"], qp, theta_row[1], k1)
+    x = x + ao
+
+    h = rmsnorm_masked(qcfg, x, blk["ln2"], qp, quant_prefix_len)
+    hin, r2 = Q.quantized_linear(qcfg, h, blk["win"], qp, theta_row[2], k2)
+    if mcfg.glu:
+        g, u = jnp.split(hin, 2, axis=-1)
+        act = Q.swiglu_ctx(qcfg, g, u, qp)
+    else:
+        act = Q.gelu_ctx(qcfg, hin, qp)
+    mo, r3 = Q.quantized_linear(qcfg, act, blk["wdown"], qp, theta_row[3], k3)
+    x = x + mo
+    return x, jnp.stack([r0, r1, r2, r3])
+
+
+def rmsnorm_masked(qcfg, x, gamma, qp, prefix_len):
+    """RMSNorm with context compression; optionally zero-mask tokens
+    beyond ``prefix_len`` *before* quantization (no-leakage eval,
+    Table 4: quantization scales must not see future tokens)."""
+    if prefix_len is not None:
+        t = x.shape[1]
+        keep = (jnp.arange(t) < prefix_len)[None, :, None]
+        x = jnp.where(keep, x, 0.0)
+    return Q.rmsnorm_ctx(qcfg, x, gamma, qp)
+
+
+def forward(qcfg: Q.QuantConfig, mcfg: ModelConfig, params, tokens, qp,
+            key, quant_prefix_len=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Logits + per-site fallback rates.
+
+    tokens: (B, T) int32. Returns (logits (B, T, V), rates (L, 4) ++ head).
+    """
+    x = params["emb"][tokens]
+    blocks = params["blocks"]
+    n_l = mcfg.n_layers
+    keys = jax.random.split(key, n_l + 1)
+
+    def body(x, per_layer):
+        blk, theta_row, k = per_layer
+        x, rates = _block_apply(qcfg, mcfg, x, blk, theta_row, qp, k,
+                                quant_prefix_len)
+        return x, rates
+
+    per_layer = (blocks, qp["theta"], keys[:n_l])
+    x, rates = jax.lax.scan(body, x, per_layer)
+
+    x = rmsnorm_masked(qcfg, x, params["ln_f"], qp, quant_prefix_len)
+    w_head = params["emb"] if mcfg.tie_embeddings else params["head"]
+    logits, r_head = Q.quantized_linear(qcfg, x, w_head, qp,
+                                        qp["theta_head"], keys[n_l])
+    all_rates = jnp.concatenate([rates.reshape(-1), r_head.reshape(1)])
+    return logits, all_rates
+
+
+def loss_fn(qcfg, mcfg, params, tokens, targets, qp, key,
+            quant_prefix_len=None):
+    """Mean next-token cross-entropy; returns (loss, (rates, per_tok))."""
+    logits, rates = forward(qcfg, mcfg, params, tokens, qp, key,
+                            quant_prefix_len)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    per_tok = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(per_tok), (rates, per_tok)

@@ -1,0 +1,359 @@
+"""L2 quantized training ops (paper §5: Training System Design).
+
+Implements the paper's linear-layer recipe as a ``jax.custom_vjp``:
+
+  forward   Y = X W^T with *fallback* quantization of X (Algorithm 1)
+            and plain block quantization of W; the activation context is
+            X re-quantized with *stochastic rounding* (so the stored
+            context is pure INT8, §5.1).
+  backward  ∇Y is stochastically block-quantized once and used in two
+            plain block GEMMs: ∇X = ∇Y_q W_q and ∇W = ∇Y_q^T X_q.
+
+plus the non-linear context compression (§5.2): RMSNorm / SwiGLU keep
+BF16 data flow but store their backward context in n-bit 1×G groups.
+
+All quantization *parameters* (levels = 2^(bits-1)-1, thresholds θ,
+stochastic-rounding switches, fallback-criterion one-hot, context bits,
+fallback-in-backward switch) are **traced scalars**: the Rust coordinator
+feeds them at run time, so one AOT artifact serves every ablation sweep
+(Figs 3c, 5a, 5b, 6a, 7a) and the delay-threshold controller (Alg 2)
+adjusts θ between steps without recompilation.
+
+Graph-*structural* choices (precision mode, block size, group size) are
+baked per artifact via :class:`QuantConfig`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+
+# Mode constants (graph-structural).
+BF16 = "bf16"          # high-precision baseline (f32 on the CPU backend)
+BLOCK = "block"        # per-block INT8 GEMM only (paper's "Block" baseline)
+FALLBACK = "fallback"  # ours: dynamic block-level fallback
+JETFIRE = "jetfire"    # 32x32 blocks + INT8 non-linear dataflow
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static (trace-time) quantization configuration."""
+    mode: str = FALLBACK
+    block: int = 128          # quantization block size B (paper: 128)
+    group: int = 128          # 1 x group size for non-linear contexts
+    nonlinear_int8: bool = False  # Jetfire-style INT8 non-linear dataflow
+
+    @property
+    def quantized(self) -> bool:
+        return self.mode != BF16
+
+
+def default_qparams(n_layers: int, theta0: float = 1.0) -> Dict[str, Any]:
+    """Runtime quantization parameters with paper-default values.
+
+    theta:   (n_layers, 4) per-linear-site fallback thresholds
+             (sites per block: 0 attn-in, 1 attn-out, 2 mlp-in, 3 mlp-down)
+    theta_head: scalar threshold for the LM head input
+    levels_x/w/dy: quantization levels (2^(bits-1)-1; 127 = INT8)
+    sr_dy:   1.0 -> stochastic rounding of ∇Y (paper default), 0.0 -> RTN
+    sr_ctx:  1.0 -> stochastic rounding of the stored X context
+    fallback_bwd: 1.0 -> ∇W consumes the 16-bit fallback X (Fig 5b
+             ablation); 0.0 -> plain INT8 stochastic context (paper default)
+    crit:    (3,) one-hot criterion selector [AbsMax, L1, L1-Rel] (§4.4)
+    ctx_bits: bit-width for non-linear 1xG contexts (paper: 10)
+    """
+    return {
+        "theta": jnp.full((n_layers, 4), theta0, jnp.float32),
+        "theta_head": jnp.float32(theta0),
+        "levels_x": jnp.float32(127.0),
+        "levels_w": jnp.float32(127.0),
+        "levels_dy": jnp.float32(127.0),
+        "sr_dy": jnp.float32(1.0),
+        "sr_ctx": jnp.float32(1.0),
+        "fallback_bwd": jnp.float32(0.0),
+        "crit": jnp.array([1.0, 0.0, 0.0], jnp.float32),
+        "ctx_bits": jnp.float32(10.0),
+        # forward-path non-linear *input* quantization (Fig 6a sweep);
+        # >= 15 bits means "off" (BF16 data flow, the paper's choice)
+        "nl_in_bits": jnp.float32(15.0),
+    }
+
+
+# ---------------------------------------------------------------------------
+# quantization helpers on top of kernels/ref.py
+# ---------------------------------------------------------------------------
+
+def _quant_rtn(x, block, levels):
+    q, s, _ = ref.block_quant_ref(x, block, levels)
+    return q, s
+
+
+def _quant_sr(x, key, block, levels, sr):
+    """Stochastic (sr=1) or nearest (sr=0) rounding; sr is a traced scalar.
+
+    floor(x/a + u) with u ~ U[0,1) is stochastic rounding; u = 0.5 is
+    round-half-up (≈ RTN; differs from round-ties-even only at exact .5).
+    """
+    noise = jax.random.uniform(key, x.shape, jnp.float32)
+    eff = sr * noise + (1.0 - sr) * 0.5
+    q, s, _ = ref.block_quant_stochastic_ref(x, eff, block, levels)
+    return q, s
+
+
+def _criterion_mask(x, theta, crit, block, levels):
+    """u = [metric > theta] with metric selected by the one-hot ``crit``."""
+    m = ref.criterion_metrics_ref(x, block, levels)
+    metric = (crit[0] * m["absmax"] + crit[1] * m["l1"]
+              + crit[2] * m["l1rel"])
+    return (metric > theta).astype(jnp.float32)
+
+
+def _fallback_quant(x, theta, crit, block, levels):
+    """Fallback quantization with a selectable criterion (§4.4)."""
+    fq = ref.fallback_quant_ref(x, jnp.inf, block, levels)
+    fq["u"] = _criterion_mask(x, theta, crit, block, levels)
+    return fq
+
+
+# ---------------------------------------------------------------------------
+# quantized linear layer: Y = X @ W^T  (+ fallback rate as aux output)
+# ---------------------------------------------------------------------------
+
+def _linear_fwd_quant(cfg: QuantConfig, x2d, w, qp, theta, key):
+    """Shared forward math. Returns (y2d, rate, context).
+
+    GEMMs are evaluated in *scale-factored* form: C = deq(A) @ deq(B),
+    which is algebraically identical to Eq. 1 (per-block scales factor
+    out of the int block product) and — because int8 code products with
+    block <= 1024 stay below 2^24 — numerically equal to the exact
+    int32 kernel path up to one f32 rounding per element. This keeps the
+    lowered HLO on XLA:CPU's fast dense f32 matmul instead of a naive
+    int32 dot (≈10x faster train steps; see EXPERIMENTS.md §Perf).
+    pytest cross-checks this form against the exact `block_gemm_ref`.
+    """
+    kx, kctx = jax.random.split(key)
+    b, lx, lw, ldy = cfg.block, qp["levels_x"], qp["levels_w"], qp["levels_dy"]
+    wt = w.T  # (K, N)
+    qw, sw = _quant_rtn(wt, b, lw)
+    w_deq = ref.block_dequant_ref(qw, sw, wt.shape)
+
+    if cfg.mode == FALLBACK:
+        fx = _fallback_quant(x2d, theta, qp["crit"], b, lx)
+        x_deq = ref.fallback_dequant_ref(fx, x2d.shape)
+        y = x_deq @ w_deq
+        rate = jnp.mean(fx["u"])
+    else:
+        qx, sx = _quant_rtn(x2d, b, lx)
+        x_deq = ref.block_dequant_ref(qx, sx, x2d.shape)
+        y = x_deq @ w_deq
+        rate = jnp.float32(0.0)
+
+    # Activation context: stochastically re-quantized X (pure INT8), plus
+    # optionally the fallback residual (Fig 5b "both passes" ablation).
+    qxc, sxc = _quant_sr(x2d, kctx, b, lx, qp["sr_ctx"])
+    if cfg.mode == FALLBACK:
+        # Blend: fallback_bwd=1 stores the 16-bit fallback X instead.
+        fb = qp["fallback_bwd"]
+        x_ctx = (1.0 - fb) * ref.block_dequant_ref(qxc, sxc, x2d.shape)
+        x_ctx = x_ctx + fb * ref.fallback_dequant_ref(fx, x2d.shape)
+    else:
+        x_ctx = ref.block_dequant_ref(qxc, sxc, x2d.shape)
+    return y, rate, x_ctx
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def quantized_linear(cfg: QuantConfig, x, w, qp, theta, key):
+    """Quantized Y = X @ W^T per paper §5.1.
+
+    x: (..., K); w: (N, K); theta: scalar threshold for this site;
+    key: PRNG key for stochastic rounding. Returns (y, fallback_rate).
+    """
+    if cfg.mode == BF16:
+        return x @ w.T, jnp.float32(0.0)
+    x2d = x.reshape(-1, x.shape[-1])
+    y, rate, _ = _linear_fwd_quant(cfg, x2d, w, qp, theta, key)
+    return y.reshape(*x.shape[:-1], w.shape[0]), rate
+
+
+def _ql_fwd(cfg, x, w, qp, theta, key):
+    if cfg.mode == BF16:
+        y = x @ w.T
+        return (y, jnp.float32(0.0)), (x, w, qp, None)
+    x2d = x.reshape(-1, x.shape[-1])
+    y, rate, x_ctx = _linear_fwd_quant(cfg, x2d, w, qp, theta, key)
+    res = (x_ctx, w, qp, key, x.shape)
+    return (y.reshape(*x.shape[:-1], w.shape[0]), rate), res
+
+
+def _ql_bwd(cfg, res, cts):
+    dy, _ = cts  # cotangent of (y, rate); rate is non-differentiable
+    if cfg.mode == BF16:
+        x, w, qp, _ = res
+        dx = dy @ w
+        x2d = x.reshape(-1, x.shape[-1])
+        dy2d = dy.reshape(-1, dy.shape[-1])
+        dw = dy2d.T @ x2d
+        return dx, dw, jax.tree.map(jnp.zeros_like, qp), \
+            jnp.zeros(()), None
+
+    x_ctx, w, qp, key, x_shape = res
+    b, ldy = cfg.block, qp["levels_dy"]
+    kdy = jax.random.fold_in(key, 7)
+    dy2d = dy.reshape(-1, dy.shape[-1])
+
+    # ∇Y stochastically quantized once, used by both GEMMs (§5.1);
+    # scale-factored GEMM form (see _linear_fwd_quant).
+    qdy, sdy = _quant_sr(dy2d, kdy, b, ldy, qp["sr_dy"])
+    dy_deq = ref.block_dequant_ref(qdy, sdy, dy2d.shape)
+
+    # ∇X = ∇Y_q @ W_q : quantize W (not W^T) per-block.
+    qw, sw = _quant_rtn(w, b, qp["levels_w"])
+    w_deq = ref.block_dequant_ref(qw, sw, w.shape)
+    dx = (dy_deq @ w_deq).reshape(x_shape)
+
+    # ∇W = ∇Y_q^T @ X_q : context X is already INT8 (dequantized form);
+    # re-quantizing it is exact because its values sit on the quant grid.
+    qxc, sxc = _quant_rtn(x_ctx, b, qp["levels_x"])
+    xc_deq = ref.block_dequant_ref(qxc, sxc, x_ctx.shape)
+    dw = dy_deq.T @ xc_deq
+
+    return dx, dw, jax.tree.map(jnp.zeros_like, qp), jnp.zeros(()), None
+
+
+quantized_linear.defvjp(_ql_fwd, _ql_bwd)
+
+
+# ---------------------------------------------------------------------------
+# non-linear layers with compressed activation context (paper §5.2)
+# ---------------------------------------------------------------------------
+
+def _nl_input(x, bits, group):
+    """Optionally quantize a non-linear layer's *input* (Fig 6a):
+    active when bits < 15, identity otherwise. Runtime-switchable."""
+    x2d = x.reshape(-1, x.shape[-1])
+    q, s = ref.group_quant_ref(x2d, group, bits)
+    xq = ref.group_dequant_ref(q, s, group).reshape(x.shape)
+    return jnp.where(bits < 15.0, xq, x)
+
+
+def _gq_ctx(x2d, bits, group):
+    """Group-quantize a context tensor; returns its dequantized form.
+
+    Storing deq(q) keeps the graph simple while being value-equivalent to
+    storing (q, scale): the information content is exactly the n-bit code.
+    """
+    q, s = ref.group_quant_ref(x2d, group, bits)
+    return ref.group_dequant_ref(q, s, group)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def rmsnorm_ctx(cfg: QuantConfig, x, gamma, qp):
+    """RMSNorm with n-bit 1xG compressed backward context."""
+    x = _nl_input(x, qp["nl_in_bits"], cfg.group)
+    rms = jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+    return x / rms * gamma
+
+
+def _rn_fwd(cfg, x, gamma, qp):
+    x = _nl_input(x, qp["nl_in_bits"], cfg.group)
+    rms = jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+    y = x / rms * gamma
+    x2d = x.reshape(-1, x.shape[-1])
+    if cfg.nonlinear_int8:
+        # Jetfire: INT8 32x32 block dataflow for non-linear layers.
+        q, s, _ = ref.block_quant_ref(x2d, 32, 127.0)
+        x_ctx = ref.block_dequant_ref(q, s, x2d.shape).reshape(x.shape)
+    else:
+        x_ctx = _gq_ctx(x2d, qp["ctx_bits"], cfg.group).reshape(x.shape)
+    return y, (x_ctx, gamma)
+
+
+def _rn_bwd(cfg, res, dy):
+    x, gamma = res  # x is the *compressed* context
+    # Recompute rms from the compressed x (what the kernel would do).
+    rms = jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+    xn = x / rms
+    dgamma = jnp.sum(dy * xn, axis=tuple(range(dy.ndim - 1)))
+    dxn = dy * gamma
+    # d/dx of x/rms: (dxn - xn * mean(dxn * xn)) / rms
+    dx = (dxn - xn * jnp.mean(dxn * xn, axis=-1, keepdims=True)) / rms
+    return dx, dgamma, None
+
+
+rmsnorm_ctx.defvjp(_rn_fwd, _rn_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def swiglu_ctx(cfg: QuantConfig, g, u, qp):
+    """SwiGLU y = silu(g) * u with compressed backward context (§5.2).
+
+    This is the GLU the paper's outlier analysis targets: the product of
+    two activations amplifies outliers (P1) yet is sparse (P3).
+    """
+    g = _nl_input(g, qp["nl_in_bits"], cfg.group)
+    u = _nl_input(u, qp["nl_in_bits"], cfg.group)
+    return jax.nn.silu(g) * u
+
+
+def _sg_fwd(cfg, g, u, qp):
+    g = _nl_input(g, qp["nl_in_bits"], cfg.group)
+    u = _nl_input(u, qp["nl_in_bits"], cfg.group)
+    y = jax.nn.silu(g) * u
+    d = g.shape[-1]
+    g2, u2 = g.reshape(-1, d), u.reshape(-1, d)
+    if cfg.nonlinear_int8:
+        qg, sg, _ = ref.block_quant_ref(g2, 32, 127.0)
+        qu, su, _ = ref.block_quant_ref(u2, 32, 127.0)
+        gc = ref.block_dequant_ref(qg, sg, g2.shape).reshape(g.shape)
+        uc = ref.block_dequant_ref(qu, su, u2.shape).reshape(u.shape)
+    else:
+        gc = _gq_ctx(g2, qp["ctx_bits"], cfg.group).reshape(g.shape)
+        uc = _gq_ctx(u2, qp["ctx_bits"], cfg.group).reshape(u.shape)
+    return y, (gc, uc)
+
+
+def _sg_bwd(cfg, res, dy):
+    g, u = res
+    sg = jax.nn.sigmoid(g)
+    silu = g * sg
+    dsilu = sg * (1.0 + g * (1.0 - sg))
+    dg = dy * u * dsilu
+    du = dy * silu
+    return dg, du, None
+
+
+swiglu_ctx.defvjp(_sg_fwd, _sg_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def gelu_ctx(cfg: QuantConfig, x, qp):
+    """GELU with compressed backward context (non-GLU model variant)."""
+    x = _nl_input(x, qp["nl_in_bits"], cfg.group)
+    return jax.nn.gelu(x, approximate=True)
+
+
+def _ge_fwd(cfg, x, qp):
+    x = _nl_input(x, qp["nl_in_bits"], cfg.group)
+    y = jax.nn.gelu(x, approximate=True)
+    x2 = x.reshape(-1, x.shape[-1])
+    if cfg.nonlinear_int8:
+        q, s, _ = ref.block_quant_ref(x2, 32, 127.0)
+        xc = ref.block_dequant_ref(q, s, x2.shape).reshape(x.shape)
+    else:
+        xc = _gq_ctx(x2, qp["ctx_bits"], cfg.group).reshape(x.shape)
+    return y, (xc,)
+
+
+def _ge_bwd(cfg, res, dy):
+    (x,) = res
+    _, vjp = jax.vjp(lambda t: jax.nn.gelu(t, approximate=True), x)
+    return vjp(dy)[0], None
+
+
+gelu_ctx.defvjp(_ge_fwd, _ge_bwd)

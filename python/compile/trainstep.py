@@ -1,0 +1,202 @@
+"""L2 train/eval/probe steps with a flat, Rust-friendly interface.
+
+The AOT artifacts exchange only plain tensors with the Rust runtime:
+
+  train_step(params_flat, m_flat, v_flat, step, tokens, seed, theta_flat,
+             qscalars) -> (params', m', v', loss, rates, grad_norm)
+
+  eval_step(params_flat, tokens, theta_flat, qscalars[, prefix_len])
+             -> (mean_loss, per_token_loss, rates)
+
+  probe_grads(params_flat, tokens, seed, theta_flat, qscalars)
+             -> (loss, grads_flat, rates)
+
+``qscalars`` is a (11,) f32 vector (see ``QSCALAR_NAMES``); ``theta_flat``
+is (4*L+1,). The learning-rate schedule runs in Rust and arrives via a
+(3,) ``opt`` vector [lr, weight_decay, grad_clip]. All of these are traced
+inputs — the Rust coordinator sweeps them without recompiling.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from . import quantized as Q
+
+QSCALAR_NAMES = ["levels_x", "levels_w", "levels_dy", "sr_dy", "sr_ctx",
+                 "fallback_bwd", "crit0", "crit1", "crit2", "ctx_bits",
+                 "nl_in_bits"]
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.95, 1e-8
+
+
+def unpack_qparams(mcfg: M.ModelConfig, theta_flat, qscalars):
+    n_l = mcfg.n_layers
+    return {
+        "theta": theta_flat[: 4 * n_l].reshape(n_l, 4),
+        "theta_head": theta_flat[4 * n_l],
+        "levels_x": qscalars[0],
+        "levels_w": qscalars[1],
+        "levels_dy": qscalars[2],
+        "sr_dy": qscalars[3],
+        "sr_ctx": qscalars[4],
+        "fallback_bwd": qscalars[5],
+        "crit": qscalars[6:9],
+        "ctx_bits": qscalars[9],
+        "nl_in_bits": qscalars[10],
+    }
+
+
+def default_qscalars() -> jnp.ndarray:
+    """Paper-default runtime quantization scalars (INT8, SR on, AbsMax)."""
+    return jnp.array([127.0, 127.0, 127.0, 1.0, 1.0, 0.0,
+                      1.0, 0.0, 0.0, 10.0, 15.0], jnp.float32)
+
+
+def _split_batch(tokens):
+    """(B, T+1) token block -> (inputs, targets)."""
+    return tokens[:, :-1], tokens[:, 1:]
+
+
+def make_train_step(qcfg: Q.QuantConfig, mcfg: M.ModelConfig):
+    """Build the AdamW train step over flat buffers."""
+
+    def train_step(params_flat, m_flat, v_flat, step, tokens, seed,
+                   theta_flat, qscalars, opt):
+        params = M.unflatten_params(mcfg, params_flat)
+        qp = unpack_qparams(mcfg, theta_flat, qscalars)
+        key = jax.random.fold_in(jax.random.PRNGKey(0), seed)
+        inputs, targets = _split_batch(tokens)
+
+        def lf(p):
+            return M.loss_fn(qcfg, mcfg, p, inputs, targets, qp, key)
+
+        (loss, (rates, _)), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        g = M.flatten_params(grads)
+
+        # Global-norm clip (opt[2]; 0 disables), then AdamW.
+        gn = jnp.sqrt(jnp.sum(g * g))
+        clip = opt[2]
+        scale = jnp.where(clip > 0, jnp.minimum(1.0, clip / (gn + 1e-12)), 1.0)
+        g = g * scale
+
+        step1 = step + 1.0
+        m_new = ADAM_B1 * m_flat + (1 - ADAM_B1) * g
+        v_new = ADAM_B2 * v_flat + (1 - ADAM_B2) * g * g
+        mhat = m_new / (1 - ADAM_B1 ** step1)
+        vhat = v_new / (1 - ADAM_B2 ** step1)
+        upd = mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+        lr, wd = opt[0], opt[1]
+        params_new = params_flat - lr * (upd + wd * params_flat)
+        return params_new, m_new, v_new, loss, rates, gn
+
+    return train_step
+
+
+def make_eval_step(qcfg: Q.QuantConfig, mcfg: M.ModelConfig,
+                   with_prefix: bool = False):
+    """Per-token eval loss. With ``with_prefix``, activations of tokens
+    >= prefix_len are zero-masked before every quantization step — the
+    "Quant (no leakage)" evaluation of Table 4."""
+
+    if with_prefix:
+        def eval_step(params_flat, tokens, theta_flat, qscalars, prefix_len):
+            params = M.unflatten_params(mcfg, params_flat)
+            qp = unpack_qparams(mcfg, theta_flat, qscalars)
+            key = jax.random.PRNGKey(0)
+            inputs, targets = _split_batch(tokens)
+            loss, (rates, per_tok) = M.loss_fn(
+                qcfg, mcfg, params, inputs, targets, qp, key,
+                quant_prefix_len=prefix_len)
+            return loss, per_tok, rates
+    else:
+        def eval_step(params_flat, tokens, theta_flat, qscalars):
+            params = M.unflatten_params(mcfg, params_flat)
+            qp = unpack_qparams(mcfg, theta_flat, qscalars)
+            key = jax.random.PRNGKey(0)
+            inputs, targets = _split_batch(tokens)
+            loss, (rates, per_tok) = M.loss_fn(
+                qcfg, mcfg, params, inputs, targets, qp, key)
+            return loss, per_tok, rates
+
+    return eval_step
+
+
+def make_probe_grads(qcfg: Q.QuantConfig, mcfg: M.ModelConfig):
+    """loss + flat grads + rates — the ablation workhorse (Figs 3c/5/7a):
+    the Rust side sweeps qscalars/theta and cosine-compares grads against
+    a high-precision reference run of the same artifact."""
+
+    def probe(params_flat, tokens, seed, theta_flat, qscalars):
+        params = M.unflatten_params(mcfg, params_flat)
+        qp = unpack_qparams(mcfg, theta_flat, qscalars)
+        key = jax.random.fold_in(jax.random.PRNGKey(0), seed)
+        inputs, targets = _split_batch(tokens)
+
+        def lf(p):
+            return M.loss_fn(qcfg, mcfg, p, inputs, targets, qp, key)
+
+        (loss, (rates, _)), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        return loss, M.flatten_params(grads), rates
+
+    return probe
+
+
+def make_init(mcfg: M.ModelConfig):
+    """Flat parameter initializer (runs once on the Rust side)."""
+
+    def init(seed):
+        key = jax.random.fold_in(jax.random.PRNGKey(42), seed)
+        return M.flatten_params(M.init_params(mcfg, key))
+
+    return init
+
+
+def make_activation_probe(qcfg: Q.QuantConfig, mcfg: M.ModelConfig,
+                          layer_index: int):
+    """Capture the DownProj input (GLU output) of one layer — the tensor
+    the paper's outlier analysis (§4.1, Fig 2c, Fig 4a) examines."""
+
+    def probe(params_flat, tokens, theta_flat, qscalars):
+        params = M.unflatten_params(mcfg, params_flat)
+        qp = unpack_qparams(mcfg, theta_flat, qscalars)
+        inputs, _ = _split_batch(tokens)
+        x = params["emb"][inputs]
+        captured = None
+        blocks = params["blocks"]
+        key = jax.random.PRNGKey(0)
+        keys = jax.random.split(key, mcfg.n_layers)
+        # Unrolled (not scanned) so one layer's activation can be captured;
+        # only used with small probe models.
+        for li in range(mcfg.n_layers):
+            blk = jax.tree.map(lambda a: a[li], blocks)
+            b, t, d = x.shape
+            h = Q.rmsnorm_ctx(qcfg, x, blk["ln1"], qp)
+            qkv, _ = Q.quantized_linear(qcfg, h, blk["wqkv"], qp,
+                                        qp["theta"][li, 0], keys[li])
+            qkv = qkv.reshape(b, t, 3, mcfg.n_heads, mcfg.head_dim)
+            a = M._attention(M._rope(qkv[:, :, 0]), M._rope(qkv[:, :, 1]),
+                             qkv[:, :, 2], mcfg.head_dim).reshape(b, t, d)
+            ao, _ = Q.quantized_linear(qcfg, a, blk["wo"], qp,
+                                       qp["theta"][li, 1], keys[li])
+            x = x + ao
+            h = Q.rmsnorm_ctx(qcfg, x, blk["ln2"], qp)
+            hin, _ = Q.quantized_linear(qcfg, h, blk["win"], qp,
+                                        qp["theta"][li, 2], keys[li])
+            if mcfg.glu:
+                g, u = jnp.split(hin, 2, axis=-1)
+                act = Q.swiglu_ctx(qcfg, g, u, qp)
+            else:
+                act = Q.gelu_ctx(qcfg, hin, qp)
+            if li == layer_index:
+                captured = act
+            mo, _ = Q.quantized_linear(qcfg, act, blk["wdown"], qp,
+                                       qp["theta"][li, 3], keys[li])
+            x = x + mo
+        return captured
+
+    return probe

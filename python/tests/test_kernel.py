@@ -1,0 +1,338 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Every kernel must match its `ref.py` oracle *exactly* on the integer path
+(same rounding, same scales); allclose is only used where f32 accumulation
+order may differ.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, block_quant, fallback_gemm, group_quant
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(shape, seed=0, scale=3.0, outliers=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=shape).astype(np.float32) * scale
+    if outliers:
+        idx = rng.integers(0, x.size, size=outliers)
+        x.flat[idx] *= 100.0
+    return jnp.asarray(x)
+
+
+# ---------------------------------------------------------------------------
+# block quantization
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("block", [8, 16, 32])
+@pytest.mark.parametrize("shape", [(32, 32), (64, 32), (32, 64), (64, 96)])
+def test_block_quant_matches_ref(block, shape):
+    x = rand(shape, seed=hash((block, shape)) % 2**31, outliers=4)
+    q, s, am = block_quant.block_quant(x, block=block)
+    qr, sr, amr = ref.block_quant_ref(x, block=block)
+    qr_dense = ref.from_blocks(qr, shape)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr_dense))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(am), np.asarray(amr), rtol=1e-6)
+
+
+def test_block_quant_int8_range():
+    x = rand((64, 64), seed=7, scale=50.0, outliers=16)
+    q, _, _ = block_quant.block_quant(x, block=16)
+    qn = np.asarray(q)
+    assert qn.max() <= 127 and qn.min() >= -127
+    assert np.all(qn == np.round(qn))
+
+
+def test_block_quant_zero_block_exact():
+    x = jnp.zeros((32, 32), jnp.float32)
+    q, s, am = block_quant.block_quant(x, block=16)
+    assert np.all(np.asarray(q) == 0)
+    assert np.all(np.asarray(s) == 1.0)
+    assert np.all(np.asarray(am) == 0.0)
+
+
+def test_block_quant_dequant_error_bound():
+    """|x - deq(q)| <= scale/2 for round-to-nearest."""
+    x = rand((64, 64), seed=3, outliers=8)
+    q, s, _ = block_quant.block_quant(x, block=16)
+    qb = ref.to_blocks(q, 16)
+    deq = ref.block_dequant_ref(qb, s, x.shape)
+    err = np.abs(np.asarray(deq) - np.asarray(x))
+    bound = np.repeat(np.repeat(np.asarray(s), 16, 0), 16, 1) / 2 + 1e-6
+    assert np.all(err <= bound)
+
+
+def test_stochastic_quant_matches_ref():
+    x = rand((64, 64), seed=11)
+    noise = jnp.asarray(
+        np.random.default_rng(5).uniform(size=(64, 64)).astype(np.float32))
+    q, s, am = block_quant.block_quant_stochastic(x, noise, block=16)
+    qr, sr, _ = ref.block_quant_stochastic_ref(x, noise, block=16)
+    np.testing.assert_array_equal(
+        np.asarray(q), np.asarray(ref.from_blocks(qr, x.shape)))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+
+
+def test_stochastic_rounding_unbiased():
+    """E[Q_s(x)] ≈ x: average dequantized value over many noise draws."""
+    x = rand((16, 16), seed=13, scale=1.0)
+    rng = np.random.default_rng(17)
+    acc = np.zeros((16, 16), np.float64)
+    trials = 200
+    for _ in range(trials):
+        noise = jnp.asarray(rng.uniform(size=(16, 16)).astype(np.float32))
+        q, s, _ = block_quant.block_quant_stochastic(x, noise, block=16)
+        qb = ref.to_blocks(q, 16)
+        acc += np.asarray(ref.block_dequant_ref(qb, s, x.shape))
+    mean = acc / trials
+    scale = float(np.abs(np.asarray(x)).max()) / 127.0
+    # std of one draw <= scale; mean err ~ scale/sqrt(trials) * few sigma
+    assert np.abs(mean - np.asarray(x)).max() < 5 * scale / np.sqrt(trials) + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# fallback quantization
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("theta", [0.0, 5.0, 1e9])
+def test_fallback_quant_matches_ref(theta):
+    x = rand((64, 64), seed=23, outliers=6)
+    fq = block_quant.fallback_quant(x, jnp.float32(theta), block=16)
+    fr = ref.fallback_quant_ref(x, theta, block=16)
+    np.testing.assert_array_equal(
+        np.asarray(fq["q"]), np.asarray(ref.from_blocks(fr["q"], x.shape)))
+    np.testing.assert_array_equal(
+        np.asarray(fq["rq"]), np.asarray(ref.from_blocks(fr["rq"], x.shape)))
+    np.testing.assert_array_equal(np.asarray(fq["u"]), np.asarray(fr["u"]))
+    np.testing.assert_allclose(np.asarray(fq["scale"]),
+                               np.asarray(fr["scale"]), rtol=1e-6)
+    # FMA contraction in the fused kernel perturbs the residual by ~1 ulp
+    # of the first-step scale; rq still matches exactly (asserted above).
+    np.testing.assert_allclose(np.asarray(fq["rscale"]),
+                               np.asarray(fr["rscale"]), rtol=1e-4)
+
+
+def test_fallback_theta_extremes():
+    x = rand((64, 64), seed=29, outliers=6)
+    all_fb = block_quant.fallback_quant(x, jnp.float32(-1.0), block=16)
+    no_fb = block_quant.fallback_quant(x, jnp.float32(1e30), block=16)
+    assert np.all(np.asarray(all_fb["u"]) == 1.0)
+    assert np.all(np.asarray(no_fb["u"]) == 0.0)
+
+
+def test_fallback_more_accurate_than_plain():
+    """Fallback dequantization error far below single-step INT8."""
+    x = rand((64, 64), seed=31, outliers=10)
+    fr = ref.fallback_quant_ref(x, 0.0, block=16)  # all blocks fall back
+    deq_fb = ref.fallback_dequant_ref(fr, x.shape)
+    q, s, _ = ref.block_quant_ref(x, block=16)
+    deq_plain = ref.block_dequant_ref(q, s, x.shape)
+    e_fb = float(jnp.sqrt(jnp.mean((deq_fb - x) ** 2)))
+    e_plain = float(jnp.sqrt(jnp.mean((deq_plain - x) ** 2)))
+    assert e_fb < e_plain * 0.05  # two INT8 steps: ~127x finer resolution
+
+
+def test_fallback_beats_int16_with_outliers():
+    """Paper Fig 3(b): with in-block outliers, fallback < INT16 RMSE."""
+    rng = np.random.default_rng(37)
+    x = rng.normal(size=(128, 128)).astype(np.float32)
+    idx = rng.integers(0, x.size, size=8)
+    x.flat[idx] = 20000.0  # extreme sparse outliers (Fishman et al.)
+    x = jnp.asarray(x)
+    fr = ref.fallback_quant_ref(x, 0.0, block=128)
+    deq_fb = ref.fallback_dequant_ref(fr, x.shape)
+    q16, s16, _ = ref.int16_block_quant_ref(x, block=128)
+    deq_16 = ref.block_dequant_ref(q16, s16, x.shape)
+    e_fb = float(jnp.sqrt(jnp.mean((deq_fb - x) ** 2)))
+    e_16 = float(jnp.sqrt(jnp.mean((deq_16 - x) ** 2)))
+    assert e_fb < e_16
+
+
+# ---------------------------------------------------------------------------
+# GEMM kernels
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mnk", [(16, 16, 16), (32, 16, 48), (16, 32, 16)])
+def test_block_gemm_matches_ref(mnk):
+    m, n, k = mnk
+    a = rand((m, k), seed=41, outliers=2)
+    b = rand((k, n), seed=43)
+    qa, sa, _ = ref.block_quant_ref(a, block=16)
+    qb, sb, _ = ref.block_quant_ref(b, block=16)
+    qa_d = ref.from_blocks(qa, (m, k))
+    qb_d = ref.from_blocks(qb, (k, n))
+    c_kernel = fallback_gemm.block_gemm(qa_d, sa, qb_d, sb, block=16)
+    c_ref = ref.block_gemm_ref(qa, sa, qb, sb)[:m, :n]
+    np.testing.assert_allclose(np.asarray(c_kernel), np.asarray(c_ref),
+                               rtol=1e-6, atol=1e-4)
+
+
+def test_block_gemm_close_to_exact():
+    """Quantized GEMM approximates the f32 GEMM within quant error."""
+    m, n, k = 32, 32, 64
+    a = rand((m, k), seed=47, scale=1.0)
+    b = rand((k, n), seed=53, scale=1.0)
+    c = ref.quantized_matmul_ref(a, b, block=16)
+    exact = a @ b
+    rel = float(jnp.linalg.norm(c - exact) / jnp.linalg.norm(exact))
+    assert rel < 0.02
+
+
+@pytest.mark.parametrize("theta", [0.0, 2.0, 1e9])
+def test_fallback_gemm_matches_ref(theta):
+    m, n, k = 32, 32, 48
+    a = rand((m, k), seed=59, outliers=6)
+    b = rand((k, n), seed=61)
+    fa = ref.fallback_quant_ref(a, theta, block=16)
+    qb, sb, _ = ref.block_quant_ref(b, block=16)
+    c_ref = ref.fallback_gemm_ref(fa["q"], fa["scale"], fa["rq"],
+                                  fa["rscale"], fa["u"], qb, sb)[:m, :n]
+    c_kernel = fallback_gemm.fallback_gemm(
+        ref.from_blocks(fa["q"], (m, k)), fa["scale"],
+        ref.from_blocks(fa["rq"], (m, k)), fa["rscale"], fa["u"],
+        ref.from_blocks(qb, (k, n)), sb, block=16)
+    np.testing.assert_allclose(np.asarray(c_kernel), np.asarray(c_ref),
+                               rtol=1e-6, atol=1e-4)
+
+
+def test_fallback_gemm_full_fallback_is_nearly_exact():
+    """theta=0 (all blocks residual-corrected) ≈ exact f32 matmul."""
+    m, n, k = 32, 32, 32
+    a = rand((m, k), seed=67, scale=1.0, outliers=4)
+    b = rand((k, n), seed=71, scale=1.0)
+    c_fb, rate = ref.fallback_matmul_ref(a, b, theta=0.0, block=16)
+    assert float(rate) == 1.0
+    exact = a @ b
+    rel = float(jnp.linalg.norm(c_fb - exact) / jnp.linalg.norm(exact))
+    c_plain = ref.quantized_matmul_ref(a, b, block=16)
+    rel_plain = float(jnp.linalg.norm(c_plain - exact) /
+                      jnp.linalg.norm(exact))
+    # B stays plain INT8, so its quantization error floors the gain;
+    # fallback on A alone still cuts the total error by >2x.
+    assert rel < rel_plain * 0.5
+
+
+def test_fallback_error_monotone_in_theta():
+    """More fallback -> lower error, monotone in theta."""
+    m, n, k = 32, 32, 64
+    a = rand((m, k), seed=73, outliers=12)
+    b = rand((k, n), seed=79)
+    exact = a @ b
+    errs = []
+    for theta in [0.0, 10.0, 100.0, 1e9]:
+        c, _ = ref.fallback_matmul_ref(a, b, theta=theta, block=16)
+        errs.append(float(jnp.linalg.norm(c - exact)))
+    # theta=0 and theta=10 both residual-correct every outlier block and
+    # sit at the B-quantization error floor (equal up to f32 noise).
+    assert errs[0] <= errs[1] * 1.01
+    assert errs[1] <= errs[2] <= errs[3]
+    assert errs[0] < 0.5 * errs[3]
+
+
+# ---------------------------------------------------------------------------
+# group quantization (non-linear context)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [4.0, 8.0, 10.0, 12.0])
+def test_group_quant_matches_ref(bits):
+    x = rand((16, 256), seed=83, outliers=4)
+    q, s = group_quant.group_quant(x, jnp.float32(bits), group=128)
+    qr, sr = ref.group_quant_ref(x, group=128, bits=bits)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+
+
+def test_group_quant_roundtrip_error_decreases_with_bits():
+    x = rand((16, 256), seed=89)
+    errs = []
+    for bits in [4.0, 6.0, 8.0, 10.0, 12.0]:
+        q, s = group_quant.group_quant(x, jnp.float32(bits), group=128)
+        deq = group_quant.group_dequant(q, s, group=128)
+        errs.append(float(jnp.sqrt(jnp.mean((deq - x) ** 2))))
+    assert all(errs[i] > errs[i + 1] for i in range(len(errs) - 1))
+
+
+def test_group_dequant_matches_ref():
+    x = rand((8, 128), seed=97)
+    q, s = ref.group_quant_ref(x, group=128, bits=10.0)
+    deq_k = group_quant.group_dequant(q, s, group=128)
+    deq_r = ref.group_dequant_ref(q, s, group=128)
+    np.testing.assert_array_equal(np.asarray(deq_k), np.asarray(deq_r))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps: shapes and parameter ranges
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    mb=st.integers(1, 3), nb=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(0.01, 100.0),
+)
+def test_hyp_block_quant(mb, nb, seed, scale):
+    shape = (mb * 16, nb * 16)
+    x = rand(shape, seed=seed, scale=scale, outliers=2)
+    q, s, am = block_quant.block_quant(x, block=16)
+    qr, sr, amr = ref.block_quant_ref(x, block=16)
+    np.testing.assert_array_equal(
+        np.asarray(q), np.asarray(ref.from_blocks(qr, shape)))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    mb=st.integers(1, 2), nb=st.integers(1, 2), kb=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+    theta=st.floats(0.0, 50.0),
+)
+def test_hyp_fallback_gemm(mb, nb, kb, seed, theta):
+    m, n, k = mb * 16, nb * 16, kb * 16
+    a = rand((m, k), seed=seed, outliers=3)
+    b = rand((k, n), seed=seed + 1)
+    fa = ref.fallback_quant_ref(a, theta, block=16)
+    qb, sb, _ = ref.block_quant_ref(b, block=16)
+    c_ref = ref.fallback_gemm_ref(fa["q"], fa["scale"], fa["rq"],
+                                  fa["rscale"], fa["u"], qb, sb)[:m, :n]
+    c_kernel = fallback_gemm.fallback_gemm(
+        ref.from_blocks(fa["q"], (m, k)), fa["scale"],
+        ref.from_blocks(fa["rq"], (m, k)), fa["rscale"], fa["u"],
+        ref.from_blocks(qb, (k, n)), sb, block=16)
+    np.testing.assert_allclose(np.asarray(c_kernel), np.asarray(c_ref),
+                               rtol=1e-5, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.integers(1, 4), groups=st.integers(1, 3),
+    bits=st.floats(2.0, 14.0), seed=st.integers(0, 2**31 - 1),
+)
+def test_hyp_group_quant(rows, groups, bits, seed):
+    shape = (rows * 8, groups * 128)
+    x = rand(shape, seed=seed, outliers=2)
+    q, s = group_quant.group_quant(x, jnp.float32(bits), group=128)
+    qr, sr = ref.group_quant_ref(x, group=128, bits=bits)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# criterion metrics
+# ---------------------------------------------------------------------------
+
+def test_criterion_metrics_shapes_and_sanity():
+    x = rand((64, 64), seed=101, outliers=8)
+    m = ref.criterion_metrics_ref(x, block=16)
+    assert m["absmax"].shape == (4, 4)
+    assert np.all(np.asarray(m["l1"]) >= 0)
+    assert np.all(np.asarray(m["l1rel"]) >= 0)
+    assert np.all(np.asarray(m["l1rel"]) <= 1.0)
+    # max block absmax == global absmax
+    np.testing.assert_allclose(float(jnp.max(m["absmax"])),
+                               float(jnp.max(jnp.abs(x))))

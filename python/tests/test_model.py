@@ -1,0 +1,169 @@
+"""L2 model tests: shapes, parameter layout, loss behaviour, train step."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import model as M, quantized as Q, trainstep as T
+
+jax.config.update("jax_enable_x64", False)
+
+MCFG = M.ModelConfig(vocab=64, d_model=64, n_layers=2, n_heads=2,
+                     d_ff=128, seq_len=32)
+QCFG = Q.QuantConfig(mode=Q.FALLBACK, block=16, group=16)
+
+
+def toks(batch, seq, seed=0, vocab=64):
+    return jax.random.randint(jax.random.PRNGKey(seed), (batch, seq),
+                              0, vocab)
+
+
+def qp_default():
+    qp = Q.default_qparams(MCFG.n_layers)
+    return qp
+
+
+def test_param_layout_consistent():
+    layout, total = M.param_layout(MCFG)
+    assert total == MCFG.n_params()
+    # offsets are contiguous and ordered
+    off = 0
+    for leaf in layout:
+        assert leaf["offset"] == off
+        assert leaf["size"] == int(np.prod(leaf["shape"]))
+        off += leaf["size"]
+    assert off == total
+    # flatten order matches layout order
+    params = M.init_params(MCFG, jax.random.PRNGKey(0))
+    flat = M.flatten_params(params)
+    assert flat.size == total
+    back = M.unflatten_params(MCFG, flat)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_forward_shapes_and_rates():
+    params = M.init_params(MCFG, jax.random.PRNGKey(1))
+    logits, rates = M.forward(QCFG, MCFG, params, toks(2, 32),
+                              qp_default(), jax.random.PRNGKey(2))
+    assert logits.shape == (2, 32, 64)
+    assert rates.shape == (4 * MCFG.n_layers + 1,)
+    assert np.all(np.asarray(rates) >= 0) and np.all(np.asarray(rates) <= 1)
+
+
+def test_initial_loss_near_uniform():
+    params = M.init_params(MCFG, jax.random.PRNGKey(3))
+    t = toks(2, 33)
+    loss, (rates, per_tok) = M.loss_fn(QCFG, MCFG, params, t[:, :-1],
+                                       t[:, 1:], qp_default(),
+                                       jax.random.PRNGKey(4))
+    assert abs(float(loss) - np.log(64)) < 0.3
+    assert per_tok.shape == (2, 32)
+
+
+def test_bf16_mode_deterministic_and_theta_independent():
+    cfg = Q.QuantConfig(mode=Q.BF16, block=16, group=16)
+    params = M.init_params(MCFG, jax.random.PRNGKey(5))
+    t = toks(2, 32)
+    qp1 = qp_default()
+    qp2 = Q.default_qparams(MCFG.n_layers, theta0=1e-3)
+    l1, _ = M.forward(cfg, MCFG, params, t, qp1, jax.random.PRNGKey(6))
+    l2, _ = M.forward(cfg, MCFG, params, t, qp2, jax.random.PRNGKey(6))
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_theta_controls_rates_monotonically():
+    params = M.init_params(MCFG, jax.random.PRNGKey(7))
+    t = toks(2, 32)
+    means = []
+    for theta0 in [0.0, 0.5, 5.0, 1e9]:
+        qp = Q.default_qparams(MCFG.n_layers, theta0=theta0)
+        _, rates = M.forward(QCFG, MCFG, params, t, qp,
+                             jax.random.PRNGKey(8))
+        means.append(float(jnp.mean(rates)))
+    assert means[0] == 1.0
+    assert means[-1] == 0.0
+    assert all(means[i] >= means[i + 1] for i in range(len(means) - 1))
+
+
+def test_glu_and_nonglu_variants():
+    ng = M.ModelConfig(vocab=64, d_model=64, n_layers=2, n_heads=2,
+                       d_ff=256, seq_len=32, glu=False)
+    params = M.init_params(ng, jax.random.PRNGKey(9))
+    logits, _ = M.forward(QCFG, ng, params, toks(2, 32), qp_default(),
+                          jax.random.PRNGKey(10))
+    assert logits.shape == (2, 32, 64)
+    # GLU param count differs (2f vs f input proj)
+    assert ng.n_params() != MCFG.n_params()
+
+
+def test_train_step_reduces_loss_on_fixed_batch():
+    ts = jax.jit(T.make_train_step(QCFG, MCFG))
+    flat = M.flatten_params(M.init_params(MCFG, jax.random.PRNGKey(11)))
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    t = toks(2, 33, seed=12)
+    theta = jnp.full((9,), 1.0)
+    qs = T.default_qscalars()
+    opt = jnp.array([1e-3, 0.0, 1.0])
+    losses = []
+    state = (flat, m, v)
+    for i in range(20):
+        p, m_, v_, loss, rates, gn = ts(state[0], state[1], state[2],
+                                        jnp.float32(i), t, jnp.int32(i),
+                                        theta, qs, opt)
+        state = (p, m_, v_)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.5, losses[:3] + losses[-3:]
+
+
+def test_train_step_finite_under_all_modes():
+    for mode in [Q.BF16, Q.BLOCK, Q.FALLBACK, Q.JETFIRE]:
+        cfg = Q.QuantConfig(mode=mode,
+                            block=32 if mode == Q.JETFIRE else 16,
+                            group=16,
+                            nonlinear_int8=(mode == Q.JETFIRE))
+        ts = jax.jit(T.make_train_step(cfg, MCFG))
+        flat = M.flatten_params(
+            M.init_params(MCFG, jax.random.PRNGKey(13)))
+        z = jnp.zeros_like(flat)
+        out = ts(flat, z, z, jnp.float32(0), toks(2, 33, seed=14),
+                 jnp.int32(0), jnp.full((9,), 1.0),
+                 T.default_qscalars(), jnp.array([1e-3, 0.0, 1.0]))
+        assert np.isfinite(float(out[3])), mode
+        assert np.all(np.isfinite(np.asarray(out[0]))), mode
+
+
+def test_eval_prefix_masking_blocks_future_leakage():
+    """With prefix_len = t, losses at positions < t-1 must not depend on
+    tokens >= t (the Table 4 no-leakage evaluation property)."""
+    ev = T.make_eval_step(QCFG, MCFG, with_prefix=True)
+    params = M.flatten_params(M.init_params(MCFG, jax.random.PRNGKey(15)))
+    t1 = toks(1, 33, seed=16)
+    # perturb the tail beyond the prefix
+    t2 = t1.at[:, 20:].set((t1[:, 20:] + 7) % 64)
+    theta = jnp.full((9,), 1.0)
+    qs = T.default_qscalars()
+    _, per1, _ = ev(params, t1, theta, qs, jnp.int32(20))
+    _, per2, _ = ev(params, t2, theta, qs, jnp.int32(20))
+    np.testing.assert_allclose(np.asarray(per1)[:, :19],
+                               np.asarray(per2)[:, :19], rtol=1e-5)
+
+
+def test_lossless_qscalars_match_bf16():
+    """levels=2^22, SR off: quantized graph ≈ bf16 graph (same tokens)."""
+    params = M.init_params(MCFG, jax.random.PRNGKey(17))
+    t = toks(2, 33, seed=18)
+    qp = Q.default_qparams(MCFG.n_layers, theta0=np.inf)
+    for k in ["levels_x", "levels_w", "levels_dy"]:
+        qp[k] = jnp.float32(4194303.0)
+    qp["sr_dy"] = jnp.float32(0.0)
+    qp["sr_ctx"] = jnp.float32(0.0)
+    qp["ctx_bits"] = jnp.float32(15.0)
+    lq, _ = M.loss_fn(QCFG, MCFG, params, t[:, :-1], t[:, 1:], qp,
+                      jax.random.PRNGKey(19))
+    bf = Q.QuantConfig(mode=Q.BF16, block=16, group=16)
+    lb, _ = M.loss_fn(bf, MCFG, params, t[:, :-1], t[:, 1:], qp,
+                      jax.random.PRNGKey(19))
+    assert abs(float(lq) - float(lb)) < 1e-3, (float(lq), float(lb))

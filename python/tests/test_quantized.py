@@ -1,0 +1,255 @@
+"""L2 quantized-op tests: custom VJPs, scale-factored GEMM equivalence,
+context compression, and the ablation switches."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import quantized as Q
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(shape, seed=0, scale=1.0, outliers=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=shape).astype(np.float32) * scale
+    if outliers:
+        idx = rng.integers(0, x.size, size=outliers)
+        x.flat[idx] *= 100.0
+    return jnp.asarray(x)
+
+
+CFG = Q.QuantConfig(mode=Q.FALLBACK, block=16, group=16)
+KEY = jax.random.PRNGKey(0)
+
+
+def qparams(**over):
+    qp = Q.default_qparams(1)
+    qp.update(over)
+    return qp
+
+
+# ---------------------------------------------------------------------------
+# scale-factored GEMM == exact Eq. 1 kernel path
+# ---------------------------------------------------------------------------
+
+def test_scale_factored_equals_exact_block_gemm():
+    """deq(A) @ deq(B) must equal the exact int32 block GEMM to f32
+    rounding — the argument that lets the L2 graph use dense matmuls."""
+    a = rand((32, 48), seed=1, outliers=4)
+    b = rand((48, 32), seed=2)
+    qa, sa, _ = ref.block_quant_ref(a, 16)
+    qb, sb, _ = ref.block_quant_ref(b, 16)
+    exact = ref.block_gemm_ref(qa, sa, qb, sb)[:32, :32]
+    fast = (ref.block_dequant_ref(qa, sa, a.shape)
+            @ ref.block_dequant_ref(qb, sb, b.shape))
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(exact),
+                               rtol=2e-5, atol=1e-3)
+
+
+def test_scale_factored_equals_exact_fallback_gemm():
+    a = rand((32, 48), seed=3, outliers=6)
+    b = rand((48, 32), seed=4)
+    fa = ref.fallback_quant_ref(a, 2.0, 16)
+    qb, sb, _ = ref.block_quant_ref(b, 16)
+    exact = ref.fallback_gemm_ref(fa["q"], fa["scale"], fa["rq"],
+                                  fa["rscale"], fa["u"], qb, sb)[:32, :32]
+    fast = (ref.fallback_dequant_ref(fa, a.shape)
+            @ ref.block_dequant_ref(qb, sb, b.shape))
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(exact),
+                               rtol=2e-5, atol=1e-3)
+
+
+def test_int8_products_exact_in_f32():
+    """127^2 * 1024 < 2^24: the block-product exactness bound."""
+    assert 127 * 127 * 1024 < 2 ** 24
+    # adversarial worst case: all-127 codes at block 16
+    q = jnp.full((16, 16), 127.0)
+    exact = int(127) * 127 * 16
+    fast = float((q @ q.T)[0, 0])
+    assert fast == float(exact)
+
+
+# ---------------------------------------------------------------------------
+# quantized_linear forward/backward
+# ---------------------------------------------------------------------------
+
+def test_linear_fwd_matches_manual():
+    x = rand((32, 64), seed=5, outliers=3)
+    w = rand((48, 64), seed=6, scale=0.1)
+    qp = qparams()
+    y, rate = Q.quantized_linear(CFG, x, w, qp, jnp.float32(1.0), KEY)
+    # manual: fallback-quant X, RTN W^T, scale-factored matmul
+    fx = ref.fallback_quant_ref(x, jnp.inf, 16)
+    fx["u"] = (ref.criterion_metrics_ref(x, 16)["absmax"] > 1.0).astype(
+        jnp.float32)
+    qw, sw, _ = ref.block_quant_ref(w.T, 16)
+    want = (ref.fallback_dequant_ref(fx, x.shape)
+            @ ref.block_dequant_ref(qw, sw, w.T.shape))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=1e-6)
+    assert float(rate) == float(jnp.mean(fx["u"]))
+
+
+def test_linear_bf16_is_exact():
+    cfg = Q.QuantConfig(mode=Q.BF16, block=16, group=16)
+    x = rand((8, 32), seed=7)
+    w = rand((16, 32), seed=8)
+    y, rate = Q.quantized_linear(cfg, x, w, qparams(), jnp.float32(1.0),
+                                 KEY)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w.T),
+                               rtol=1e-6)
+    assert float(rate) == 0.0
+
+
+@pytest.mark.parametrize("mode", [Q.BF16, Q.BLOCK, Q.FALLBACK])
+def test_linear_grads_close_to_exact(mode):
+    cfg = Q.QuantConfig(mode=mode, block=16, group=16)
+    x = rand((32, 64), seed=9)
+    w = rand((48, 64), seed=10, scale=0.1)
+    qp = qparams()
+
+    def loss(x, w):
+        y, _ = Q.quantized_linear(cfg, x, w, qp, jnp.float32(1e9), KEY)
+        return jnp.sum(y ** 2)
+
+    g = jax.grad(loss, argnums=(0, 1))(x, w)
+    ge = jax.grad(lambda x, w: jnp.sum((x @ w.T) ** 2),
+                  argnums=(0, 1))(x, w)
+    for gg, gge in zip(g, ge):
+        cos = float(jnp.sum(gg * gge)
+                    / (jnp.linalg.norm(gg) * jnp.linalg.norm(gge)))
+        tol = 0.995 if mode != Q.BF16 else 1.0 - 1e-6
+        assert cos > tol, f"{mode}: cos={cos}"
+
+
+def test_fallback_improves_forward_with_outliers():
+    x = rand((32, 64), seed=11, outliers=8)
+    w = rand((48, 64), seed=12, scale=0.1)
+    qp = qparams()
+    exact = x @ w.T
+    y_fb, rate = Q.quantized_linear(CFG, x, w, qp, jnp.float32(1.0), KEY)
+    cfg_blk = Q.QuantConfig(mode=Q.BLOCK, block=16, group=16)
+    y_blk, _ = Q.quantized_linear(cfg_blk, x, w, qp, jnp.float32(1.0), KEY)
+    e_fb = float(jnp.linalg.norm(y_fb - exact))
+    e_blk = float(jnp.linalg.norm(y_blk - exact))
+    assert rate > 0
+    assert e_fb < e_blk, f"{e_fb} !< {e_blk}"
+
+
+def test_sr_switch_changes_grads_deterministically():
+    x = rand((32, 64), seed=13)
+    w = rand((48, 64), seed=14, scale=0.1)
+
+    def gw(sr):
+        qp = qparams(sr_dy=jnp.float32(sr))
+        def loss(w):
+            y, _ = Q.quantized_linear(CFG, x, w, qp, jnp.float32(1e9), KEY)
+            return jnp.sum(y ** 2)
+        return jax.grad(loss)(w)
+
+    g1 = gw(1.0)
+    g1b = gw(1.0)
+    g0 = gw(0.0)
+    np.testing.assert_array_equal(np.asarray(g1), np.asarray(g1b))
+    assert not np.array_equal(np.asarray(g1), np.asarray(g0))
+
+
+def test_fallback_bwd_switch():
+    """fallback_bwd=1 stores 16-bit X context -> better dW cosine."""
+    x = rand((32, 64), seed=15, outliers=10)
+    w = rand((48, 64), seed=16, scale=0.1)
+    ge = jax.grad(lambda w: jnp.sum((x @ w.T) ** 2))(w)
+
+    def gw(fb):
+        qp = qparams(fallback_bwd=jnp.float32(fb),
+                     sr_ctx=jnp.float32(0.0))
+        def loss(w):
+            y, _ = Q.quantized_linear(CFG, x, w, qp, jnp.float32(-1.0),
+                                      KEY)
+            return jnp.sum(y ** 2)
+        return jax.grad(loss)(w)
+
+    cos = lambda a, b: float(jnp.sum(a * b)
+                             / (jnp.linalg.norm(a) * jnp.linalg.norm(b)))
+    c16 = cos(gw(1.0), ge)
+    c8 = cos(gw(0.0), ge)
+    assert c16 >= c8 - 1e-4, f"16-bit ctx {c16} vs 8-bit {c8}"
+
+
+# ---------------------------------------------------------------------------
+# non-linear context ops
+# ---------------------------------------------------------------------------
+
+def test_rmsnorm_forward_unaffected_by_ctx_bits():
+    x = rand((4, 8, 16), seed=17)
+    gamma = jnp.ones((16,))
+    y1 = Q.rmsnorm_ctx(CFG, x, gamma, qparams(ctx_bits=jnp.float32(4.0)))
+    y2 = Q.rmsnorm_ctx(CFG, x, gamma, qparams(ctx_bits=jnp.float32(12.0)))
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    rms = jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(x / rms),
+                               rtol=1e-5)
+
+
+def test_rmsnorm_grad_improves_with_ctx_bits():
+    x = rand((2, 8, 32), seed=18, outliers=4)
+    gamma = rand((32,), seed=19, scale=0.5) + 1.0
+    cfg = Q.QuantConfig(mode=Q.FALLBACK, block=16, group=32)
+
+    def gx(bits):
+        qp = qparams(ctx_bits=jnp.float32(bits))
+        return jax.grad(
+            lambda x: jnp.sum(Q.rmsnorm_ctx(cfg, x, gamma, qp) ** 2))(x)
+
+    ge = jax.grad(lambda x: jnp.sum(
+        (x / jnp.sqrt(jnp.mean(x * x, -1, keepdims=True) + 1e-6)
+         * gamma) ** 2))(x)
+    cos = lambda a, b: float(jnp.sum(a * b)
+                             / (jnp.linalg.norm(a) * jnp.linalg.norm(b)))
+    cs = [cos(gx(b), ge) for b in [2.0, 4.0, 8.0, 12.0]]
+    assert cs[-1] > cs[0]
+    assert cs[-1] > 0.999, f"cosines {cs}"
+
+
+def test_swiglu_forward_and_grad():
+    g = rand((2, 8, 32), seed=20)
+    u = rand((2, 8, 32), seed=21)
+    cfg = Q.QuantConfig(mode=Q.FALLBACK, block=16, group=32)
+    qp = qparams()
+    y = Q.swiglu_ctx(cfg, g, u, qp)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(jax.nn.silu(g) * u), rtol=1e-6)
+    gg, gu = jax.grad(
+        lambda g, u: jnp.sum(Q.swiglu_ctx(cfg, g, u, qp) ** 2),
+        argnums=(0, 1))(g, u)
+    gge, gue = jax.grad(
+        lambda g, u: jnp.sum((jax.nn.silu(g) * u) ** 2),
+        argnums=(0, 1))(g, u)
+    cos = lambda a, b: float(jnp.sum(a * b)
+                             / (jnp.linalg.norm(a) * jnp.linalg.norm(b)))
+    assert cos(gg, gge) > 0.999
+    assert cos(gu, gue) > 0.999
+
+
+def test_jetfire_int8_dataflow_degrades_nonlinear_grads():
+    """Fig 6a's point: INT8 non-linear contexts hurt more than INT10."""
+    x = rand((2, 8, 32), seed=22, outliers=6)
+    gamma = jnp.ones((32,))
+    jet = Q.QuantConfig(mode=Q.JETFIRE, block=32, group=32,
+                        nonlinear_int8=True)
+    ours = Q.QuantConfig(mode=Q.FALLBACK, block=16, group=32)
+    qp = qparams()
+    # random projection loss (||rmsnorm(x)||^2 is constant -> zero grad)
+    proj = rand((2, 8, 32), seed=23)
+    ge = jax.grad(lambda x: jnp.sum(
+        proj * (x / jnp.sqrt(jnp.mean(x * x, -1, keepdims=True) + 1e-6))
+    ))(x)
+    cos = lambda a, b: float(jnp.sum(a * b)
+                             / (jnp.linalg.norm(a) * jnp.linalg.norm(b)))
+    gj = jax.grad(lambda x: jnp.sum(
+        proj * Q.rmsnorm_ctx(jet, x, gamma, qp)))(x)
+    go = jax.grad(lambda x: jnp.sum(
+        proj * Q.rmsnorm_ctx(ours, x, gamma, qp)))(x)
+    assert cos(go, ge) >= cos(gj, ge) - 1e-5

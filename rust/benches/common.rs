@@ -1,0 +1,182 @@
+//! Shared helpers for the bench binaries (each bench target includes
+//! this via `#[path = "common.rs"] mod common;`).
+
+#![allow(dead_code)]
+
+use dbfq::coordinator::{TrainConfig, Trainer};
+use dbfq::data::Corpus;
+use dbfq::model::Method;
+use dbfq::runtime::Runtime;
+use dbfq::util::rng::Pcg64;
+
+/// Benches honor DBFQ_BENCH_STEPS to scale training-heavy benches.
+pub fn bench_steps(default: usize) -> usize {
+    std::env::var("DBFQ_BENCH_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+pub fn runtime() -> Runtime {
+    Runtime::open(&dbfq::runtime::artifacts_dir())
+        .expect("run `make artifacts` first")
+}
+
+/// Train (or load a cached checkpoint of) a model for bench evals.
+/// Cache key: profile + method + steps. Returns the trainer.
+pub fn trained<'rt>(
+    rt: &'rt Runtime,
+    profile: &str,
+    method: Method,
+    steps: usize,
+    seed: u64,
+) -> Trainer<'rt> {
+    let prof = rt.profile(profile).unwrap().clone();
+    let mut cfg = TrainConfig::new(profile, method, seed, steps);
+    cfg.lr.peak = 1e-3;
+    let mut tr = Trainer::new(rt, cfg).unwrap();
+    let cache = format!(
+        "runs/bench_ckpt_{profile}_{}_{steps}_{seed}",
+        method.tag()
+    );
+    std::fs::create_dir_all("runs").ok();
+    if tr.load_checkpoint(&cache).is_ok() {
+        return tr;
+    }
+    let corpus = Corpus::synthetic(200_000, prof.vocab, 55);
+    let mut rng = Pcg64::new(seed);
+    for _ in 0..steps {
+        let toks = corpus.sample_batch(prof.batch, prof.seq_len, &mut rng);
+        tr.step_on(&toks).unwrap();
+    }
+    tr.save_checkpoint(&cache).ok();
+    tr
+}
+
+/// Mean cosine similarity between two flat gradient vectors.
+pub fn cos(a: &[f32], b: &[f32]) -> f64 {
+    dbfq::quant::metrics::cosine_similarity(a, b)
+}
+
+pub fn banner(name: &str, paper: &str) {
+    println!("\n================================================");
+    println!("{name}");
+    println!("paper reference: {paper}");
+    println!("================================================");
+}
+
+/// Inject trained-LLM outlier structure (§4.1): scale a sparse set of
+/// gate/up-projection output rows so GLU activations get hot channels.
+/// Randomly initialized / briefly-trained models have no outliers; this
+/// stands in for the structure trillions of tokens create (DESIGN.md
+/// §Substitutions).
+pub fn inject_outliers(params: &mut [f32],
+                       prof: &dbfq::runtime::ProfileMeta) {
+    for leaf in &prof.param_layout {
+        if !leaf.name.ends_with("win") {
+            continue;
+        }
+        let (l_dim, rows, cols) =
+            (leaf.shape[0], leaf.shape[1], leaf.shape[2]);
+        for l in 0..l_dim {
+            for t in 0..(rows / 48).max(1) {
+                let j = (l * 37 + t * 97 + 11) % rows;
+                let base = leaf.offset + (l * rows + j) * cols;
+                for v in &mut params[base..base + cols] {
+                    *v *= 6.0;
+                }
+            }
+        }
+    }
+}
+
+/// Helper around the `grads_<profile>_fallback` probe artifact: run it
+/// with given qscalars + per-site theta, return (loss, grads, rates).
+pub struct Probe<'rt> {
+    pub rt: &'rt Runtime,
+    pub profile: String,
+    pub params: Vec<f32>,
+    pub tokens: Vec<i32>,
+    pub n_sites: usize,
+}
+
+impl<'rt> Probe<'rt> {
+    pub fn new(rt: &'rt Runtime, profile: &str, seed: u64) -> Probe<'rt> {
+        let prof = rt.profile(profile).unwrap().clone();
+        let mut params = rt
+            .call(&format!("init_{profile}"),
+                  &[dbfq::runtime::Value::scalar_i32(seed as i32)])
+            .unwrap()
+            .remove(0)
+            .into_f32()
+            .unwrap();
+        inject_outliers(&mut params, &prof);
+        let corpus = Corpus::synthetic(50_000, prof.vocab, seed ^ 0xAB);
+        let mut rng = Pcg64::new(seed);
+        let tokens = corpus.sample_batch(prof.batch, prof.seq_len,
+                                         &mut rng);
+        Probe { rt, profile: profile.to_string(), params, tokens,
+                n_sites: prof.n_sites }
+    }
+
+    pub fn grads(&self, qs: &dbfq::coordinator::QScalars, theta: f32,
+                 seed: i32) -> (f64, Vec<f32>, Vec<f32>) {
+        let prof = self.rt.profile(&self.profile).unwrap();
+        let out = self
+            .rt
+            .call(
+                &format!("grads_{}_fallback", self.profile),
+                &[
+                    dbfq::runtime::Value::vec_f32(self.params.clone()),
+                    dbfq::runtime::Value::mat_i32(
+                        self.tokens.clone(), prof.batch,
+                        prof.seq_len + 1),
+                    dbfq::runtime::Value::scalar_i32(seed),
+                    dbfq::runtime::Value::vec_f32(
+                        vec![theta; self.n_sites]),
+                    dbfq::runtime::Value::vec_f32(qs.to_vec()),
+                ],
+            )
+            .unwrap();
+        let loss = out[0].scalar().unwrap() as f64;
+        let grads = out[1].clone().into_f32().unwrap();
+        let rates = out[2].clone().into_f32().unwrap();
+        (loss, grads, rates)
+    }
+
+    /// Bisection on theta until the mean fallback rate hits `target`.
+    pub fn theta_for_rate(&self, qs: &dbfq::coordinator::QScalars,
+                          target: f64) -> f32 {
+        // expand hi until the rate drops below target (L1 metrics can
+        // be in the hundreds), then bisect
+        let (mut lo, mut hi) = (0.0f32, 64.0f32);
+        for _ in 0..8 {
+            let (_, _, rates) = self.grads(qs, hi, 1);
+            let rate = rates.iter().map(|&r| r as f64).sum::<f64>()
+                / rates.len() as f64;
+            if rate <= target {
+                break;
+            }
+            lo = hi;
+            hi *= 8.0;
+        }
+        for _ in 0..18 {
+            let mid = 0.5 * (lo + hi);
+            let (_, _, rates) = self.grads(qs, mid, 1);
+            let rate = rates.iter().map(|&r| r as f64).sum::<f64>()
+                / rates.len() as f64;
+            if rate > target {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        0.5 * (lo + hi)
+    }
+
+    /// Reference (effectively unquantized) gradients.
+    pub fn reference_grads(&self) -> Vec<f32> {
+        let qs = dbfq::coordinator::QScalars::lossless();
+        self.grads(&qs, f32::INFINITY, 1).1
+    }
+}

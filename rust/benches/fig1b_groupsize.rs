@@ -1,0 +1,67 @@
+//! Fig 1(b): INT8 GEMM throughput vs quantization group size K.
+//!
+//! Two axes (DESIGN.md §Substitutions):
+//!   measured — the Rust CPU INT8 blocked GEMM, which exhibits the same
+//!              cost structure (per-group dequant overhead shrinks as
+//!              the group grows);
+//!   modeled  — the RTX 4090 roofline at the paper's sizes, which should
+//!              pass near 270 Tops @ 32 and 425 Tops @ 128.
+
+#[path = "common.rs"]
+mod common;
+
+use dbfq::costmodel::rtx4090;
+use dbfq::gemm;
+use dbfq::quant::{block_quant, Rounding, INT8_LEVELS};
+use dbfq::util::bench::{bench, gops, Table};
+use dbfq::util::rng::Pcg64;
+use dbfq::util::Mat;
+
+fn main() {
+    common::banner("Fig 1b — throughput vs group size K",
+                   "Fig 1(b), §3.2: 32x32 is 38% slower than 128x128");
+
+    // Measured on CPU (sizes scaled to the testbed).
+    let mut t = Table::new(&["dim", "group", "Gops(cpu)", "vs f32"]);
+    for dim in [512usize, 1024] {
+        let mut rng = Pcg64::new(1);
+        let a = Mat::randn(dim, dim, 1.0, &mut rng);
+        let b = Mat::randn(dim, dim, 1.0, &mut rng);
+        let s_f32 = bench(|| {
+            std::hint::black_box(gemm::matmul(&a, &b, 1));
+        }, 300);
+        let f32_gops = gops(dim, dim, dim, s_f32.median_secs());
+        for group in [16usize, 32, 64, 128] {
+            let qa = block_quant(&a, group, INT8_LEVELS, Rounding::Nearest);
+            let qb = block_quant(&b, group, INT8_LEVELS, Rounding::Nearest);
+            let s = bench(|| {
+                std::hint::black_box(gemm::block_gemm(&qa, &qb, 1));
+            }, 300);
+            let g = gops(dim, dim, dim, s.median_secs());
+            t.row(&[
+                dim.to_string(),
+                group.to_string(),
+                format!("{g:.2}"),
+                format!("{:.2}x", g / f32_gops),
+            ]);
+        }
+    }
+    t.print();
+
+    // Modeled on RTX 4090 at the paper's GEMM dims.
+    let g4090 = rtx4090();
+    let mut t2 = Table::new(&["dim", "K=32", "K=64", "K=128", "K=256"]);
+    for dim in [2048usize, 4096, 8192] {
+        let row: Vec<String> = [32usize, 64, 128, 256]
+            .iter()
+            .map(|&kg| {
+                format!("{:.0}", g4090.int8_gemm_tops(dim, dim, dim, kg,
+                                                      0.0))
+            })
+            .collect();
+        t2.row(&[dim.to_string(), row[0].clone(), row[1].clone(),
+                 row[2].clone(), row[3].clone()]);
+    }
+    println!("\nRTX4090 roofline (Tops; paper: ~270 @32, ~425 @128):");
+    t2.print();
+}

@@ -1,0 +1,97 @@
+//! Fig 4(b): eval perplexity vs quantization block size (32..256),
+//! naive block quantization vs 20% AbsMax fallback — the argument that
+//! fallback lets a 128-block kernel match a 32-block kernel's accuracy.
+
+#[path = "common.rs"]
+mod common;
+
+use dbfq::coordinator::QScalars;
+use dbfq::data::Corpus;
+use dbfq::model::Method;
+use dbfq::runtime::Value;
+use dbfq::util::bench::Table;
+
+fn main() {
+    common::banner("Fig 4b — PPL vs block size, naive vs fallback",
+                   "Fig 4(b), §4.5: fallback flattens the block-size \
+                    degradation");
+    let rt = common::runtime();
+    let steps = common::bench_steps(60);
+    // a briefly-trained small model so activations have structure
+    let tr = common::trained(&rt, "small", Method::Bf16, steps, 11);
+    let prof = rt.profile("small").unwrap().clone();
+    let corpus = Corpus::synthetic(100_000, prof.vocab, 99);
+    let batches = corpus.eval_batches(prof.batch, prof.seq_len, 3);
+
+    let eval = |artifact: &str, theta: f32| -> f64 {
+        let mut tot = 0.0;
+        for b in &batches {
+            let out = rt
+                .call(
+                    artifact,
+                    &[
+                        Value::vec_f32(tr.params.clone()),
+                        Value::mat_i32(b.clone(), prof.batch,
+                                       prof.seq_len + 1),
+                        Value::vec_f32(vec![theta; prof.n_sites]),
+                        Value::vec_f32(QScalars::default().to_vec()),
+                    ],
+                )
+                .unwrap();
+            tot += out[0].scalar().unwrap() as f64;
+        }
+        (tot / batches.len() as f64).exp()
+    };
+
+    // theta tuned per block size for ~20% rate via the rates output
+    let theta_for = |artifact: &str, target: f64| -> f32 {
+        let (mut lo, mut hi) = (0.0f32, 64.0f32);
+        for _ in 0..14 {
+            let mid = 0.5 * (lo + hi);
+            let out = rt
+                .call(
+                    artifact,
+                    &[
+                        Value::vec_f32(tr.params.clone()),
+                        Value::mat_i32(batches[0].clone(), prof.batch,
+                                       prof.seq_len + 1),
+                        Value::vec_f32(vec![mid; prof.n_sites]),
+                        Value::vec_f32(QScalars::default().to_vec()),
+                    ],
+                )
+                .unwrap();
+            let rates = out[2].as_f32().unwrap();
+            let rate = rates.iter().map(|&r| r as f64).sum::<f64>()
+                / rates.len() as f64;
+            if rate > target {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        0.5 * (lo + hi)
+    };
+
+    let bf16 = eval("eval_small_bf16", f32::INFINITY);
+    println!("BF16 reference PPL: {bf16:.3}\n");
+    let mut t = Table::new(&["block", "naive PPL", "fallback20% PPL",
+                             "naive gap", "fb gap"]);
+    for bs in [32usize, 64, 128, 256] {
+        let naive = eval(&format!("eval_small_block_bs{bs}"),
+                         f32::INFINITY);
+        let art = format!("eval_small_fallback_bs{bs}");
+        let theta = theta_for(&art, 0.2);
+        let fb = eval(&art, theta);
+        t.row(&[
+            bs.to_string(),
+            format!("{naive:.3}"),
+            format!("{fb:.3}"),
+            format!("{:+.3}", naive - bf16),
+            format!("{:+.3}", fb - bf16),
+        ]);
+    }
+    t.print();
+    println!("\npaper shape: naive PPL degrades as block grows; \
+              fallback's gap stays near-flat, so block=128 + fallback \
+              ≈ block=32 accuracy with far better kernel throughput");
+}

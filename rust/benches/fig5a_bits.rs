@@ -1,0 +1,45 @@
+//! Fig 5(a): gradient cosine when X / W / ∇Y are quantized to various
+//! bit-widths individually — showing X dominates the gradient error
+//! (with SR on ∇Y), which motivates fallback on X only.
+
+#[path = "common.rs"]
+mod common;
+
+use dbfq::coordinator::QScalars;
+use dbfq::util::bench::Table;
+
+fn main() {
+    common::banner("Fig 5a — per-tensor bit-width grad CosSim",
+                   "Fig 5(a), §5.1: X's quantization error dominates \
+                    when ∇Y uses stochastic rounding");
+    let rt = common::runtime();
+    let probe = common::Probe::new(&rt, "probe", 5);
+    let gref = probe.reference_grads();
+
+    let mut t = Table::new(&["tensor", "bits", "CosSim"]);
+    for bits in [4u32, 6, 8] {
+        for (name, which) in [("X", 0usize), ("W", 1), ("dY", 2)] {
+            let mut qs = QScalars::lossless();
+            qs.sr_dy = 1.0; // paper default: SR on gradients
+            let lv = (1u32 << (bits - 1)) as f32 - 1.0;
+            match which {
+                0 => qs.levels_x = lv,
+                1 => qs.levels_w = lv,
+                _ => qs.levels_dy = lv,
+            }
+            let (_, g, _) = probe.grads(&qs, f32::INFINITY, 1);
+            t.row(&[
+                name.into(),
+                bits.to_string(),
+                format!("{:.5}", common::cos(&g, &gref)),
+            ]);
+        }
+    }
+    t.print();
+    println!("\npaper shape: with SR on ∇Y, X's (or, here, the \
+              outlier-carrying tensor's) deterministic quantization \
+              error dominates at low bits while SR keeps ∇Y unbiased. \
+              NOTE: this testbed injects outliers via weight rows (no \
+              trillion-token training run), so W shares X's burden; in \
+              the paper the outliers live in activations only.");
+}

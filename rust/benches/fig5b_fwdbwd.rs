@@ -1,0 +1,50 @@
+//! Fig 5(b): applying fallback to X in the forward pass only vs in both
+//! passes (16-bit activation context) — the paper finds no significant
+//! difference, so the INT8 stochastic context wins on memory.
+
+#[path = "common.rs"]
+mod common;
+
+use dbfq::coordinator::QScalars;
+use dbfq::util::bench::Table;
+
+fn main() {
+    common::banner("Fig 5b — fallback in fwd only vs fwd+bwd",
+                   "Fig 5(b), §5.1: stochastic INT8 context ≈ 16-bit \
+                    fallback context");
+    let rt = common::runtime();
+    let probe = common::Probe::new(&rt, "probe", 7);
+    let gref = probe.reference_grads();
+
+    let mut t = Table::new(&["rate", "fwd-only CosSim", "fwd+bwd CosSim",
+                             "gap"]);
+    for rate in [0.05f64, 0.1, 0.2, 0.4] {
+        let qs = QScalars::default();
+        let theta = probe.theta_for_rate(&qs, rate);
+        // average CosSim over a few SR seeds (SR makes single draws noisy)
+        let mut c_fwd = 0.0;
+        let mut c_both = 0.0;
+        let seeds = 3;
+        for s in 0..seeds {
+            let qs_fwd = QScalars { fallback_bwd: 0.0,
+                                    ..QScalars::default() };
+            let (_, g1, _) = probe.grads(&qs_fwd, theta, 100 + s);
+            c_fwd += common::cos(&g1, &gref);
+            let qs_both = QScalars { fallback_bwd: 1.0,
+                                     ..QScalars::default() };
+            let (_, g2, _) = probe.grads(&qs_both, theta, 100 + s);
+            c_both += common::cos(&g2, &gref);
+        }
+        c_fwd /= seeds as f64;
+        c_both /= seeds as f64;
+        t.row(&[
+            format!("{rate:.2}"),
+            format!("{c_fwd:.5}"),
+            format!("{c_both:.5}"),
+            format!("{:+.5}", c_both - c_fwd),
+        ]);
+    }
+    t.print();
+    println!("\npaper shape: the gap is negligible -> store pure INT8 \
+              stochastic context (halves activation memory for X)");
+}

@@ -1,0 +1,72 @@
+//! Fig 6(a): PPL impact of quantizing Linear inputs vs Non-Linear
+//! inputs at various bit-widths — non-linear layers are the fragile
+//! ones (they cannot average errors over a K-dim accumulation).
+
+#[path = "common.rs"]
+mod common;
+
+use dbfq::coordinator::QScalars;
+use dbfq::data::Corpus;
+use dbfq::model::Method;
+use dbfq::runtime::Value;
+use dbfq::util::bench::Table;
+
+fn main() {
+    common::banner("Fig 6a — linear vs non-linear input quantization",
+                   "Fig 6(a), §5.2: non-linear layers are far more \
+                    sensitive per bit");
+    let rt = common::runtime();
+    let steps = common::bench_steps(60);
+    let tr = common::trained(&rt, "small", Method::Bf16, steps, 11);
+    let prof = rt.profile("small").unwrap().clone();
+    let corpus = Corpus::synthetic(100_000, prof.vocab, 99);
+    let batches = corpus.eval_batches(prof.batch, prof.seq_len, 3);
+
+    let eval = |qs: &QScalars| -> f64 {
+        let mut tot = 0.0;
+        for b in &batches {
+            let out = rt
+                .call(
+                    "eval_small_fallback",
+                    &[
+                        Value::vec_f32(tr.params.clone()),
+                        Value::mat_i32(b.clone(), prof.batch,
+                                       prof.seq_len + 1),
+                        Value::vec_f32(vec![f32::INFINITY;
+                                            prof.n_sites]),
+                        Value::vec_f32(qs.to_vec()),
+                    ],
+                )
+                .unwrap();
+            tot += out[0].scalar().unwrap() as f64;
+        }
+        (tot / batches.len() as f64).exp()
+    };
+
+    let base = eval(&QScalars::lossless());
+    println!("lossless PPL: {base:.3}\n");
+    let mut t = Table::new(&["bits", "linear-only ΔPPL",
+                             "non-linear-only ΔPPL"]);
+    for bits in [4u32, 6, 8, 10] {
+        let mut lin = QScalars::lossless();
+        lin.levels_x = (1u32 << (bits - 1)) as f32 - 1.0;
+        lin.levels_w = lin.levels_x;
+        let mut nl = QScalars::lossless();
+        nl.nl_in_bits = bits as f32; // forward-path non-linear inputs
+        t.row(&[
+            bits.to_string(),
+            format!("{:+.3}", eval(&lin) - base),
+            format!("{:+.3}", eval(&nl) - base),
+        ]);
+    }
+    t.print();
+    println!("\nnote: at this testbed's training budget (tens of \
+              steps) eval-PPL deltas are noise-dominated and low-bit \
+              quantization can even act as a regularizer; the robust \
+              reproduction of Fig 6a's sensitivity ordering is the \
+              gradient-side sweep (fig7a_ctx_bits: non-linear context \
+              bits dominate norm-weight gradient fidelity) plus the \
+              test_jetfire_int8_dataflow_degrades_nonlinear_grads \
+              pytest. Paper shape: low-bit hurts non-linear paths far \
+              more per bit.");
+}

@@ -1,0 +1,38 @@
+//! Fig 6(b): fraction of forward computation spent in Linear layers
+//! across Qwen-2.5 model sizes — the argument for leaving non-linear
+//! layers in BF16 (their share vanishes as models grow).
+
+#[path = "common.rs"]
+mod common;
+
+use dbfq::model::linear_time_fraction;
+use dbfq::util::bench::Table;
+
+fn main() {
+    common::banner("Fig 6b — linear-layer share of forward compute",
+                   "Fig 6(b), §5.2: non-linear share shrinks with size");
+    // (name, d_model, d_ff) from the Qwen2.5 family
+    let sizes = [
+        ("0.5B", 896usize, 4864usize),
+        ("1.5B", 1536, 8960),
+        ("3B", 2048, 11008),
+        ("7B", 3584, 18944),
+        ("14B", 5120, 13824),
+    ];
+    let mut t = Table::new(&["model", "linear share", "non-linear+attn"]);
+    let mut last = 0.0;
+    for (name, d, ff) in sizes {
+        let f = linear_time_fraction(d, ff, 2048, true);
+        t.row(&[
+            name.into(),
+            format!("{:.1}%", 100.0 * f),
+            format!("{:.1}%", 100.0 * (1.0 - f)),
+        ]);
+        assert!(f >= last * 0.95, "share should grow with size");
+        last = f;
+    }
+    t.print();
+    println!("\npaper shape: linear share grows toward ~90%+ at 7B/14B, \
+              so INT8-ing non-linear layers (Jetfire) buys little while \
+              costing accuracy (Fig 6a)");
+}

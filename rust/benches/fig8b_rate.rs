@@ -1,0 +1,58 @@
+//! Fig 8(b): training under *constant* fallback rates — convergence is
+//! achievable at 2.5% and stable at 10% (§6.1 ablation).
+
+#[path = "common.rs"]
+mod common;
+
+use dbfq::coordinator::TrainConfig;
+use dbfq::data::Task;
+use dbfq::model::Method;
+use dbfq::util::bench::Table;
+use dbfq::util::rng::Pcg64;
+
+fn main() {
+    common::banner("Fig 8b — loss vs constant fallback rate",
+                   "Fig 8(b), §6.1: converges from 2.5% fallback on");
+    let rt = common::runtime();
+    let steps = common::bench_steps(60);
+    let prof = rt.profile("tiny").unwrap().clone();
+    let task = Task::Arithmetic;
+
+    let mut t = Table::new(&["target rate", "mean achieved",
+                             "final-loss"]);
+    for rate in [0.0f64, 0.025, 0.05, 0.1, 0.2] {
+        let mut cfg =
+            TrainConfig::new("tiny", Method::Fallback, 1, steps);
+        cfg.lr.peak = 3e-3;
+        // pin the band to the target: Alg 2 holds the rate ~constant
+        cfg.r_min = (rate - 0.01).max(0.0);
+        cfg.r_max = rate + 0.01;
+        cfg.alpha = 1.1;
+        if rate == 0.0 {
+            cfg.freeze_thresholds = true;
+        }
+        let mut tr = dbfq::coordinator::Trainer::new(&rt, cfg).unwrap();
+        if rate == 0.0 {
+            tr.set_thresholds(f32::INFINITY);
+        }
+        let mut rng = Pcg64::new(0xF1E7);
+        let mut final_loss = 0.0;
+        let mut rate_acc = 0.0;
+        for _ in 0..steps {
+            let (toks, _) = task.batch(prof.batch, prof.seq_len,
+                                       prof.vocab, &mut rng);
+            let st = tr.step_on(&toks).unwrap();
+            final_loss = st.loss;
+            rate_acc += st.mean_fallback_rate;
+        }
+        t.row(&[
+            format!("{rate:.3}"),
+            format!("{:.3}", rate_acc / steps as f64),
+            format!("{final_loss:.4}"),
+        ]);
+    }
+    t.print();
+    println!("\npaper shape: final loss improves sharply from 0% -> \
+              2.5% and saturates by ~10% — a little fallback buys most \
+              of the accuracy");
+}

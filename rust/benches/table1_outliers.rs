@@ -1,0 +1,84 @@
+//! Table 1: outlier magnitudes at token / channel / other levels for
+//! GLU vs non-GLU models.
+//!
+//! Two sources: (a) the calibrated synthetic activation generator
+//! (stands in for Llama/Qwen/OLMo vs GPT2/Pythia — DESIGN.md
+//! §Substitutions); (b) real activations captured from in-repo trained
+//! tiny GLU / non-GLU models through the `act_*` artifacts.
+
+#[path = "common.rs"]
+mod common;
+
+use dbfq::coordinator::QScalars;
+use dbfq::model::Method;
+use dbfq::outlier::{outlier_stats, ActivationModel};
+use dbfq::runtime::Value;
+use dbfq::util::bench::Table;
+use dbfq::util::Mat;
+
+fn main() {
+    common::banner("Table 1 — outlier magnitude by structure",
+                   "Table 1, §4.1: GLU outliers are 1-2 orders larger; \
+                    occasional ('Others') rival structured ones");
+
+    let mut t = Table::new(&["model", "token-wise", "channel-wise",
+                             "others"]);
+    for (name, m) in [
+        ("synthetic GLU (Llama/Qwen-like)",
+         ActivationModel::glu_llm(1024, 2048)),
+        ("synthetic non-GLU (GPT2-like)",
+         ActivationModel::non_glu_llm(1024, 2048)),
+    ] {
+        let s = outlier_stats(&m.sample(31));
+        t.row(&[
+            name.into(),
+            format!("{:.1}", s.token_wise),
+            format!("{:.1}", s.channel_wise),
+            format!("{:.1}", s.others),
+        ]);
+    }
+
+    // Real in-repo models: train tiny GLU + non-GLU briefly, capture the
+    // last layer's GLU/GELU output via act_* artifacts.
+    let rt = common::runtime();
+    let steps = common::bench_steps(40);
+    for (profile, label) in [("tiny", "trained tiny GLU"),
+                             ("tiny_nonglu", "trained tiny non-GLU")] {
+        if !rt.has_artifact(&format!("act_{profile}")) {
+            continue;
+        }
+        let tr = common::trained(&rt, profile, Method::Bf16, steps, 5);
+        let prof = rt.profile(profile).unwrap().clone();
+        let corpus =
+            dbfq::data::Corpus::synthetic(50_000, prof.vocab, 77);
+        let toks = corpus.eval_batches(prof.batch, prof.seq_len, 1)
+            .remove(0);
+        let out = rt
+            .call(
+                &format!("act_{profile}"),
+                &[
+                    Value::vec_f32(tr.params.clone()),
+                    Value::mat_i32(toks, prof.batch, prof.seq_len + 1),
+                    Value::vec_f32(tr.controller.thresholds.clone()),
+                    Value::vec_f32(QScalars::default().to_vec()),
+                ],
+            )
+            .unwrap();
+        let act = out[0].as_f32().unwrap();
+        let rows = prof.batch * prof.seq_len;
+        let cols = act.len() / rows;
+        let m = Mat::from_vec(rows, cols, act.to_vec());
+        let s = outlier_stats(&m);
+        t.row(&[
+            label.into(),
+            format!("{:.2}", s.token_wise),
+            format!("{:.2}", s.channel_wise),
+            format!("{:.2}", s.others),
+        ]);
+    }
+    t.print();
+    println!("\npaper shape: GLU rows dominate every column; \
+              'Others' ≈ channel-wise for GLU (P2). Tiny in-repo models \
+              show the same ordering at smaller magnitudes (few training \
+              steps).");
+}

@@ -1,0 +1,137 @@
+//! Table 4 (Appendix E): information leakage through quantization
+//! scales. A model trained with fine-grained (32x32) block quantization
+//! can read next-token information out of the AbsMax statistics —
+//! its training loss looks great, BF16 and no-leakage evals don't.
+//!
+//! Evaluations per trained method:
+//!   BF16                — evaluate at full precision
+//!   Quant               — quantized eval, whole sequence at once
+//!                         (scales see the future -> leakage possible)
+//!   Quant (no leakage)  — per-token prefix evaluation: position t is
+//!                         scored with all activations masked beyond t
+
+#[path = "common.rs"]
+mod common;
+
+use dbfq::coordinator::QScalars;
+use dbfq::data::Corpus;
+use dbfq::model::Method;
+use dbfq::runtime::Value;
+use dbfq::util::bench::Table;
+
+fn main() {
+    common::banner("Table 4 — leakage-controlled validation PPL",
+                   "Table 4, Appendix E");
+    let rt = common::runtime();
+    let steps = common::bench_steps(60);
+    let prof = rt.profile("tiny").unwrap().clone();
+    let corpus = Corpus::synthetic(100_000, prof.vocab, 321);
+    let eval_tokens: Vec<i32> = corpus.eval_batches(1, prof.seq_len, 1)
+        .remove(0);
+
+    let qs = QScalars::default().to_vec();
+    let theta_off = vec![f32::INFINITY; prof.n_sites];
+
+    let mut t = Table::new(&["trained-as", "BF16", "Quant",
+                             "Quant(no leakage)", "leak gap"]);
+    for method in [Method::Bf16, Method::Jetfire, Method::Block,
+                   Method::Fallback] {
+        let tr = common::trained(&rt, "tiny", method, steps, 13);
+        // Fallback disabled at eval (paper: "disable fallback ... for
+        // fair comparison").
+        let eval_with = |artifact: &str| -> f64 {
+            let out = rt
+                .call(
+                    artifact,
+                    &[
+                        Value::vec_f32(tr.params.clone()),
+                        Value::mat_i32(
+                            eval_tokens[..(prof.seq_len + 1)
+                                        * 1.min(prof.batch)]
+                                .to_vec(),
+                            1,
+                            prof.seq_len + 1,
+                        ),
+                        Value::vec_f32(theta_off.clone()),
+                        Value::vec_f32(qs.clone()),
+                    ],
+                )
+                .unwrap();
+            let per = out[1].as_f32().unwrap();
+            (per.iter().map(|&l| l as f64).sum::<f64>()
+                / per.len() as f64)
+                .exp()
+        };
+        // BF16 eval needs a batch-shaped input; reuse evalp trick: the
+        // eval_tiny_bf16 artifact takes (batch, seq+1); replicate rows.
+        let eval_full = |artifact: &str| -> f64 {
+            let mut toks = Vec::new();
+            for _ in 0..prof.batch {
+                toks.extend_from_slice(&eval_tokens);
+            }
+            let out = rt
+                .call(
+                    artifact,
+                    &[
+                        Value::vec_f32(tr.params.clone()),
+                        Value::mat_i32(toks, prof.batch,
+                                       prof.seq_len + 1),
+                        Value::vec_f32(theta_off.clone()),
+                        Value::vec_f32(qs.clone()),
+                    ],
+                )
+                .unwrap();
+            (out[0].scalar().unwrap() as f64).exp()
+        };
+
+        let ppl_bf16 = eval_full("eval_tiny_bf16");
+        let quant_art = format!("eval_tiny_{}",
+                                if method == Method::Bf16 {
+                                    "block".to_string()
+                                } else {
+                                    method.tag().to_string()
+                                });
+        let ppl_quant = eval_full(&quant_art);
+
+        // no-leakage: per-token prefix eval through evalp_*
+        let evalp_art = format!("evalp_tiny_{}",
+                                if method == Method::Bf16 {
+                                    "block".to_string()
+                                } else {
+                                    method.tag().to_string()
+                                });
+        let mut tot = 0.0f64;
+        let mut cnt = 0usize;
+        for tpos in 1..prof.seq_len {
+            let out = rt
+                .call(
+                    &evalp_art,
+                    &[
+                        Value::vec_f32(tr.params.clone()),
+                        Value::mat_i32(eval_tokens.clone(), 1,
+                                       prof.seq_len + 1),
+                        Value::vec_f32(theta_off.clone()),
+                        Value::vec_f32(qs.clone()),
+                        Value::scalar_i32(tpos as i32),
+                    ],
+                )
+                .unwrap();
+            let per = out[1].as_f32().unwrap();
+            tot += per[tpos - 1] as f64; // loss of predicting token tpos
+            cnt += 1;
+        }
+        let ppl_noleak = (tot / cnt as f64).exp();
+        let _ = eval_with; // (kept for clarity; eval_full used instead)
+        t.row(&[
+            method.tag().into(),
+            format!("{ppl_bf16:.3}"),
+            format!("{ppl_quant:.3}"),
+            format!("{ppl_noleak:.3}"),
+            format!("{:+.3}", ppl_noleak - ppl_quant),
+        ]);
+    }
+    t.print();
+    println!("\npaper shape: Jetfire's Quant PPL beats its BF16/no-leak \
+              PPL (AbsMax leaks future tokens); Ours is consistent \
+              across all three evals (fallback defeats the leak)");
+}

@@ -1,0 +1,215 @@
+//! Config-file layer: load/validate/merge `TrainConfig` from JSON.
+//!
+//! A launcher config file looks like:
+//!
+//! ```json
+//! {
+//!   "profile": "small",
+//!   "method": "fallback",
+//!   "seed": 0,
+//!   "steps": 300,
+//!   "lr": {"peak": 1e-3, "warmup": 30},
+//!   "weight_decay": 1e-3,
+//!   "grad_clip": 1.0,
+//!   "fallback": {"r_min": 0.1, "r_max": 0.3, "alpha": 1.3},
+//!   "quant": {"x_bits": 8, "w_bits": 8, "dy_bits": 8,
+//!             "ctx_bits": 10, "sr_dy": true, "sr_ctx": true,
+//!             "criterion": "absmax"}
+//! }
+//! ```
+//!
+//! CLI flags override file values (`Args` wins over JSON wins over
+//! paper defaults) — the usual launcher precedence.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{LrSchedule, QScalars, TrainConfig};
+use crate::model::Method;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+pub fn parse_method(s: &str) -> Result<Method> {
+    Ok(match s {
+        "bf16" => Method::Bf16,
+        "block" => Method::Block,
+        "jetfire" => Method::Jetfire,
+        "fallback" => Method::Fallback,
+        other => bail!("unknown method '{other}' \
+                        (bf16|block|jetfire|fallback)"),
+    })
+}
+
+fn bits_to_levels(bits: f64) -> Result<f32> {
+    if !(2.0..=23.0).contains(&bits) {
+        bail!("bit-width {bits} out of range [2, 23]");
+    }
+    Ok((2f64.powi(bits as i32 - 1) - 1.0) as f32)
+}
+
+/// Build a TrainConfig from an optional JSON file + CLI overrides.
+pub fn load_train_config(args: &Args, default_steps: usize)
+                         -> Result<(TrainConfig, usize)> {
+    let mut j = Json::Obj(Default::default());
+    if let Some(path) = args.get("config") {
+        j = Json::parse_file(path).map_err(|e| anyhow!(e))?;
+    }
+    let gs = |key: &str| j.get(key).and_then(|v| v.as_str().map(String::from));
+    let gn = |key: &str| j.get(key).and_then(|v| v.as_f64());
+
+    let profile = args
+        .get("profile")
+        .map(String::from)
+        .or_else(|| gs("profile"))
+        .unwrap_or_else(|| "tiny".into());
+    let method = parse_method(
+        args.get("method")
+            .map(String::from)
+            .or_else(|| gs("method"))
+            .as_deref()
+            .unwrap_or("fallback"),
+    )?;
+    let steps = args.get("steps").map(|s| s.parse().unwrap()).or_else(
+        || gn("steps").map(|n| n as usize)).unwrap_or(default_steps);
+    let seed = args
+        .get("seed")
+        .map(|s| s.parse().unwrap())
+        .or_else(|| gn("seed").map(|n| n as u64))
+        .unwrap_or(0);
+
+    let mut cfg = TrainConfig::new(&profile, method, seed, steps);
+
+    if let Some(lr) = j.get("lr") {
+        cfg.lr = LrSchedule {
+            peak: lr.get("peak").and_then(|v| v.as_f64())
+                .unwrap_or(cfg.lr.peak),
+            warmup: lr.get("warmup").and_then(|v| v.as_usize())
+                .unwrap_or(cfg.lr.warmup),
+            total: steps,
+        };
+    }
+    if let Some(v) = args.get("lr") {
+        cfg.lr.peak = v.parse()?;
+    }
+    if let Some(v) = gn("weight_decay") {
+        cfg.weight_decay = v;
+    }
+    if let Some(v) = gn("grad_clip") {
+        cfg.grad_clip = v;
+    }
+    if let Some(fb) = j.get("fallback") {
+        if let Some(v) = fb.get("r_min").and_then(|v| v.as_f64()) {
+            cfg.r_min = v;
+        }
+        if let Some(v) = fb.get("r_max").and_then(|v| v.as_f64()) {
+            cfg.r_max = v;
+        }
+        if let Some(v) = fb.get("alpha").and_then(|v| v.as_f64()) {
+            cfg.alpha = v as f32;
+        }
+    }
+    cfg.r_min = args.get_f64("rmin", cfg.r_min);
+    cfg.r_max = args.get_f64("rmax", cfg.r_max);
+    cfg.alpha = args.get_f64("alpha", cfg.alpha as f64) as f32;
+
+    if let Some(q) = j.get("quant") {
+        let mut qs = QScalars::default();
+        if let Some(b) = q.get("x_bits").and_then(|v| v.as_f64()) {
+            qs.levels_x = bits_to_levels(b)?;
+        }
+        if let Some(b) = q.get("w_bits").and_then(|v| v.as_f64()) {
+            qs.levels_w = bits_to_levels(b)?;
+        }
+        if let Some(b) = q.get("dy_bits").and_then(|v| v.as_f64()) {
+            qs.levels_dy = bits_to_levels(b)?;
+        }
+        if let Some(b) = q.get("ctx_bits").and_then(|v| v.as_f64()) {
+            qs.ctx_bits = b as f32;
+        }
+        if let Some(b) = q.get("sr_dy").and_then(|v| v.as_bool()) {
+            qs.sr_dy = b as u8 as f32;
+        }
+        if let Some(b) = q.get("sr_ctx").and_then(|v| v.as_bool()) {
+            qs.sr_ctx = b as u8 as f32;
+        }
+        if let Some(c) = q.get("criterion").and_then(|v| v.as_str()) {
+            qs.crit = match c {
+                "absmax" => [1.0, 0.0, 0.0],
+                "l1" => [0.0, 1.0, 0.0],
+                "l1rel" => [0.0, 0.0, 1.0],
+                other => bail!("unknown criterion '{other}'"),
+            };
+        }
+        cfg.qscalars = qs;
+    }
+
+    // validation
+    if !(0.0..=1.0).contains(&cfg.r_min) || !(0.0..=1.0).contains(&cfg.r_max)
+        || cfg.r_min > cfg.r_max
+    {
+        bail!("invalid fallback band [{}, {}]", cfg.r_min, cfg.r_max);
+    }
+    if cfg.alpha <= 1.0 {
+        bail!("adjustment factor alpha must exceed 1, got {}", cfg.alpha);
+    }
+    Ok((cfg, steps))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(xs: &[&str]) -> Args {
+        let v: Vec<String> = xs.iter().map(|s| s.to_string()).collect();
+        Args::parse(&v, &[]).unwrap()
+    }
+
+    #[test]
+    fn defaults_without_file() {
+        let (cfg, steps) = load_train_config(&args(&[]), 50).unwrap();
+        assert_eq!(cfg.profile, "tiny");
+        assert_eq!(cfg.method, Method::Fallback);
+        assert_eq!(steps, 50);
+        assert_eq!(cfg.r_min, 0.1);
+        assert_eq!(cfg.alpha, 1.3);
+    }
+
+    #[test]
+    fn file_then_cli_precedence() {
+        let dir = std::env::temp_dir().join("dbfq_cfg_test.json");
+        std::fs::write(&dir, r#"{
+            "profile": "small", "method": "block", "steps": 100,
+            "lr": {"peak": 0.01, "warmup": 5},
+            "fallback": {"r_min": 0.05, "r_max": 0.4, "alpha": 2.0},
+            "quant": {"x_bits": 6, "criterion": "l1", "sr_dy": false}
+        }"#).unwrap();
+        let a = args(&["--config", dir.to_str().unwrap(),
+                       "--method", "fallback", "--rmin", "0.2"]);
+        let (cfg, steps) = load_train_config(&a, 50).unwrap();
+        assert_eq!(cfg.profile, "small"); // from file
+        assert_eq!(cfg.method, Method::Fallback); // CLI override
+        assert_eq!(steps, 100);
+        assert_eq!(cfg.lr.peak, 0.01);
+        assert_eq!(cfg.r_min, 0.2); // CLI override
+        assert_eq!(cfg.r_max, 0.4); // file
+        assert_eq!(cfg.qscalars.levels_x, 31.0); // 6 bits
+        assert_eq!(cfg.qscalars.crit, [0.0, 1.0, 0.0]);
+        assert_eq!(cfg.qscalars.sr_dy, 0.0);
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        let dir = std::env::temp_dir().join("dbfq_cfg_bad.json");
+        std::fs::write(&dir, r#"{"fallback": {"r_min": 0.5, "r_max": 0.1}}"#)
+            .unwrap();
+        let a = args(&["--config", dir.to_str().unwrap()]);
+        assert!(load_train_config(&a, 10).is_err());
+
+        std::fs::write(&dir, r#"{"quant": {"x_bits": 99}}"#).unwrap();
+        let a = args(&["--config", dir.to_str().unwrap()]);
+        assert!(load_train_config(&a, 10).is_err());
+
+        std::fs::write(&dir, r#"{"method": "fp4"}"#).unwrap();
+        let a = args(&["--config", dir.to_str().unwrap()]);
+        assert!(load_train_config(&a, 10).is_err());
+    }
+}

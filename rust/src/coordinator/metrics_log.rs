@@ -1,0 +1,167 @@
+//! Structured metrics stream: JSON-lines writer + in-memory summaries.
+//!
+//! Every training/benchmark driver funnels its per-step statistics
+//! through here, giving runs a uniform on-disk format
+//! (`runs/*.jsonl`) that the fig7b bench and external tooling can
+//! consume, plus cheap running summaries (mean/min/max/last, EMA).
+
+use std::io::Write;
+
+use crate::util::json::{obj, Json};
+
+/// Running summary of one scalar series.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub count: usize,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    pub last: f64,
+    pub ema: f64,
+    pub ema_alpha: f64,
+}
+
+impl Series {
+    pub fn new(name: &str) -> Series {
+        Series {
+            name: name.to_string(),
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            last: f64::NAN,
+            ema: f64::NAN,
+            ema_alpha: 0.1,
+        }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.last = v;
+        self.ema = if self.ema.is_nan() {
+            v
+        } else {
+            self.ema + self.ema_alpha * (v - self.ema)
+        };
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+/// JSON-lines metrics logger with per-key running summaries.
+pub struct MetricsLog {
+    file: Option<std::fs::File>,
+    pub series: std::collections::BTreeMap<String, Series>,
+    pub run: String,
+}
+
+impl MetricsLog {
+    /// `path = None` keeps summaries in memory only.
+    pub fn new(run: &str, path: Option<&str>) -> std::io::Result<MetricsLog> {
+        let file = match path {
+            Some(p) => {
+                if let Some(dir) = std::path::Path::new(p).parent() {
+                    std::fs::create_dir_all(dir)?;
+                }
+                Some(std::fs::File::create(p)?)
+            }
+            None => None,
+        };
+        Ok(MetricsLog {
+            file,
+            series: Default::default(),
+            run: run.to_string(),
+        })
+    }
+
+    /// Record one step's scalars; writes one JSON line if file-backed.
+    pub fn log(&mut self, step: usize, kv: &[(&str, f64)])
+               -> std::io::Result<()> {
+        for (k, v) in kv {
+            self.series
+                .entry(k.to_string())
+                .or_insert_with(|| Series::new(k))
+                .push(*v);
+        }
+        if let Some(f) = &mut self.file {
+            let mut rec = vec![
+                ("run", Json::Str(self.run.clone())),
+                ("step", Json::Num(step as f64)),
+            ];
+            for (k, v) in kv {
+                rec.push((k, Json::Num(*v)));
+            }
+            writeln!(f, "{}", obj(rec).to_string())?;
+        }
+        Ok(())
+    }
+
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        for (k, series) in &self.series {
+            s.push_str(&format!(
+                "{k}: last {:.4}  mean {:.4}  min {:.4}  max {:.4}  \
+                 (n={})\n",
+                series.last,
+                series.mean(),
+                series.min,
+                series.max,
+                series.count
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_stats() {
+        let mut s = Series::new("loss");
+        for v in [3.0, 2.0, 4.0, 1.0] {
+            s.push(v);
+        }
+        assert_eq!(s.count, 4);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert_eq!(s.last, 1.0);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!(s.ema > 1.0 && s.ema < 3.0);
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let dir = std::env::temp_dir().join("dbfq_mlog_test.jsonl");
+        let path = dir.to_str().unwrap();
+        let mut log = MetricsLog::new("test", Some(path)).unwrap();
+        log.log(1, &[("loss", 2.5), ("rate", 0.2)]).unwrap();
+        log.log(2, &[("loss", 2.0), ("rate", 0.25)]).unwrap();
+        drop(log);
+        let text = std::fs::read_to_string(path).unwrap();
+        let lines: Vec<&str> = text.trim().lines().collect();
+        assert_eq!(lines.len(), 2);
+        let j = Json::parse(lines[1]).unwrap();
+        assert_eq!(j.req("step").as_f64(), Some(2.0));
+        assert_eq!(j.req("loss").as_f64(), Some(2.0));
+        assert_eq!(j.req("run").as_str(), Some("test"));
+    }
+
+    #[test]
+    fn memory_only_mode() {
+        let mut log = MetricsLog::new("mem", None).unwrap();
+        log.log(0, &[("x", 1.0)]).unwrap();
+        assert!(log.summary().contains("x: last 1.0000"));
+    }
+}

@@ -1,0 +1,396 @@
+//! Training coordinator: drives the AOT train/eval artifacts through the
+//! PJRT runtime, owns optimizer state, runs the delay-threshold
+//! controller (Algorithm 2) between steps, and streams metrics.
+//!
+//! This is the L3 "framework" a user launches: configure a profile +
+//! method, hand it a data source, call `step()` in a loop. Python is
+//! never on this path.
+
+pub mod metrics_log;
+pub mod threshold;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::Method;
+use crate::runtime::{Runtime, Value};
+use crate::util::rng::Pcg64;
+
+pub use metrics_log::MetricsLog;
+pub use threshold::ThresholdController;
+
+/// Runtime quantization scalars fed to every artifact call
+/// (see `trainstep.QSCALAR_NAMES`).
+#[derive(Debug, Clone)]
+pub struct QScalars {
+    pub levels_x: f32,
+    pub levels_w: f32,
+    pub levels_dy: f32,
+    pub sr_dy: f32,
+    pub sr_ctx: f32,
+    pub fallback_bwd: f32,
+    /// one-hot [absmax, l1, l1rel]
+    pub crit: [f32; 3],
+    pub ctx_bits: f32,
+    /// forward non-linear *input* bits (Fig 6a); >= 15 disables (BF16)
+    pub nl_in_bits: f32,
+}
+
+impl Default for QScalars {
+    fn default() -> Self {
+        QScalars {
+            levels_x: 127.0,
+            levels_w: 127.0,
+            levels_dy: 127.0,
+            sr_dy: 1.0,
+            sr_ctx: 1.0,
+            fallback_bwd: 0.0,
+            crit: [1.0, 0.0, 0.0],
+            ctx_bits: 10.0,
+            nl_in_bits: 15.0,
+        }
+    }
+}
+
+impl QScalars {
+    /// Effectively-lossless settings (the high-precision reference used
+    /// by gradient-cosine ablations).
+    pub fn lossless() -> QScalars {
+        QScalars {
+            levels_x: 4_194_303.0, // 2^23-ish: f32-exact "no quantization"
+            levels_w: 4_194_303.0,
+            levels_dy: 4_194_303.0,
+            sr_dy: 0.0,
+            sr_ctx: 0.0,
+            fallback_bwd: 0.0,
+            crit: [1.0, 0.0, 0.0],
+            ctx_bits: 15.0,
+            nl_in_bits: 15.0,
+        }
+    }
+
+    pub fn bits(x_bits: u32, w_bits: u32, dy_bits: u32) -> QScalars {
+        QScalars {
+            levels_x: (1u32 << (x_bits - 1)) as f32 - 1.0,
+            levels_w: (1u32 << (w_bits - 1)) as f32 - 1.0,
+            levels_dy: (1u32 << (dy_bits - 1)) as f32 - 1.0,
+            ..QScalars::default()
+        }
+    }
+
+    pub fn to_vec(&self) -> Vec<f32> {
+        vec![
+            self.levels_x,
+            self.levels_w,
+            self.levels_dy,
+            self.sr_dy,
+            self.sr_ctx,
+            self.fallback_bwd,
+            self.crit[0],
+            self.crit[1],
+            self.crit[2],
+            self.ctx_bits,
+            self.nl_in_bits,
+        ]
+    }
+}
+
+/// Learning-rate schedule: linear warmup then linear decay (paper
+/// Appendix A uses exactly this shape).
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    pub peak: f64,
+    pub warmup: usize,
+    pub total: usize,
+}
+
+impl LrSchedule {
+    pub fn lr_at(&self, step: usize) -> f64 {
+        if self.total == 0 {
+            return self.peak;
+        }
+        if step < self.warmup {
+            return self.peak * (step + 1) as f64 / self.warmup as f64;
+        }
+        let rest = (self.total - step.min(self.total)) as f64
+            / (self.total - self.warmup).max(1) as f64;
+        self.peak * rest.max(0.0)
+    }
+}
+
+/// Trainer configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub profile: String,
+    pub method: Method,
+    pub seed: u64,
+    pub lr: LrSchedule,
+    pub weight_decay: f64,
+    pub grad_clip: f64,
+    pub qscalars: QScalars,
+    /// fallback-rate band + adjustment factor (Algorithm 2)
+    pub r_min: f64,
+    pub r_max: f64,
+    pub alpha: f32,
+    /// pin θ forever (constant-rate ablation, Fig 8b) — skips Alg 2
+    pub freeze_thresholds: bool,
+}
+
+impl TrainConfig {
+    pub fn new(profile: &str, method: Method, seed: u64,
+               total_steps: usize) -> TrainConfig {
+        TrainConfig {
+            profile: profile.to_string(),
+            method,
+            seed,
+            lr: LrSchedule { peak: 1e-3, warmup: total_steps / 10 + 1,
+                             total: total_steps },
+            weight_decay: 1e-3,
+            grad_clip: 1.0,
+            qscalars: QScalars::default(),
+            r_min: 0.1,
+            r_max: 0.3,
+            alpha: 1.3,
+            freeze_thresholds: false,
+        }
+    }
+}
+
+/// Per-step statistics.
+#[derive(Debug, Clone)]
+pub struct StepStats {
+    pub step: usize,
+    pub loss: f64,
+    pub grad_norm: f64,
+    pub mean_fallback_rate: f64,
+    pub mean_theta: f64,
+    pub lr: f64,
+}
+
+/// The training coordinator.
+pub struct Trainer<'rt> {
+    pub rt: &'rt Runtime,
+    pub cfg: TrainConfig,
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: usize,
+    pub controller: ThresholdController,
+    pub history: Vec<StepStats>,
+    rng: Pcg64,
+    train_artifact: String,
+    eval_artifact: String,
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Initialize parameters via the profile's `init` artifact.
+    pub fn new(rt: &'rt Runtime, cfg: TrainConfig) -> Result<Trainer<'rt>> {
+        let prof = rt.profile(&cfg.profile)?.clone();
+        let train_artifact =
+            format!("train_{}_{}", cfg.profile, cfg.method.tag());
+        let eval_artifact =
+            format!("eval_{}_{}", cfg.profile, cfg.method.tag());
+        if !rt.has_artifact(&train_artifact) {
+            return Err(anyhow!(
+                "artifact '{train_artifact}' missing — re-run `make \
+                 artifacts` with this profile/mode"
+            ));
+        }
+        let out = rt.call(
+            &format!("init_{}", cfg.profile),
+            &[Value::scalar_i32(cfg.seed as i32)],
+        )?;
+        let params = out.into_iter().next().unwrap().into_f32()?;
+        assert_eq!(params.len(), prof.n_params);
+
+        let controller = if cfg.method == Method::Fallback {
+            let mut c = ThresholdController::paper_default(prof.n_sites);
+            c.r_min = cfg.r_min;
+            c.r_max = cfg.r_max;
+            c.alpha = cfg.alpha;
+            c
+        } else {
+            ThresholdController::disabled(prof.n_sites)
+        };
+
+        Ok(Trainer {
+            rt,
+            m: vec![0.0; params.len()],
+            v: vec![0.0; params.len()],
+            params,
+            step: 0,
+            controller,
+            history: Vec::new(),
+            rng: Pcg64::new(cfg.seed ^ 0xD8F9),
+            cfg,
+            train_artifact,
+            eval_artifact,
+        })
+    }
+
+    /// Pin all thresholds to a fixed value (constant-rate ablations).
+    pub fn set_thresholds(&mut self, theta: f32) {
+        for t in self.controller.thresholds.iter_mut() {
+            *t = theta;
+        }
+    }
+
+    /// One optimizer step on a (batch, seq+1) token window.
+    pub fn step_on(&mut self, tokens: &[i32]) -> Result<StepStats> {
+        let prof = self.rt.profile(&self.cfg.profile)?;
+        let lr = self.cfg.lr.lr_at(self.step);
+        let seed = self.rng.next_u32() as i32;
+
+        let inputs = vec![
+            Value::vec_f32(std::mem::take(&mut self.params)),
+            Value::vec_f32(std::mem::take(&mut self.m)),
+            Value::vec_f32(std::mem::take(&mut self.v)),
+            Value::scalar_f32(self.step as f32),
+            Value::mat_i32(tokens.to_vec(), prof.batch, prof.seq_len + 1),
+            Value::scalar_i32(seed),
+            Value::vec_f32(self.controller.thresholds.clone()),
+            Value::vec_f32(self.cfg.qscalars.to_vec()),
+            Value::F32(
+                vec![lr as f32, self.cfg.weight_decay as f32,
+                     self.cfg.grad_clip as f32],
+                vec![3],
+            ),
+        ];
+        let mut out = self.rt.call(&self.train_artifact, &inputs)?;
+        // outputs: params, m, v, loss, rates, grad_norm
+        let grad_norm = out.pop().unwrap().scalar()? as f64;
+        let rates = out.pop().unwrap().into_f32()?;
+        let loss = out.pop().unwrap().scalar()? as f64;
+        self.v = out.pop().unwrap().into_f32()?;
+        self.m = out.pop().unwrap().into_f32()?;
+        self.params = out.pop().unwrap().into_f32()?;
+
+        let mean_rate = rates.iter().map(|&r| r as f64).sum::<f64>()
+            / rates.len().max(1) as f64;
+        if self.cfg.method == Method::Fallback
+            && !self.cfg.freeze_thresholds
+        {
+            self.controller.update(&rates);
+        }
+        self.step += 1;
+        let stats = StepStats {
+            step: self.step,
+            loss,
+            grad_norm,
+            mean_fallback_rate: mean_rate,
+            mean_theta: self.controller.mean_theta(),
+            lr,
+        };
+        self.history.push(stats.clone());
+        Ok(stats)
+    }
+
+    /// Mean eval loss over token windows (deterministic, no SR).
+    pub fn eval_on(&self, batches: &[Vec<i32>]) -> Result<f64> {
+        let prof = self.rt.profile(&self.cfg.profile)?;
+        let mut tot = 0.0f64;
+        for tokens in batches {
+            let out = self.rt.call(
+                &self.eval_artifact,
+                &[
+                    Value::vec_f32(self.params.clone()),
+                    Value::mat_i32(tokens.clone(), prof.batch,
+                                   prof.seq_len + 1),
+                    Value::vec_f32(self.controller.thresholds.clone()),
+                    Value::vec_f32(self.cfg.qscalars.to_vec()),
+                ],
+            )?;
+            tot += out[0].scalar()? as f64;
+        }
+        Ok(tot / batches.len().max(1) as f64)
+    }
+
+    /// Per-token eval losses for one window (answer-span scoring).
+    pub fn eval_per_token(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let prof = self.rt.profile(&self.cfg.profile)?;
+        let out = self.rt.call(
+            &self.eval_artifact,
+            &[
+                Value::vec_f32(self.params.clone()),
+                Value::mat_i32(tokens.to_vec(), prof.batch,
+                               prof.seq_len + 1),
+                Value::vec_f32(self.controller.thresholds.clone()),
+                Value::vec_f32(self.cfg.qscalars.to_vec()),
+            ],
+        )?;
+        out[1].clone().into_f32()
+    }
+
+    /// Save a JSON checkpoint (params as base-less f32 list is huge; we
+    /// store raw little-endian f32 alongside a JSON header).
+    pub fn save_checkpoint(&self, path: &str) -> Result<()> {
+        let hdr = crate::util::json::obj(vec![
+            ("profile", crate::util::json::Json::Str(
+                self.cfg.profile.clone())),
+            ("method", crate::util::json::Json::Str(
+                self.cfg.method.tag().into())),
+            ("step", crate::util::json::Json::Num(self.step as f64)),
+            ("n_params", crate::util::json::Json::Num(
+                self.params.len() as f64)),
+            ("thresholds", crate::util::json::arr_f64(
+                &self.controller.thresholds.iter()
+                    .map(|&t| t as f64).collect::<Vec<_>>())),
+        ]);
+        std::fs::write(format!("{path}.json"), hdr.to_string())?;
+        let mut raw = Vec::with_capacity(self.params.len() * 4);
+        for p in &self.params {
+            raw.extend_from_slice(&p.to_le_bytes());
+        }
+        std::fs::write(format!("{path}.f32"), raw)?;
+        Ok(())
+    }
+
+    /// Load parameters from a checkpoint written by `save_checkpoint`.
+    pub fn load_checkpoint(&mut self, path: &str) -> Result<()> {
+        let raw = std::fs::read(format!("{path}.f32"))?;
+        if raw.len() != self.params.len() * 4 {
+            return Err(anyhow!(
+                "checkpoint size {} != expected {}",
+                raw.len() / 4,
+                self.params.len()
+            ));
+        }
+        for (i, chunk) in raw.chunks_exact(4).enumerate() {
+            self.params[i] =
+                f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let s = LrSchedule { peak: 1.0, warmup: 10, total: 100 };
+        assert!(s.lr_at(0) < s.lr_at(9));
+        assert!((s.lr_at(9) - 1.0).abs() < 0.11);
+        assert!(s.lr_at(50) < 1.0);
+        assert!(s.lr_at(99) < s.lr_at(50));
+        assert_eq!(s.lr_at(100), 0.0);
+    }
+
+    #[test]
+    fn qscalars_vec_layout() {
+        let q = QScalars::default();
+        let v = q.to_vec();
+        assert_eq!(v.len(), 11);
+        assert_eq!(v[0], 127.0);
+        assert_eq!(v[3], 1.0); // sr_dy
+        assert_eq!(v[6], 1.0); // crit absmax
+        assert_eq!(v[9], 10.0); // ctx bits
+    }
+
+    #[test]
+    fn qscalars_bits() {
+        let q = QScalars::bits(8, 8, 4);
+        assert_eq!(q.levels_x, 127.0);
+        assert_eq!(q.levels_dy, 7.0);
+    }
+}

@@ -1,0 +1,168 @@
+//! Delay-threshold controller — paper Algorithm 2 (§4.4, Appendix D).
+//!
+//! Per linear-layer fallback thresholds θ are adjusted *between* steps
+//! from the previous step's observed fallback rates: divide by α when
+//! the rate falls below r_min, multiply by α when it exceeds r_max.
+//! This avoids the tensor-wide TopK reduction a direct threshold would
+//! need, at the cost of one-step delay (hence the name).
+//!
+//! θ values are runtime inputs to the AOT train-step graph, so the
+//! controller needs no recompilation to act.
+
+/// Controller state for all quantization sites of a model.
+#[derive(Debug, Clone)]
+pub struct ThresholdController {
+    pub thresholds: Vec<f32>,
+    pub r_min: f64,
+    pub r_max: f64,
+    pub alpha: f32,
+    /// adjustment counters (diagnostics)
+    pub n_up: usize,
+    pub n_down: usize,
+}
+
+impl ThresholdController {
+    /// Paper defaults: range [0.1, 0.3], α = 1.3, θ₀ = 1.
+    pub fn paper_default(n_sites: usize) -> ThresholdController {
+        ThresholdController::new(n_sites, 1.0, 0.1, 0.3, 1.3)
+    }
+
+    pub fn new(n_sites: usize, theta0: f32, r_min: f64, r_max: f64,
+               alpha: f32) -> ThresholdController {
+        assert!(alpha > 1.0, "adjustment factor must exceed 1");
+        assert!(0.0 <= r_min && r_min <= r_max && r_max <= 1.0);
+        ThresholdController {
+            thresholds: vec![theta0; n_sites],
+            r_min,
+            r_max,
+            alpha,
+            n_up: 0,
+            n_down: 0,
+        }
+    }
+
+    /// Disable fallback entirely (Block / Jetfire / BF16 baselines).
+    pub fn disabled(n_sites: usize) -> ThresholdController {
+        ThresholdController {
+            thresholds: vec![f32::INFINITY; n_sites],
+            r_min: 0.0,
+            r_max: 1.0,
+            alpha: 2.0,
+            n_up: 0,
+            n_down: 0,
+        }
+    }
+
+    /// Algorithm 2 lines 13-19: one post-step adjustment from observed
+    /// per-site fallback rates.
+    pub fn update(&mut self, rates: &[f32]) {
+        assert_eq!(rates.len(), self.thresholds.len());
+        for (theta, &rate) in self.thresholds.iter_mut().zip(rates) {
+            if !theta.is_finite() {
+                continue; // disabled site
+            }
+            if (rate as f64) < self.r_min {
+                *theta /= self.alpha;
+                self.n_down += 1;
+            } else if (rate as f64) > self.r_max {
+                *theta *= self.alpha;
+                self.n_up += 1;
+            }
+        }
+    }
+
+    pub fn mean_theta(&self) -> f64 {
+        let finite: Vec<f64> = self
+            .thresholds
+            .iter()
+            .filter(|t| t.is_finite())
+            .map(|&t| t as f64)
+            .collect();
+        if finite.is_empty() {
+            return f64::INFINITY;
+        }
+        finite.iter().sum::<f64>() / finite.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moves_toward_band() {
+        let mut c = ThresholdController::new(2, 1.0, 0.1, 0.3, 1.3);
+        c.update(&[0.0, 0.9]); // site0 too low -> theta down; site1 up
+        assert!(c.thresholds[0] < 1.0);
+        assert!(c.thresholds[1] > 1.0);
+        assert_eq!(c.n_down, 1);
+        assert_eq!(c.n_up, 1);
+    }
+
+    #[test]
+    fn stays_inside_band() {
+        let mut c = ThresholdController::new(1, 2.0, 0.1, 0.3, 1.3);
+        c.update(&[0.2]);
+        assert_eq!(c.thresholds[0], 2.0);
+    }
+
+    #[test]
+    fn disabled_sites_never_move() {
+        let mut c = ThresholdController::disabled(3);
+        c.update(&[0.0, 0.5, 1.0]);
+        assert!(c.thresholds.iter().all(|t| t.is_infinite()));
+    }
+
+    #[test]
+    fn converges_on_simulated_plant() {
+        // Plant: rate = fraction of block absmaxes (lognormal) > theta.
+        // The controller must pull the rate into [0.1, 0.3] and keep it
+        // there — the closed-loop property Algorithm 2 claims.
+        let mut rng = crate::util::rng::Pcg64::new(1);
+        let mut absmaxes = vec![0.0f32; 4096];
+        for a in absmaxes.iter_mut() {
+            *a = (rng.normal() * 1.2).exp() as f32;
+        }
+        let rate_for = |theta: f32| {
+            absmaxes.iter().filter(|&&a| a > theta).count() as f32
+                / absmaxes.len() as f32
+        };
+        let mut c = ThresholdController::new(1, 1000.0, 0.1, 0.3, 1.3);
+        let mut in_band_streak = 0;
+        for _ in 0..200 {
+            let r = rate_for(c.thresholds[0]);
+            c.update(&[r]);
+            let r_now = rate_for(c.thresholds[0]);
+            if (0.1..=0.3).contains(&(r_now as f64)) {
+                in_band_streak += 1;
+            } else {
+                in_band_streak = 0;
+            }
+        }
+        assert!(in_band_streak >= 50,
+                "controller failed to settle (streak {in_band_streak})");
+    }
+
+    #[test]
+    fn prop_update_is_bounded_multiplicative() {
+        crate::util::testing::forall("thresh-bounded", 30, |g| {
+            let n = g.usize_in(1, 16);
+            let mut c = ThresholdController::new(
+                n, g.f32_in(0.01, 100.0), 0.1, 0.3, 1.3);
+            let before = c.thresholds.clone();
+            let rates: Vec<f32> =
+                (0..n).map(|_| g.f32_in(0.0, 1.0)).collect();
+            c.update(&rates);
+            for (b, a) in before.iter().zip(&c.thresholds) {
+                let ratio = a / b;
+                crate::prop_assert!(
+                    (ratio - 1.0).abs() < 1e-6
+                        || (ratio - 1.3).abs() < 1e-3
+                        || (ratio - 1.0 / 1.3).abs() < 1e-3,
+                    "ratio {ratio}"
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,258 @@
+//! GPU roofline cost model — projects the CPU-measured kernel structure
+//! onto the paper's GPUs (RTX 4090/3090, L20, A800).
+//!
+//! The testbed has no CUDA hardware (DESIGN.md §Substitutions), so the
+//! *measured* axis of every kernel claim comes from the Rust CPU GEMM
+//! substrate, while this model reproduces the paper's absolute numbers:
+//! Fig 1b (throughput vs group size), Table 3 (layer speedups), Fig 8c /
+//! Fig 9 (fallback GEMM throughput, random vs sequential placement).
+//!
+//! Model per GEMM: t = max(t_mma, t_mem) + t_dequant, where
+//!   t_mma     = 2·M·N·K · (1 + fallback_extra) / peak_int8
+//!   t_dequant = c_deq · M·N · ceil(K/Kg) / peak_cuda  (FP32 scale-FMA
+//!               per C element per K-group — the Eq. 1 accumulation)
+//!   t_mem     = bytes(A, B, C, fallback A residuals) / bw
+//! Worst-case (sequential) placement adds an LPT makespan penalty over
+//! the SM grid.
+
+/// Hardware description (dense peak numbers, no sparsity).
+#[derive(Debug, Clone)]
+pub struct Gpu {
+    pub name: &'static str,
+    /// INT8 tensor-core peak, Tops
+    pub int8_tops: f64,
+    /// BF16 tensor-core peak, Tflops
+    pub bf16_tflops: f64,
+    /// FP32 CUDA-core peak, Tflops (dequant/accumulate path)
+    pub cuda_tflops: f64,
+    /// memory bandwidth, GB/s
+    pub mem_bw_gbs: f64,
+    /// number of SMs (scheduling granularity)
+    pub sms: usize,
+}
+
+/// The four GPUs of the paper's evaluation (§6.3, Appendix B).
+pub fn rtx4090() -> Gpu {
+    Gpu { name: "RTX4090", int8_tops: 660.6, bf16_tflops: 165.2,
+          cuda_tflops: 82.6, mem_bw_gbs: 1008.0, sms: 128 }
+}
+
+pub fn rtx3090() -> Gpu {
+    Gpu { name: "RTX3090", int8_tops: 284.0, bf16_tflops: 71.0,
+          cuda_tflops: 35.6, mem_bw_gbs: 936.0, sms: 82 }
+}
+
+pub fn l20() -> Gpu {
+    Gpu { name: "L20", int8_tops: 239.0, bf16_tflops: 119.5,
+          cuda_tflops: 59.8, mem_bw_gbs: 864.0, sms: 92 }
+}
+
+pub fn a800() -> Gpu {
+    Gpu { name: "A800", int8_tops: 624.0, bf16_tflops: 312.0,
+          cuda_tflops: 19.5, mem_bw_gbs: 2039.0, sms: 108 }
+}
+
+pub fn all_gpus() -> Vec<Gpu> {
+    vec![rtx4090(), rtx3090(), l20(), a800()]
+}
+
+/// Tensor-core utilization ceiling for well-tuned kernels (empirically
+/// ~70-80% of peak for INT8 GEMM at these sizes; calibrated so the
+/// 4090 curve passes through the paper's 425 Tops @ Kg=128 and
+/// ~270 Tops @ Kg=32 (Fig 1b).
+const MMA_EFF: f64 = 0.78;
+/// dequant cost in CUDA-core flops per C element per K-group step
+/// (scale product + FMA into the f32 accumulator).
+const DEQ_FLOPS: f64 = 8.0;
+
+impl Gpu {
+    /// Seconds for a BF16 GEMM of (m, n, k).
+    pub fn bf16_gemm_secs(&self, m: usize, n: usize, k: usize) -> f64 {
+        let work = 2.0 * m as f64 * n as f64 * k as f64;
+        let t_mma = work / (self.bf16_tflops * 1e12 * MMA_EFF);
+        let bytes = 2.0
+            * (m as f64 * k as f64 + k as f64 * n as f64
+               + m as f64 * n as f64);
+        t_mma.max(bytes / (self.mem_bw_gbs * 1e9))
+    }
+
+    /// Seconds for an INT8 block-quantized GEMM (Eq. 1) with group size
+    /// `kg` and fallback rate `rate` (0 for plain block GEMM).
+    pub fn int8_gemm_secs(&self, m: usize, n: usize, k: usize, kg: usize,
+                          rate: f64) -> f64 {
+        let (mf, nf, kf) = (m as f64, n as f64, k as f64);
+        let work = 2.0 * mf * nf * kf * (1.0 + rate);
+        let t_mma = work / (self.int8_tops * 1e12 * MMA_EFF);
+        let kgroups = (k as f64 / kg as f64).ceil();
+        // Residual blocks dequant-accumulate too.
+        let t_deq = DEQ_FLOPS * mf * nf * kgroups * (1.0 + rate)
+            / (self.cuda_tflops * 1e12);
+        let bytes = mf * kf * (1.0 + rate) + kf * nf + 4.0 * mf * nf;
+        let t_mem = bytes / (self.mem_bw_gbs * 1e9);
+        t_mma.max(t_mem) + t_deq
+    }
+
+    /// Throughput in Tops for the INT8 GEMM above (useful work 2MNK,
+    /// like the paper's y-axes — fallback overhead lowers it).
+    pub fn int8_gemm_tops(&self, m: usize, n: usize, k: usize, kg: usize,
+                          rate: f64) -> f64 {
+        2.0 * m as f64 * n as f64 * k as f64
+            / self.int8_gemm_secs(m, n, k, kg, rate) / 1e12
+    }
+
+    /// Sequential (worst-case) placement: fallback blocks concentrate in
+    /// the leading A block-rows, so the corresponding C row-panels carry
+    /// (1 + rate_in_row) x work. GPUs rasterize C tiles in a static
+    /// row-major order across SMs; we simulate that schedule exactly
+    /// (each tile's cost = 1 + fallback-fraction of its A row) and take
+    /// the max-SM makespan. Small GEMMs suffer most — too few light
+    /// tiles to hide the heavy wave (paper Fig 8c).
+    pub fn int8_gemm_tops_worst(&self, m: usize, n: usize, k: usize,
+                                kg: usize, rate: f64) -> f64 {
+        let even = self.int8_gemm_secs(m, n, k, kg, rate);
+        let tiles_m = m.div_ceil(kg);
+        let tiles_n = n.div_ceil(kg);
+        // sequential: all fallback K-blocks packed into leading rows
+        let total_fb = rate * (tiles_m * tiles_n) as f64; // row-units
+        let mut row_cost = vec![1.0f64; tiles_m];
+        let mut left = total_fb * tiles_n as f64; // tile-units of extra
+        for rc in row_cost.iter_mut() {
+            let add = left.min(tiles_n as f64);
+            *rc += add / tiles_n as f64;
+            left -= add;
+            if left <= 0.0 {
+                break;
+            }
+        }
+        // static row-major rasterization across SMs
+        let mut sm_load = vec![0.0f64; self.sms];
+        let mut idx = 0usize;
+        for r in 0..tiles_m {
+            for _ in 0..tiles_n {
+                sm_load[idx % self.sms] += row_cost[r];
+                idx += 1;
+            }
+        }
+        let makespan = sm_load.iter().cloned().fold(0.0, f64::max);
+        let ideal: f64 = sm_load.iter().sum::<f64>() / self.sms as f64;
+        // tail-wave quantization: even ideal schedules pay ceil() waves
+        let skew = (makespan / ideal).max(1.0);
+        2.0 * m as f64 * n as f64 * k as f64 / (even * skew) / 1e12
+    }
+
+    /// One transformer layer's GEMM time (fwd or fwd+bwd), hidden `d`,
+    /// GLU off (the paper's Table 3 uses a GPT-2 layer), `tokens` rows.
+    pub fn layer_secs(&self, d: usize, tokens: usize, int8: bool,
+                      kg: usize, rate: f64, backward: bool) -> f64 {
+        let shapes = [
+            (tokens, 3 * d, d),  // qkv
+            (tokens, d, d),      // attn out
+            (tokens, 4 * d, d),  // mlp up (GPT-2: 4d)
+            (tokens, d, 4 * d),  // mlp down
+        ];
+        let mut t = 0.0;
+        for (m, n, k) in shapes {
+            let fwd = if int8 {
+                self.int8_gemm_secs(m, n, k, kg, rate)
+            } else {
+                self.bf16_gemm_secs(m, n, k)
+            };
+            t += fwd;
+            if backward {
+                // dX (m,k,n) + dW (n,k,m): same MNK volume each. dY is
+                // not fallback-quantized (§5.1) -> rate only in fwd.
+                let bwd = if int8 {
+                    self.int8_gemm_secs(m, k, n, kg, 0.0)
+                        + self.int8_gemm_secs(n, k, m, kg, 0.0)
+                } else {
+                    self.bf16_gemm_secs(m, k, n)
+                        + self.bf16_gemm_secs(n, k, m)
+                };
+                t += bwd;
+            }
+        }
+        // attention stays BF16 in all methods
+        let attn = 2.0 * self.bf16_gemm_secs(tokens, tokens, d);
+        t + attn * if backward { 3.0 } else { 1.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int8_faster_than_bf16_at_large_sizes() {
+        let g = rtx4090();
+        let t8 = g.int8_gemm_secs(4096, 4096, 4096, 128, 0.0);
+        let t16 = g.bf16_gemm_secs(4096, 4096, 4096);
+        assert!(t8 < t16, "int8 {t8} vs bf16 {t16}");
+        // ratio should be ~2-4x
+        let ratio = t16 / t8;
+        assert!(ratio > 1.8 && ratio < 4.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn fig1b_shape_small_groups_slower() {
+        // Fig 1b: 32-group INT8 GEMM ~38% slower than 128-group on 4090.
+        let g = rtx4090();
+        let tops32 = g.int8_gemm_tops(4096, 4096, 4096, 32, 0.0);
+        let tops128 = g.int8_gemm_tops(4096, 4096, 4096, 128, 0.0);
+        assert!(tops32 < tops128);
+        let drop = 1.0 - tops32 / tops128;
+        assert!(drop > 0.2 && drop < 0.55, "drop {drop}");
+        // paper: ~270 Tops at 32, ~425 at 128 — shape check with slack
+        assert!(tops128 > 350.0 && tops128 < 520.0, "t128 {tops128}");
+        assert!(tops32 > 180.0 && tops32 < 350.0, "t32 {tops32}");
+    }
+
+    #[test]
+    fn fallback_overhead_proportional_to_rate() {
+        let g = rtx4090();
+        let t0 = g.int8_gemm_secs(4096, 4096, 4096, 128, 0.0);
+        let t20 = g.int8_gemm_secs(4096, 4096, 4096, 128, 0.2);
+        let t40 = g.int8_gemm_secs(4096, 4096, 4096, 128, 0.4);
+        assert!(t20 > t0 && t40 > t20);
+        let o20 = t20 / t0 - 1.0;
+        assert!(o20 > 0.1 && o20 < 0.3, "overhead {o20}");
+    }
+
+    #[test]
+    fn a800_gains_least() {
+        // Appendix B: A800's 2x int8:bf16 ratio + weak CUDA cores.
+        let speedup = |g: &Gpu| {
+            g.bf16_gemm_secs(4096, 4096, 4096)
+                / g.int8_gemm_secs(4096, 4096, 4096, 128, 0.2)
+        };
+        let s4090 = speedup(&rtx4090());
+        let s3090 = speedup(&rtx3090());
+        let sa800 = speedup(&a800());
+        assert!(s3090 > sa800, "3090 {s3090} vs a800 {sa800}");
+        assert!(s4090 > sa800);
+    }
+
+    #[test]
+    fn worst_case_placement_never_faster() {
+        let g = rtx4090();
+        for rate in [0.0, 0.1, 0.3] {
+            let even = g.int8_gemm_tops(2048, 2048, 2048, 128, rate);
+            let worst =
+                g.int8_gemm_tops_worst(2048, 2048, 2048, 128, rate);
+            assert!(worst <= even + 1e-9, "rate {rate}");
+        }
+    }
+
+    #[test]
+    fn layer_speedup_grows_with_hidden() {
+        // Table 3: overall speedup grows 1.31 -> 1.92 from 1024 to 4096.
+        let g = rtx4090();
+        let speed = |d: usize| {
+            g.layer_secs(d, 2048, false, 128, 0.0, true)
+                / g.layer_secs(d, 2048, true, 128, 0.2, true)
+        };
+        let s1k = speed(1024);
+        let s4k = speed(4096);
+        assert!(s4k > s1k, "{s1k} -> {s4k}");
+        assert!(s1k > 1.0 && s4k < 3.0);
+    }
+}

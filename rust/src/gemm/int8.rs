@@ -1,0 +1,384 @@
+//! INT8 block-quantized GEMM (paper Eq. 1) and fallback GEMM
+//! (Algorithm 1) on the CPU substrate.
+//!
+//! Semantics match the L1 Pallas kernel exactly: int8 codes multiply
+//! into an **int32 accumulator inside a block** (the TensorCore/MXU
+//! path), and blocks are combined with per-block scale products in a
+//! **f32 accumulator across K** (the paper's FP32 accumulator).
+//!
+//! Unlike the JAX graph (static shapes force masked residuals), this
+//! implementation *really* skips non-fallback residual blocks — the
+//! conditional work the paper's kernel performs — so its measured
+//! throughput exhibits the true cost structure: dequant overhead
+//! ∝ 1/block-size (Fig 1b) and fallback overhead ∝ fallback rate
+//! (Fig 8c).
+
+use crate::quant::{BlockQuant, FallbackQuant};
+use crate::util::threadpool::parallel_chunks;
+use crate::util::Mat;
+
+/// Convert int8 codes to f32 once per GEMM call. Products and in-block
+/// sums of int8 codes stay below 2^24, so the f32 inner kernel is
+/// *bit-exact* to int32 accumulation while vectorizing an order of
+/// magnitude better on CPUs without int8 dot ISA (see EXPERIMENTS.md
+/// §Perf: 5.5 -> ~18 Gops on this testbed).
+fn codes_to_f32(q: &[i8]) -> Vec<f32> {
+    q.iter().map(|&v| v as f32).collect()
+}
+
+/// inner f32 panel: acc[j] = sum_k a[r, k0+k] * b[k0+k, c0+j], 4-unrolled.
+#[inline]
+fn block_row_dot_f32(
+    af: &[f32], a_stride: usize, r: usize, k0: usize, bs: usize,
+    bf: &[f32], b_stride: usize, c0: usize, width: usize,
+    acc: &mut [f32],
+) {
+    acc[..width].fill(0.0);
+    let arow = &af[r * a_stride + k0..r * a_stride + k0 + bs];
+    let kk = bs & !3;
+    for k in (0..kk).step_by(4) {
+        let a0 = arow[k];
+        let a1 = arow[k + 1];
+        let a2 = arow[k + 2];
+        let a3 = arow[k + 3];
+        let b0 = &bf[(k0 + k) * b_stride + c0..][..width];
+        let b1 = &bf[(k0 + k + 1) * b_stride + c0..][..width];
+        let b2 = &bf[(k0 + k + 2) * b_stride + c0..][..width];
+        let b3 = &bf[(k0 + k + 3) * b_stride + c0..][..width];
+        for j in 0..width {
+            acc[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+        }
+    }
+    for k in kk..bs {
+        let av = arow[k];
+        if av == 0.0 {
+            continue;
+        }
+        let brow = &bf[(k0 + k) * b_stride + c0..][..width];
+        for j in 0..width {
+            acc[j] += av * brow[j];
+        }
+    }
+}
+
+/// C = deq(A) * deq(B) with per-block INT8 codes (paper Eq. 1).
+/// `a` blocks are (M x K), `b` blocks are (K x N); both must share the
+/// same block size.
+pub fn block_gemm(a: &BlockQuant, b: &BlockQuant, threads: usize) -> Mat {
+    assert_eq!(a.cols, b.rows, "inner dims");
+    assert_eq!(a.block, b.block, "block size");
+    let bs = a.block;
+    let (m, n) = (a.rows, b.cols);
+    let (kb, nbk) = (a.cb(), b.cb());
+    let mut c = Mat::zeros(m, n);
+    let cptr = std::sync::atomic::AtomicPtr::new(c.data.as_mut_ptr());
+    let af = codes_to_f32(&a.q);
+    let bf = codes_to_f32(&b.q);
+
+    parallel_chunks(a.rb(), threads, |p0, p1| {
+        let craw = cptr.load(std::sync::atomic::Ordering::Relaxed);
+        let mut acc = vec![0.0f32; bs];
+        for bi in p0..p1 {
+            let r_lo = bi * bs;
+            let r_hi = ((bi + 1) * bs).min(m);
+            for bj in 0..nbk {
+                let c_lo = bj * bs;
+                let c_hi = ((bj + 1) * bs).min(n);
+                let width = c_hi - c_lo;
+                for r in r_lo..r_hi {
+                    // SAFETY: threads own disjoint row panels of C.
+                    let crow = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            craw.add(r * n + c_lo), width)
+                    };
+                    for bk in 0..kb {
+                        let sa = a.scale[bi * kb + bk];
+                        let sb = b.scale[bk * nbk + bj];
+                        block_row_dot_f32(
+                            &af, a.pcols, r, bk * bs, bs,
+                            &bf, b.pcols, c_lo, width, &mut acc,
+                        );
+                        let w = sa * sb;
+                        for (cv, &v) in crow.iter_mut()
+                            .zip(acc[..width].iter())
+                        {
+                            *cv += v * w;
+                        }
+                    }
+                }
+            }
+        }
+    });
+    c
+}
+
+/// inner i8 x i8 -> i32 panel: acc[j] = sum_k qa[r, k0+k] * qb[k0+k, c0+j]
+/// (exact-int32 reference semantics; the hot path uses the bit-equal
+/// f32 kernel above — kept for tests/documentation)
+#[allow(dead_code)]
+#[inline]
+fn accumulate_block_row(
+    qa: &[i8], a_stride: usize, r: usize, k0: usize, bs: usize,
+    qb: &[i8], b_stride: usize, c0: usize, width: usize,
+    acc: &mut [i32],
+) {
+    acc.fill(0);
+    let arow = &qa[r * a_stride + k0..r * a_stride + k0 + bs];
+    for (k, &av) in arow.iter().enumerate() {
+        if av == 0 {
+            continue; // padding rows/zero codes contribute nothing
+        }
+        let av = av as i32;
+        let brow = &qb[(k0 + k) * b_stride + c0
+                       ..(k0 + k) * b_stride + c0 + width];
+        for (j, &bv) in brow.iter().enumerate() {
+            acc[j] += av * bv as i32;
+        }
+    }
+}
+
+/// How fallback A-blocks are laid out — the scheduling scenarios of
+/// Fig 8c ("random versus sequential block selection (worst case)").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// whatever the data produced (threshold decisions)
+    Natural,
+    /// uniformly shuffled u-mask at the same rate
+    Random(u64),
+    /// fallback blocks packed into the leading block rows (worst-case
+    /// load imbalance: some C panels do 2x work)
+    Sequential,
+}
+
+/// Remap the u-mask of `fq` according to the placement scenario,
+/// preserving the overall fallback rate.
+pub fn remap_placement(fq: &FallbackQuant, placement: Placement) -> Vec<bool> {
+    let n = fq.u.len();
+    let count = fq.u.iter().filter(|&&b| b).count();
+    match placement {
+        Placement::Natural => fq.u.clone(),
+        Placement::Random(seed) => {
+            let mut rng = crate::util::rng::Pcg64::new(seed);
+            let mut u = vec![false; n];
+            for i in rng.sample_indices(n, count) {
+                u[i] = true;
+            }
+            u
+        }
+        Placement::Sequential => {
+            let mut u = vec![false; n];
+            for x in u.iter_mut().take(count) {
+                *x = true;
+            }
+            u
+        }
+    }
+}
+
+/// Mixed-precision fallback GEMM (Algorithm 1): residual blocks of A are
+/// loaded and multiplied **only when u(i,k) = 1**.
+pub fn fallback_gemm(fa: &FallbackQuant, b: &BlockQuant, u: &[bool],
+                     threads: usize) -> Mat {
+    let a = &fa.base;
+    assert_eq!(a.cols, b.rows);
+    assert_eq!(a.block, b.block);
+    assert_eq!(u.len(), a.rb() * a.cb());
+    let bs = a.block;
+    let (m, n) = (a.rows, b.cols);
+    let (kb, nbk) = (a.cb(), b.cb());
+    let mut c = Mat::zeros(m, n);
+    let cptr = std::sync::atomic::AtomicPtr::new(c.data.as_mut_ptr());
+    let af = codes_to_f32(&a.q);
+    let rf = codes_to_f32(&fa.rq);
+    let bf = codes_to_f32(&b.q);
+
+    parallel_chunks(a.rb(), threads, |p0, p1| {
+        let craw = cptr.load(std::sync::atomic::Ordering::Relaxed);
+        let mut acc = vec![0.0f32; bs];
+        for bi in p0..p1 {
+            let r_lo = bi * bs;
+            let r_hi = ((bi + 1) * bs).min(m);
+            for bj in 0..nbk {
+                let c_lo = bj * bs;
+                let c_hi = ((bj + 1) * bs).min(n);
+                let width = c_hi - c_lo;
+                for r in r_lo..r_hi {
+                    let crow = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            craw.add(r * n + c_lo), width)
+                    };
+                    for bk in 0..kb {
+                        let sa = a.scale[bi * kb + bk];
+                        let sb = b.scale[bk * nbk + bj];
+                        block_row_dot_f32(
+                            &af, a.pcols, r, bk * bs, bs,
+                            &bf, b.pcols, c_lo, width, &mut acc,
+                        );
+                        let w = sa * sb;
+                        for (cv, &v) in
+                            crow.iter_mut().zip(acc[..width].iter())
+                        {
+                            *cv += v * w;
+                        }
+                        // Algorithm 1 lines 13-16: conditional residual —
+                        // really skipped when u = 0 (the measured cost of
+                        // fallback is proportional to the rate).
+                        if u[bi * kb + bk] {
+                            let rs = fa.rscale[bi * kb + bk];
+                            block_row_dot_f32(
+                                &rf, a.pcols, r, bk * bs, bs,
+                                &bf, b.pcols, c_lo, width, &mut acc,
+                            );
+                            let rw = rs * sb;
+                            for (cv, &v) in
+                                crow.iter_mut().zip(acc[..width].iter())
+                            {
+                                *cv += v * rw;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    });
+    c
+}
+
+/// Reference implementation through dequantized f32 matmul + per-block
+/// int math — used by tests to pin down the exact semantics.
+pub fn block_gemm_reference(a: &BlockQuant, b: &BlockQuant) -> Mat {
+    let bs = a.block;
+    let (m, n) = (a.rows, b.cols);
+    let kb = a.cb();
+    let nbk = b.cb();
+    let mut c = Mat::zeros(m, n);
+    for r in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for bk in 0..kb {
+                let mut i32acc = 0i64;
+                for k in bk * bs..((bk + 1) * bs).min(a.cols) {
+                    i32acc += a.q[r * a.pcols + k] as i64
+                        * b.q[k * b.pcols + j] as i64;
+                }
+                acc += i32acc as f32
+                    * (a.scale[(r / bs) * kb + bk]
+                       * b.scale[bk * nbk + j / bs]);
+            }
+            c.data[r * n + j] = acc;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{block_quant, fallback_quant, Criterion, Rounding,
+                       INT8_LEVELS};
+    use crate::quant::metrics::rel_err;
+    use crate::util::rng::Pcg64;
+    use crate::util::testing::max_abs_diff;
+    use crate::util::Mat;
+
+    fn mats(m: usize, k: usize, n: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Pcg64::new(seed);
+        (Mat::randn(m, k, 1.0, &mut rng), Mat::randn(k, n, 1.0, &mut rng))
+    }
+
+    #[test]
+    fn matches_reference_impl() {
+        for (m, k, n) in [(16, 16, 16), (32, 48, 16), (40, 33, 25)] {
+            let (a, b) = mats(m, k, n, 42 + m as u64);
+            let qa = block_quant(&a, 16, INT8_LEVELS, Rounding::Nearest);
+            let qb = block_quant(&b, 16, INT8_LEVELS, Rounding::Nearest);
+            let c1 = block_gemm(&qa, &qb, 1);
+            let c2 = block_gemm_reference(&qa, &qb);
+            assert!(max_abs_diff(&c1.data, &c2.data) < 1e-3);
+        }
+    }
+
+    #[test]
+    fn approximates_exact_gemm() {
+        let (a, b) = mats(64, 64, 64, 7);
+        let qa = block_quant(&a, 16, INT8_LEVELS, Rounding::Nearest);
+        let qb = block_quant(&b, 16, INT8_LEVELS, Rounding::Nearest);
+        let c = block_gemm(&qa, &qb, 1);
+        let exact = crate::gemm::dense::matmul(&a, &b, 1);
+        assert!(rel_err(&c.data, &exact.data) < 0.02);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let (a, b) = mats(64, 48, 32, 9);
+        let qa = block_quant(&a, 16, INT8_LEVELS, Rounding::Nearest);
+        let qb = block_quant(&b, 16, INT8_LEVELS, Rounding::Nearest);
+        assert_eq!(block_gemm(&qa, &qb, 1).data,
+                   block_gemm(&qa, &qb, 4).data);
+    }
+
+    #[test]
+    fn fallback_gemm_more_accurate() {
+        let mut rng = Pcg64::new(11);
+        let mut a = Mat::randn(64, 64, 1.0, &mut rng);
+        for _ in 0..10 {
+            let i = rng.below(a.data.len());
+            a.data[i] = 250.0;
+        }
+        let b = Mat::randn(64, 48, 1.0, &mut rng);
+        let exact = crate::gemm::dense::matmul(&a, &b, 1);
+        let qb = block_quant(&b, 16, INT8_LEVELS, Rounding::Nearest);
+        let fa = fallback_quant(&a, -1.0, 16, INT8_LEVELS, Criterion::AbsMax);
+        let c_fb = fallback_gemm(&fa, &qb, &fa.u, 1);
+        let c_plain = block_gemm(&fa.base, &qb, 1);
+        let e_fb = rel_err(&c_fb.data, &exact.data);
+        let e_plain = rel_err(&c_plain.data, &exact.data);
+        assert!(e_fb < e_plain * 0.5, "fb {e_fb} plain {e_plain}");
+    }
+
+    #[test]
+    fn fallback_with_no_u_equals_block_gemm() {
+        let (a, b) = mats(48, 32, 32, 13);
+        let fa = fallback_quant(&a, f32::INFINITY, 16, INT8_LEVELS,
+                                Criterion::AbsMax);
+        let qb = block_quant(&b, 16, INT8_LEVELS, Rounding::Nearest);
+        let c1 = fallback_gemm(&fa, &qb, &fa.u, 1);
+        let c2 = block_gemm(&fa.base, &qb, 1);
+        assert_eq!(c1.data, c2.data);
+    }
+
+    #[test]
+    fn placement_preserves_rate() {
+        let mut rng = Pcg64::new(17);
+        let mut a = Mat::randn(128, 128, 1.0, &mut rng);
+        for _ in 0..20 {
+            let i = rng.below(a.data.len());
+            a.data[i] = 300.0;
+        }
+        let fa = fallback_quant(&a, 50.0, 16, INT8_LEVELS,
+                                Criterion::AbsMax);
+        let count = fa.u.iter().filter(|&&x| x).count();
+        for p in [Placement::Random(3), Placement::Sequential] {
+            let u = remap_placement(&fa, p);
+            assert_eq!(u.iter().filter(|&&x| x).count(), count);
+        }
+    }
+
+    #[test]
+    fn prop_block_gemm_matches_reference() {
+        crate::util::testing::forall("gemm-vs-ref", 15, |g| {
+            let m = 16 * g.usize_in(1, 2);
+            let k = 16 * g.usize_in(1, 3);
+            let n = 16 * g.usize_in(1, 2);
+            let a = Mat::from_vec(m, k, g.vec_outliers(m * k, 1.0, 4, 80.0));
+            let b = Mat::from_vec(k, n, g.vec_normal(k * n, 1.0));
+            let qa = block_quant(&a, 16, INT8_LEVELS, Rounding::Nearest);
+            let qb = block_quant(&b, 16, INT8_LEVELS, Rounding::Nearest);
+            let c1 = block_gemm(&qa, &qb, 2);
+            let c2 = block_gemm_reference(&qa, &qb);
+            let d = max_abs_diff(&c1.data, &c2.data);
+            crate::prop_assert!(d < 1e-2, "diff {d} at ({m},{k},{n})");
+            Ok(())
+        });
+    }
+}

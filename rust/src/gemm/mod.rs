@@ -1,0 +1,55 @@
+//! CPU blocked-GEMM substrate: f32 reference, INT8 block GEMM (Eq. 1),
+//! and the fallback GEMM (Algorithm 1) with real conditional skipping.
+//!
+//! These kernels give *measured* cost structure on this testbed (group
+//! size vs dequant overhead, fallback rate vs extra work, placement vs
+//! load balance); `costmodel` projects the same structure onto the
+//! paper's GPUs.
+
+pub mod dense;
+pub mod int8;
+
+pub use dense::{matmul, matmul_naive};
+pub use int8::{block_gemm, fallback_gemm, remap_placement, Placement};
+
+use crate::quant::{block_quant, fallback_quant, Criterion, Rounding,
+                   INT8_LEVELS};
+use crate::util::Mat;
+
+/// One-call quantized matmul (both operands RTN INT8, shared block size).
+pub fn quantized_matmul(a: &Mat, b: &Mat, block: usize,
+                        threads: usize) -> Mat {
+    let qa = block_quant(a, block, INT8_LEVELS, Rounding::Nearest);
+    let qb = block_quant(b, block, INT8_LEVELS, Rounding::Nearest);
+    block_gemm(&qa, &qb, threads)
+}
+
+/// One-call fallback matmul; returns (C, fallback_rate).
+pub fn fallback_matmul(a: &Mat, b: &Mat, theta: f32, block: usize,
+                       threads: usize) -> (Mat, f64) {
+    let fa = fallback_quant(a, theta, block, INT8_LEVELS, Criterion::AbsMax);
+    let qb = block_quant(b, block, INT8_LEVELS, Rounding::Nearest);
+    let rate = fa.fallback_rate();
+    (int8::fallback_gemm(&fa, &qb, &fa.u, threads), rate)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::metrics::rel_err;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn convenience_wrappers() {
+        let mut rng = Pcg64::new(5);
+        let a = Mat::randn(32, 32, 1.0, &mut rng);
+        let b = Mat::randn(32, 32, 1.0, &mut rng);
+        let exact = matmul(&a, &b, 1);
+        let c = quantized_matmul(&a, &b, 16, 1);
+        assert!(rel_err(&c.data, &exact.data) < 0.02);
+        let (cf, rate) = fallback_matmul(&a, &b, -1.0, 16, 1);
+        assert!((rate - 1.0).abs() < 1e-12);
+        assert!(rel_err(&cf.data, &exact.data)
+                < rel_err(&c.data, &exact.data));
+    }
+}

@@ -1,0 +1,28 @@
+//! # DBFQ — Dynamic Block-Level Fallback Quantization
+//!
+//! Production-grade reproduction of *"Accurate INT8 Training Through
+//! Dynamic Block-Level Fallback"* (CS.LG 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`): Pallas kernels for fallback
+//!   quantization and the mixed-precision GEMM of Algorithm 1.
+//! * **L2** (`python/compile/`): a GLU transformer with quantized
+//!   linear layers, AOT-lowered to HLO-text artifacts.
+//! * **L3** (this crate): the training framework — PJRT runtime,
+//!   delay-threshold coordinator (Algorithm 2), data pipeline, the CPU
+//!   INT8 GEMM substrate, GPU roofline cost model, and the benchmark
+//!   harness regenerating every table/figure of the paper.
+//!
+//! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md`
+//! for paper-vs-measured results.
+
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod gemm;
+pub mod model;
+pub mod outlier;
+pub mod quant;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,159 @@
+//! `dbfq` — launcher CLI for the DBFQ training framework.
+//!
+//! Subcommands:
+//!   train  --profile tiny --method fallback --steps 50 [--seed N]
+//!          [--lr X] [--rmin/--rmax/--alpha ...] [--out ckpt]
+//!   eval   --profile tiny --method fallback --ckpt path [--batches N]
+//!   info   [--profile NAME]        show artifact/profile inventory
+//!   gemm   --m --n --k [--block] [--theta]   run the CPU GEMM substrate
+
+use anyhow::{bail, Result};
+
+use dbfq::coordinator::{TrainConfig, Trainer};
+use dbfq::data::Corpus;
+use dbfq::model::Method;
+use dbfq::runtime::{artifacts_dir, Runtime};
+use dbfq::util::cli::Args;
+use dbfq::util::rng::Pcg64;
+
+use dbfq::config::{load_train_config, parse_method};
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rt = Runtime::open(&artifacts_dir())?;
+    // --config file.json < CLI flags (see config module)
+    let (mut cfg, steps) = load_train_config(args, 50)?;
+    cfg.lr.peak = args.get_f64("lr", cfg.lr.peak);
+    let profile = cfg.profile.clone();
+    let method = cfg.method;
+    let seed = cfg.seed;
+
+    let prof = rt.profile(&profile)?.clone();
+    println!(
+        "dbfq train: profile={profile} ({} params, {} layers) \
+         method={} steps={steps} platform={}",
+        prof.n_params, prof.n_layers, method.tag(), rt.platform()
+    );
+    let corpus = Corpus::synthetic(200_000, prof.vocab, seed ^ 0xC0);
+    let mut rng = Pcg64::new(seed);
+    let mut trainer = Trainer::new(&rt, cfg)?;
+
+    let t0 = std::time::Instant::now();
+    for s in 0..steps {
+        let tokens = corpus.sample_batch(prof.batch, prof.seq_len, &mut rng);
+        let st = trainer.step_on(&tokens)?;
+        if s < 3 || (s + 1) % 10 == 0 || s + 1 == steps {
+            println!(
+                "step {:4}  loss {:.4}  |g| {:.3}  fb-rate {:.3}  \
+                 theta {:.3}  lr {:.2e}",
+                st.step, st.loss, st.grad_norm, st.mean_fallback_rate,
+                st.mean_theta, st.lr
+            );
+        }
+    }
+    println!(
+        "trained {steps} steps in {:.1}s ({:.2} s/step)",
+        t0.elapsed().as_secs_f64(),
+        t0.elapsed().as_secs_f64() / steps as f64
+    );
+    if let Some(out) = args.get("out") {
+        trainer.save_checkpoint(out)?;
+        println!("checkpoint -> {out}.json / {out}.f32");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let rt = Runtime::open(&artifacts_dir())?;
+    let profile = args.get_or("profile", "tiny").to_string();
+    let method = parse_method(args.get_or("method", "fallback"))?;
+    let prof = rt.profile(&profile)?.clone();
+    let cfg = TrainConfig::new(&profile, method, 0, 0);
+    let mut trainer = Trainer::new(&rt, cfg)?;
+    if let Some(ckpt) = args.get("ckpt") {
+        trainer.load_checkpoint(ckpt)?;
+    }
+    let corpus = Corpus::synthetic(100_000, prof.vocab, 0xE7A1);
+    let batches =
+        corpus.eval_batches(prof.batch, prof.seq_len,
+                            args.get_usize("batches", 8));
+    let loss = trainer.eval_on(&batches)?;
+    println!("eval: mean loss {loss:.4}  ppl {:.2}", loss.exp());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let rt = Runtime::open(&artifacts_dir())?;
+    println!("platform: {}", rt.platform());
+    if let Some(p) = args.get("profile") {
+        let prof = rt.profile(p)?;
+        println!("{prof:#?}");
+        return Ok(());
+    }
+    let mut profs: Vec<_> = rt.profiles.keys().collect();
+    profs.sort();
+    println!("profiles:");
+    for p in profs {
+        let m = &rt.profiles[p];
+        println!(
+            "  {p:16} d={} L={} ff={} seq={} params={}",
+            m.d_model, m.n_layers, m.d_ff, m.seq_len, m.n_params
+        );
+    }
+    let mut arts: Vec<_> = rt.artifacts.keys().collect();
+    arts.sort();
+    println!("artifacts ({}):", arts.len());
+    for a in arts {
+        println!("  {a}");
+    }
+    Ok(())
+}
+
+fn cmd_gemm(args: &Args) -> Result<()> {
+    use dbfq::gemm;
+    use dbfq::util::Mat;
+    let m = args.get_usize("m", 1024);
+    let n = args.get_usize("n", 1024);
+    let k = args.get_usize("k", 1024);
+    let block = args.get_usize("block", 128);
+    let theta = args.get_f64("theta", f64::INFINITY) as f32;
+    let threads = args.get_usize("threads",
+                                 dbfq::util::threadpool::default_threads());
+    let mut rng = Pcg64::new(1);
+    let a = Mat::randn(m, k, 1.0, &mut rng);
+    let b = Mat::randn(k, n, 1.0, &mut rng);
+
+    let t0 = std::time::Instant::now();
+    let c = gemm::matmul(&a, &b, threads);
+    let t_f32 = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let cq = gemm::quantized_matmul(&a, &b, block, threads);
+    let t_i8 = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let (cf, rate) = gemm::fallback_matmul(&a, &b, theta, block, threads);
+    let t_fb = t0.elapsed().as_secs_f64();
+
+    let gops = |t: f64| 2.0 * (m * n * k) as f64 / t / 1e9;
+    println!("f32      : {:8.2} Gops ({t_f32:.3}s)", gops(t_f32));
+    println!("int8-blk : {:8.2} Gops ({t_i8:.3}s)", gops(t_i8));
+    println!("fallback : {:8.2} Gops ({t_fb:.3}s) rate={rate:.3}",
+             gops(t_fb));
+    println!(
+        "int8 rel-err {:.4}  fallback rel-err {:.4}",
+        dbfq::quant::metrics::rel_err(&cq.data, &c.data),
+        dbfq::quant::metrics::rel_err(&cf.data, &c.data)
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["fast"]).map_err(anyhow::Error::msg)?;
+    match args.positional().first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("info") | None => cmd_info(&args),
+        Some("gemm") => cmd_gemm(&args),
+        Some(other) => bail!(
+            "unknown command '{other}' (train | eval | info | gemm)"
+        ),
+    }
+}

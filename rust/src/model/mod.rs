@@ -1,0 +1,201 @@
+//! Model configuration mirror + resource accounting (CAL-FLOPS, ACT-MEM).
+//!
+//! The Rust side never re-implements the transformer math (that is the
+//! AOT graph's job); it reasons *about* the model: parameter counts,
+//! per-step matmul FLOPs (the paper's CAL-FLOPS denominator), and the
+//! activation-context memory of each training method (the ACT-MEM
+//! column of Table 2 and the 38% reduction headline).
+
+use crate::runtime::ProfileMeta;
+
+/// Training method, matching the L2 artifact modes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    Bf16,
+    Block,
+    Jetfire,
+    Fallback,
+}
+
+impl Method {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Method::Bf16 => "bf16",
+            Method::Block => "block",
+            Method::Jetfire => "jetfire",
+            Method::Fallback => "fallback",
+        }
+    }
+
+    pub fn all() -> [Method; 4] {
+        [Method::Bf16, Method::Block, Method::Jetfire, Method::Fallback]
+    }
+}
+
+/// Shape summary of one transformer-layer linear site.
+#[derive(Debug, Clone)]
+pub struct LinearShape {
+    pub name: &'static str,
+    /// tokens per microstep (rows of X)
+    pub m: usize,
+    /// output features
+    pub n: usize,
+    /// input features
+    pub k: usize,
+}
+
+/// The four linear sites of one layer (+ LM head handled separately).
+pub fn layer_linears(d_model: usize, d_ff: usize, glu: bool,
+                     tokens: usize) -> Vec<LinearShape> {
+    let mlp_out = if glu { 2 * d_ff } else { d_ff };
+    vec![
+        LinearShape { name: "qkv", m: tokens, n: 3 * d_model, k: d_model },
+        LinearShape { name: "attn_out", m: tokens, n: d_model, k: d_model },
+        LinearShape { name: "mlp_in", m: tokens, n: mlp_out, k: d_model },
+        LinearShape { name: "mlp_down", m: tokens, n: d_model, k: d_ff },
+    ]
+}
+
+/// Matmul FLOPs for one microstep (fwd + bwd = 3 GEMMs per linear site,
+/// 2*M*N*K each), the paper's CAL-FLOPS denominator ("only computation
+/// time is measured"). Attention matmuls are included; softmax/norms are
+/// not (they are not GEMMs).
+pub fn train_step_gemm_flops(p: &ProfileMeta) -> f64 {
+    let tokens = p.batch * p.seq_len;
+    let mut fwd = 0.0f64;
+    for l in layer_linears(p.d_model, p.d_ff, p.glu, tokens) {
+        fwd += 2.0 * l.m as f64 * l.n as f64 * l.k as f64;
+    }
+    fwd *= p.n_layers as f64;
+    // attention score + value matmuls: 2 * (T^2 * D) per batch elem
+    let attn = 2.0
+        * 2.0
+        * p.batch as f64
+        * p.seq_len as f64
+        * p.seq_len as f64
+        * p.d_model as f64;
+    fwd += attn * p.n_layers as f64;
+    // LM head
+    fwd += 2.0 * tokens as f64 * p.vocab as f64 * p.d_model as f64;
+    // fwd:bwd GEMM ratio is 1:2 for linears (dX and dW)
+    3.0 * fwd
+}
+
+/// Activation-context bytes stored by one training method for one
+/// microstep (paper Table 2 ACT-MEM, §5 memory design).
+///
+/// Per layer the contexts are:
+///   * 4 linear X contexts (sizes K of each site x tokens)
+///   * attention context (q,k,v,probs kept BF16 in all methods)
+///   * 2 norm inputs + GLU (g,u) or GELU input
+pub fn act_mem_bytes(p: &ProfileMeta, m: Method) -> f64 {
+    let t = (p.batch * p.seq_len) as f64;
+    let d = p.d_model as f64;
+    let f = p.d_ff as f64;
+    let heads_bytes = 2.0; // bf16 baseline element size
+
+    // elements entering linear layers per layer: qkv(d) + attn_out(d)
+    // + mlp_in(d) + mlp_down(f)
+    let linear_elems = t * (3.0 * d + f);
+    // non-linear contexts per layer: ln1(d) + ln2(d) + glu(g,u: 2f) or
+    // gelu(f)
+    let nl_elems = t * (2.0 * d + if p.glu { 2.0 * f } else { f });
+    // attention tensors kept bf16 in every method: q,k,v rope'd (3d) +
+    // attn weights are recomputed — count 3d + output d
+    let attn_elems = t * 4.0 * d;
+
+    let (lin_bytes_per_elem, nl_bytes_per_elem) = match m {
+        // bf16 stores everything at 2 bytes
+        Method::Bf16 => (2.0, 2.0),
+        // block: INT8 linear contexts (+f32 scale per 128^2 block ~ eps),
+        // non-linear stays bf16
+        Method::Block => (1.0, 2.0),
+        // jetfire: INT8 everywhere (32x32 blocks: scale overhead
+        // 4/(32*32) per elem)
+        Method::Jetfire => (1.0 + 4.0 / 1024.0, 1.0 + 4.0 / 1024.0),
+        // ours: INT8 linear contexts, INT10 1x128 non-linear contexts
+        Method::Fallback => {
+            (1.0 + 4.0 / (p.block * p.block) as f64,
+             10.0 / 8.0 + 4.0 / p.group as f64)
+        }
+    };
+
+    let per_layer = linear_elems * lin_bytes_per_elem
+        + nl_elems * nl_bytes_per_elem
+        + attn_elems * heads_bytes;
+    let head = t * d * lin_bytes_per_elem + t * d * nl_bytes_per_elem;
+    per_layer * p.n_layers as f64 + head
+}
+
+/// Fraction of forward compute spent in linear layers (Fig 6b): GEMM
+/// flops vs GEMM + non-linear elementwise work, as hidden size grows.
+pub fn linear_time_fraction(d_model: usize, d_ff: usize, seq: usize,
+                            glu: bool) -> f64 {
+    let t = seq as f64;
+    let d = d_model as f64;
+    let f = d_ff as f64;
+    let lin: f64 = layer_linears(d_model, d_ff, glu, seq)
+        .iter()
+        .map(|l| 2.0 * l.m as f64 * l.n as f64 * l.k as f64)
+        .sum();
+    let attn = 2.0 * 2.0 * t * t * d;
+    // non-linear elementwise cost ~ c * elements (norms, silu, residual);
+    // c≈8 ops/elem with bandwidth-bound execution
+    let nl = 8.0 * t * (4.0 * d + if glu { 3.0 * f } else { 2.0 * f });
+    lin / (lin + attn + nl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ProfileMeta;
+
+    fn prof(d: usize, layers: usize, ff: usize) -> ProfileMeta {
+        ProfileMeta {
+            name: "t".into(),
+            vocab: 256,
+            d_model: d,
+            n_layers: layers,
+            n_heads: d / 64,
+            d_ff: ff,
+            seq_len: 256,
+            glu: true,
+            batch: 2,
+            block: 128,
+            group: 128,
+            n_params: 0,
+            n_sites: 4 * layers + 1,
+            param_layout: vec![],
+        }
+    }
+
+    #[test]
+    fn flops_scale_quadratically_in_d() {
+        let f1 = train_step_gemm_flops(&prof(512, 8, 2048));
+        let f2 = train_step_gemm_flops(&prof(1024, 8, 4096));
+        let ratio = f2 / f1;
+        assert!(ratio > 3.5 && ratio < 4.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn act_mem_ordering_matches_paper() {
+        // Table 2: Jetfire < Ours < Block < BF16
+        let p = prof(2048, 20, 8192);
+        let bf16 = act_mem_bytes(&p, Method::Bf16);
+        let block = act_mem_bytes(&p, Method::Block);
+        let ours = act_mem_bytes(&p, Method::Fallback);
+        let jet = act_mem_bytes(&p, Method::Jetfire);
+        assert!(jet < ours && ours < block && block < bf16);
+        // paper: ours ≈ 61% of bf16
+        let frac = ours / bf16;
+        assert!(frac > 0.5 && frac < 0.75, "ours/bf16 = {frac}");
+    }
+
+    #[test]
+    fn linear_fraction_grows_with_model_size() {
+        let small = linear_time_fraction(512, 2048, 1024, true);
+        let large = linear_time_fraction(8192, 28672, 1024, true);
+        assert!(large > small);
+        assert!(small > 0.3 && large > 0.8);
+    }
+}

@@ -1,0 +1,304 @@
+//! Per-block (B x B) INT8 quantization — Rust mirror of
+//! `python/compile/kernels/ref.py` (paper §3.1).
+//!
+//! Numerics discipline (kept bit-compatible with the JAX side, asserted
+//! by integration tests through the PJRT runtime):
+//!   * scale = absmax * (1.0f32 / levels); zero blocks get scale 1.0
+//!   * round-to-nearest uses ties-to-even (jnp.round semantics)
+//!   * stochastic rounding is floor(x/scale + u), u ~ U[0,1)
+//! Values are stored as `i8` here (the real packed format) plus f32
+//! scales per block.
+
+use crate::util::rng::Pcg64;
+use crate::util::Mat;
+
+pub const INT8_LEVELS: f32 = 127.0;
+
+/// Block-quantized matrix: q holds int8 codes in row-major order of the
+/// *padded* (block-aligned) matrix; scales/absmax are (rb x cb).
+#[derive(Debug, Clone)]
+pub struct BlockQuant {
+    pub rows: usize,
+    pub cols: usize,
+    pub block: usize,
+    /// padded dims
+    pub prows: usize,
+    pub pcols: usize,
+    pub q: Vec<i8>,
+    pub scale: Vec<f32>,
+    pub absmax: Vec<f32>,
+}
+
+impl BlockQuant {
+    pub fn rb(&self) -> usize {
+        self.prows / self.block
+    }
+
+    pub fn cb(&self) -> usize {
+        self.pcols / self.block
+    }
+
+    #[inline]
+    pub fn scale_at(&self, br: usize, bc: usize) -> f32 {
+        self.scale[br * self.cb() + bc]
+    }
+
+    #[inline]
+    pub fn q_at(&self, r: usize, c: usize) -> i8 {
+        self.q[r * self.pcols + c]
+    }
+
+    /// Dequantize back to the original (cropped) shape.
+    pub fn dequant(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let br = r / self.block;
+            for c in 0..self.cols {
+                let bc = c / self.block;
+                m.data[r * self.cols + c] =
+                    self.q[r * self.pcols + c] as f32 * self.scale_at(br, bc);
+            }
+        }
+        m
+    }
+
+    /// Stored size in bytes (int8 codes + f32 scales) — ACT-MEM accounting.
+    pub fn bytes(&self) -> usize {
+        self.q.len() + 4 * self.scale.len()
+    }
+}
+
+fn pad_up(n: usize, b: usize) -> usize {
+    n.div_ceil(b) * b
+}
+
+#[inline]
+pub fn safe_scale(absmax: f32, levels: f32) -> f32 {
+    if absmax > 0.0 {
+        absmax * (1.0f32 / levels)
+    } else {
+        1.0
+    }
+}
+
+/// Rounding mode for the quantization step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Rounding {
+    /// Round-to-nearest, ties to even (matches `jnp.round`).
+    Nearest,
+    /// Stochastic rounding with the given RNG seed.
+    Stochastic(u64),
+}
+
+/// Quantize with per-(B x B)-block absmax scaling.
+pub fn block_quant(x: &Mat, block: usize, levels: f32,
+                   rounding: Rounding) -> BlockQuant {
+    let prows = pad_up(x.rows, block);
+    let pcols = pad_up(x.cols, block);
+    let rb = prows / block;
+    let cb = pcols / block;
+    let mut q = vec![0i8; prows * pcols];
+    let mut scale = vec![1.0f32; rb * cb];
+    let mut absmax = vec![0.0f32; rb * cb];
+    let mut rng = match rounding {
+        Rounding::Stochastic(seed) => Some(Pcg64::new(seed)),
+        Rounding::Nearest => None,
+    };
+
+    for br in 0..rb {
+        for bc in 0..cb {
+            let r0 = br * block;
+            let c0 = bc * block;
+            let mut am = 0.0f32;
+            for r in r0..(r0 + block).min(x.rows) {
+                for c in c0..(c0 + block).min(x.cols) {
+                    am = am.max(x.at(r, c).abs());
+                }
+            }
+            let s = safe_scale(am, levels);
+            absmax[br * cb + bc] = am;
+            scale[br * cb + bc] = s;
+            let inv = 1.0 / s;
+            for r in r0..(r0 + block).min(x.rows) {
+                for c in c0..(c0 + block).min(x.cols) {
+                    let v = x.at(r, c) * inv;
+                    let rounded = match &mut rng {
+                        None => v.round_ties_even(),
+                        Some(rng) => (v + rng.uniform_f32()).floor(),
+                    };
+                    q[r * pcols + c] =
+                        rounded.clamp(-levels, levels) as i8;
+                }
+            }
+        }
+    }
+    BlockQuant {
+        rows: x.rows,
+        cols: x.cols,
+        block,
+        prows,
+        pcols,
+        q,
+        scale,
+        absmax,
+    }
+}
+
+/// INT16-style "double-bit" quantization comparator (Fig 3b): a single
+/// scale with 2^15-1 levels; codes stored as i16.
+pub struct Int16Quant {
+    pub rows: usize,
+    pub cols: usize,
+    pub block: usize,
+    pub prows: usize,
+    pub pcols: usize,
+    pub q: Vec<i16>,
+    pub scale: Vec<f32>,
+}
+
+pub fn int16_block_quant(x: &Mat, block: usize) -> Int16Quant {
+    let levels = 32767.0f32;
+    let prows = pad_up(x.rows, block);
+    let pcols = pad_up(x.cols, block);
+    let rb = prows / block;
+    let cb = pcols / block;
+    let mut q = vec![0i16; prows * pcols];
+    let mut scale = vec![1.0f32; rb * cb];
+    for br in 0..rb {
+        for bc in 0..cb {
+            let (r0, c0) = (br * block, bc * block);
+            let mut am = 0.0f32;
+            for r in r0..(r0 + block).min(x.rows) {
+                for c in c0..(c0 + block).min(x.cols) {
+                    am = am.max(x.at(r, c).abs());
+                }
+            }
+            let s = safe_scale(am, levels);
+            scale[br * cb + bc] = s;
+            for r in r0..(r0 + block).min(x.rows) {
+                for c in c0..(c0 + block).min(x.cols) {
+                    let v = (x.at(r, c) / s).round_ties_even();
+                    q[r * pcols + c] = v.clamp(-levels, levels) as i16;
+                }
+            }
+        }
+    }
+    Int16Quant { rows: x.rows, cols: x.cols, block, prows, pcols, q, scale }
+}
+
+impl Int16Quant {
+    pub fn dequant(&self) -> Mat {
+        let cb = self.pcols / self.block;
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let s = self.scale[(r / self.block) * cb + c / self.block];
+                m.data[r * self.cols + c] =
+                    self.q[r * self.pcols + c] as f32 * s;
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn randmat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        Mat::randn(rows, cols, 3.0, &mut rng)
+    }
+
+    #[test]
+    fn roundtrip_error_bound() {
+        let x = randmat(40, 24, 1);
+        let bq = block_quant(&x, 16, INT8_LEVELS, Rounding::Nearest);
+        let d = bq.dequant();
+        for r in 0..x.rows {
+            for c in 0..x.cols {
+                let s = bq.scale_at(r / 16, c / 16);
+                assert!((d.at(r, c) - x.at(r, c)).abs() <= s / 2.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_block_exact() {
+        let x = Mat::zeros(16, 16);
+        let bq = block_quant(&x, 16, INT8_LEVELS, Rounding::Nearest);
+        assert!(bq.q.iter().all(|&q| q == 0));
+        assert_eq!(bq.scale[0], 1.0);
+        assert_eq!(bq.dequant().data, x.data);
+    }
+
+    #[test]
+    fn codes_in_range() {
+        let x = randmat(32, 32, 2);
+        let bq = block_quant(&x, 16, INT8_LEVELS, Rounding::Nearest);
+        assert!(bq.q.iter().all(|&q| (-127..=127).contains(&(q as i32))));
+    }
+
+    #[test]
+    fn padding_crops_correctly() {
+        let x = randmat(33, 17, 3);
+        let bq = block_quant(&x, 16, INT8_LEVELS, Rounding::Nearest);
+        assert_eq!(bq.prows, 48);
+        assert_eq!(bq.pcols, 32);
+        let d = bq.dequant();
+        assert_eq!(d.rows, 33);
+        assert_eq!(d.cols, 17);
+    }
+
+    #[test]
+    fn ties_to_even() {
+        // 2.5 rounds to 2, 3.5 rounds to 4 under ties-even.
+        assert_eq!(2.5f32.round_ties_even(), 2.0);
+        assert_eq!(3.5f32.round_ties_even(), 4.0);
+        // Build a block whose absmax=127 so scale=1 and codes equal values.
+        let mut x = Mat::zeros(16, 16);
+        x.data[0] = 127.0;
+        x.data[1] = 2.5;
+        x.data[2] = 3.5;
+        let bq = block_quant(&x, 16, INT8_LEVELS, Rounding::Nearest);
+        assert_eq!(bq.q[0], 127);
+        assert_eq!(bq.q[1], 2);
+        assert_eq!(bq.q[2], 4);
+    }
+
+    #[test]
+    fn stochastic_rounding_unbiased() {
+        let x = randmat(16, 16, 5);
+        let mut acc = vec![0.0f64; 256];
+        let trials = 400;
+        for t in 0..trials {
+            let bq = block_quant(&x, 16, INT8_LEVELS,
+                                 Rounding::Stochastic(1000 + t));
+            let d = bq.dequant();
+            for (a, v) in acc.iter_mut().zip(&d.data) {
+                *a += *v as f64;
+            }
+        }
+        let scale = x.abs_max() / 127.0;
+        let tol = 5.0 * scale as f64 / (trials as f64).sqrt();
+        for (a, v) in acc.iter().zip(&x.data) {
+            assert!((a / trials as f64 - *v as f64).abs() < tol + 1e-6);
+        }
+    }
+
+    #[test]
+    fn int16_more_accurate_than_int8_without_outliers() {
+        let x = randmat(32, 32, 7);
+        let e8 = {
+            let d = block_quant(&x, 16, INT8_LEVELS,
+                                Rounding::Nearest).dequant();
+            crate::quant::metrics::rmse(&d.data, &x.data)
+        };
+        let e16 = {
+            let d = int16_block_quant(&x, 16).dequant();
+            crate::quant::metrics::rmse(&d.data, &x.data)
+        };
+        assert!(e16 < e8 / 100.0, "e16={e16} e8={e8}");
+    }
+}

@@ -1,0 +1,275 @@
+//! Fallback (residual) quantization — paper §4.3/§4.4.
+//!
+//! An outlier block G is represented as [Q(G), Q(G − Q(G))]: two INT8
+//! blocks with independent scales. The fallback indicator u(i,k) is
+//! decided per block by a selectable criterion (AbsMax / L1 / L1-Rel)
+//! against a threshold θ maintained by the delay-threshold controller.
+
+use crate::util::Mat;
+
+use super::block::{block_quant, safe_scale, BlockQuant, Rounding};
+
+/// Fallback selection criterion (§4.4, Fig 3c).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Criterion {
+    /// max |G| of the block (paper default — free from step 1).
+    AbsMax,
+    /// absolute quantization error sum |G − Q(G)|.
+    L1,
+    /// relative error sum|G − Q(G)| / sum|G|.
+    L1Rel,
+}
+
+#[derive(Debug, Clone)]
+pub struct FallbackQuant {
+    pub base: BlockQuant,
+    /// residual INT8 codes (same padded layout as base.q)
+    pub rq: Vec<i8>,
+    pub rscale: Vec<f32>,
+    /// per-block fallback indicator
+    pub u: Vec<bool>,
+    /// value of the selection metric per block
+    pub metric: Vec<f32>,
+}
+
+impl FallbackQuant {
+    pub fn fallback_rate(&self) -> f64 {
+        if self.u.is_empty() {
+            return 0.0;
+        }
+        self.u.iter().filter(|&&b| b).count() as f64 / self.u.len() as f64
+    }
+
+    /// Dequantize: Q + u * ΔQ.
+    pub fn dequant(&self) -> Mat {
+        let b = self.base.block;
+        let cb = self.base.cb();
+        let mut m = self.base.dequant();
+        for r in 0..m.rows {
+            for c in 0..m.cols {
+                let bi = (r / b) * cb + c / b;
+                if self.u[bi] {
+                    m.data[r * m.cols + c] +=
+                        self.rq[r * self.base.pcols + c] as f32
+                            * self.rscale[bi];
+                }
+            }
+        }
+        m
+    }
+
+    /// Stored bytes: INT8 base everywhere + residual only where u=1.
+    pub fn bytes(&self) -> usize {
+        let b2 = self.base.block * self.base.block;
+        let fb_blocks = self.u.iter().filter(|&&x| x).count();
+        self.base.bytes() + fb_blocks * (b2 + 4)
+    }
+}
+
+/// Two-step fallback quantization of `x` with threshold `theta`.
+pub fn fallback_quant(x: &Mat, theta: f32, block: usize, levels: f32,
+                      criterion: Criterion) -> FallbackQuant {
+    let base = block_quant(x, block, levels, Rounding::Nearest);
+    let (rb, cb) = (base.rb(), base.cb());
+    let mut rq = vec![0i8; base.q.len()];
+    let mut rscale = vec![1.0f32; rb * cb];
+    let mut u = vec![false; rb * cb];
+    let mut metric = vec![0.0f32; rb * cb];
+
+    for br in 0..rb {
+        for bc in 0..cb {
+            let bi = br * cb + bc;
+            let (r0, c0) = (br * block, bc * block);
+            let s = base.scale[bi];
+            // residual + metric accumulation in one sweep
+            let mut rmax = 0.0f32;
+            let mut l1 = 0.0f64;
+            let mut tot = 0.0f64;
+            for r in r0..(r0 + block).min(x.rows) {
+                for c in c0..(c0 + block).min(x.cols) {
+                    let v = x.at(r, c);
+                    let deq = base.q[r * base.pcols + c] as f32 * s;
+                    let resid = v - deq;
+                    rmax = rmax.max(resid.abs());
+                    l1 += resid.abs() as f64;
+                    tot += v.abs() as f64;
+                }
+            }
+            metric[bi] = match criterion {
+                Criterion::AbsMax => base.absmax[bi],
+                Criterion::L1 => l1 as f32,
+                Criterion::L1Rel => {
+                    if tot > 0.0 {
+                        (l1 / tot) as f32
+                    } else {
+                        0.0
+                    }
+                }
+            };
+            u[bi] = metric[bi] > theta;
+            let rs = safe_scale(rmax, levels);
+            rscale[bi] = rs;
+            let inv = 1.0 / rs;
+            for r in r0..(r0 + block).min(x.rows) {
+                for c in c0..(c0 + block).min(x.cols) {
+                    let deq = base.q[r * base.pcols + c] as f32 * s;
+                    let resid = x.at(r, c) - deq;
+                    rq[r * base.pcols + c] = (resid * inv)
+                        .round_ties_even()
+                        .clamp(-levels, levels) as i8;
+                }
+            }
+        }
+    }
+    FallbackQuant { base, rq, rscale, u, metric }
+}
+
+/// θ that yields (approximately) the requested fallback rate: the
+/// (1-rate) quantile of the per-block metric. Used by benches to pin
+/// rates exactly; training uses the delay controller instead (Alg 2).
+pub fn theta_for_rate(metrics: &[f32], rate: f64) -> f32 {
+    if metrics.is_empty() {
+        return f32::INFINITY;
+    }
+    let mut sorted = metrics.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let k = ((1.0 - rate) * sorted.len() as f64).floor() as usize;
+    if k >= sorted.len() {
+        f32::INFINITY
+    } else if k == 0 {
+        -f32::INFINITY
+    } else {
+        // strictly-greater comparison: pick midpoint below element k
+        sorted[k - 1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::block::INT8_LEVELS;
+    use crate::quant::metrics::rmse;
+    use crate::util::rng::Pcg64;
+
+    fn outlier_mat(rows: usize, cols: usize, seed: u64, n_out: usize,
+                   mag: f32) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let mut m = Mat::randn(rows, cols, 1.0, &mut rng);
+        for _ in 0..n_out {
+            let i = rng.below(m.data.len());
+            let jitter = 1.0 + rng.uniform_f32(); // distinct magnitudes
+            m.data[i] = mag * jitter
+                * if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+        }
+        m
+    }
+
+    #[test]
+    fn all_fallback_reduces_error() {
+        let x = outlier_mat(64, 64, 1, 10, 300.0);
+        let fq = fallback_quant(&x, -1.0, 16, INT8_LEVELS,
+                                Criterion::AbsMax);
+        assert!((fq.fallback_rate() - 1.0).abs() < 1e-9);
+        let plain = fq.base.dequant();
+        let fb = fq.dequant();
+        let e_plain = rmse(&plain.data, &x.data);
+        let e_fb = rmse(&fb.data, &x.data);
+        assert!(e_fb < e_plain * 0.05, "e_fb={e_fb} e_plain={e_plain}");
+    }
+
+    #[test]
+    fn no_fallback_at_huge_theta() {
+        let x = outlier_mat(64, 64, 2, 10, 300.0);
+        let fq = fallback_quant(&x, f32::INFINITY, 16, INT8_LEVELS,
+                                Criterion::AbsMax);
+        assert_eq!(fq.fallback_rate(), 0.0);
+        assert_eq!(fq.dequant().data, fq.base.dequant().data);
+    }
+
+    #[test]
+    fn fallback_beats_int16_with_extreme_outliers() {
+        // Paper Fig 3(b): a 20000-magnitude outlier ruins INT16's single
+        // scale but not the two-step representation.
+        let x = outlier_mat(128, 128, 3, 8, 20000.0);
+        let fq = fallback_quant(&x, -1.0, 128, INT8_LEVELS,
+                                Criterion::AbsMax);
+        let e_fb = rmse(&fq.dequant().data, &x.data);
+        let i16q = crate::quant::block::int16_block_quant(&x, 128);
+        let e_16 = rmse(&i16q.dequant().data, &x.data);
+        assert!(e_fb < e_16, "fallback {e_fb} vs int16 {e_16}");
+    }
+
+    #[test]
+    fn criteria_agree_on_extreme_blocks() {
+        // A block with a huge outlier should rank top under all criteria.
+        let x = outlier_mat(64, 64, 4, 1, 1000.0);
+        for crit in [Criterion::AbsMax, Criterion::L1, Criterion::L1Rel] {
+            let fq = fallback_quant(&x, f32::INFINITY, 16, INT8_LEVELS, crit);
+            let hot = fq
+                .metric
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            // locate the outlier block
+            let pos = x.data.iter().position(|v| v.abs() > 500.0).unwrap();
+            let (r, c) = (pos / x.cols, pos % x.cols);
+            let want = (r / 16) * fq.base.cb() + c / 16;
+            assert_eq!(hot, want, "criterion {crit:?}");
+        }
+    }
+
+    #[test]
+    fn theta_for_rate_hits_target() {
+        let x = outlier_mat(128, 128, 5, 24, 100.0);
+        let fq = fallback_quant(&x, f32::INFINITY, 16, INT8_LEVELS,
+                                Criterion::AbsMax);
+        for rate in [0.1, 0.25, 0.5] {
+            let theta = theta_for_rate(&fq.metric, rate);
+            let fq2 = fallback_quant(&x, theta, 16, INT8_LEVELS,
+                                     Criterion::AbsMax);
+            let got = fq2.fallback_rate();
+            assert!((got - rate).abs() <= 1.0 / 64.0 + 1e-9,
+                    "rate {rate} got {got}");
+        }
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let x = outlier_mat(32, 32, 6, 4, 200.0);
+        let fq_none = fallback_quant(&x, f32::INFINITY, 16, INT8_LEVELS,
+                                     Criterion::AbsMax);
+        let fq_all = fallback_quant(&x, -1.0, 16, INT8_LEVELS,
+                                    Criterion::AbsMax);
+        assert!(fq_all.bytes() > fq_none.bytes());
+        // full fallback doubles code bytes (+ scale word per block)
+        assert_eq!(fq_all.bytes() - fq_none.bytes(), 4 * (256 + 4));
+    }
+
+    #[test]
+    fn prop_dequant_error_bounded_by_residual_scale() {
+        crate::util::testing::forall("fb-residual-bound", 25, |g| {
+            let rows = 16 * g.usize_in(1, 3);
+            let cols = 16 * g.usize_in(1, 3);
+            let data = g.vec_outliers(rows * cols, 1.0, 5, 150.0);
+            let x = Mat::from_vec(rows, cols, data);
+            let fq = fallback_quant(&x, -1.0, 16, INT8_LEVELS,
+                                    Criterion::AbsMax);
+            let d = fq.dequant();
+            let cb = fq.base.cb();
+            for r in 0..rows {
+                for c in 0..cols {
+                    let bi = (r / 16) * cb + c / 16;
+                    let bound = fq.rscale[bi] / 2.0 + 1e-5;
+                    let err = (d.at(r, c) - x.at(r, c)).abs();
+                    crate::prop_assert!(
+                        err <= bound,
+                        "err {err} > bound {bound} at ({r},{c})"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,232 @@
+//! Quantization granularities of §3.1 — per-tensor, per-token,
+//! per-channel — plus the SwitchBack recipe (per-token X × per-channel
+//! W, Wortsman et al. 2023), the baseline family the paper's block
+//! fallback is measured against.
+//!
+//! These exist to *quantify why they fail* on GLU activations: a single
+//! outlier poisons an entire row/column/tensor scale (underflow), while
+//! 128×128 blocks + fallback isolate it (§4.1 discussion, Fig 1a).
+
+use crate::util::Mat;
+
+use super::block::safe_scale;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    /// one scale for the whole matrix
+    PerTensor,
+    /// one scale per row (token)
+    PerToken,
+    /// one scale per column (channel)
+    PerChannel,
+}
+
+/// Quantized matrix under a §3.1 granularity.
+#[derive(Debug, Clone)]
+pub struct GranularQuant {
+    pub rows: usize,
+    pub cols: usize,
+    pub granularity: Granularity,
+    pub q: Vec<i8>,
+    /// 1 (tensor), rows (token) or cols (channel) scales
+    pub scale: Vec<f32>,
+}
+
+pub fn granular_quant(x: &Mat, g: Granularity, levels: f32)
+                      -> GranularQuant {
+    let (rows, cols) = (x.rows, x.cols);
+    let mut q = vec![0i8; rows * cols];
+    let scale = match g {
+        Granularity::PerTensor => {
+            let s = safe_scale(x.abs_max(), levels);
+            let inv = 1.0 / s;
+            for (qi, &v) in q.iter_mut().zip(&x.data) {
+                *qi = (v * inv).round_ties_even()
+                    .clamp(-levels, levels) as i8;
+            }
+            vec![s]
+        }
+        Granularity::PerToken => {
+            let mut scales = vec![1.0f32; rows];
+            for r in 0..rows {
+                let row = x.row(r);
+                let am = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                let s = safe_scale(am, levels);
+                scales[r] = s;
+                let inv = 1.0 / s;
+                for (c, &v) in row.iter().enumerate() {
+                    q[r * cols + c] = (v * inv).round_ties_even()
+                        .clamp(-levels, levels) as i8;
+                }
+            }
+            scales
+        }
+        Granularity::PerChannel => {
+            let mut scales = vec![1.0f32; cols];
+            for c in 0..cols {
+                let mut am = 0.0f32;
+                for r in 0..rows {
+                    am = am.max(x.at(r, c).abs());
+                }
+                scales[c] = safe_scale(am, levels);
+            }
+            for r in 0..rows {
+                for c in 0..cols {
+                    q[r * cols + c] = (x.at(r, c) / scales[c])
+                        .round_ties_even()
+                        .clamp(-levels, levels) as i8;
+                }
+            }
+            scales
+        }
+    };
+    GranularQuant { rows, cols, granularity: g, q, scale }
+}
+
+impl GranularQuant {
+    pub fn dequant(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let s = match self.granularity {
+                    Granularity::PerTensor => self.scale[0],
+                    Granularity::PerToken => self.scale[r],
+                    Granularity::PerChannel => self.scale[c],
+                };
+                m.data[r * self.cols + c] =
+                    self.q[r * self.cols + c] as f32 * s;
+            }
+        }
+        m
+    }
+}
+
+/// SwitchBack matmul: per-token X (M×K rows) × per-channel W^T columns
+/// — i.e. W (N×K) quantized per output row. Returns C ≈ X·Wᵀ.
+pub fn switchback_matmul(x: &Mat, w: &Mat, levels: f32) -> Mat {
+    assert_eq!(x.cols, w.cols, "X (T,K) x W (N,K)");
+    let qx = granular_quant(x, Granularity::PerToken, levels);
+    let qw = granular_quant(w, Granularity::PerToken, levels); // rows of W = out channels
+    let (t, k, n) = (x.rows, x.cols, w.rows);
+    let mut c = Mat::zeros(t, n);
+    for r in 0..t {
+        let sx = qx.scale[r];
+        for j in 0..n {
+            let mut acc = 0i32;
+            for kk in 0..k {
+                acc += qx.q[r * k + kk] as i32 * qw.q[j * k + kk] as i32;
+            }
+            c.data[r * n + j] = acc as f32 * (sx * qw.scale[j]);
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::metrics::{rel_err, rmse, underflow_rate};
+    use crate::quant::INT8_LEVELS;
+    use crate::util::rng::Pcg64;
+
+    fn gaussian(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        Mat::randn(rows, cols, 1.0, &mut rng)
+    }
+
+    #[test]
+    fn all_granularities_bounded_error_without_outliers() {
+        let x = gaussian(64, 64, 1);
+        for g in [Granularity::PerTensor, Granularity::PerToken,
+                  Granularity::PerChannel] {
+            let q = granular_quant(&x, g, INT8_LEVELS);
+            let e = rmse(&q.dequant().data, &x.data);
+            assert!(e < 0.03, "{g:?}: {e}");
+        }
+    }
+
+    #[test]
+    fn occasional_outlier_poisons_tensor_and_row_scales() {
+        // P2's point: one occasional outlier in a random position ruins
+        // per-tensor entirely and its own token row; block quantization
+        // (16x16) confines the damage to one block.
+        let mut x = gaussian(64, 64, 2);
+        x.data[40 * 64 + 13] = 5000.0;
+        let per_tensor = granular_quant(&x, Granularity::PerTensor,
+                                        INT8_LEVELS);
+        let uf_tensor = underflow_rate(&x.data, &per_tensor.q);
+        assert!(uf_tensor > 0.9, "tensor underflow {uf_tensor}");
+
+        let per_token = granular_quant(&x, Granularity::PerToken,
+                                       INT8_LEVELS);
+        // only the poisoned row underflows
+        let row = &x.data[40 * 64..41 * 64];
+        let qrow = &per_token.q[40 * 64..41 * 64];
+        let uf_row = underflow_rate(row, qrow);
+        assert!(uf_row > 0.9, "row underflow {uf_row}");
+        let uf_all = underflow_rate(&x.data, &per_token.q);
+        assert!(uf_all < 0.05, "global underflow {uf_all}");
+
+        // block quant: damage confined to one 16x16 block
+        let bq = crate::quant::block_quant(&x, 16, INT8_LEVELS,
+                                           crate::quant::Rounding::Nearest);
+        let uf_block = underflow_rate(&x.data, &bq.q[..x.data.len()]);
+        assert!(uf_block < uf_tensor / 10.0,
+                "block {uf_block} vs tensor {uf_tensor}");
+    }
+
+    #[test]
+    fn channel_outliers_defeat_per_token_but_not_per_channel() {
+        // SwitchBack's known weakness (§3.2): channel-wise outliers make
+        // *every* token row carry a huge scale.
+        let mut x = gaussian(128, 128, 3);
+        for r in 0..128 {
+            x.data[r * 128 + 7] = 800.0; // hot channel
+        }
+        let pt = granular_quant(&x, Granularity::PerToken, INT8_LEVELS);
+        let pc = granular_quant(&x, Granularity::PerChannel, INT8_LEVELS);
+        let e_tok = rmse(&pt.dequant().data, &x.data);
+        let e_ch = rmse(&pc.dequant().data, &x.data);
+        assert!(e_ch < e_tok / 5.0, "token {e_tok} vs channel {e_ch}");
+    }
+
+    #[test]
+    fn switchback_ok_without_outliers_bad_with() {
+        let x = gaussian(32, 64, 4);
+        let w = gaussian(48, 64, 5);
+        let exact = {
+            let wt = w.transpose();
+            crate::gemm::matmul(&x, &wt, 1)
+        };
+        let c = switchback_matmul(&x, &w, INT8_LEVELS);
+        assert!(rel_err(&c.data, &exact.data) < 0.02);
+
+        // occasional activation outliers break it; block fallback holds
+        let mut xo = x.clone();
+        for i in [5usize, 600, 1500] {
+            xo.data[i] = 400.0;
+        }
+        let exact_o = {
+            let wt = w.transpose();
+            crate::gemm::matmul(&xo, &wt, 1)
+        };
+        let c_sb = switchback_matmul(&xo, &w, INT8_LEVELS);
+        let wt = w.transpose();
+        let (c_fb, _) =
+            crate::gemm::fallback_matmul(&xo, &wt, 10.0, 16, 1);
+        let e_sb = rel_err(&c_sb.data, &exact_o.data);
+        let e_fb = rel_err(&c_fb.data, &exact_o.data);
+        assert!(e_fb < e_sb, "fallback {e_fb} !< switchback {e_sb}");
+    }
+
+    #[test]
+    fn scale_counts() {
+        let x = gaussian(8, 16, 6);
+        assert_eq!(granular_quant(&x, Granularity::PerTensor,
+                                  INT8_LEVELS).scale.len(), 1);
+        assert_eq!(granular_quant(&x, Granularity::PerToken,
+                                  INT8_LEVELS).scale.len(), 8);
+        assert_eq!(granular_quant(&x, Granularity::PerChannel,
+                                  INT8_LEVELS).scale.len(), 16);
+    }
+}

@@ -1,0 +1,140 @@
+//! 1 x G per-group n-bit quantization for non-linear activation contexts
+//! (paper §5.2): INT10 with 1x128 groups stores norm/activation inputs at
+//! 5/8 of BF16 memory while keeping gradients near-lossless (Fig 7a).
+
+use crate::util::Mat;
+
+use super::block::safe_scale;
+
+#[derive(Debug, Clone)]
+pub struct GroupQuant {
+    pub rows: usize,
+    pub cols: usize,
+    pub group: usize,
+    pub bits: u32,
+    /// codes, row-major (i16 holds up to 15-bit magnitudes)
+    pub q: Vec<i16>,
+    /// (rows x cols/group) scales
+    pub scale: Vec<f32>,
+}
+
+pub fn levels_for_bits(bits: u32) -> f32 {
+    (1u32 << (bits - 1)) as f32 - 1.0
+}
+
+/// Quantize each 1 x group row-segment with its own absmax scale.
+pub fn group_quant(x: &Mat, group: usize, bits: u32) -> GroupQuant {
+    assert!(x.cols % group == 0, "cols must divide group size");
+    assert!((2..=15).contains(&bits));
+    let levels = levels_for_bits(bits);
+    let gpr = x.cols / group;
+    let mut q = vec![0i16; x.rows * x.cols];
+    let mut scale = vec![1.0f32; x.rows * gpr];
+    for r in 0..x.rows {
+        for g in 0..gpr {
+            let c0 = g * group;
+            let seg = &x.data[r * x.cols + c0..r * x.cols + c0 + group];
+            let am = seg.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let s = safe_scale(am, levels);
+            scale[r * gpr + g] = s;
+            let inv = 1.0 / s;
+            for (i, &v) in seg.iter().enumerate() {
+                q[r * x.cols + c0 + i] = (v * inv)
+                    .round_ties_even()
+                    .clamp(-levels, levels) as i16;
+            }
+        }
+    }
+    GroupQuant { rows: x.rows, cols: x.cols, group, bits, q, scale }
+}
+
+impl GroupQuant {
+    pub fn dequant(&self) -> Mat {
+        let gpr = self.cols / self.group;
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let s = self.scale[r * gpr + c / self.group];
+                m.data[r * self.cols + c] =
+                    self.q[r * self.cols + c] as f32 * s;
+            }
+        }
+        m
+    }
+
+    /// Packed size in bytes: n-bit codes (bit-packed) + f32 scale/group.
+    /// This is what the paper's ACT-MEM column counts.
+    pub fn bytes(&self) -> usize {
+        let code_bits = self.rows * self.cols * self.bits as usize;
+        code_bits.div_ceil(8) + 4 * self.scale.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::metrics::rmse;
+    use crate::util::rng::Pcg64;
+
+    fn randmat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        Mat::randn(rows, cols, 2.0, &mut rng)
+    }
+
+    #[test]
+    fn roundtrip_error_bound() {
+        let x = randmat(8, 256, 1);
+        let gq = group_quant(&x, 128, 10);
+        let d = gq.dequant();
+        let gpr = x.cols / 128;
+        for r in 0..x.rows {
+            for c in 0..x.cols {
+                let s = gq.scale[r * gpr + c / 128];
+                assert!((d.at(r, c) - x.at(r, c)).abs() <= s / 2.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_bits() {
+        let x = randmat(8, 256, 2);
+        let mut last = f32::INFINITY;
+        for bits in [4, 6, 8, 10, 12] {
+            let e = rmse(&group_quant(&x, 128, bits).dequant().data,
+                         &x.data);
+            assert!(e < last, "bits={bits}: {e} !< {last}");
+            last = e;
+        }
+    }
+
+    #[test]
+    fn int10_memory_is_5_8_of_bf16() {
+        // paper §5.2: 10-bit codes = 10/16 = 5/8 of BF16, plus scales.
+        let x = randmat(128, 1024, 3);
+        let gq = group_quant(&x, 128, 10);
+        let bf16_bytes = x.data.len() * 2;
+        let code_bytes = (x.data.len() * 10) / 8;
+        assert_eq!(gq.bytes(), code_bytes + 4 * (128 * 8));
+        let ratio = code_bytes as f64 / bf16_bytes as f64;
+        assert!((ratio - 0.625).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_codes_in_range() {
+        crate::util::testing::forall("group-range", 30, |g| {
+            let rows = g.usize_in(1, 8);
+            let groups = g.usize_in(1, 4);
+            let bits = g.usize_in(2, 12) as u32;
+            let cols = groups * 32;
+            let x = Mat::from_vec(rows, cols,
+                                  g.vec_outliers(rows * cols, 1.0, 3, 90.0));
+            let gq = group_quant(&x, 32, bits);
+            let l = levels_for_bits(bits) as i32;
+            for &q in &gq.q {
+                crate::prop_assert!((-l..=l).contains(&(q as i32)),
+                                    "code {q} out of {l}-level range");
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,124 @@
+//! Error metrics shared by experiments: RMSE, cosine similarity,
+//! underflow rate, relative error — the quantities the paper's figures
+//! report (Fig 3b RMSE, Fig 3c/5/7a CosSim, §4.1 underflow).
+
+/// Root-mean-square error between two equal-length slices.
+pub fn rmse(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum();
+    (s / a.len() as f64).sqrt() as f32
+}
+
+/// Cosine similarity; returns 1.0 for two zero vectors.
+pub fn cosine_similarity(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut dot = 0.0f64;
+    let mut na = 0.0f64;
+    let mut nb = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        dot += *x as f64 * *y as f64;
+        na += *x as f64 * *x as f64;
+        nb += *y as f64 * *y as f64;
+    }
+    if na == 0.0 && nb == 0.0 {
+        return 1.0;
+    }
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot / (na.sqrt() * nb.sqrt())
+}
+
+/// Fraction of nonzero entries that quantize to zero (paper §4.1:
+/// "underflow" — non-outlier values lost when the scale is outlier-set).
+pub fn underflow_rate(original: &[f32], quant_codes: &[i8]) -> f64 {
+    assert_eq!(original.len(), quant_codes.len());
+    let mut nonzero = 0usize;
+    let mut under = 0usize;
+    for (x, q) in original.iter().zip(quant_codes) {
+        if *x != 0.0 {
+            nonzero += 1;
+            if *q == 0 {
+                under += 1;
+            }
+        }
+    }
+    if nonzero == 0 {
+        0.0
+    } else {
+        under as f64 / nonzero as f64
+    }
+}
+
+/// ||a - b|| / ||b||.
+pub fn rel_err(a: &[f32], b: &[f32]) -> f64 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        let d = (*x - *y) as f64;
+        num += d * d;
+        den += *y as f64 * *y as f64;
+    }
+    if den == 0.0 {
+        return if num == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    (num / den).sqrt()
+}
+
+/// Perplexity from a mean cross-entropy loss (nats).
+pub fn ppl(mean_loss: f64) -> f64 {
+    mean_loss.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmse_basics() {
+        assert_eq!(rmse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((rmse(&[0.0, 0.0], &[3.0, 4.0]) - (12.5f32).sqrt()).abs()
+                < 1e-6);
+    }
+
+    #[test]
+    fn cosine_basics() {
+        assert!((cosine_similarity(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs()
+                < 1e-12);
+        assert!(cosine_similarity(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-12);
+        assert!((cosine_similarity(&[1.0, 1.0], &[-1.0, -1.0]) + 1.0).abs()
+                < 1e-12);
+        assert_eq!(cosine_similarity(&[0.0], &[0.0]), 1.0);
+        assert_eq!(cosine_similarity(&[0.0], &[1.0]), 0.0);
+    }
+
+    #[test]
+    fn underflow() {
+        let x = [5.0f32, 0.001, 0.0, -0.002];
+        let q = [5i8, 0, 0, 0];
+        // 3 nonzero entries, 2 quantized to zero
+        assert!((underflow_rate(&x, &q) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rel_err_basics() {
+        assert_eq!(rel_err(&[1.0], &[1.0]), 0.0);
+        assert!((rel_err(&[2.0], &[1.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ppl_is_exp() {
+        assert!((ppl(0.0) - 1.0).abs() < 1e-12);
+        assert!((ppl(1.0) - std::f64::consts::E).abs() < 1e-12);
+    }
+}

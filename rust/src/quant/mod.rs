@@ -1,0 +1,19 @@
+//! The DBFQ numeric-format core library (Rust side).
+//!
+//! Mirrors `python/compile/kernels/ref.py` with identical numerics
+//! (ties-to-even rounding, `absmax * (1/L)` scales, exact int32 block
+//! accumulation downstream in `gemm`). Cross-validated against the JAX
+//! oracles through the op-level HLO artifacts in the runtime tests.
+
+pub mod block;
+pub mod fallback;
+pub mod granularity;
+pub mod group;
+pub mod metrics;
+
+pub use block::{block_quant, int16_block_quant, BlockQuant, Rounding,
+                INT8_LEVELS};
+pub use fallback::{fallback_quant, theta_for_rate, Criterion,
+                   FallbackQuant};
+pub use granularity::{granular_quant, switchback_matmul, Granularity};
+pub use group::{group_quant, levels_for_bits, GroupQuant};

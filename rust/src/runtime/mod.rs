@@ -1,0 +1,302 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from Rust.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`). Artifacts
+//! and their I/O signatures come from `artifacts/manifest.json` written
+//! by `python/compile/aot.py`; executables are compiled lazily and
+//! cached. The hot training loop keeps large state (params, Adam
+//! moments) resident as `PjRtBuffer`s and feeds outputs straight back as
+//! inputs, so per-step host↔device copies are limited to the small
+//! tensors (tokens, θ, scalars) — see EXPERIMENTS.md §Perf.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+pub mod value;
+
+pub use value::Value;
+
+/// Signature of one artifact, from the manifest.
+#[derive(Debug, Clone)]
+pub struct TensorSig {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSig {
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// One leaf of a model profile's flat parameter vector.
+#[derive(Debug, Clone)]
+pub struct ParamLeaf {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Model profile metadata (mirrors `aot.PROFILES`).
+#[derive(Debug, Clone)]
+pub struct ProfileMeta {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub glu: bool,
+    pub batch: usize,
+    pub block: usize,
+    pub group: usize,
+    pub n_params: usize,
+    pub n_sites: usize,
+    pub param_layout: Vec<ParamLeaf>,
+}
+
+fn tensor_sigs(j: &Json) -> Result<Vec<TensorSig>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("sig list"))?
+        .iter()
+        .map(|t| {
+            Ok(TensorSig {
+                name: t.req("name").as_str().unwrap_or("").to_string(),
+                shape: t
+                    .req("shape")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect(),
+                dtype: t.req("dtype").as_str().unwrap_or("").to_string(),
+            })
+        })
+        .collect()
+}
+
+/// The artifact registry + PJRT client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub artifacts: HashMap<String, ArtifactSig>,
+    pub profiles: HashMap<String, ProfileMeta>,
+    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open `dir` (usually `artifacts/`) and parse its manifest.
+    pub fn open(dir: &str) -> Result<Runtime> {
+        let dir = PathBuf::from(dir);
+        let manifest = Json::parse_file(
+            dir.join("manifest.json").to_str().unwrap(),
+        )
+        .map_err(|e| anyhow!("manifest: {e}"))?;
+
+        let mut artifacts = HashMap::new();
+        for (name, a) in manifest
+            .req("artifacts")
+            .as_obj()
+            .ok_or_else(|| anyhow!("artifacts obj"))?
+        {
+            artifacts.insert(
+                name.clone(),
+                ArtifactSig {
+                    file: a.req("file").as_str().unwrap().to_string(),
+                    inputs: tensor_sigs(a.req("inputs"))?,
+                    outputs: tensor_sigs(a.req("outputs"))?,
+                },
+            );
+        }
+
+        let mut profiles = HashMap::new();
+        for (name, p) in manifest
+            .req("profiles")
+            .as_obj()
+            .ok_or_else(|| anyhow!("profiles obj"))?
+        {
+            let m = p.req("model");
+            let layout = p
+                .req("param_layout")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|l| ParamLeaf {
+                    name: l.req("name").as_str().unwrap().to_string(),
+                    shape: l
+                        .req("shape")
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|d| d.as_usize().unwrap())
+                        .collect(),
+                    offset: l.req("offset").as_usize().unwrap(),
+                    size: l.req("size").as_usize().unwrap(),
+                })
+                .collect();
+            profiles.insert(
+                name.clone(),
+                ProfileMeta {
+                    name: name.clone(),
+                    vocab: m.req("vocab").as_usize().unwrap(),
+                    d_model: m.req("d_model").as_usize().unwrap(),
+                    n_layers: m.req("n_layers").as_usize().unwrap(),
+                    n_heads: m.req("n_heads").as_usize().unwrap(),
+                    d_ff: m.req("d_ff").as_usize().unwrap(),
+                    seq_len: m.req("seq_len").as_usize().unwrap(),
+                    glu: m.req("glu").as_bool().unwrap_or(true),
+                    batch: p.req("batch").as_usize().unwrap(),
+                    block: p.req("block").as_usize().unwrap(),
+                    group: p.req("group").as_usize().unwrap(),
+                    n_params: p.req("n_params").as_usize().unwrap(),
+                    n_sites: p.req("n_sites").as_usize().unwrap(),
+                    param_layout: layout,
+                },
+            );
+        }
+
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            artifacts,
+            profiles,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn profile(&self, name: &str) -> Result<&ProfileMeta> {
+        self.profiles
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown profile '{name}'"))
+    }
+
+    pub fn signature(&self, name: &str) -> Result<&ArtifactSig> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))
+    }
+
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifacts.contains_key(name)
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn load(&self, name: &str)
+                -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let sig = self.signature(name)?;
+        let path = self.dir.join(&sig.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().unwrap(),
+        )
+        .map_err(|e| anyhow!("parse HLO {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let rc = std::rc::Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Execute by artifact name with host values; returns host values.
+    ///
+    /// Inputs are validated against the manifest signature. The lowered
+    /// modules return a single tuple (return_tuple=True), which is
+    /// unpacked into one `Value` per declared output.
+    pub fn call(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        let sig = self.signature(name)?.clone();
+        if inputs.len() != sig.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                sig.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (v, s) in inputs.iter().zip(&sig.inputs) {
+            if v.shape() != s.shape.as_slice() {
+                bail!(
+                    "{name}: input '{}' shape {:?} != expected {:?}",
+                    s.name,
+                    v.shape(),
+                    s.shape
+                );
+            }
+        }
+        let exe = self.load(name)?;
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
+        let out = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let tuple = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        if parts.len() != sig.outputs.len() {
+            bail!(
+                "{name}: {} outputs returned, manifest says {}",
+                parts.len(),
+                sig.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&sig.outputs)
+            .map(|(lit, s)| Value::from_literal(&lit, &s.shape, &s.dtype))
+            .collect()
+    }
+}
+
+/// Locate the artifacts directory: `$DBFQ_ARTIFACTS`, `./artifacts`, or
+/// relative to the crate root (tests run from the workspace root).
+pub fn artifacts_dir() -> String {
+    if let Ok(d) = std::env::var("DBFQ_ARTIFACTS") {
+        return d;
+    }
+    for cand in ["artifacts", "../artifacts"] {
+        if Path::new(cand).join("manifest.json").exists() {
+            return cand.to_string();
+        }
+    }
+    "artifacts".to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests that need real artifacts live in rust/tests/ (they
+    // require `make artifacts` first); pure manifest parsing is here.
+    use super::*;
+
+    #[test]
+    fn tensor_sig_parse() {
+        let j = Json::parse(
+            r#"[{"name":"x","shape":[2,3],"dtype":"float32"}]"#,
+        )
+        .unwrap();
+        let sigs = tensor_sigs(&j).unwrap();
+        assert_eq!(sigs[0].name, "x");
+        assert_eq!(sigs[0].shape, vec![2, 3]);
+        assert_eq!(sigs[0].dtype, "float32");
+    }
+}

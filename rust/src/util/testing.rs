@@ -1,0 +1,142 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `forall` runs a property over N seeded random cases and, on failure,
+//! performs a bounded shrink search over the failing seed's generator
+//! "size" parameter, reporting the smallest reproduction it finds.
+//! Generators draw from a `Pcg64` handed to user closures, so arbitrary
+//! structured inputs are easy to build.
+
+use super::rng::Pcg64;
+
+pub struct Gen<'a> {
+    pub rng: &'a mut Pcg64,
+    /// Size hint (shrinks toward 1 on failure).
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let span = (hi - lo).min(self.size.max(1));
+        lo + self.rng.below(span + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.uniform_f32()
+    }
+
+    pub fn vec_normal(&mut self, len: usize, sigma: f32) -> Vec<f32> {
+        let mut v = vec![0.0; len];
+        self.rng.fill_normal(&mut v, sigma);
+        v
+    }
+
+    /// Heavy-tailed vector: normal body + sparse large outliers, the
+    /// activation shape the paper targets (§4.1 P1–P3).
+    pub fn vec_outliers(&mut self, len: usize, sigma: f32,
+                        n_outliers: usize, magnitude: f32) -> Vec<f32> {
+        let mut v = self.vec_normal(len, sigma);
+        for _ in 0..n_outliers.min(len) {
+            let i = self.rng.below(len);
+            let sign = if self.rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+            v[i] = sign * magnitude * (0.5 + self.rng.uniform_f32());
+        }
+        v
+    }
+}
+
+/// Run `prop` over `cases` random inputs. Panics with the failing seed
+/// and smallest failing size on error.
+pub fn forall<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0x5eed_0000 + case as u64;
+        let mut rng = Pcg64::new(seed);
+        let mut g = Gen { rng: &mut rng, size: 64 };
+        if let Err(msg) = prop(&mut g) {
+            // Shrink: retry the same seed with smaller size hints.
+            let mut best: Option<(usize, String)> = None;
+            for size in [1usize, 2, 4, 8, 16, 32] {
+                let mut rng = Pcg64::new(seed);
+                let mut g = Gen { rng: &mut rng, size };
+                if let Err(m) = prop(&mut g) {
+                    best = Some((size, m));
+                    break;
+                }
+            }
+            match best {
+                Some((size, m)) => panic!(
+                    "property '{name}' failed (seed={seed:#x}, \
+                     shrunk size={size}): {m}"
+                ),
+                None => panic!(
+                    "property '{name}' failed (seed={seed:#x}, size=64): \
+                     {msg}"
+                ),
+            }
+        }
+    }
+}
+
+/// Assert helper returning Result for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+pub fn approx_eq(a: f32, b: f32, rtol: f32, atol: f32) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+}
+
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        forall("add-commutes", 50, |g| {
+            let a = g.f32_in(-100.0, 100.0);
+            let b = g.f32_in(-100.0, 100.0);
+            prop_assert!(a + b == b + a, "{a} {b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics() {
+        forall("always-fails", 5, |g| {
+            let n = g.usize_in(1, 100);
+            prop_assert!(n == usize::MAX, "n={n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn outlier_generator_has_outliers() {
+        let mut rng = Pcg64::new(3);
+        let mut g = Gen { rng: &mut rng, size: 64 };
+        let v = g.vec_outliers(1024, 1.0, 8, 500.0);
+        let big = v.iter().filter(|x| x.abs() > 100.0).count();
+        assert!(big >= 4, "expected injected outliers, got {big}");
+    }
+
+    #[test]
+    fn approx_eq_behaviour() {
+        assert!(approx_eq(1.0, 1.0 + 1e-7, 1e-6, 0.0));
+        assert!(!approx_eq(1.0, 1.1, 1e-6, 0.0));
+        assert!(approx_eq(0.0, 1e-9, 0.0, 1e-8));
+    }
+}

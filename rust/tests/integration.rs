@@ -1,0 +1,313 @@
+//! L3 integration tests: PJRT runtime + AOT artifacts + coordinator.
+//!
+//! Require `make artifacts` (tiny profile at minimum). They prove the
+//! full L1→L2→L3 composition: the Rust quant/gemm implementations agree
+//! bitwise with the Pallas-kernel artifacts executed through PJRT, and
+//! the training coordinator drives the AOT train step end to end.
+
+use dbfq::coordinator::{QScalars, TrainConfig, Trainer};
+use dbfq::data::Corpus;
+use dbfq::model::Method;
+use dbfq::quant::{self, Criterion, Rounding, INT8_LEVELS};
+use dbfq::runtime::{artifacts_dir, Runtime, Value};
+use dbfq::util::rng::Pcg64;
+use dbfq::util::Mat;
+
+fn runtime() -> Runtime {
+    Runtime::open(&artifacts_dir()).expect("run `make artifacts` first")
+}
+
+fn outlier_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::new(seed);
+    let mut m = Mat::randn(rows, cols, 1.0, &mut rng);
+    for _ in 0..6 {
+        let i = rng.below(m.data.len());
+        m.data[i] = 150.0 * (1.0 + rng.uniform_f32());
+    }
+    m
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let rt = runtime();
+    for a in ["init_tiny", "train_tiny_fallback", "eval_tiny_fallback",
+              "op_block_gemm", "op_fallback_gemm", "op_fallback_quant",
+              "op_group_quant"] {
+        assert!(rt.has_artifact(a), "missing artifact {a}");
+    }
+    let prof = rt.profile("tiny").unwrap();
+    assert_eq!(prof.n_sites, 4 * prof.n_layers + 1);
+}
+
+#[test]
+fn init_artifact_deterministic_and_sized() {
+    let rt = runtime();
+    let p1 = rt.call("init_tiny", &[Value::scalar_i32(3)]).unwrap();
+    let p2 = rt.call("init_tiny", &[Value::scalar_i32(3)]).unwrap();
+    let p3 = rt.call("init_tiny", &[Value::scalar_i32(4)]).unwrap();
+    assert_eq!(p1[0].as_f32().unwrap(), p2[0].as_f32().unwrap());
+    assert_ne!(p1[0].as_f32().unwrap(), p3[0].as_f32().unwrap());
+    assert_eq!(p1[0].len(), rt.profile("tiny").unwrap().n_params);
+}
+
+/// The core cross-validation: the Rust block GEMM must agree with the
+/// Pallas block-GEMM kernel (lowered to HLO, executed via PJRT) bitwise
+/// on the integer path, within f32 accumulation noise on scales.
+#[test]
+fn rust_gemm_matches_pallas_kernel_artifact() {
+    let rt = runtime();
+    // op_block_gemm: m=64 n=48 k=80, block=16 (see aot.emit_kernel_ops)
+    let (m, n, k, b) = (64, 48, 80, 16);
+    let a_mat = outlier_mat(m, k, 11);
+    let b_mat = outlier_mat(k, n, 12);
+    let qa = quant::block_quant(&a_mat, b, INT8_LEVELS, Rounding::Nearest);
+    let qb = quant::block_quant(&b_mat, b, INT8_LEVELS, Rounding::Nearest);
+
+    let qa_f: Vec<f32> = qa.q.iter().map(|&v| v as f32).collect();
+    let qb_f: Vec<f32> = qb.q.iter().map(|&v| v as f32).collect();
+    let out = rt
+        .call(
+            "op_block_gemm",
+            &[
+                Value::mat_f32(qa_f, m, k),
+                Value::mat_f32(qa.scale.clone(), m / b, k / b),
+                Value::mat_f32(qb_f, k, n),
+                Value::mat_f32(qb.scale.clone(), k / b, n / b),
+            ],
+        )
+        .unwrap();
+    let c_pallas = out[0].as_f32().unwrap();
+    let c_rust = dbfq::gemm::block_gemm(&qa, &qb, 1);
+    let mut max_rel = 0.0f64;
+    for (x, y) in c_rust.data.iter().zip(c_pallas) {
+        let rel = ((x - y).abs() / y.abs().max(1.0)) as f64;
+        max_rel = max_rel.max(rel);
+    }
+    assert!(max_rel < 1e-5, "rust vs pallas GEMM max rel {max_rel}");
+}
+
+#[test]
+fn rust_fallback_quant_matches_pallas_kernel_artifact() {
+    let rt = runtime();
+    let (m, k, b) = (64, 80, 16);
+    let x = outlier_mat(m, k, 21);
+    let theta = 10.0f32;
+    let out = rt
+        .call(
+            "op_fallback_quant",
+            &[Value::mat_f32(x.data.clone(), m, k),
+              Value::scalar_f32(theta)],
+        )
+        .unwrap();
+    // outputs (dict sorted): absmax, q, rq, rscale, scale, u
+    let q_pallas = out[1].as_f32().unwrap();
+    let u_pallas = out[5].as_f32().unwrap();
+    let fq = quant::fallback_quant(&x, theta, b, INT8_LEVELS,
+                                   Criterion::AbsMax);
+    // integer codes must match exactly
+    for (i, (&qp, &qr)) in
+        q_pallas.iter().zip(fq.base.q.iter()).enumerate()
+    {
+        assert_eq!(qp, qr as f32, "q mismatch at {i}");
+    }
+    for (i, (&up, &ur)) in u_pallas.iter().zip(fq.u.iter()).enumerate() {
+        assert_eq!(up, ur as u8 as f32, "u mismatch at {i}");
+    }
+    // residual codes: FMA contraction may shift the residual by 1 ulp of
+    // the first-step scale; allow |Δcode| <= 1.
+    let rq_pallas = out[2].as_f32().unwrap();
+    let mut diff1 = 0usize;
+    for (&rp, &rr) in rq_pallas.iter().zip(fq.rq.iter()) {
+        let d = (rp - rr as f32).abs();
+        assert!(d <= 1.0, "rq diff {d}");
+        if d > 0.0 {
+            diff1 += 1;
+        }
+    }
+    assert!(diff1 < rq_pallas.len() / 20,
+            "too many 1-code residual diffs: {diff1}");
+}
+
+#[test]
+fn rust_group_quant_matches_pallas_kernel_artifact() {
+    let rt = runtime();
+    let (m, k) = (64, 80);
+    let x = outlier_mat(m, k, 31);
+    let out = rt
+        .call("op_group_quant",
+              &[Value::mat_f32(x.data.clone(), m, k),
+                Value::scalar_f32(10.0)])
+        .unwrap();
+    let q_pallas = out[0].as_f32().unwrap();
+    let gq = quant::group_quant(&x, 16, 10);
+    for (i, (&qp, &qr)) in q_pallas.iter().zip(gq.q.iter()).enumerate() {
+        assert_eq!(qp, qr as f32, "group code mismatch at {i}");
+    }
+}
+
+#[test]
+fn fallback_gemm_artifact_consistent_with_rust() {
+    let rt = runtime();
+    let (m, n, k, b) = (64, 48, 80, 16);
+    let a_mat = outlier_mat(m, k, 41);
+    let b_mat = outlier_mat(k, n, 42);
+    let fa = quant::fallback_quant(&a_mat, 20.0, b, INT8_LEVELS,
+                                   Criterion::AbsMax);
+    let qb = quant::block_quant(&b_mat, b, INT8_LEVELS, Rounding::Nearest);
+    let u_f: Vec<f32> = fa.u.iter().map(|&u| u as u8 as f32).collect();
+    let out = rt
+        .call(
+            "op_fallback_gemm",
+            &[
+                Value::mat_f32(
+                    fa.base.q.iter().map(|&v| v as f32).collect(), m, k),
+                Value::mat_f32(fa.base.scale.clone(), m / b, k / b),
+                Value::mat_f32(
+                    fa.rq.iter().map(|&v| v as f32).collect(), m, k),
+                Value::mat_f32(fa.rscale.clone(), m / b, k / b),
+                Value::mat_f32(u_f, m / b, k / b),
+                Value::mat_f32(
+                    qb.q.iter().map(|&v| v as f32).collect(), k, n),
+                Value::mat_f32(qb.scale.clone(), k / b, n / b),
+            ],
+        )
+        .unwrap();
+    let c_pallas = out[0].as_f32().unwrap();
+    let c_rust = dbfq::gemm::fallback_gemm(&fa, &qb, &fa.u, 1);
+    let mut max_rel = 0.0f64;
+    for (x, y) in c_rust.data.iter().zip(c_pallas) {
+        max_rel = max_rel.max(((x - y).abs() / y.abs().max(1.0)) as f64);
+    }
+    assert!(max_rel < 1e-5, "fallback GEMM max rel {max_rel}");
+}
+
+#[test]
+fn trainer_reduces_loss_and_controls_rate() {
+    let rt = runtime();
+    let cfg = TrainConfig::new("tiny", Method::Fallback, 7, 40);
+    let prof = rt.profile("tiny").unwrap().clone();
+    let corpus = Corpus::synthetic(50_000, prof.vocab, 1);
+    let mut rng = Pcg64::new(2);
+    let mut tr = Trainer::new(&rt, cfg).unwrap();
+    let mut first = 0.0;
+    let mut last = 0.0;
+    for s in 0..40 {
+        let toks = corpus.sample_batch(prof.batch, prof.seq_len, &mut rng);
+        let st = tr.step_on(&toks).unwrap();
+        if s == 0 {
+            first = st.loss;
+        }
+        last = st.loss;
+    }
+    assert!(last < first - 0.3, "loss {first} -> {last}");
+    // Delay controller must have pulled the rate toward [0.1, 0.3].
+    let tail: Vec<f64> = tr.history[30..]
+        .iter()
+        .map(|s| s.mean_fallback_rate)
+        .collect();
+    let mean_tail = tail.iter().sum::<f64>() / tail.len() as f64;
+    assert!(mean_tail > 0.02 && mean_tail < 0.55,
+            "tail fallback rate {mean_tail}");
+}
+
+#[test]
+fn trainer_all_methods_run() {
+    let rt = runtime();
+    let prof = rt.profile("tiny").unwrap().clone();
+    let corpus = Corpus::synthetic(20_000, prof.vocab, 3);
+    for method in Method::all() {
+        let cfg = TrainConfig::new("tiny", method, 1, 5);
+        let mut rng = Pcg64::new(4);
+        let mut tr = Trainer::new(&rt, cfg).unwrap();
+        for _ in 0..3 {
+            let toks =
+                corpus.sample_batch(prof.batch, prof.seq_len, &mut rng);
+            let st = tr.step_on(&toks).unwrap();
+            assert!(st.loss.is_finite(), "{method:?}");
+        }
+    }
+}
+
+#[test]
+fn eval_deterministic_and_prefix_eval_blocks_leakage() {
+    let rt = runtime();
+    let prof = rt.profile("tiny").unwrap().clone();
+    let cfg = TrainConfig::new("tiny", Method::Fallback, 5, 0);
+    let tr = Trainer::new(&rt, cfg).unwrap();
+    let corpus = Corpus::synthetic(20_000, prof.vocab, 5);
+    let batches = corpus.eval_batches(prof.batch, prof.seq_len, 2);
+    let l1 = tr.eval_on(&batches).unwrap();
+    let l2 = tr.eval_on(&batches).unwrap();
+    assert_eq!(l1, l2);
+
+    // evalp: per-token losses before the prefix must ignore tail edits
+    let mut t1: Vec<i32> = (0..prof.seq_len as i32 + 1)
+        .map(|i| i % prof.vocab as i32)
+        .collect();
+    let out1 = rt
+        .call(
+            "evalp_tiny_fallback",
+            &[
+                Value::vec_f32(tr.params.clone()),
+                Value::mat_i32(t1.clone(), 1, prof.seq_len + 1),
+                Value::vec_f32(tr.controller.thresholds.clone()),
+                Value::vec_f32(QScalars::default().to_vec()),
+                Value::scalar_i32(16),
+            ],
+        )
+        .unwrap();
+    for v in t1.iter_mut().skip(20) {
+        *v = (*v + 3) % prof.vocab as i32;
+    }
+    let out2 = rt
+        .call(
+            "evalp_tiny_fallback",
+            &[
+                Value::vec_f32(tr.params.clone()),
+                Value::mat_i32(t1, 1, prof.seq_len + 1),
+                Value::vec_f32(tr.controller.thresholds.clone()),
+                Value::vec_f32(QScalars::default().to_vec()),
+                Value::scalar_i32(16),
+            ],
+        )
+        .unwrap();
+    let p1 = out1[1].as_f32().unwrap();
+    let p2 = out2[1].as_f32().unwrap();
+    for i in 0..14 {
+        let d = (p1[i] - p2[i]).abs();
+        assert!(d < 1e-4, "leakage at pos {i}: {d}");
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip() {
+    let rt = runtime();
+    let cfg = TrainConfig::new("tiny", Method::Fallback, 9, 5);
+    let prof = rt.profile("tiny").unwrap().clone();
+    let corpus = Corpus::synthetic(20_000, prof.vocab, 6);
+    let mut rng = Pcg64::new(7);
+    let mut tr = Trainer::new(&rt, cfg).unwrap();
+    for _ in 0..2 {
+        let toks = corpus.sample_batch(prof.batch, prof.seq_len, &mut rng);
+        tr.step_on(&toks).unwrap();
+    }
+    let dir = std::env::temp_dir().join("dbfq_ckpt_test");
+    let path = dir.to_str().unwrap().to_string();
+    tr.save_checkpoint(&path).unwrap();
+    let saved = tr.params.clone();
+    let cfg2 = TrainConfig::new("tiny", Method::Fallback, 10, 5);
+    let mut tr2 = Trainer::new(&rt, cfg2).unwrap();
+    assert_ne!(tr2.params, saved);
+    tr2.load_checkpoint(&path).unwrap();
+    assert_eq!(tr2.params, saved);
+}
+
+#[test]
+fn shape_validation_rejects_bad_inputs() {
+    let rt = runtime();
+    let err = rt.call("init_tiny", &[Value::vec_f32(vec![1.0, 2.0])]);
+    assert!(err.is_err());
+    let err2 = rt.call("init_tiny", &[]);
+    assert!(err2.is_err());
+    assert!(rt.call("no_such_artifact", &[]).is_err());
+}

@@ -1,0 +1,238 @@
+//! GEMM engine before/after: seed baselines vs the plan/execute engine.
+//!
+//! Emits `BENCH_gemm_engine.json` so the perf trajectory is tracked
+//! from this PR onward. Measured per mode (dense / int8 / fallback at
+//! ~0%, ~5%, ~25% rate), Natural-equivalent Random vs worst-case
+//! Sequential placement, 1 and N threads:
+//!
+//! * `gops_seed`    — retained pre-engine kernel (per-call conversion,
+//!                    strided B, contiguous chunking)
+//! * `gops_engine`  — the public wrappers (fresh plan per call, cached
+//!                    packed operands — the drop-in path)
+//! * `gops_plan`    — plan built once, executed repeatedly (the
+//!                    steady-state training path)
+//!
+//! Also prints the measured `SubstrateCalibration` the cost model
+//! consumes in place of its ad-hoc fallback-overhead constant.
+
+use dbfq::costmodel::{rtx4090, SubstrateCalibration};
+use dbfq::gemm::{self, GemmPlan, Placement};
+use dbfq::quant::{self, Criterion, Rounding, INT8_LEVELS};
+use dbfq::util::bench::{bench, gops, Table};
+use dbfq::util::json::{obj, Json};
+use dbfq::util::rng::Pcg64;
+use dbfq::util::threadpool::default_threads;
+use dbfq::util::Mat;
+
+const DIM: usize = 1024;
+const BLOCK: usize = 128;
+const TARGET_MS: u64 = 200;
+
+fn measure<F: FnMut()>(f: F) -> f64 {
+    let s = bench(f, TARGET_MS);
+    gops(DIM, DIM, DIM, s.median_secs())
+}
+
+fn main() {
+    println!("\n================================================");
+    println!("GEMM engine vs seed baselines ({DIM}^3, block {BLOCK})");
+    println!("================================================");
+
+    let nthreads = default_threads().max(2);
+    let thread_counts = [1usize, nthreads];
+
+    let mut rng = Pcg64::new(0xE2612E);
+    let a = Mat::randn(DIM, DIM, 1.0, &mut rng);
+    // channel-structured outliers (paper §4.1) so fallback has texture
+    let mut a_out = a.clone();
+    for c in 0..DIM {
+        if c % 97 == 0 {
+            for r in 0..DIM {
+                if rng.uniform() < 0.3 {
+                    a_out.data[r * DIM + c] =
+                        200.0 * (1.0 + rng.uniform_f32());
+                }
+            }
+        }
+    }
+    let b = Mat::randn(DIM, DIM, 1.0, &mut rng);
+    let qa = quant::block_quant(&a, BLOCK, INT8_LEVELS,
+                                Rounding::Nearest);
+    let qb = quant::block_quant(&b, BLOCK, INT8_LEVELS,
+                                Rounding::Nearest);
+    let probe = quant::fallback_quant(&a_out, f32::INFINITY, BLOCK,
+                                      INT8_LEVELS, Criterion::AbsMax);
+
+    let mut table = Table::new(&["mode", "rate", "placement", "thr",
+                                 "seed", "engine", "plan", "speedup"]);
+    let mut dense_rows = Vec::new();
+    let mut int8_rows = Vec::new();
+    let mut fb_rows = Vec::new();
+
+    // -- dense ----------------------------------------------------------
+    for &threads in &thread_counts {
+        let g_seed = measure(|| {
+            std::hint::black_box(gemm::matmul_baseline(&a, &b, threads));
+        });
+        let g_eng = measure(|| {
+            std::hint::black_box(gemm::matmul(&a, &b, threads));
+        });
+        let plan = GemmPlan::new_dense(&a, &b, threads);
+        let g_plan = measure(|| {
+            std::hint::black_box(plan.execute());
+        });
+        table.row(&[
+            "dense".into(), "-".into(), "-".into(),
+            threads.to_string(),
+            format!("{g_seed:.2}"), format!("{g_eng:.2}"),
+            format!("{g_plan:.2}"),
+            format!("{:.2}x", g_eng / g_seed),
+        ]);
+        dense_rows.push(obj(vec![
+            ("threads", Json::Num(threads as f64)),
+            ("gops_seed", Json::Num(g_seed)),
+            ("gops_engine", Json::Num(g_eng)),
+            ("gops_plan", Json::Num(g_plan)),
+        ]));
+    }
+
+    // -- int8 block -----------------------------------------------------
+    let mut int8_speedup_1t = 0.0;
+    for &threads in &thread_counts {
+        let g_seed = measure(|| {
+            std::hint::black_box(
+                gemm::block_gemm_baseline(&qa, &qb, threads));
+        });
+        let g_eng = measure(|| {
+            std::hint::black_box(gemm::block_gemm(&qa, &qb, threads));
+        });
+        let plan = GemmPlan::new_int8(&qa, &qb, threads);
+        let g_plan = measure(|| {
+            std::hint::black_box(plan.execute());
+        });
+        if threads == 1 {
+            int8_speedup_1t = g_eng / g_seed;
+        }
+        table.row(&[
+            "int8".into(), "0.00".into(), "-".into(),
+            threads.to_string(),
+            format!("{g_seed:.2}"), format!("{g_eng:.2}"),
+            format!("{g_plan:.2}"),
+            format!("{:.2}x", g_eng / g_seed),
+        ]);
+        int8_rows.push(obj(vec![
+            ("threads", Json::Num(threads as f64)),
+            ("gops_seed", Json::Num(g_seed)),
+            ("gops_engine", Json::Num(g_eng)),
+            ("gops_plan", Json::Num(g_plan)),
+        ]));
+    }
+
+    // -- fallback: rate x placement x threads ---------------------------
+    let mut seq_gap_worst: f64 = 0.0;
+    for rate in [0.0f64, 0.05, 0.25] {
+        let theta = quant::theta_for_rate(&probe.metric, rate);
+        let fa = quant::fallback_quant(&a_out, theta, BLOCK,
+                                       INT8_LEVELS, Criterion::AbsMax);
+        let got_rate = fa.fallback_rate();
+        let mut by_placement = Vec::new();
+        for placement in [Placement::Random(9), Placement::Sequential] {
+            let u = gemm::remap_placement(&fa, placement);
+            for &threads in &thread_counts {
+                let g_seed = measure(|| {
+                    std::hint::black_box(gemm::fallback_gemm_baseline(
+                        &fa, &qb, &u, threads));
+                });
+                let g_eng = measure(|| {
+                    std::hint::black_box(
+                        gemm::fallback_gemm(&fa, &qb, &u, threads));
+                });
+                let plan =
+                    GemmPlan::new_fallback(&fa, &qb, &u, threads);
+                let g_plan = measure(|| {
+                    std::hint::black_box(plan.execute());
+                });
+                table.row(&[
+                    "fallback".into(),
+                    format!("{got_rate:.2}"),
+                    format!("{placement:?}"),
+                    threads.to_string(),
+                    format!("{g_seed:.2}"), format!("{g_eng:.2}"),
+                    format!("{g_plan:.2}"),
+                    format!("{:.2}x", g_eng / g_seed),
+                ]);
+                fb_rows.push(obj(vec![
+                    ("rate", Json::Num(got_rate)),
+                    ("placement",
+                     Json::Str(format!("{placement:?}"))),
+                    ("threads", Json::Num(threads as f64)),
+                    ("gops_seed", Json::Num(g_seed)),
+                    ("gops_engine", Json::Num(g_eng)),
+                    ("gops_plan", Json::Num(g_plan)),
+                ]));
+                if threads == nthreads {
+                    by_placement.push(g_eng);
+                }
+            }
+        }
+        // engine Sequential-vs-Random gap at N threads for this rate
+        if by_placement.len() == 2 && by_placement[0] > 0.0 {
+            let gap = (1.0 - by_placement[1] / by_placement[0]).abs();
+            seq_gap_worst = seq_gap_worst.max(gap);
+        }
+    }
+    table.print();
+
+    // -- measured substrate calibration → cost model --------------------
+    let cal = SubstrateCalibration::measure(512, BLOCK, nthreads);
+    let slope = cal.fallback_overhead_per_rate();
+    let g4090 = rtx4090();
+    let proj25 = 2.0 * (4096f64).powi(3)
+        / cal.projected_int8_secs(&g4090, 4096, 4096, 4096, 128, 0.25)
+        / 1e12;
+    println!(
+        "\nmeasured fallback overhead: {:.2}x per unit rate \
+         (cost model's ad-hoc constant: 1.0x)",
+        slope
+    );
+    println!(
+        "4090 projection @ 25% rate with measured slope: {proj25:.0} \
+         Tops"
+    );
+    println!(
+        "engine vs seed int8 (1 thread): {int8_speedup_1t:.2}x \
+         (target >= 1.25x)"
+    );
+    println!(
+        "worst Sequential-vs-Random engine gap @ {nthreads} threads: \
+         {:.1}% (target <= 10%)",
+        100.0 * seq_gap_worst
+    );
+
+    let report = obj(vec![
+        ("bench", Json::Str("gemm_engine".into())),
+        ("dims", obj(vec![
+            ("m", Json::Num(DIM as f64)),
+            ("n", Json::Num(DIM as f64)),
+            ("k", Json::Num(DIM as f64)),
+            ("block", Json::Num(BLOCK as f64)),
+        ])),
+        ("threads_max", Json::Num(nthreads as f64)),
+        ("dense", Json::Arr(dense_rows)),
+        ("int8", Json::Arr(int8_rows)),
+        ("fallback", Json::Arr(fb_rows)),
+        ("criteria", obj(vec![
+            ("int8_engine_vs_seed_1t", Json::Num(int8_speedup_1t)),
+            ("seq_vs_random_gap_worst", Json::Num(seq_gap_worst)),
+        ])),
+        ("calibration", obj(vec![
+            ("dense_gops", Json::Num(cal.dense_gops)),
+            ("int8_gops", Json::Num(cal.int8_gops)),
+            ("fallback_overhead_per_rate", Json::Num(slope)),
+            ("projected_4090_tops_at_25pct", Json::Num(proj25)),
+        ])),
+    ]);
+    std::fs::write("BENCH_gemm_engine.json", report.to_string())
+        .expect("write BENCH_gemm_engine.json");
+    println!("\nwrote BENCH_gemm_engine.json");
+}

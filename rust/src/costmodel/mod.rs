@@ -177,6 +177,115 @@ impl Gpu {
     }
 }
 
+/// Measured per-mode throughput of the CPU GEMM engine — the
+/// *measured* axis the roofline projections are anchored to.
+///
+/// Where the model above uses ad-hoc constants for the fallback compute
+/// factor (`1 + rate`), this struct carries the engine's actually
+/// measured dense / int8 / fallback throughput on the current testbed
+/// and exposes the measured fallback-overhead slope for projections.
+/// Produced by [`SubstrateCalibration::measure`] (used by
+/// `benches/gemm_engine.rs`) or built directly from recorded numbers.
+#[derive(Debug, Clone)]
+pub struct SubstrateCalibration {
+    /// (m, n, k) of the calibration GEMM
+    pub dims: (usize, usize, usize),
+    pub block: usize,
+    pub threads: usize,
+    /// measured engine throughput, Gops (useful work 2·M·N·K)
+    pub dense_gops: f64,
+    pub int8_gops: f64,
+    /// (achieved fallback rate, Gops) samples, ascending in rate
+    pub fallback: Vec<(f64, f64)>,
+}
+
+impl SubstrateCalibration {
+    /// Run the engine on synthetic operands and record per-mode
+    /// throughput. Cheap at small `dim` (used in tests); the bench uses
+    /// larger sizes for the tracked numbers.
+    pub fn measure(dim: usize, block: usize, threads: usize)
+                   -> SubstrateCalibration {
+        use crate::gemm::engine::GemmPlan;
+        use crate::quant::{block_quant, fallback_quant, theta_for_rate,
+                           Criterion, Rounding, INT8_LEVELS};
+        use crate::util::bench::{bench, gops};
+        use crate::util::rng::Pcg64;
+        use crate::util::Mat;
+
+        let mut rng = Pcg64::new(0xCA11B);
+        let a = Mat::randn(dim, dim, 1.0, &mut rng);
+        let b = Mat::randn(dim, dim, 1.0, &mut rng);
+        let target_ms = 40;
+
+        let dense_plan = GemmPlan::new_dense(&a, &b, threads);
+        let s = bench(|| {
+            std::hint::black_box(dense_plan.execute());
+        }, target_ms);
+        let dense_gops = gops(dim, dim, dim, s.median_secs());
+
+        let qa = block_quant(&a, block, INT8_LEVELS, Rounding::Nearest);
+        let qb = block_quant(&b, block, INT8_LEVELS, Rounding::Nearest);
+        let int8_plan = GemmPlan::new_int8(&qa, &qb, threads);
+        let s = bench(|| {
+            std::hint::black_box(int8_plan.execute());
+        }, target_ms);
+        let int8_gops = gops(dim, dim, dim, s.median_secs());
+
+        let probe = fallback_quant(&a, f32::INFINITY, block, INT8_LEVELS,
+                                   Criterion::AbsMax);
+        let mut fallback = Vec::new();
+        for rate in [0.0f64, 0.25] {
+            let theta = theta_for_rate(&probe.metric, rate);
+            let fa = fallback_quant(&a, theta, block, INT8_LEVELS,
+                                    Criterion::AbsMax);
+            let plan = GemmPlan::new_fallback(&fa, &qb, &fa.u, threads);
+            let s = bench(|| {
+                std::hint::black_box(plan.execute());
+            }, target_ms);
+            fallback.push((fa.fallback_rate(),
+                           gops(dim, dim, dim, s.median_secs())));
+        }
+
+        SubstrateCalibration {
+            dims: (dim, dim, dim),
+            block,
+            threads,
+            dense_gops,
+            int8_gops,
+            fallback,
+        }
+    }
+
+    /// Measured slope of fallback overhead vs rate: extra time per unit
+    /// rate relative to the rate-0 kernel, clamped at 0 (paper Fig 8c:
+    /// overhead ∝ rate). Falls back to the model's implicit slope of
+    /// 1.0 when fewer than two samples exist.
+    pub fn fallback_overhead_per_rate(&self) -> f64 {
+        let (first, last) = match (self.fallback.first(),
+                                   self.fallback.last()) {
+            (Some(&f), Some(&l)) if l.0 > f.0 => (f, l),
+            _ => return 1.0,
+        };
+        // gops ∝ 1/time: time ratio = gops_lo / gops_hi
+        let time_ratio = first.1 / last.1;
+        ((time_ratio - 1.0) / (last.0 - first.0)).max(0.0)
+    }
+
+    /// Measured int8:dense throughput ratio on the substrate.
+    pub fn int8_speedup(&self) -> f64 {
+        self.int8_gops / self.dense_gops
+    }
+
+    /// GPU projection consuming the *measured* fallback slope instead
+    /// of the ad-hoc `(1 + rate)` compute factor of
+    /// [`Gpu::int8_gemm_secs`].
+    pub fn projected_int8_secs(&self, gpu: &Gpu, m: usize, n: usize,
+                               k: usize, kg: usize, rate: f64) -> f64 {
+        let base = gpu.int8_gemm_secs(m, n, k, kg, 0.0);
+        base * (1.0 + rate * self.fallback_overhead_per_rate())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -240,6 +349,26 @@ mod tests {
                 g.int8_gemm_tops_worst(2048, 2048, 2048, 128, rate);
             assert!(worst <= even + 1e-9, "rate {rate}");
         }
+    }
+
+    #[test]
+    fn substrate_calibration_measures_and_projects() {
+        let cal = SubstrateCalibration::measure(96, 16, 1);
+        assert!(cal.dense_gops > 0.0);
+        assert!(cal.int8_gops > 0.0);
+        assert_eq!(cal.fallback.len(), 2);
+        assert!(cal.fallback.iter().all(|&(_, g)| g > 0.0));
+        // achieved rates bracket the request reasonably
+        assert!(cal.fallback[0].0 < 0.05);
+        assert!(cal.fallback[1].0 > 0.1);
+        // slope is clamped non-negative, so projections are monotone
+        let slope = cal.fallback_overhead_per_rate();
+        assert!(slope >= 0.0, "slope {slope}");
+        let g = rtx4090();
+        let t0 = cal.projected_int8_secs(&g, 1024, 1024, 1024, 128, 0.0);
+        let t3 = cal.projected_int8_secs(&g, 1024, 1024, 1024, 128, 0.3);
+        assert!(t3 >= t0);
+        assert!(cal.int8_speedup() > 0.0);
     }
 
     #[test]

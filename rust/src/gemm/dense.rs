@@ -1,14 +1,27 @@
 //! Dense f32 reference GEMM — the "BF16 baseline" of the kernel benches.
 //!
-//! Blocked, unrolled, and parallelized over row panels; the comparison
-//! target every quantized kernel's speedup is measured against, playing
-//! the role of the paper's cuBLAS BF16 GEMM on this CPU testbed.
+//! `matmul` is a thin wrapper over the plan/execute engine
+//! (`gemm::engine`, `Precision::Dense`). The pre-engine row-parallel
+//! kernel is retained verbatim as [`matmul_baseline`]: it is the
+//! before/after comparison point of `benches/gemm_engine.rs` and the
+//! bit-identity oracle of `tests/engine_prop.rs`.
 
+use crate::gemm::engine::GemmPlan;
 use crate::util::threadpool::parallel_chunks;
 use crate::util::Mat;
 
 /// C = A (M x K) * B (K x N), f32, cache-blocked with 4-wide unroll.
+/// Plans and executes through the engine; output is bit-identical to
+/// [`matmul_baseline`] for every thread count.
 pub fn matmul(a: &Mat, b: &Mat, threads: usize) -> Mat {
+    GemmPlan::new_dense(a, b, threads).execute()
+}
+
+/// Retained seed implementation (pre-engine): row panels distributed by
+/// contiguous chunking, output rows written through a raw pointer.
+/// Kept as the honest baseline the engine is measured against — do not
+/// "improve" it.
+pub fn matmul_baseline(a: &Mat, b: &Mat, threads: usize) -> Mat {
     assert_eq!(a.cols, b.rows);
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let mut c = Mat::zeros(m, n);
@@ -28,9 +41,11 @@ pub fn matmul(a: &Mat, b: &Mat, threads: usize) -> Mat {
     c
 }
 
-/// crow += arow * B with 4-element inner unrolling over K.
+/// crow += arow * B with 4-element inner unrolling over K. Shared by
+/// the baseline above and the engine's dense single-row path — one
+/// authoritative kernel keeps them bit-identical by construction.
 #[inline]
-fn matvec_row(arow: &[f32], b: &Mat, crow: &mut [f32]) {
+pub(crate) fn matvec_row(arow: &[f32], b: &Mat, crow: &mut [f32]) {
     let n = b.cols;
     let k = b.rows;
     let kk = k & !3;
@@ -107,5 +122,21 @@ mod tests {
         let eye = Mat::from_fn(8, 8, |r, c| (r == c) as u32 as f32);
         let c = matmul(&a, &eye, 1);
         assert_eq!(c.data, a.data);
+    }
+
+    #[test]
+    fn wrapper_bit_identical_to_baseline() {
+        let mut rng = Pcg64::new(4);
+        for (m, k, n) in [(7, 9, 5), (16, 16, 16), (33, 65, 17),
+                          (64, 48, 32)] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            for threads in [1, 2, 4] {
+                let c_eng = matmul(&a, &b, threads);
+                let c_seed = matmul_baseline(&a, &b, threads);
+                assert_eq!(c_eng.data, c_seed.data,
+                           "({m},{k},{n}) threads={threads}");
+            }
+        }
     }
 }

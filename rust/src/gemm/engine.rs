@@ -1,0 +1,728 @@
+//! # Unified plan/execute GEMM engine
+//!
+//! One outer loop, three precisions, no duplicated kernels: this module
+//! replaces the separate `dense::matmul` / `int8::block_gemm` /
+//! `int8::fallback_gemm` triple-loops (retained as `*_baseline` oracles)
+//! with a [`GemmPlan`] built once per (operands, shapes, precision) and
+//! executed any number of times.
+//!
+//! ## Plan lifecycle
+//!
+//! ```text
+//!   quantize            plan (once)                 execute (per GEMM)
+//!   ─────────►  GemmPlan::new_{dense,int8,fallback} ─► plan.execute()
+//!                 │                                      │
+//!                 ├─ pack operands (cached on the        ├─ split C into
+//!                 │  quant structs, so a second plan     │  disjoint &mut
+//!                 │  over the same weights is free):     │  row panels
+//!                 │    A codes → f32, row-major          ├─ LPT-schedule
+//!                 │    B codes → f32 column panels       │  panels by weight
+//!                 └─ per-row-panel cost weights          └─ per-thread
+//!                    from the fallback u-mask               workspace, no
+//!                                                          alloc in hot loop
+//! ```
+//!
+//! Construction packs operands; execution allocates only the output and
+//! one small per-thread accumulator. Repeated GEMMs over the same
+//! operands (weights across microbatches, bench iterations) skip all
+//! conversion and packing — the caches live on [`BlockQuant`] /
+//! [`FallbackQuant`] themselves.
+//!
+//! ## Packing layout
+//!
+//! The B operand is repacked column-panel-contiguous ([`PanelPack`]):
+//!
+//! ```text
+//!   row-major B (stride = pcols)        panel pack (stride = width)
+//!   ┌────────┬────────┬──────┐          ┌──────────────┐
+//!   │ panel0 │ panel1 │ pan2 │          │ panel0 rows  │ contiguous
+//!   │  ....  │  ....  │ .... │   ──►    ├──────────────┤
+//!   │  ....  │  ....  │ .... │          │ panel1 rows  │ contiguous
+//!   └────────┴────────┴──────┘          ├──────────────┤
+//!                                       │ panel2 rows  │ contiguous
+//!                                       └──────────────┘
+//! ```
+//!
+//! The inner kernel streams one panel linearly (hardware-prefetch
+//! friendly, one TLB page run) instead of striding `4·pcols` bytes per
+//! K step. A's codes are row-major and already row-panel contiguous, so
+//! they are only converted to f32 (cached), not relaid.
+//!
+//! ## Microkernel and bit-exactness
+//!
+//! [`Precision`] selects the inner microkernel behind one shared outer
+//! loop (`bj` panels → row pairs → `bk` K-blocks). The per-element
+//! floating-point operation sequence is kept *identical* to the seed
+//! kernels — same 4-wide K grouping, same `acc` zero-fill, same
+//! zero-code skip in the K remainder, same per-K-block scale-FMA order —
+//! so engine outputs are **bit-identical** to the `*_baseline`
+//! implementations for every thread count and placement (asserted by
+//! `tests/engine_prop.rs`). Rows are processed in pairs sharing each
+//! loaded B row, which halves B-panel traffic without touching
+//! per-element operation order.
+//!
+//! ## Scheduling policy
+//!
+//! Fallback blocks make some C row panels up to `2x` as expensive
+//! (Algorithm 1 residual work). The scheduling unit is a *sub-panel*:
+//! a run of rows inside one block row (block rows are split ~4-way so
+//! even an 8-block-row GEMM yields ~32 schedulable units — enough for
+//! LPT to balance when the heavy rows cluster). The plan counts
+//! residual blocks per block row from the u-mask, weights each
+//! sub-panel `rows · (kb + fallbacks)`, and assigns sub-panels to
+//! workers with greedy LPT ([`weighted_buckets`]) instead of
+//! contiguous chunking. Under the paper's worst-case *Sequential*
+//! placement (Fig 8c) contiguous chunking leaves the trailing workers
+//! idle while the leading ones do double work; LPT keeps the makespan
+//! within the heaviest single sub-panel. Scheduling never changes
+//! results: each row's output depends only on its own deterministic
+//! loop order.
+//!
+//! Output safety: C is split into disjoint `&mut` row-panel slices up
+//! front and each worker takes ownership of its panels — no `AtomicPtr`
+//! hand-rolling, no aliasing, borrow-checked by construction.
+
+use std::sync::Arc;
+
+use crate::quant::{BlockQuant, FallbackQuant, PanelPack};
+use crate::util::threadpool::weighted_buckets;
+use crate::util::Mat;
+
+/// Which inner microkernel a plan runs (paper: BF16 baseline, Eq. 1
+/// block GEMM, Algorithm 1 fallback GEMM).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// f32 reference (the testbed's "BF16 baseline")
+    Dense,
+    /// per-block INT8 codes, f32 scale accumulation (Eq. 1)
+    Int8Block,
+    /// INT8 base + conditional INT8 residual per u-mask (Algorithm 1)
+    Fallback,
+}
+
+/// Residual operand of a fallback plan.
+struct Resid<'a> {
+    rf: Arc<Vec<f32>>,
+    r_scale: &'a [f32],
+    u: &'a [bool],
+}
+
+/// Mode-specific packed operands.
+enum Kernel<'a> {
+    Dense {
+        a: &'a Mat,
+        b: &'a Mat,
+    },
+    Int8 {
+        af: Arc<Vec<f32>>,
+        a_pcols: usize,
+        a_scale: &'a [f32],
+        bp: Arc<PanelPack>,
+        b_scale: &'a [f32],
+        resid: Option<Resid<'a>>,
+    },
+}
+
+/// Row-panel height used for scheduling the dense kernel.
+const DENSE_PANEL_ROWS: usize = 16;
+
+/// Scheduling-unit height for the int8 kernels: the largest divisor of
+/// the block size that splits each block row ~4-way (min 8 rows), so
+/// LPT has enough units to balance clustered fallback rows. Must
+/// divide `bs` so no unit straddles a block-row (scale) boundary.
+fn sched_rows_for(bs: usize) -> usize {
+    for d in [4usize, 2] {
+        if bs % d == 0 && bs / d >= 8 {
+            return bs / d;
+        }
+    }
+    bs
+}
+
+/// A prepared GEMM: packed operands + per-sub-panel schedule weights.
+/// Build once with one of the `new_*` constructors, run with
+/// [`execute`](GemmPlan::execute).
+pub struct GemmPlan<'a> {
+    mode: Precision,
+    threads: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    /// scheduling-unit height in rows (divides `bs` for int8 modes)
+    sched_rows: usize,
+    /// quantization block size (int8 modes; 0 for dense)
+    bs: usize,
+    /// K-blocks (int8 modes)
+    kb: usize,
+    /// N-panels (int8 modes)
+    nbk: usize,
+    /// per-sub-panel schedule weight (∝ expected cost)
+    weights: Vec<f64>,
+    kernel: Kernel<'a>,
+}
+
+impl<'a> GemmPlan<'a> {
+    /// Plan a dense f32 GEMM `C = A·B`.
+    pub fn new_dense(a: &'a Mat, b: &'a Mat, threads: usize)
+                     -> GemmPlan<'a> {
+        assert_eq!(a.cols, b.rows, "inner dims");
+        let (m, n, k) = (a.rows, b.cols, a.cols);
+        let rbp = m.div_ceil(DENSE_PANEL_ROWS).max(1);
+        let weights = (0..rbp)
+            .map(|ci| {
+                let rows = DENSE_PANEL_ROWS
+                    .min(m.saturating_sub(ci * DENSE_PANEL_ROWS));
+                rows as f64
+            })
+            .collect();
+        GemmPlan {
+            mode: Precision::Dense,
+            threads,
+            m,
+            n,
+            k,
+            sched_rows: DENSE_PANEL_ROWS,
+            bs: 0,
+            kb: 0,
+            nbk: 0,
+            weights,
+            kernel: Kernel::Dense { a, b },
+        }
+    }
+
+    /// Plan an INT8 block GEMM (paper Eq. 1).
+    pub fn new_int8(a: &'a BlockQuant, b: &'a BlockQuant,
+                    threads: usize) -> GemmPlan<'a> {
+        assert_eq!(a.cols, b.rows, "inner dims");
+        assert_eq!(a.block, b.block, "block size");
+        let (kb, nbk) = (a.cb(), b.cb());
+        let sched = sched_rows_for(a.block);
+        let weights = (0..a.rows.div_ceil(sched))
+            .map(|ci| {
+                let rows = sched.min(a.rows - ci * sched);
+                (rows * kb) as f64
+            })
+            .collect();
+        GemmPlan {
+            mode: Precision::Int8Block,
+            threads,
+            m: a.rows,
+            n: b.cols,
+            k: a.cols,
+            sched_rows: sched,
+            bs: a.block,
+            kb,
+            nbk,
+            weights,
+            kernel: Kernel::Int8 {
+                af: a.codes_f32(),
+                a_pcols: a.pcols,
+                a_scale: &a.scale,
+                bp: b.col_panels(),
+                b_scale: &b.scale,
+                resid: None,
+            },
+        }
+    }
+
+    /// Plan a mixed-precision fallback GEMM (paper Algorithm 1). `u` is
+    /// the per-block fallback mask — pass `&fa.u` or a
+    /// `remap_placement` result.
+    pub fn new_fallback(fa: &'a FallbackQuant, b: &'a BlockQuant,
+                        u: &'a [bool], threads: usize) -> GemmPlan<'a> {
+        let a = &fa.base;
+        assert_eq!(a.cols, b.rows, "inner dims");
+        assert_eq!(a.block, b.block, "block size");
+        assert_eq!(u.len(), a.rb() * a.cb(), "u-mask size");
+        let (kb, nbk) = (a.cb(), b.cb());
+        let sched = sched_rows_for(a.block);
+        // Fallback-aware weights: a residual block doubles that
+        // K-step's work for every row of its block row (Fig 8c cost
+        // model); each sub-panel inherits its block row's cost.
+        let weights = (0..a.rows.div_ceil(sched))
+            .map(|ci| {
+                let rows = sched.min(a.rows - ci * sched);
+                let bi = ci * sched / a.block;
+                let fb = u[bi * kb..(bi + 1) * kb]
+                    .iter()
+                    .filter(|&&x| x)
+                    .count();
+                (rows * (kb + fb)) as f64
+            })
+            .collect();
+        GemmPlan {
+            mode: Precision::Fallback,
+            threads,
+            m: a.rows,
+            n: b.cols,
+            k: a.cols,
+            sched_rows: sched,
+            bs: a.block,
+            kb,
+            nbk,
+            weights,
+            kernel: Kernel::Int8 {
+                af: a.codes_f32(),
+                a_pcols: a.pcols,
+                a_scale: &a.scale,
+                bp: b.col_panels(),
+                b_scale: &b.scale,
+                resid: Some(Resid {
+                    rf: fa.residual_f32(),
+                    r_scale: &fa.rscale,
+                    u,
+                }),
+            },
+        }
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.mode
+    }
+
+    /// (m, n, k) of the planned GEMM.
+    pub fn dims(&self) -> (usize, usize, usize) {
+        (self.m, self.n, self.k)
+    }
+
+    /// Per-sub-panel schedule weights (cost units; exposed for tests
+    /// and future cost-model wiring).
+    pub fn panel_weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    /// Total scheduled work in weight units, and the makespan the LPT
+    /// schedule achieves for this plan's thread count. The ratio is a
+    /// load-balance factor; currently consumed by tests only (the cost
+    /// model uses measured throughput via `SubstrateCalibration`).
+    pub fn schedule_makespan(&self) -> (f64, f64) {
+        let total: f64 = self.weights.iter().sum();
+        let threads = self.threads.clamp(1, self.weights.len().max(1));
+        let buckets = weighted_buckets(&self.weights, threads);
+        let makespan = buckets
+            .iter()
+            .map(|b| b.iter().map(|&i| self.weights[i]).sum::<f64>())
+            .fold(0.0f64, f64::max);
+        (total, makespan)
+    }
+
+    /// Run the plan: allocate C, split it into disjoint row panels,
+    /// schedule panels across threads, run the microkernels.
+    pub fn execute(&self) -> Mat {
+        let mut c = Mat::zeros(self.m, self.n);
+        if self.m == 0 || self.n == 0 || self.k == 0 {
+            return c;
+        }
+        // Split C into disjoint &mut sub-panel slices (no AtomicPtr):
+        // every sub-panel is `sched_rows * n` long except a shorter
+        // tail, which is exactly `chunks_mut` semantics. `sched_rows`
+        // divides the block size, so no slice straddles a block row.
+        let mut slots: Vec<Option<(usize, &mut [f32])>> = c
+            .data
+            .chunks_mut(self.sched_rows * self.n)
+            .enumerate()
+            .map(Some)
+            .collect();
+        debug_assert_eq!(slots.len(), self.weights.len());
+        let threads = self.threads.clamp(1, slots.len());
+        if threads <= 1 {
+            let mut acc = vec![0.0f32; self.acc_len()];
+            for slot in slots.iter_mut() {
+                let (bi, crows) = slot.take().unwrap();
+                self.run_panel(bi, crows, &mut acc);
+            }
+        } else {
+            let buckets = weighted_buckets(&self.weights, threads);
+            let mut work: Vec<Vec<(usize, &mut [f32])>> =
+                Vec::with_capacity(buckets.len());
+            for bucket in &buckets {
+                let mut list = Vec::with_capacity(bucket.len());
+                for &bi in bucket {
+                    list.push(slots[bi].take().unwrap());
+                }
+                work.push(list);
+            }
+            std::thread::scope(|s| {
+                for bucket in work {
+                    if bucket.is_empty() {
+                        continue;
+                    }
+                    s.spawn(move || {
+                        // One reusable workspace per worker; nothing
+                        // allocates inside the panel loops.
+                        let mut acc = vec![0.0f32; self.acc_len()];
+                        for (bi, crows) in bucket {
+                            self.run_panel(bi, crows, &mut acc);
+                        }
+                    });
+                }
+            });
+        }
+        c
+    }
+
+    /// Workspace length: two accumulator rows for the paired int8
+    /// microkernel; the dense kernel accumulates into C directly.
+    fn acc_len(&self) -> usize {
+        match self.mode {
+            Precision::Dense => 0,
+            _ => 2 * self.bs,
+        }
+    }
+
+    /// Compute one C sub-panel. `ci` is the sub-panel (chunk) index;
+    /// `crows` is its slice of C (`rows * n` elements, rows =
+    /// `sched_rows` except the tail).
+    fn run_panel(&self, ci: usize, crows: &mut [f32],
+                 acc: &mut [f32]) {
+        let rows = crows.len() / self.n;
+        match &self.kernel {
+            Kernel::Dense { a, b } => {
+                let r_lo = ci * self.sched_rows;
+                let mut rl = 0usize;
+                while rl < rows {
+                    if rl + 1 < rows {
+                        let pair = &mut crows[rl * self.n
+                                              ..(rl + 2) * self.n];
+                        let (c0, c1) = pair.split_at_mut(self.n);
+                        dense_rows2(
+                            a.row(r_lo + rl),
+                            a.row(r_lo + rl + 1),
+                            b,
+                            c0,
+                            c1,
+                        );
+                        rl += 2;
+                    } else {
+                        let crow = &mut crows[rl * self.n
+                                              ..(rl + 1) * self.n];
+                        crate::gemm::dense::matvec_row(
+                            a.row(r_lo + rl), b, crow);
+                        rl += 1;
+                    }
+                }
+            }
+            Kernel::Int8 { af, a_pcols, a_scale, bp, b_scale, resid } => {
+                let r_lo = ci * self.sched_rows;
+                // sched_rows divides bs, so the whole sub-panel lies
+                // in one block row and shares its scale row.
+                let bi = r_lo / self.bs;
+                self.run_panel_int8(
+                    bi, r_lo, crows, rows, acc, af, *a_pcols, a_scale,
+                    bp, b_scale, resid.as_ref(),
+                );
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_panel_int8(
+        &self, bi: usize, r_lo: usize, crows: &mut [f32], rows: usize,
+        acc: &mut [f32], af: &[f32], a_pcols: usize, a_scale: &[f32],
+        bp: &PanelPack, b_scale: &[f32], resid: Option<&Resid<'_>>,
+    ) {
+        let bs = self.bs;
+        let (acc0, acc1) = acc.split_at_mut(bs);
+        for bj in 0..self.nbk {
+            let width = bp.widths[bj];
+            let c_lo = bj * bs;
+            let panel = bp.panel(bj);
+            let mut rl = 0usize;
+            while rl < rows {
+                let pair = rl + 1 < rows;
+                if pair {
+                    let rowpair =
+                        &mut crows[rl * self.n..(rl + 2) * self.n];
+                    let (row0, row1) = rowpair.split_at_mut(self.n);
+                    let crow0 = &mut row0[c_lo..c_lo + width];
+                    let crow1 = &mut row1[c_lo..c_lo + width];
+                    for bk in 0..self.kb {
+                        let sa = a_scale[bi * self.kb + bk];
+                        let sb = b_scale[bk * self.nbk + bj];
+                        panel_dot2(
+                            af, a_pcols, r_lo + rl, bk * bs, bs,
+                            panel, width, acc0, acc1,
+                        );
+                        let w = sa * sb;
+                        scale_add(crow0, acc0, width, w);
+                        scale_add(crow1, acc1, width, w);
+                        if let Some(res) = resid {
+                            // Algorithm 1 lines 13-16: residual work
+                            // really skipped when u = 0.
+                            if res.u[bi * self.kb + bk] {
+                                let rs = res.r_scale[bi * self.kb + bk];
+                                panel_dot2(
+                                    &res.rf, a_pcols, r_lo + rl,
+                                    bk * bs, bs, panel, width, acc0,
+                                    acc1,
+                                );
+                                let rw = rs * sb;
+                                scale_add(crow0, acc0, width, rw);
+                                scale_add(crow1, acc1, width, rw);
+                            }
+                        }
+                    }
+                    rl += 2;
+                } else {
+                    let crow = &mut crows[rl * self.n + c_lo
+                                          ..rl * self.n + c_lo + width];
+                    for bk in 0..self.kb {
+                        let sa = a_scale[bi * self.kb + bk];
+                        let sb = b_scale[bk * self.nbk + bj];
+                        panel_dot(
+                            af, a_pcols, r_lo + rl, bk * bs, bs,
+                            panel, width, acc0,
+                        );
+                        let w = sa * sb;
+                        scale_add(crow, acc0, width, w);
+                        if let Some(res) = resid {
+                            if res.u[bi * self.kb + bk] {
+                                let rs = res.r_scale[bi * self.kb + bk];
+                                panel_dot(
+                                    &res.rf, a_pcols, r_lo + rl,
+                                    bk * bs, bs, panel, width, acc0,
+                                );
+                                let rw = rs * sb;
+                                scale_add(crow, acc0, width, rw);
+                            }
+                        }
+                    }
+                    rl += 1;
+                }
+            }
+        }
+    }
+}
+
+/// `crow[j] += acc[j] * w` — the per-K-block scale-FMA of Eq. 1.
+#[inline]
+fn scale_add(crow: &mut [f32], acc: &[f32], width: usize, w: f32) {
+    for (cv, &v) in crow.iter_mut().zip(acc[..width].iter()) {
+        *cv += v * w;
+    }
+}
+
+/// One-row block dot against a contiguous B panel:
+/// `acc[j] = Σ_k a[r, k0+k] · panel[k0+k, j]`, 4-unrolled over K.
+///
+/// Operation order is identical to the seed `block_row_dot_f32`
+/// (same 4-wide grouping, same zero-code skip in the remainder), so
+/// results are bit-identical — only the B addressing changed from
+/// strided to contiguous.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn panel_dot(
+    af: &[f32], a_stride: usize, r: usize, k0: usize, bs: usize,
+    panel: &[f32], width: usize, acc: &mut [f32],
+) {
+    acc[..width].fill(0.0);
+    let arow = &af[r * a_stride + k0..r * a_stride + k0 + bs];
+    let kk = bs & !3;
+    for k in (0..kk).step_by(4) {
+        let a0 = arow[k];
+        let a1 = arow[k + 1];
+        let a2 = arow[k + 2];
+        let a3 = arow[k + 3];
+        let b0 = &panel[(k0 + k) * width..][..width];
+        let b1 = &panel[(k0 + k + 1) * width..][..width];
+        let b2 = &panel[(k0 + k + 2) * width..][..width];
+        let b3 = &panel[(k0 + k + 3) * width..][..width];
+        for j in 0..width {
+            acc[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+        }
+    }
+    for k in kk..bs {
+        let av = arow[k];
+        if av == 0.0 {
+            continue;
+        }
+        let brow = &panel[(k0 + k) * width..][..width];
+        for j in 0..width {
+            acc[j] += av * brow[j];
+        }
+    }
+}
+
+/// Two-row block dot sharing each loaded B row between adjacent A rows
+/// (halves B-panel traffic). Per-row operation order matches
+/// [`panel_dot`] exactly, so outputs stay bit-identical.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn panel_dot2(
+    af: &[f32], a_stride: usize, r: usize, k0: usize, bs: usize,
+    panel: &[f32], width: usize, acc0: &mut [f32], acc1: &mut [f32],
+) {
+    acc0[..width].fill(0.0);
+    acc1[..width].fill(0.0);
+    let arow0 = &af[r * a_stride + k0..r * a_stride + k0 + bs];
+    let arow1 =
+        &af[(r + 1) * a_stride + k0..(r + 1) * a_stride + k0 + bs];
+    let kk = bs & !3;
+    for k in (0..kk).step_by(4) {
+        let a00 = arow0[k];
+        let a01 = arow0[k + 1];
+        let a02 = arow0[k + 2];
+        let a03 = arow0[k + 3];
+        let a10 = arow1[k];
+        let a11 = arow1[k + 1];
+        let a12 = arow1[k + 2];
+        let a13 = arow1[k + 3];
+        let b0 = &panel[(k0 + k) * width..][..width];
+        let b1 = &panel[(k0 + k + 1) * width..][..width];
+        let b2 = &panel[(k0 + k + 2) * width..][..width];
+        let b3 = &panel[(k0 + k + 3) * width..][..width];
+        for j in 0..width {
+            acc0[j] +=
+                a00 * b0[j] + a01 * b1[j] + a02 * b2[j] + a03 * b3[j];
+            acc1[j] +=
+                a10 * b0[j] + a11 * b1[j] + a12 * b2[j] + a13 * b3[j];
+        }
+    }
+    for k in kk..bs {
+        let brow = &panel[(k0 + k) * width..][..width];
+        let av0 = arow0[k];
+        if av0 != 0.0 {
+            for j in 0..width {
+                acc0[j] += av0 * brow[j];
+            }
+        }
+        let av1 = arow1[k];
+        if av1 != 0.0 {
+            for j in 0..width {
+                acc1[j] += av1 * brow[j];
+            }
+        }
+    }
+}
+
+/// Dense two-row kernel sharing each loaded B row; per-row operation
+/// order matches `dense::matvec_row` (the single-row kernel, shared
+/// with the baseline) exactly.
+#[inline]
+fn dense_rows2(arow0: &[f32], arow1: &[f32], b: &Mat,
+               crow0: &mut [f32], crow1: &mut [f32]) {
+    let n = b.cols;
+    let k = b.rows;
+    let kk = k & !3;
+    for kb in (0..kk).step_by(4) {
+        let a00 = arow0[kb];
+        let a01 = arow0[kb + 1];
+        let a02 = arow0[kb + 2];
+        let a03 = arow0[kb + 3];
+        let a10 = arow1[kb];
+        let a11 = arow1[kb + 1];
+        let a12 = arow1[kb + 2];
+        let a13 = arow1[kb + 3];
+        let b0 = &b.data[kb * n..(kb + 1) * n];
+        let b1 = &b.data[(kb + 1) * n..(kb + 2) * n];
+        let b2 = &b.data[(kb + 2) * n..(kb + 3) * n];
+        let b3 = &b.data[(kb + 3) * n..(kb + 4) * n];
+        for j in 0..n {
+            crow0[j] +=
+                a00 * b0[j] + a01 * b1[j] + a02 * b2[j] + a03 * b3[j];
+            crow1[j] +=
+                a10 * b0[j] + a11 * b1[j] + a12 * b2[j] + a13 * b3[j];
+        }
+    }
+    for kb in kk..k {
+        let av0 = arow0[kb];
+        let av1 = arow1[kb];
+        let brow = &b.data[kb * n..(kb + 1) * n];
+        for j in 0..n {
+            crow0[j] += av0 * brow[j];
+        }
+        for j in 0..n {
+            crow1[j] += av1 * brow[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::int8::{remap_placement, Placement};
+    use crate::quant::{block_quant, fallback_quant, Criterion, Rounding,
+                       INT8_LEVELS};
+    use crate::util::rng::Pcg64;
+
+    fn mats(m: usize, k: usize, n: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Pcg64::new(seed);
+        (Mat::randn(m, k, 1.0, &mut rng),
+         Mat::randn(k, n, 1.0, &mut rng))
+    }
+
+    #[test]
+    fn plan_reuse_is_deterministic() {
+        let (a, b) = mats(48, 33, 40, 3);
+        let qa = block_quant(&a, 16, INT8_LEVELS, Rounding::Nearest);
+        let qb = block_quant(&b, 16, INT8_LEVELS, Rounding::Nearest);
+        let plan = GemmPlan::new_int8(&qa, &qb, 2);
+        assert_eq!(plan.precision(), Precision::Int8Block);
+        assert_eq!(plan.dims(), (48, 40, 33));
+        let c1 = plan.execute();
+        let c2 = plan.execute();
+        assert_eq!(c1.data, c2.data);
+    }
+
+    #[test]
+    fn thread_counts_agree_bitwise() {
+        let (a, b) = mats(64, 48, 37, 5);
+        let qa = block_quant(&a, 16, INT8_LEVELS, Rounding::Nearest);
+        let qb = block_quant(&b, 16, INT8_LEVELS, Rounding::Nearest);
+        let c1 = GemmPlan::new_int8(&qa, &qb, 1).execute();
+        for threads in [2, 4, 7] {
+            let ct = GemmPlan::new_int8(&qa, &qb, threads).execute();
+            assert_eq!(c1.data, ct.data, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn fallback_weights_reflect_u_mask() {
+        let mut rng = Pcg64::new(9);
+        let mut a = Mat::randn(64, 64, 1.0, &mut rng);
+        for i in 0..12 {
+            a.data[i * 97 % a.data.len()] = 300.0;
+        }
+        let b = Mat::randn(64, 32, 1.0, &mut rng);
+        let fa = fallback_quant(&a, 50.0, 16, INT8_LEVELS,
+                                Criterion::AbsMax);
+        let qb = block_quant(&b, 16, INT8_LEVELS, Rounding::Nearest);
+        let useq = remap_placement(&fa, Placement::Sequential);
+        let plan = GemmPlan::new_fallback(&fa, &qb, &useq, 2);
+        let w = plan.panel_weights();
+        // Sequential placement packs fallback into leading panels, so
+        // the first panel must be the heaviest.
+        let total_fb: usize = useq.iter().filter(|&&x| x).count();
+        if total_fb > 0 {
+            assert!(w[0] > *w.last().unwrap(),
+                    "weights {w:?} with {total_fb} fallback blocks");
+        }
+        // Makespan with LPT must beat (or match) the contiguous-halves
+        // split implied by chunked scheduling.
+        let (total, makespan) = plan.schedule_makespan();
+        assert!(makespan >= total / 2.0 - 1e-9);
+        let contiguous: f64 = w[..w.len() / 2].iter().sum();
+        assert!(makespan <= contiguous.max(total - contiguous) + 1e-9);
+    }
+
+    #[test]
+    fn dense_plan_matches_row_kernels() {
+        // odd row count exercises the single-row tail path
+        let (a, b) = mats(17, 21, 13, 11);
+        let c = GemmPlan::new_dense(&a, &b, 2).execute();
+        let naive = crate::gemm::dense::matmul_naive(&a, &b);
+        let mut max = 0.0f32;
+        for (x, y) in c.data.iter().zip(naive.data.iter()) {
+            max = max.max((x - y).abs());
+        }
+        assert!(max < 1e-3, "diff {max}");
+    }
+
+    #[test]
+    fn empty_dims_yield_zero_matrix() {
+        let a = Mat::zeros(0, 8);
+        let b = Mat::zeros(8, 4);
+        let c = GemmPlan::new_dense(&a, &b, 4).execute();
+        assert_eq!((c.rows, c.cols), (0, 4));
+    }
+}

@@ -12,16 +12,24 @@
 //! throughput exhibits the true cost structure: dequant overhead
 //! ∝ 1/block-size (Fig 1b) and fallback overhead ∝ fallback rate
 //! (Fig 8c).
+//!
+//! `block_gemm` / `fallback_gemm` are thin wrappers over the
+//! plan/execute engine (`gemm::engine`); the pre-engine kernels are
+//! retained verbatim as [`block_gemm_baseline`] /
+//! [`fallback_gemm_baseline`] — the before/after comparison points of
+//! `benches/gemm_engine.rs` and the bit-identity oracles of
+//! `tests/engine_prop.rs`.
 
+use crate::gemm::engine::GemmPlan;
 use crate::quant::{BlockQuant, FallbackQuant};
 use crate::util::threadpool::parallel_chunks;
 use crate::util::Mat;
 
-/// Convert int8 codes to f32 once per GEMM call. Products and in-block
-/// sums of int8 codes stay below 2^24, so the f32 inner kernel is
-/// *bit-exact* to int32 accumulation while vectorizing an order of
-/// magnitude better on CPUs without int8 dot ISA (see EXPERIMENTS.md
-/// §Perf: 5.5 -> ~18 Gops on this testbed).
+/// Convert int8 codes to f32 once per GEMM call (baseline path only;
+/// the engine uses the cached views on the quant structs). Products and
+/// in-block sums of int8 codes stay below 2^24, so the f32 inner kernel
+/// is *bit-exact* to int32 accumulation while vectorizing an order of
+/// magnitude better on CPUs without int8 dot ISA.
 fn codes_to_f32(q: &[i8]) -> Vec<f32> {
     q.iter().map(|&v| v as f32).collect()
 }
@@ -63,8 +71,18 @@ fn block_row_dot_f32(
 
 /// C = deq(A) * deq(B) with per-block INT8 codes (paper Eq. 1).
 /// `a` blocks are (M x K), `b` blocks are (K x N); both must share the
-/// same block size.
+/// same block size. Plans and executes through the engine; output is
+/// bit-identical to [`block_gemm_baseline`] for every thread count.
 pub fn block_gemm(a: &BlockQuant, b: &BlockQuant, threads: usize) -> Mat {
+    GemmPlan::new_int8(a, b, threads).execute()
+}
+
+/// Retained seed implementation (pre-engine): per-call code conversion,
+/// strided B access, contiguous row-panel chunking, raw-pointer output
+/// rows. Kept as the honest baseline the engine is measured against —
+/// do not "improve" it.
+pub fn block_gemm_baseline(a: &BlockQuant, b: &BlockQuant,
+                           threads: usize) -> Mat {
     assert_eq!(a.cols, b.rows, "inner dims");
     assert_eq!(a.block, b.block, "block size");
     let bs = a.block;
@@ -176,9 +194,21 @@ pub fn remap_placement(fq: &FallbackQuant, placement: Placement) -> Vec<bool> {
 }
 
 /// Mixed-precision fallback GEMM (Algorithm 1): residual blocks of A are
-/// loaded and multiplied **only when u(i,k) = 1**.
+/// loaded and multiplied **only when u(i,k) = 1**. Plans and executes
+/// through the engine (fallback-aware scheduling); output is
+/// bit-identical to [`fallback_gemm_baseline`] for every thread count
+/// and placement.
 pub fn fallback_gemm(fa: &FallbackQuant, b: &BlockQuant, u: &[bool],
                      threads: usize) -> Mat {
+    GemmPlan::new_fallback(fa, b, u, threads).execute()
+}
+
+/// Retained seed implementation (pre-engine) of the fallback GEMM; see
+/// [`block_gemm_baseline`]. Row panels are chunked contiguously, so
+/// Sequential placement concentrates the residual work on the first
+/// worker — the imbalance the engine's weighted schedule removes.
+pub fn fallback_gemm_baseline(fa: &FallbackQuant, b: &BlockQuant,
+                              u: &[bool], threads: usize) -> Mat {
     let a = &fa.base;
     assert_eq!(a.cols, b.rows);
     assert_eq!(a.block, b.block);
@@ -315,6 +345,43 @@ mod tests {
         let qb = block_quant(&b, 16, INT8_LEVELS, Rounding::Nearest);
         assert_eq!(block_gemm(&qa, &qb, 1).data,
                    block_gemm(&qa, &qb, 4).data);
+    }
+
+    #[test]
+    fn wrapper_bit_identical_to_baseline() {
+        let (a, b) = mats(40, 33, 25, 21);
+        let qa = block_quant(&a, 16, INT8_LEVELS, Rounding::Nearest);
+        let qb = block_quant(&b, 16, INT8_LEVELS, Rounding::Nearest);
+        for threads in [1, 2, 4] {
+            assert_eq!(block_gemm(&qa, &qb, threads).data,
+                       block_gemm_baseline(&qa, &qb, threads).data,
+                       "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn fallback_wrapper_bit_identical_to_baseline() {
+        let mut rng = Pcg64::new(23);
+        let mut a = Mat::randn(48, 48, 1.0, &mut rng);
+        for _ in 0..8 {
+            let i = rng.below(a.data.len());
+            a.data[i] = 200.0;
+        }
+        let b = Mat::randn(48, 33, 1.0, &mut rng);
+        let fa = fallback_quant(&a, 30.0, 16, INT8_LEVELS,
+                                Criterion::AbsMax);
+        let qb = block_quant(&b, 16, INT8_LEVELS, Rounding::Nearest);
+        for placement in [Placement::Natural, Placement::Random(5),
+                          Placement::Sequential] {
+            let u = remap_placement(&fa, placement);
+            for threads in [1, 2, 4] {
+                assert_eq!(
+                    fallback_gemm(&fa, &qb, &u, threads).data,
+                    fallback_gemm_baseline(&fa, &qb, &u, threads).data,
+                    "{placement:?} threads={threads}"
+                );
+            }
+        }
     }
 
     #[test]

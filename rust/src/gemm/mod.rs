@@ -1,16 +1,25 @@
 //! CPU blocked-GEMM substrate: f32 reference, INT8 block GEMM (Eq. 1),
 //! and the fallback GEMM (Algorithm 1) with real conditional skipping.
 //!
+//! All three precisions now run through the unified plan/execute
+//! engine in [`engine`] (packed operands, reusable workspaces,
+//! fallback-aware scheduling); the historical free functions remain as
+//! thin wrappers, and the pre-engine kernels are retained as
+//! `*_baseline` oracles/benchmark baselines.
+//!
 //! These kernels give *measured* cost structure on this testbed (group
 //! size vs dequant overhead, fallback rate vs extra work, placement vs
 //! load balance); `costmodel` projects the same structure onto the
 //! paper's GPUs.
 
 pub mod dense;
+pub mod engine;
 pub mod int8;
 
-pub use dense::{matmul, matmul_naive};
-pub use int8::{block_gemm, fallback_gemm, remap_placement, Placement};
+pub use dense::{matmul, matmul_baseline, matmul_naive};
+pub use engine::{GemmPlan, Precision};
+pub use int8::{block_gemm, block_gemm_baseline, fallback_gemm,
+               fallback_gemm_baseline, remap_placement, Placement};
 
 use crate::quant::{block_quant, fallback_quant, Criterion, Rounding,
                    INT8_LEVELS};

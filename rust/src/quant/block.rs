@@ -9,13 +9,57 @@
 //! Values are stored as `i8` here (the real packed format) plus f32
 //! scales per block.
 
+use std::sync::{Arc, OnceLock};
+
 use crate::util::rng::Pcg64;
 use crate::util::Mat;
 
 pub const INT8_LEVELS: f32 = 127.0;
 
+/// Column-panel-contiguous f32 view of the int8 codes, the layout the
+/// GEMM engine consumes for its **B** operand (see `gemm::engine` docs).
+///
+/// Panel `bj` covers logical columns `bj*block .. min((bj+1)*block,
+/// cols)` and stores all `prows` padded rows of that column strip
+/// contiguously (row-major within the panel, stride = panel width). The
+/// inner GEMM kernel then streams one contiguous panel instead of
+/// striding across the full matrix width.
+#[derive(Debug, Clone)]
+pub struct PanelPack {
+    /// panel (block) size the pack was built for
+    pub block: usize,
+    /// logical (unpadded) column count
+    pub cols: usize,
+    /// padded row count — rows stored per panel
+    pub prows: usize,
+    /// offset of panel `bj` in `data`
+    pub starts: Vec<usize>,
+    /// logical width of panel `bj` (last panel may be narrower)
+    pub widths: Vec<usize>,
+    /// f32 codes, panel-major
+    pub data: Vec<f32>,
+}
+
+impl PanelPack {
+    /// The contiguous rows of panel `bj` (`prows * widths[bj]` floats).
+    #[inline]
+    pub fn panel(&self, bj: usize) -> &[f32] {
+        let w = self.widths[bj];
+        &self.data[self.starts[bj]..self.starts[bj] + self.prows * w]
+    }
+}
+
 /// Block-quantized matrix: q holds int8 codes in row-major order of the
 /// *padded* (block-aligned) matrix; scales/absmax are (rb x cb).
+///
+/// Caching invariant: the packed-f32 views handed out by [`codes_f32`]
+/// and [`col_panels`] are computed once and reused for every subsequent
+/// GEMM over the same operand (weights in particular), so `q` must not
+/// be mutated after the first GEMM — treat a `BlockQuant` as frozen
+/// once built.
+///
+/// [`codes_f32`]: BlockQuant::codes_f32
+/// [`col_panels`]: BlockQuant::col_panels
 #[derive(Debug, Clone)]
 pub struct BlockQuant {
     pub rows: usize,
@@ -27,6 +71,10 @@ pub struct BlockQuant {
     pub q: Vec<i8>,
     pub scale: Vec<f32>,
     pub absmax: Vec<f32>,
+    /// lazily cached row-major f32 copy of `q`
+    f32_cache: OnceLock<Arc<Vec<f32>>>,
+    /// lazily cached column-panel pack of `q`
+    panel_cache: OnceLock<Arc<PanelPack>>,
 }
 
 impl BlockQuant {
@@ -65,6 +113,55 @@ impl BlockQuant {
     /// Stored size in bytes (int8 codes + f32 scales) — ACT-MEM accounting.
     pub fn bytes(&self) -> usize {
         self.q.len() + 4 * self.scale.len()
+    }
+
+    /// Cached f32 copy of the int8 codes (same padded row-major layout).
+    ///
+    /// Products and in-block sums of int8 codes stay below 2^24, so f32
+    /// kernels over this view are bit-exact to int32 accumulation while
+    /// vectorizing far better on CPUs without an int8 dot ISA. The copy
+    /// is made on first use and shared by every later GEMM — repeated
+    /// GEMMs over the same operand (e.g. weights) skip re-conversion.
+    pub fn codes_f32(&self) -> Arc<Vec<f32>> {
+        self.f32_cache
+            .get_or_init(|| {
+                Arc::new(self.q.iter().map(|&v| v as f32).collect())
+            })
+            .clone()
+    }
+
+    /// Cached column-panel pack of the codes — the B-operand layout of
+    /// `gemm::engine` (see [`PanelPack`]). Built on first use.
+    pub fn col_panels(&self) -> Arc<PanelPack> {
+        self.panel_cache
+            .get_or_init(|| {
+                let bs = self.block;
+                let cb = self.cb();
+                let mut starts = Vec::with_capacity(cb);
+                let mut widths = Vec::with_capacity(cb);
+                let mut data = Vec::with_capacity(self.prows * self.cols);
+                for bj in 0..cb {
+                    let c_lo = bj * bs;
+                    let c_hi = ((bj + 1) * bs).min(self.cols);
+                    let width = c_hi - c_lo;
+                    starts.push(data.len());
+                    widths.push(width);
+                    for k in 0..self.prows {
+                        let row = &self.q[k * self.pcols + c_lo
+                                          ..k * self.pcols + c_hi];
+                        data.extend(row.iter().map(|&v| v as f32));
+                    }
+                }
+                Arc::new(PanelPack {
+                    block: bs,
+                    cols: self.cols,
+                    prows: self.prows,
+                    starts,
+                    widths,
+                    data,
+                })
+            })
+            .clone()
     }
 }
 
@@ -141,6 +238,8 @@ pub fn block_quant(x: &Mat, block: usize, levels: f32,
         q,
         scale,
         absmax,
+        f32_cache: OnceLock::new(),
+        panel_cache: OnceLock::new(),
     }
 }
 
@@ -285,6 +384,35 @@ mod tests {
         for (a, v) in acc.iter().zip(&x.data) {
             assert!((a / trials as f64 - *v as f64).abs() < tol + 1e-6);
         }
+    }
+
+    #[test]
+    fn packed_views_match_codes() {
+        let x = randmat(40, 41, 9); // non-multiple-of-block shape
+        let bq = block_quant(&x, 16, INT8_LEVELS, Rounding::Nearest);
+        let f = bq.codes_f32();
+        assert_eq!(f.len(), bq.q.len());
+        for (a, &b) in f.iter().zip(bq.q.iter()) {
+            assert_eq!(*a, b as f32);
+        }
+        // cache: same allocation returned on the second call
+        assert!(Arc::ptr_eq(&f, &bq.codes_f32()));
+
+        let p = bq.col_panels();
+        assert_eq!(p.widths.len(), bq.cb());
+        assert_eq!(p.widths.iter().sum::<usize>(), bq.cols);
+        for bj in 0..bq.cb() {
+            let panel = p.panel(bj);
+            let (c_lo, w) = (bj * bq.block, p.widths[bj]);
+            for k in 0..bq.prows {
+                for j in 0..w {
+                    assert_eq!(panel[k * w + j],
+                               bq.q[k * bq.pcols + c_lo + j] as f32,
+                               "panel {bj} row {k} col {j}");
+                }
+            }
+        }
+        assert!(Arc::ptr_eq(&p, &bq.col_panels()));
     }
 
     #[test]

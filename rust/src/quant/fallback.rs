@@ -5,6 +5,8 @@
 //! decided per block by a selectable criterion (AbsMax / L1 / L1-Rel)
 //! against a threshold θ maintained by the delay-threshold controller.
 
+use std::sync::{Arc, OnceLock};
+
 use crate::util::Mat;
 
 use super::block::{block_quant, safe_scale, BlockQuant, Rounding};
@@ -20,6 +22,9 @@ pub enum Criterion {
     L1Rel,
 }
 
+/// Caching invariant: like [`BlockQuant`], the packed residual view
+/// from [`residual_f32`](FallbackQuant::residual_f32) is built once —
+/// treat the struct as frozen after construction.
 #[derive(Debug, Clone)]
 pub struct FallbackQuant {
     pub base: BlockQuant,
@@ -30,6 +35,8 @@ pub struct FallbackQuant {
     pub u: Vec<bool>,
     /// value of the selection metric per block
     pub metric: Vec<f32>,
+    /// lazily cached row-major f32 copy of `rq`
+    rf32_cache: OnceLock<Arc<Vec<f32>>>,
 }
 
 impl FallbackQuant {
@@ -63,6 +70,16 @@ impl FallbackQuant {
         let b2 = self.base.block * self.base.block;
         let fb_blocks = self.u.iter().filter(|&&x| x).count();
         self.base.bytes() + fb_blocks * (b2 + 4)
+    }
+
+    /// Cached f32 copy of the residual codes (same padded row-major
+    /// layout as `base.q`); built once, shared by every later GEMM.
+    pub fn residual_f32(&self) -> Arc<Vec<f32>> {
+        self.rf32_cache
+            .get_or_init(|| {
+                Arc::new(self.rq.iter().map(|&v| v as f32).collect())
+            })
+            .clone()
     }
 }
 
@@ -121,27 +138,65 @@ pub fn fallback_quant(x: &Mat, theta: f32, block: usize, levels: f32,
             }
         }
     }
-    FallbackQuant { base, rq, rscale, u, metric }
+    FallbackQuant {
+        base,
+        rq,
+        rscale,
+        u,
+        metric,
+        rf32_cache: OnceLock::new(),
+    }
 }
 
-/// θ that yields (approximately) the requested fallback rate: the
-/// (1-rate) quantile of the per-block metric. Used by benches to pin
-/// rates exactly; training uses the delay controller instead (Alg 2).
+/// θ that yields (as closely as achievable) the requested fallback
+/// rate under the strictly-greater selection rule `u = metric > θ`.
+/// Used by benches to pin rates exactly; training uses the delay
+/// controller instead (Alg 2).
+///
+/// Because selection is a scalar threshold, blocks sharing one metric
+/// value fall back (or not) together — with duplicated values no θ can
+/// split a tie group, and the old (1-rate)-quantile pick could land a
+/// whole group on the wrong side of θ, overshooting the request. This
+/// version enumerates every achievable rate (one per distinct metric
+/// value, plus 0 and 1) and returns the θ whose achieved rate is
+/// closest to `rate`; exact-distance ties break deterministically
+/// toward the *lower* achieved rate (fallback work is the cost being
+/// budgeted, so when in doubt spend less).
 pub fn theta_for_rate(metrics: &[f32], rate: f64) -> f32 {
     if metrics.is_empty() {
         return f32::INFINITY;
     }
+    let n = metrics.len();
     let mut sorted = metrics.to_vec();
     sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let k = ((1.0 - rate) * sorted.len() as f64).floor() as usize;
-    if k >= sorted.len() {
-        f32::INFINITY
-    } else if k == 0 {
-        -f32::INFINITY
-    } else {
-        // strictly-greater comparison: pick midpoint below element k
-        sorted[k - 1]
+
+    // θ = +inf achieves rate 0; θ = last occurrence of value v achieves
+    // (elements strictly greater than v) / n; θ = -inf achieves rate 1.
+    // Walking values in ascending order visits achieved rates in
+    // *descending* order, so track the best candidate seen.
+    let mut best_theta = f32::INFINITY;
+    let mut best_err = rate; // achieved 0 at θ = +inf
+    let mut best_rate = 0.0f64;
+    let mut consider = |theta: f32, achieved: f64| {
+        let err = (achieved - rate).abs();
+        if err < best_err || (err == best_err && achieved < best_rate) {
+            best_theta = theta;
+            best_err = err;
+            best_rate = achieved;
+        }
+    };
+    let mut i = 0;
+    while i < n {
+        let v = sorted[i];
+        let mut j = i;
+        while j + 1 < n && sorted[j + 1] == v {
+            j += 1;
+        }
+        consider(v, (n - j - 1) as f64 / n as f64);
+        i = j + 1;
     }
+    consider(f32::NEG_INFINITY, 1.0);
+    best_theta
 }
 
 #[cfg(test)]
@@ -233,6 +288,36 @@ mod tests {
             assert!((got - rate).abs() <= 1.0 / 64.0 + 1e-9,
                     "rate {rate} got {got}");
         }
+    }
+
+    #[test]
+    fn theta_for_rate_ties_never_overshoot_nearest() {
+        // Three tie groups: 1.0 x3, 2.0 x3, 3.0 x2. Achievable fallback
+        // rates under `metric > theta` are only {0, 2/8, 5/8, 1}.
+        let metrics = [1.0f32, 1.0, 1.0, 2.0, 2.0, 2.0, 3.0, 3.0];
+        let achieved = |theta: f32| {
+            metrics.iter().filter(|&&m| m > theta).count() as f64
+                / metrics.len() as f64
+        };
+        // exact hits
+        assert_eq!(achieved(theta_for_rate(&metrics, 0.25)), 0.25);
+        assert_eq!(achieved(theta_for_rate(&metrics, 0.625)), 0.625);
+        assert_eq!(achieved(theta_for_rate(&metrics, 0.0)), 0.0);
+        assert_eq!(achieved(theta_for_rate(&metrics, 1.0)), 1.0);
+        // between achievable rates: picks the nearest, never a whole
+        // tie-group past it (0.3 is nearer 2/8=0.25 than 5/8)
+        assert_eq!(achieved(theta_for_rate(&metrics, 0.3)), 0.25);
+        // equidistant from 0.25 and 0.625 at 0.4375: lower rate wins
+        assert_eq!(achieved(theta_for_rate(&metrics, 0.4375)), 0.25);
+        // all-equal metrics: only rates 0 and 1 are achievable
+        let flat = [5.0f32; 6];
+        let t = theta_for_rate(&flat, 0.4);
+        assert_eq!(flat.iter().filter(|&&m| m > t).count(), 0);
+        let t1 = theta_for_rate(&flat, 0.9);
+        assert_eq!(flat.iter().filter(|&&m| m > t1).count(), 6);
+        // determinism
+        assert_eq!(theta_for_rate(&metrics, 0.3).to_bits(),
+                   theta_for_rate(&metrics, 0.3).to_bits());
     }
 
     #[test]

@@ -11,8 +11,8 @@ pub mod granularity;
 pub mod group;
 pub mod metrics;
 
-pub use block::{block_quant, int16_block_quant, BlockQuant, Rounding,
-                INT8_LEVELS};
+pub use block::{block_quant, int16_block_quant, BlockQuant, PanelPack,
+                Rounding, INT8_LEVELS};
 pub use fallback::{fallback_quant, theta_for_rate, Criterion,
                    FallbackQuant};
 pub use granularity::{granular_quant, switchback_matmul, Granularity};

@@ -43,6 +43,47 @@ where
     });
 }
 
+/// Partition `weights.len()` items into at most `threads` buckets with
+/// balanced total weight, using greedy LPT (longest-processing-time)
+/// assignment: items are visited heaviest-first and each goes to the
+/// currently lightest bucket.
+///
+/// Deterministic: weight ties visit the lower index first, and load
+/// ties pick the lower bucket index; each bucket's item list is
+/// returned sorted ascending (cache-friendly sweep order). The GEMM
+/// engine uses this to balance fallback-heavy C row panels (paper
+/// Fig 8c, Sequential placement) across workers.
+pub fn weighted_buckets(weights: &[f64], threads: usize) -> Vec<Vec<usize>> {
+    let n = weights.len();
+    let threads = threads.clamp(1, n.max(1));
+    let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); threads];
+    if n == 0 {
+        return buckets;
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        weights[b]
+            .partial_cmp(&weights[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut load = vec![0.0f64; threads];
+    for i in order {
+        let mut t = 0usize;
+        for (j, &l) in load.iter().enumerate().skip(1) {
+            if l < load[t] {
+                t = j;
+            }
+        }
+        buckets[t].push(i);
+        load[t] += weights[i].max(0.0);
+    }
+    for b in &mut buckets {
+        b.sort_unstable();
+    }
+    buckets
+}
+
 /// Map `f` over `0..n`, collecting results in index order.
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
@@ -97,5 +138,45 @@ mod tests {
     fn map_preserves_order() {
         let out = parallel_map(64, 4, |i| i * i);
         assert_eq!(out, (0..64).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn weighted_buckets_cover_and_balance() {
+        // Sequential-placement shape: two heavy panels up front.
+        let w = [2.0, 2.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0];
+        let buckets = weighted_buckets(&w, 2);
+        let mut all: Vec<usize> = buckets.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..8).collect::<Vec<_>>());
+        let loads: Vec<f64> = buckets
+            .iter()
+            .map(|b| b.iter().map(|&i| w[i]).sum())
+            .collect();
+        // LPT splits 10.0 of work into 5.0 + 5.0; contiguous halves
+        // would give 7.0 + 3.0.
+        assert_eq!(loads, vec![5.0, 5.0]);
+    }
+
+    #[test]
+    fn weighted_buckets_deterministic_and_clamped() {
+        let w = [1.0; 5];
+        assert_eq!(weighted_buckets(&w, 2), weighted_buckets(&w, 2));
+        // more threads than items: each bucket holds at most one item
+        let b = weighted_buckets(&w, 16);
+        assert_eq!(b.len(), 5);
+        assert!(b.iter().all(|x| x.len() == 1));
+        assert!(weighted_buckets(&[], 4).iter().all(|x| x.is_empty()));
+    }
+
+    #[test]
+    fn weighted_buckets_partition_any_thread_count() {
+        let w: Vec<f64> = (0..100).map(|i| 1.0 + (i % 7) as f64).collect();
+        for threads in [1, 2, 4, 13] {
+            let buckets = weighted_buckets(&w, threads);
+            let mut all: Vec<usize> = buckets.concat();
+            all.sort_unstable();
+            assert_eq!(all, (0..100).collect::<Vec<_>>(),
+                       "threads={threads}");
+        }
     }
 }

@@ -1,0 +1,128 @@
+//! Property tests for the plan/execute GEMM engine: across thread
+//! counts (1/2/4), all three `Placement` scenarios, and
+//! non-multiple-of-block shapes, the engine must be **bit-identical**
+//! to the retained pre-engine baselines (`matmul_baseline`,
+//! `block_gemm_baseline`, `fallback_gemm_baseline`).
+//!
+//! Bitwise equality (not approximate) is the contract: the engine
+//! changed operand layout and scheduling but not one floating-point
+//! operation's order, so any single-bit diff is a real regression.
+
+use dbfq::gemm::{
+    block_gemm, block_gemm_baseline, fallback_gemm,
+    fallback_gemm_baseline, matmul, matmul_baseline, remap_placement,
+    GemmPlan, Placement, Precision,
+};
+use dbfq::prop_assert;
+use dbfq::quant::{block_quant, fallback_quant, theta_for_rate,
+                  Criterion, Rounding, INT8_LEVELS};
+use dbfq::util::testing::forall;
+use dbfq::util::Mat;
+
+const THREADS: [usize; 3] = [1, 2, 4];
+const BLOCK: usize = 16;
+
+#[test]
+fn prop_dense_engine_bit_identical() {
+    forall("engine-dense-vs-baseline", 12, |g| {
+        // deliberately awkward shapes (primes, 1-row, tails)
+        let m = g.usize_in(1, 40);
+        let k = g.usize_in(1, 40);
+        let n = g.usize_in(1, 40);
+        let a = Mat::from_vec(m, k, g.vec_normal(m * k, 1.0));
+        let b = Mat::from_vec(k, n, g.vec_normal(k * n, 1.0));
+        for threads in THREADS {
+            let c_eng = matmul(&a, &b, threads);
+            let c_seed = matmul_baseline(&a, &b, threads);
+            prop_assert!(
+                c_eng.data == c_seed.data,
+                "dense mismatch ({m},{k},{n}) threads={threads}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_int8_engine_bit_identical() {
+    forall("engine-int8-vs-baseline", 12, |g| {
+        // non-multiple-of-block shapes included (+7 offsets)
+        let m = BLOCK * g.usize_in(1, 3) + g.usize_in(0, 7);
+        let k = BLOCK * g.usize_in(1, 3) + g.usize_in(0, 7);
+        let n = BLOCK * g.usize_in(1, 3) + g.usize_in(0, 7);
+        let a =
+            Mat::from_vec(m, k, g.vec_outliers(m * k, 1.0, 4, 120.0));
+        let b = Mat::from_vec(k, n, g.vec_normal(k * n, 1.0));
+        let qa = block_quant(&a, BLOCK, INT8_LEVELS, Rounding::Nearest);
+        let qb = block_quant(&b, BLOCK, INT8_LEVELS, Rounding::Nearest);
+        for threads in THREADS {
+            let c_eng = block_gemm(&qa, &qb, threads);
+            let c_seed = block_gemm_baseline(&qa, &qb, threads);
+            prop_assert!(
+                c_eng.data == c_seed.data,
+                "int8 mismatch ({m},{k},{n}) threads={threads}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fallback_engine_bit_identical_all_placements() {
+    forall("engine-fallback-vs-baseline", 10, |g| {
+        let m = BLOCK * g.usize_in(1, 3) + g.usize_in(0, 7);
+        let k = BLOCK * g.usize_in(1, 3) + g.usize_in(0, 7);
+        let n = BLOCK * g.usize_in(1, 3) + g.usize_in(0, 7);
+        let a =
+            Mat::from_vec(m, k, g.vec_outliers(m * k, 1.0, 6, 150.0));
+        let b = Mat::from_vec(k, n, g.vec_normal(k * n, 1.0));
+        let probe = fallback_quant(&a, f32::INFINITY, BLOCK,
+                                   INT8_LEVELS, Criterion::AbsMax);
+        // a mid-range rate so all placements differ meaningfully
+        let theta = theta_for_rate(&probe.metric, 0.3);
+        let fa = fallback_quant(&a, theta, BLOCK, INT8_LEVELS,
+                                Criterion::AbsMax);
+        let qb = block_quant(&b, BLOCK, INT8_LEVELS, Rounding::Nearest);
+        for placement in [Placement::Natural, Placement::Random(11),
+                          Placement::Sequential] {
+            let u = remap_placement(&fa, placement);
+            for threads in THREADS {
+                let c_eng = fallback_gemm(&fa, &qb, &u, threads);
+                let c_seed =
+                    fallback_gemm_baseline(&fa, &qb, &u, threads);
+                prop_assert!(
+                    c_eng.data == c_seed.data,
+                    "fallback mismatch ({m},{k},{n}) \
+                     threads={threads} placement={placement:?}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plan_reuse_matches_fresh_plans() {
+    // A plan executed twice and two plans over the same (cached)
+    // operands must agree bitwise — the packed-view caches on the
+    // quant structs must not change results.
+    forall("engine-plan-reuse", 8, |g| {
+        let m = BLOCK * g.usize_in(1, 2) + g.usize_in(0, 7);
+        let k = BLOCK * g.usize_in(1, 2);
+        let n = BLOCK * g.usize_in(1, 2) + g.usize_in(0, 7);
+        let a =
+            Mat::from_vec(m, k, g.vec_outliers(m * k, 1.0, 3, 100.0));
+        let b = Mat::from_vec(k, n, g.vec_normal(k * n, 1.0));
+        let qa = block_quant(&a, BLOCK, INT8_LEVELS, Rounding::Nearest);
+        let qb = block_quant(&b, BLOCK, INT8_LEVELS, Rounding::Nearest);
+        let plan = GemmPlan::new_int8(&qa, &qb, 2);
+        prop_assert!(plan.precision() == Precision::Int8Block,
+                     "precision");
+        let c1 = plan.execute();
+        let c2 = plan.execute();
+        let c3 = GemmPlan::new_int8(&qa, &qb, 3).execute();
+        prop_assert!(c1.data == c2.data, "re-execute differs");
+        prop_assert!(c1.data == c3.data, "fresh plan differs");
+        Ok(())
+    });
+}

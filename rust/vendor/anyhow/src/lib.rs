@@ -1,0 +1,112 @@
+//! Offline drop-in subset of the `anyhow` crate.
+//!
+//! The real `anyhow` is not available in this offline build environment,
+//! so this shim vendors the small API surface the workspace actually
+//! uses: `Error`, `Result<T>`, `anyhow!`, `bail!`, and `Error::msg`.
+//! Errors carry a message string only (no backtraces, no source chains);
+//! that is all the callers rely on.
+
+use std::fmt;
+
+/// A message-carrying error value.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything printable (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // anyhow prints the message (not a struct dump) for {:?} too.
+        f.write_str(&self.msg)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e)
+    }
+}
+
+impl From<std::fmt::Error> for Error {
+    fn from(e: std::fmt::Error) -> Error {
+        Error::msg(e)
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error { msg: s }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error { msg: s.to_string() }
+    }
+}
+
+/// `Result` defaulting the error type, like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or a printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        if flag {
+            bail!("flagged with {}", 42);
+        }
+        Err(anyhow!("plain"))
+    }
+
+    #[test]
+    fn macros_and_display() {
+        assert_eq!(fails(true).unwrap_err().to_string(), "flagged with 42");
+        assert_eq!(fails(false).unwrap_err().to_string(), "plain");
+        let e = anyhow!(String::from("owned"));
+        assert_eq!(format!("{e:?}"), "owned");
+    }
+
+    #[test]
+    fn io_error_propagates() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(read().is_err());
+    }
+}

@@ -1,0 +1,242 @@
+//! Offline stub of the `xla` crate's PJRT bindings.
+//!
+//! The real crate links against the XLA C++ runtime, which is not
+//! present in this build environment. This stub keeps the exact API
+//! surface `dbfq::runtime` compiles against:
+//!
+//! * **Host-side `Literal`s work for real** (construction, reshape,
+//!   tuple unpacking, readback) — the `runtime::value` marshalling tests
+//!   exercise them without any device.
+//! * **Device entry points degrade gracefully**: `PjRtClient::cpu()`
+//!   succeeds (so manifests can be inspected), but compiling or
+//!   executing an HLO module returns an error explaining that PJRT is
+//!   unavailable, which `Runtime` surfaces through its `Result` API.
+//!
+//! When a real `xla` crate is available, point the `xla` dependency in
+//! `rust/Cargo.toml` at it; no `dbfq` source changes are needed.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+const UNAVAILABLE: &str =
+    "XLA/PJRT is unavailable in this offline build (stub `xla` crate); \
+     artifact execution requires the real xla bindings";
+
+/// Error type with the `{:?}`-printability the callers rely on.
+#[derive(Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+#[derive(Debug, Clone, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Element types a [`Literal`] can hold on the host.
+pub trait NativeType: Copy {
+    fn wrap(v: Vec<Self>) -> Data;
+    fn unwrap(d: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+    fn unwrap(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::I32(v)
+    }
+    fn unwrap(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// A host tensor literal (row-major), mirroring `xla::Literal`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    fn len(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: T::wrap(v.to_vec()) }
+    }
+
+    /// Tuple literal (used by artifact outputs).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        let n = parts.len() as i64;
+        Literal { data: Data::Tuple(parts), dims: vec![n] }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if matches!(self.data, Data::Tuple(_)) {
+            return Err(XlaError("cannot reshape a tuple literal".into()));
+        }
+        let count: i64 = dims.iter().product();
+        if count < 0 || count as usize != self.len() {
+            return Err(XlaError(format!(
+                "reshape to {:?}: {} elements required, literal has {}",
+                dims,
+                count,
+                self.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Copy the elements back to a host `Vec`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .ok_or_else(|| XlaError("literal dtype mismatch".into()))
+    }
+
+    /// Unpack a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(parts) => Ok(parts),
+            _ => Err(XlaError("literal is not a tuple".into())),
+        }
+    }
+}
+
+/// Parsed HLO module handle. The stub never parses anything.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(XlaError(format!("{UNAVAILABLE} (while loading {path})")))
+    }
+}
+
+/// Computation wrapper around a parsed module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle returned by `execute`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(XlaError(UNAVAILABLE.into()))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError(UNAVAILABLE.into()))
+    }
+}
+
+/// PJRT client. Construction succeeds so manifest-only workflows run.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub(no-xla)".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation)
+                   -> Result<PjRtLoadedExecutable> {
+        Err(XlaError(UNAVAILABLE.into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let m = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(m.dims(), &[2, 2]);
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(m.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_reshape() {
+        let l = Literal::vec1(&[7i32]);
+        let s = l.reshape(&[]).unwrap();
+        assert_eq!(s.to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn tuple_unpack() {
+        let t = Literal::tuple(vec![
+            Literal::vec1(&[1.0f32]),
+            Literal::vec1(&[2i32]),
+        ]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::vec1(&[1i32]).to_tuple().is_err());
+    }
+
+    #[test]
+    fn device_paths_report_unavailable() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.platform_name().contains("stub"));
+        assert!(client.compile(&XlaComputation).is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        assert!(PjRtBuffer.to_literal_sync().is_err());
+        let exe = PjRtLoadedExecutable;
+        assert!(exe.execute::<Literal>(&[]).is_err());
+    }
+}

@@ -1,22 +1,30 @@
-//! GEMM engine before/after: seed baselines vs the plan/execute engine.
+//! GEMM engine before/after: seed baselines vs the plan/execute engine,
+//! and the engine's two data paths against each other.
 //!
 //! Emits `BENCH_gemm_engine.json` so the perf trajectory is tracked
-//! from this PR onward. Measured per mode (dense / int8 / fallback at
+//! from PR 1 onward. Measured per mode (dense / int8 / fallback at
 //! ~0%, ~5%, ~25% rate), Natural-equivalent Random vs worst-case
 //! Sequential placement, 1 and N threads:
 //!
-//! * `gops_seed`    — retained pre-engine kernel (per-call conversion,
-//!                    strided B, contiguous chunking)
-//! * `gops_engine`  — the public wrappers (fresh plan per call, cached
-//!                    packed operands — the drop-in path)
-//! * `gops_plan`    — plan built once, executed repeatedly (the
-//!                    steady-state training path)
+//! * `gops_seed`     — retained pre-engine kernel (per-call conversion,
+//!                     strided B, contiguous chunking)
+//! * `gops_engine`   — the public wrappers (fresh plan per call, cached
+//!                     packed operands, default = Int8 data path)
+//! * `gops_plan_sim` — plan built once on `DataPath::SimF32` (f32 code
+//!                     copies), executed repeatedly
+//! * `gops_plan_i8`  — plan built once on `DataPath::Int8` (true i8
+//!                     operands, i32 accumulation) — the steady-state
+//!                     training path
 //!
-//! Also prints the measured `SubstrateCalibration` the cost model
+//! Also reports packed bytes per operand (the 4x B-panel shrink the i8
+//! path buys) and the measured `SubstrateCalibration` the cost model
 //! consumes in place of its ad-hoc fallback-overhead constant.
+//!
+//! Set `BENCH_SMOKE=1` for a seconds-long CI smoke run (small dim,
+//! short iterations) that keeps this binary from rotting.
 
 use dbfq::costmodel::{rtx4090, SubstrateCalibration};
-use dbfq::gemm::{self, GemmPlan, Placement};
+use dbfq::gemm::{self, DataPath, GemmPlan, Placement};
 use dbfq::quant::{self, Criterion, Rounding, INT8_LEVELS};
 use dbfq::util::bench::{bench, gops, Table};
 use dbfq::util::json::{obj, Json};
@@ -24,38 +32,40 @@ use dbfq::util::rng::Pcg64;
 use dbfq::util::threadpool::default_threads;
 use dbfq::util::Mat;
 
-const DIM: usize = 1024;
 const BLOCK: usize = 128;
-const TARGET_MS: u64 = 200;
 
-fn measure<F: FnMut()>(f: F) -> f64 {
-    let s = bench(f, TARGET_MS);
-    gops(DIM, DIM, DIM, s.median_secs())
+fn measure<F: FnMut()>(dim: usize, target_ms: u64, f: F) -> f64 {
+    let s = bench(f, target_ms);
+    gops(dim, dim, dim, s.median_secs())
 }
 
 fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let dim: usize = if smoke { 256 } else { 1024 };
+    let target_ms: u64 = if smoke { 20 } else { 200 };
+
     println!("\n================================================");
-    println!("GEMM engine vs seed baselines ({DIM}^3, block {BLOCK})");
+    println!("GEMM engine vs seed baselines ({dim}^3, block {BLOCK})");
     println!("================================================");
 
     let nthreads = default_threads().max(2);
     let thread_counts = [1usize, nthreads];
 
     let mut rng = Pcg64::new(0xE2612E);
-    let a = Mat::randn(DIM, DIM, 1.0, &mut rng);
+    let a = Mat::randn(dim, dim, 1.0, &mut rng);
     // channel-structured outliers (paper §4.1) so fallback has texture
     let mut a_out = a.clone();
-    for c in 0..DIM {
+    for c in 0..dim {
         if c % 97 == 0 {
-            for r in 0..DIM {
+            for r in 0..dim {
                 if rng.uniform() < 0.3 {
-                    a_out.data[r * DIM + c] =
+                    a_out.data[r * dim + c] =
                         200.0 * (1.0 + rng.uniform_f32());
                 }
             }
         }
     }
-    let b = Mat::randn(DIM, DIM, 1.0, &mut rng);
+    let b = Mat::randn(dim, dim, 1.0, &mut rng);
     let qa = quant::block_quant(&a, BLOCK, INT8_LEVELS,
                                 Rounding::Nearest);
     let qb = quant::block_quant(&b, BLOCK, INT8_LEVELS,
@@ -64,29 +74,29 @@ fn main() {
                                       INT8_LEVELS, Criterion::AbsMax);
 
     let mut table = Table::new(&["mode", "rate", "placement", "thr",
-                                 "seed", "engine", "plan", "speedup"]);
+                                 "seed", "engine", "plan.sim",
+                                 "plan.i8", "i8/sim"]);
     let mut dense_rows = Vec::new();
     let mut int8_rows = Vec::new();
     let mut fb_rows = Vec::new();
 
     // -- dense ----------------------------------------------------------
     for &threads in &thread_counts {
-        let g_seed = measure(|| {
+        let g_seed = measure(dim, target_ms, || {
             std::hint::black_box(gemm::matmul_baseline(&a, &b, threads));
         });
-        let g_eng = measure(|| {
+        let g_eng = measure(dim, target_ms, || {
             std::hint::black_box(gemm::matmul(&a, &b, threads));
         });
         let plan = GemmPlan::new_dense(&a, &b, threads);
-        let g_plan = measure(|| {
+        let g_plan = measure(dim, target_ms, || {
             std::hint::black_box(plan.execute());
         });
         table.row(&[
             "dense".into(), "-".into(), "-".into(),
             threads.to_string(),
             format!("{g_seed:.2}"), format!("{g_eng:.2}"),
-            format!("{g_plan:.2}"),
-            format!("{:.2}x", g_eng / g_seed),
+            format!("{g_plan:.2}"), "-".into(), "-".into(),
         ]);
         dense_rows.push(obj(vec![
             ("threads", Json::Num(threads as f64)),
@@ -96,40 +106,52 @@ fn main() {
         ]));
     }
 
-    // -- int8 block -----------------------------------------------------
+    // -- int8 block: seed vs wrapper vs both data paths -----------------
     let mut int8_speedup_1t = 0.0;
+    let mut int8_i8_vs_sim_nt = 0.0;
     for &threads in &thread_counts {
-        let g_seed = measure(|| {
+        let g_seed = measure(dim, target_ms, || {
             std::hint::black_box(
                 gemm::block_gemm_baseline(&qa, &qb, threads));
         });
-        let g_eng = measure(|| {
+        let g_eng = measure(dim, target_ms, || {
             std::hint::black_box(gemm::block_gemm(&qa, &qb, threads));
         });
-        let plan = GemmPlan::new_int8(&qa, &qb, threads);
-        let g_plan = measure(|| {
-            std::hint::black_box(plan.execute());
+        let plan_sim = GemmPlan::new_int8_path(&qa, &qb, threads,
+                                               DataPath::SimF32);
+        let g_sim = measure(dim, target_ms, || {
+            std::hint::black_box(plan_sim.execute());
+        });
+        let plan_i8 = GemmPlan::new_int8_path(&qa, &qb, threads,
+                                              DataPath::Int8);
+        let g_i8 = measure(dim, target_ms, || {
+            std::hint::black_box(plan_i8.execute());
         });
         if threads == 1 {
             int8_speedup_1t = g_eng / g_seed;
+        }
+        if threads == nthreads {
+            int8_i8_vs_sim_nt = g_i8 / g_sim;
         }
         table.row(&[
             "int8".into(), "0.00".into(), "-".into(),
             threads.to_string(),
             format!("{g_seed:.2}"), format!("{g_eng:.2}"),
-            format!("{g_plan:.2}"),
-            format!("{:.2}x", g_eng / g_seed),
+            format!("{g_sim:.2}"), format!("{g_i8:.2}"),
+            format!("{:.2}x", g_i8 / g_sim),
         ]);
         int8_rows.push(obj(vec![
             ("threads", Json::Num(threads as f64)),
             ("gops_seed", Json::Num(g_seed)),
             ("gops_engine", Json::Num(g_eng)),
-            ("gops_plan", Json::Num(g_plan)),
+            ("gops_plan_sim", Json::Num(g_sim)),
+            ("gops_plan_i8", Json::Num(g_i8)),
         ]));
     }
 
     // -- fallback: rate x placement x threads ---------------------------
     let mut seq_gap_worst: f64 = 0.0;
+    let mut fb_i8_vs_sim_nt = 0.0;
     for rate in [0.0f64, 0.05, 0.25] {
         let theta = quant::theta_for_rate(&probe.metric, rate);
         let fa = quant::fallback_quant(&a_out, theta, BLOCK,
@@ -139,18 +161,23 @@ fn main() {
         for placement in [Placement::Random(9), Placement::Sequential] {
             let u = gemm::remap_placement(&fa, placement);
             for &threads in &thread_counts {
-                let g_seed = measure(|| {
+                let g_seed = measure(dim, target_ms, || {
                     std::hint::black_box(gemm::fallback_gemm_baseline(
                         &fa, &qb, &u, threads));
                 });
-                let g_eng = measure(|| {
+                let g_eng = measure(dim, target_ms, || {
                     std::hint::black_box(
                         gemm::fallback_gemm(&fa, &qb, &u, threads));
                 });
-                let plan =
-                    GemmPlan::new_fallback(&fa, &qb, &u, threads);
-                let g_plan = measure(|| {
-                    std::hint::black_box(plan.execute());
+                let plan_sim = GemmPlan::new_fallback_path(
+                    &fa, &qb, &u, threads, DataPath::SimF32);
+                let g_sim = measure(dim, target_ms, || {
+                    std::hint::black_box(plan_sim.execute());
+                });
+                let plan_i8 = GemmPlan::new_fallback_path(
+                    &fa, &qb, &u, threads, DataPath::Int8);
+                let g_i8 = measure(dim, target_ms, || {
+                    std::hint::black_box(plan_i8.execute());
                 });
                 table.row(&[
                     "fallback".into(),
@@ -158,8 +185,8 @@ fn main() {
                     format!("{placement:?}"),
                     threads.to_string(),
                     format!("{g_seed:.2}"), format!("{g_eng:.2}"),
-                    format!("{g_plan:.2}"),
-                    format!("{:.2}x", g_eng / g_seed),
+                    format!("{g_sim:.2}"), format!("{g_i8:.2}"),
+                    format!("{:.2}x", g_i8 / g_sim),
                 ]);
                 fb_rows.push(obj(vec![
                     ("rate", Json::Num(got_rate)),
@@ -168,10 +195,16 @@ fn main() {
                     ("threads", Json::Num(threads as f64)),
                     ("gops_seed", Json::Num(g_seed)),
                     ("gops_engine", Json::Num(g_eng)),
-                    ("gops_plan", Json::Num(g_plan)),
+                    ("gops_plan_sim", Json::Num(g_sim)),
+                    ("gops_plan_i8", Json::Num(g_i8)),
                 ]));
                 if threads == nthreads {
                     by_placement.push(g_eng);
+                    if matches!(placement, Placement::Random(_))
+                        && rate == 0.25
+                    {
+                        fb_i8_vs_sim_nt = g_i8 / g_sim;
+                    }
                 }
             }
         }
@@ -183,8 +216,21 @@ fn main() {
     }
     table.print();
 
+    // -- packed operand footprint (resident bytes per operand) ----------
+    let b_panels_f32 = qb.col_panels().bytes();
+    let b_panels_i8 = qb.col_panels_i8().bytes();
+    let a_codes_i8 = qa.q.len();
+    let a_codes_f32 = 4 * qa.q.len();
+    println!(
+        "\npacked B operand: {} KiB (i8 panels) vs {} KiB (f32 \
+         panels); A codes: {} KiB (i8, zero-copy) vs {} KiB (f32)",
+        b_panels_i8 / 1024, b_panels_f32 / 1024,
+        a_codes_i8 / 1024, a_codes_f32 / 1024
+    );
+
     // -- measured substrate calibration → cost model --------------------
-    let cal = SubstrateCalibration::measure(512, BLOCK, nthreads);
+    let cal_dim = if smoke { 128 } else { 512 };
+    let cal = SubstrateCalibration::measure(cal_dim, BLOCK, nthreads);
     let slope = cal.fallback_overhead_per_rate();
     let g4090 = rtx4090();
     let proj25 = 2.0 * (4096f64).powi(3)
@@ -204,6 +250,15 @@ fn main() {
          (target >= 1.25x)"
     );
     println!(
+        "i8 vs sim data path @ {nthreads} threads: int8 \
+         {int8_i8_vs_sim_nt:.2}x, fallback {fb_i8_vs_sim_nt:.2}x \
+         (target >= 1.5x)"
+    );
+    println!(
+        "calibration datapath speedup: {:.2}x",
+        cal.datapath_speedup()
+    );
+    println!(
         "worst Sequential-vs-Random engine gap @ {nthreads} threads: \
          {:.1}% (target <= 10%)",
         100.0 * seq_gap_worst
@@ -211,23 +266,34 @@ fn main() {
 
     let report = obj(vec![
         ("bench", Json::Str("gemm_engine".into())),
+        ("smoke", Json::Bool(smoke)),
         ("dims", obj(vec![
-            ("m", Json::Num(DIM as f64)),
-            ("n", Json::Num(DIM as f64)),
-            ("k", Json::Num(DIM as f64)),
+            ("m", Json::Num(dim as f64)),
+            ("n", Json::Num(dim as f64)),
+            ("k", Json::Num(dim as f64)),
             ("block", Json::Num(BLOCK as f64)),
         ])),
         ("threads_max", Json::Num(nthreads as f64)),
         ("dense", Json::Arr(dense_rows)),
         ("int8", Json::Arr(int8_rows)),
         ("fallback", Json::Arr(fb_rows)),
+        ("packed_bytes", obj(vec![
+            ("b_panels_f32", Json::Num(b_panels_f32 as f64)),
+            ("b_panels_i8", Json::Num(b_panels_i8 as f64)),
+            ("a_codes_f32", Json::Num(a_codes_f32 as f64)),
+            ("a_codes_i8", Json::Num(a_codes_i8 as f64)),
+        ])),
         ("criteria", obj(vec![
             ("int8_engine_vs_seed_1t", Json::Num(int8_speedup_1t)),
+            ("int8_i8_vs_sim", Json::Num(int8_i8_vs_sim_nt)),
+            ("fallback_i8_vs_sim", Json::Num(fb_i8_vs_sim_nt)),
             ("seq_vs_random_gap_worst", Json::Num(seq_gap_worst)),
         ])),
         ("calibration", obj(vec![
             ("dense_gops", Json::Num(cal.dense_gops)),
             ("int8_gops", Json::Num(cal.int8_gops)),
+            ("int8_sim_gops", Json::Num(cal.int8_sim_gops)),
+            ("datapath_speedup", Json::Num(cal.datapath_speedup())),
             ("fallback_overhead_per_rate", Json::Num(slope)),
             ("projected_4090_tops_at_25pct", Json::Num(proj25)),
         ])),

@@ -1,0 +1,107 @@
+//! Quantization construction throughput — measures the parallel
+//! `BlockQuant` / `FallbackQuant` builders (block rows distributed via
+//! `threadpool::parallel_items`, per-block stochastic-rounding RNG
+//! streams). Quantization runs once per activation per step, so its
+//! scaling is part of the end-to-end story, not just the GEMMs'.
+//!
+//! Emits `BENCH_quant_throughput.json` with Melem/s per (op, rounding,
+//! threads) and the N-thread:1-thread speedup. Set `BENCH_SMOKE=1` for
+//! a seconds-long CI smoke run.
+
+use dbfq::quant::{self, Criterion, Rounding, INT8_LEVELS};
+use dbfq::util::bench::{bench, Table};
+use dbfq::util::json::{obj, Json};
+use dbfq::util::rng::Pcg64;
+use dbfq::util::threadpool::default_threads;
+use dbfq::util::Mat;
+
+const BLOCK: usize = 128;
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let dim: usize = if smoke { 256 } else { 2048 };
+    let target_ms: u64 = if smoke { 20 } else { 150 };
+
+    println!("\n================================================");
+    println!("Quantization throughput ({dim}x{dim}, block {BLOCK})");
+    println!("================================================");
+
+    let nthreads = default_threads().max(2);
+    let thread_counts = [1usize, nthreads];
+    let mut rng = Pcg64::new(0x0A17);
+    let x = Mat::randn(dim, dim, 1.0, &mut rng);
+    let melems = (dim * dim) as f64 / 1e6;
+
+    let mut table =
+        Table::new(&["op", "rounding", "thr", "Melem/s", "speedup"]);
+    let mut rows = Vec::new();
+    let mut record = |table: &mut Table, op: &str, rnd: &str,
+                      threads: usize, rate: f64, base_1t: f64| {
+        table.row(&[
+            op.into(), rnd.into(), threads.to_string(),
+            format!("{rate:.1}"),
+            if threads == 1 {
+                "-".into()
+            } else {
+                format!("{:.2}x", rate / base_1t)
+            },
+        ]);
+        rows.push(obj(vec![
+            ("op", Json::Str(op.into())),
+            ("rounding", Json::Str(rnd.into())),
+            ("threads", Json::Num(threads as f64)),
+            ("melems_per_sec", Json::Num(rate)),
+        ]));
+    };
+
+    for (rnd, rounding) in [("nearest", Rounding::Nearest),
+                            ("stochastic", Rounding::Stochastic(7))] {
+        let mut base_1t = 0.0;
+        for &threads in &thread_counts {
+            let s = bench(|| {
+                std::hint::black_box(quant::block_quant_threads(
+                    &x, BLOCK, INT8_LEVELS, rounding, threads));
+            }, target_ms);
+            let rate = melems / s.median_secs();
+            if threads == 1 {
+                base_1t = rate;
+            }
+            record(&mut table, "block_quant", rnd, threads, rate,
+                   base_1t);
+        }
+    }
+
+    // fallback: residual pass always runs over every block (the
+    // u-mask only gates GEMM-time work), so theta choice is not a
+    // cost knob here — use the paper-ish AbsMax criterion.
+    let mut base_1t = 0.0;
+    for &threads in &thread_counts {
+        let s = bench(|| {
+            std::hint::black_box(quant::fallback_quant_threads(
+                &x, 50.0, BLOCK, INT8_LEVELS, Criterion::AbsMax,
+                threads));
+        }, target_ms);
+        let rate = melems / s.median_secs();
+        if threads == 1 {
+            base_1t = rate;
+        }
+        record(&mut table, "fallback_quant", "nearest", threads, rate,
+               base_1t);
+    }
+    table.print();
+
+    let report = obj(vec![
+        ("bench", Json::Str("quant_throughput".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("dims", obj(vec![
+            ("rows", Json::Num(dim as f64)),
+            ("cols", Json::Num(dim as f64)),
+            ("block", Json::Num(BLOCK as f64)),
+        ])),
+        ("threads_max", Json::Num(nthreads as f64)),
+        ("results", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_quant_throughput.json", report.to_string())
+        .expect("write BENCH_quant_throughput.json");
+    println!("\nwrote BENCH_quant_throughput.json");
+}

@@ -184,6 +184,10 @@ impl Gpu {
 /// factor (`1 + rate`), this struct carries the engine's actually
 /// measured dense / int8 / fallback throughput on the current testbed
 /// and exposes the measured fallback-overhead slope for projections.
+/// The int8 numbers are taken on **both data paths**: the true-i8
+/// kernels (`int8_gops`, the deployed path) and the f32 simulation
+/// (`int8_sim_gops`, the seed-compatible oracle) — their ratio is the
+/// substrate's measured analogue of the paper's INT8:BF16 gain.
 /// Produced by [`SubstrateCalibration::measure`] (used by
 /// `benches/gemm_engine.rs`) or built directly from recorded numbers.
 #[derive(Debug, Clone)]
@@ -194,8 +198,12 @@ pub struct SubstrateCalibration {
     pub threads: usize,
     /// measured engine throughput, Gops (useful work 2·M·N·K)
     pub dense_gops: f64,
+    /// Int8Block on the true-i8 data path
     pub int8_gops: f64,
-    /// (achieved fallback rate, Gops) samples, ascending in rate
+    /// Int8Block on the SimF32 (f32-code) data path
+    pub int8_sim_gops: f64,
+    /// (achieved fallback rate, Gops) samples on the i8 path,
+    /// ascending in rate
     pub fallback: Vec<(f64, f64)>,
 }
 
@@ -205,7 +213,7 @@ impl SubstrateCalibration {
     /// larger sizes for the tracked numbers.
     pub fn measure(dim: usize, block: usize, threads: usize)
                    -> SubstrateCalibration {
-        use crate::gemm::engine::GemmPlan;
+        use crate::gemm::engine::{DataPath, GemmPlan};
         use crate::quant::{block_quant, fallback_quant, theta_for_rate,
                            Criterion, Rounding, INT8_LEVELS};
         use crate::util::bench::{bench, gops};
@@ -225,11 +233,18 @@ impl SubstrateCalibration {
 
         let qa = block_quant(&a, block, INT8_LEVELS, Rounding::Nearest);
         let qb = block_quant(&b, block, INT8_LEVELS, Rounding::Nearest);
-        let int8_plan = GemmPlan::new_int8(&qa, &qb, threads);
+        let i8_plan =
+            GemmPlan::new_int8_path(&qa, &qb, threads, DataPath::Int8);
         let s = bench(|| {
-            std::hint::black_box(int8_plan.execute());
+            std::hint::black_box(i8_plan.execute());
         }, target_ms);
         let int8_gops = gops(dim, dim, dim, s.median_secs());
+        let sim_plan = GemmPlan::new_int8_path(&qa, &qb, threads,
+                                               DataPath::SimF32);
+        let s = bench(|| {
+            std::hint::black_box(sim_plan.execute());
+        }, target_ms);
+        let int8_sim_gops = gops(dim, dim, dim, s.median_secs());
 
         let probe = fallback_quant(&a, f32::INFINITY, block, INT8_LEVELS,
                                    Criterion::AbsMax);
@@ -238,7 +253,8 @@ impl SubstrateCalibration {
             let theta = theta_for_rate(&probe.metric, rate);
             let fa = fallback_quant(&a, theta, block, INT8_LEVELS,
                                     Criterion::AbsMax);
-            let plan = GemmPlan::new_fallback(&fa, &qb, &fa.u, threads);
+            let plan = GemmPlan::new_fallback_path(
+                &fa, &qb, &fa.u, threads, DataPath::Int8);
             let s = bench(|| {
                 std::hint::black_box(plan.execute());
             }, target_ms);
@@ -252,6 +268,7 @@ impl SubstrateCalibration {
             threads,
             dense_gops,
             int8_gops,
+            int8_sim_gops,
             fallback,
         }
     }
@@ -274,6 +291,13 @@ impl SubstrateCalibration {
     /// Measured int8:dense throughput ratio on the substrate.
     pub fn int8_speedup(&self) -> f64 {
         self.int8_gops / self.dense_gops
+    }
+
+    /// Measured speedup of the true-i8 data path over the f32
+    /// simulation — the substrate's INT8-data-flow gain (the claim
+    /// behind the paper's Fig 8c / Table 3 speedups).
+    pub fn datapath_speedup(&self) -> f64 {
+        self.int8_gops / self.int8_sim_gops
     }
 
     /// GPU projection consuming the *measured* fallback slope instead
@@ -356,6 +380,8 @@ mod tests {
         let cal = SubstrateCalibration::measure(96, 16, 1);
         assert!(cal.dense_gops > 0.0);
         assert!(cal.int8_gops > 0.0);
+        assert!(cal.int8_sim_gops > 0.0);
+        assert!(cal.datapath_speedup() > 0.0);
         assert_eq!(cal.fallback.len(), 2);
         assert!(cal.fallback.iter().all(|&(_, g)| g > 0.0));
         // achieved rates bracket the request reasonably

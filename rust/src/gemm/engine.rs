@@ -15,12 +15,36 @@
 //!                 ├─ pack operands (cached on the        ├─ split C into
 //!                 │  quant structs, so a second plan     │  disjoint &mut
 //!                 │  over the same weights is free):     │  row panels
-//!                 │    A codes → f32, row-major          ├─ LPT-schedule
-//!                 │    B codes → f32 column panels       │  panels by weight
-//!                 └─ per-row-panel cost weights          └─ per-thread
-//!                    from the fallback u-mask               workspace, no
-//!                                                          alloc in hot loop
+//!                 │   SimF32: A codes → f32 row-major    ├─ LPT-schedule
+//!                 │           B codes → f32 col panels   │  panels by weight
+//!                 │   Int8:   A codes = stored i8 rows   └─ per-thread
+//!                 │           B codes → i8 col panels       workspace, no
+//!                 │           (4x fewer packed bytes)       alloc in hot
+//!                 └─ per-row-panel cost weights             loop
+//!                    from the fallback u-mask
 //! ```
+//!
+//! ## Data paths and exactness
+//!
+//! [`DataPath`] selects what the int8 microkernels actually stream:
+//!
+//! * `SimF32` — the seed-compatible simulation: int8 codes widened to
+//!   cached f32 copies, f32 FMA kernels. 4x the operand bytes the
+//!   format promises, but bit-equal to int32 accumulation (below).
+//! * `Int8` — the true INT8 data flow: i8 row-major A (the stored
+//!   codes, zero-copy), i8 column-panel B, and `panel_dot*_i8`
+//!   kernels accumulating in **i32**, widened to f32 once per K-block
+//!   before the shared per-block scale-FMA.
+//!
+//! Both paths are **bit-identical** to each other and to the
+//! `*_baseline` oracles whenever `bs ≤ `[`I8_EXACT_MAX_BS`]: every
+//! code product is ≤ 127², so each partial sum of a K-block dot stays
+//! ≤ `bs·127² ≤ 2²⁴` — exactly representable in f32 — which makes the
+//! f32 kernel's adds exact integer arithmetic and the i32→f32
+//! widening lossless. All paper block sizes (32–256) sit far inside
+//! the bound; past it the i8 path still runs (i32 cannot overflow
+//! before `bs ≈ 1.3e5`) but a debug assertion guards the widening and
+//! `new_int8`/`new_fallback` auto-select `SimF32`.
 //!
 //! Construction packs operands; execution allocates only the output and
 //! one small per-thread accumulator. Repeated GEMMs over the same
@@ -84,7 +108,7 @@
 
 use std::sync::Arc;
 
-use crate::quant::{BlockQuant, FallbackQuant, PanelPack};
+use crate::quant::{BlockQuant, FallbackQuant, PanelPack, PanelPackI8};
 use crate::util::threadpool::weighted_buckets;
 use crate::util::Mat;
 
@@ -100,9 +124,46 @@ pub enum Precision {
     Fallback,
 }
 
-/// Residual operand of a fallback plan.
+/// What the int8-mode microkernels stream (see module docs): the
+/// seed-compatible f32 simulation of the codes, or the true i8
+/// operands with i32 block accumulation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataPath {
+    /// cached f32 copies of the int8 codes, f32 FMA kernels
+    SimF32,
+    /// i8 operands, i8×i8→i32 kernels, one exact widening per K-block
+    Int8,
+}
+
+/// Largest quantization block size for which the i8 path is bit-exact
+/// to the f32 kernels: every K-block partial sum is bounded by
+/// `bs · 127²`, which must stay within f32's exact-integer range 2²⁴.
+/// `floor(2²⁴ / 127²) = 1040` — all paper block sizes (32–256) qualify.
+pub const I8_EXACT_MAX_BS: usize = (1 << 24) / (127 * 127);
+
+impl DataPath {
+    /// Default path for a block size: true i8 inside the exactness
+    /// bound, the f32 simulation beyond it.
+    pub fn auto_for(bs: usize) -> DataPath {
+        if bs <= I8_EXACT_MAX_BS {
+            DataPath::Int8
+        } else {
+            DataPath::SimF32
+        }
+    }
+}
+
+/// Residual operand of a SimF32 fallback plan.
 struct Resid<'a> {
     rf: Arc<Vec<f32>>,
+    r_scale: &'a [f32],
+    u: &'a [bool],
+}
+
+/// Residual operand of an Int8 fallback plan — the stored residual
+/// codes themselves, zero-copy.
+struct ResidI8<'a> {
+    rq: &'a [i8],
     r_scale: &'a [f32],
     u: &'a [bool],
 }
@@ -113,13 +174,23 @@ enum Kernel<'a> {
         a: &'a Mat,
         b: &'a Mat,
     },
-    Int8 {
+    /// int8 modes, SimF32 data path (f32 copies of the codes)
+    Sim {
         af: Arc<Vec<f32>>,
         a_pcols: usize,
         a_scale: &'a [f32],
         bp: Arc<PanelPack>,
         b_scale: &'a [f32],
         resid: Option<Resid<'a>>,
+    },
+    /// int8 modes, Int8 data path (true i8 operands)
+    I8 {
+        qa: &'a [i8],
+        a_pcols: usize,
+        a_scale: &'a [f32],
+        bp: Arc<PanelPackI8>,
+        b_scale: &'a [f32],
+        resid: Option<ResidI8<'a>>,
     },
 }
 
@@ -144,6 +215,7 @@ fn sched_rows_for(bs: usize) -> usize {
 /// [`execute`](GemmPlan::execute).
 pub struct GemmPlan<'a> {
     mode: Precision,
+    path: DataPath,
     threads: usize,
     m: usize,
     n: usize,
@@ -177,6 +249,7 @@ impl<'a> GemmPlan<'a> {
             .collect();
         GemmPlan {
             mode: Precision::Dense,
+            path: DataPath::SimF32,
             threads,
             m,
             n,
@@ -190,9 +263,18 @@ impl<'a> GemmPlan<'a> {
         }
     }
 
-    /// Plan an INT8 block GEMM (paper Eq. 1).
+    /// Plan an INT8 block GEMM (paper Eq. 1) on the default data path
+    /// for the block size ([`DataPath::auto_for`] — true i8 within the
+    /// exactness bound).
     pub fn new_int8(a: &'a BlockQuant, b: &'a BlockQuant,
                     threads: usize) -> GemmPlan<'a> {
+        Self::new_int8_path(a, b, threads, DataPath::auto_for(a.block))
+    }
+
+    /// Plan an INT8 block GEMM on an explicit [`DataPath`].
+    pub fn new_int8_path(a: &'a BlockQuant, b: &'a BlockQuant,
+                         threads: usize, path: DataPath)
+                         -> GemmPlan<'a> {
         assert_eq!(a.cols, b.rows, "inner dims");
         assert_eq!(a.block, b.block, "block size");
         let (kb, nbk) = (a.cb(), b.cb());
@@ -203,8 +285,27 @@ impl<'a> GemmPlan<'a> {
                 (rows * kb) as f64
             })
             .collect();
+        let kernel = match path {
+            DataPath::SimF32 => Kernel::Sim {
+                af: a.codes_f32(),
+                a_pcols: a.pcols,
+                a_scale: &a.scale,
+                bp: b.col_panels(),
+                b_scale: &b.scale,
+                resid: None,
+            },
+            DataPath::Int8 => Kernel::I8 {
+                qa: &a.q,
+                a_pcols: a.pcols,
+                a_scale: &a.scale,
+                bp: b.col_panels_i8(),
+                b_scale: &b.scale,
+                resid: None,
+            },
+        };
         GemmPlan {
             mode: Precision::Int8Block,
+            path,
             threads,
             m: a.rows,
             n: b.cols,
@@ -214,22 +315,25 @@ impl<'a> GemmPlan<'a> {
             kb,
             nbk,
             weights,
-            kernel: Kernel::Int8 {
-                af: a.codes_f32(),
-                a_pcols: a.pcols,
-                a_scale: &a.scale,
-                bp: b.col_panels(),
-                b_scale: &b.scale,
-                resid: None,
-            },
+            kernel,
         }
     }
 
-    /// Plan a mixed-precision fallback GEMM (paper Algorithm 1). `u` is
-    /// the per-block fallback mask — pass `&fa.u` or a
-    /// `remap_placement` result.
+    /// Plan a mixed-precision fallback GEMM (paper Algorithm 1) on the
+    /// default data path for the block size. `u` is the per-block
+    /// fallback mask — pass `&fa.u` or a `remap_placement` result.
     pub fn new_fallback(fa: &'a FallbackQuant, b: &'a BlockQuant,
                         u: &'a [bool], threads: usize) -> GemmPlan<'a> {
+        Self::new_fallback_path(fa, b, u, threads,
+                                DataPath::auto_for(fa.base.block))
+    }
+
+    /// Plan a fallback GEMM on an explicit [`DataPath`]. On `Int8` the
+    /// residual operand rides the same i8 path as the base codes, so
+    /// Algorithm 1's skip-when-`u=0` work stays cheap.
+    pub fn new_fallback_path(fa: &'a FallbackQuant, b: &'a BlockQuant,
+                             u: &'a [bool], threads: usize,
+                             path: DataPath) -> GemmPlan<'a> {
         let a = &fa.base;
         assert_eq!(a.cols, b.rows, "inner dims");
         assert_eq!(a.block, b.block, "block size");
@@ -250,18 +354,8 @@ impl<'a> GemmPlan<'a> {
                 (rows * (kb + fb)) as f64
             })
             .collect();
-        GemmPlan {
-            mode: Precision::Fallback,
-            threads,
-            m: a.rows,
-            n: b.cols,
-            k: a.cols,
-            sched_rows: sched,
-            bs: a.block,
-            kb,
-            nbk,
-            weights,
-            kernel: Kernel::Int8 {
+        let kernel = match path {
+            DataPath::SimF32 => Kernel::Sim {
                 af: a.codes_f32(),
                 a_pcols: a.pcols,
                 a_scale: &a.scale,
@@ -273,11 +367,43 @@ impl<'a> GemmPlan<'a> {
                     u,
                 }),
             },
+            DataPath::Int8 => Kernel::I8 {
+                qa: &a.q,
+                a_pcols: a.pcols,
+                a_scale: &a.scale,
+                bp: b.col_panels_i8(),
+                b_scale: &b.scale,
+                resid: Some(ResidI8 {
+                    rq: &fa.rq,
+                    r_scale: &fa.rscale,
+                    u,
+                }),
+            },
+        };
+        GemmPlan {
+            mode: Precision::Fallback,
+            path,
+            threads,
+            m: a.rows,
+            n: b.cols,
+            k: a.cols,
+            sched_rows: sched,
+            bs: a.block,
+            kb,
+            nbk,
+            weights,
+            kernel,
         }
     }
 
     pub fn precision(&self) -> Precision {
         self.mode
+    }
+
+    /// The data path this plan's microkernels stream
+    /// ([`DataPath::SimF32`] for dense plans).
+    pub fn data_path(&self) -> DataPath {
+        self.path
     }
 
     /// (m, n, k) of the planned GEMM.
@@ -327,9 +453,10 @@ impl<'a> GemmPlan<'a> {
         let threads = self.threads.clamp(1, slots.len());
         if threads <= 1 {
             let mut acc = vec![0.0f32; self.acc_len()];
+            let mut acci = vec![0i32; self.acci_len()];
             for slot in slots.iter_mut() {
                 let (bi, crows) = slot.take().unwrap();
-                self.run_panel(bi, crows, &mut acc);
+                self.run_panel(bi, crows, &mut acc, &mut acci);
             }
         } else {
             let buckets = weighted_buckets(&self.weights, threads);
@@ -351,8 +478,10 @@ impl<'a> GemmPlan<'a> {
                         // One reusable workspace per worker; nothing
                         // allocates inside the panel loops.
                         let mut acc = vec![0.0f32; self.acc_len()];
+                        let mut acci = vec![0i32; self.acci_len()];
                         for (bi, crows) in bucket {
-                            self.run_panel(bi, crows, &mut acc);
+                            self.run_panel(bi, crows, &mut acc,
+                                           &mut acci);
                         }
                     });
                 }
@@ -361,8 +490,8 @@ impl<'a> GemmPlan<'a> {
         c
     }
 
-    /// Workspace length: two accumulator rows for the paired int8
-    /// microkernel; the dense kernel accumulates into C directly.
+    /// f32 workspace length: two accumulator rows for the paired int8
+    /// microkernels; the dense kernel accumulates into C directly.
     fn acc_len(&self) -> usize {
         match self.mode {
             Precision::Dense => 0,
@@ -370,11 +499,21 @@ impl<'a> GemmPlan<'a> {
         }
     }
 
+    /// i32 workspace length: the i8 path additionally carries two
+    /// integer accumulator rows (widened into the f32 rows once per
+    /// K-block).
+    fn acci_len(&self) -> usize {
+        match &self.kernel {
+            Kernel::I8 { .. } => 2 * self.bs,
+            _ => 0,
+        }
+    }
+
     /// Compute one C sub-panel. `ci` is the sub-panel (chunk) index;
     /// `crows` is its slice of C (`rows * n` elements, rows =
     /// `sched_rows` except the tail).
-    fn run_panel(&self, ci: usize, crows: &mut [f32],
-                 acc: &mut [f32]) {
+    fn run_panel(&self, ci: usize, crows: &mut [f32], acc: &mut [f32],
+                 acci: &mut [i32]) {
         let rows = crows.len() / self.n;
         match &self.kernel {
             Kernel::Dense { a, b } => {
@@ -402,21 +541,29 @@ impl<'a> GemmPlan<'a> {
                     }
                 }
             }
-            Kernel::Int8 { af, a_pcols, a_scale, bp, b_scale, resid } => {
+            Kernel::Sim { af, a_pcols, a_scale, bp, b_scale, resid } => {
                 let r_lo = ci * self.sched_rows;
                 // sched_rows divides bs, so the whole sub-panel lies
                 // in one block row and shares its scale row.
                 let bi = r_lo / self.bs;
-                self.run_panel_int8(
+                self.run_panel_sim(
                     bi, r_lo, crows, rows, acc, af, *a_pcols, a_scale,
                     bp, b_scale, resid.as_ref(),
+                );
+            }
+            Kernel::I8 { qa, a_pcols, a_scale, bp, b_scale, resid } => {
+                let r_lo = ci * self.sched_rows;
+                let bi = r_lo / self.bs;
+                self.run_panel_i8(
+                    bi, r_lo, crows, rows, acc, acci, qa, *a_pcols,
+                    a_scale, bp, b_scale, resid.as_ref(),
                 );
             }
         }
     }
 
     #[allow(clippy::too_many_arguments)]
-    fn run_panel_int8(
+    fn run_panel_sim(
         &self, bi: usize, r_lo: usize, crows: &mut [f32], rows: usize,
         acc: &mut [f32], af: &[f32], a_pcols: usize, a_scale: &[f32],
         bp: &PanelPack, b_scale: &[f32], resid: Option<&Resid<'_>>,
@@ -481,6 +628,91 @@ impl<'a> GemmPlan<'a> {
                                 panel_dot(
                                     &res.rf, a_pcols, r_lo + rl,
                                     bk * bs, bs, panel, width, acc0,
+                                );
+                                let rw = rs * sb;
+                                scale_add(crow, acc0, width, rw);
+                            }
+                        }
+                    }
+                    rl += 1;
+                }
+            }
+        }
+    }
+
+    /// Int8-path twin of [`run_panel_sim`](Self::run_panel_sim): same
+    /// outer loop and scale-FMA order, but the block dots stream i8
+    /// operands into the i32 workspace and widen once per K-block —
+    /// bit-identical output for `bs ≤ I8_EXACT_MAX_BS`.
+    #[allow(clippy::too_many_arguments)]
+    fn run_panel_i8(
+        &self, bi: usize, r_lo: usize, crows: &mut [f32], rows: usize,
+        acc: &mut [f32], acci: &mut [i32], qa: &[i8], a_pcols: usize,
+        a_scale: &[f32], bp: &PanelPackI8, b_scale: &[f32],
+        resid: Option<&ResidI8<'_>>,
+    ) {
+        let bs = self.bs;
+        let (acc0, acc1) = acc.split_at_mut(bs);
+        let (acci0, acci1) = acci.split_at_mut(bs);
+        for bj in 0..self.nbk {
+            let width = bp.widths[bj];
+            let c_lo = bj * bs;
+            let panel = bp.panel(bj);
+            let mut rl = 0usize;
+            while rl < rows {
+                let pair = rl + 1 < rows;
+                if pair {
+                    let rowpair =
+                        &mut crows[rl * self.n..(rl + 2) * self.n];
+                    let (row0, row1) = rowpair.split_at_mut(self.n);
+                    let crow0 = &mut row0[c_lo..c_lo + width];
+                    let crow1 = &mut row1[c_lo..c_lo + width];
+                    for bk in 0..self.kb {
+                        let sa = a_scale[bi * self.kb + bk];
+                        let sb = b_scale[bk * self.nbk + bj];
+                        panel_dot2_i8(
+                            qa, a_pcols, r_lo + rl, bk * bs, bs,
+                            panel, width, acci0, acci1, acc0, acc1,
+                        );
+                        let w = sa * sb;
+                        scale_add(crow0, acc0, width, w);
+                        scale_add(crow1, acc1, width, w);
+                        if let Some(res) = resid {
+                            // Algorithm 1 lines 13-16: residual work
+                            // really skipped when u = 0.
+                            if res.u[bi * self.kb + bk] {
+                                let rs = res.r_scale[bi * self.kb + bk];
+                                panel_dot2_i8(
+                                    res.rq, a_pcols, r_lo + rl,
+                                    bk * bs, bs, panel, width, acci0,
+                                    acci1, acc0, acc1,
+                                );
+                                let rw = rs * sb;
+                                scale_add(crow0, acc0, width, rw);
+                                scale_add(crow1, acc1, width, rw);
+                            }
+                        }
+                    }
+                    rl += 2;
+                } else {
+                    let crow = &mut crows[rl * self.n + c_lo
+                                          ..rl * self.n + c_lo + width];
+                    for bk in 0..self.kb {
+                        let sa = a_scale[bi * self.kb + bk];
+                        let sb = b_scale[bk * self.nbk + bj];
+                        panel_dot_i8(
+                            qa, a_pcols, r_lo + rl, bk * bs, bs,
+                            panel, width, acci0, acc0,
+                        );
+                        let w = sa * sb;
+                        scale_add(crow, acc0, width, w);
+                        if let Some(res) = resid {
+                            if res.u[bi * self.kb + bk] {
+                                let rs = res.r_scale[bi * self.kb + bk];
+                                panel_dot_i8(
+                                    res.rq, a_pcols, r_lo + rl,
+                                    bk * bs, bs, panel, width, acci0,
+                                    acc0,
                                 );
                                 let rw = rs * sb;
                                 scale_add(crow, acc0, width, rw);
@@ -593,6 +825,128 @@ fn panel_dot2(
             }
         }
     }
+}
+
+/// i32 → f32 widening of a block dot, once per K-block. Exact whenever
+/// `|v| ≤ 2²⁴` (guaranteed for `bs ≤ I8_EXACT_MAX_BS`); the debug
+/// assertion catches the first value past the exactly-representable
+/// range on oversized blocks.
+#[inline]
+fn widen_i32(acci: &[i32], acc: &mut [f32], width: usize) {
+    for (o, &v) in acc[..width].iter_mut().zip(acci[..width].iter()) {
+        debug_assert!(
+            v.unsigned_abs() <= 1 << 24,
+            "i8-path block dot {} exceeds the f32-exact range \
+             (only bs <= {} is bit-exact; use DataPath::SimF32)",
+            v,
+            I8_EXACT_MAX_BS
+        );
+        *o = v as f32;
+    }
+}
+
+/// One-row i8 block dot against a contiguous i8 B panel:
+/// `acc[j] = Σ_k qa[r, k0+k] · panel[k0+k, j]` accumulated in **i32**
+/// (4-unrolled over K, widening multiplies — the CPU stand-in for an
+/// int8-dot ISA), then widened to f32 once. For
+/// `bs ≤ I8_EXACT_MAX_BS` the result is bit-identical to
+/// [`panel_dot`] over the f32 code copies.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn panel_dot_i8(
+    qa: &[i8], a_stride: usize, r: usize, k0: usize, bs: usize,
+    panel: &[i8], width: usize, acci: &mut [i32], acc: &mut [f32],
+) {
+    acci[..width].fill(0);
+    let arow = &qa[r * a_stride + k0..r * a_stride + k0 + bs];
+    let kk = bs & !3;
+    for k in (0..kk).step_by(4) {
+        let a0 = arow[k] as i32;
+        let a1 = arow[k + 1] as i32;
+        let a2 = arow[k + 2] as i32;
+        let a3 = arow[k + 3] as i32;
+        let b0 = &panel[(k0 + k) * width..][..width];
+        let b1 = &panel[(k0 + k + 1) * width..][..width];
+        let b2 = &panel[(k0 + k + 2) * width..][..width];
+        let b3 = &panel[(k0 + k + 3) * width..][..width];
+        for j in 0..width {
+            acci[j] += a0 * b0[j] as i32
+                + a1 * b1[j] as i32
+                + a2 * b2[j] as i32
+                + a3 * b3[j] as i32;
+        }
+    }
+    for k in kk..bs {
+        let av = arow[k];
+        if av == 0 {
+            continue;
+        }
+        let av = av as i32;
+        let brow = &panel[(k0 + k) * width..][..width];
+        for j in 0..width {
+            acci[j] += av * brow[j] as i32;
+        }
+    }
+    widen_i32(acci, acc, width);
+}
+
+/// Two-row i8 block dot sharing each loaded B panel row between
+/// adjacent A rows; i32 accumulation, one widening per K-block. See
+/// [`panel_dot_i8`] for the exactness argument.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn panel_dot2_i8(
+    qa: &[i8], a_stride: usize, r: usize, k0: usize, bs: usize,
+    panel: &[i8], width: usize, acci0: &mut [i32], acci1: &mut [i32],
+    acc0: &mut [f32], acc1: &mut [f32],
+) {
+    acci0[..width].fill(0);
+    acci1[..width].fill(0);
+    let arow0 = &qa[r * a_stride + k0..r * a_stride + k0 + bs];
+    let arow1 =
+        &qa[(r + 1) * a_stride + k0..(r + 1) * a_stride + k0 + bs];
+    let kk = bs & !3;
+    for k in (0..kk).step_by(4) {
+        let a00 = arow0[k] as i32;
+        let a01 = arow0[k + 1] as i32;
+        let a02 = arow0[k + 2] as i32;
+        let a03 = arow0[k + 3] as i32;
+        let a10 = arow1[k] as i32;
+        let a11 = arow1[k + 1] as i32;
+        let a12 = arow1[k + 2] as i32;
+        let a13 = arow1[k + 3] as i32;
+        let b0 = &panel[(k0 + k) * width..][..width];
+        let b1 = &panel[(k0 + k + 1) * width..][..width];
+        let b2 = &panel[(k0 + k + 2) * width..][..width];
+        let b3 = &panel[(k0 + k + 3) * width..][..width];
+        for j in 0..width {
+            let v0 = b0[j] as i32;
+            let v1 = b1[j] as i32;
+            let v2 = b2[j] as i32;
+            let v3 = b3[j] as i32;
+            acci0[j] += a00 * v0 + a01 * v1 + a02 * v2 + a03 * v3;
+            acci1[j] += a10 * v0 + a11 * v1 + a12 * v2 + a13 * v3;
+        }
+    }
+    for k in kk..bs {
+        let brow = &panel[(k0 + k) * width..][..width];
+        let av0 = arow0[k];
+        if av0 != 0 {
+            let av0 = av0 as i32;
+            for j in 0..width {
+                acci0[j] += av0 * brow[j] as i32;
+            }
+        }
+        let av1 = arow1[k];
+        if av1 != 0 {
+            let av1 = av1 as i32;
+            for j in 0..width {
+                acci1[j] += av1 * brow[j] as i32;
+            }
+        }
+    }
+    widen_i32(acci0, acc0, width);
+    widen_i32(acci1, acc1, width);
 }
 
 /// Dense two-row kernel sharing each loaded B row; per-row operation
@@ -724,5 +1078,120 @@ mod tests {
         let b = Mat::zeros(8, 4);
         let c = GemmPlan::new_dense(&a, &b, 4).execute();
         assert_eq!((c.rows, c.cols), (0, 4));
+    }
+
+    #[test]
+    fn data_paths_agree_bitwise() {
+        let (a, b) = mats(48, 33, 40, 29);
+        let qa = block_quant(&a, 16, INT8_LEVELS, Rounding::Nearest);
+        let qb = block_quant(&b, 16, INT8_LEVELS, Rounding::Nearest);
+        let sim = GemmPlan::new_int8_path(&qa, &qb, 2,
+                                          DataPath::SimF32);
+        let i8p = GemmPlan::new_int8_path(&qa, &qb, 2, DataPath::Int8);
+        assert_eq!(sim.data_path(), DataPath::SimF32);
+        assert_eq!(i8p.data_path(), DataPath::Int8);
+        assert_eq!(sim.execute().data, i8p.execute().data);
+        // default constructor picks the i8 path inside the bound
+        assert_eq!(GemmPlan::new_int8(&qa, &qb, 2).data_path(),
+                   DataPath::Int8);
+    }
+
+    #[test]
+    fn i8_path_skips_f32_caches() {
+        // Memory contract: an Int8-path plan must not materialize the
+        // 4x-bigger f32 code caches on either operand; the SimF32
+        // oracle path still builds them lazily on demand.
+        let (a, b) = mats(48, 32, 32, 31);
+        let qa = block_quant(&a, 16, INT8_LEVELS, Rounding::Nearest);
+        let qb = block_quant(&b, 16, INT8_LEVELS, Rounding::Nearest);
+        let c_i8 = GemmPlan::new_int8_path(&qa, &qb, 2, DataPath::Int8)
+            .execute();
+        assert!(!qa.f32_codes_built(), "A f32 codes materialized");
+        assert!(!qb.f32_panels_built(), "B f32 panels materialized");
+        assert!(qb.i8_panels_built());
+        let c_sim =
+            GemmPlan::new_int8_path(&qa, &qb, 2, DataPath::SimF32)
+                .execute();
+        assert_eq!(c_i8.data, c_sim.data);
+        assert!(qa.f32_codes_built() && qb.f32_panels_built());
+    }
+
+    #[test]
+    fn fallback_i8_path_skips_residual_f32() {
+        let mut rng = Pcg64::new(37);
+        let mut a = Mat::randn(48, 48, 1.0, &mut rng);
+        for i in 0..8 {
+            a.data[i * 131 % a.data.len()] = 250.0;
+        }
+        let b = Mat::randn(48, 32, 1.0, &mut rng);
+        let fa = fallback_quant(&a, 40.0, 16, INT8_LEVELS,
+                                Criterion::AbsMax);
+        let qb = block_quant(&b, 16, INT8_LEVELS, Rounding::Nearest);
+        let c_i8 = GemmPlan::new_fallback_path(&fa, &qb, &fa.u, 2,
+                                               DataPath::Int8)
+            .execute();
+        assert!(!fa.residual_f32_built(),
+                "residual f32 copy materialized on the i8 path");
+        assert!(!fa.base.f32_codes_built());
+        let c_sim = GemmPlan::new_fallback_path(&fa, &qb, &fa.u, 2,
+                                                DataPath::SimF32)
+            .execute();
+        assert_eq!(c_i8.data, c_sim.data);
+        assert!(fa.residual_f32_built());
+    }
+
+    #[test]
+    fn exactness_bound_is_tight() {
+        // bs · 127² ≤ 2²⁴ exactly at the bound, violated just past it.
+        assert_eq!(I8_EXACT_MAX_BS, 1040);
+        assert!(I8_EXACT_MAX_BS * 127 * 127 <= 1 << 24);
+        assert!((I8_EXACT_MAX_BS + 1) * 127 * 127 > 1 << 24);
+        assert_eq!(DataPath::auto_for(I8_EXACT_MAX_BS),
+                   DataPath::Int8);
+        assert_eq!(DataPath::auto_for(I8_EXACT_MAX_BS + 1),
+                   DataPath::SimF32);
+    }
+
+    #[test]
+    fn i8_exact_at_boundary_block_size() {
+        // Adversarial worst case at bs = I8_EXACT_MAX_BS: all codes
+        // saturated at ±127, so the block dot hits bs·127² — the
+        // largest magnitude the exactness argument must cover. The i8
+        // path must agree bitwise with both the f32 simulation and the
+        // exact i64 reference.
+        let bs = I8_EXACT_MAX_BS;
+        let a = Mat::from_vec(2, bs, vec![127.0f32; 2 * bs]);
+        let b = Mat::from_vec(bs, 2, vec![127.0f32; 2 * bs]);
+        let qa = block_quant(&a, bs, INT8_LEVELS, Rounding::Nearest);
+        let qb = block_quant(&b, bs, INT8_LEVELS, Rounding::Nearest);
+        assert!(qa.q[..a.cols].iter().all(|&q| q == 127));
+        let c_i8 = GemmPlan::new_int8_path(&qa, &qb, 1, DataPath::Int8)
+            .execute();
+        let c_sim =
+            GemmPlan::new_int8_path(&qa, &qb, 1, DataPath::SimF32)
+                .execute();
+        let c_ref = crate::gemm::int8::block_gemm_reference(&qa, &qb);
+        assert_eq!(c_i8.data, c_sim.data);
+        assert_eq!(c_i8.data, c_ref.data);
+        // the raw dot really is bs·127², scaled by the one shared
+        // per-block scale product — the same FP ops the engine runs
+        let dot = (bs * 127 * 127) as f32;
+        let w = qa.scale[0] * qb.scale[0];
+        assert_eq!(c_i8.data[0], dot * w);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "exceeds the f32-exact range")]
+    fn i8_overflow_guard_fires_past_exactness_bound() {
+        // One past the bound with saturated codes: the widening loses
+        // bits and the debug guard must catch it.
+        let bs = I8_EXACT_MAX_BS + 1;
+        let a = Mat::from_vec(1, bs, vec![127.0f32; bs]);
+        let b = Mat::from_vec(bs, 1, vec![127.0f32; bs]);
+        let qa = block_quant(&a, bs, INT8_LEVELS, Rounding::Nearest);
+        let qb = block_quant(&b, bs, INT8_LEVELS, Rounding::Nearest);
+        // force the i8 path — auto_for would refuse it here
+        GemmPlan::new_int8_path(&qa, &qb, 1, DataPath::Int8).execute();
     }
 }

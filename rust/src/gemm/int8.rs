@@ -20,7 +20,7 @@
 //! `benches/gemm_engine.rs` and the bit-identity oracles of
 //! `tests/engine_prop.rs`.
 
-use crate::gemm::engine::GemmPlan;
+use crate::gemm::engine::{DataPath, GemmPlan};
 use crate::quant::{BlockQuant, FallbackQuant};
 use crate::util::threadpool::parallel_chunks;
 use crate::util::Mat;
@@ -71,10 +71,18 @@ fn block_row_dot_f32(
 
 /// C = deq(A) * deq(B) with per-block INT8 codes (paper Eq. 1).
 /// `a` blocks are (M x K), `b` blocks are (K x N); both must share the
-/// same block size. Plans and executes through the engine; output is
+/// same block size. Plans and executes through the engine on the
+/// default data path (true i8 within the exactness bound); output is
 /// bit-identical to [`block_gemm_baseline`] for every thread count.
 pub fn block_gemm(a: &BlockQuant, b: &BlockQuant, threads: usize) -> Mat {
     GemmPlan::new_int8(a, b, threads).execute()
+}
+
+/// [`block_gemm`] on an explicit [`DataPath`] (SimF32 keeps the f32
+/// simulation; Int8 forces the i8 operands + i32 kernels).
+pub fn block_gemm_path(a: &BlockQuant, b: &BlockQuant, threads: usize,
+                       path: DataPath) -> Mat {
+    GemmPlan::new_int8_path(a, b, threads, path).execute()
 }
 
 /// Retained seed implementation (pre-engine): per-call code conversion,
@@ -203,6 +211,13 @@ pub fn fallback_gemm(fa: &FallbackQuant, b: &BlockQuant, u: &[bool],
     GemmPlan::new_fallback(fa, b, u, threads).execute()
 }
 
+/// [`fallback_gemm`] on an explicit [`DataPath`].
+pub fn fallback_gemm_path(fa: &FallbackQuant, b: &BlockQuant,
+                          u: &[bool], threads: usize, path: DataPath)
+                          -> Mat {
+    GemmPlan::new_fallback_path(fa, b, u, threads, path).execute()
+}
+
 /// Retained seed implementation (pre-engine) of the fallback GEMM; see
 /// [`block_gemm_baseline`]. Row panels are chunked contiguously, so
 /// Sequential placement concentrates the residual work on the first
@@ -301,6 +316,44 @@ pub fn block_gemm_reference(a: &BlockQuant, b: &BlockQuant) -> Mat {
     c
 }
 
+/// Exact-integer reference for the fallback GEMM (Algorithm 1): i64
+/// block dots widened once per K-block, then the same per-block
+/// scale-FMA order as the engine (base add, then conditional residual
+/// add). Bit-identical to the engine — on either data path — and to
+/// [`fallback_gemm_baseline`] whenever the block size is within
+/// `engine::I8_EXACT_MAX_BS`.
+pub fn fallback_gemm_reference(fa: &FallbackQuant, b: &BlockQuant,
+                               u: &[bool]) -> Mat {
+    let a = &fa.base;
+    let bs = a.block;
+    let (m, n) = (a.rows, b.cols);
+    let kb = a.cb();
+    let nbk = b.cb();
+    let mut c = Mat::zeros(m, n);
+    for r in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for bk in 0..kb {
+                let mut base_i = 0i64;
+                let mut res_i = 0i64;
+                for k in bk * bs..((bk + 1) * bs).min(a.cols) {
+                    let bq = b.q[k * b.pcols + j] as i64;
+                    base_i += a.q[r * a.pcols + k] as i64 * bq;
+                    res_i += fa.rq[r * a.pcols + k] as i64 * bq;
+                }
+                let bi = (r / bs) * kb + bk;
+                let sb = b.scale[bk * nbk + j / bs];
+                acc += base_i as f32 * (a.scale[bi] * sb);
+                if u[bi] {
+                    acc += res_i as f32 * (fa.rscale[bi] * sb);
+                }
+            }
+            c.data[r * n + j] = acc;
+        }
+    }
+    c
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -382,6 +435,38 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn references_bit_identical_to_engine() {
+        // With bs ≤ I8_EXACT_MAX_BS the exact-i64 oracles, the seed
+        // baselines, and both engine data paths all agree bitwise.
+        let (a, b) = mats(40, 33, 25, 77);
+        let qa = block_quant(&a, 16, INT8_LEVELS, Rounding::Nearest);
+        let qb = block_quant(&b, 16, INT8_LEVELS, Rounding::Nearest);
+        let c_ref = block_gemm_reference(&qa, &qb);
+        for path in [DataPath::SimF32, DataPath::Int8] {
+            assert_eq!(block_gemm_path(&qa, &qb, 2, path).data,
+                       c_ref.data, "{path:?}");
+        }
+        let mut rng = Pcg64::new(78);
+        let mut af = Mat::randn(48, 48, 1.0, &mut rng);
+        for _ in 0..8 {
+            let i = rng.below(af.data.len());
+            af.data[i] = 220.0;
+        }
+        let bf = Mat::randn(48, 17, 1.0, &mut rng);
+        let fa = fallback_quant(&af, 30.0, 16, INT8_LEVELS,
+                                Criterion::AbsMax);
+        let qbf = block_quant(&bf, 16, INT8_LEVELS, Rounding::Nearest);
+        let f_ref = fallback_gemm_reference(&fa, &qbf, &fa.u);
+        for path in [DataPath::SimF32, DataPath::Int8] {
+            assert_eq!(fallback_gemm_path(&fa, &qbf, &fa.u, 2, path)
+                           .data,
+                       f_ref.data, "{path:?}");
+        }
+        assert_eq!(fallback_gemm_baseline(&fa, &qbf, &fa.u, 1).data,
+                   f_ref.data);
     }
 
     #[test]

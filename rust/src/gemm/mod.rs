@@ -5,7 +5,10 @@
 //! engine in [`engine`] (packed operands, reusable workspaces,
 //! fallback-aware scheduling); the historical free functions remain as
 //! thin wrappers, and the pre-engine kernels are retained as
-//! `*_baseline` oracles/benchmark baselines.
+//! `*_baseline` oracles/benchmark baselines. The int8 modes default to
+//! the true i8 data path ([`DataPath::Int8`]: i8 panel packs, i32
+//! block accumulation — bit-identical to the f32 simulation for all
+//! paper block sizes); `*_path` wrappers expose the knob.
 //!
 //! These kernels give *measured* cost structure on this testbed (group
 //! size vs dequant overhead, fallback rate vs extra work, placement vs
@@ -17,9 +20,11 @@ pub mod engine;
 pub mod int8;
 
 pub use dense::{matmul, matmul_baseline, matmul_naive};
-pub use engine::{GemmPlan, Precision};
-pub use int8::{block_gemm, block_gemm_baseline, fallback_gemm,
-               fallback_gemm_baseline, remap_placement, Placement};
+pub use engine::{DataPath, GemmPlan, Precision, I8_EXACT_MAX_BS};
+pub use int8::{block_gemm, block_gemm_baseline, block_gemm_path,
+               block_gemm_reference, fallback_gemm,
+               fallback_gemm_baseline, fallback_gemm_path,
+               fallback_gemm_reference, remap_placement, Placement};
 
 use crate::quant::{block_quant, fallback_quant, Criterion, Rounding,
                    INT8_LEVELS};

@@ -11,7 +11,8 @@
 
 use std::sync::{Arc, OnceLock};
 
-use crate::util::rng::Pcg64;
+use crate::util::rng::{Pcg64, SplitMix64};
+use crate::util::threadpool::{default_threads, parallel_items};
 use crate::util::Mat;
 
 pub const INT8_LEVELS: f32 = 127.0;
@@ -47,6 +48,70 @@ impl PanelPack {
         let w = self.widths[bj];
         &self.data[self.starts[bj]..self.starts[bj] + self.prows * w]
     }
+
+    /// Resident bytes of the packed codes (4 per element).
+    pub fn bytes(&self) -> usize {
+        4 * self.data.len()
+    }
+}
+
+/// Column-panel-contiguous **i8** view of the codes — the true INT8
+/// B-operand layout of the GEMM engine's `DataPath::Int8` path. Same
+/// panel geometry as [`PanelPack`], but the codes stay 1 byte each, so
+/// the packed operand moves 4x fewer bytes than the f32 simulation.
+#[derive(Debug, Clone)]
+pub struct PanelPackI8 {
+    /// panel (block) size the pack was built for
+    pub block: usize,
+    /// logical (unpadded) column count
+    pub cols: usize,
+    /// padded row count — rows stored per panel
+    pub prows: usize,
+    /// offset of panel `bj` in `data`
+    pub starts: Vec<usize>,
+    /// logical width of panel `bj` (last panel may be narrower)
+    pub widths: Vec<usize>,
+    /// i8 codes, panel-major
+    pub data: Vec<i8>,
+}
+
+impl PanelPackI8 {
+    /// The contiguous rows of panel `bj` (`prows * widths[bj]` codes).
+    #[inline]
+    pub fn panel(&self, bj: usize) -> &[i8] {
+        let w = self.widths[bj];
+        &self.data[self.starts[bj]..self.starts[bj] + self.prows * w]
+    }
+
+    /// Resident bytes of the packed codes (1 per element).
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Column-panel packing shared by the f32 and i8 views: walk panels
+/// left to right, copy each panel's `prows` rows contiguously, apply
+/// `conv` per code. Returns `(starts, widths, data)`.
+fn pack_col_panels<T: Copy, U>(
+    q: &[T], prows: usize, pcols: usize, cols: usize, bs: usize,
+    conv: impl Fn(T) -> U,
+) -> (Vec<usize>, Vec<usize>, Vec<U>) {
+    let cb = pcols / bs;
+    let mut starts = Vec::with_capacity(cb);
+    let mut widths = Vec::with_capacity(cb);
+    let mut data = Vec::with_capacity(prows * cols);
+    for bj in 0..cb {
+        let c_lo = bj * bs;
+        let c_hi = ((bj + 1) * bs).min(cols);
+        let width = c_hi - c_lo;
+        starts.push(data.len());
+        widths.push(width);
+        for k in 0..prows {
+            let row = &q[k * pcols + c_lo..k * pcols + c_hi];
+            data.extend(row.iter().map(|&v| conv(v)));
+        }
+    }
+    (starts, widths, data)
 }
 
 /// Block-quantized matrix: q holds int8 codes in row-major order of the
@@ -71,10 +136,12 @@ pub struct BlockQuant {
     pub q: Vec<i8>,
     pub scale: Vec<f32>,
     pub absmax: Vec<f32>,
-    /// lazily cached row-major f32 copy of `q`
+    /// lazily cached row-major f32 copy of `q` (SimF32 path only)
     f32_cache: OnceLock<Arc<Vec<f32>>>,
-    /// lazily cached column-panel pack of `q`
+    /// lazily cached f32 column-panel pack of `q` (SimF32 path only)
     panel_cache: OnceLock<Arc<PanelPack>>,
+    /// lazily cached i8 column-panel pack of `q` (Int8 path)
+    i8_panel_cache: OnceLock<Arc<PanelPackI8>>,
 }
 
 impl BlockQuant {
@@ -130,30 +197,18 @@ impl BlockQuant {
             .clone()
     }
 
-    /// Cached column-panel pack of the codes — the B-operand layout of
-    /// `gemm::engine` (see [`PanelPack`]). Built on first use.
+    /// Cached f32 column-panel pack of the codes — the B-operand layout
+    /// of the engine's `DataPath::SimF32` path (see [`PanelPack`]).
+    /// Built on first use.
     pub fn col_panels(&self) -> Arc<PanelPack> {
         self.panel_cache
             .get_or_init(|| {
-                let bs = self.block;
-                let cb = self.cb();
-                let mut starts = Vec::with_capacity(cb);
-                let mut widths = Vec::with_capacity(cb);
-                let mut data = Vec::with_capacity(self.prows * self.cols);
-                for bj in 0..cb {
-                    let c_lo = bj * bs;
-                    let c_hi = ((bj + 1) * bs).min(self.cols);
-                    let width = c_hi - c_lo;
-                    starts.push(data.len());
-                    widths.push(width);
-                    for k in 0..self.prows {
-                        let row = &self.q[k * self.pcols + c_lo
-                                          ..k * self.pcols + c_hi];
-                        data.extend(row.iter().map(|&v| v as f32));
-                    }
-                }
+                let (starts, widths, data) = pack_col_panels(
+                    &self.q, self.prows, self.pcols, self.cols,
+                    self.block, |v| v as f32,
+                );
                 Arc::new(PanelPack {
-                    block: bs,
+                    block: self.block,
                     cols: self.cols,
                     prows: self.prows,
                     starts,
@@ -162,6 +217,46 @@ impl BlockQuant {
                 })
             })
             .clone()
+    }
+
+    /// Cached **i8** column-panel pack of the codes — the B-operand
+    /// layout of the engine's `DataPath::Int8` path (see
+    /// [`PanelPackI8`]). Built on first use; a quarter the bytes of
+    /// [`col_panels`](BlockQuant::col_panels).
+    pub fn col_panels_i8(&self) -> Arc<PanelPackI8> {
+        self.i8_panel_cache
+            .get_or_init(|| {
+                let (starts, widths, data) = pack_col_panels(
+                    &self.q, self.prows, self.pcols, self.cols,
+                    self.block, |v| v,
+                );
+                Arc::new(PanelPackI8 {
+                    block: self.block,
+                    cols: self.cols,
+                    prows: self.prows,
+                    starts,
+                    widths,
+                    data,
+                })
+            })
+            .clone()
+    }
+
+    /// Whether the f32 code copy has been materialized. The Int8 data
+    /// path must leave this `false` (the 4x resident-set saving); the
+    /// SimF32 oracles build it lazily on demand.
+    pub fn f32_codes_built(&self) -> bool {
+        self.f32_cache.get().is_some()
+    }
+
+    /// Whether the f32 column-panel pack has been materialized.
+    pub fn f32_panels_built(&self) -> bool {
+        self.panel_cache.get().is_some()
+    }
+
+    /// Whether the i8 column-panel pack has been materialized.
+    pub fn i8_panels_built(&self) -> bool {
+        self.i8_panel_cache.get().is_some()
     }
 }
 
@@ -187,9 +282,77 @@ pub enum Rounding {
     Stochastic(u64),
 }
 
-/// Quantize with per-(B x B)-block absmax scaling.
+/// Deterministic per-block RNG stream for stochastic rounding: the
+/// user seed is SplitMix64-expanded once, then xor-folded with a
+/// golden-ratio multiple of the block index. Every block draws from
+/// its own stream, so quantization results are identical for every
+/// worker count and block visit order.
+fn block_stream(seed: u64, bi: u64) -> Pcg64 {
+    let mut sm = SplitMix64(seed);
+    let base = sm.next();
+    Pcg64::new(base ^ bi.wrapping_add(1).wrapping_mul(0x9e3779b97f4a7c15))
+}
+
+/// Quantize one block row (`block` matrix rows, all column blocks):
+/// absmax sweep, scale, rounding. `qrow` is the block row's slice of
+/// the padded code matrix; `srow`/`arow` its row of the scale/absmax
+/// grids.
+#[allow(clippy::too_many_arguments)]
+fn quant_block_row(
+    x: &Mat, block: usize, levels: f32, rounding: Rounding, br: usize,
+    pcols: usize, qrow: &mut [i8], srow: &mut [f32], arow: &mut [f32],
+) {
+    let cb = srow.len();
+    let r0 = br * block;
+    let r1 = (r0 + block).min(x.rows);
+    for bc in 0..cb {
+        let c0 = bc * block;
+        let c1 = (c0 + block).min(x.cols);
+        let mut am = 0.0f32;
+        for r in r0..r1 {
+            for c in c0..c1 {
+                am = am.max(x.at(r, c).abs());
+            }
+        }
+        let s = safe_scale(am, levels);
+        arow[bc] = am;
+        srow[bc] = s;
+        let inv = 1.0 / s;
+        let mut rng = match rounding {
+            Rounding::Stochastic(seed) => {
+                Some(block_stream(seed, (br * cb + bc) as u64))
+            }
+            Rounding::Nearest => None,
+        };
+        for r in r0..r1 {
+            for c in c0..c1 {
+                let v = x.at(r, c) * inv;
+                let rounded = match &mut rng {
+                    None => v.round_ties_even(),
+                    Some(rng) => (v + rng.uniform_f32()).floor(),
+                };
+                qrow[(r - r0) * pcols + c] =
+                    rounded.clamp(-levels, levels) as i8;
+            }
+        }
+    }
+}
+
+/// Quantize with per-(B x B)-block absmax scaling. Runs on
+/// [`default_threads`] workers; see [`block_quant_threads`] for
+/// explicit control. Results are bitwise thread-count-independent:
+/// each block row owns disjoint output slices and stochastic rounding
+/// draws from per-block RNG streams.
 pub fn block_quant(x: &Mat, block: usize, levels: f32,
                    rounding: Rounding) -> BlockQuant {
+    block_quant_threads(x, block, levels, rounding, default_threads())
+}
+
+/// [`block_quant`] with an explicit worker count (block rows are the
+/// parallel unit).
+pub fn block_quant_threads(x: &Mat, block: usize, levels: f32,
+                           rounding: Rounding, threads: usize)
+                           -> BlockQuant {
     let prows = pad_up(x.rows, block);
     let pcols = pad_up(x.cols, block);
     let rb = prows / block;
@@ -197,37 +360,19 @@ pub fn block_quant(x: &Mat, block: usize, levels: f32,
     let mut q = vec![0i8; prows * pcols];
     let mut scale = vec![1.0f32; rb * cb];
     let mut absmax = vec![0.0f32; rb * cb];
-    let mut rng = match rounding {
-        Rounding::Stochastic(seed) => Some(Pcg64::new(seed)),
-        Rounding::Nearest => None,
-    };
 
-    for br in 0..rb {
-        for bc in 0..cb {
-            let r0 = br * block;
-            let c0 = bc * block;
-            let mut am = 0.0f32;
-            for r in r0..(r0 + block).min(x.rows) {
-                for c in c0..(c0 + block).min(x.cols) {
-                    am = am.max(x.at(r, c).abs());
-                }
-            }
-            let s = safe_scale(am, levels);
-            absmax[br * cb + bc] = am;
-            scale[br * cb + bc] = s;
-            let inv = 1.0 / s;
-            for r in r0..(r0 + block).min(x.rows) {
-                for c in c0..(c0 + block).min(x.cols) {
-                    let v = x.at(r, c) * inv;
-                    let rounded = match &mut rng {
-                        None => v.round_ties_even(),
-                        Some(rng) => (v + rng.uniform_f32()).floor(),
-                    };
-                    q[r * pcols + c] =
-                        rounded.clamp(-levels, levels) as i8;
-                }
-            }
-        }
+    if rb > 0 && cb > 0 {
+        // One work item per block row: its `block` rows of `q` plus
+        // its row of the scale/absmax grids — disjoint by construction.
+        let items: Vec<_> = q
+            .chunks_mut(block * pcols)
+            .zip(scale.chunks_mut(cb).zip(absmax.chunks_mut(cb)))
+            .collect();
+        parallel_items(items, threads, |br, (qrow, (srow, arow))| {
+            quant_block_row(
+                x, block, levels, rounding, br, pcols, qrow, srow, arow,
+            );
+        });
     }
     BlockQuant {
         rows: x.rows,
@@ -240,6 +385,7 @@ pub fn block_quant(x: &Mat, block: usize, levels: f32,
         absmax,
         f32_cache: OnceLock::new(),
         panel_cache: OnceLock::new(),
+        i8_panel_cache: OnceLock::new(),
     }
 }
 
@@ -413,6 +559,67 @@ mod tests {
             }
         }
         assert!(Arc::ptr_eq(&p, &bq.col_panels()));
+
+        // i8 pack mirrors the f32 pack exactly, at 1/4 the bytes
+        let pi = bq.col_panels_i8();
+        assert_eq!(pi.starts, p.starts);
+        assert_eq!(pi.widths, p.widths);
+        assert_eq!(pi.data.len(), p.data.len());
+        for (a, &b) in p.data.iter().zip(pi.data.iter()) {
+            assert_eq!(*a, b as f32);
+        }
+        assert_eq!(4 * pi.bytes(), p.bytes());
+        assert!(Arc::ptr_eq(&pi, &bq.col_panels_i8()));
+    }
+
+    #[test]
+    fn cache_introspection_tracks_materialization() {
+        let x = randmat(32, 32, 12);
+        let bq = block_quant(&x, 16, INT8_LEVELS, Rounding::Nearest);
+        assert!(!bq.f32_codes_built());
+        assert!(!bq.f32_panels_built());
+        assert!(!bq.i8_panels_built());
+        bq.col_panels_i8();
+        assert!(bq.i8_panels_built());
+        assert!(!bq.f32_codes_built() && !bq.f32_panels_built());
+        bq.codes_f32();
+        bq.col_panels();
+        assert!(bq.f32_codes_built() && bq.f32_panels_built());
+    }
+
+    #[test]
+    fn parallel_quant_thread_count_invariant() {
+        // Regression: block rows quantize in parallel with per-block
+        // stochastic-rounding streams — results must be bitwise
+        // identical for every worker count.
+        let x = randmat(70, 50, 11); // non-multiple-of-block shape
+        for rounding in [Rounding::Nearest, Rounding::Stochastic(42)] {
+            let q1 = block_quant_threads(&x, 16, INT8_LEVELS,
+                                         rounding, 1);
+            for threads in [2usize, 4, 7] {
+                let qt = block_quant_threads(&x, 16, INT8_LEVELS,
+                                             rounding, threads);
+                assert_eq!(q1.q, qt.q, "{rounding:?} x{threads}");
+                assert_eq!(q1.scale, qt.scale);
+                assert_eq!(q1.absmax, qt.absmax);
+            }
+        }
+    }
+
+    #[test]
+    fn stochastic_streams_differ_per_block() {
+        // Same sub-block values in different blocks must not share an
+        // RNG stream (independence across blocks).
+        let mut x = Mat::zeros(32, 16);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            // identical 16x16 pattern in both block rows
+            *v = ((i % 256) as f32) / 51.0 + 0.37;
+        }
+        let bq = block_quant(&x, 16, INT8_LEVELS,
+                             Rounding::Stochastic(9));
+        let top = &bq.q[..16 * bq.pcols];
+        let bot = &bq.q[16 * bq.pcols..32 * bq.pcols];
+        assert_ne!(top, bot, "per-block streams collapsed");
     }
 
     #[test]

@@ -7,9 +7,11 @@
 
 use std::sync::{Arc, OnceLock};
 
+use crate::util::threadpool::{default_threads, parallel_items};
 use crate::util::Mat;
 
-use super::block::{block_quant, safe_scale, BlockQuant, Rounding};
+use super::block::{block_quant_threads, safe_scale, BlockQuant,
+                   Rounding};
 
 /// Fallback selection criterion (§4.4, Fig 3c).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -73,7 +75,9 @@ impl FallbackQuant {
     }
 
     /// Cached f32 copy of the residual codes (same padded row-major
-    /// layout as `base.q`); built once, shared by every later GEMM.
+    /// layout as `base.q`); built once, shared by every later SimF32
+    /// GEMM. The Int8 data path reads `rq` directly and never
+    /// materializes this.
     pub fn residual_f32(&self) -> Arc<Vec<f32>> {
         self.rf32_cache
             .get_or_init(|| {
@@ -81,62 +85,111 @@ impl FallbackQuant {
             })
             .clone()
     }
+
+    /// Whether the f32 residual copy has been materialized (must stay
+    /// `false` while only the Int8 data path runs).
+    pub fn residual_f32_built(&self) -> bool {
+        self.rf32_cache.get().is_some()
+    }
 }
 
-/// Two-step fallback quantization of `x` with threshold `theta`.
+/// Residual-quantize one block row: metric sweep, fallback decision,
+/// residual codes. `rqrow` is the block row's slice of the padded
+/// residual code matrix; `srow`/`urow`/`mrow` its rows of the
+/// per-block grids.
+#[allow(clippy::too_many_arguments)]
+fn fallback_block_row(
+    x: &Mat, base: &BlockQuant, theta: f32, block: usize, levels: f32,
+    criterion: Criterion, br: usize, rqrow: &mut [i8],
+    srow: &mut [f32], urow: &mut [bool], mrow: &mut [f32],
+) {
+    let cb = srow.len();
+    let r0 = br * block;
+    let r1 = (r0 + block).min(x.rows);
+    for bc in 0..cb {
+        let bi = br * cb + bc;
+        let c0 = bc * block;
+        let c1 = (c0 + block).min(x.cols);
+        let s = base.scale[bi];
+        // residual + metric accumulation in one sweep
+        let mut rmax = 0.0f32;
+        let mut l1 = 0.0f64;
+        let mut tot = 0.0f64;
+        for r in r0..r1 {
+            for c in c0..c1 {
+                let v = x.at(r, c);
+                let deq = base.q[r * base.pcols + c] as f32 * s;
+                let resid = v - deq;
+                rmax = rmax.max(resid.abs());
+                l1 += resid.abs() as f64;
+                tot += v.abs() as f64;
+            }
+        }
+        mrow[bc] = match criterion {
+            Criterion::AbsMax => base.absmax[bi],
+            Criterion::L1 => l1 as f32,
+            Criterion::L1Rel => {
+                if tot > 0.0 {
+                    (l1 / tot) as f32
+                } else {
+                    0.0
+                }
+            }
+        };
+        urow[bc] = mrow[bc] > theta;
+        let rs = safe_scale(rmax, levels);
+        srow[bc] = rs;
+        let inv = 1.0 / rs;
+        for r in r0..r1 {
+            for c in c0..c1 {
+                let deq = base.q[r * base.pcols + c] as f32 * s;
+                let resid = x.at(r, c) - deq;
+                rqrow[(r - r0) * base.pcols + c] = (resid * inv)
+                    .round_ties_even()
+                    .clamp(-levels, levels) as i8;
+            }
+        }
+    }
+}
+
+/// Two-step fallback quantization of `x` with threshold `theta`. Runs
+/// on [`default_threads`] workers; see [`fallback_quant_threads`].
+/// Bitwise thread-count-independent (no RNG; disjoint block-row
+/// outputs).
 pub fn fallback_quant(x: &Mat, theta: f32, block: usize, levels: f32,
                       criterion: Criterion) -> FallbackQuant {
-    let base = block_quant(x, block, levels, Rounding::Nearest);
+    fallback_quant_threads(x, theta, block, levels, criterion,
+                           default_threads())
+}
+
+/// [`fallback_quant`] with an explicit worker count (block rows are
+/// the parallel unit, for both the base quantization and the residual
+/// pass).
+pub fn fallback_quant_threads(x: &Mat, theta: f32, block: usize,
+                              levels: f32, criterion: Criterion,
+                              threads: usize) -> FallbackQuant {
+    let base =
+        block_quant_threads(x, block, levels, Rounding::Nearest, threads);
     let (rb, cb) = (base.rb(), base.cb());
     let mut rq = vec![0i8; base.q.len()];
     let mut rscale = vec![1.0f32; rb * cb];
     let mut u = vec![false; rb * cb];
     let mut metric = vec![0.0f32; rb * cb];
 
-    for br in 0..rb {
-        for bc in 0..cb {
-            let bi = br * cb + bc;
-            let (r0, c0) = (br * block, bc * block);
-            let s = base.scale[bi];
-            // residual + metric accumulation in one sweep
-            let mut rmax = 0.0f32;
-            let mut l1 = 0.0f64;
-            let mut tot = 0.0f64;
-            for r in r0..(r0 + block).min(x.rows) {
-                for c in c0..(c0 + block).min(x.cols) {
-                    let v = x.at(r, c);
-                    let deq = base.q[r * base.pcols + c] as f32 * s;
-                    let resid = v - deq;
-                    rmax = rmax.max(resid.abs());
-                    l1 += resid.abs() as f64;
-                    tot += v.abs() as f64;
-                }
-            }
-            metric[bi] = match criterion {
-                Criterion::AbsMax => base.absmax[bi],
-                Criterion::L1 => l1 as f32,
-                Criterion::L1Rel => {
-                    if tot > 0.0 {
-                        (l1 / tot) as f32
-                    } else {
-                        0.0
-                    }
-                }
-            };
-            u[bi] = metric[bi] > theta;
-            let rs = safe_scale(rmax, levels);
-            rscale[bi] = rs;
-            let inv = 1.0 / rs;
-            for r in r0..(r0 + block).min(x.rows) {
-                for c in c0..(c0 + block).min(x.cols) {
-                    let deq = base.q[r * base.pcols + c] as f32 * s;
-                    let resid = x.at(r, c) - deq;
-                    rq[r * base.pcols + c] = (resid * inv)
-                        .round_ties_even()
-                        .clamp(-levels, levels) as i8;
-                }
-            }
-        }
+    if rb > 0 && cb > 0 {
+        let items: Vec<_> = rq
+            .chunks_mut(block * base.pcols)
+            .zip(rscale.chunks_mut(cb))
+            .zip(u.chunks_mut(cb))
+            .zip(metric.chunks_mut(cb))
+            .collect();
+        parallel_items(items, threads,
+                       |br, (((rqrow, srow), urow), mrow)| {
+            fallback_block_row(
+                x, &base, theta, block, levels, criterion, br, rqrow,
+                srow, urow, mrow,
+            );
+        });
     }
     FallbackQuant {
         base,
@@ -318,6 +371,24 @@ mod tests {
         // determinism
         assert_eq!(theta_for_rate(&metrics, 0.3).to_bits(),
                    theta_for_rate(&metrics, 0.3).to_bits());
+    }
+
+    #[test]
+    fn parallel_fallback_thread_count_invariant() {
+        // Regression: residual quantization parallelized over block
+        // rows must be bitwise identical for every worker count.
+        let x = outlier_mat(70, 55, 8, 12, 250.0);
+        let f1 = fallback_quant_threads(&x, 30.0, 16, INT8_LEVELS,
+                                        Criterion::AbsMax, 1);
+        for threads in [2usize, 4, 7] {
+            let ft = fallback_quant_threads(&x, 30.0, 16, INT8_LEVELS,
+                                            Criterion::AbsMax, threads);
+            assert_eq!(f1.base.q, ft.base.q, "threads={threads}");
+            assert_eq!(f1.rq, ft.rq);
+            assert_eq!(f1.rscale, ft.rscale);
+            assert_eq!(f1.u, ft.u);
+            assert_eq!(f1.metric, ft.metric);
+        }
     }
 
     #[test]

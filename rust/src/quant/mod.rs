@@ -11,9 +11,10 @@ pub mod granularity;
 pub mod group;
 pub mod metrics;
 
-pub use block::{block_quant, int16_block_quant, BlockQuant, PanelPack,
-                Rounding, INT8_LEVELS};
-pub use fallback::{fallback_quant, theta_for_rate, Criterion,
-                   FallbackQuant};
+pub use block::{block_quant, block_quant_threads, int16_block_quant,
+                BlockQuant, PanelPack, PanelPackI8, Rounding,
+                INT8_LEVELS};
+pub use fallback::{fallback_quant, fallback_quant_threads,
+                   theta_for_rate, Criterion, FallbackQuant};
 pub use granularity::{granular_quant, switchback_matmul, Granularity};
 pub use group::{group_quant, levels_for_bits, GroupQuant};

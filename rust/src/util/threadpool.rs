@@ -84,6 +84,30 @@ pub fn weighted_buckets(weights: &[f64], threads: usize) -> Vec<Vec<usize>> {
     buckets
 }
 
+/// Distribute owned work items across threads: `f(i, item)` runs
+/// exactly once per item, with the index range split by
+/// [`parallel_chunks`]. Items are handed out *by value*, which lets
+/// callers pre-split disjoint `&mut` output regions (e.g. with
+/// `chunks_mut`) and move each into its worker — borrow-checked
+/// data-parallel writes with no `unsafe` and no aliasing. The quant
+/// constructors use this to parallelize block-row quantization.
+pub fn parallel_items<T, F>(items: Vec<T>, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, T) + Sync,
+{
+    let slots: Vec<std::sync::Mutex<Option<T>>> = items
+        .into_iter()
+        .map(|t| std::sync::Mutex::new(Some(t)))
+        .collect();
+    parallel_chunks(slots.len(), threads, |a, b| {
+        for (i, slot) in slots.iter().enumerate().take(b).skip(a) {
+            let item = slot.lock().unwrap().take().unwrap();
+            f(i, item);
+        }
+    });
+}
+
 /// Map `f` over `0..n`, collecting results in index order.
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
@@ -132,6 +156,36 @@ mod tests {
     #[test]
     fn empty_range_ok() {
         parallel_chunks(0, 4, |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn items_consumed_exactly_once() {
+        let data: Vec<usize> = (0..100).collect();
+        let hits: Vec<AtomicUsize> =
+            (0..100).map(|_| AtomicUsize::new(0)).collect();
+        parallel_items(data, 4, |i, v| {
+            assert_eq!(i, v, "index/item pairing");
+            hits[v].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        // empty input is a no-op
+        parallel_items(Vec::<usize>::new(), 4, |_, _| {
+            panic!("must not run")
+        });
+    }
+
+    #[test]
+    fn items_carry_disjoint_mut_slices() {
+        let mut buf = vec![0u32; 64];
+        {
+            let items: Vec<_> = buf.chunks_mut(16).collect();
+            parallel_items(items, 3, |i, chunk| {
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    *v = (i * 16 + j) as u32;
+                }
+            });
+        }
+        assert_eq!(buf, (0u32..64).collect::<Vec<u32>>());
     }
 
     #[test]

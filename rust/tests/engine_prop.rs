@@ -1,17 +1,23 @@
 //! Property tests for the plan/execute GEMM engine: across thread
-//! counts (1/2/4), all three `Placement` scenarios, and
+//! counts (1/2/4), **both data paths** (SimF32 f32-code simulation and
+//! the true-i8/i32 path), all three `Placement` scenarios, and
 //! non-multiple-of-block shapes, the engine must be **bit-identical**
 //! to the retained pre-engine baselines (`matmul_baseline`,
-//! `block_gemm_baseline`, `fallback_gemm_baseline`).
+//! `block_gemm_baseline`, `fallback_gemm_baseline`) *and* to the
+//! exact-i64 reference oracles (`block_gemm_reference`,
+//! `fallback_gemm_reference`).
 //!
-//! Bitwise equality (not approximate) is the contract: the engine
-//! changed operand layout and scheduling but not one floating-point
-//! operation's order, so any single-bit diff is a real regression.
+//! Bitwise equality (not approximate) is the contract: for block
+//! sizes within `I8_EXACT_MAX_BS` every K-block dot is an integer
+//! below 2²⁴, so layout, scheduling, and even integer-vs-float
+//! accumulation must not change a single bit.
 
 use dbfq::gemm::{
-    block_gemm, block_gemm_baseline, fallback_gemm,
-    fallback_gemm_baseline, matmul, matmul_baseline, remap_placement,
-    GemmPlan, Placement, Precision,
+    block_gemm, block_gemm_baseline, block_gemm_path,
+    block_gemm_reference, fallback_gemm, fallback_gemm_baseline,
+    fallback_gemm_path, fallback_gemm_reference, matmul,
+    matmul_baseline, remap_placement, DataPath, GemmPlan, Placement,
+    Precision,
 };
 use dbfq::prop_assert;
 use dbfq::quant::{block_quant, fallback_quant, theta_for_rate,
@@ -55,6 +61,8 @@ fn prop_int8_engine_bit_identical() {
         let b = Mat::from_vec(k, n, g.vec_normal(k * n, 1.0));
         let qa = block_quant(&a, BLOCK, INT8_LEVELS, Rounding::Nearest);
         let qb = block_quant(&b, BLOCK, INT8_LEVELS, Rounding::Nearest);
+        // the exact-i64 oracle anchors both data paths and the seed
+        let c_ref = block_gemm_reference(&qa, &qb);
         for threads in THREADS {
             let c_eng = block_gemm(&qa, &qb, threads);
             let c_seed = block_gemm_baseline(&qa, &qb, threads);
@@ -62,6 +70,14 @@ fn prop_int8_engine_bit_identical() {
                 c_eng.data == c_seed.data,
                 "int8 mismatch ({m},{k},{n}) threads={threads}"
             );
+            for path in [DataPath::SimF32, DataPath::Int8] {
+                let c_path = block_gemm_path(&qa, &qb, threads, path);
+                prop_assert!(
+                    c_path.data == c_ref.data,
+                    "int8 {path:?} vs i64 oracle ({m},{k},{n}) \
+                     threads={threads}"
+                );
+            }
         }
         Ok(())
     });
@@ -86,6 +102,7 @@ fn prop_fallback_engine_bit_identical_all_placements() {
         for placement in [Placement::Natural, Placement::Random(11),
                           Placement::Sequential] {
             let u = remap_placement(&fa, placement);
+            let c_ref = fallback_gemm_reference(&fa, &qb, &u);
             for threads in THREADS {
                 let c_eng = fallback_gemm(&fa, &qb, &u, threads);
                 let c_seed =
@@ -95,6 +112,15 @@ fn prop_fallback_engine_bit_identical_all_placements() {
                     "fallback mismatch ({m},{k},{n}) \
                      threads={threads} placement={placement:?}"
                 );
+                for path in [DataPath::SimF32, DataPath::Int8] {
+                    let c_path =
+                        fallback_gemm_path(&fa, &qb, &u, threads, path);
+                    prop_assert!(
+                        c_path.data == c_ref.data,
+                        "fallback {path:?} vs i64 oracle ({m},{k},{n}) \
+                         threads={threads} placement={placement:?}"
+                    );
+                }
             }
         }
         Ok(())

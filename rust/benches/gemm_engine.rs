@@ -16,15 +16,20 @@
 //!                     operands, i32 accumulation) — the steady-state
 //!                     training path
 //!
-//! Also reports packed bytes per operand (the 4x B-panel shrink the i8
-//! path buys) and the measured `SubstrateCalibration` the cost model
+//! Also sweeps the i8 path across **every microkernel backend** on
+//! the host (scalar / sse2 / avx2 / neon — the `PALLAS_KERNEL`
+//! choices), reports per-backend Gops plus the selected backend and
+//! detected CPU features in the JSON, installs the fastest measured
+//! backend as the process default via the calibration, reports packed
+//! bytes per operand (the 4x B-panel shrink the i8 path buys), and
+//! records the measured `SubstrateCalibration` the cost model
 //! consumes in place of its ad-hoc fallback-overhead constant.
 //!
 //! Set `BENCH_SMOKE=1` for a seconds-long CI smoke run (small dim,
 //! short iterations) that keeps this binary from rotting.
 
 use dbfq::costmodel::{rtx4090, SubstrateCalibration};
-use dbfq::gemm::{self, DataPath, GemmPlan, Placement};
+use dbfq::gemm::{self, kernels, DataPath, GemmPlan, Placement};
 use dbfq::quant::{self, Criterion, Rounding, INT8_LEVELS};
 use dbfq::util::bench::{bench, gops, Table};
 use dbfq::util::json::{obj, Json};
@@ -149,6 +154,39 @@ fn main() {
         ]));
     }
 
+    // -- i8 path per kernel backend -------------------------------------
+    // The acceptance bar: every SIMD backend must beat (or at worst
+    // match) the scalar floor on the default shapes.
+    let mut backend_rows = Vec::new();
+    let mut g_backend_scalar = 0.0f64;
+    let mut g_backend_best: (&'static str, f64) = ("scalar", 0.0);
+    for kn in kernels::available() {
+        let plan = GemmPlan::new_int8_path(&qa, &qb, nthreads,
+                                           DataPath::Int8)
+            .with_kernels(kn);
+        let g = measure(dim, target_ms, || {
+            std::hint::black_box(plan.execute());
+        });
+        if kn.name == "scalar" {
+            g_backend_scalar = g;
+        }
+        if g > g_backend_best.1 {
+            g_backend_best = (kn.name, g);
+        }
+        table.row(&[
+            format!("int8[{}]", kn.name), "0.00".into(), "-".into(),
+            nthreads.to_string(), "-".into(), "-".into(), "-".into(),
+            format!("{g:.2}"),
+            format!("{:.2}x", g / g_backend_scalar.max(1e-12)),
+        ]);
+        backend_rows.push(obj(vec![
+            ("name", Json::Str(kn.name.into())),
+            ("threads", Json::Num(nthreads as f64)),
+            ("gops_plan_i8", Json::Num(g)),
+        ]));
+    }
+    let simd_vs_scalar = g_backend_best.1 / g_backend_scalar.max(1e-12);
+
     // -- fallback: rate x placement x threads ---------------------------
     let mut seq_gap_worst: f64 = 0.0;
     let mut fb_i8_vs_sim_nt = 0.0;
@@ -228,9 +266,24 @@ fn main() {
         a_codes_i8 / 1024, a_codes_f32 / 1024
     );
 
+    println!(
+        "\nkernel backends @ {nthreads} threads: best {} \
+         {:.2} Gops = {simd_vs_scalar:.2}x scalar \
+         (target: SIMD >= scalar); detected features: {:?}",
+        g_backend_best.0, g_backend_best.1, kernels::cpu_features()
+    );
+
     // -- measured substrate calibration → cost model --------------------
     let cal_dim = if smoke { 128 } else { 512 };
     let cal = SubstrateCalibration::measure(cal_dim, BLOCK, nthreads);
+    // From here on, plans in this process default to the backend the
+    // calibration measured fastest (PALLAS_KERNEL still wins).
+    let installed = cal.install_fastest_backend();
+    println!(
+        "calibration installed fastest backend: {} \
+         (headline backend was {})",
+        installed.unwrap_or("<none>"), cal.backend
+    );
     let slope = cal.fallback_overhead_per_rate();
     let g4090 = rtx4090();
     let proj25 = 2.0 * (4096f64).powi(3)
@@ -274,6 +327,17 @@ fn main() {
             ("block", Json::Num(BLOCK as f64)),
         ])),
         ("threads_max", Json::Num(nthreads as f64)),
+        ("kernel_backend",
+         Json::Str(GemmPlan::new_int8_path(&qa, &qb, nthreads,
+                                           DataPath::Int8)
+             .kernel_backend()
+             .into())),
+        ("cpu_features",
+         Json::Arr(kernels::cpu_features()
+             .iter()
+             .map(|&f| Json::Str(f.into()))
+             .collect())),
+        ("backends", Json::Arr(backend_rows)),
         ("dense", Json::Arr(dense_rows)),
         ("int8", Json::Arr(int8_rows)),
         ("fallback", Json::Arr(fb_rows)),
@@ -288,6 +352,7 @@ fn main() {
             ("int8_i8_vs_sim", Json::Num(int8_i8_vs_sim_nt)),
             ("fallback_i8_vs_sim", Json::Num(fb_i8_vs_sim_nt)),
             ("seq_vs_random_gap_worst", Json::Num(seq_gap_worst)),
+            ("simd_vs_scalar", Json::Num(simd_vs_scalar)),
         ])),
         ("calibration", obj(vec![
             ("dense_gops", Json::Num(cal.dense_gops)),
@@ -296,6 +361,18 @@ fn main() {
             ("datapath_speedup", Json::Num(cal.datapath_speedup())),
             ("fallback_overhead_per_rate", Json::Num(slope)),
             ("projected_4090_tops_at_25pct", Json::Num(proj25)),
+            ("backend", Json::Str(cal.backend.into())),
+            ("installed_backend",
+             Json::Str(installed.unwrap_or("<none>").into())),
+            ("per_backend", Json::Arr(
+                cal.per_backend
+                    .iter()
+                    .map(|&(name, g)| obj(vec![
+                        ("name", Json::Str(name.into())),
+                        ("gops", Json::Num(g)),
+                    ]))
+                    .collect(),
+            )),
         ])),
     ]);
     std::fs::write("BENCH_gemm_engine.json", report.to_string())

@@ -8,6 +8,7 @@
 //! threads) and the N-thread:1-thread speedup. Set `BENCH_SMOKE=1` for
 //! a seconds-long CI smoke run.
 
+use dbfq::gemm::kernels;
 use dbfq::quant::{self, Criterion, Rounding, INT8_LEVELS};
 use dbfq::util::bench::{bench, Table};
 use dbfq::util::json::{obj, Json};
@@ -99,6 +100,15 @@ fn main() {
             ("block", Json::Num(BLOCK as f64)),
         ])),
         ("threads_max", Json::Num(nthreads as f64)),
+        // Quantization itself is kernel-agnostic, but the selected
+        // GEMM backend + detected features are recorded here too so
+        // every BENCH_*.json from one run names the same substrate.
+        ("kernel_backend", Json::Str(kernels::select().name.into())),
+        ("cpu_features",
+         Json::Arr(kernels::cpu_features()
+             .iter()
+             .map(|&f| Json::Str(f.into()))
+             .collect())),
         ("results", Json::Arr(rows)),
     ]);
     std::fs::write("BENCH_quant_throughput.json", report.to_string())

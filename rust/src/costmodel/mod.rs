@@ -188,6 +188,14 @@ impl Gpu {
 /// kernels (`int8_gops`, the deployed path) and the f32 simulation
 /// (`int8_sim_gops`, the seed-compatible oracle) — their ratio is the
 /// substrate's measured analogue of the paper's INT8:BF16 gain.
+///
+/// The i8 path is additionally swept across **every microkernel
+/// backend** available on the host (`per_backend`); because all
+/// backends are bit-identical, the fastest measured one can be
+/// installed as the process-wide default
+/// ([`install_fastest_backend`](SubstrateCalibration::install_fastest_backend))
+/// — calibration, not a static preference table, then decides what
+/// later plans run, unless a `PALLAS_KERNEL` override pins it.
 /// Produced by [`SubstrateCalibration::measure`] (used by
 /// `benches/gemm_engine.rs`) or built directly from recorded numbers.
 #[derive(Debug, Clone)]
@@ -205,6 +213,12 @@ pub struct SubstrateCalibration {
     /// (achieved fallback rate, Gops) samples on the i8 path,
     /// ascending in rate
     pub fallback: Vec<(f64, f64)>,
+    /// microkernel backend used for the headline `int8_gops` /
+    /// `fallback` numbers (the plan default at measure time)
+    pub backend: &'static str,
+    /// i8-path Gops per available kernel backend, in `available()`
+    /// order (scalar first)
+    pub per_backend: Vec<(&'static str, f64)>,
 }
 
 impl SubstrateCalibration {
@@ -233,12 +247,27 @@ impl SubstrateCalibration {
 
         let qa = block_quant(&a, block, INT8_LEVELS, Rounding::Nearest);
         let qb = block_quant(&b, block, INT8_LEVELS, Rounding::Nearest);
-        let i8_plan =
-            GemmPlan::new_int8_path(&qa, &qb, threads, DataPath::Int8);
-        let s = bench(|| {
-            std::hint::black_box(i8_plan.execute());
-        }, target_ms);
-        let int8_gops = gops(dim, dim, dim, s.median_secs());
+        // One sweep covers every backend including the selected
+        // default — the headline `int8_gops` is read out of the sweep
+        // rather than re-measured (select() always returns a member
+        // of available()).
+        let backend = crate::gemm::kernels::select().name;
+        let mut per_backend = Vec::new();
+        let mut int8_gops = 0.0;
+        for kn in crate::gemm::kernels::available() {
+            let plan =
+                GemmPlan::new_int8_path(&qa, &qb, threads,
+                                        DataPath::Int8)
+                    .with_kernels(kn);
+            let s = bench(|| {
+                std::hint::black_box(plan.execute());
+            }, target_ms);
+            let g = gops(dim, dim, dim, s.median_secs());
+            if kn.name == backend {
+                int8_gops = g;
+            }
+            per_backend.push((kn.name, g));
+        }
         let sim_plan = GemmPlan::new_int8_path(&qa, &qb, threads,
                                                DataPath::SimF32);
         let s = bench(|| {
@@ -270,7 +299,32 @@ impl SubstrateCalibration {
             int8_gops,
             int8_sim_gops,
             fallback,
+            backend,
+            per_backend,
         }
+    }
+
+    /// The kernel backend with the highest measured i8-path
+    /// throughput, with its Gops. `None` only if `per_backend` was
+    /// left empty on a hand-built calibration.
+    pub fn fastest_backend(&self) -> Option<(&'static str, f64)> {
+        self.per_backend
+            .iter()
+            .copied()
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+    }
+
+    /// Install the fastest *measured* backend as the process-wide
+    /// default for subsequent plan builds (`kernels::set_preferred`).
+    /// A `PALLAS_KERNEL` env override still takes precedence — this
+    /// only replaces the static detection-order preference with the
+    /// calibrated one. Returns the installed name, or `None` when
+    /// `per_backend` is empty or the name no longer resolves.
+    pub fn install_fastest_backend(&self) -> Option<&'static str> {
+        let (name, _) = self.fastest_backend()?;
+        let k = crate::gemm::kernels::by_name(name)?;
+        crate::gemm::kernels::set_preferred(k);
+        Some(name)
     }
 
     /// Measured slope of fallback overhead vs rate: extra time per unit
@@ -377,11 +431,28 @@ mod tests {
 
     #[test]
     fn substrate_calibration_measures_and_projects() {
+        // install_fastest_backend mutates the process-global kernel
+        // preference — serialize with the other test that touches it.
+        let _g = crate::gemm::kernels::PREFERRED_TEST_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
         let cal = SubstrateCalibration::measure(96, 16, 1);
         assert!(cal.dense_gops > 0.0);
         assert!(cal.int8_gops > 0.0);
         assert!(cal.int8_sim_gops > 0.0);
         assert!(cal.datapath_speedup() > 0.0);
+        // every host backend was swept and the fastest is installable
+        let avail = crate::gemm::kernels::available();
+        assert_eq!(cal.per_backend.len(), avail.len());
+        assert!(cal.per_backend.iter().all(|&(_, g)| g > 0.0));
+        assert!(avail.iter().any(|k| k.name == cal.backend));
+        let (fast, fast_gops) = cal.fastest_backend().unwrap();
+        assert!(cal.per_backend.iter().all(|&(_, g)| g <= fast_gops));
+        assert_eq!(cal.install_fastest_backend(), Some(fast));
+        // restore the static preference so later tests in this
+        // process are unaffected (results are bit-identical anyway)
+        crate::gemm::kernels::set_preferred(
+            crate::gemm::kernels::detect_best());
         assert_eq!(cal.fallback.len(), 2);
         assert!(cal.fallback.iter().all(|&(_, g)| g > 0.0));
         // achieved rates bracket the request reasonably

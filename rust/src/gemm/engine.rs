@@ -72,18 +72,29 @@
 //! K step. A's codes are row-major and already row-panel contiguous, so
 //! they are only converted to f32 (cached), not relaid.
 //!
-//! ## Microkernel and bit-exactness
+//! ## Microkernels, backends, and bit-exactness
 //!
 //! [`Precision`] selects the inner microkernel behind one shared outer
-//! loop (`bj` panels → row pairs → `bk` K-blocks). The per-element
-//! floating-point operation sequence is kept *identical* to the seed
-//! kernels — same 4-wide K grouping, same `acc` zero-fill, same
-//! zero-code skip in the K remainder, same per-K-block scale-FMA order —
-//! so engine outputs are **bit-identical** to the `*_baseline`
-//! implementations for every thread count and placement (asserted by
-//! `tests/engine_prop.rs`). Rows are processed in pairs sharing each
-//! loaded B row, which halves B-panel traffic without touching
-//! per-element operation order.
+//! loop (`bj` panels → row tiles → `bk` K-blocks). The microkernels
+//! themselves live in [`kernels`](crate::gemm::kernels) behind a
+//! [`Kernels`] vtable chosen **once at plan build** — `PALLAS_KERNEL`
+//! env override → calibration preference → fastest detected backend
+//! (scalar / sse2 / avx2 / neon); [`with_kernels`](GemmPlan::with_kernels)
+//! pins a plan to an explicit backend for tests and calibration.
+//!
+//! On the f32 (SimF32/dense) kernels the per-element floating-point
+//! operation sequence is kept *identical* to the seed kernels — same
+//! 4-wide K grouping, same `acc` zero-fill, same zero-code skip in the
+//! K remainder, same per-K-block scale-FMA order — so engine outputs
+//! are **bit-identical** to the `*_baseline` implementations for every
+//! thread count and placement (asserted by `tests/engine_prop.rs`).
+//! The i8 kernels accumulate exact integers in i32, so *every* backend
+//! (any lane order, any register blocking) produces the same integer
+//! and the same widened f32 — bit-identity holds per backend, not just
+//! for the scalar floor. The i8 path tiles up to **four** A rows per
+//! loaded B row (the SIMD backends keep a rows × 16-column accumulator
+//! tile in registers); the SimF32 oracle path keeps the seed's row
+//! pairs.
 //!
 //! ## Scheduling policy
 //!
@@ -108,6 +119,7 @@
 
 use std::sync::Arc;
 
+use crate::gemm::kernels::{self, panel_dot, panel_dot2, DotI8, Kernels};
 use crate::quant::{BlockQuant, FallbackQuant, PanelPack, PanelPackI8};
 use crate::util::threadpool::weighted_buckets;
 use crate::util::Mat;
@@ -231,6 +243,9 @@ pub struct GemmPlan<'a> {
     /// per-sub-panel schedule weight (∝ expected cost)
     weights: Vec<f64>,
     kernel: Kernel<'a>,
+    /// microkernel backend (selected once at build; see
+    /// [`kernels::select`])
+    kernels: &'static Kernels,
 }
 
 impl<'a> GemmPlan<'a> {
@@ -260,6 +275,7 @@ impl<'a> GemmPlan<'a> {
             nbk: 0,
             weights,
             kernel: Kernel::Dense { a, b },
+            kernels: kernels::select(),
         }
     }
 
@@ -316,6 +332,7 @@ impl<'a> GemmPlan<'a> {
             nbk,
             weights,
             kernel,
+            kernels: kernels::select(),
         }
     }
 
@@ -393,7 +410,22 @@ impl<'a> GemmPlan<'a> {
             nbk,
             weights,
             kernel,
+            kernels: kernels::select(),
         }
+    }
+
+    /// Pin this plan to an explicit microkernel backend (tests,
+    /// calibration, per-backend benches). All backends are
+    /// bit-identical on the i8 path, so this only changes speed.
+    pub fn with_kernels(mut self, k: &'static Kernels) -> GemmPlan<'a> {
+        self.kernels = k;
+        self
+    }
+
+    /// Name of the microkernel backend this plan executes with
+    /// (`scalar`, `sse2`, `avx2`, `neon`, ...).
+    pub fn kernel_backend(&self) -> &'static str {
+        self.kernels.name
     }
 
     pub fn precision(&self) -> Precision {
@@ -490,21 +522,23 @@ impl<'a> GemmPlan<'a> {
         c
     }
 
-    /// f32 workspace length: two accumulator rows for the paired int8
-    /// microkernels; the dense kernel accumulates into C directly.
+    /// f32 workspace length: four accumulator rows — the i8 backends
+    /// tile up to four A rows (row `t` at offset `t·bs`), the SimF32
+    /// kernels use the first two, the dense kernel accumulates into C
+    /// directly.
     fn acc_len(&self) -> usize {
         match self.mode {
             Precision::Dense => 0,
-            _ => 2 * self.bs,
+            _ => 4 * self.bs,
         }
     }
 
-    /// i32 workspace length: the i8 path additionally carries two
+    /// i32 workspace length: the i8 path additionally carries four
     /// integer accumulator rows (widened into the f32 rows once per
     /// K-block).
     fn acci_len(&self) -> usize {
         match &self.kernel {
-            Kernel::I8 { .. } => 2 * self.bs,
+            Kernel::I8 { .. } => 4 * self.bs,
             _ => 0,
         }
     }
@@ -524,7 +558,7 @@ impl<'a> GemmPlan<'a> {
                         let pair = &mut crows[rl * self.n
                                               ..(rl + 2) * self.n];
                         let (c0, c1) = pair.split_at_mut(self.n);
-                        dense_rows2(
+                        (self.kernels.dense2)(
                             a.row(r_lo + rl),
                             a.row(r_lo + rl + 1),
                             b,
@@ -642,8 +676,11 @@ impl<'a> GemmPlan<'a> {
 
     /// Int8-path twin of [`run_panel_sim`](Self::run_panel_sim): same
     /// outer loop and scale-FMA order, but the block dots stream i8
-    /// operands into the i32 workspace and widen once per K-block —
-    /// bit-identical output for `bs ≤ I8_EXACT_MAX_BS`.
+    /// operands through the selected backend's row-tile kernels (up
+    /// to 4 A rows per loaded B row) into the i32 workspace and widen
+    /// once per K-block — bit-identical output for
+    /// `bs ≤ I8_EXACT_MAX_BS` on every backend, because the integer
+    /// block dot is exact regardless of lane order or tiling.
     #[allow(clippy::too_many_arguments)]
     fn run_panel_i8(
         &self, bi: usize, r_lo: usize, crows: &mut [f32], rows: usize,
@@ -652,75 +689,55 @@ impl<'a> GemmPlan<'a> {
         resid: Option<&ResidI8<'_>>,
     ) {
         let bs = self.bs;
-        let (acc0, acc1) = acc.split_at_mut(bs);
-        let (acci0, acci1) = acci.split_at_mut(bs);
+        let kn = self.kernels;
         for bj in 0..self.nbk {
             let width = bp.widths[bj];
             let c_lo = bj * bs;
             let panel = bp.panel(bj);
             let mut rl = 0usize;
             while rl < rows {
-                let pair = rl + 1 < rows;
-                if pair {
-                    let rowpair =
-                        &mut crows[rl * self.n..(rl + 2) * self.n];
-                    let (row0, row1) = rowpair.split_at_mut(self.n);
-                    let crow0 = &mut row0[c_lo..c_lo + width];
-                    let crow1 = &mut row1[c_lo..c_lo + width];
-                    for bk in 0..self.kb {
-                        let sa = a_scale[bi * self.kb + bk];
-                        let sb = b_scale[bk * self.nbk + bj];
-                        panel_dot2_i8(
-                            qa, a_pcols, r_lo + rl, bk * bs, bs,
-                            panel, width, acci0, acci1, acc0, acc1,
-                        );
-                        let w = sa * sb;
-                        scale_add(crow0, acc0, width, w);
-                        scale_add(crow1, acc1, width, w);
-                        if let Some(res) = resid {
-                            // Algorithm 1 lines 13-16: residual work
-                            // really skipped when u = 0.
-                            if res.u[bi * self.kb + bk] {
-                                let rs = res.r_scale[bi * self.kb + bk];
-                                panel_dot2_i8(
-                                    res.rq, a_pcols, r_lo + rl,
-                                    bk * bs, bs, panel, width, acci0,
-                                    acci1, acc0, acc1,
-                                );
-                                let rw = rs * sb;
-                                scale_add(crow0, acc0, width, rw);
-                                scale_add(crow1, acc1, width, rw);
-                            }
-                        }
-                    }
-                    rl += 2;
+                let left = rows - rl;
+                let (tile, dot): (usize, DotI8) = if left >= 4 {
+                    (4, kn.dot4_i8)
+                } else if left >= 2 {
+                    (2, kn.dot2_i8)
                 } else {
-                    let crow = &mut crows[rl * self.n + c_lo
-                                          ..rl * self.n + c_lo + width];
-                    for bk in 0..self.kb {
-                        let sa = a_scale[bi * self.kb + bk];
-                        let sb = b_scale[bk * self.nbk + bj];
-                        panel_dot_i8(
-                            qa, a_pcols, r_lo + rl, bk * bs, bs,
-                            panel, width, acci0, acc0,
-                        );
-                        let w = sa * sb;
-                        scale_add(crow, acc0, width, w);
-                        if let Some(res) = resid {
-                            if res.u[bi * self.kb + bk] {
-                                let rs = res.r_scale[bi * self.kb + bk];
-                                panel_dot_i8(
-                                    res.rq, a_pcols, r_lo + rl,
-                                    bk * bs, bs, panel, width, acci0,
-                                    acc0,
-                                );
-                                let rw = rs * sb;
-                                scale_add(crow, acc0, width, rw);
+                    (1, kn.dot_i8)
+                };
+                for bk in 0..self.kb {
+                    let sa = a_scale[bi * self.kb + bk];
+                    let sb = b_scale[bk * self.nbk + bj];
+                    dot(
+                        qa, a_pcols, r_lo + rl, bk * bs, bs, panel,
+                        width, acci, acc,
+                    );
+                    let w = sa * sb;
+                    for t in 0..tile {
+                        let crow = &mut crows[(rl + t) * self.n + c_lo
+                                              ..][..width];
+                        scale_add(crow, &acc[t * bs..], width, w);
+                    }
+                    if let Some(res) = resid {
+                        // Algorithm 1 lines 13-16: residual work
+                        // really skipped when u = 0.
+                        if res.u[bi * self.kb + bk] {
+                            let rs = res.r_scale[bi * self.kb + bk];
+                            dot(
+                                res.rq, a_pcols, r_lo + rl, bk * bs,
+                                bs, panel, width, acci, acc,
+                            );
+                            let rw = rs * sb;
+                            for t in 0..tile {
+                                let crow =
+                                    &mut crows[(rl + t) * self.n + c_lo
+                                               ..][..width];
+                                scale_add(crow, &acc[t * bs..], width,
+                                          rw);
                             }
                         }
                     }
-                    rl += 1;
                 }
+                rl += tile;
             }
         }
     }
@@ -731,263 +748,6 @@ impl<'a> GemmPlan<'a> {
 fn scale_add(crow: &mut [f32], acc: &[f32], width: usize, w: f32) {
     for (cv, &v) in crow.iter_mut().zip(acc[..width].iter()) {
         *cv += v * w;
-    }
-}
-
-/// One-row block dot against a contiguous B panel:
-/// `acc[j] = Σ_k a[r, k0+k] · panel[k0+k, j]`, 4-unrolled over K.
-///
-/// Operation order is identical to the seed `block_row_dot_f32`
-/// (same 4-wide grouping, same zero-code skip in the remainder), so
-/// results are bit-identical — only the B addressing changed from
-/// strided to contiguous.
-#[inline]
-#[allow(clippy::too_many_arguments)]
-fn panel_dot(
-    af: &[f32], a_stride: usize, r: usize, k0: usize, bs: usize,
-    panel: &[f32], width: usize, acc: &mut [f32],
-) {
-    acc[..width].fill(0.0);
-    let arow = &af[r * a_stride + k0..r * a_stride + k0 + bs];
-    let kk = bs & !3;
-    for k in (0..kk).step_by(4) {
-        let a0 = arow[k];
-        let a1 = arow[k + 1];
-        let a2 = arow[k + 2];
-        let a3 = arow[k + 3];
-        let b0 = &panel[(k0 + k) * width..][..width];
-        let b1 = &panel[(k0 + k + 1) * width..][..width];
-        let b2 = &panel[(k0 + k + 2) * width..][..width];
-        let b3 = &panel[(k0 + k + 3) * width..][..width];
-        for j in 0..width {
-            acc[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
-        }
-    }
-    for k in kk..bs {
-        let av = arow[k];
-        if av == 0.0 {
-            continue;
-        }
-        let brow = &panel[(k0 + k) * width..][..width];
-        for j in 0..width {
-            acc[j] += av * brow[j];
-        }
-    }
-}
-
-/// Two-row block dot sharing each loaded B row between adjacent A rows
-/// (halves B-panel traffic). Per-row operation order matches
-/// [`panel_dot`] exactly, so outputs stay bit-identical.
-#[inline]
-#[allow(clippy::too_many_arguments)]
-fn panel_dot2(
-    af: &[f32], a_stride: usize, r: usize, k0: usize, bs: usize,
-    panel: &[f32], width: usize, acc0: &mut [f32], acc1: &mut [f32],
-) {
-    acc0[..width].fill(0.0);
-    acc1[..width].fill(0.0);
-    let arow0 = &af[r * a_stride + k0..r * a_stride + k0 + bs];
-    let arow1 =
-        &af[(r + 1) * a_stride + k0..(r + 1) * a_stride + k0 + bs];
-    let kk = bs & !3;
-    for k in (0..kk).step_by(4) {
-        let a00 = arow0[k];
-        let a01 = arow0[k + 1];
-        let a02 = arow0[k + 2];
-        let a03 = arow0[k + 3];
-        let a10 = arow1[k];
-        let a11 = arow1[k + 1];
-        let a12 = arow1[k + 2];
-        let a13 = arow1[k + 3];
-        let b0 = &panel[(k0 + k) * width..][..width];
-        let b1 = &panel[(k0 + k + 1) * width..][..width];
-        let b2 = &panel[(k0 + k + 2) * width..][..width];
-        let b3 = &panel[(k0 + k + 3) * width..][..width];
-        for j in 0..width {
-            acc0[j] +=
-                a00 * b0[j] + a01 * b1[j] + a02 * b2[j] + a03 * b3[j];
-            acc1[j] +=
-                a10 * b0[j] + a11 * b1[j] + a12 * b2[j] + a13 * b3[j];
-        }
-    }
-    for k in kk..bs {
-        let brow = &panel[(k0 + k) * width..][..width];
-        let av0 = arow0[k];
-        if av0 != 0.0 {
-            for j in 0..width {
-                acc0[j] += av0 * brow[j];
-            }
-        }
-        let av1 = arow1[k];
-        if av1 != 0.0 {
-            for j in 0..width {
-                acc1[j] += av1 * brow[j];
-            }
-        }
-    }
-}
-
-/// i32 → f32 widening of a block dot, once per K-block. Exact whenever
-/// `|v| ≤ 2²⁴` (guaranteed for `bs ≤ I8_EXACT_MAX_BS`); the debug
-/// assertion catches the first value past the exactly-representable
-/// range on oversized blocks.
-#[inline]
-fn widen_i32(acci: &[i32], acc: &mut [f32], width: usize) {
-    for (o, &v) in acc[..width].iter_mut().zip(acci[..width].iter()) {
-        debug_assert!(
-            v.unsigned_abs() <= 1 << 24,
-            "i8-path block dot {} exceeds the f32-exact range \
-             (only bs <= {} is bit-exact; use DataPath::SimF32)",
-            v,
-            I8_EXACT_MAX_BS
-        );
-        *o = v as f32;
-    }
-}
-
-/// One-row i8 block dot against a contiguous i8 B panel:
-/// `acc[j] = Σ_k qa[r, k0+k] · panel[k0+k, j]` accumulated in **i32**
-/// (4-unrolled over K, widening multiplies — the CPU stand-in for an
-/// int8-dot ISA), then widened to f32 once. For
-/// `bs ≤ I8_EXACT_MAX_BS` the result is bit-identical to
-/// [`panel_dot`] over the f32 code copies.
-#[inline]
-#[allow(clippy::too_many_arguments)]
-fn panel_dot_i8(
-    qa: &[i8], a_stride: usize, r: usize, k0: usize, bs: usize,
-    panel: &[i8], width: usize, acci: &mut [i32], acc: &mut [f32],
-) {
-    acci[..width].fill(0);
-    let arow = &qa[r * a_stride + k0..r * a_stride + k0 + bs];
-    let kk = bs & !3;
-    for k in (0..kk).step_by(4) {
-        let a0 = arow[k] as i32;
-        let a1 = arow[k + 1] as i32;
-        let a2 = arow[k + 2] as i32;
-        let a3 = arow[k + 3] as i32;
-        let b0 = &panel[(k0 + k) * width..][..width];
-        let b1 = &panel[(k0 + k + 1) * width..][..width];
-        let b2 = &panel[(k0 + k + 2) * width..][..width];
-        let b3 = &panel[(k0 + k + 3) * width..][..width];
-        for j in 0..width {
-            acci[j] += a0 * b0[j] as i32
-                + a1 * b1[j] as i32
-                + a2 * b2[j] as i32
-                + a3 * b3[j] as i32;
-        }
-    }
-    for k in kk..bs {
-        let av = arow[k];
-        if av == 0 {
-            continue;
-        }
-        let av = av as i32;
-        let brow = &panel[(k0 + k) * width..][..width];
-        for j in 0..width {
-            acci[j] += av * brow[j] as i32;
-        }
-    }
-    widen_i32(acci, acc, width);
-}
-
-/// Two-row i8 block dot sharing each loaded B panel row between
-/// adjacent A rows; i32 accumulation, one widening per K-block. See
-/// [`panel_dot_i8`] for the exactness argument.
-#[inline]
-#[allow(clippy::too_many_arguments)]
-fn panel_dot2_i8(
-    qa: &[i8], a_stride: usize, r: usize, k0: usize, bs: usize,
-    panel: &[i8], width: usize, acci0: &mut [i32], acci1: &mut [i32],
-    acc0: &mut [f32], acc1: &mut [f32],
-) {
-    acci0[..width].fill(0);
-    acci1[..width].fill(0);
-    let arow0 = &qa[r * a_stride + k0..r * a_stride + k0 + bs];
-    let arow1 =
-        &qa[(r + 1) * a_stride + k0..(r + 1) * a_stride + k0 + bs];
-    let kk = bs & !3;
-    for k in (0..kk).step_by(4) {
-        let a00 = arow0[k] as i32;
-        let a01 = arow0[k + 1] as i32;
-        let a02 = arow0[k + 2] as i32;
-        let a03 = arow0[k + 3] as i32;
-        let a10 = arow1[k] as i32;
-        let a11 = arow1[k + 1] as i32;
-        let a12 = arow1[k + 2] as i32;
-        let a13 = arow1[k + 3] as i32;
-        let b0 = &panel[(k0 + k) * width..][..width];
-        let b1 = &panel[(k0 + k + 1) * width..][..width];
-        let b2 = &panel[(k0 + k + 2) * width..][..width];
-        let b3 = &panel[(k0 + k + 3) * width..][..width];
-        for j in 0..width {
-            let v0 = b0[j] as i32;
-            let v1 = b1[j] as i32;
-            let v2 = b2[j] as i32;
-            let v3 = b3[j] as i32;
-            acci0[j] += a00 * v0 + a01 * v1 + a02 * v2 + a03 * v3;
-            acci1[j] += a10 * v0 + a11 * v1 + a12 * v2 + a13 * v3;
-        }
-    }
-    for k in kk..bs {
-        let brow = &panel[(k0 + k) * width..][..width];
-        let av0 = arow0[k];
-        if av0 != 0 {
-            let av0 = av0 as i32;
-            for j in 0..width {
-                acci0[j] += av0 * brow[j] as i32;
-            }
-        }
-        let av1 = arow1[k];
-        if av1 != 0 {
-            let av1 = av1 as i32;
-            for j in 0..width {
-                acci1[j] += av1 * brow[j] as i32;
-            }
-        }
-    }
-    widen_i32(acci0, acc0, width);
-    widen_i32(acci1, acc1, width);
-}
-
-/// Dense two-row kernel sharing each loaded B row; per-row operation
-/// order matches `dense::matvec_row` (the single-row kernel, shared
-/// with the baseline) exactly.
-#[inline]
-fn dense_rows2(arow0: &[f32], arow1: &[f32], b: &Mat,
-               crow0: &mut [f32], crow1: &mut [f32]) {
-    let n = b.cols;
-    let k = b.rows;
-    let kk = k & !3;
-    for kb in (0..kk).step_by(4) {
-        let a00 = arow0[kb];
-        let a01 = arow0[kb + 1];
-        let a02 = arow0[kb + 2];
-        let a03 = arow0[kb + 3];
-        let a10 = arow1[kb];
-        let a11 = arow1[kb + 1];
-        let a12 = arow1[kb + 2];
-        let a13 = arow1[kb + 3];
-        let b0 = &b.data[kb * n..(kb + 1) * n];
-        let b1 = &b.data[(kb + 1) * n..(kb + 2) * n];
-        let b2 = &b.data[(kb + 2) * n..(kb + 3) * n];
-        let b3 = &b.data[(kb + 3) * n..(kb + 4) * n];
-        for j in 0..n {
-            crow0[j] +=
-                a00 * b0[j] + a01 * b1[j] + a02 * b2[j] + a03 * b3[j];
-            crow1[j] +=
-                a10 * b0[j] + a11 * b1[j] + a12 * b2[j] + a13 * b3[j];
-        }
-    }
-    for kb in kk..k {
-        let av0 = arow0[kb];
-        let av1 = arow1[kb];
-        let brow = &b.data[kb * n..(kb + 1) * n];
-        for j in 0..n {
-            crow0[j] += av0 * brow[j];
-        }
-        for j in 0..n {
-            crow1[j] += av1 * brow[j];
-        }
     }
 }
 
@@ -1138,6 +898,53 @@ mod tests {
             .execute();
         assert_eq!(c_i8.data, c_sim.data);
         assert!(fa.residual_f32_built());
+    }
+
+    #[test]
+    fn explicit_backends_agree_bitwise_and_report_names() {
+        // Every backend available on this host must produce the same
+        // bits through the full engine, on both precisions, with a
+        // block size that is not a multiple of any vector width and
+        // an odd output tail.
+        let (a, b) = mats(43, 36, 29, 41);
+        let qa = block_quant(&a, 12, INT8_LEVELS, Rounding::Nearest);
+        let qb = block_quant(&b, 12, INT8_LEVELS, Rounding::Nearest);
+        let backends = crate::gemm::kernels::available();
+        let c_scalar = GemmPlan::new_int8_path(&qa, &qb, 2,
+                                               DataPath::Int8)
+            .with_kernels(&crate::gemm::kernels::SCALAR)
+            .execute();
+        for &kn in &backends {
+            let plan = GemmPlan::new_int8_path(&qa, &qb, 2,
+                                               DataPath::Int8)
+                .with_kernels(kn);
+            assert_eq!(plan.kernel_backend(), kn.name);
+            assert_eq!(plan.execute().data, c_scalar.data,
+                       "backend {}", kn.name);
+        }
+        // default selection is one of the available backends
+        let dflt = GemmPlan::new_int8(&qa, &qb, 2);
+        assert!(backends.iter().any(|k| k.name == dflt.kernel_backend()));
+        assert_eq!(dflt.execute().data, c_scalar.data);
+    }
+
+    #[test]
+    fn four_row_tiles_match_reference_at_tail_counts() {
+        // 4-row tiling kicks in for sched panels ≥ 4 rows; row counts
+        // 4q+{0..3} exercise every tail tile (4/2/1 mixes).
+        for m in [16usize, 17, 18, 19, 21] {
+            let (a, b) = mats(m, 32, 20, 100 + m as u64);
+            let qa =
+                block_quant(&a, 16, INT8_LEVELS, Rounding::Nearest);
+            let qb =
+                block_quant(&b, 16, INT8_LEVELS, Rounding::Nearest);
+            let c_i8 =
+                GemmPlan::new_int8_path(&qa, &qb, 1, DataPath::Int8)
+                    .execute();
+            let c_ref =
+                crate::gemm::int8::block_gemm_reference(&qa, &qb);
+            assert_eq!(c_i8.data, c_ref.data, "m={m}");
+        }
     }
 
     #[test]

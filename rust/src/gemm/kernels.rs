@@ -1,0 +1,1130 @@
+//! # Microkernel backend layer
+//!
+//! Every inner loop of the GEMM engine lives here, behind one
+//! [`Kernels`] vtable selected **once per [`GemmPlan`] build** by
+//! runtime CPU-feature detection:
+//!
+//! * `scalar` — the portable floor: the 4-unrolled loops inherited
+//!   from the seed kernels, available on every target.
+//! * `sse2` — x86_64 baseline SIMD: 8-wide i16 multiplies with exact
+//!   i32 widening (SSE2 is unconditionally present on x86_64).
+//! * `avx2` — 16-wide i16 multiplies (`_mm256_mullo_epi16` +
+//!   sign-extending widens), gated on `is_x86_feature_detected!`.
+//! * `neon` — aarch64 baseline SIMD: 8-wide `vmlal_s16`
+//!   multiply-accumulate-long (NEON is unconditionally present on
+//!   aarch64).
+//!
+//! Selection order in [`select`]: the `PALLAS_KERNEL` env override
+//! (`scalar|sse2|avx2|neon`, read once per process) → a backend
+//! installed by calibration ([`set_preferred`], wired up by
+//! `SubstrateCalibration::install_fastest_backend`) → the statically
+//! fastest detected backend ([`detect_best`]).
+//!
+//! ## Why every backend is bit-identical
+//!
+//! The i8 kernels accumulate **integers**: each backend computes the
+//! exact mathematical dot `Σ_k a[k]·b[k]` of i8 codes in i32 (integer
+//! addition is associative, so lane order and blocking cannot change
+//! the value), then hands the same integer to the shared
+//! [`widen_i32`]. The SIMD backends use a narrower intermediate — two
+//! i16 products summed in i16 — which is still exact because
+//! `|a·b| ≤ 127² = 16129` and `2·16129 = 32258 < 2¹⁵`. Overflow of the
+//! i32 accumulator needs `bs ≈ 1.3e5`, far past the f32-exactness
+//! bound `I8_EXACT_MAX_BS` that gates the i8 data path. Hence all
+//! backends agree bitwise with each other, with the `SimF32` f32
+//! simulation, with the `*_baseline` seed oracles, and with the exact
+//! i64 references — asserted per backend by `tests/engine_prop.rs` and
+//! the kernel-level tests below.
+//!
+//! The **f32** kernels ([`panel_dot`], [`panel_dot2`], and the dense
+//! slot of the vtable) are shared scalar code on every backend: their
+//! floating-point op order is pinned by bit-compatibility with the
+//! seed baselines (FP addition is *not* associative once sums leave
+//! the exact-integer range), so vectorizing them would break the
+//! oracle contract. The vtable still carries the dense slot so a
+//! future backend can override it once the baselines are re-anchored.
+//!
+//! ## Zero-code convention
+//!
+//! The i8 kernels process **every** code unconditionally — no
+//! `a == 0` skip anywhere (the seed's scalar K-remainder skipped zero
+//! codes while its unrolled body did not; a zero contributes a zero
+//! term, so integer results are unchanged either way). One uniform
+//! convention keeps the reference semantics identical across backends
+//! and lets the SIMD lanes stay branch-free. The f32 kernels keep the
+//! seed's skip-in-remainder behaviour untouched, again for baseline
+//! bit-compatibility.
+//!
+//! ## Adding a backend (e.g. AVX-512 VNNI)
+//!
+//! 1. Write `dot1/dot2/dot4` kernels that produce the exact integer
+//!    block dot in `acci` (any lane order; use `widen_rows` to fill
+//!    `acc`). A VNNI kernel would feed `_mm512_dpbusd_epi32` with the
+//!    usual unsigned-A offset trick, or stay on the exact i16-pair
+//!    scheme at 32 lanes.
+//! 2. Add a `static VNNI: Kernels` and list it in [`available`]
+//!    behind its `is_x86_feature_detected!` gate, ordered after the
+//!    backends it should outrank.
+//! 3. `tests/engine_prop.rs` and the tests below pick it up
+//!    automatically via [`available`]; run the `gemm_engine` bench to
+//!    confirm it wins and let calibration select it.
+//!
+//! [`GemmPlan`]: crate::gemm::engine::GemmPlan
+
+use std::sync::atomic::{AtomicPtr, Ordering};
+use std::sync::OnceLock;
+
+use crate::util::Mat;
+
+/// One-row i8 block dot: fills `acci[..width]` with the exact integer
+/// dot of A row `r` (K-slice `[k0, k0+bs)`) against a contiguous i8
+/// panel, then widens into `acc[..width]`.
+pub type DotI8 = fn(
+    qa: &[i8],
+    a_stride: usize,
+    r: usize,
+    k0: usize,
+    bs: usize,
+    panel: &[i8],
+    width: usize,
+    acci: &mut [i32],
+    acc: &mut [f32],
+);
+
+/// Dense two-row f32 kernel (rows share each loaded B row).
+pub type Dense2 =
+    fn(arow0: &[f32], arow1: &[f32], b: &Mat, crow0: &mut [f32], crow1: &mut [f32]);
+
+/// i32 → f32 block-dot widening (one call per row per K-block).
+pub type Widen = fn(acci: &[i32], acc: &mut [f32], width: usize);
+
+/// A microkernel backend: the engine calls these and nothing else in
+/// its hot loop. `dot2_i8`/`dot4_i8` compute 2/4 adjacent A rows
+/// against one panel (row `t`'s results land at `acci[t*bs..]` /
+/// `acc[t*bs..]`), sharing each loaded B row across the row tile —
+/// the register-blocking axis where the ISAs differ.
+pub struct Kernels {
+    pub name: &'static str,
+    pub dot_i8: DotI8,
+    pub dot2_i8: DotI8,
+    pub dot4_i8: DotI8,
+    pub dense2: Dense2,
+    /// i32 → f32 widening the backend's dot kernels funnel through
+    /// (all current backends install the checked [`widen_i32`]; a
+    /// backend with a vectorized widening overrides it here)
+    pub widen: Widen,
+}
+
+impl std::fmt::Debug for Kernels {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Kernels").field("name", &self.name).finish()
+    }
+}
+
+pub static SCALAR: Kernels = Kernels {
+    name: "scalar",
+    dot_i8: dot_i8_scalar,
+    dot2_i8: dot2_i8_scalar,
+    dot4_i8: dot4_i8_scalar,
+    dense2: dense_rows2,
+    widen: widen_i32,
+};
+
+#[cfg(target_arch = "x86_64")]
+pub static SSE2: Kernels = Kernels {
+    name: "sse2",
+    dot_i8: x86::dot_i8_sse2,
+    dot2_i8: x86::dot2_i8_sse2,
+    dot4_i8: x86::dot4_i8_sse2,
+    dense2: dense_rows2,
+    widen: widen_i32,
+};
+
+#[cfg(target_arch = "x86_64")]
+pub static AVX2: Kernels = Kernels {
+    name: "avx2",
+    dot_i8: x86::dot_i8_avx2,
+    dot2_i8: x86::dot2_i8_avx2,
+    dot4_i8: x86::dot4_i8_avx2,
+    dense2: dense_rows2,
+    widen: widen_i32,
+};
+
+#[cfg(target_arch = "aarch64")]
+pub static NEON: Kernels = Kernels {
+    name: "neon",
+    dot_i8: arm::dot_i8_neon,
+    dot2_i8: arm::dot2_i8_neon,
+    dot4_i8: arm::dot4_i8_neon,
+    dense2: dense_rows2,
+    widen: widen_i32,
+};
+
+/// Backends usable on this host, ordered slowest → statically
+/// fastest. `scalar` is always present; SIMD entries appear when the
+/// architecture (and, for AVX2, the runtime CPUID check) provides
+/// their instructions.
+pub fn available() -> Vec<&'static Kernels> {
+    let mut v: Vec<&'static Kernels> = vec![&SCALAR];
+    push_arch_backends(&mut v);
+    v
+}
+
+#[cfg(target_arch = "x86_64")]
+fn push_arch_backends(v: &mut Vec<&'static Kernels>) {
+    // SSE2 is part of the x86_64 baseline — no detection needed.
+    v.push(&SSE2);
+    if is_x86_feature_detected!("avx2") {
+        v.push(&AVX2);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn push_arch_backends(v: &mut Vec<&'static Kernels>) {
+    // NEON is part of the aarch64 baseline.
+    v.push(&NEON);
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn push_arch_backends(_v: &mut Vec<&'static Kernels>) {}
+
+/// CPU features relevant to kernel selection that the runtime
+/// detected on this host (recorded by the benches next to the chosen
+/// backend, so `BENCH_*.json` files are interpretable off-host).
+pub fn cpu_features() -> Vec<&'static str> {
+    let mut f = Vec::new();
+    detect_arch_features(&mut f);
+    f
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_arch_features(f: &mut Vec<&'static str>) {
+    f.push("sse2");
+    if is_x86_feature_detected!("sse4.1") {
+        f.push("sse4.1");
+    }
+    if is_x86_feature_detected!("avx2") {
+        f.push("avx2");
+    }
+    if is_x86_feature_detected!("fma") {
+        f.push("fma");
+    }
+    if is_x86_feature_detected!("avx512f") {
+        f.push("avx512f");
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_arch_features(f: &mut Vec<&'static str>) {
+    f.push("neon");
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_arch_features(_f: &mut Vec<&'static str>) {}
+
+/// Look a backend up by its `PALLAS_KERNEL` name among the ones
+/// available on this host.
+pub fn by_name(name: &str) -> Option<&'static Kernels> {
+    available().into_iter().find(|k| k.name == name)
+}
+
+/// The statically preferred backend: the last (fastest) entry of
+/// [`available`].
+pub fn detect_best() -> &'static Kernels {
+    *available().last().expect("scalar backend always present")
+}
+
+/// Calibration hook: install the backend measured fastest so later
+/// [`select`] calls (plan builds) use it. The `PALLAS_KERNEL` env
+/// override still wins — calibration only replaces the *static*
+/// preference with a measured one.
+pub fn set_preferred(k: &'static Kernels) {
+    PREFERRED.store(k as *const Kernels as *mut Kernels, Ordering::Relaxed);
+}
+
+static PREFERRED: AtomicPtr<Kernels> = AtomicPtr::new(std::ptr::null_mut());
+
+/// Serializes tests that mutate the process-global preference
+/// (`set_preferred` / `install_fastest_backend`) so concurrent test
+/// threads can't interleave a set with another test's assert.
+#[cfg(test)]
+pub(crate) static PREFERRED_TEST_LOCK: std::sync::Mutex<()> =
+    std::sync::Mutex::new(());
+
+fn preferred() -> Option<&'static Kernels> {
+    let p = PREFERRED.load(Ordering::Relaxed);
+    if p.is_null() {
+        None
+    } else {
+        // Only ever stored from a &'static Kernels in set_preferred.
+        Some(unsafe { &*p })
+    }
+}
+
+static ENV_OVERRIDE: OnceLock<Option<&'static Kernels>> = OnceLock::new();
+
+/// Parse a `PALLAS_KERNEL`-style override value. Empty/absent means
+/// "no override"; an unknown or host-unavailable name is a hard error
+/// (an override that silently fell back would invalidate calibration
+/// runs and the CI matrix leg that forces `scalar`).
+pub fn parse_override(val: Option<&str>) -> Option<&'static Kernels> {
+    match val {
+        None => None,
+        Some("") => None,
+        Some(s) => match by_name(s) {
+            Some(k) => Some(k),
+            None => panic!(
+                "PALLAS_KERNEL={s:?} is not an available kernel backend \
+                 on this host (available: {:?})",
+                available().iter().map(|k| k.name).collect::<Vec<_>>()
+            ),
+        },
+    }
+}
+
+/// The backend a fresh `GemmPlan` uses: `PALLAS_KERNEL` env override
+/// (read once per process) → calibration preference → static best.
+pub fn select() -> &'static Kernels {
+    let over = *ENV_OVERRIDE.get_or_init(|| {
+        parse_override(std::env::var("PALLAS_KERNEL").ok().as_deref())
+    });
+    if let Some(k) = over {
+        return k;
+    }
+    if let Some(k) = preferred() {
+        return k;
+    }
+    detect_best()
+}
+
+// ---------------------------------------------------------------------
+// Shared helpers
+// ---------------------------------------------------------------------
+
+/// i32 → f32 widening of a block dot, once per row per K-block. Exact
+/// whenever `|v| ≤ 2²⁴` (guaranteed for `bs ≤ I8_EXACT_MAX_BS`); the
+/// debug assertion catches the first value past the
+/// exactly-representable range on oversized blocks — on every
+/// backend, since all of them funnel through this function.
+pub fn widen_i32(acci: &[i32], acc: &mut [f32], width: usize) {
+    for (o, &v) in acc[..width].iter_mut().zip(acci[..width].iter()) {
+        debug_assert!(
+            v.unsigned_abs() <= 1 << 24,
+            "i8-path block dot {} exceeds the f32-exact range \
+             (only bs <= {} is bit-exact; use DataPath::SimF32)",
+            v,
+            crate::gemm::engine::I8_EXACT_MAX_BS
+        );
+        *o = v as f32;
+    }
+}
+
+/// Widen a `rows`-row tile (row `t` at offset `t * bs` in both
+/// workspaces) through the backend's `widen` slot — every dot kernel
+/// funnels its integer result through its own vtable entry, so a
+/// backend that installs a custom widening actually gets it.
+fn widen_rows(
+    widen: Widen, rows: usize, bs: usize, width: usize, acci: &[i32],
+    acc: &mut [f32],
+) {
+    for t in 0..rows {
+        widen(&acci[t * bs..], &mut acc[t * bs..], width);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scalar backend (portable floor; K 4-unrolled like the seed kernels)
+// ---------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn dot_i8_scalar(
+    qa: &[i8], a_stride: usize, r: usize, k0: usize, bs: usize,
+    panel: &[i8], width: usize, acci: &mut [i32], acc: &mut [f32],
+) {
+    acci[..width].fill(0);
+    let arow = &qa[r * a_stride + k0..r * a_stride + k0 + bs];
+    let kk = bs & !3;
+    for k in (0..kk).step_by(4) {
+        let a0 = arow[k] as i32;
+        let a1 = arow[k + 1] as i32;
+        let a2 = arow[k + 2] as i32;
+        let a3 = arow[k + 3] as i32;
+        let b0 = &panel[(k0 + k) * width..][..width];
+        let b1 = &panel[(k0 + k + 1) * width..][..width];
+        let b2 = &panel[(k0 + k + 2) * width..][..width];
+        let b3 = &panel[(k0 + k + 3) * width..][..width];
+        for j in 0..width {
+            acci[j] += a0 * b0[j] as i32
+                + a1 * b1[j] as i32
+                + a2 * b2[j] as i32
+                + a3 * b3[j] as i32;
+        }
+    }
+    for k in kk..bs {
+        // No zero-code skip: see the module-level convention note.
+        let av = arow[k] as i32;
+        let brow = &panel[(k0 + k) * width..][..width];
+        for j in 0..width {
+            acci[j] += av * brow[j] as i32;
+        }
+    }
+    (SCALAR.widen)(acci, acc, width);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dot2_i8_scalar(
+    qa: &[i8], a_stride: usize, r: usize, k0: usize, bs: usize,
+    panel: &[i8], width: usize, acci: &mut [i32], acc: &mut [f32],
+) {
+    let (acci0, acci1t) = acci.split_at_mut(bs);
+    let acci1 = &mut acci1t[..bs];
+    acci0[..width].fill(0);
+    acci1[..width].fill(0);
+    let arow0 = &qa[r * a_stride + k0..r * a_stride + k0 + bs];
+    let arow1 = &qa[(r + 1) * a_stride + k0..(r + 1) * a_stride + k0 + bs];
+    let kk = bs & !3;
+    for k in (0..kk).step_by(4) {
+        let a00 = arow0[k] as i32;
+        let a01 = arow0[k + 1] as i32;
+        let a02 = arow0[k + 2] as i32;
+        let a03 = arow0[k + 3] as i32;
+        let a10 = arow1[k] as i32;
+        let a11 = arow1[k + 1] as i32;
+        let a12 = arow1[k + 2] as i32;
+        let a13 = arow1[k + 3] as i32;
+        let b0 = &panel[(k0 + k) * width..][..width];
+        let b1 = &panel[(k0 + k + 1) * width..][..width];
+        let b2 = &panel[(k0 + k + 2) * width..][..width];
+        let b3 = &panel[(k0 + k + 3) * width..][..width];
+        for j in 0..width {
+            let v0 = b0[j] as i32;
+            let v1 = b1[j] as i32;
+            let v2 = b2[j] as i32;
+            let v3 = b3[j] as i32;
+            acci0[j] += a00 * v0 + a01 * v1 + a02 * v2 + a03 * v3;
+            acci1[j] += a10 * v0 + a11 * v1 + a12 * v2 + a13 * v3;
+        }
+    }
+    for k in kk..bs {
+        let brow = &panel[(k0 + k) * width..][..width];
+        let av0 = arow0[k] as i32;
+        let av1 = arow1[k] as i32;
+        for j in 0..width {
+            acci0[j] += av0 * brow[j] as i32;
+            acci1[j] += av1 * brow[j] as i32;
+        }
+    }
+    widen_rows(SCALAR.widen, 2, bs, width, acci, acc);
+}
+
+/// Scalar 4-row tile = two 2-row tiles (no wider register file to
+/// exploit; keeps the scalar op sequence identical to the paired
+/// kernels it replaces).
+#[allow(clippy::too_many_arguments)]
+fn dot4_i8_scalar(
+    qa: &[i8], a_stride: usize, r: usize, k0: usize, bs: usize,
+    panel: &[i8], width: usize, acci: &mut [i32], acc: &mut [f32],
+) {
+    let (acci01, acci23) = acci.split_at_mut(2 * bs);
+    let (acc01, acc23) = acc.split_at_mut(2 * bs);
+    dot2_i8_scalar(qa, a_stride, r, k0, bs, panel, width, acci01, acc01);
+    dot2_i8_scalar(qa, a_stride, r + 2, k0, bs, panel, width, acci23, acc23);
+}
+
+// ---------------------------------------------------------------------
+// Shared f32 kernels (NOT per-backend: FP op order is pinned by
+// bit-compatibility with the seed baselines — see module docs)
+// ---------------------------------------------------------------------
+
+/// One-row f32 block dot against a contiguous B panel:
+/// `acc[j] = Σ_k a[r, k0+k] · panel[k0+k, j]`, 4-unrolled over K.
+///
+/// Operation order is identical to the seed `block_row_dot_f32`
+/// (same 4-wide grouping, same zero-code skip in the remainder), so
+/// results are bit-identical — only the B addressing changed from
+/// strided to contiguous.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn panel_dot(
+    af: &[f32], a_stride: usize, r: usize, k0: usize, bs: usize,
+    panel: &[f32], width: usize, acc: &mut [f32],
+) {
+    acc[..width].fill(0.0);
+    let arow = &af[r * a_stride + k0..r * a_stride + k0 + bs];
+    let kk = bs & !3;
+    for k in (0..kk).step_by(4) {
+        let a0 = arow[k];
+        let a1 = arow[k + 1];
+        let a2 = arow[k + 2];
+        let a3 = arow[k + 3];
+        let b0 = &panel[(k0 + k) * width..][..width];
+        let b1 = &panel[(k0 + k + 1) * width..][..width];
+        let b2 = &panel[(k0 + k + 2) * width..][..width];
+        let b3 = &panel[(k0 + k + 3) * width..][..width];
+        for j in 0..width {
+            acc[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+        }
+    }
+    for k in kk..bs {
+        let av = arow[k];
+        if av == 0.0 {
+            continue;
+        }
+        let brow = &panel[(k0 + k) * width..][..width];
+        for j in 0..width {
+            acc[j] += av * brow[j];
+        }
+    }
+}
+
+/// Two-row f32 block dot sharing each loaded B row between adjacent A
+/// rows (halves B-panel traffic). Per-row operation order matches
+/// [`panel_dot`] exactly, so outputs stay bit-identical.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn panel_dot2(
+    af: &[f32], a_stride: usize, r: usize, k0: usize, bs: usize,
+    panel: &[f32], width: usize, acc0: &mut [f32], acc1: &mut [f32],
+) {
+    acc0[..width].fill(0.0);
+    acc1[..width].fill(0.0);
+    let arow0 = &af[r * a_stride + k0..r * a_stride + k0 + bs];
+    let arow1 = &af[(r + 1) * a_stride + k0..(r + 1) * a_stride + k0 + bs];
+    let kk = bs & !3;
+    for k in (0..kk).step_by(4) {
+        let a00 = arow0[k];
+        let a01 = arow0[k + 1];
+        let a02 = arow0[k + 2];
+        let a03 = arow0[k + 3];
+        let a10 = arow1[k];
+        let a11 = arow1[k + 1];
+        let a12 = arow1[k + 2];
+        let a13 = arow1[k + 3];
+        let b0 = &panel[(k0 + k) * width..][..width];
+        let b1 = &panel[(k0 + k + 1) * width..][..width];
+        let b2 = &panel[(k0 + k + 2) * width..][..width];
+        let b3 = &panel[(k0 + k + 3) * width..][..width];
+        for j in 0..width {
+            acc0[j] += a00 * b0[j] + a01 * b1[j] + a02 * b2[j] + a03 * b3[j];
+            acc1[j] += a10 * b0[j] + a11 * b1[j] + a12 * b2[j] + a13 * b3[j];
+        }
+    }
+    for k in kk..bs {
+        let brow = &panel[(k0 + k) * width..][..width];
+        let av0 = arow0[k];
+        if av0 != 0.0 {
+            for j in 0..width {
+                acc0[j] += av0 * brow[j];
+            }
+        }
+        let av1 = arow1[k];
+        if av1 != 0.0 {
+            for j in 0..width {
+                acc1[j] += av1 * brow[j];
+            }
+        }
+    }
+}
+
+/// Dense two-row kernel sharing each loaded B row; per-row operation
+/// order matches `dense::matvec_row` (the single-row kernel, shared
+/// with the baseline) exactly.
+#[inline]
+fn dense_rows2(
+    arow0: &[f32], arow1: &[f32], b: &Mat, crow0: &mut [f32], crow1: &mut [f32],
+) {
+    let n = b.cols;
+    let k = b.rows;
+    let kk = k & !3;
+    for kb in (0..kk).step_by(4) {
+        let a00 = arow0[kb];
+        let a01 = arow0[kb + 1];
+        let a02 = arow0[kb + 2];
+        let a03 = arow0[kb + 3];
+        let a10 = arow1[kb];
+        let a11 = arow1[kb + 1];
+        let a12 = arow1[kb + 2];
+        let a13 = arow1[kb + 3];
+        let b0 = &b.data[kb * n..(kb + 1) * n];
+        let b1 = &b.data[(kb + 1) * n..(kb + 2) * n];
+        let b2 = &b.data[(kb + 2) * n..(kb + 3) * n];
+        let b3 = &b.data[(kb + 3) * n..(kb + 4) * n];
+        for j in 0..n {
+            crow0[j] += a00 * b0[j] + a01 * b1[j] + a02 * b2[j] + a03 * b3[j];
+            crow1[j] += a10 * b0[j] + a11 * b1[j] + a12 * b2[j] + a13 * b3[j];
+        }
+    }
+    for kb in kk..k {
+        let av0 = arow0[kb];
+        let av1 = arow1[kb];
+        let brow = &b.data[kb * n..(kb + 1) * n];
+        for j in 0..n {
+            crow0[j] += av0 * brow[j];
+        }
+        for j in 0..n {
+            crow1[j] += av1 * brow[j];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scalar tail shared by the SIMD backends (j past the vector chunks)
+// ---------------------------------------------------------------------
+
+/// Finish columns `[j_done, width)` for a `rows`-row tile with plain
+/// i32 arithmetic — the same integer, any order.
+#[allow(clippy::too_many_arguments)]
+fn dot_rows_tail(
+    qa: &[i8], a_stride: usize, r: usize, k0: usize, bs: usize,
+    panel: &[i8], width: usize, rows: usize, j_done: usize,
+    acci: &mut [i32],
+) {
+    for t in 0..rows {
+        let arow = &qa[(r + t) * a_stride + k0..(r + t) * a_stride + k0 + bs];
+        for j in j_done..width {
+            let mut s = 0i32;
+            for (k, &av) in arow.iter().enumerate() {
+                s += av as i32 * panel[(k0 + k) * width + j] as i32;
+            }
+            acci[t * bs + j] = s;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// x86_64 backends: SSE2 (baseline) and AVX2 (runtime-detected)
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{dot_rows_tail, widen_rows};
+    use core::arch::x86_64::*;
+
+    // Exactness of the SIMD scheme (both ISAs): codes are in
+    // [-127, 127], so each i16 product |a·b| ≤ 16129 and the sum of a
+    // K-pair of products ≤ 32258 < 2¹⁵ — no i16 overflow — and the
+    // sign-extended i32 accumulation is the exact integer dot.
+
+    /// Sign-extend 8 i8 codes at `p` to an i16x8 vector. SSE2 has no
+    /// `cvtepi8_epi16` (that is SSE4.1), so build the sign mask with a
+    /// compare and interleave.
+    ///
+    /// Safety: `p .. p+8` must be in bounds.
+    #[inline]
+    unsafe fn load8_i8_as_i16(p: *const i8) -> __m128i {
+        let v = _mm_loadl_epi64(p as *const __m128i);
+        let sign = _mm_cmpgt_epi8(_mm_setzero_si128(), v);
+        _mm_unpacklo_epi8(v, sign)
+    }
+
+    /// Sign-extend an i16x8 product vector and add it into two i32x4
+    /// accumulators (lanes 0..4 and 4..8).
+    #[inline]
+    unsafe fn acc_i16_into_i32(
+        lo: __m128i, hi: __m128i, p: __m128i,
+    ) -> (__m128i, __m128i) {
+        let sign = _mm_cmpgt_epi16(_mm_setzero_si128(), p);
+        (
+            _mm_add_epi32(lo, _mm_unpacklo_epi16(p, sign)),
+            _mm_add_epi32(hi, _mm_unpackhi_epi16(p, sign)),
+        )
+    }
+
+    /// SSE2 row-tile kernel: 8-column register tiles, K consumed in
+    /// pairs so two exact i16 products amortize one widening.
+    ///
+    /// Safety: caller guarantees the slice geometry of the `DotI8`
+    /// contract (`qa` holds rows `r..r+ROWS`, `panel` holds rows
+    /// `k0..k0+bs` of `width` codes, `acci.len() ≥ ROWS·bs`). SSE2 is
+    /// baseline on x86_64 — no feature check needed.
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn sse2_dot_rows<const ROWS: usize>(
+        qa: &[i8], a_stride: usize, r: usize, k0: usize, bs: usize,
+        panel: &[i8], width: usize, acci: &mut [i32],
+    ) {
+        let arows: [&[i8]; ROWS] = core::array::from_fn(|t| {
+            &qa[(r + t) * a_stride + k0..(r + t) * a_stride + k0 + bs]
+        });
+        let jj = width & !7;
+        let kk = bs & !1;
+        let mut j = 0usize;
+        while j < jj {
+            let mut lo = [_mm_setzero_si128(); ROWS];
+            let mut hi = [_mm_setzero_si128(); ROWS];
+            let mut k = 0usize;
+            while k < kk {
+                let b0 = load8_i8_as_i16(panel.as_ptr().add((k0 + k) * width + j));
+                let b1 =
+                    load8_i8_as_i16(panel.as_ptr().add((k0 + k + 1) * width + j));
+                for t in 0..ROWS {
+                    let a0 = _mm_set1_epi16(arows[t][k] as i16);
+                    let a1 = _mm_set1_epi16(arows[t][k + 1] as i16);
+                    let p = _mm_add_epi16(
+                        _mm_mullo_epi16(a0, b0),
+                        _mm_mullo_epi16(a1, b1),
+                    );
+                    let (l, h) = acc_i16_into_i32(lo[t], hi[t], p);
+                    lo[t] = l;
+                    hi[t] = h;
+                }
+                k += 2;
+            }
+            if k < bs {
+                let b0 = load8_i8_as_i16(panel.as_ptr().add((k0 + k) * width + j));
+                for t in 0..ROWS {
+                    let a0 = _mm_set1_epi16(arows[t][k] as i16);
+                    let p = _mm_mullo_epi16(a0, b0);
+                    let (l, h) = acc_i16_into_i32(lo[t], hi[t], p);
+                    lo[t] = l;
+                    hi[t] = h;
+                }
+            }
+            for t in 0..ROWS {
+                let dst = acci.as_mut_ptr().add(t * bs + j);
+                _mm_storeu_si128(dst as *mut __m128i, lo[t]);
+                _mm_storeu_si128(dst.add(4) as *mut __m128i, hi[t]);
+            }
+            j += 8;
+        }
+        if j < width {
+            dot_rows_tail(qa, a_stride, r, k0, bs, panel, width, ROWS, j, acci);
+        }
+    }
+
+    /// AVX2 row-tile kernel bodies: 16-column register tiles (two
+    /// i32x8 accumulators per row), same exact i16-pair scheme at
+    /// twice the lane count. Generated per row count because
+    /// `#[target_feature]` + const generics is newer than the
+    /// toolchain floor this crate assumes.
+    macro_rules! avx2_dot_rows {
+        ($name:ident, $rows:literal) => {
+            /// Safety: caller guarantees the `DotI8` slice contract
+            /// and that AVX2 was runtime-detected.
+            #[target_feature(enable = "avx2")]
+            #[allow(clippy::too_many_arguments)]
+            unsafe fn $name(
+                qa: &[i8], a_stride: usize, r: usize, k0: usize,
+                bs: usize, panel: &[i8], width: usize,
+                acci: &mut [i32],
+            ) {
+                const ROWS: usize = $rows;
+                let arows: [&[i8]; ROWS] = core::array::from_fn(|t| {
+                    &qa[(r + t) * a_stride + k0
+                        ..(r + t) * a_stride + k0 + bs]
+                });
+                let jj = width & !15;
+                let kk = bs & !1;
+                let mut j = 0usize;
+                while j < jj {
+                    let mut lo = [_mm256_setzero_si256(); ROWS];
+                    let mut hi = [_mm256_setzero_si256(); ROWS];
+                    let mut k = 0usize;
+                    while k < kk {
+                        let b0 = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                            panel.as_ptr().add((k0 + k) * width + j)
+                                as *const __m128i,
+                        ));
+                        let b1 = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                            panel.as_ptr().add((k0 + k + 1) * width + j)
+                                as *const __m128i,
+                        ));
+                        for t in 0..ROWS {
+                            let a0 = _mm256_set1_epi16(arows[t][k] as i16);
+                            let a1 =
+                                _mm256_set1_epi16(arows[t][k + 1] as i16);
+                            let p = _mm256_add_epi16(
+                                _mm256_mullo_epi16(a0, b0),
+                                _mm256_mullo_epi16(a1, b1),
+                            );
+                            lo[t] = _mm256_add_epi32(
+                                lo[t],
+                                _mm256_cvtepi16_epi32(
+                                    _mm256_castsi256_si128(p),
+                                ),
+                            );
+                            hi[t] = _mm256_add_epi32(
+                                hi[t],
+                                _mm256_cvtepi16_epi32(
+                                    _mm256_extracti128_si256::<1>(p),
+                                ),
+                            );
+                        }
+                        k += 2;
+                    }
+                    if k < bs {
+                        let b0 = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                            panel.as_ptr().add((k0 + k) * width + j)
+                                as *const __m128i,
+                        ));
+                        for t in 0..ROWS {
+                            let a0 = _mm256_set1_epi16(arows[t][k] as i16);
+                            let p = _mm256_mullo_epi16(a0, b0);
+                            lo[t] = _mm256_add_epi32(
+                                lo[t],
+                                _mm256_cvtepi16_epi32(
+                                    _mm256_castsi256_si128(p),
+                                ),
+                            );
+                            hi[t] = _mm256_add_epi32(
+                                hi[t],
+                                _mm256_cvtepi16_epi32(
+                                    _mm256_extracti128_si256::<1>(p),
+                                ),
+                            );
+                        }
+                    }
+                    for t in 0..ROWS {
+                        let dst = acci.as_mut_ptr().add(t * bs + j);
+                        _mm256_storeu_si256(dst as *mut __m256i, lo[t]);
+                        _mm256_storeu_si256(
+                            dst.add(8) as *mut __m256i,
+                            hi[t],
+                        );
+                    }
+                    j += 16;
+                }
+                if j < width {
+                    dot_rows_tail(
+                        qa, a_stride, r, k0, bs, panel, width, ROWS, j,
+                        acci,
+                    );
+                }
+            }
+        };
+    }
+
+    avx2_dot_rows!(avx2_dot_rows1, 1);
+    avx2_dot_rows!(avx2_dot_rows2, 2);
+    avx2_dot_rows!(avx2_dot_rows4, 4);
+
+    macro_rules! sse2_entry {
+        ($name:ident, $rows:literal) => {
+            #[allow(clippy::too_many_arguments)]
+            pub(super) fn $name(
+                qa: &[i8], a_stride: usize, r: usize, k0: usize,
+                bs: usize, panel: &[i8], width: usize,
+                acci: &mut [i32], acc: &mut [f32],
+            ) {
+                // Safety: slice geometry is the DotI8 contract; SSE2
+                // is baseline on x86_64.
+                unsafe {
+                    sse2_dot_rows::<$rows>(
+                        qa, a_stride, r, k0, bs, panel, width, acci,
+                    )
+                }
+                widen_rows(super::SSE2.widen, $rows, bs, width, acci,
+                           acc);
+            }
+        };
+    }
+
+    macro_rules! avx2_entry {
+        ($name:ident, $inner:ident, $rows:literal) => {
+            #[allow(clippy::too_many_arguments)]
+            pub(super) fn $name(
+                qa: &[i8], a_stride: usize, r: usize, k0: usize,
+                bs: usize, panel: &[i8], width: usize,
+                acci: &mut [i32], acc: &mut [f32],
+            ) {
+                // Safety: slice geometry is the DotI8 contract; the
+                // avx2 entries are only reachable through the AVX2
+                // vtable, which `available()` gates on runtime
+                // detection.
+                unsafe {
+                    $inner(qa, a_stride, r, k0, bs, panel, width, acci)
+                }
+                widen_rows(super::AVX2.widen, $rows, bs, width, acci,
+                           acc);
+            }
+        };
+    }
+
+    sse2_entry!(dot_i8_sse2, 1);
+    sse2_entry!(dot2_i8_sse2, 2);
+    sse2_entry!(dot4_i8_sse2, 4);
+    avx2_entry!(dot_i8_avx2, avx2_dot_rows1, 1);
+    avx2_entry!(dot2_i8_avx2, avx2_dot_rows2, 2);
+    avx2_entry!(dot4_i8_avx2, avx2_dot_rows4, 4);
+}
+
+// ---------------------------------------------------------------------
+// aarch64 backend: NEON (baseline)
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::{dot_rows_tail, widen_rows};
+    use core::arch::aarch64::*;
+
+    /// NEON row-tile kernel: 8-column register tiles; `vmlal_s16`
+    /// widens and accumulates in one exact i32 op per 4 lanes. NEON
+    /// is baseline on aarch64 — no feature check needed.
+    ///
+    /// Safety: caller guarantees the slice geometry of the `DotI8`
+    /// contract (see the SSE2 twin).
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn neon_dot_rows<const ROWS: usize>(
+        qa: &[i8], a_stride: usize, r: usize, k0: usize, bs: usize,
+        panel: &[i8], width: usize, acci: &mut [i32],
+    ) {
+        let arows: [&[i8]; ROWS] = core::array::from_fn(|t| {
+            &qa[(r + t) * a_stride + k0..(r + t) * a_stride + k0 + bs]
+        });
+        let jj = width & !7;
+        let mut j = 0usize;
+        while j < jj {
+            let mut lo = [vdupq_n_s32(0); ROWS];
+            let mut hi = [vdupq_n_s32(0); ROWS];
+            for k in 0..bs {
+                let b = vmovl_s8(vld1_s8(
+                    panel.as_ptr().add((k0 + k) * width + j),
+                ));
+                let bl = vget_low_s16(b);
+                let bh = vget_high_s16(b);
+                for t in 0..ROWS {
+                    let a = vdup_n_s16(arows[t][k] as i16);
+                    lo[t] = vmlal_s16(lo[t], bl, a);
+                    hi[t] = vmlal_s16(hi[t], bh, a);
+                }
+            }
+            for t in 0..ROWS {
+                let dst = acci.as_mut_ptr().add(t * bs + j);
+                vst1q_s32(dst, lo[t]);
+                vst1q_s32(dst.add(4), hi[t]);
+            }
+            j += 8;
+        }
+        if j < width {
+            dot_rows_tail(qa, a_stride, r, k0, bs, panel, width, ROWS, j, acci);
+        }
+    }
+
+    macro_rules! vtable_entry {
+        ($name:ident, $rows:literal) => {
+            #[allow(clippy::too_many_arguments)]
+            pub(super) fn $name(
+                qa: &[i8], a_stride: usize, r: usize, k0: usize,
+                bs: usize, panel: &[i8], width: usize,
+                acci: &mut [i32], acc: &mut [f32],
+            ) {
+                // Safety: slice geometry is the DotI8 contract; NEON
+                // is unconditionally available on aarch64.
+                unsafe {
+                    neon_dot_rows::<$rows>(
+                        qa, a_stride, r, k0, bs, panel, width, acci,
+                    )
+                }
+                widen_rows(super::NEON.widen, $rows, bs, width, acci,
+                           acc);
+            }
+        };
+    }
+
+    vtable_entry!(dot_i8_neon, 1);
+    vtable_entry!(dot2_i8_neon, 2);
+    vtable_entry!(dot4_i8_neon, 4);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Exact i64 reference for a `rows`-row block dot.
+    #[allow(clippy::too_many_arguments)]
+    fn ref_dot(
+        qa: &[i8], a_stride: usize, r: usize, k0: usize, bs: usize,
+        panel: &[i8], width: usize, rows: usize,
+    ) -> Vec<i64> {
+        let mut out = vec![0i64; rows * width];
+        for t in 0..rows {
+            let arow = &qa[(r + t) * a_stride + k0..];
+            for j in 0..width {
+                let mut s = 0i64;
+                for k in 0..bs {
+                    s += arow[k] as i64 * panel[(k0 + k) * width + j] as i64;
+                }
+                out[t * width + j] = s;
+            }
+        }
+        out
+    }
+
+    fn rand_i8(n: usize, rng: &mut Pcg64) -> Vec<i8> {
+        (0..n)
+            .map(|_| ((rng.uniform() * 255.0) as i32 - 127).clamp(-127, 127) as i8)
+            .collect()
+    }
+
+    #[test]
+    fn scalar_always_available_and_selected_from_available() {
+        let avail = available();
+        assert_eq!(avail[0].name, "scalar");
+        let sel = select();
+        assert!(avail.iter().any(|k| k.name == sel.name));
+        assert_eq!(detect_best().name, avail.last().unwrap().name);
+        assert!(by_name("scalar").is_some());
+        assert!(by_name("definitely-not-a-backend").is_none());
+        assert!(!cpu_features().is_empty() || cfg!(not(any(
+            target_arch = "x86_64",
+            target_arch = "aarch64"
+        ))));
+    }
+
+    #[test]
+    fn override_parse_rules() {
+        assert!(parse_override(None).is_none());
+        assert!(parse_override(Some("")).is_none());
+        assert_eq!(parse_override(Some("scalar")).unwrap().name, "scalar");
+    }
+
+    #[test]
+    #[should_panic(expected = "not an available kernel backend")]
+    fn override_rejects_unknown_backend() {
+        parse_override(Some("vax-11"));
+    }
+
+    #[test]
+    fn preferred_backend_survives_round_trip() {
+        // The preference is process-global: hold the test lock so the
+        // costmodel calibration test (same binary) can't interleave
+        // its own set_preferred between our set and assert.
+        let _g = PREFERRED_TEST_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let before = select();
+        set_preferred(&SCALAR);
+        if std::env::var("PALLAS_KERNEL").map_or(true, |v| v.is_empty()) {
+            assert_eq!(select().name, "scalar");
+        }
+        set_preferred(before);
+        assert_eq!(select().name, before.name);
+    }
+
+    /// The load-bearing test for the SIMD backends: every available
+    /// backend × row tile × awkward (bs, width, k0) geometry must
+    /// reproduce the exact i64 dot — including block sizes not
+    /// divisible by any vector width and single-column tails.
+    #[test]
+    fn all_backends_match_i64_reference_on_awkward_shapes() {
+        let mut rng = Pcg64::new(0xD07);
+        for &bs in &[1usize, 2, 3, 5, 8, 15, 16, 17, 24, 33, 64] {
+            for &width in &[1usize, 2, 7, 8, 9, 15, 16, 17, 24, 31, 33] {
+                // Engine contract: width ≤ bs (panel width is
+                // min(block, cols remainder); acci rows sit bs apart).
+                if width > bs {
+                    continue;
+                }
+                for &k0 in &[0usize, bs] {
+                    let prows = k0 + bs;
+                    let a_stride = prows;
+                    let qa = rand_i8(4 * a_stride, &mut rng);
+                    let panel = rand_i8(prows * width, &mut rng);
+                    let want =
+                        ref_dot(&qa, a_stride, 0, k0, bs, &panel, width, 4);
+                    for kn in available() {
+                        let mut acci = vec![0i32; 4 * bs];
+                        let mut acc = vec![0.0f32; 4 * bs];
+                        for (rows, dot) in [
+                            (1usize, kn.dot_i8),
+                            (2, kn.dot2_i8),
+                            (4, kn.dot4_i8),
+                        ] {
+                            acci.fill(i32::MIN);
+                            acc.fill(f32::NAN);
+                            dot(
+                                &qa, a_stride, 0, k0, bs, &panel, width,
+                                &mut acci, &mut acc,
+                            );
+                            for t in 0..rows {
+                                for j in 0..width {
+                                    let w = want[t * width + j];
+                                    assert_eq!(
+                                        acci[t * bs + j] as i64,
+                                        w,
+                                        "{} rows={rows} bs={bs} \
+                                         width={width} k0={k0} t={t} j={j}",
+                                        kn.name
+                                    );
+                                    assert_eq!(
+                                        acc[t * bs + j],
+                                        w as f32,
+                                        "{} widen rows={rows} bs={bs} \
+                                         width={width}",
+                                        kn.name
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn saturated_codes_stay_exact_on_every_backend() {
+        // All-(-127/127) codes drive the i16-pair scheme to its
+        // extremes (|pair sum| = 32258); the integer result must still
+        // be exact on every backend at the widest paper block size.
+        for &bs in &[128usize, 256] {
+            let width = 16;
+            let qa = vec![127i8; 4 * bs];
+            let mut panel = vec![-127i8; bs * width];
+            for (i, v) in panel.iter_mut().enumerate() {
+                if i % 2 == 0 {
+                    *v = 127;
+                }
+            }
+            let want = ref_dot(&qa, bs, 0, 0, bs, &panel, width, 4);
+            for kn in available() {
+                let mut acci = vec![0i32; 4 * bs];
+                let mut acc = vec![0.0f32; 4 * bs];
+                (kn.dot4_i8)(
+                    &qa, bs, 0, 0, bs, &panel, width, &mut acci, &mut acc,
+                );
+                for t in 0..4 {
+                    for j in 0..width {
+                        assert_eq!(
+                            acci[t * bs + j] as i64,
+                            want[t * width + j],
+                            "{} bs={bs} t={t} j={j}",
+                            kn.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_tiles_compose() {
+        // dot4 ≡ dot2 × 2 ≡ dot1 × 4 on every backend (the engine
+        // mixes tile sizes freely at panel tails).
+        let mut rng = Pcg64::new(0xC0);
+        let (bs, width, stride) = (24usize, 19usize, 29usize);
+        let qa = rand_i8(6 * stride, &mut rng);
+        let panel = rand_i8(bs * width, &mut rng);
+        for kn in available() {
+            let mut i4 = vec![0i32; 4 * bs];
+            let mut a4 = vec![0.0f32; 4 * bs];
+            (kn.dot4_i8)(&qa, stride, 1, 0, bs, &panel, width, &mut i4, &mut a4);
+            for t in 0..4 {
+                let mut i1 = vec![0i32; bs];
+                let mut a1 = vec![0.0f32; bs];
+                (kn.dot_i8)(
+                    &qa, stride, 1 + t, 0, bs, &panel, width, &mut i1,
+                    &mut a1,
+                );
+                assert_eq!(&i4[t * bs..t * bs + width], &i1[..width],
+                           "{} t={t}", kn.name);
+            }
+            let mut i2 = vec![0i32; 2 * bs];
+            let mut a2 = vec![0.0f32; 2 * bs];
+            (kn.dot2_i8)(&qa, stride, 3, 0, bs, &panel, width, &mut i2, &mut a2);
+            assert_eq!(&i2[..width], &i4[2 * bs..2 * bs + width], "{}", kn.name);
+            assert_eq!(&i2[bs..bs + width], &i4[3 * bs..3 * bs + width],
+                       "{}", kn.name);
+        }
+    }
+}

@@ -10,6 +10,26 @@
 //! block accumulation — bit-identical to the f32 simulation for all
 //! paper block sizes); `*_path` wrappers expose the knob.
 //!
+//! ## Microkernel backends
+//!
+//! The engine's inner loops live in [`kernels`] behind a
+//! [`Kernels`] vtable — the CPU stand-in for the int8-dot tensor-core
+//! units the paper's 1.57x speedup rides on. Backends: `scalar`
+//! (portable floor, the seed's 4-unrolled loops), `sse2` / `avx2`
+//! (x86_64, exact i16-pair multiplies widened to i32), and `neon`
+//! (aarch64 `vmlal_s16`). Selection happens once per plan build:
+//! `PALLAS_KERNEL=scalar|sse2|avx2|neon` env override → the backend
+//! calibration measured fastest
+//! (`SubstrateCalibration::install_fastest_backend`) → the fastest
+//! detected one. Integer accumulation makes every backend
+//! bit-identical to the scalar floor, the f32 simulation, the seed
+//! `*_baseline` oracles, and the exact i64 references for
+//! `bs ≤ I8_EXACT_MAX_BS` — `tests/engine_prop.rs` asserts this per
+//! backend. To add one (AVX-512 VNNI next), see the recipe in
+//! [`kernels`]' module docs: implement the three `DotI8` row tiles,
+//! register the static in `available()`, and the test/bench sweeps
+//! pick it up automatically.
+//!
 //! These kernels give *measured* cost structure on this testbed (group
 //! size vs dequant overhead, fallback rate vs extra work, placement vs
 //! load balance); `costmodel` projects the same structure onto the
@@ -18,9 +38,11 @@
 pub mod dense;
 pub mod engine;
 pub mod int8;
+pub mod kernels;
 
 pub use dense::{matmul, matmul_baseline, matmul_naive};
 pub use engine::{DataPath, GemmPlan, Precision, I8_EXACT_MAX_BS};
+pub use kernels::{cpu_features, Kernels};
 pub use int8::{block_gemm, block_gemm_baseline, block_gemm_path,
                block_gemm_reference, fallback_gemm,
                fallback_gemm_baseline, fallback_gemm_path,

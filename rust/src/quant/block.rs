@@ -59,6 +59,17 @@ impl PanelPack {
 /// B-operand layout of the GEMM engine's `DataPath::Int8` path. Same
 /// panel geometry as [`PanelPack`], but the codes stay 1 byte each, so
 /// the packed operand moves 4x fewer bytes than the f32 simulation.
+///
+/// SIMD contract (the `gemm::kernels` backends stream this layout
+/// directly): panel rows are *unpadded* — a vector load at
+/// `(k, j)` reads `panel[k*width + j .. +L]`, which the kernels keep
+/// in bounds by chunking `j` to full vector widths and finishing the
+/// remainder scalar, so no alignment or tail padding is required
+/// (`loadu`/`vld1` loads are unaligned-tolerant on every supported
+/// ISA and the panel is contiguous, so wide loads never cross into
+/// unmapped memory). Padding rows to the vector width was considered
+/// and rejected: it would desync `widths[bj]` from the data stride
+/// for every consumer of the f32 twin.
 #[derive(Debug, Clone)]
 pub struct PanelPackI8 {
     /// panel (block) size the pack was built for

@@ -11,7 +11,15 @@
 //! sizes within `I8_EXACT_MAX_BS` every K-block dot is an integer
 //! below 2²⁴, so layout, scheduling, and even integer-vs-float
 //! accumulation must not change a single bit.
+//!
+//! The i8-path assertions additionally run on **every microkernel
+//! backend available on the host** (`kernels::available()`, the same
+//! set the `PALLAS_KERNEL` override can force), over block sizes that
+//! are not multiples of any SIMD width and shapes with odd column
+//! tails — so scalar, sse2, avx2 and neon all face the i64 oracles
+//! directly.
 
+use dbfq::gemm::kernels;
 use dbfq::gemm::{
     block_gemm, block_gemm_baseline, block_gemm_path,
     block_gemm_reference, fallback_gemm, fallback_gemm_baseline,
@@ -121,6 +129,81 @@ fn prop_fallback_engine_bit_identical_all_placements() {
                          threads={threads} placement={placement:?}"
                     );
                 }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_int8_all_backends_bit_identical() {
+    // Backend sweep against the exact i64 oracle: block sizes chosen
+    // to be indivisible by every vector width in the tree (8 for
+    // sse2/neon, 16 for avx2) so the SIMD j-tails and odd K-pairs are
+    // always exercised, plus shape offsets for odd output tails.
+    let backends = kernels::available();
+    forall("engine-int8-backends-vs-oracle", 10, |g| {
+        let bs = [12usize, 20, 24, 17][g.usize_in(0, 3)];
+        let m = bs * g.usize_in(1, 2) + g.usize_in(0, 7);
+        let k = bs * g.usize_in(1, 2) + g.usize_in(0, 7);
+        let n = bs * g.usize_in(1, 2) + g.usize_in(0, 7);
+        let a =
+            Mat::from_vec(m, k, g.vec_outliers(m * k, 1.0, 4, 120.0));
+        let b = Mat::from_vec(k, n, g.vec_normal(k * n, 1.0));
+        let qa = block_quant(&a, bs, INT8_LEVELS, Rounding::Nearest);
+        let qb = block_quant(&b, bs, INT8_LEVELS, Rounding::Nearest);
+        let c_ref = block_gemm_reference(&qa, &qb);
+        for &kn in &backends {
+            for threads in [1usize, 3] {
+                let c = GemmPlan::new_int8_path(&qa, &qb, threads,
+                                                DataPath::Int8)
+                    .with_kernels(kn)
+                    .execute();
+                prop_assert!(
+                    c.data == c_ref.data,
+                    "backend {} vs i64 oracle ({m},{k},{n}) bs={bs} \
+                     threads={threads}",
+                    kn.name
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fallback_all_backends_bit_identical() {
+    // The residual (Algorithm 1) path rides the same backend kernels;
+    // sweep it too, across placements, against the i64 oracle.
+    let backends = kernels::available();
+    forall("engine-fallback-backends-vs-oracle", 6, |g| {
+        let bs = [12usize, 20, 24][g.usize_in(0, 2)];
+        let m = bs * g.usize_in(1, 2) + g.usize_in(0, 7);
+        let k = bs * g.usize_in(1, 2) + g.usize_in(0, 7);
+        let n = bs * g.usize_in(1, 2) + g.usize_in(0, 7);
+        let a =
+            Mat::from_vec(m, k, g.vec_outliers(m * k, 1.0, 6, 150.0));
+        let b = Mat::from_vec(k, n, g.vec_normal(k * n, 1.0));
+        let probe = fallback_quant(&a, f32::INFINITY, bs, INT8_LEVELS,
+                                   Criterion::AbsMax);
+        let theta = theta_for_rate(&probe.metric, 0.3);
+        let fa = fallback_quant(&a, theta, bs, INT8_LEVELS,
+                                Criterion::AbsMax);
+        let qb = block_quant(&b, bs, INT8_LEVELS, Rounding::Nearest);
+        for placement in [Placement::Natural, Placement::Sequential] {
+            let u = remap_placement(&fa, placement);
+            let c_ref = fallback_gemm_reference(&fa, &qb, &u);
+            for &kn in &backends {
+                let c = GemmPlan::new_fallback_path(&fa, &qb, &u, 2,
+                                                    DataPath::Int8)
+                    .with_kernels(kn)
+                    .execute();
+                prop_assert!(
+                    c.data == c_ref.data,
+                    "backend {} fallback vs i64 oracle ({m},{k},{n}) \
+                     bs={bs} placement={placement:?}",
+                    kn.name
+                );
             }
         }
         Ok(())

@@ -1,0 +1,290 @@
+//! Layer-step pipeline: cached GemmPlans across training microsteps.
+//!
+//! Measures the tentpole claim of the plan cache — that planning once
+//! and executing many times beats re-quantizing/repacking weights per
+//! call — on the four linear sites of one transformer layer
+//! (`model::layer_linears`), each running fwd + dX + dW per
+//! microstep through the fallback GEMM engine:
+//!
+//! * `cached`   — one `LayerStep`, warm `PlanCache`: from the 2nd
+//!                microstep on, every weight lookup hits and the only
+//!                per-call quantization is the activation/gradient
+//!                side.
+//! * `uncached` — the same driver with the cache cleared before
+//!                every microstep: both weight halves re-quantize and
+//!                repack per site per microstep (the pre-pipeline
+//!                behaviour).
+//!
+//! Emits `BENCH_layer_step.json` (schema in `docs/BENCHMARKS.md`)
+//! with per-microstep times, cached-vs-uncached Gops, per-microstep
+//! cache hit rates (must be 1.0 from the 2nd microstep on), the
+//! executed per-site fallback rates, the quant-work counter deltas,
+//! and the cost model's step-level projection from the measured
+//! `SubstrateCalibration`. Set `BENCH_SMOKE=1` for a seconds-long CI
+//! smoke run.
+
+use std::time::Instant;
+
+use dbfq::costmodel::{rtx4090, SubstrateCalibration};
+use dbfq::gemm::{kernels, LayerStep, LayerStepConfig};
+use dbfq::quant::{fallback_quant, quant_work_counters,
+                  theta_for_rate, Criterion, INT8_LEVELS};
+use dbfq::util::bench::Table;
+use dbfq::util::json::{obj, Json};
+use dbfq::util::threadpool::default_threads;
+
+fn median(xs: &[f64]) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[v.len() / 2]
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let (d_model, d_ff, tokens, block, microsteps) = if smoke {
+        (64usize, 128usize, 64usize, 32usize, 4usize)
+    } else {
+        (256, 1024, 512, 128, 8)
+    };
+    let threads = default_threads().max(2);
+    let mut cfg = LayerStepConfig::new(d_model, d_ff, tokens, block);
+    cfg.glu = false; // GPT-2-style 4d MLP, as in Table 3
+    cfg.threads = threads;
+
+    println!("\n================================================");
+    println!(
+        "layer-step pipeline: d={d_model} ff={d_ff} tokens={tokens} \
+         block={block}, {threads} threads, {microsteps} microsteps"
+    );
+    println!("================================================");
+
+    let mut ls = LayerStep::with_random_weights(cfg.clone(), 0xBEEF);
+    let sites: Vec<_> = ls.sites().to_vec();
+    let (acts, grads) =
+        dbfq::gemm::synth_microbatch(&sites, 0x5EED, 200.0);
+    // Pin θ per site from an offline probe at the paper's band
+    // midpoint; the controller takes over at the step boundary.
+    let thetas: Vec<f32> = acts
+        .iter()
+        .map(|x| {
+            let probe = fallback_quant(x, f32::INFINITY, block,
+                                       INT8_LEVELS,
+                                       Criterion::AbsMax);
+            theta_for_rate(&probe.metric, 0.2)
+        })
+        .collect();
+    ls.controller_mut().thresholds.copy_from_slice(&thetas);
+
+    let flops = sites
+        .iter()
+        .map(|l| l.microstep_flops())
+        .sum::<f64>();
+
+    // -- uncached baseline: weight halves rebuilt every microstep ----
+    let (qu0, pu0) = quant_work_counters();
+    let mut uncached_ms = Vec::with_capacity(microsteps);
+    for _ in 0..microsteps {
+        ls.clear_cache();
+        let t = Instant::now();
+        let (outs, _) = ls.microstep(&acts, &grads);
+        std::hint::black_box(outs);
+        uncached_ms.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let (qu1, pu1) = quant_work_counters();
+    // drain the rate accumulator so `applied_rates` below reflects
+    // the cached phase only, not a mix of both measurement runs —
+    // and re-pin θ, since end_step may have adjusted it, so both
+    // phases execute at identical thresholds
+    let _ = ls.end_step();
+    ls.controller_mut().thresholds.copy_from_slice(&thetas);
+
+    // -- cached pipeline: plan once, execute many --------------------
+    ls.clear_cache();
+    let (qc0, pc0) = quant_work_counters();
+    let mut cached_ms = Vec::with_capacity(microsteps);
+    let mut per_microstep = Vec::new();
+    let mut rates = Vec::new();
+    for s in 0..microsteps {
+        let t = Instant::now();
+        let (outs, rep) = ls.microstep(&acts, &grads);
+        std::hint::black_box(outs);
+        cached_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        let lookups = rep.cache_hits + rep.cache_misses;
+        per_microstep.push((rep.cache_hits, rep.cache_misses));
+        if s + 1 == microsteps {
+            rates = rep
+                .sites
+                .iter()
+                .map(|sr| (sr.name, sr.fallback_rate))
+                .collect();
+        }
+        assert_eq!(lookups as usize, 2 * sites.len());
+    }
+    let (qc1, pc1) = quant_work_counters();
+    let applied = ls.end_step();
+
+    let cached_steady = median(&cached_ms[1..]);
+    let uncached_steady = median(&uncached_ms);
+    let cached_gops = flops / (cached_steady / 1e3) / 1e9;
+    let uncached_gops = flops / (uncached_steady / 1e3) / 1e9;
+    let speedup = uncached_steady / cached_steady;
+    let warm_hit_rate: f64 = {
+        let (h, m) = per_microstep[1..].iter().fold(
+            (0u64, 0u64),
+            |(h, m), &(hh, mm)| (h + hh, m + mm),
+        );
+        h as f64 / (h + m).max(1) as f64
+    };
+
+    let mut table = Table::new(&["run", "first ms", "steady ms",
+                                 "Gops", "hit rate 2nd+"]);
+    table.row(&[
+        "uncached".into(),
+        format!("{:.1}", uncached_ms[0]),
+        format!("{uncached_steady:.1}"),
+        format!("{uncached_gops:.2}"),
+        "-".into(),
+    ]);
+    table.row(&[
+        "cached".into(),
+        format!("{:.1}", cached_ms[0]),
+        format!("{cached_steady:.1}"),
+        format!("{cached_gops:.2}"),
+        format!("{warm_hit_rate:.2}"),
+    ]);
+    table.print();
+    println!(
+        "\ncached vs uncached steady-state: {speedup:.2}x \
+         (target > 1.0x); warm hit rate {warm_hit_rate:.2} \
+         (target 1.00)"
+    );
+    println!(
+        "quant calls / panel packs per run: uncached {}/{}, \
+         cached {}/{}",
+        qu1 - qu0, pu1 - pu0, qc1 - qc0, pc1 - pc0
+    );
+    println!(
+        "executed fallback rates: {rates:?}; controller applied \
+         {applied:?}"
+    );
+
+    // -- step-level cost projection from measured calibration --------
+    let cal_dim = if smoke { 96 } else { 256 };
+    let cal_block = block.min(cal_dim);
+    let cal = SubstrateCalibration::measure(cal_dim, cal_block,
+                                            threads);
+    let mean_rate = rates.iter().map(|&(_, r)| r).sum::<f64>()
+        / rates.len().max(1) as f64;
+    let sub_ms = cal.substrate_layer_step_secs(
+        d_model, d_ff, cfg.glu, tokens, mean_rate) * 1e3;
+    let g4090 = rtx4090();
+    let proj_ms = cal.projected_layer_step_secs(
+        &g4090, d_model, d_ff, cfg.glu, tokens, mean_rate) * 1e3;
+    println!(
+        "\ncost model: substrate estimate {sub_ms:.1} ms/microstep \
+         (measured {cached_steady:.1} ms), 4090 projection \
+         {proj_ms:.3} ms"
+    );
+
+    let report = obj(vec![
+        ("bench", Json::Str("layer_step".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("config", obj(vec![
+            ("d_model", Json::Num(d_model as f64)),
+            ("d_ff", Json::Num(d_ff as f64)),
+            ("glu", Json::Bool(cfg.glu)),
+            ("tokens", Json::Num(tokens as f64)),
+            ("block", Json::Num(block as f64)),
+            ("threads", Json::Num(threads as f64)),
+            ("microsteps", Json::Num(microsteps as f64)),
+            ("data_path",
+             Json::Str(format!("{:?}", cfg.path))),
+            ("kernel_backend",
+             Json::Str(ls.kernel_backend().into())),
+        ])),
+        ("cpu_features",
+         Json::Arr(kernels::cpu_features()
+             .iter()
+             .map(|&f| Json::Str(f.into()))
+             .collect())),
+        ("sites", Json::Arr(
+            sites
+                .iter()
+                .map(|l| obj(vec![
+                    ("name", Json::Str(l.name.into())),
+                    ("m", Json::Num(l.m as f64)),
+                    ("n", Json::Num(l.n as f64)),
+                    ("k", Json::Num(l.k as f64)),
+                    ("microstep_flops",
+                     Json::Num(l.microstep_flops())),
+                ]))
+                .collect(),
+        )),
+        ("flops_per_microstep", Json::Num(flops)),
+        ("cached", obj(vec![
+            ("per_microstep_ms", Json::Arr(
+                cached_ms.iter().map(|&x| Json::Num(x)).collect())),
+            ("first_ms", Json::Num(cached_ms[0])),
+            ("steady_ms", Json::Num(cached_steady)),
+            ("gops", Json::Num(cached_gops)),
+            ("quant_calls", Json::Num((qc1 - qc0) as f64)),
+            ("panel_packs", Json::Num((pc1 - pc0) as f64)),
+        ])),
+        ("uncached", obj(vec![
+            ("per_microstep_ms", Json::Arr(
+                uncached_ms.iter().map(|&x| Json::Num(x)).collect())),
+            ("steady_ms", Json::Num(uncached_steady)),
+            ("gops", Json::Num(uncached_gops)),
+            ("quant_calls", Json::Num((qu1 - qu0) as f64)),
+            ("panel_packs", Json::Num((pu1 - pu0) as f64)),
+        ])),
+        ("cache", obj(vec![
+            ("capacity",
+             Json::Num(ls.cache().capacity() as f64)),
+            ("entries", Json::Num(ls.cache().len() as f64)),
+            ("warm_hit_rate", Json::Num(warm_hit_rate)),
+            ("per_microstep", Json::Arr(
+                per_microstep
+                    .iter()
+                    .map(|&(h, m)| obj(vec![
+                        ("hits", Json::Num(h as f64)),
+                        ("misses", Json::Num(m as f64)),
+                    ]))
+                    .collect(),
+            )),
+        ])),
+        ("fallback", obj(vec![
+            ("per_site", Json::Arr(
+                rates
+                    .iter()
+                    .map(|&(name, r)| obj(vec![
+                        ("name", Json::Str(name.into())),
+                        ("rate", Json::Num(r)),
+                    ]))
+                    .collect(),
+            )),
+            ("mean_rate", Json::Num(mean_rate)),
+            ("applied_rates", Json::Arr(
+                applied
+                    .iter()
+                    .map(|&r| Json::Num(r as f64))
+                    .collect(),
+            )),
+        ])),
+        ("criteria", obj(vec![
+            ("cached_vs_uncached", Json::Num(speedup)),
+            ("warm_hit_rate", Json::Num(warm_hit_rate)),
+        ])),
+        ("projection", obj(vec![
+            ("substrate_ms", Json::Num(sub_ms)),
+            ("rtx4090_ms", Json::Num(proj_ms)),
+            ("calibration_int8_gops",
+             Json::Num(cal.int8_gops)),
+            ("calibration_backend",
+             Json::Str(cal.backend.into())),
+        ])),
+    ]);
+    std::fs::write("BENCH_layer_step.json", report.to_string())
+        .expect("write BENCH_layer_step.json");
+    println!("\nwrote BENCH_layer_step.json");
+}

@@ -16,7 +16,7 @@ use crate::runtime::{Runtime, Value};
 use crate::util::rng::Pcg64;
 
 pub use metrics_log::MetricsLog;
-pub use threshold::ThresholdController;
+pub use threshold::{RateAccumulator, ThresholdController};
 
 /// Runtime quantization scalars fed to every artifact call
 /// (see `trainstep.QSCALAR_NAMES`).

@@ -85,9 +85,100 @@ impl ThresholdController {
     }
 }
 
+/// Per-site fallback rates accumulated across the microsteps of one
+/// optimizer step — the execution-side feedback hook of the
+/// layer-step pipeline (`gemm::pipeline`).
+///
+/// Each microstep the pipeline records the rates its fallback GEMMs
+/// *actually ran with* (one per linear site); at the step boundary
+/// [`flush_into`](RateAccumulator::flush_into) hands the per-site
+/// means to [`ThresholdController::update`] and resets. θ therefore
+/// adapts from real execution, with Algorithm 2's one-step delay,
+/// instead of from offline tensor statistics.
+#[derive(Debug, Clone)]
+pub struct RateAccumulator {
+    sums: Vec<f64>,
+    microsteps: usize,
+}
+
+impl RateAccumulator {
+    pub fn new(n_sites: usize) -> RateAccumulator {
+        RateAccumulator { sums: vec![0.0; n_sites], microsteps: 0 }
+    }
+
+    pub fn n_sites(&self) -> usize {
+        self.sums.len()
+    }
+
+    /// Microsteps recorded since the last flush.
+    pub fn microsteps(&self) -> usize {
+        self.microsteps
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.microsteps == 0
+    }
+
+    /// Record one microstep's observed per-site fallback rates.
+    pub fn record(&mut self, rates: &[f64]) {
+        assert_eq!(rates.len(), self.sums.len(), "site count");
+        for (s, &r) in self.sums.iter_mut().zip(rates) {
+            *s += r;
+        }
+        self.microsteps += 1;
+    }
+
+    /// Mean per-site rates over the recorded microsteps (all zeros
+    /// when nothing was recorded).
+    pub fn mean_rates(&self) -> Vec<f32> {
+        let n = self.microsteps.max(1) as f64;
+        self.sums.iter().map(|&s| (s / n) as f32).collect()
+    }
+
+    /// Apply Algorithm 2 with the accumulated means and reset for the
+    /// next step, returning the means that were applied. No-op
+    /// returning an empty vec when no microstep was recorded (a
+    /// controller update from fabricated zero rates would drive every
+    /// θ down).
+    pub fn flush_into(&mut self,
+                      c: &mut ThresholdController) -> Vec<f32> {
+        if self.microsteps == 0 {
+            return Vec::new();
+        }
+        let means = self.mean_rates();
+        c.update(&means);
+        self.sums.iter_mut().for_each(|s| *s = 0.0);
+        self.microsteps = 0;
+        means
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn rate_accumulator_means_and_flushes() {
+        let mut acc = RateAccumulator::new(2);
+        assert!(acc.is_empty());
+        acc.record(&[0.4, 0.0]);
+        acc.record(&[0.6, 0.2]);
+        assert_eq!(acc.microsteps(), 2);
+        let means = acc.mean_rates();
+        assert!((means[0] - 0.5).abs() < 1e-6);
+        assert!((means[1] - 0.1).abs() < 1e-6);
+        let mut c = ThresholdController::new(2, 1.0, 0.1, 0.3, 1.3);
+        let applied = acc.flush_into(&mut c);
+        assert_eq!(applied, means);
+        // site 0 above the band -> theta up; site 1 inside -> steady
+        assert!(c.thresholds[0] > 1.0);
+        assert_eq!(c.thresholds[1], 1.0);
+        assert!(acc.is_empty());
+        // flushing an empty accumulator must not move thresholds
+        let before = c.thresholds.clone();
+        assert!(acc.flush_into(&mut c).is_empty());
+        assert_eq!(c.thresholds, before);
+    }
 
     #[test]
     fn moves_toward_band() {

@@ -362,6 +362,48 @@ impl SubstrateCalibration {
         let base = gpu.int8_gemm_secs(m, n, k, kg, 0.0);
         base * (1.0 + rate * self.fallback_overhead_per_rate())
     }
+
+    /// Projected GPU seconds for one transformer-layer *microstep* —
+    /// the four linear sites of [`crate::model::layer_linears`], each
+    /// running forward + `dX` + `dW` (the layer-step pipeline's GEMM
+    /// set). The forward carries the fallback rate through the
+    /// measured slope; the backward GEMMs run plain INT8 (§5.1: dY is
+    /// not fallback-quantized). Group size is the calibration block.
+    pub fn projected_layer_step_secs(&self, gpu: &Gpu, d_model: usize,
+                                     d_ff: usize, glu: bool,
+                                     tokens: usize,
+                                     rate: f64) -> f64 {
+        let kg = self.block;
+        crate::model::layer_linears(d_model, d_ff, glu, tokens)
+            .iter()
+            .map(|l| {
+                self.projected_int8_secs(gpu, l.m, l.n, l.k, kg, rate)
+                    + gpu.int8_gemm_secs(l.m, l.k, l.n, kg, 0.0)
+                    + gpu.int8_gemm_secs(l.k, l.n, l.m, kg, 0.0)
+            })
+            .sum()
+    }
+
+    /// Estimated CPU-substrate seconds for the same microstep, from
+    /// the measured i8-path throughput and fallback slope: each
+    /// site's forward pays `1 + rate·slope`, the two backward GEMMs
+    /// move the same M·N·K each at rate 0. The layer-step bench
+    /// compares its measured cached-pipeline time against this.
+    pub fn substrate_layer_step_secs(&self, d_model: usize,
+                                     d_ff: usize, glu: bool,
+                                     tokens: usize,
+                                     rate: f64) -> f64 {
+        let slope = self.fallback_overhead_per_rate();
+        let flops_per_sec = self.int8_gops.max(1e-12) * 1e9;
+        crate::model::layer_linears(d_model, d_ff, glu, tokens)
+            .iter()
+            .map(|l| {
+                let fwd = l.flops();
+                (fwd * (1.0 + rate * slope) + 2.0 * fwd)
+                    / flops_per_sec
+            })
+            .sum()
+    }
 }
 
 #[cfg(test)]
@@ -466,6 +508,54 @@ mod tests {
         let t3 = cal.projected_int8_secs(&g, 1024, 1024, 1024, 128, 0.3);
         assert!(t3 >= t0);
         assert!(cal.int8_speedup() > 0.0);
+    }
+
+    #[test]
+    fn layer_step_projection_scales_and_orders() {
+        // Hand-built calibration: slope = (10/8 - 1) / 0.25 = 1.0.
+        let cal = SubstrateCalibration {
+            dims: (256, 256, 256),
+            block: 128,
+            threads: 4,
+            dense_gops: 5.0,
+            int8_gops: 10.0,
+            int8_sim_gops: 6.0,
+            fallback: vec![(0.0, 10.0), (0.25, 8.0)],
+            backend: "scalar",
+            per_backend: vec![("scalar", 10.0)],
+        };
+        assert!((cal.fallback_overhead_per_rate() - 1.0).abs() < 1e-9);
+        let g = rtx4090();
+        let t0 = cal
+            .projected_layer_step_secs(&g, 2048, 8192, false, 4096,
+                                       0.0);
+        let t2 = cal
+            .projected_layer_step_secs(&g, 2048, 8192, false, 4096,
+                                       0.2);
+        assert!(t0 > 0.0);
+        assert!(t2 > t0, "fallback rate must cost time");
+        // more tokens -> more time, superlinear never required
+        let t_big = cal
+            .projected_layer_step_secs(&g, 2048, 8192, false, 8192,
+                                       0.1);
+        let t_small = cal
+            .projected_layer_step_secs(&g, 2048, 8192, false, 4096,
+                                       0.1);
+        assert!(t_big > t_small);
+        // substrate estimate at rate 0 is exactly step-flops / Gops
+        let s0 = cal
+            .substrate_layer_step_secs(2048, 8192, false, 4096, 0.0);
+        let flops: f64 =
+            crate::model::layer_linears(2048, 8192, false, 4096)
+                .iter()
+                .map(|l| l.microstep_flops())
+                .sum();
+        let expect = flops / (10.0 * 1e9);
+        assert!((s0 - expect).abs() / expect < 1e-9,
+                "s0 {s0} vs {expect}");
+        let s2 = cal
+            .substrate_layer_step_secs(2048, 8192, false, 4096, 0.2);
+        assert!(s2 > s0);
     }
 
     #[test]

@@ -52,6 +52,14 @@
 //! conversion and packing — the caches live on [`BlockQuant`] /
 //! [`FallbackQuant`] themselves.
 //!
+//! For cross-step reuse the plan additionally splits into a
+//! **cacheable weight half** ([`WeightPlan`]: owned quantized weight
+//! + eagerly packed panels + pinned backend) and a **per-call
+//! activation half** re-planned against it each microstep —
+//! `gemm::pipeline` caches the weight halves across training steps.
+//! See `docs/ARCHITECTURE.md` for the full packed-once vs per-call
+//! breakdown.
+//!
 //! ## Packing layout
 //!
 //! The B operand is repacked column-panel-contiguous ([`PanelPack`]):
@@ -125,7 +133,9 @@ use crate::util::threadpool::weighted_buckets;
 use crate::util::Mat;
 
 /// Which inner microkernel a plan runs (paper: BF16 baseline, Eq. 1
-/// block GEMM, Algorithm 1 fallback GEMM).
+/// block GEMM, Algorithm 1 fallback GEMM). Deliberately not `Hash`:
+/// precision must not become a cache-key dimension — one cached
+/// weight half serves both int8 precisions (see `gemm::pipeline`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Precision {
     /// f32 reference (the testbed's "BF16 baseline")
@@ -139,7 +149,7 @@ pub enum Precision {
 /// What the int8-mode microkernels stream (see module docs): the
 /// seed-compatible f32 simulation of the codes, or the true i8
 /// operands with i32 block accumulation.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DataPath {
     /// cached f32 copies of the int8 codes, f32 FMA kernels
     SimF32,
@@ -743,6 +753,99 @@ impl<'a> GemmPlan<'a> {
     }
 }
 
+/// The cacheable **weight half** of a GEMM plan: the B operand's
+/// quantized codes, their packed column panels (materialized eagerly
+/// at construction), and the microkernel backend pinned for every
+/// plan derived from it.
+///
+/// [`GemmPlan`] borrows both operands, so a plan cannot outlive the
+/// activation quant of one training microstep. Splitting the plan
+/// separates what is **step-invariant** — weight quantization, panel
+/// packing, backend choice — from the **per-call** activation half:
+/// a `WeightPlan` is built once (and owned across steps by
+/// `gemm::pipeline`'s `PlanCache`), while
+/// [`plan_int8`](WeightPlan::plan_int8) /
+/// [`plan_fallback`](WeightPlan::plan_fallback) re-plan the
+/// activation side against it per microstep with zero packing or
+/// conversion work (the cached panels ride through the same `Arc`s).
+///
+/// Derived plans are **bit-identical** to plans built directly from
+/// the same operands: the panel pack is the one cached on the
+/// [`BlockQuant`] itself, and the backend pin only selects among
+/// bit-identical kernels. `tests/pipeline_prop.rs` asserts this per
+/// backend, precision, data path, and thread count. See
+/// `docs/ARCHITECTURE.md` for the packed-once vs per-call split.
+#[derive(Debug, Clone)]
+pub struct WeightPlan {
+    qb: Arc<BlockQuant>,
+    path: DataPath,
+    kernels: &'static Kernels,
+}
+
+impl WeightPlan {
+    /// Take ownership of `qb` as a cacheable weight operand and pack
+    /// its column panels for `path` now, so every later plan build
+    /// against this weight does no packing at all.
+    pub fn new(qb: Arc<BlockQuant>, path: DataPath) -> WeightPlan {
+        match path {
+            DataPath::SimF32 => {
+                qb.col_panels();
+            }
+            DataPath::Int8 => {
+                qb.col_panels_i8();
+            }
+        }
+        WeightPlan { qb, path, kernels: kernels::select() }
+    }
+
+    /// Pin derived plans to an explicit microkernel backend (default:
+    /// whatever [`kernels::select`] chose at construction time).
+    pub fn with_kernels(mut self, k: &'static Kernels) -> WeightPlan {
+        self.kernels = k;
+        self
+    }
+
+    /// The cached quantized weight operand.
+    pub fn weight(&self) -> &BlockQuant {
+        &self.qb
+    }
+
+    /// The data path the cached panels were packed for.
+    pub fn data_path(&self) -> DataPath {
+        self.path
+    }
+
+    /// Backend every derived plan executes with.
+    pub fn kernel_backend(&self) -> &'static str {
+        self.kernels.name
+    }
+
+    /// (k, n) of the weight operand — GEMM inner dim × output
+    /// features.
+    pub fn dims(&self) -> (usize, usize) {
+        (self.qb.rows, self.qb.cols)
+    }
+
+    /// Plan `C = A · W` at `Int8Block` precision against the cached
+    /// weight half; only the activation operand is read per call.
+    pub fn plan_int8<'p>(&'p self, a: &'p BlockQuant,
+                         threads: usize) -> GemmPlan<'p> {
+        GemmPlan::new_int8_path(a, self.qb.as_ref(), threads, self.path)
+            .with_kernels(self.kernels)
+    }
+
+    /// Plan a fallback GEMM (Algorithm 1) against the cached weight
+    /// half. `u` is the activation-side fallback mask (`&fa.u` or a
+    /// `remap_placement` result).
+    pub fn plan_fallback<'p>(&'p self, fa: &'p FallbackQuant,
+                             u: &'p [bool], threads: usize)
+                             -> GemmPlan<'p> {
+        GemmPlan::new_fallback_path(fa, self.qb.as_ref(), u, threads,
+                                    self.path)
+            .with_kernels(self.kernels)
+    }
+}
+
 /// `crow[j] += acc[j] * w` — the per-K-block scale-FMA of Eq. 1.
 #[inline]
 fn scale_add(crow: &mut [f32], acc: &[f32], width: usize, w: f32) {
@@ -985,6 +1088,42 @@ mod tests {
         let dot = (bs * 127 * 127) as f32;
         let w = qa.scale[0] * qb.scale[0];
         assert_eq!(c_i8.data[0], dot * w);
+    }
+
+    #[test]
+    fn weight_plan_packs_eagerly_and_derives_identical_plans() {
+        let (a, w) = mats(40, 32, 48, 51);
+        let qa = block_quant(&a, 16, INT8_LEVELS, Rounding::Nearest);
+        let qw = Arc::new(block_quant(&w, 16, INT8_LEVELS,
+                                      Rounding::Nearest));
+        let wp = WeightPlan::new(qw.clone(), DataPath::Int8);
+        // panels packed at construction, on the i8 side only
+        assert!(qw.i8_panels_built());
+        assert!(!qw.f32_panels_built() && !qw.f32_codes_built());
+        assert_eq!(wp.dims(), (32, 48));
+        assert_eq!(wp.data_path(), DataPath::Int8);
+        assert_eq!(wp.weight().block, 16);
+        // derived plan ≡ direct plan, bitwise, at both precisions
+        let c_wp = wp.plan_int8(&qa, 2).execute();
+        let c_direct =
+            GemmPlan::new_int8_path(&qa, qw.as_ref(), 2,
+                                    DataPath::Int8)
+                .execute();
+        assert_eq!(c_wp.data, c_direct.data);
+        let fa = fallback_quant(&a, -1.0, 16, INT8_LEVELS,
+                                Criterion::AbsMax);
+        let f_wp = wp.plan_fallback(&fa, &fa.u, 2).execute();
+        let f_direct = GemmPlan::new_fallback_path(
+            &fa, qw.as_ref(), &fa.u, 2, DataPath::Int8)
+            .execute();
+        assert_eq!(f_wp.data, f_direct.data);
+        // backend pin survives into derived plans
+        let wp_scalar = WeightPlan::new(qw.clone(), DataPath::Int8)
+            .with_kernels(&crate::gemm::kernels::SCALAR);
+        assert_eq!(wp_scalar.kernel_backend(), "scalar");
+        let plan = wp_scalar.plan_int8(&qa, 1);
+        assert_eq!(plan.kernel_backend(), "scalar");
+        assert_eq!(plan.execute().data, c_wp.data);
     }
 
     #[test]

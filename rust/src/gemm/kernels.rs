@@ -55,19 +55,15 @@
 //! seed's skip-in-remainder behaviour untouched, again for baseline
 //! bit-compatibility.
 //!
-//! ## Adding a backend (e.g. AVX-512 VNNI)
+//! ## Adding a backend
 //!
-//! 1. Write `dot1/dot2/dot4` kernels that produce the exact integer
-//!    block dot in `acci` (any lane order; use `widen_rows` to fill
-//!    `acc`). A VNNI kernel would feed `_mm512_dpbusd_epi32` with the
-//!    usual unsigned-A offset trick, or stay on the exact i16-pair
-//!    scheme at 32 lanes.
-//! 2. Add a `static VNNI: Kernels` and list it in [`available`]
-//!    behind its `is_x86_feature_detected!` gate, ordered after the
-//!    backends it should outrank.
-//! 3. `tests/engine_prop.rs` and the tests below pick it up
-//!    automatically via [`available`]; run the `gemm_engine` bench to
-//!    confirm it wins and let calibration select it.
+//! The full recipe — including the AVX-512 VNNI walk-through
+//! (`_mm512_dpbusd_epi32` with the unsigned-A offset trick) — lives
+//! in `docs/ARCHITECTURE.md` § "Adding a kernel backend". Short form:
+//! implement the three `DotI8` row tiles so they produce the exact
+//! integer block dot in `acci` (any lane order), register the
+//! `static` in [`available`] behind its feature gate, and the
+//! per-backend test/bench sweeps pick it up automatically.
 //!
 //! [`GemmPlan`]: crate::gemm::engine::GemmPlan
 

@@ -25,34 +25,70 @@
 //! bit-identical to the scalar floor, the f32 simulation, the seed
 //! `*_baseline` oracles, and the exact i64 references for
 //! `bs ≤ I8_EXACT_MAX_BS` — `tests/engine_prop.rs` asserts this per
-//! backend. To add one (AVX-512 VNNI next), see the recipe in
-//! [`kernels`]' module docs: implement the three `DotI8` row tiles,
-//! register the static in `available()`, and the test/bench sweeps
-//! pick it up automatically.
+//! backend. To add one (AVX-512 VNNI next), follow the recipe in
+//! `docs/ARCHITECTURE.md` § "Adding a kernel backend": implement the
+//! three `DotI8` row tiles, register the static in `available()`, and
+//! the test/bench sweeps pick it up automatically.
+//!
+//! ## Layer-step pipeline
+//!
+//! [`pipeline`] lifts the engine from one GEMM to one *training
+//! step*: a [`PlanCache`] owns the cacheable weight halves
+//! ([`WeightPlan`]: quantized weights + packed panels + pinned
+//! backend) across steps, and [`LayerStep`] drives the four linear
+//! sites of a transformer layer (fwd + both bwd GEMMs each) against
+//! them, re-quantizing only the activation/gradient side per
+//! microstep and feeding executed fallback rates back into the
+//! Algorithm 2 threshold controller. `benches/layer_step.rs` tracks
+//! the cached-vs-uncached gain.
 //!
 //! These kernels give *measured* cost structure on this testbed (group
 //! size vs dequant overhead, fallback rate vs extra work, placement vs
 //! load balance); `costmodel` projects the same structure onto the
-//! paper's GPUs.
+//! paper's GPUs. The full architecture tour (plan lifecycle, data
+//! paths, backend vtable, plan cache) lives in `docs/ARCHITECTURE.md`.
 
 pub mod dense;
 pub mod engine;
 pub mod int8;
 pub mod kernels;
+pub mod pipeline;
 
 pub use dense::{matmul, matmul_baseline, matmul_naive};
-pub use engine::{DataPath, GemmPlan, Precision, I8_EXACT_MAX_BS};
+pub use engine::{DataPath, GemmPlan, Precision, WeightPlan,
+                 I8_EXACT_MAX_BS};
 pub use kernels::{cpu_features, Kernels};
 pub use int8::{block_gemm, block_gemm_baseline, block_gemm_path,
                block_gemm_reference, fallback_gemm,
                fallback_gemm_baseline, fallback_gemm_path,
                fallback_gemm_reference, remap_placement, Placement};
+pub use pipeline::{synth_microbatch, CacheStats, LayerStep,
+                   LayerStepConfig, PlanCache, PlanKey, SiteOutputs,
+                   SiteReport, StepReport};
 
 use crate::quant::{block_quant, fallback_quant, Criterion, Rounding,
                    INT8_LEVELS};
 use crate::util::Mat;
 
-/// One-call quantized matmul (both operands RTN INT8, shared block size).
+/// One-call quantized matmul (both operands RTN INT8, shared block
+/// size). Quantizes per call — for repeated GEMMs over stable
+/// operands build a [`GemmPlan`] (or cache a [`WeightPlan`]) instead.
+///
+/// ```
+/// use dbfq::gemm::{matmul, quantized_matmul};
+/// use dbfq::util::rng::Pcg64;
+/// use dbfq::util::Mat;
+///
+/// let mut rng = Pcg64::new(7);
+/// let a = Mat::randn(32, 48, 1.0, &mut rng);
+/// let b = Mat::randn(48, 24, 1.0, &mut rng);
+/// let c = quantized_matmul(&a, &b, 16, 2);
+/// assert_eq!((c.rows, c.cols), (32, 24));
+/// // per-block INT8 stays close to the exact product
+/// let exact = matmul(&a, &b, 2);
+/// let err = dbfq::quant::metrics::rel_err(&c.data, &exact.data);
+/// assert!(err < 0.05, "rel err {err}");
+/// ```
 pub fn quantized_matmul(a: &Mat, b: &Mat, block: usize,
                         threads: usize) -> Mat {
     let qa = block_quant(a, block, INT8_LEVELS, Rounding::Nearest);
@@ -60,7 +96,32 @@ pub fn quantized_matmul(a: &Mat, b: &Mat, block: usize,
     block_gemm(&qa, &qb, threads)
 }
 
-/// One-call fallback matmul; returns (C, fallback_rate).
+/// One-call fallback matmul; returns (C, fallback_rate). The A
+/// operand gets the two-level representation of paper §4.3 wherever
+/// its block metric exceeds `theta` (Algorithm 1 skips the residual
+/// work elsewhere).
+///
+/// ```
+/// use dbfq::gemm::{fallback_matmul, matmul, quantized_matmul};
+/// use dbfq::util::rng::Pcg64;
+/// use dbfq::util::Mat;
+///
+/// let mut rng = Pcg64::new(3);
+/// let mut a = Mat::randn(32, 32, 1.0, &mut rng);
+/// a.data[5] = 400.0; // an outlier plain INT8 would smear
+/// let b = Mat::randn(32, 32, 1.0, &mut rng);
+///
+/// // theta = -1 puts every block on the two-level representation
+/// let (c, rate) = fallback_matmul(&a, &b, -1.0, 16, 1);
+/// assert!((rate - 1.0).abs() < 1e-12);
+///
+/// // fallback beats plain block quantization near the outlier
+/// let exact = matmul(&a, &b, 1);
+/// let plain = quantized_matmul(&a, &b, 16, 1);
+/// let rel = dbfq::quant::metrics::rel_err;
+/// assert!(rel(&c.data, &exact.data)
+///         < rel(&plain.data, &exact.data));
+/// ```
 pub fn fallback_matmul(a: &Mat, b: &Mat, theta: f32, block: usize,
                        threads: usize) -> (Mat, f64) {
     let fa = fallback_quant(a, theta, block, INT8_LEVELS, Criterion::AbsMax);

@@ -1,0 +1,852 @@
+//! # Layer-step pipeline: cached GemmPlans across training steps
+//!
+//! The paper's 1.57x end-to-end speedup comes from running *whole
+//! transformer layers* through the fallback GEMM, not one isolated
+//! matmul — and the win evaporates if weight quantization and panel
+//! packing are redone per call. This module keeps the step-invariant
+//! half of every plan alive across microsteps and steps:
+//!
+//! ```text
+//!   step boundary                 microstep (many per step)
+//!   ─────────────                 ─────────────────────────
+//!   PlanCache                       per site (qkv, attn_out,
+//!    key: (weight id, shape,        mlp_in, mlp_down):
+//!         data path, backend)        quantize X (fallback, θ_site)
+//!    value: WeightPlan               quantize dY (plain int8)
+//!     = q(W) + packed panels   ──►   fwd  Y  = X·W    (cached W)
+//!       + pinned backend            bwd  dX = dY·Wᵀ  (cached Wᵀ)
+//!    built on miss, owned           bwd  dW = Xᵀ·dY  (fresh: both
+//!    across steps, LRU-evicted           operands change per call)
+//!                                   record executed fallback rate
+//!   RateAccumulator ──────────►   ThresholdController (Alg 2) at
+//!    per-site means               the step boundary: θ adapts from
+//!                                 real execution
+//! ```
+//!
+//! What is packed **once** (cache hit = zero quantization/packing
+//! work): the weight codes, their column panels for the plan's
+//! [`DataPath`], and the transposed-weight twin for `dX`. What is
+//! rebuilt **per call**: the activation fallback quant, the gradient
+//! quant, and the `dW` plan whose operands both change every
+//! microstep. `quant::quant_work_counters` makes the split observable
+//! — the cache-hit regression tests and `benches/layer_step.rs` lean
+//! on it.
+//!
+//! Bit-identity is non-negotiable: a cached plan must produce
+//! byte-identical C to a freshly built one, on every kernel backend
+//! and thread count — `tests/pipeline_prop.rs` sweeps exactly that.
+//! See `docs/ARCHITECTURE.md` for how this layer sits on the
+//! plan/execute engine.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::coordinator::{RateAccumulator, ThresholdController};
+use crate::gemm::engine::{DataPath, GemmPlan, WeightPlan};
+use crate::gemm::kernels::{self, Kernels};
+use crate::model::{layer_linears, LinearShape};
+use crate::quant::{block_quant_threads, fallback_quant_threads,
+                   Criterion, Rounding, INT8_LEVELS};
+use crate::util::rng::Pcg64;
+use crate::util::threadpool::default_threads;
+use crate::util::Mat;
+
+/// Cache key of one weight half: the caller-assigned identity of the
+/// weight *tensor*, its GEMM role (inner dim `k` × output features
+/// `n`, quantization block), the data path the panels were packed
+/// for, and the pinned microkernel backend.
+///
+/// `weight_id` is what keeps the cache content-correct: shapes alone
+/// cannot distinguish two different weight matrices (a square layer
+/// makes attn_out/mlp sites shape-identical), so the caller must
+/// assign distinct ids to distinct tensors — `LayerStep` uses
+/// `2·site + transposed`. The remaining fields exist because one
+/// tensor can legitimately be cached several ways (per path and
+/// backend) and those variants must not collide.
+///
+/// GEMM *precision* is deliberately not part of the key: a
+/// [`WeightPlan`] is precision-agnostic (the same cached half serves
+/// `plan_int8` and `plan_fallback` calls — only the activation side
+/// differs), so keying on it would store byte-identical panels twice
+/// per tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// caller-assigned identity of the weight tensor (distinct
+    /// tensors MUST get distinct ids, or lookups conflate them)
+    pub weight_id: u64,
+    /// weight rows = GEMM inner dim
+    pub k: usize,
+    /// weight cols = output features
+    pub n: usize,
+    /// quantization block size
+    pub block: usize,
+    /// data path the cached panels were packed for
+    pub path: DataPath,
+    /// microkernel backend name pinned at build
+    pub backend: &'static str,
+}
+
+/// Lifetime counters of a [`PlanCache`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    /// Hits over lookups (0 when nothing was looked up).
+    pub fn hit_rate(&self) -> f64 {
+        let lookups = self.hits + self.misses;
+        if lookups == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / lookups as f64
+    }
+}
+
+/// LRU cache of [`WeightPlan`]s keyed by [`PlanKey`] — owns the
+/// packed weight panels across training steps so a microstep's plan
+/// build does no weight quantization or packing on a hit.
+#[derive(Debug)]
+pub struct PlanCache {
+    cap: usize,
+    tick: u64,
+    map: HashMap<PlanKey, (Arc<WeightPlan>, u64)>,
+    stats: CacheStats,
+}
+
+impl PlanCache {
+    /// `capacity` ≥ 1 entries; least-recently-used entries are
+    /// evicted when a miss would exceed it.
+    pub fn new(capacity: usize) -> PlanCache {
+        assert!(capacity >= 1, "cache capacity must be >= 1");
+        PlanCache {
+            cap: capacity,
+            tick: 0,
+            map: HashMap::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Whether `key` is resident (does not touch LRU order or stats).
+    pub fn contains(&self, key: &PlanKey) -> bool {
+        self.map.contains_key(key)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Drop every cached entry (stats survive; not counted as
+    /// evictions — this is the bench's "uncached" mode, not pressure).
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+
+    /// Drop every entry caching the given weight tensor (all roles,
+    /// precisions, paths, backends), returning how many were
+    /// dropped. Callers MUST invalidate (or switch to a fresh id)
+    /// after mutating a weight in place: the cache keys on identity,
+    /// not tensor values, so a stale plan would otherwise keep being
+    /// served — bit-exact against the *old* weights, with no error.
+    /// `LayerStep::set_weight` wires this up for the optimizer-update
+    /// path.
+    pub fn invalidate_weight(&mut self, weight_id: u64) -> usize {
+        let before = self.map.len();
+        self.map.retain(|k, _| k.weight_id != weight_id);
+        before - self.map.len()
+    }
+
+    /// Return the cached weight half for `key`, building (and
+    /// inserting) it with `build` on a miss. The built plan is
+    /// checked against the key's shape/block/path/backend — asserted
+    /// at insert, so a builder mismatching those fields cannot poison
+    /// later lookups. (`weight_id` has no witness on the plan and
+    /// cannot be checked: keying the *right tensor* under the right
+    /// id is the caller's contract — see [`PlanKey`].)
+    pub fn get_or_build_with(
+        &mut self, key: PlanKey,
+        build: impl FnOnce() -> WeightPlan,
+    ) -> Arc<WeightPlan> {
+        self.tick += 1;
+        if let Some((wp, last)) = self.map.get_mut(&key) {
+            *last = self.tick;
+            self.stats.hits += 1;
+            return wp.clone();
+        }
+        self.stats.misses += 1;
+        let wp = Arc::new(build());
+        assert_eq!(wp.dims(), (key.k, key.n),
+                   "built weight plan shape mismatches cache key");
+        assert_eq!(wp.weight().block, key.block, "block size vs key");
+        assert_eq!(wp.data_path(), key.path, "data path vs key");
+        assert_eq!(wp.kernel_backend(), key.backend, "backend vs key");
+        if self.map.len() >= self.cap {
+            let victim = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, t))| *t)
+                .map(|(k, _)| *k);
+            if let Some(victim) = victim {
+                self.map.remove(&victim);
+                self.stats.evictions += 1;
+            }
+        }
+        self.map.insert(key, (wp.clone(), self.tick));
+        self.stats.insertions += 1;
+        wp
+    }
+}
+
+/// Configuration of a [`LayerStep`] driver.
+#[derive(Debug, Clone)]
+pub struct LayerStepConfig {
+    pub d_model: usize,
+    pub d_ff: usize,
+    /// GLU MLP (doubles `mlp_in`'s output features)
+    pub glu: bool,
+    /// tokens per microstep (rows of every activation)
+    pub tokens: usize,
+    /// quantization block size
+    pub block: usize,
+    pub threads: usize,
+    /// data path all plans run ([`DataPath::auto_for`] by default)
+    pub path: DataPath,
+    /// plan-cache capacity (a layer needs 8 entries: 2 weight halves
+    /// × 4 sites; the default leaves headroom for shape churn)
+    pub cache_capacity: usize,
+}
+
+impl LayerStepConfig {
+    pub fn new(d_model: usize, d_ff: usize, tokens: usize,
+               block: usize) -> LayerStepConfig {
+        LayerStepConfig {
+            d_model,
+            d_ff,
+            glu: true,
+            tokens,
+            block,
+            threads: default_threads(),
+            path: DataPath::auto_for(block),
+            cache_capacity: 16,
+        }
+    }
+}
+
+/// The three GEMM outputs of one linear site for one microstep.
+#[derive(Debug, Clone)]
+pub struct SiteOutputs {
+    /// forward `Y = X·W` (tokens × n)
+    pub y: Mat,
+    /// input gradient `dX = dY·Wᵀ` (tokens × k)
+    pub dx: Mat,
+    /// weight gradient `dW = Xᵀ·dY` (k × n)
+    pub dw: Mat,
+}
+
+/// Per-site record of one microstep.
+#[derive(Debug, Clone)]
+pub struct SiteReport {
+    pub name: &'static str,
+    /// fallback rate the forward GEMM actually executed with
+    pub fallback_rate: f64,
+    /// useful FLOPs of the site's three GEMMs
+    pub flops: f64,
+}
+
+/// One microstep's accounting across all sites.
+#[derive(Debug, Clone)]
+pub struct StepReport {
+    pub sites: Vec<SiteReport>,
+    /// weight-plan cache lookups that hit during this microstep
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// useful FLOPs of the whole microstep (CAL-FLOPS numerator)
+    pub flops: f64,
+}
+
+/// Drives the four linear sites of one transformer layer
+/// ([`layer_linears`]) through the fallback GEMM engine — forward
+/// plus both backward GEMMs per site, per the CAL-FLOPS accounting —
+/// re-quantizing only the activation/gradient side per microstep and
+/// reusing cached [`WeightPlan`]s for everything weight-shaped.
+///
+/// Fallback thresholds are per-site and owned by an embedded
+/// [`ThresholdController`]; each microstep records the rates the
+/// forward GEMMs actually ran with, and
+/// [`end_step`](LayerStep::end_step) folds their means back into the
+/// controller (Algorithm 2's between-step adjustment).
+pub struct LayerStep {
+    cfg: LayerStepConfig,
+    sites: Vec<LinearShape>,
+    /// master weights, one (k × n) matrix per site
+    weights: Vec<Mat>,
+    cache: PlanCache,
+    controller: ThresholdController,
+    rates: RateAccumulator,
+    kernels: &'static Kernels,
+    microsteps: usize,
+}
+
+impl LayerStep {
+    /// `weights[i]` must be the (k × n) matrix of site `i` in
+    /// [`layer_linears`] order (qkv, attn_out, mlp_in, mlp_down).
+    pub fn new(cfg: LayerStepConfig, weights: Vec<Mat>) -> LayerStep {
+        let sites =
+            layer_linears(cfg.d_model, cfg.d_ff, cfg.glu, cfg.tokens);
+        assert_eq!(weights.len(), sites.len(), "one weight per site");
+        for (w, l) in weights.iter().zip(&sites) {
+            assert_eq!((w.rows, w.cols), (l.k, l.n),
+                       "weight shape for site {}", l.name);
+        }
+        let controller =
+            ThresholdController::paper_default(sites.len());
+        let rates = RateAccumulator::new(sites.len());
+        let cache = PlanCache::new(cfg.cache_capacity);
+        LayerStep {
+            sites,
+            weights,
+            cache,
+            controller,
+            rates,
+            kernels: kernels::select(),
+            microsteps: 0,
+            cfg,
+        }
+    }
+
+    /// Synthetic Gaussian weights (benches, tests).
+    pub fn with_random_weights(cfg: LayerStepConfig,
+                               seed: u64) -> LayerStep {
+        let sites =
+            layer_linears(cfg.d_model, cfg.d_ff, cfg.glu, cfg.tokens);
+        let mut rng = Pcg64::new(seed);
+        let weights = sites
+            .iter()
+            .map(|l| Mat::randn(l.k, l.n, 0.05, &mut rng))
+            .collect();
+        LayerStep::new(cfg, weights)
+    }
+
+    pub fn sites(&self) -> &[LinearShape] {
+        &self.sites
+    }
+
+    pub fn config(&self) -> &LayerStepConfig {
+        &self.cfg
+    }
+
+    pub fn cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    /// Drop every cached weight plan — each site's next microstep
+    /// re-quantizes and repacks both weight halves (the bench's
+    /// uncached baseline).
+    pub fn clear_cache(&mut self) {
+        self.cache.clear();
+    }
+
+    pub fn controller(&self) -> &ThresholdController {
+        &self.controller
+    }
+
+    /// Mutable controller access (pin θ for ablations/benches).
+    pub fn controller_mut(&mut self) -> &mut ThresholdController {
+        &mut self.controller
+    }
+
+    /// Replace site `site`'s master weight (the optimizer-update
+    /// path) and invalidate its cached halves — the next microstep
+    /// re-quantizes and repacks exactly this site's W and Wᵀ, while
+    /// every other site keeps hitting.
+    pub fn set_weight(&mut self, site: usize, w: Mat) {
+        let l = &self.sites[site];
+        assert_eq!((w.rows, w.cols), (l.k, l.n),
+                   "weight shape for site {}", l.name);
+        self.weights[site] = w;
+        self.cache.invalidate_weight(2 * site as u64);
+        self.cache.invalidate_weight(2 * site as u64 + 1);
+    }
+
+    /// Microsteps run since construction.
+    pub fn microsteps(&self) -> usize {
+        self.microsteps
+    }
+
+    /// Backend every plan of this driver is pinned to.
+    pub fn kernel_backend(&self) -> &'static str {
+        self.kernels.name
+    }
+
+    /// Run one microstep: for every site, quantize the activation
+    /// (fallback, at the site's current θ) and the output gradient
+    /// (plain int8 — §5.1: dY is not fallback-quantized), then run
+    /// fwd / dX / dW through the engine. Weight halves come from the
+    /// plan cache; `acts[i]` is (tokens × k), `grads[i]` is
+    /// (tokens × n) per site `i`.
+    pub fn microstep(&mut self, acts: &[Mat],
+                     grads: &[Mat]) -> (Vec<SiteOutputs>, StepReport) {
+        assert_eq!(acts.len(), self.sites.len(), "one act per site");
+        assert_eq!(grads.len(), self.sites.len(), "one grad per site");
+        let (threads, block, path) =
+            (self.cfg.threads, self.cfg.block, self.cfg.path);
+        let kn = self.kernels;
+        let hits0 = self.cache.stats().hits;
+        let miss0 = self.cache.stats().misses;
+        let sites = &self.sites;
+        let weights = &self.weights;
+        let cache = &mut self.cache;
+        let mut outs = Vec::with_capacity(sites.len());
+        let mut site_reports = Vec::with_capacity(sites.len());
+        let mut rates = vec![0.0f64; sites.len()];
+        for (i, l) in sites.iter().enumerate() {
+            let x = &acts[i];
+            let dy = &grads[i];
+            assert_eq!((x.rows, x.cols), (l.m, l.k),
+                       "activation shape for site {}", l.name);
+            assert_eq!((dy.rows, dy.cols), (l.m, l.n),
+                       "gradient shape for site {}", l.name);
+            // per-call half: activation (fallback) + gradient (int8)
+            let theta = self.controller.thresholds[i];
+            let fx = fallback_quant_threads(x, theta, block,
+                                            INT8_LEVELS,
+                                            Criterion::AbsMax,
+                                            threads);
+            let qdy = block_quant_threads(dy, block, INT8_LEVELS,
+                                          Rounding::Nearest, threads);
+            rates[i] = fx.fallback_rate();
+            // cached halves: W for the forward, Wᵀ for dX.
+            // weight_id = 2·site + transposed: distinct per tensor,
+            // so shape-identical sites can never serve each other's
+            // weights.
+            let wp = cache.get_or_build_with(
+                PlanKey {
+                    weight_id: 2 * i as u64,
+                    k: l.k,
+                    n: l.n,
+                    block,
+                    path,
+                    backend: kn.name,
+                },
+                || {
+                    WeightPlan::new(
+                        Arc::new(block_quant_threads(
+                            &weights[i], block, INT8_LEVELS,
+                            Rounding::Nearest, threads,
+                        )),
+                        path,
+                    )
+                    .with_kernels(kn)
+                },
+            );
+            let wpt = cache.get_or_build_with(
+                PlanKey {
+                    weight_id: 2 * i as u64 + 1,
+                    k: l.n,
+                    n: l.k,
+                    block,
+                    path,
+                    backend: kn.name,
+                },
+                || {
+                    WeightPlan::new(
+                        Arc::new(block_quant_threads(
+                            &weights[i].transpose(), block,
+                            INT8_LEVELS, Rounding::Nearest, threads,
+                        )),
+                        path,
+                    )
+                    .with_kernels(kn)
+                },
+            );
+            let y = wp.plan_fallback(&fx, &fx.u, threads).execute();
+            let dx = wpt.plan_int8(&qdy, threads).execute();
+            // dW = Xᵀ·dY: both operands change every microstep, so
+            // this plan is legitimately fresh (qdy serves as the B
+            // operand here and as the A operand of dX above — one
+            // quantization, two roles).
+            let qxt = block_quant_threads(&x.transpose(), block,
+                                          INT8_LEVELS,
+                                          Rounding::Nearest, threads);
+            let dw =
+                GemmPlan::new_int8_path(&qxt, &qdy, threads, path)
+                    .with_kernels(kn)
+                    .execute();
+            outs.push(SiteOutputs { y, dx, dw });
+            site_reports.push(SiteReport {
+                name: l.name,
+                fallback_rate: rates[i],
+                flops: l.microstep_flops(),
+            });
+        }
+        self.rates.record(&rates);
+        self.microsteps += 1;
+        let stats = self.cache.stats();
+        let flops = site_reports.iter().map(|s| s.flops).sum();
+        let report = StepReport {
+            sites: site_reports,
+            cache_hits: stats.hits - hits0,
+            cache_misses: stats.misses - miss0,
+            flops,
+        };
+        (outs, report)
+    }
+
+    /// Step boundary (Algorithm 2): fold the microsteps' mean
+    /// executed per-site fallback rates into the threshold controller
+    /// and reset the accumulator. Returns the rates that were
+    /// applied (empty when no microstep ran since the last call).
+    pub fn end_step(&mut self) -> Vec<f32> {
+        self.rates.flush_into(&mut self.controller)
+    }
+}
+
+/// Synthetic per-site activations and output gradients: Gaussian
+/// base, with sparse hot channels in the activations (every 97th
+/// input feature spikes with probability 0.3 — the §4.1
+/// channel-structured outliers) so the fallback path has texture to
+/// adapt to. Returns `(acts, grads)` in site order.
+pub fn synth_microbatch(sites: &[LinearShape], seed: u64,
+                        outlier_mag: f32) -> (Vec<Mat>, Vec<Mat>) {
+    let mut rng = Pcg64::new(seed);
+    let acts = sites
+        .iter()
+        .map(|l| {
+            let mut x = Mat::randn(l.m, l.k, 1.0, &mut rng);
+            for c in (0..l.k).step_by(97) {
+                for r in 0..l.m {
+                    if rng.uniform() < 0.3 {
+                        x.data[r * l.k + c] =
+                            outlier_mag * (1.0 + rng.uniform_f32());
+                    }
+                }
+            }
+            x
+        })
+        .collect();
+    let grads = sites
+        .iter()
+        .map(|l| Mat::randn(l.m, l.n, 1.0, &mut rng))
+        .collect();
+    (acts, grads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::{block_gemm_path, fallback_gemm_path};
+    use crate::quant::{block_quant, fallback_quant,
+                       quant_work_counters, theta_for_rate};
+
+    fn weight_plan(k: usize, n: usize, block: usize,
+                   seed: u64) -> WeightPlan {
+        let mut rng = Pcg64::new(seed);
+        let w = Mat::randn(k, n, 1.0, &mut rng);
+        WeightPlan::new(
+            Arc::new(block_quant(&w, block, INT8_LEVELS,
+                                 Rounding::Nearest)),
+            DataPath::Int8,
+        )
+        .with_kernels(&kernels::SCALAR)
+    }
+
+    fn key(id: u64, k: usize, n: usize, block: usize) -> PlanKey {
+        PlanKey {
+            weight_id: id,
+            k,
+            n,
+            block,
+            path: DataPath::Int8,
+            backend: "scalar",
+        }
+    }
+
+    #[test]
+    fn cache_hit_returns_shared_plan() {
+        let mut cache = PlanCache::new(4);
+        let k1 = key(0, 32, 16, 16);
+        let a = cache.get_or_build_with(k1, || {
+            weight_plan(32, 16, 16, 1)
+        });
+        let b = cache.get_or_build_with(k1, || {
+            panic!("builder must not run on a hit")
+        });
+        assert!(Arc::ptr_eq(&a, &b));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.insertions), (1, 1, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(cache.len(), 1);
+        assert!(cache.contains(&k1));
+    }
+
+    #[test]
+    fn cache_evicts_least_recently_used_at_capacity() {
+        let mut cache = PlanCache::new(2);
+        let ka = key(0, 16, 16, 16);
+        let kb = key(1, 16, 32, 16);
+        let kc = key(2, 16, 48, 16);
+        cache.get_or_build_with(ka, || weight_plan(16, 16, 16, 1));
+        cache.get_or_build_with(kb, || weight_plan(16, 32, 16, 2));
+        // touch `ka` so `kb` is the LRU victim
+        cache.get_or_build_with(ka, || unreachable!());
+        cache.get_or_build_with(kc, || weight_plan(16, 48, 16, 3));
+        assert_eq!(cache.len(), 2);
+        assert!(cache.contains(&ka));
+        assert!(!cache.contains(&kb), "LRU entry must be evicted");
+        assert!(cache.contains(&kc));
+        assert_eq!(cache.stats().evictions, 1);
+        // the evicted key rebuilds (miss), within capacity again
+        cache.get_or_build_with(kb, || weight_plan(16, 32, 16, 2));
+        assert_eq!(cache.stats().evictions, 2);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn cache_keys_distinguish_id_path_and_backend() {
+        // Same weight shape, different key dimensions: all coexist.
+        let mut cache = PlanCache::new(8);
+        let k_a = key(0, 32, 16, 16);
+        // distinct weight_id = a *different tensor* of the same
+        // shape — must not be conflated with k_a's entry
+        let k_other = PlanKey { weight_id: 7, ..k_a };
+        let a = cache.get_or_build_with(k_a, || {
+            weight_plan(32, 16, 16, 1)
+        });
+        let w0 = cache.get_or_build_with(k_other, || {
+            weight_plan(32, 16, 16, 99)
+        });
+        assert!(!Arc::ptr_eq(&w0, &a), "ids must not collide");
+        let k_sim = PlanKey { path: DataPath::SimF32, ..k_a };
+        cache.get_or_build_with(k_sim, || {
+            let mut rng = Pcg64::new(1);
+            let w = Mat::randn(32, 16, 1.0, &mut rng);
+            WeightPlan::new(
+                Arc::new(block_quant(&w, 16, INT8_LEVELS,
+                                     Rounding::Nearest)),
+                DataPath::SimF32,
+            )
+            .with_kernels(&kernels::SCALAR)
+        });
+        assert_eq!(cache.len(), 3);
+        // a second backend (when the host has one) is a fourth entry
+        if let Some(kn) = kernels::available()
+            .into_iter()
+            .find(|k| k.name != "scalar")
+        {
+            let k_kn = PlanKey { backend: kn.name, ..k_a };
+            let c = cache.get_or_build_with(k_kn, || {
+                let mut rng = Pcg64::new(1);
+                let w = Mat::randn(32, 16, 1.0, &mut rng);
+                WeightPlan::new(
+                    Arc::new(block_quant(&w, 16, INT8_LEVELS,
+                                         Rounding::Nearest)),
+                    DataPath::Int8,
+                )
+                .with_kernels(kn)
+            });
+            assert_eq!(c.kernel_backend(), kn.name);
+            assert_eq!(cache.len(), 4);
+        }
+        assert_eq!(cache.stats().hits, 0);
+    }
+
+    #[test]
+    fn one_cached_entry_serves_both_precisions() {
+        // Precision is deliberately NOT in the key: the same cached
+        // weight half serves Int8Block and Fallback GEMMs (only the
+        // activation side differs), so a mixed-precision caller pays
+        // one quantization + one pack per tensor, not two.
+        let mut cache = PlanCache::new(4);
+        let k1 = key(0, 32, 16, 16);
+        let wp = cache.get_or_build_with(k1, || {
+            weight_plan(32, 16, 16, 5)
+        });
+        let again = cache.get_or_build_with(k1, || {
+            panic!("second precision must reuse the entry")
+        });
+        assert!(Arc::ptr_eq(&wp, &again));
+        assert_eq!(cache.len(), 1);
+        // both precisions execute off the one shared half, and agree
+        // with direct engine plans bitwise
+        let mut rng = Pcg64::new(31);
+        let a = Mat::randn(24, 32, 1.0, &mut rng);
+        let qa = block_quant(&a, 16, INT8_LEVELS, Rounding::Nearest);
+        let fa = fallback_quant(&a, -1.0, 16, INT8_LEVELS,
+                                Criterion::AbsMax);
+        let c_int8 = wp.plan_int8(&qa, 2).execute();
+        let c_fb = wp.plan_fallback(&fa, &fa.u, 2).execute();
+        let d_int8 = block_gemm_path(&qa, wp.weight(), 2,
+                                     DataPath::Int8);
+        let d_fb = fallback_gemm_path(&fa, wp.weight(), &fa.u, 2,
+                                      DataPath::Int8);
+        assert_eq!(c_int8.data, d_int8.data);
+        assert_eq!(c_fb.data, d_fb.data);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatches cache key")]
+    fn cache_rejects_mis_keyed_builder() {
+        let mut cache = PlanCache::new(2);
+        cache.get_or_build_with(key(0, 32, 16, 16),
+                                || weight_plan(16, 16, 16, 1));
+    }
+
+    fn small_step(threads: usize) -> LayerStep {
+        let mut cfg = LayerStepConfig::new(32, 48, 24, 16);
+        cfg.glu = false;
+        cfg.threads = threads;
+        LayerStep::with_random_weights(cfg, 0xD06)
+    }
+
+    #[test]
+    fn cache_hit_skips_weight_requantization() {
+        // Regression via the thread-local work counters: the second
+        // microstep must do only per-call quantization (activation,
+        // gradient, Xᵀ — 3 per site) and one panel pack (dY as the
+        // dW B-operand); the weight halves (2 quants + 2 packs per
+        // site) happen exactly once.
+        let mut ls = small_step(2);
+        let n_sites = ls.sites().len();
+        let (acts, grads) = synth_microbatch(ls.sites(), 5, 150.0);
+        let (q0, p0) = quant_work_counters();
+        let (_, r1) = ls.microstep(&acts, &grads);
+        let (q1, p1) = quant_work_counters();
+        assert_eq!(r1.cache_misses as usize, 2 * n_sites);
+        assert_eq!(r1.cache_hits, 0);
+        assert_eq!((q1 - q0) as usize, 5 * n_sites,
+                   "cold microstep: 3 per-call + 2 weight quants/site");
+        assert_eq!((p1 - p0) as usize, 3 * n_sites,
+                   "cold microstep: W, Wᵀ and dY packs per site");
+        let (_, r2) = ls.microstep(&acts, &grads);
+        let (q2, p2) = quant_work_counters();
+        assert_eq!(r2.cache_misses, 0);
+        assert_eq!(r2.cache_hits as usize, 2 * n_sites);
+        assert_eq!((q2 - q1) as usize, 3 * n_sites,
+                   "warm microstep must not re-quantize weights");
+        assert_eq!((p2 - p1) as usize, n_sites,
+                   "warm microstep packs only the fresh dY operand");
+    }
+
+    #[test]
+    fn microstep_matches_direct_engine_calls() {
+        let mut ls = small_step(1);
+        ls.controller_mut().thresholds.fill(20.0);
+        let (acts, grads) = synth_microbatch(ls.sites(), 9, 200.0);
+        let (outs, rep) = ls.microstep(&acts, &grads);
+        assert_eq!(outs.len(), 4);
+        assert!(rep.flops > 0.0);
+        let path = ls.config().path;
+        for (i, l) in ls.sites().iter().enumerate() {
+            let w = &ls.weights[i];
+            let fx = fallback_quant(&acts[i], 20.0, 16, INT8_LEVELS,
+                                    Criterion::AbsMax);
+            let qw =
+                block_quant(w, 16, INT8_LEVELS, Rounding::Nearest);
+            let y = fallback_gemm_path(&fx, &qw, &fx.u, 1, path);
+            assert_eq!(outs[i].y.data, y.data, "fwd {}", l.name);
+            let qdy = block_quant(&grads[i], 16, INT8_LEVELS,
+                                  Rounding::Nearest);
+            let qwt = block_quant(&w.transpose(), 16, INT8_LEVELS,
+                                  Rounding::Nearest);
+            let dx = block_gemm_path(&qdy, &qwt, 1, path);
+            assert_eq!(outs[i].dx.data, dx.data, "dX {}", l.name);
+            let qxt = block_quant(&acts[i].transpose(), 16,
+                                  INT8_LEVELS, Rounding::Nearest);
+            let dw = block_gemm_path(&qxt, &qdy, 1, path);
+            assert_eq!(outs[i].dw.data, dw.data, "dW {}", l.name);
+            assert_eq!((outs[i].y.rows, outs[i].y.cols), (l.m, l.n));
+            assert_eq!((outs[i].dx.rows, outs[i].dx.cols),
+                       (l.m, l.k));
+            assert_eq!((outs[i].dw.rows, outs[i].dw.cols),
+                       (l.k, l.n));
+        }
+    }
+
+    #[test]
+    fn set_weight_invalidates_only_that_sites_plans() {
+        // Stale-plan regression: after an optimizer update the next
+        // microstep must run against the NEW weights (re-quantized),
+        // while untouched sites keep hitting the cache.
+        let mut ls = small_step(1);
+        ls.controller_mut().thresholds.fill(20.0);
+        let (acts, grads) = synth_microbatch(ls.sites(), 21, 150.0);
+        ls.microstep(&acts, &grads); // warm the cache (8 misses)
+        let mut rng = Pcg64::new(777);
+        let (k0, n0) =
+            (ls.sites()[0].k, ls.sites()[0].n);
+        let new_w = Mat::randn(k0, n0, 0.05, &mut rng);
+        ls.set_weight(0, new_w.clone());
+        assert_eq!(ls.cache().len(), 6, "site 0's two entries dropped");
+        let (outs, rep) = ls.microstep(&acts, &grads);
+        assert_eq!(rep.cache_misses, 2, "only site 0 rebuilds");
+        assert_eq!(rep.cache_hits, 6);
+        // site 0's forward now matches a fresh run on the new weight
+        let fx = fallback_quant(&acts[0], 20.0, 16, INT8_LEVELS,
+                                Criterion::AbsMax);
+        let qw = block_quant(&new_w, 16, INT8_LEVELS,
+                             Rounding::Nearest);
+        let y = fallback_gemm_path(&fx, &qw, &fx.u, 1,
+                                   ls.config().path);
+        assert_eq!(outs[0].y.data, y.data,
+                   "stale plan served after set_weight");
+    }
+
+    #[test]
+    fn end_step_feeds_executed_rates_into_controller() {
+        let mut ls = small_step(2);
+        // θ below every block metric -> full fallback -> rates ≈ 1,
+        // far above r_max, so Algorithm 2 must raise every θ.
+        ls.controller_mut().thresholds.fill(1e-3);
+        let (acts, grads) = synth_microbatch(ls.sites(), 3, 150.0);
+        let (_, rep) = ls.microstep(&acts, &grads);
+        assert!(rep.sites.iter().all(|s| s.fallback_rate > 0.9));
+        let applied = ls.end_step();
+        assert_eq!(applied.len(), 4);
+        assert!(applied.iter().all(|&r| r > 0.9));
+        assert!(ls.controller().thresholds.iter().all(|&t| t > 1e-3));
+        assert_eq!(ls.controller().n_up, 4);
+        // nothing recorded since -> end_step is a no-op
+        let before = ls.controller().thresholds.clone();
+        assert!(ls.end_step().is_empty());
+        assert_eq!(ls.controller().thresholds, before);
+    }
+
+    #[test]
+    fn theta_probe_pins_moderate_rates() {
+        // Wiring check for the bench's probe pattern: pin each site's
+        // θ from an offline metric sweep, then observe the executed
+        // rate near the target.
+        let mut ls = small_step(2);
+        let (acts, grads) = synth_microbatch(ls.sites(), 11, 200.0);
+        let thetas: Vec<f32> = acts
+            .iter()
+            .map(|x| {
+                let probe = fallback_quant(x, f32::INFINITY, 16,
+                                           INT8_LEVELS,
+                                           Criterion::AbsMax);
+                theta_for_rate(&probe.metric, 0.25)
+            })
+            .collect();
+        ls.controller_mut().thresholds.copy_from_slice(&thetas);
+        let (_, rep) = ls.microstep(&acts, &grads);
+        for s in &rep.sites {
+            assert!(s.fallback_rate < 0.8,
+                    "site {} rate {}", s.name, s.fallback_rate);
+        }
+    }
+}

@@ -15,6 +15,22 @@
 //!
 //! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md`
 //! for paper-vs-measured results.
+//!
+//! ## Where to start reading
+//!
+//! * `docs/ARCHITECTURE.md` — the CPU GEMM substrate end to end:
+//!   the plan/execute engine ([`gemm::engine`]), the two data paths
+//!   (`SimF32` simulation vs true `Int8`), the microkernel backend
+//!   vtable and its selection order ([`gemm::kernels`]), and the
+//!   layer-step plan cache/pipeline ([`gemm::pipeline`]) with the
+//!   packed-once vs per-call breakdown. The "adding a kernel
+//!   backend" recipe (AVX-512 VNNI next) lives there too.
+//! * `docs/BENCHMARKS.md` — the schema of every `BENCH_*.json` the
+//!   bench binaries emit, plus the `BENCH_SMOKE` / `DBFQ_BENCH_STEPS`
+//!   knobs.
+//! * [`gemm::quantized_matmul`] / [`gemm::fallback_matmul`] — the
+//!   two-line entry points (doctested) if you just want a quantized
+//!   GEMM.
 
 pub mod config;
 pub mod coordinator;

@@ -44,6 +44,26 @@ pub struct LinearShape {
     pub k: usize,
 }
 
+/// GEMMs one linear site runs per microstep: forward `Y = X·W`, plus
+/// the two backward GEMMs `dX = dY·Wᵀ` and `dW = Xᵀ·dY` — the 1:2
+/// fwd:bwd ratio of the CAL-FLOPS accounting. The layer-step pipeline
+/// (`gemm::pipeline`) runs exactly these three per site.
+pub const GEMMS_PER_SITE: usize = 3;
+
+impl LinearShape {
+    /// FLOPs of one forward GEMM at this site (2·M·N·K).
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+
+    /// FLOPs of one full microstep at this site:
+    /// [`GEMMS_PER_SITE`] GEMMs of equal volume (dX and dW move the
+    /// same M·N·K as the forward).
+    pub fn microstep_flops(&self) -> f64 {
+        GEMMS_PER_SITE as f64 * self.flops()
+    }
+}
+
 /// The four linear sites of one layer (+ LM head handled separately).
 pub fn layer_linears(d_model: usize, d_ff: usize, glu: bool,
                      tokens: usize) -> Vec<LinearShape> {
@@ -64,7 +84,7 @@ pub fn train_step_gemm_flops(p: &ProfileMeta) -> f64 {
     let tokens = p.batch * p.seq_len;
     let mut fwd = 0.0f64;
     for l in layer_linears(p.d_model, p.d_ff, p.glu, tokens) {
-        fwd += 2.0 * l.m as f64 * l.n as f64 * l.k as f64;
+        fwd += l.flops();
     }
     fwd *= p.n_layers as f64;
     // attention score + value matmuls: 2 * (T^2 * D) per batch elem
@@ -136,7 +156,7 @@ pub fn linear_time_fraction(d_model: usize, d_ff: usize, seq: usize,
     let f = d_ff as f64;
     let lin: f64 = layer_linears(d_model, d_ff, glu, seq)
         .iter()
-        .map(|l| 2.0 * l.m as f64 * l.n as f64 * l.k as f64)
+        .map(|l| l.flops())
         .sum();
     let attn = 2.0 * 2.0 * t * t * d;
     // non-linear elementwise cost ~ c * elements (norms, silu, residual);
@@ -167,6 +187,14 @@ mod tests {
             n_sites: 4 * layers + 1,
             param_layout: vec![],
         }
+    }
+
+    #[test]
+    fn linear_shape_flops_accounting() {
+        let l = LinearShape { name: "qkv", m: 8, n: 6, k: 4 };
+        assert_eq!(l.flops(), 2.0 * 8.0 * 6.0 * 4.0);
+        assert_eq!(l.microstep_flops(), 3.0 * l.flops());
+        assert_eq!(GEMMS_PER_SITE, 3);
     }
 
     #[test]

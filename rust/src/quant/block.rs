@@ -9,6 +9,7 @@
 //! Values are stored as `i8` here (the real packed format) plus f32
 //! scales per block.
 
+use std::cell::Cell;
 use std::sync::{Arc, OnceLock};
 
 use crate::util::rng::{Pcg64, SplitMix64};
@@ -17,8 +18,32 @@ use crate::util::Mat;
 
 pub const INT8_LEVELS: f32 = 127.0;
 
-/// Column-panel-contiguous f32 view of the int8 codes, the layout the
-/// GEMM engine consumes for its **B** operand (see `gemm::engine` docs).
+thread_local! {
+    static QUANT_CALLS: Cell<u64> = const { Cell::new(0) };
+    static PANEL_PACKS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Thread-local work counters: `(block-quantization calls,
+/// column-panel packs built)` on the calling thread since it started.
+///
+/// `block_quant*` bumps the first (a `fallback_quant` bumps it once,
+/// via its base quantization); building either panel pack
+/// ([`BlockQuant::col_panels`] / [`BlockQuant::col_panels_i8`]) bumps
+/// the second. Both count *invocations on the calling thread* — the
+/// worker threads inside a parallel quantization don't touch them —
+/// so a test observes exactly the work its own calls triggered even
+/// when the test harness runs other tests concurrently. Used by the
+/// plan-cache regression tests and `benches/layer_step.rs` to prove
+/// that a cache hit skips weight re-quantization and re-packing.
+pub fn quant_work_counters() -> (u64, u64) {
+    (QUANT_CALLS.with(|c| c.get()), PANEL_PACKS.with(|c| c.get()))
+}
+
+/// Column-panel-contiguous f32 view of the int8 codes — the B-operand
+/// layout of the GEMM engine's `DataPath::SimF32` *simulation/oracle*
+/// path only (see `gemm::engine` docs). The default `Int8` path
+/// streams the 4x-smaller [`PanelPackI8`] instead and never builds
+/// this view.
 ///
 /// Panel `bj` covers logical columns `bj*block .. min((bj+1)*block,
 /// cols)` and stores all `prows` padded rows of that column strip
@@ -107,6 +132,7 @@ fn pack_col_panels<T: Copy, U>(
     q: &[T], prows: usize, pcols: usize, cols: usize, bs: usize,
     conv: impl Fn(T) -> U,
 ) -> (Vec<usize>, Vec<usize>, Vec<U>) {
+    PANEL_PACKS.with(|c| c.set(c.get() + 1));
     let cb = pcols / bs;
     let mut starts = Vec::with_capacity(cb);
     let mut widths = Vec::with_capacity(cb);
@@ -128,14 +154,19 @@ fn pack_col_panels<T: Copy, U>(
 /// Block-quantized matrix: q holds int8 codes in row-major order of the
 /// *padded* (block-aligned) matrix; scales/absmax are (rb x cb).
 ///
-/// Caching invariant: the packed-f32 views handed out by [`codes_f32`]
-/// and [`col_panels`] are computed once and reused for every subsequent
-/// GEMM over the same operand (weights in particular), so `q` must not
-/// be mutated after the first GEMM — treat a `BlockQuant` as frozen
-/// once built.
+/// Caching invariant: the packed views handed out by [`codes_f32`],
+/// [`col_panels`] and [`col_panels_i8`] are computed once and reused
+/// by every subsequent GEMM over the same operand (weights in
+/// particular — the plan cache in `gemm::pipeline` keeps them alive
+/// across training steps), so `q` must not be mutated after the first
+/// GEMM — treat a `BlockQuant` as frozen once built. On the engine's
+/// default `DataPath::Int8` path only the i8 panel pack is ever
+/// materialized; the f32 views serve the `SimF32` oracle path and are
+/// built lazily on first demand.
 ///
 /// [`codes_f32`]: BlockQuant::codes_f32
 /// [`col_panels`]: BlockQuant::col_panels
+/// [`col_panels_i8`]: BlockQuant::col_panels_i8
 #[derive(Debug, Clone)]
 pub struct BlockQuant {
     pub rows: usize,
@@ -193,13 +224,15 @@ impl BlockQuant {
         self.q.len() + 4 * self.scale.len()
     }
 
-    /// Cached f32 copy of the int8 codes (same padded row-major layout).
+    /// Cached f32 copy of the int8 codes (same padded row-major
+    /// layout) — the A-operand view of the engine's
+    /// `DataPath::SimF32` oracle path only. The default `Int8` path
+    /// streams `q` zero-copy and never materializes this copy.
     ///
-    /// Products and in-block sums of int8 codes stay below 2^24, so f32
-    /// kernels over this view are bit-exact to int32 accumulation while
-    /// vectorizing far better on CPUs without an int8 dot ISA. The copy
-    /// is made on first use and shared by every later GEMM — repeated
-    /// GEMMs over the same operand (e.g. weights) skip re-conversion.
+    /// Products and in-block sums of int8 codes stay below 2^24, so
+    /// f32 kernels over this view are bit-exact to int32 accumulation.
+    /// The copy is made on first use and shared by every later SimF32
+    /// GEMM over the same operand.
     pub fn codes_f32(&self) -> Arc<Vec<f32>> {
         self.f32_cache
             .get_or_init(|| {
@@ -364,6 +397,7 @@ pub fn block_quant(x: &Mat, block: usize, levels: f32,
 pub fn block_quant_threads(x: &Mat, block: usize, levels: f32,
                            rounding: Rounding, threads: usize)
                            -> BlockQuant {
+    QUANT_CALLS.with(|c| c.set(c.get() + 1));
     let prows = pad_up(x.rows, block);
     let pcols = pad_up(x.cols, block);
     let rb = prows / block;
@@ -581,6 +615,24 @@ mod tests {
         }
         assert_eq!(4 * pi.bytes(), p.bytes());
         assert!(Arc::ptr_eq(&pi, &bq.col_panels_i8()));
+    }
+
+    #[test]
+    fn work_counters_track_this_threads_calls() {
+        // Counters are thread-local, so this test's deltas are exact
+        // even under a concurrent test harness.
+        let x = randmat(32, 32, 13);
+        let (q0, p0) = quant_work_counters();
+        let bq = block_quant(&x, 16, INT8_LEVELS, Rounding::Nearest);
+        let (q1, p1) = quant_work_counters();
+        assert_eq!(q1 - q0, 1);
+        assert_eq!(p1 - p0, 0);
+        bq.col_panels_i8();
+        bq.col_panels_i8(); // cached — no second pack
+        bq.col_panels();
+        let (q2, p2) = quant_work_counters();
+        assert_eq!(q2 - q1, 0);
+        assert_eq!(p2 - p1, 2);
     }
 
     #[test]

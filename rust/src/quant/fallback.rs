@@ -24,9 +24,12 @@ pub enum Criterion {
     L1Rel,
 }
 
-/// Caching invariant: like [`BlockQuant`], the packed residual view
+/// Caching invariant: like [`BlockQuant`], the cached residual view
 /// from [`residual_f32`](FallbackQuant::residual_f32) is built once —
-/// treat the struct as frozen after construction.
+/// treat the struct as frozen after construction. That f32 view
+/// serves only the engine's `SimF32` oracle path; the default
+/// `DataPath::Int8` path streams the stored `rq` codes zero-copy and
+/// never materializes it.
 #[derive(Debug, Clone)]
 pub struct FallbackQuant {
     pub base: BlockQuant,

@@ -12,8 +12,8 @@ pub mod group;
 pub mod metrics;
 
 pub use block::{block_quant, block_quant_threads, int16_block_quant,
-                BlockQuant, PanelPack, PanelPackI8, Rounding,
-                INT8_LEVELS};
+                quant_work_counters, BlockQuant, PanelPack,
+                PanelPackI8, Rounding, INT8_LEVELS};
 pub use fallback::{fallback_quant, fallback_quant_threads,
                    theta_for_rate, Criterion, FallbackQuant};
 pub use granularity::{granular_quant, switchback_matmul, Granularity};

@@ -1,0 +1,138 @@
+//! Property tests for the layer-step pipeline (`gemm::pipeline`).
+//!
+//! The contract under test is the acceptance bar of the plan cache:
+//! a **cached** weight half must produce byte-identical C to a
+//! **freshly built** plan over the same operands —
+//!
+//! * on every microkernel backend available on the host
+//!   (`kernels::available()`, the `PALLAS_KERNEL` choices),
+//! * at both int8 precisions (`Int8Block` and `Fallback`),
+//! * on both data paths (`Int8` and the `SimF32` oracle),
+//! * across 1/2/4 threads,
+//!
+//! and the `LayerStep` driver must be bitwise invariant to cache
+//! state (hit vs miss) and thread count.
+
+use std::sync::Arc;
+
+use dbfq::gemm::{
+    kernels, synth_microbatch, DataPath, GemmPlan, LayerStep,
+    LayerStepConfig, WeightPlan,
+};
+use dbfq::prop_assert;
+use dbfq::quant::{block_quant, fallback_quant, theta_for_rate,
+                  Criterion, Rounding, INT8_LEVELS};
+use dbfq::util::testing::forall;
+use dbfq::util::Mat;
+
+const THREADS: [usize; 3] = [1, 2, 4];
+const BLOCK: usize = 16;
+
+#[test]
+fn prop_cached_weight_plan_bit_identical_per_backend() {
+    let backends = kernels::available();
+    forall("pipeline-cached-vs-fresh", 8, |g| {
+        let m = BLOCK * g.usize_in(1, 3) + g.usize_in(0, 7);
+        let k = BLOCK * g.usize_in(1, 3) + g.usize_in(0, 7);
+        let n = BLOCK * g.usize_in(1, 3) + g.usize_in(0, 7);
+        let a =
+            Mat::from_vec(m, k, g.vec_outliers(m * k, 1.0, 5, 140.0));
+        let w = Mat::from_vec(k, n, g.vec_normal(k * n, 1.0));
+        let qa = block_quant(&a, BLOCK, INT8_LEVELS, Rounding::Nearest);
+        let probe = fallback_quant(&a, f32::INFINITY, BLOCK,
+                                   INT8_LEVELS, Criterion::AbsMax);
+        let theta = theta_for_rate(&probe.metric, 0.3);
+        let fa = fallback_quant(&a, theta, BLOCK, INT8_LEVELS,
+                                Criterion::AbsMax);
+        for path in [DataPath::Int8, DataPath::SimF32] {
+            for &kn in &backends {
+                // the cached half: built once, reused for every
+                // thread count below
+                let qw = Arc::new(block_quant(&w, BLOCK, INT8_LEVELS,
+                                              Rounding::Nearest));
+                let wp =
+                    WeightPlan::new(qw, path).with_kernels(kn);
+                for threads in THREADS {
+                    // fresh operand per comparison so no caches are
+                    // shared with the cached half
+                    let qw_fresh = block_quant(&w, BLOCK, INT8_LEVELS,
+                                               Rounding::Nearest);
+                    let c_cached =
+                        wp.plan_int8(&qa, threads).execute();
+                    let c_fresh = GemmPlan::new_int8_path(
+                        &qa, &qw_fresh, threads, path)
+                        .with_kernels(kn)
+                        .execute();
+                    prop_assert!(
+                        c_cached.data == c_fresh.data,
+                        "int8 cached vs fresh ({m},{k},{n}) \
+                         backend={} path={path:?} threads={threads}",
+                        kn.name
+                    );
+                    let f_cached = wp
+                        .plan_fallback(&fa, &fa.u, threads)
+                        .execute();
+                    let f_fresh = GemmPlan::new_fallback_path(
+                        &fa, &qw_fresh, &fa.u, threads, path)
+                        .with_kernels(kn)
+                        .execute();
+                    prop_assert!(
+                        f_cached.data == f_fresh.data,
+                        "fallback cached vs fresh ({m},{k},{n}) \
+                         backend={} path={path:?} threads={threads}",
+                        kn.name
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_layer_step_cache_and_thread_invariant() {
+    forall("pipeline-layerstep-invariance", 5, |g| {
+        let d_model = 16 * g.usize_in(1, 2);
+        let d_ff = 16 * g.usize_in(2, 3);
+        let tokens = 16 * g.usize_in(1, 2) + g.usize_in(0, 5);
+        let mut cfg = LayerStepConfig::new(d_model, d_ff, tokens, 16);
+        cfg.glu = g.usize_in(0, 1) == 1;
+        cfg.threads = 1;
+        let seed = 0xA11CE;
+        let mut ls = LayerStep::with_random_weights(cfg.clone(), seed);
+        let (acts, grads) = synth_microbatch(ls.sites(), 7, 150.0);
+        let (o1, r1) = ls.microstep(&acts, &grads);
+        // identical inputs again: every weight lookup must hit, and
+        // the cache hit must not change a single bit
+        let (o2, r2) = ls.microstep(&acts, &grads);
+        prop_assert!(r1.cache_misses == 8 && r1.cache_hits == 0,
+                     "cold lookups: {r1:?}");
+        prop_assert!(r2.cache_misses == 0 && r2.cache_hits == 8,
+                     "warm lookups: {r2:?}");
+        for (i, (a, b)) in o1.iter().zip(&o2).enumerate() {
+            prop_assert!(a.y.data == b.y.data, "y[{i}] hit differs");
+            prop_assert!(a.dx.data == b.dx.data,
+                         "dx[{i}] hit differs");
+            prop_assert!(a.dw.data == b.dw.data,
+                         "dw[{i}] hit differs");
+        }
+        // thread-count invariance: quantization and the engine are
+        // both bitwise thread-invariant, so the whole pipeline is
+        for threads in [2usize, 4] {
+            let mut cfg_t = cfg.clone();
+            cfg_t.threads = threads;
+            let mut ls_t =
+                LayerStep::with_random_weights(cfg_t, seed);
+            let (ot, _) = ls_t.microstep(&acts, &grads);
+            for (i, (a, b)) in o1.iter().zip(&ot).enumerate() {
+                prop_assert!(a.y.data == b.y.data,
+                             "y[{i}] threads={threads}");
+                prop_assert!(a.dx.data == b.dx.data,
+                             "dx[{i}] threads={threads}");
+                prop_assert!(a.dw.data == b.dw.data,
+                             "dw[{i}] threads={threads}");
+            }
+        }
+        Ok(())
+    });
+}

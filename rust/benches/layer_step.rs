@@ -115,7 +115,8 @@ fn main() {
             rates = rep
                 .sites
                 .iter()
-                .map(|sr| (sr.name, sr.fallback_rate))
+                .map(|sr| (sr.name, sr.fallback_rate,
+                           sr.bwd_fallback_rate))
                 .collect();
         }
         assert_eq!(lookups as usize, 2 * sites.len());
@@ -173,7 +174,7 @@ fn main() {
     let cal_block = block.min(cal_dim);
     let cal = SubstrateCalibration::measure(cal_dim, cal_block,
                                             threads);
-    let mean_rate = rates.iter().map(|&(_, r)| r).sum::<f64>()
+    let mean_rate = rates.iter().map(|&(_, r, _)| r).sum::<f64>()
         / rates.len().max(1) as f64;
     let sub_ms = cal.substrate_layer_step_secs(
         d_model, d_ff, cfg.glu, tokens, mean_rate) * 1e3;
@@ -257,9 +258,10 @@ fn main() {
             ("per_site", Json::Arr(
                 rates
                     .iter()
-                    .map(|&(name, r)| obj(vec![
+                    .map(|&(name, r, bwd)| obj(vec![
                         ("name", Json::Str(name.into())),
                         ("rate", Json::Num(r)),
+                        ("bwd_rate", Json::Num(bwd)),
                     ]))
                     .collect(),
             )),

@@ -1,0 +1,477 @@
+//! Whole-model pipeline: N transformer layers + LM head sharing one
+//! plan cache, with warm-state persistence.
+//!
+//! Measures the `ModelStep` tentpole claims on a 4-layer model:
+//!
+//! * `cold`          — the cache is cleared before every microstep:
+//!                     every weight half re-quantizes and repacks
+//!                     (the pre-pipeline behaviour, now × 4 layers).
+//! * `cached`        — one `ModelStep`, warm shared cache: from the
+//!                     2nd microstep on, every lookup of every layer
+//!                     *and the (d_model × vocab) LM head* hits.
+//! * `warm_restored` — a fresh driver rebuilt from the warm-state
+//!                     JSON (`ModelStep::from_warm_state`): the
+//!                     *first* microstep already runs at hit rate
+//!                     1.0 and is bit-identical to the microstep the
+//!                     saved driver runs next.
+//!
+//! Also checks, per host kernel backend, that one cold ModelStep
+//! microstep is bit-identical to composed per-layer `LayerStep`s
+//! plus a direct engine computation of the head.
+//!
+//! Emits `BENCH_model_step.json` (schema in `docs/BENCHMARKS.md`).
+//! Set `BENCH_SMOKE=1` for a seconds-long CI smoke run.
+
+use std::time::Instant;
+
+use dbfq::costmodel::{rtx4090, SubstrateCalibration};
+use dbfq::gemm::{grad_sr_seed, kernels, layer_sr_seed,
+                 site_reference, synth_microbatch, Kernels,
+                 LayerStep, ModelStep, ModelStepConfig, SiteOutputs};
+use dbfq::model::{model_linears, LinearShape};
+use dbfq::quant::{fallback_quant, quant_work_counters,
+                  theta_for_rate, Criterion, Rounding, INT8_LEVELS};
+use dbfq::util::bench::Table;
+use dbfq::util::json::{obj, Json};
+use dbfq::util::rng::Pcg64;
+use dbfq::util::threadpool::default_threads;
+use dbfq::util::Mat;
+
+fn median(xs: &[f64]) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[v.len() / 2]
+}
+
+/// The LM head's three GEMMs through the shared cache-free
+/// [`site_reference`] — the composition reference for the head site
+/// (its SR stream is "layer `layers`", site 0 of that stream), the
+/// same helper `tests/model_step_prop.rs` uses.
+fn head_reference(cfg: &ModelStepConfig, l: &LinearShape, w: &Mat,
+                  x: &Mat, dy: &Mat, theta: f32, t: usize,
+                  kn: &'static Kernels) -> SiteOutputs {
+    let sr = Rounding::Stochastic(grad_sr_seed(
+        layer_sr_seed(cfg.sr_seed, cfg.layers), t, 0));
+    site_reference(l, w, x, dy, theta, sr, cfg.block, cfg.threads,
+                   cfg.path, kn)
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    // ≥ 4 layers + LM head in both modes: the multi-layer cache
+    // pressure is the thing under test, only the dims shrink.
+    let (layers, d_model, d_ff, vocab, tokens, block, microsteps) =
+        if smoke {
+            (4usize, 32usize, 64usize, 96usize, 32usize, 16usize,
+             3usize)
+        } else {
+            (4, 128, 512, 1024, 128, 32, 6)
+        };
+    let threads = default_threads().max(2);
+    let mut cfg =
+        ModelStepConfig::new(layers, d_model, d_ff, vocab, tokens,
+                             block);
+    cfg.glu = false; // GPT-2-style 4d MLP, as in Table 3
+    cfg.threads = threads;
+    let n_sites = cfg.n_sites();
+
+    println!("\n================================================");
+    println!(
+        "model-step pipeline: {layers} layers + lm_head, d={d_model} \
+         ff={d_ff} vocab={vocab} tokens={tokens} block={block}, \
+         {threads} threads, {microsteps} microsteps"
+    );
+    println!("================================================");
+
+    let sites = model_linears(layers, d_model, d_ff, cfg.glu, vocab,
+                              tokens);
+    let mut rng = Pcg64::new(0xBEEF);
+    let weights: Vec<Mat> = sites
+        .iter()
+        .map(|l| Mat::randn(l.k, l.n, 0.05, &mut rng))
+        .collect();
+    let (acts, grads) = synth_microbatch(&sites, 0x5EED, 200.0);
+    // Pin θ per site from an offline probe at the paper's band
+    // midpoint; the controller takes over at step boundaries.
+    let thetas: Vec<f32> = acts
+        .iter()
+        .map(|x| {
+            let probe = fallback_quant(x, f32::INFINITY, block,
+                                       INT8_LEVELS,
+                                       Criterion::AbsMax);
+            theta_for_rate(&probe.metric, 0.2)
+        })
+        .collect();
+    let flops: f64 = sites.iter().map(|l| l.microstep_flops()).sum();
+
+    let mut ms = ModelStep::new(cfg.clone(), weights.clone());
+    ms.controller_mut().thresholds.copy_from_slice(&thetas);
+
+    // -- cold baseline: weight halves rebuilt every microstep --------
+    let (qc0, pc0) = quant_work_counters();
+    let mut cold_ms = Vec::with_capacity(microsteps);
+    for _ in 0..microsteps {
+        ms.clear_cache();
+        let t = Instant::now();
+        let (outs, _) = ms.microstep(&acts, &grads);
+        std::hint::black_box(outs);
+        cold_ms.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let (qc1, pc1) = quant_work_counters();
+    // drain the accumulator and re-pin θ so every phase executes at
+    // identical thresholds
+    let _ = ms.end_step();
+    ms.controller_mut().thresholds.copy_from_slice(&thetas);
+
+    // -- cached: one shared cache across layers + head ---------------
+    ms.clear_cache();
+    let (qw0, pw0) = quant_work_counters();
+    let mut cached_ms = Vec::with_capacity(microsteps);
+    let mut per_microstep = Vec::new();
+    // per-site hit/miss totals over the warm microsteps (2nd+)
+    let mut site_hits = vec![0u64; n_sites];
+    let mut site_misses = vec![0u64; n_sites];
+    let mut last_rep = None;
+    for s in 0..microsteps {
+        let t = Instant::now();
+        let (outs, rep) = ms.microstep(&acts, &grads);
+        std::hint::black_box(outs);
+        cached_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        assert_eq!((rep.cache_hits + rep.cache_misses) as usize,
+                   2 * n_sites);
+        per_microstep.push((rep.cache_hits, rep.cache_misses));
+        if s > 0 {
+            for (i, sr) in rep.sites.iter().enumerate() {
+                site_hits[i] += sr.cache_hits;
+                site_misses[i] += sr.cache_misses;
+            }
+        }
+        last_rep = Some(rep);
+    }
+    let (qw1, pw1) = quant_work_counters();
+    let last_rep = last_rep.unwrap();
+    let warm_hit_rate: f64 = {
+        let (h, m) = per_microstep[1..].iter().fold(
+            (0u64, 0u64),
+            |(h, m), &(hh, mm)| (h + hh, m + mm),
+        );
+        h as f64 / (h + m).max(1) as f64
+    };
+    assert_eq!(warm_hit_rate, 1.0,
+               "every lookup must hit from the 2nd microstep on");
+    // step boundary, then re-pin θ so the restored phase runs at the
+    // same thresholds (the warm state serializes the controller as
+    // it stands — save at a step boundary, after end_step)
+    let _ = ms.end_step();
+    ms.controller_mut().thresholds.copy_from_slice(&thetas);
+
+    // -- warm state: serialize → restore → first microstep warm -----
+    let cal_dim = if smoke { 96 } else { 256 };
+    let cal = SubstrateCalibration::measure(cal_dim,
+                                            block.min(cal_dim),
+                                            threads);
+    let state_text = ms.warm_state(Some(&cal)).to_string();
+    let parsed = Json::parse(&state_text)
+        .expect("warm state must serialize to valid JSON");
+    let (mut ms2, cal_restored) =
+        ModelStep::from_warm_state(cfg.clone(), weights.clone(),
+                                   &parsed)
+            .expect("warm-state restore");
+    let cal_roundtrip = cal_restored
+        .map(|c| c.int8_gops == cal.int8_gops
+             && c.fallback == cal.fallback)
+        .unwrap_or(false);
+    let mut warm_restored_ms = Vec::with_capacity(microsteps);
+    let mut first_outs = None;
+    let mut first_hit_rate = 0.0;
+    for s in 0..microsteps {
+        let t = Instant::now();
+        let (outs, rep) = ms2.microstep(&acts, &grads);
+        warm_restored_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        if s == 0 {
+            first_hit_rate = rep.cache_hits as f64
+                / (rep.cache_hits + rep.cache_misses).max(1) as f64;
+            assert_eq!(rep.cache_misses, 0,
+                       "restored process must start at steady state");
+            first_outs = Some(outs);
+        } else {
+            std::hint::black_box(outs);
+        }
+    }
+    // bit-identity: the saved driver's next microstep (same index as
+    // the restored driver's first) must agree on every output
+    let (outs_saved, _) = ms.microstep(&acts, &grads);
+    let first_outs = first_outs.unwrap();
+    let warm_restored_identical = outs_saved
+        .iter()
+        .zip(&first_outs)
+        .all(|(a, b)| {
+            a.y.data == b.y.data
+                && a.dx.data == b.dx.data
+                && a.dw.data == b.dw.data
+        });
+    assert!(warm_restored_identical,
+            "restored first microstep must be bit-identical to the \
+             saved driver's next microstep");
+
+    // -- per-backend: ModelStep ≡ composed LayerSteps + head ---------
+    let mut backend_checks = Vec::new();
+    for kn in kernels::available() {
+        let mut m = ModelStep::new(cfg.clone(), weights.clone())
+            .with_kernels(kn);
+        m.controller_mut().thresholds.copy_from_slice(&thetas);
+        let (mo, _) = m.microstep(&acts, &grads);
+        let mut identical = true;
+        for l in 0..layers {
+            let mut ls = LayerStep::new(
+                cfg.layer_config(l),
+                weights[4 * l..4 * l + 4].to_vec(),
+            )
+            .with_kernels(kn);
+            ls.controller_mut()
+                .thresholds
+                .copy_from_slice(&thetas[4 * l..4 * l + 4]);
+            let (lo, _) = ls.microstep(&acts[4 * l..4 * l + 4],
+                                       &grads[4 * l..4 * l + 4]);
+            for (i, b) in lo.iter().enumerate() {
+                let a = &mo[4 * l + i];
+                identical &= a.y.data == b.y.data
+                    && a.dx.data == b.dx.data
+                    && a.dw.data == b.dw.data;
+            }
+        }
+        let h = n_sites - 1;
+        let ho = head_reference(&cfg, &sites[h], &weights[h],
+                                &acts[h], &grads[h], thetas[h], 0,
+                                kn);
+        identical &= mo[h].y.data == ho.y.data
+            && mo[h].dx.data == ho.dx.data
+            && mo[h].dw.data == ho.dw.data;
+        assert!(identical,
+                "ModelStep must match composed LayerSteps on backend \
+                 {}", kn.name);
+        backend_checks.push((kn.name, identical));
+    }
+
+    // -- summaries ----------------------------------------------------
+    let cold_steady = median(&cold_ms);
+    let cached_steady = median(&cached_ms[1..]);
+    let warm_steady = median(&warm_restored_ms);
+    let cold_gops = flops / (cold_steady / 1e3) / 1e9;
+    let cached_gops = flops / (cached_steady / 1e3) / 1e9;
+    let warm_gops = flops / (warm_steady / 1e3) / 1e9;
+    let speedup = cold_steady / cached_steady;
+
+    // per-layer warm hit rates + executed rates (last microstep)
+    let layer_label = |l: usize| -> String {
+        if l < layers {
+            format!("layer{l}")
+        } else {
+            "lm_head".into()
+        }
+    };
+    let group_sites = |l: usize| {
+        if l < layers {
+            4 * l..4 * l + 4
+        } else {
+            4 * layers..n_sites
+        }
+    };
+    let mut per_layer = Vec::new();
+    for l in 0..=layers {
+        let r = group_sites(l);
+        let (h, m): (u64, u64) = r.clone().fold((0, 0), |(h, m), s| {
+            (h + site_hits[s], m + site_misses[s])
+        });
+        let hit_rate = h as f64 / (h + m).max(1) as f64;
+        let fwd: f64 = r.clone()
+            .map(|s| last_rep.sites[s].fallback_rate)
+            .sum::<f64>() / r.clone().count() as f64;
+        let bwd: f64 = r.clone()
+            .map(|s| last_rep.sites[s].bwd_fallback_rate)
+            .sum::<f64>() / r.count() as f64;
+        per_layer.push((layer_label(l), hit_rate, fwd, bwd));
+    }
+    assert!(per_layer.iter().all(|&(_, hr, _, _)| hr == 1.0),
+            "every layer (and the head) must hit from microstep 2");
+
+    // resident bytes the warm cache keeps alive
+    let resident_bytes: usize = ms
+        .cache()
+        .keys()
+        .iter()
+        .filter_map(|k| ms.cache().peek(k))
+        .map(|wp| wp.packed_bytes())
+        .sum();
+
+    let mean_rate = last_rep
+        .sites
+        .iter()
+        .map(|s| s.fallback_rate)
+        .sum::<f64>() / n_sites as f64;
+    let sub_ms = cal.substrate_model_step_secs(
+        layers, d_model, d_ff, cfg.glu, vocab, tokens, mean_rate)
+        * 1e3;
+    let g4090 = rtx4090();
+    let proj_ms = cal.projected_model_step_secs(
+        &g4090, layers, d_model, d_ff, cfg.glu, vocab, tokens,
+        mean_rate) * 1e3;
+
+    let mut table = Table::new(&["run", "first ms", "steady ms",
+                                 "Gops", "hit rate"]);
+    table.row(&[
+        "cold".into(),
+        format!("{:.1}", cold_ms[0]),
+        format!("{cold_steady:.1}"),
+        format!("{cold_gops:.2}"),
+        "-".into(),
+    ]);
+    table.row(&[
+        "cached".into(),
+        format!("{:.1}", cached_ms[0]),
+        format!("{cached_steady:.1}"),
+        format!("{cached_gops:.2}"),
+        format!("{warm_hit_rate:.2} (2nd+)"),
+    ]);
+    table.row(&[
+        "warm_restored".into(),
+        format!("{:.1}", warm_restored_ms[0]),
+        format!("{warm_steady:.1}"),
+        format!("{warm_gops:.2}"),
+        format!("{first_hit_rate:.2} (1st)"),
+    ]);
+    table.print();
+    println!(
+        "\ncached vs cold steady-state: {speedup:.2}x; \
+         warm-restored first microstep hit rate {first_hit_rate:.2} \
+         (target 1.00); composed-LayerStep bit-identity on {} \
+         backend(s)", backend_checks.len()
+    );
+    println!(
+        "quant calls / panel packs: cold {}/{}, cached {}/{}",
+        qc1 - qc0, pc1 - pc0, qw1 - qw0, pw1 - pw0
+    );
+    println!(
+        "warm cache: {} entries, {:.1} MiB resident, warm-state file \
+         {} bytes",
+        ms.cache().len(),
+        resident_bytes as f64 / (1024.0 * 1024.0),
+        state_text.len()
+    );
+    println!(
+        "cost model: substrate estimate {sub_ms:.1} ms/microstep \
+         (measured {cached_steady:.1} ms), 4090 projection \
+         {proj_ms:.3} ms"
+    );
+
+    let report = obj(vec![
+        ("bench", Json::Str("model_step".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("config", obj(vec![
+            ("layers", Json::Num(layers as f64)),
+            ("d_model", Json::Num(d_model as f64)),
+            ("d_ff", Json::Num(d_ff as f64)),
+            ("glu", Json::Bool(cfg.glu)),
+            ("vocab", Json::Num(vocab as f64)),
+            ("tokens", Json::Num(tokens as f64)),
+            ("block", Json::Num(block as f64)),
+            ("threads", Json::Num(threads as f64)),
+            ("microsteps", Json::Num(microsteps as f64)),
+            ("n_sites", Json::Num(n_sites as f64)),
+            ("data_path", Json::Str(cfg.path.tag().into())),
+            ("kernel_backend",
+             Json::Str(ms.kernel_backend().into())),
+        ])),
+        ("cpu_features",
+         Json::Arr(kernels::cpu_features()
+             .iter()
+             .map(|&f| Json::Str(f.into()))
+             .collect())),
+        ("flops_per_microstep", Json::Num(flops)),
+        ("cache", obj(vec![
+            ("capacity", Json::Num(ms.cache().capacity() as f64)),
+            ("working_set", Json::Num(cfg.working_set() as f64)),
+            ("entries", Json::Num(ms.cache().len() as f64)),
+            ("resident_bytes", Json::Num(resident_bytes as f64)),
+            ("warm_hit_rate", Json::Num(warm_hit_rate)),
+            ("per_microstep", Json::Arr(
+                per_microstep
+                    .iter()
+                    .map(|&(h, m)| obj(vec![
+                        ("hits", Json::Num(h as f64)),
+                        ("misses", Json::Num(m as f64)),
+                    ]))
+                    .collect(),
+            )),
+        ])),
+        ("per_layer", Json::Arr(
+            per_layer
+                .iter()
+                .map(|(name, hr, fwd, bwd)| obj(vec![
+                    ("name", Json::Str(name.clone())),
+                    ("warm_hit_rate", Json::Num(*hr)),
+                    ("fwd_fallback_rate", Json::Num(*fwd)),
+                    ("bwd_fallback_rate", Json::Num(*bwd)),
+                ]))
+                .collect(),
+        )),
+        ("cold", obj(vec![
+            ("per_microstep_ms", Json::Arr(
+                cold_ms.iter().map(|&x| Json::Num(x)).collect())),
+            ("steady_ms", Json::Num(cold_steady)),
+            ("gops", Json::Num(cold_gops)),
+            ("quant_calls", Json::Num((qc1 - qc0) as f64)),
+            ("panel_packs", Json::Num((pc1 - pc0) as f64)),
+        ])),
+        ("cached", obj(vec![
+            ("per_microstep_ms", Json::Arr(
+                cached_ms.iter().map(|&x| Json::Num(x)).collect())),
+            ("first_ms", Json::Num(cached_ms[0])),
+            ("steady_ms", Json::Num(cached_steady)),
+            ("gops", Json::Num(cached_gops)),
+            ("quant_calls", Json::Num((qw1 - qw0) as f64)),
+            ("panel_packs", Json::Num((pw1 - pw0) as f64)),
+        ])),
+        ("warm_restored", obj(vec![
+            ("per_microstep_ms", Json::Arr(
+                warm_restored_ms
+                    .iter()
+                    .map(|&x| Json::Num(x))
+                    .collect())),
+            ("first_ms", Json::Num(warm_restored_ms[0])),
+            ("steady_ms", Json::Num(warm_steady)),
+            ("gops", Json::Num(warm_gops)),
+            ("first_hit_rate", Json::Num(first_hit_rate)),
+            ("state_bytes", Json::Num(state_text.len() as f64)),
+            ("calibration_roundtrip", Json::Bool(cal_roundtrip)),
+        ])),
+        ("backends", Json::Arr(
+            backend_checks
+                .iter()
+                .map(|&(name, ok)| obj(vec![
+                    ("name", Json::Str(name.into())),
+                    ("bit_identical_vs_layersteps", Json::Bool(ok)),
+                ]))
+                .collect(),
+        )),
+        ("criteria", obj(vec![
+            ("cached_vs_cold", Json::Num(speedup)),
+            ("warm_hit_rate", Json::Num(warm_hit_rate)),
+            ("warm_restored_first_hit_rate",
+             Json::Num(first_hit_rate)),
+            ("warm_restored_bit_identical",
+             Json::Bool(warm_restored_identical)),
+            ("bit_identical_all_backends",
+             Json::Bool(backend_checks.iter().all(|&(_, ok)| ok))),
+        ])),
+        ("projection", obj(vec![
+            ("substrate_ms", Json::Num(sub_ms)),
+            ("rtx4090_ms", Json::Num(proj_ms)),
+            ("calibration_int8_gops", Json::Num(cal.int8_gops)),
+            ("calibration_backend", Json::Str(cal.backend.into())),
+        ])),
+    ]);
+    std::fs::write("BENCH_model_step.json", report.to_string())
+        .expect("write BENCH_model_step.json");
+    println!("\nwrote BENCH_model_step.json");
+}

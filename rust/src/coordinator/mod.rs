@@ -331,9 +331,12 @@ impl<'rt> Trainer<'rt> {
             ("step", crate::util::json::Json::Num(self.step as f64)),
             ("n_params", crate::util::json::Json::Num(
                 self.params.len() as f64)),
-            ("thresholds", crate::util::json::arr_f64(
-                &self.controller.thresholds.iter()
-                    .map(|&t| t as f64).collect::<Vec<_>>())),
+            // full Algorithm 2 state (band, α, counters, θ vector) so
+            // a resumed run skips the threshold re-adaptation
+            // transient. This replaces the old bare `thresholds`
+            // array, which emitted invalid JSON (`inf`) for the
+            // disabled-controller baselines.
+            ("controller", self.controller.to_json()),
         ]);
         std::fs::write(format!("{path}.json"), hdr.to_string())?;
         let mut raw = Vec::with_capacity(self.params.len() * 4);
@@ -344,7 +347,10 @@ impl<'rt> Trainer<'rt> {
         Ok(())
     }
 
-    /// Load parameters from a checkpoint written by `save_checkpoint`.
+    /// Load parameters from a checkpoint written by `save_checkpoint`,
+    /// restoring the Algorithm 2 controller when the JSON header
+    /// carries it (checkpoints predating the field still load — the
+    /// controller then keeps its current state and re-adapts).
     pub fn load_checkpoint(&mut self, path: &str) -> Result<()> {
         let raw = std::fs::read(format!("{path}.f32"))?;
         if raw.len() != self.params.len() * 4 {
@@ -354,9 +360,56 @@ impl<'rt> Trainer<'rt> {
                 self.params.len()
             ));
         }
+        // Validate the header fully BEFORE touching self — an error
+        // return must leave the trainer exactly as it was, never with
+        // the rejected checkpoint's params half-applied.
+        //
+        // A missing header is tolerated (raw-params checkpoints), and
+        // so is an unparseable one — with a loud warning: checkpoints
+        // from before the controller field wrote bare `inf` tokens
+        // for disabled-controller baselines (invalid JSON), and their
+        // params are perfectly intact. Aborting the resume over the
+        // header would turn a recoverable situation into a hard stop;
+        // losing the controller only costs the Algorithm 2
+        // re-adaptation transient. A header without the `controller`
+        // field likewise predates it.
+        let hdr_path = format!("{path}.json");
+        let mut controller = None;
+        if std::path::Path::new(&hdr_path).exists() {
+            match crate::util::json::Json::parse_file(&hdr_path) {
+                Ok(hdr) => {
+                    if let Some(cj) = hdr.get("controller") {
+                        let c = ThresholdController::from_json(cj)
+                            .map_err(|e| anyhow!(
+                                "checkpoint controller: {e}"))?;
+                        if c.thresholds.len()
+                            != self.controller.thresholds.len()
+                        {
+                            return Err(anyhow!(
+                                "checkpoint controller has {} sites, \
+                                 model has {}",
+                                c.thresholds.len(),
+                                self.controller.thresholds.len()
+                            ));
+                        }
+                        controller = Some(c);
+                    }
+                }
+                Err(e) => {
+                    eprintln!(
+                        "warning: checkpoint header {hdr_path} is \
+                         unreadable ({e}); loading params only — \
+                         the threshold controller re-adapts"
+                    );
+                }
+            }
+        }
         for (i, chunk) in raw.chunks_exact(4).enumerate() {
             self.params[i] =
                 f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        if let Some(c) = controller {
+            self.controller = c;
         }
         Ok(())
     }

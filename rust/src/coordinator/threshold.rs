@@ -8,6 +8,15 @@
 //!
 //! θ values are runtime inputs to the AOT train-step graph, so the
 //! controller needs no recompilation to act.
+//!
+//! Controller state serializes to JSON
+//! ([`to_json`](ThresholdController::to_json) /
+//! [`from_json`](ThresholdController::from_json)) so a training
+//! process can persist its adapted θ vector and resume without
+//! re-walking the Algorithm 2 transient — `gemm::pipeline`'s
+//! warm-state files embed exactly this.
+
+use crate::util::json::{obj, Json};
 
 /// Controller state for all quantization sites of a model.
 #[derive(Debug, Clone)]
@@ -69,6 +78,78 @@ impl ThresholdController {
                 self.n_up += 1;
             }
         }
+    }
+
+    /// Serialize the full controller state (θ vector, band, α,
+    /// adjustment counters). Disabled sites carry θ = +∞, which JSON
+    /// numbers cannot express — they serialize as the string `"inf"`.
+    pub fn to_json(&self) -> Json {
+        let thresholds = Json::Arr(
+            self.thresholds
+                .iter()
+                .map(|&t| {
+                    if t.is_finite() {
+                        Json::Num(t as f64)
+                    } else {
+                        Json::Str("inf".into())
+                    }
+                })
+                .collect(),
+        );
+        obj(vec![
+            ("thresholds", thresholds),
+            ("r_min", Json::Num(self.r_min)),
+            ("r_max", Json::Num(self.r_max)),
+            ("alpha", Json::Num(self.alpha as f64)),
+            ("n_up", Json::Num(self.n_up as f64)),
+            ("n_down", Json::Num(self.n_down as f64)),
+        ])
+    }
+
+    /// Restore a controller serialized by
+    /// [`to_json`](ThresholdController::to_json). Enforces the same
+    /// invariants as [`new`](ThresholdController::new) — a corrupted
+    /// or hand-edited file with `alpha ≤ 1` or a malformed band
+    /// would otherwise run Algorithm 2 *inverted* (adjusting θ away
+    /// from the band), so external input fails here instead.
+    pub fn from_json(j: &Json) -> Result<ThresholdController, String> {
+        let f = |k: &str| {
+            j.get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("controller: missing '{k}'"))
+        };
+        let thresholds = j
+            .get("thresholds")
+            .and_then(|v| v.as_arr())
+            .ok_or("controller: missing 'thresholds'")?
+            .iter()
+            .map(|v| match v {
+                Json::Num(n) => Ok(*n as f32),
+                Json::Str(s) if s == "inf" => Ok(f32::INFINITY),
+                other => Err(format!("controller: bad θ {other:?}")),
+            })
+            .collect::<Result<Vec<f32>, String>>()?;
+        let (r_min, r_max) = (f("r_min")?, f("r_max")?);
+        let alpha = f("alpha")? as f32;
+        let valid = alpha > 1.0
+            && 0.0 <= r_min
+            && r_min <= r_max
+            && r_max <= 1.0;
+        if !valid {
+            return Err(format!(
+                "controller: invalid state (alpha={alpha} must \
+                 exceed 1, band [{r_min}, {r_max}] must satisfy \
+                 0 <= r_min <= r_max <= 1)"
+            ));
+        }
+        Ok(ThresholdController {
+            thresholds,
+            r_min,
+            r_max,
+            alpha,
+            n_up: f("n_up")? as usize,
+            n_down: f("n_down")? as usize,
+        })
     }
 
     pub fn mean_theta(&self) -> f64 {
@@ -232,6 +313,35 @@ mod tests {
         }
         assert!(in_band_streak >= 50,
                 "controller failed to settle (streak {in_band_streak})");
+    }
+
+    #[test]
+    fn controller_json_roundtrip_including_disabled_sites() {
+        let mut c = ThresholdController::new(3, 2.0, 0.05, 0.4, 1.5);
+        c.thresholds[1] = f32::INFINITY; // disabled site
+        c.update(&[0.9, 0.9, 0.0]); // moves θ0 up, θ2 down, counters set
+        let j = c.to_json();
+        // the serialized form must be valid JSON text (∞ cannot ride
+        // as a bare number)
+        let reparsed =
+            crate::util::json::Json::parse(&j.to_string()).unwrap();
+        let r = ThresholdController::from_json(&reparsed).unwrap();
+        assert_eq!(r.thresholds, c.thresholds);
+        assert_eq!((r.r_min, r.r_max, r.alpha),
+                   (c.r_min, c.r_max, c.alpha));
+        assert_eq!((r.n_up, r.n_down), (c.n_up, c.n_down));
+        // malformed input errors instead of panicking
+        assert!(ThresholdController::from_json(
+            &crate::util::json::Json::Null).is_err());
+        // inverted-feedback states are rejected at the boundary: an
+        // alpha ≤ 1 would make update() adjust θ *away* from the band
+        let mut bad = c.to_json();
+        if let crate::util::json::Json::Obj(m) = &mut bad {
+            m.insert("alpha".into(),
+                     crate::util::json::Json::Num(0.5));
+        }
+        let err = ThresholdController::from_json(&bad).unwrap_err();
+        assert!(err.contains("invalid state"), "{err}");
     }
 
     #[test]

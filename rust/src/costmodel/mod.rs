@@ -366,9 +366,12 @@ impl SubstrateCalibration {
     /// Projected GPU seconds for one transformer-layer *microstep* —
     /// the four linear sites of [`crate::model::layer_linears`], each
     /// running forward + `dX` + `dW` (the layer-step pipeline's GEMM
-    /// set). The forward carries the fallback rate through the
-    /// measured slope; the backward GEMMs run plain INT8 (§5.1: dY is
-    /// not fallback-quantized). Group size is the calibration block.
+    /// set). The forward **and `dW`** carry the fallback rate through
+    /// the measured slope — `dW`'s Xᵀ operand rides the fallback path
+    /// at the site's θ, and its u-mask is exactly the forward's
+    /// transpose, so both execute at the same rate. `dX` runs plain
+    /// INT8 (§5.1: dY is not fallback-quantized). Group size is the
+    /// calibration block.
     pub fn projected_layer_step_secs(&self, gpu: &Gpu, d_model: usize,
                                      d_ff: usize, glu: bool,
                                      tokens: usize,
@@ -379,16 +382,173 @@ impl SubstrateCalibration {
             .map(|l| {
                 self.projected_int8_secs(gpu, l.m, l.n, l.k, kg, rate)
                     + gpu.int8_gemm_secs(l.m, l.k, l.n, kg, 0.0)
-                    + gpu.int8_gemm_secs(l.k, l.n, l.m, kg, 0.0)
+                    + self.projected_int8_secs(gpu, l.k, l.n, l.m,
+                                               kg, rate)
             })
             .sum()
     }
 
+    /// Projected GPU seconds for one *whole-model* microstep: `layers`
+    /// transformer layers ([`projected_layer_step_secs`]) plus the LM
+    /// head's three GEMMs (`tokens × vocab × d_model`) — the GEMM set
+    /// `gemm::pipeline::ModelStep` drives. Like the layer projection,
+    /// the forward and `dW` GEMMs carry the fallback rate through the
+    /// measured slope and `dX` runs plain INT8.
+    ///
+    /// [`projected_layer_step_secs`]: SubstrateCalibration::projected_layer_step_secs
+    #[allow(clippy::too_many_arguments)]
+    pub fn projected_model_step_secs(&self, gpu: &Gpu, layers: usize,
+                                     d_model: usize, d_ff: usize,
+                                     glu: bool, vocab: usize,
+                                     tokens: usize, rate: f64) -> f64 {
+        let kg = self.block;
+        let h = crate::model::lm_head_linear(d_model, vocab, tokens);
+        layers as f64
+            * self.projected_layer_step_secs(gpu, d_model, d_ff, glu,
+                                             tokens, rate)
+            + self.projected_int8_secs(gpu, h.m, h.n, h.k, kg, rate)
+            + gpu.int8_gemm_secs(h.m, h.k, h.n, kg, 0.0)
+            + self.projected_int8_secs(gpu, h.k, h.n, h.m, kg, rate)
+    }
+
+    /// CPU-substrate estimate for the same whole-model microstep
+    /// (layers × [`substrate_layer_step_secs`] + the LM head), from
+    /// the measured i8-path throughput and fallback slope.
+    /// `benches/model_step.rs` compares its measured pipeline time
+    /// against this.
+    ///
+    /// [`substrate_layer_step_secs`]: SubstrateCalibration::substrate_layer_step_secs
+    #[allow(clippy::too_many_arguments)]
+    pub fn substrate_model_step_secs(&self, layers: usize,
+                                     d_model: usize, d_ff: usize,
+                                     glu: bool, vocab: usize,
+                                     tokens: usize, rate: f64) -> f64 {
+        let slope = self.fallback_overhead_per_rate();
+        let flops_per_sec = self.int8_gops.max(1e-12) * 1e9;
+        let h = crate::model::lm_head_linear(d_model, vocab, tokens);
+        let fwd = h.flops();
+        layers as f64
+            * self.substrate_layer_step_secs(d_model, d_ff, glu,
+                                             tokens, rate)
+            + (2.0 * fwd * (1.0 + rate * slope) + fwd) / flops_per_sec
+    }
+
+    /// Serialize the measured numbers (warm-state files, reports) so a
+    /// fresh process can consume calibrated projections — and install
+    /// the calibrated backend — without re-measuring.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{obj, Json};
+        obj(vec![
+            ("dims", Json::Arr(vec![
+                Json::Num(self.dims.0 as f64),
+                Json::Num(self.dims.1 as f64),
+                Json::Num(self.dims.2 as f64),
+            ])),
+            ("block", Json::Num(self.block as f64)),
+            ("threads", Json::Num(self.threads as f64)),
+            ("dense_gops", Json::Num(self.dense_gops)),
+            ("int8_gops", Json::Num(self.int8_gops)),
+            ("int8_sim_gops", Json::Num(self.int8_sim_gops)),
+            ("fallback", Json::Arr(
+                self.fallback
+                    .iter()
+                    .map(|&(rate, gops)| obj(vec![
+                        ("rate", Json::Num(rate)),
+                        ("gops", Json::Num(gops)),
+                    ]))
+                    .collect(),
+            )),
+            ("backend", Json::Str(self.backend.into())),
+            ("per_backend", Json::Arr(
+                self.per_backend
+                    .iter()
+                    .map(|&(name, gops)| obj(vec![
+                        ("name", Json::Str(name.into())),
+                        ("gops", Json::Num(gops)),
+                    ]))
+                    .collect(),
+            )),
+        ])
+    }
+
+    /// Restore a calibration serialized by
+    /// [`to_json`](SubstrateCalibration::to_json). Backend names
+    /// resolve against the kernel backends *available on this host*:
+    /// a name this host cannot run (e.g. `"avx2"` restored on
+    /// aarch64) falls back to `"scalar"` for the headline label and
+    /// is dropped from `per_backend` — the throughput numbers
+    /// themselves survive untouched.
+    pub fn from_json(j: &crate::util::json::Json)
+                     -> Result<SubstrateCalibration, String> {
+        use crate::util::json::Json;
+        let num = |k: &str| {
+            j.get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("calibration: missing '{k}'"))
+        };
+        let dims = j
+            .get("dims")
+            .and_then(|v| v.to_f64_vec())
+            .filter(|v| v.len() == 3)
+            .ok_or("calibration: missing 'dims'")?;
+        let fallback = j
+            .get("fallback")
+            .and_then(|v| v.as_arr())
+            .ok_or("calibration: missing 'fallback'")?
+            .iter()
+            .map(|s| {
+                let rate = s.get("rate").and_then(|v| v.as_f64());
+                let gops = s.get("gops").and_then(|v| v.as_f64());
+                match (rate, gops) {
+                    (Some(r), Some(g)) => Ok((r, g)),
+                    _ => Err("calibration: bad fallback sample".into()),
+                }
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        // The keys are required (a file missing them is malformed,
+        // not cross-host); only *names this host cannot run* degrade
+        // — headline label to "scalar", unresolvable sweep entries
+        // dropped.
+        let backend = j
+            .get("backend")
+            .and_then(|v| v.as_str())
+            .ok_or("calibration: missing 'backend'")?;
+        let backend = static_backend_name(backend).unwrap_or("scalar");
+        let per_backend = j
+            .get("per_backend")
+            .and_then(|v| v.as_arr())
+            .ok_or("calibration: missing 'per_backend'")?
+            .iter()
+            .filter_map(|s| {
+                let name = s
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .and_then(static_backend_name)?;
+                let gops = s.get("gops").and_then(|v| v.as_f64())?;
+                Some((name, gops))
+            })
+            .collect();
+        Ok(SubstrateCalibration {
+            dims: (dims[0] as usize, dims[1] as usize,
+                   dims[2] as usize),
+            block: num("block")? as usize,
+            threads: num("threads")? as usize,
+            dense_gops: num("dense_gops")?,
+            int8_gops: num("int8_gops")?,
+            int8_sim_gops: num("int8_sim_gops")?,
+            fallback,
+            backend,
+            per_backend,
+        })
+    }
+
     /// Estimated CPU-substrate seconds for the same microstep, from
     /// the measured i8-path throughput and fallback slope: each
-    /// site's forward pays `1 + rate·slope`, the two backward GEMMs
-    /// move the same M·N·K each at rate 0. The layer-step bench
-    /// compares its measured cached-pipeline time against this.
+    /// site's forward **and `dW`** pay `1 + rate·slope` (`dW`'s Xᵀ
+    /// operand executes Algorithm 1 at the forward's rate — its
+    /// u-mask is the forward's transpose), while `dX` moves the same
+    /// M·N·K at rate 0. The layer-step bench compares its measured
+    /// cached-pipeline time against this.
     pub fn substrate_layer_step_secs(&self, d_model: usize,
                                      d_ff: usize, glu: bool,
                                      tokens: usize,
@@ -399,11 +559,21 @@ impl SubstrateCalibration {
             .iter()
             .map(|l| {
                 let fwd = l.flops();
-                (fwd * (1.0 + rate * slope) + 2.0 * fwd)
+                (2.0 * fwd * (1.0 + rate * slope) + fwd)
                     / flops_per_sec
             })
             .sum()
     }
+}
+
+/// Map a deserialized backend name onto the matching host-available
+/// `&'static str` (the calibration struct stores static names). Names
+/// of backends this host cannot run resolve to `None`.
+fn static_backend_name(s: &str) -> Option<&'static str> {
+    crate::gemm::kernels::available()
+        .into_iter()
+        .map(|k| k.name)
+        .find(|&n| n == s)
 }
 
 #[cfg(test)]
@@ -556,6 +726,85 @@ mod tests {
         let s2 = cal
             .substrate_layer_step_secs(2048, 8192, false, 4096, 0.2);
         assert!(s2 > s0);
+    }
+
+    fn hand_cal() -> SubstrateCalibration {
+        SubstrateCalibration {
+            dims: (256, 256, 256),
+            block: 128,
+            threads: 4,
+            dense_gops: 5.0,
+            int8_gops: 10.0,
+            int8_sim_gops: 6.0,
+            fallback: vec![(0.0, 10.0), (0.25, 8.0)],
+            backend: "scalar",
+            per_backend: vec![("scalar", 10.0)],
+        }
+    }
+
+    #[test]
+    fn model_step_projection_composes_layers_and_head() {
+        let cal = hand_cal();
+        let g = rtx4090();
+        let layer = cal
+            .projected_layer_step_secs(&g, 1024, 4096, false, 2048,
+                                       0.1);
+        let one = cal
+            .projected_model_step_secs(&g, 1, 1024, 4096, false,
+                                       32000, 2048, 0.1);
+        let four = cal
+            .projected_model_step_secs(&g, 4, 1024, 4096, false,
+                                       32000, 2048, 0.1);
+        // head adds time on top of the layer stack, layers compose
+        // linearly
+        assert!(one > layer);
+        let head = one - layer;
+        assert!((four - (4.0 * layer + head)).abs() / four < 1e-9);
+        // substrate estimate: whole-model flops over measured Gops at
+        // rate 0
+        let s = cal.substrate_model_step_secs(3, 1024, 4096, false,
+                                              32000, 2048, 0.0);
+        let flops: f64 = crate::model::model_linears(
+            3, 1024, 4096, false, 32000, 2048)
+            .iter()
+            .map(|l| l.microstep_flops())
+            .sum();
+        let expect = flops / (10.0 * 1e9);
+        assert!((s - expect).abs() / expect < 1e-9, "{s} vs {expect}");
+        // fallback rate costs time in both projections
+        assert!(cal.substrate_model_step_secs(3, 1024, 4096, false,
+                                              32000, 2048, 0.2) > s);
+    }
+
+    #[test]
+    fn calibration_json_roundtrip() {
+        let cal = hand_cal();
+        let j = cal.to_json();
+        let text = j.to_string();
+        let r = SubstrateCalibration::from_json(
+            &crate::util::json::Json::parse(&text).unwrap())
+            .unwrap();
+        assert_eq!(r.dims, cal.dims);
+        assert_eq!((r.block, r.threads), (cal.block, cal.threads));
+        assert_eq!(r.dense_gops, cal.dense_gops);
+        assert_eq!(r.int8_gops, cal.int8_gops);
+        assert_eq!(r.int8_sim_gops, cal.int8_sim_gops);
+        assert_eq!(r.fallback, cal.fallback);
+        assert_eq!(r.backend, "scalar");
+        assert_eq!(r.per_backend, cal.per_backend);
+        // a backend name this host can't run degrades gracefully
+        let mut alien = cal.clone();
+        alien.backend = "no-such-isa";
+        alien.per_backend = vec![("no-such-isa", 3.0)];
+        let r2 = SubstrateCalibration::from_json(
+            &crate::util::json::Json::parse(&alien.to_json()
+                .to_string()).unwrap())
+            .unwrap();
+        assert_eq!(r2.backend, "scalar");
+        assert!(r2.per_backend.is_empty());
+        // malformed input errors
+        assert!(SubstrateCalibration::from_json(
+            &crate::util::json::Json::Null).is_err());
     }
 
     #[test]

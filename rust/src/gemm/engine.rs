@@ -149,7 +149,7 @@ pub enum Precision {
 /// What the int8-mode microkernels stream (see module docs): the
 /// seed-compatible f32 simulation of the codes, or the true i8
 /// operands with i32 block accumulation.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum DataPath {
     /// cached f32 copies of the int8 codes, f32 FMA kernels
     SimF32,
@@ -171,6 +171,23 @@ impl DataPath {
             DataPath::Int8
         } else {
             DataPath::SimF32
+        }
+    }
+
+    /// Stable serialization tag (warm-state files, reports).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            DataPath::SimF32 => "sim_f32",
+            DataPath::Int8 => "int8",
+        }
+    }
+
+    /// Inverse of [`tag`](DataPath::tag).
+    pub fn from_tag(s: &str) -> Option<DataPath> {
+        match s {
+            "sim_f32" => Some(DataPath::SimF32),
+            "int8" => Some(DataPath::Int8),
+            _ => None,
         }
     }
 }
@@ -826,6 +843,18 @@ impl WeightPlan {
         (self.qb.rows, self.qb.cols)
     }
 
+    /// Resident bytes of the cached half: the stored codes + scales
+    /// plus the packed column panels for this plan's data path —
+    /// what one warm `PlanCache` entry actually keeps alive across
+    /// steps (reported by `benches/model_step.rs`).
+    pub fn packed_bytes(&self) -> usize {
+        let panels = match self.path {
+            DataPath::SimF32 => self.qb.col_panels().bytes(),
+            DataPath::Int8 => self.qb.col_panels_i8().bytes(),
+        };
+        self.qb.bytes() + panels
+    }
+
     /// Plan `C = A · W` at `Int8Block` precision against the cached
     /// weight half; only the activation operand is read per call.
     pub fn plan_int8<'p>(&'p self, a: &'p BlockQuant,
@@ -1124,6 +1153,27 @@ mod tests {
         let plan = wp_scalar.plan_int8(&qa, 1);
         assert_eq!(plan.kernel_backend(), "scalar");
         assert_eq!(plan.execute().data, c_wp.data);
+    }
+
+    #[test]
+    fn data_path_tags_roundtrip() {
+        for p in [DataPath::SimF32, DataPath::Int8] {
+            assert_eq!(DataPath::from_tag(p.tag()), Some(p));
+        }
+        assert_eq!(DataPath::from_tag("Int8"), None, "tags are stable \
+                   lowercase names, not Debug output");
+    }
+
+    #[test]
+    fn weight_plan_reports_resident_bytes() {
+        let (_, w) = mats(8, 32, 48, 61);
+        let qw = Arc::new(block_quant(&w, 16, INT8_LEVELS,
+                                      Rounding::Nearest));
+        let wp = WeightPlan::new(qw.clone(), DataPath::Int8);
+        // codes+scales plus the i8 panel pack, nothing f32-sized
+        assert_eq!(wp.packed_bytes(),
+                   qw.bytes() + qw.col_panels_i8().bytes());
+        assert!(!qw.f32_panels_built());
     }
 
     #[test]

@@ -278,13 +278,22 @@ pub fn parse_override(val: Option<&str>) -> Option<&'static Kernels> {
     }
 }
 
+/// The `PALLAS_KERNEL` env override in force for this process, if
+/// any (read once, like [`select`]). Exposed so restore paths (the
+/// pipeline's warm state) can *respect* the override instead of
+/// silently re-pinning a recorded backend over it — the same
+/// contract that makes [`parse_override`] a hard error on unknown
+/// names.
+pub fn env_override() -> Option<&'static Kernels> {
+    *ENV_OVERRIDE.get_or_init(|| {
+        parse_override(std::env::var("PALLAS_KERNEL").ok().as_deref())
+    })
+}
+
 /// The backend a fresh `GemmPlan` uses: `PALLAS_KERNEL` env override
 /// (read once per process) → calibration preference → static best.
 pub fn select() -> &'static Kernels {
-    let over = *ENV_OVERRIDE.get_or_init(|| {
-        parse_override(std::env::var("PALLAS_KERNEL").ok().as_deref())
-    });
-    if let Some(k) = over {
+    if let Some(k) = env_override() {
         return k;
     }
     if let Some(k) = preferred() {

@@ -38,9 +38,14 @@
 //! backend) across steps, and [`LayerStep`] drives the four linear
 //! sites of a transformer layer (fwd + both bwd GEMMs each) against
 //! them, re-quantizing only the activation/gradient side per
-//! microstep and feeding executed fallback rates back into the
-//! Algorithm 2 threshold controller. `benches/layer_step.rs` tracks
-//! the cached-vs-uncached gain.
+//! microstep (dY with unbiased stochastic rounding, dW's Xᵀ on the
+//! fallback path at the site's θ) and feeding executed fallback
+//! rates back into the Algorithm 2 threshold controller.
+//! [`ModelStep`] scales that to N layers + LM head sharing one
+//! cache, with JSON warm-state persistence so a fresh process starts
+//! at steady-state hit rate. `benches/layer_step.rs` and
+//! `benches/model_step.rs` track the cached / cold / warm-restored
+//! gains.
 //!
 //! These kernels give *measured* cost structure on this testbed (group
 //! size vs dequant overhead, fallback rate vs extra work, placement vs
@@ -62,9 +67,11 @@ pub use int8::{block_gemm, block_gemm_baseline, block_gemm_path,
                block_gemm_reference, fallback_gemm,
                fallback_gemm_baseline, fallback_gemm_path,
                fallback_gemm_reference, remap_placement, Placement};
-pub use pipeline::{synth_microbatch, CacheStats, LayerStep,
-                   LayerStepConfig, PlanCache, PlanKey, SiteOutputs,
-                   SiteReport, StepReport};
+pub use pipeline::{grad_sr_seed, layer_sr_seed, site_reference,
+                   synth_microbatch, CacheStats, LayerStep,
+                   LayerStepConfig, ModelStep, ModelStepConfig,
+                   PlanCache, PlanKey, SiteOutputs, SiteReport,
+                   StepReport, GRAD_SR_SEED};
 
 use crate::quant::{block_quant, fallback_quant, Criterion, Rounding,
                    INT8_LEVELS};

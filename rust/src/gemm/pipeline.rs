@@ -10,18 +10,46 @@
 //!   step boundary                 microstep (many per step)
 //!   ─────────────                 ─────────────────────────
 //!   PlanCache                       per site (qkv, attn_out,
-//!    key: (weight id, shape,        mlp_in, mlp_down):
+//!    key: (weight id, shape,        mlp_in, mlp_down, lm_head):
 //!         data path, backend)        quantize X (fallback, θ_site)
-//!    value: WeightPlan               quantize dY (plain int8)
-//!     = q(W) + packed panels   ──►   fwd  Y  = X·W    (cached W)
-//!       + pinned backend            bwd  dX = dY·Wᵀ  (cached Wᵀ)
-//!    built on miss, owned           bwd  dW = Xᵀ·dY  (fresh: both
-//!    across steps, LRU-evicted           operands change per call)
-//!                                   record executed fallback rate
+//!    value: WeightPlan               quantize dY (int8, stochastic
+//!     = q(W) + packed panels   ──►     rounding — unbiased grads)
+//!       + pinned backend            fwd  Y  = X·W    (cached W)
+//!    built on miss, owned           bwd  dX = dY·Wᵀ  (cached Wᵀ)
+//!    across steps, LRU-evicted      bwd  dW = Xᵀ·dY  (fresh; Xᵀ on
+//!                                       the fallback path at θ_site)
+//!                                   record executed fallback rates
 //!   RateAccumulator ──────────►   ThresholdController (Alg 2) at
 //!    per-site means               the step boundary: θ adapts from
 //!                                 real execution
 //! ```
+//!
+//! Two gradient-path rules this module pins down (both were bugs
+//! once, both are regression-tested):
+//!
+//! * **dY is stochastically rounded.** Nearest rounding makes the
+//!   quantization error of every gradient element point the same way
+//!   on every microstep — a *bias* that accumulates across an
+//!   optimizer step ("Training Transformers with 4-bit Integers"
+//!   makes unbiasedness the core correctness lever). The pipeline
+//!   draws from the per-block SR streams of `quant::block`
+//!   (thread-count-invariant) with a seed derived deterministically
+//!   from ([`LayerStepConfig::sr_seed`], microstep, site) via
+//!   [`grad_sr_seed`], so runs stay reproducible bit-for-bit.
+//! * **dW keeps X's outlier handling.** `dW = Xᵀ·dY` consumes the
+//!   same outlier-bearing activation as the forward; quantizing Xᵀ
+//!   with plain nearest INT8 silently drops the per-block fallback
+//!   exactly where the paper (and Jetfire) say it matters. Xᵀ rides
+//!   the fallback path at the site's θ — its block decisions are the
+//!   transpose of the forward's (AbsMax is symmetric under block
+//!   transposition), and the executed backward rate is reported per
+//!   site ([`SiteReport::bwd_fallback_rate`]).
+//!
+//! [`ModelStep`] scales the same loop from one layer to a whole
+//! N-layer model + LM head sharing **one** `PlanCache`, and adds
+//! warm-state persistence (calibration + cache-warming metadata as
+//! JSON) so a fresh process starts at steady-state hit rate — see
+//! its docs.
 //!
 //! What is packed **once** (cache hit = zero quantization/packing
 //! work): the weight codes, their column panels for the plan's
@@ -42,14 +70,48 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::coordinator::{RateAccumulator, ThresholdController};
+use crate::costmodel::SubstrateCalibration;
 use crate::gemm::engine::{DataPath, GemmPlan, WeightPlan};
 use crate::gemm::kernels::{self, Kernels};
-use crate::model::{layer_linears, LinearShape};
+use crate::model::{layer_linears, model_linears, LinearShape};
 use crate::quant::{block_quant_threads, fallback_quant_threads,
                    Criterion, Rounding, INT8_LEVELS};
-use crate::util::rng::Pcg64;
+use crate::util::json::{obj, Json};
+use crate::util::rng::{Pcg64, SplitMix64};
 use crate::util::threadpool::default_threads;
 use crate::util::Mat;
+
+/// Default base seed of the gradient stochastic-rounding streams
+/// (override via [`LayerStepConfig::sr_seed`] /
+/// [`ModelStepConfig::sr_seed`]).
+pub const GRAD_SR_SEED: u64 = 0xD1A5_0C57_0CA5_71C0;
+
+/// Deterministic SR seed for one gradient quantization: mixes the
+/// driver's base seed with the microstep index and the site index, so
+/// every (microstep, site) draws from an independent stream — fresh
+/// randomness each microstep (the unbiasedness argument needs
+/// independent draws) while staying bit-reproducible and, via the
+/// per-block streams underneath, thread-count-invariant.
+pub fn grad_sr_seed(base: u64, microstep: usize, site: usize) -> u64 {
+    let mut sm = SplitMix64(
+        base ^ (microstep as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ (site as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9),
+    );
+    sm.next()
+}
+
+/// Per-layer SR stream base of a [`ModelStep`]: layer `layer` of a
+/// model seeded `base` quantizes its gradients exactly like a
+/// standalone [`LayerStep`] whose `sr_seed` is this value (layer
+/// index `layers` — one past the last — is the LM head's stream).
+/// The ModelStep-vs-composed-LayerSteps bit-identity tests lean on
+/// this being a public, stable derivation.
+pub fn layer_sr_seed(base: u64, layer: usize) -> u64 {
+    let mut sm = SplitMix64(
+        base ^ (layer as u64).wrapping_mul(0x94D0_49BB_1331_11EB),
+    );
+    sm.next()
+}
 
 /// Cache key of one weight half: the caller-assigned identity of the
 /// weight *tensor*, its GEMM role (inner dim `k` × output features
@@ -69,7 +131,7 @@ use crate::util::Mat;
 /// `plan_int8` and `plan_fallback` calls — only the activation side
 /// differs), so keying on it would store byte-identical panels twice
 /// per tensor.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct PlanKey {
     /// caller-assigned identity of the weight tensor (distinct
     /// tensors MUST get distinct ids, or lookups conflate them)
@@ -103,6 +165,39 @@ impl CacheStats {
             return 0.0;
         }
         self.hits as f64 / lookups as f64
+    }
+
+    /// Counter deltas since an earlier snapshot — windowed
+    /// statistics. Lifetime counters make
+    /// [`thrashing`](CacheStats::thrashing) blind to thrash that
+    /// begins *after* a long healthy phase (the accumulated hit rate
+    /// stays high long after every new lookup starts missing), so
+    /// monitors of dynamic pressure should snapshot `stats()`
+    /// periodically and evaluate `stats().since(&snapshot)`.
+    pub fn since(&self, start: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits - start.hits,
+            misses: self.misses - start.misses,
+            insertions: self.insertions - start.insertions,
+            evictions: self.evictions - start.evictions,
+        }
+    }
+
+    /// Thrash detector: the cache is evicting about as fast as it
+    /// inserts while hits stay rare — the signature of a working set
+    /// larger than capacity, where every lookup misses, rebuilds the
+    /// plan (full weight re-quantization + packing), and evicts an
+    /// entry that will be needed again momentarily. This state is
+    /// *silent* otherwise — results stay correct, only all the
+    /// caching work is wasted — which is why [`LayerStep`] and
+    /// [`ModelStep`] additionally validate capacity against their
+    /// working set at construction. Evaluates the counters it is
+    /// called on: apply to [`since`](CacheStats::since) deltas to
+    /// detect thrash that starts after a warm phase.
+    pub fn thrashing(&self) -> bool {
+        self.misses > 0
+            && 2 * self.evictions >= self.insertions
+            && self.hit_rate() < 0.5
     }
 }
 
@@ -149,6 +244,20 @@ impl PlanCache {
 
     pub fn stats(&self) -> CacheStats {
         self.stats
+    }
+
+    /// Resident keys, sorted — the cache-warming metadata of a
+    /// warm-state file ([`ModelStep::warm_state`]).
+    pub fn keys(&self) -> Vec<PlanKey> {
+        let mut v: Vec<PlanKey> = self.map.keys().copied().collect();
+        v.sort();
+        v
+    }
+
+    /// Peek at a resident entry without touching LRU order or stats
+    /// (introspection: resident-bytes accounting, tests).
+    pub fn peek(&self, key: &PlanKey) -> Option<Arc<WeightPlan>> {
+        self.map.get(key).map(|(wp, _)| wp.clone())
     }
 
     /// Drop every cached entry (stats survive; not counted as
@@ -227,8 +336,14 @@ pub struct LayerStepConfig {
     /// data path all plans run ([`DataPath::auto_for`] by default)
     pub path: DataPath,
     /// plan-cache capacity (a layer needs 8 entries: 2 weight halves
-    /// × 4 sites; the default leaves headroom for shape churn)
+    /// × 4 sites; the default leaves headroom for shape churn).
+    /// Validated at construction: below the working set the cache
+    /// would silently thrash every microstep.
     pub cache_capacity: usize,
+    /// base seed of the gradient stochastic-rounding streams (see
+    /// [`grad_sr_seed`]); two drivers with equal seeds, weights, and
+    /// inputs produce bit-identical gradients
+    pub sr_seed: u64,
 }
 
 impl LayerStepConfig {
@@ -243,6 +358,7 @@ impl LayerStepConfig {
             threads: default_threads(),
             path: DataPath::auto_for(block),
             cache_capacity: 16,
+            sr_seed: GRAD_SR_SEED,
         }
     }
 }
@@ -264,6 +380,15 @@ pub struct SiteReport {
     pub name: &'static str,
     /// fallback rate the forward GEMM actually executed with
     pub fallback_rate: f64,
+    /// fallback rate the backward `dW` GEMM executed with (Xᵀ on the
+    /// fallback path at the same θ — block decisions are the
+    /// transpose of the forward's)
+    pub bwd_fallback_rate: f64,
+    /// weight-plan cache lookups this site hit / missed (2 lookups
+    /// per site per microstep: W and Wᵀ) — lets multi-layer drivers
+    /// report per-layer hit rates
+    pub cache_hits: u64,
+    pub cache_misses: u64,
     /// useful FLOPs of the site's three GEMMs
     pub flops: f64,
 }
@@ -277,6 +402,167 @@ pub struct StepReport {
     pub cache_misses: u64,
     /// useful FLOPs of the whole microstep (CAL-FLOPS numerator)
     pub flops: f64,
+}
+
+/// Build the cacheable weight half of one site: quantize the master
+/// weight (or its transpose, for the `dX` role) with nearest rounding
+/// and eagerly pack its column panels for `path`. Shared by the
+/// microstep miss path and the warm-state prewarm so both produce
+/// byte-identical plans.
+fn build_weight_plan(w: &Mat, transposed: bool, block: usize,
+                     threads: usize, path: DataPath,
+                     kn: &'static Kernels) -> WeightPlan {
+    let q = if transposed {
+        block_quant_threads(&w.transpose(), block, INT8_LEVELS,
+                            Rounding::Nearest, threads)
+    } else {
+        block_quant_threads(w, block, INT8_LEVELS, Rounding::Nearest,
+                            threads)
+    };
+    WeightPlan::new(Arc::new(q), path).with_kernels(kn)
+}
+
+/// One site's three GEMMs for one microstep — the shared core of
+/// [`LayerStep::microstep`] and [`ModelStep::microstep`] (factored
+/// out so multi-layer drivers are bit-identical to composed
+/// single-layer ones by construction). Returns the outputs plus the
+/// executed forward and backward fallback rates.
+///
+/// `id_base` is `2 · global site index`: the cache keys of this
+/// site's W and Wᵀ halves are `id_base` and `id_base + 1`.
+#[allow(clippy::too_many_arguments)]
+fn run_site(
+    l: &LinearShape, w: &Mat, x: &Mat, dy: &Mat, theta: f32,
+    sr: Rounding, id_base: u64, block: usize, threads: usize,
+    path: DataPath, kn: &'static Kernels, cache: &mut PlanCache,
+) -> (SiteOutputs, f64, f64) {
+    assert_eq!((x.rows, x.cols), (l.m, l.k),
+               "activation shape for site {}", l.name);
+    assert_eq!((dy.rows, dy.cols), (l.m, l.n),
+               "gradient shape for site {}", l.name);
+    // per-call half: activation (fallback at θ) + gradient (int8,
+    // stochastic rounding — nearest would bias every element of dW
+    // and dX the same way each microstep)
+    let fx = fallback_quant_threads(x, theta, block, INT8_LEVELS,
+                                    Criterion::AbsMax, threads);
+    let qdy = block_quant_threads(dy, block, INT8_LEVELS, sr, threads);
+    // cached halves: W for the forward, Wᵀ for dX
+    let wp = cache.get_or_build_with(
+        PlanKey {
+            weight_id: id_base,
+            k: l.k,
+            n: l.n,
+            block,
+            path,
+            backend: kn.name,
+        },
+        || build_weight_plan(w, false, block, threads, path, kn),
+    );
+    let wpt = cache.get_or_build_with(
+        PlanKey {
+            weight_id: id_base + 1,
+            k: l.n,
+            n: l.k,
+            block,
+            path,
+            backend: kn.name,
+        },
+        || build_weight_plan(w, true, block, threads, path, kn),
+    );
+    let y = wp.plan_fallback(&fx, &fx.u, threads).execute();
+    let dx = wpt.plan_int8(&qdy, threads).execute();
+    // dW = Xᵀ·dY: both operands change every microstep, so this plan
+    // is legitimately fresh (qdy serves as the A operand of dX above
+    // and the B operand here — one quantization, two roles). Xᵀ goes
+    // through fallback quantization at the same θ as the forward:
+    // its AbsMax block metrics are the transpose of X's, so the
+    // outlier blocks the forward protected stay protected in the
+    // weight gradient. (The codes themselves are laid out transposed,
+    // which is why the forward's quantization cannot be reused
+    // directly — only its block *decisions* carry over, and they do
+    // so automatically through the symmetric metric.)
+    let xt = x.transpose();
+    let fxt = fallback_quant_threads(&xt, theta, block, INT8_LEVELS,
+                                     Criterion::AbsMax, threads);
+    let dw = GemmPlan::new_fallback_path(&fxt, &qdy, &fxt.u, threads,
+                                         path)
+        .with_kernels(kn)
+        .execute();
+    let (fwd_rate, bwd_rate) = (fx.fallback_rate(),
+                                fxt.fallback_rate());
+    (SiteOutputs { y, dx, dw }, fwd_rate, bwd_rate)
+}
+
+/// Cache-free reference computation of one site's three GEMMs —
+/// exactly [`LayerStep`]/[`ModelStep`]'s per-site math (it runs the
+/// same private site runner against a throwaway cache). The
+/// composition checks in `tests/model_step_prop.rs` and
+/// `benches/model_step.rs` use it as the LM-head reference when
+/// comparing a [`ModelStep`] against composed per-layer drivers; the
+/// *independence* of the underlying math is pinned elsewhere (the
+/// direct-engine and exact-i64-oracle tests), so sharing one body
+/// here is deduplication, not circular testing.
+#[allow(clippy::too_many_arguments)]
+pub fn site_reference(
+    l: &LinearShape, w: &Mat, x: &Mat, dy: &Mat, theta: f32,
+    sr: Rounding, block: usize, threads: usize, path: DataPath,
+    kn: &'static Kernels,
+) -> SiteOutputs {
+    let mut cache = PlanCache::new(2);
+    run_site(l, w, x, dy, theta, sr, 0, block, threads, path, kn,
+             &mut cache)
+        .0
+}
+
+/// Shared microstep core of [`LayerStep`] and [`ModelStep`]: run
+/// every site through [`run_site`] with its θ and gradient rounding
+/// (`weight_id = 2·site + transposed`, so shape-identical sites can
+/// never serve each other's weights), assemble the per-site and
+/// per-microstep accounting, and record the executed forward rates
+/// into the accumulator. One body for both drivers is what makes
+/// "ModelStep ≡ composed LayerSteps" hold by construction — only the
+/// per-site `Rounding` derivation differs between the callers.
+#[allow(clippy::too_many_arguments)]
+fn drive_microstep(
+    sites: &[LinearShape], weights: &[Mat], thresholds: &[f32],
+    rounds: &[Rounding], acts: &[Mat], grads: &[Mat], block: usize,
+    threads: usize, path: DataPath, kn: &'static Kernels,
+    cache: &mut PlanCache, rates: &mut RateAccumulator,
+) -> (Vec<SiteOutputs>, StepReport) {
+    assert_eq!(acts.len(), sites.len(), "one act per site");
+    assert_eq!(grads.len(), sites.len(), "one grad per site");
+    let start = cache.stats();
+    let mut outs = Vec::with_capacity(sites.len());
+    let mut site_reports = Vec::with_capacity(sites.len());
+    let mut executed = vec![0.0f64; sites.len()];
+    for (i, l) in sites.iter().enumerate() {
+        let s0 = cache.stats();
+        let (out, fwd_rate, bwd_rate) = run_site(
+            l, &weights[i], &acts[i], &grads[i], thresholds[i],
+            rounds[i], 2 * i as u64, block, threads, path, kn, cache,
+        );
+        let s1 = cache.stats();
+        executed[i] = fwd_rate;
+        outs.push(out);
+        site_reports.push(SiteReport {
+            name: l.name,
+            fallback_rate: fwd_rate,
+            bwd_fallback_rate: bwd_rate,
+            cache_hits: s1.hits - s0.hits,
+            cache_misses: s1.misses - s0.misses,
+            flops: l.microstep_flops(),
+        });
+    }
+    rates.record(&executed);
+    let end = cache.stats();
+    let flops = site_reports.iter().map(|s| s.flops).sum();
+    let report = StepReport {
+        sites: site_reports,
+        cache_hits: end.hits - start.hits,
+        cache_misses: end.misses - start.misses,
+        flops,
+    };
+    (outs, report)
 }
 
 /// Drives the four linear sites of one transformer layer
@@ -305,9 +591,24 @@ pub struct LayerStep {
 impl LayerStep {
     /// `weights[i]` must be the (k × n) matrix of site `i` in
     /// [`layer_linears`] order (qkv, attn_out, mlp_in, mlp_down).
+    ///
+    /// Panics when `cfg.cache_capacity` is below the layer's working
+    /// set of `2 × sites` weight halves: an undersized cache would
+    /// not fail — it would silently thrash, re-quantizing and
+    /// repacking every weight every microstep with a 0% hit rate
+    /// (see [`CacheStats::thrashing`]).
     pub fn new(cfg: LayerStepConfig, weights: Vec<Mat>) -> LayerStep {
         let sites =
             layer_linears(cfg.d_model, cfg.d_ff, cfg.glu, cfg.tokens);
+        let working_set = 2 * sites.len();
+        assert!(
+            cfg.cache_capacity >= working_set,
+            "plan-cache capacity {} is below the layer's working set \
+             of {working_set} (2 weight halves x {} sites): every \
+             microstep would silently thrash",
+            cfg.cache_capacity,
+            sites.len()
+        );
         assert_eq!(weights.len(), sites.len(), "one weight per site");
         for (w, l) in weights.iter().zip(&sites) {
             assert_eq!((w.rows, w.cols), (l.k, l.n),
@@ -393,118 +694,37 @@ impl LayerStep {
         self.kernels.name
     }
 
+    /// Pin every plan this driver builds to an explicit microkernel
+    /// backend (tests, per-backend benches). Call before the first
+    /// microstep: cached entries are keyed by backend, so re-pinning
+    /// later makes every site miss once and rebuild.
+    pub fn with_kernels(mut self, k: &'static Kernels) -> LayerStep {
+        self.kernels = k;
+        self
+    }
+
     /// Run one microstep: for every site, quantize the activation
     /// (fallback, at the site's current θ) and the output gradient
-    /// (plain int8 — §5.1: dY is not fallback-quantized), then run
-    /// fwd / dX / dW through the engine. Weight halves come from the
+    /// (int8 with per-block stochastic rounding — §5.1: dY is not
+    /// fallback-quantized, and nearest rounding would bias it), then
+    /// run fwd / dX / dW through the engine (`dW`'s Xᵀ operand rides
+    /// the fallback path at the same θ). Weight halves come from the
     /// plan cache; `acts[i]` is (tokens × k), `grads[i]` is
     /// (tokens × n) per site `i`.
     pub fn microstep(&mut self, acts: &[Mat],
                      grads: &[Mat]) -> (Vec<SiteOutputs>, StepReport) {
-        assert_eq!(acts.len(), self.sites.len(), "one act per site");
-        assert_eq!(grads.len(), self.sites.len(), "one grad per site");
-        let (threads, block, path) =
-            (self.cfg.threads, self.cfg.block, self.cfg.path);
-        let kn = self.kernels;
-        let hits0 = self.cache.stats().hits;
-        let miss0 = self.cache.stats().misses;
-        let sites = &self.sites;
-        let weights = &self.weights;
-        let cache = &mut self.cache;
-        let mut outs = Vec::with_capacity(sites.len());
-        let mut site_reports = Vec::with_capacity(sites.len());
-        let mut rates = vec![0.0f64; sites.len()];
-        for (i, l) in sites.iter().enumerate() {
-            let x = &acts[i];
-            let dy = &grads[i];
-            assert_eq!((x.rows, x.cols), (l.m, l.k),
-                       "activation shape for site {}", l.name);
-            assert_eq!((dy.rows, dy.cols), (l.m, l.n),
-                       "gradient shape for site {}", l.name);
-            // per-call half: activation (fallback) + gradient (int8)
-            let theta = self.controller.thresholds[i];
-            let fx = fallback_quant_threads(x, theta, block,
-                                            INT8_LEVELS,
-                                            Criterion::AbsMax,
-                                            threads);
-            let qdy = block_quant_threads(dy, block, INT8_LEVELS,
-                                          Rounding::Nearest, threads);
-            rates[i] = fx.fallback_rate();
-            // cached halves: W for the forward, Wᵀ for dX.
-            // weight_id = 2·site + transposed: distinct per tensor,
-            // so shape-identical sites can never serve each other's
-            // weights.
-            let wp = cache.get_or_build_with(
-                PlanKey {
-                    weight_id: 2 * i as u64,
-                    k: l.k,
-                    n: l.n,
-                    block,
-                    path,
-                    backend: kn.name,
-                },
-                || {
-                    WeightPlan::new(
-                        Arc::new(block_quant_threads(
-                            &weights[i], block, INT8_LEVELS,
-                            Rounding::Nearest, threads,
-                        )),
-                        path,
-                    )
-                    .with_kernels(kn)
-                },
-            );
-            let wpt = cache.get_or_build_with(
-                PlanKey {
-                    weight_id: 2 * i as u64 + 1,
-                    k: l.n,
-                    n: l.k,
-                    block,
-                    path,
-                    backend: kn.name,
-                },
-                || {
-                    WeightPlan::new(
-                        Arc::new(block_quant_threads(
-                            &weights[i].transpose(), block,
-                            INT8_LEVELS, Rounding::Nearest, threads,
-                        )),
-                        path,
-                    )
-                    .with_kernels(kn)
-                },
-            );
-            let y = wp.plan_fallback(&fx, &fx.u, threads).execute();
-            let dx = wpt.plan_int8(&qdy, threads).execute();
-            // dW = Xᵀ·dY: both operands change every microstep, so
-            // this plan is legitimately fresh (qdy serves as the B
-            // operand here and as the A operand of dX above — one
-            // quantization, two roles).
-            let qxt = block_quant_threads(&x.transpose(), block,
-                                          INT8_LEVELS,
-                                          Rounding::Nearest, threads);
-            let dw =
-                GemmPlan::new_int8_path(&qxt, &qdy, threads, path)
-                    .with_kernels(kn)
-                    .execute();
-            outs.push(SiteOutputs { y, dx, dw });
-            site_reports.push(SiteReport {
-                name: l.name,
-                fallback_rate: rates[i],
-                flops: l.microstep_flops(),
-            });
-        }
-        self.rates.record(&rates);
+        let rounds: Vec<Rounding> = (0..self.sites.len())
+            .map(|i| Rounding::Stochastic(grad_sr_seed(
+                self.cfg.sr_seed, self.microsteps, i)))
+            .collect();
+        let result = drive_microstep(
+            &self.sites, &self.weights, &self.controller.thresholds,
+            &rounds, acts, grads, self.cfg.block, self.cfg.threads,
+            self.cfg.path, self.kernels, &mut self.cache,
+            &mut self.rates,
+        );
         self.microsteps += 1;
-        let stats = self.cache.stats();
-        let flops = site_reports.iter().map(|s| s.flops).sum();
-        let report = StepReport {
-            sites: site_reports,
-            cache_hits: stats.hits - hits0,
-            cache_misses: stats.misses - miss0,
-            flops,
-        };
-        (outs, report)
+        result
     }
 
     /// Step boundary (Algorithm 2): fold the microsteps' mean
@@ -513,6 +733,523 @@ impl LayerStep {
     /// applied (empty when no microstep ran since the last call).
     pub fn end_step(&mut self) -> Vec<f32> {
         self.rates.flush_into(&mut self.controller)
+    }
+}
+
+/// Configuration of a [`ModelStep`] driver.
+#[derive(Debug, Clone)]
+pub struct ModelStepConfig {
+    /// transformer layers (4 linear sites each)
+    pub layers: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    /// GLU MLP (doubles `mlp_in`'s output features)
+    pub glu: bool,
+    /// LM-head output features — the (d_model × vocab) head weight is
+    /// the multi-shape pressure case of the shared plan cache
+    pub vocab: usize,
+    /// tokens per microstep (rows of every activation)
+    pub tokens: usize,
+    /// quantization block size
+    pub block: usize,
+    pub threads: usize,
+    /// data path all plans run ([`DataPath::auto_for`] by default)
+    pub path: DataPath,
+    /// shared plan-cache capacity; validated ≥
+    /// [`working_set`](ModelStepConfig::working_set) at construction
+    /// (defaults to exactly that)
+    pub cache_capacity: usize,
+    /// base seed of the gradient SR streams; layer `l` draws from
+    /// [`layer_sr_seed`]`(sr_seed, l)` so each layer matches a
+    /// standalone [`LayerStep`] seeded that way
+    pub sr_seed: u64,
+}
+
+impl ModelStepConfig {
+    pub fn new(layers: usize, d_model: usize, d_ff: usize,
+               vocab: usize, tokens: usize,
+               block: usize) -> ModelStepConfig {
+        assert!(layers >= 1, "at least one transformer layer");
+        let mut cfg = ModelStepConfig {
+            layers,
+            d_model,
+            d_ff,
+            glu: true,
+            vocab,
+            tokens,
+            block,
+            threads: default_threads(),
+            path: DataPath::auto_for(block),
+            cache_capacity: 0,
+            sr_seed: GRAD_SR_SEED,
+        };
+        cfg.cache_capacity = cfg.working_set();
+        cfg
+    }
+
+    /// Linear sites of the whole model: 4 per layer + the LM head.
+    pub fn n_sites(&self) -> usize {
+        4 * self.layers + 1
+    }
+
+    /// Plan-cache working set: 2 weight halves (W, Wᵀ) per site.
+    pub fn working_set(&self) -> usize {
+        2 * self.n_sites()
+    }
+
+    /// The [`LayerStepConfig`] a standalone driver of layer `layer`
+    /// would need to reproduce this model's behavior bit-for-bit
+    /// (same shapes, path, threads, and — through [`layer_sr_seed`]
+    /// — the same gradient SR streams). The composed-LayerSteps
+    /// bit-identity tests and bench build their references with this.
+    pub fn layer_config(&self, layer: usize) -> LayerStepConfig {
+        assert!(layer < self.layers, "layer {layer} of {}", self.layers);
+        let mut c = LayerStepConfig::new(self.d_model, self.d_ff,
+                                         self.tokens, self.block);
+        c.glu = self.glu;
+        c.threads = self.threads;
+        c.path = self.path;
+        c.sr_seed = layer_sr_seed(self.sr_seed, layer);
+        c
+    }
+}
+
+/// Version tag of the warm-state JSON format.
+const WARM_STATE_VERSION: f64 = 1.0;
+const WARM_STATE_KIND: &str = "dbfq_model_step_warm_state";
+
+/// Drives every linear site of an N-layer transformer + LM head
+/// through the fallback GEMM engine with **one** shared [`PlanCache`]
+/// — the whole-model scaling of [`LayerStep`] that the paper's 1.57x
+/// end-to-end number implicitly assumes. Weight ids are namespaced by
+/// global site index (`2·site + transposed`), so layers never
+/// conflate even when shape-identical, and the (d_model × vocab)
+/// LM-head plans exercise real multi-shape pressure in the same
+/// cache. One [`ThresholdController`] holds a θ per site (4·layers +
+/// 1) and one [`RateAccumulator`] per model step feeds it executed
+/// rates at [`end_step`](ModelStep::end_step).
+///
+/// Per site the microstep math is [`LayerStep`]'s, by construction
+/// (both call the same private site runner): layer `l` of a
+/// `ModelStep` is bit-identical to a standalone `LayerStep` built
+/// from [`ModelStepConfig::layer_config`]`(l)` with the same weights
+/// and thresholds — property-tested per backend and thread count.
+///
+/// ## Warm state
+///
+/// [`warm_state`](ModelStep::warm_state) serializes what a fresh
+/// process needs to *start* at steady state instead of re-walking the
+/// cold transient: the adapted θ vector (full Algorithm 2 controller
+/// state), the microstep counter (so gradient SR streams continue
+/// rather than repeat), the pinned backend, the resident plan keys,
+/// and optionally a measured [`SubstrateCalibration`]. Restoring with
+/// [`from_warm_state`](ModelStep::from_warm_state) re-quantizes the
+/// weight halves from the passed master weights (codes are *not*
+/// serialized — they are derived data) and prewarms the cache, so the
+/// first microstep of the new process already hits on every lookup
+/// and its outputs are bit-identical to the ones the saved process
+/// would have produced next.
+pub struct ModelStep {
+    cfg: ModelStepConfig,
+    sites: Vec<LinearShape>,
+    /// master weights, one (k × n) matrix per global site
+    weights: Vec<Mat>,
+    cache: PlanCache,
+    controller: ThresholdController,
+    rates: RateAccumulator,
+    kernels: &'static Kernels,
+    microsteps: usize,
+}
+
+impl ModelStep {
+    /// `weights[s]` must be the (k × n) matrix of global site `s` in
+    /// [`model_linears`] order (layer 0's qkv…mlp_down, …, LM head
+    /// last). Panics when `cfg.cache_capacity` is below the working
+    /// set (see [`LayerStep::new`] — same silent-thrash hazard, 4
+    /// layers' worth bigger).
+    pub fn new(cfg: ModelStepConfig, weights: Vec<Mat>) -> ModelStep {
+        let sites = model_linears(cfg.layers, cfg.d_model, cfg.d_ff,
+                                  cfg.glu, cfg.vocab, cfg.tokens);
+        let working_set = 2 * sites.len();
+        assert!(
+            cfg.cache_capacity >= working_set,
+            "plan-cache capacity {} is below the model's working set \
+             of {working_set} (2 weight halves x {} sites across {} \
+             layers + LM head): every microstep would silently thrash",
+            cfg.cache_capacity,
+            sites.len(),
+            cfg.layers
+        );
+        assert_eq!(weights.len(), sites.len(), "one weight per site");
+        for (s, (w, l)) in weights.iter().zip(&sites).enumerate() {
+            assert_eq!((w.rows, w.cols), (l.k, l.n),
+                       "weight shape for site {s} ({})", l.name);
+        }
+        let controller =
+            ThresholdController::paper_default(sites.len());
+        let rates = RateAccumulator::new(sites.len());
+        let cache = PlanCache::new(cfg.cache_capacity);
+        ModelStep {
+            sites,
+            weights,
+            cache,
+            controller,
+            rates,
+            kernels: kernels::select(),
+            microsteps: 0,
+            cfg,
+        }
+    }
+
+    /// Synthetic Gaussian weights (benches, tests).
+    pub fn with_random_weights(cfg: ModelStepConfig,
+                               seed: u64) -> ModelStep {
+        let sites = model_linears(cfg.layers, cfg.d_model, cfg.d_ff,
+                                  cfg.glu, cfg.vocab, cfg.tokens);
+        let mut rng = Pcg64::new(seed);
+        let weights = sites
+            .iter()
+            .map(|l| Mat::randn(l.k, l.n, 0.05, &mut rng))
+            .collect();
+        ModelStep::new(cfg, weights)
+    }
+
+    /// Pin every plan this driver builds to an explicit microkernel
+    /// backend (tests, per-backend benches). Call before the first
+    /// microstep — cached entries are keyed by backend.
+    pub fn with_kernels(mut self, k: &'static Kernels) -> ModelStep {
+        self.kernels = k;
+        self
+    }
+
+    /// Global site list (layer-major, LM head last).
+    pub fn sites(&self) -> &[LinearShape] {
+        &self.sites
+    }
+
+    pub fn config(&self) -> &ModelStepConfig {
+        &self.cfg
+    }
+
+    pub fn cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    /// Drop every cached weight plan (the bench's cold baseline).
+    pub fn clear_cache(&mut self) {
+        self.cache.clear();
+    }
+
+    pub fn controller(&self) -> &ThresholdController {
+        &self.controller
+    }
+
+    pub fn controller_mut(&mut self) -> &mut ThresholdController {
+        &mut self.controller
+    }
+
+    /// Microsteps run since construction — or, after a warm-state
+    /// restore, since the *saved process's* construction: the counter
+    /// rides the warm state so gradient SR streams continue instead
+    /// of repeating.
+    pub fn microsteps(&self) -> usize {
+        self.microsteps
+    }
+
+    /// Backend every plan of this driver is pinned to.
+    pub fn kernel_backend(&self) -> &'static str {
+        self.kernels.name
+    }
+
+    /// Replace global site `site`'s master weight (optimizer-update
+    /// path) and invalidate its two cached halves; every other site
+    /// keeps hitting.
+    pub fn set_weight(&mut self, site: usize, w: Mat) {
+        let l = &self.sites[site];
+        assert_eq!((w.rows, w.cols), (l.k, l.n),
+                   "weight shape for site {}", l.name);
+        self.weights[site] = w;
+        self.cache.invalidate_weight(2 * site as u64);
+        self.cache.invalidate_weight(2 * site as u64 + 1);
+    }
+
+    /// The gradient SR rounding of global site `s` at microstep `t`:
+    /// layer-namespaced so layer `l` matches a standalone
+    /// [`LayerStep`] seeded [`layer_sr_seed`]`(sr_seed, l)` (the LM
+    /// head is "layer" `layers`, site 0 of its stream).
+    fn site_rounding(&self, s: usize, t: usize) -> Rounding {
+        let (layer, local) = if s < 4 * self.cfg.layers {
+            (s / 4, s % 4)
+        } else {
+            (self.cfg.layers, 0)
+        };
+        Rounding::Stochastic(grad_sr_seed(
+            layer_sr_seed(self.cfg.sr_seed, layer), t, local))
+    }
+
+    /// Run one microstep over every site of the model — same per-site
+    /// math as [`LayerStep::microstep`], one shared cache. `acts[s]`
+    /// is (tokens × k), `grads[s]` is (tokens × n) per global site
+    /// `s`.
+    pub fn microstep(&mut self, acts: &[Mat],
+                     grads: &[Mat]) -> (Vec<SiteOutputs>, StepReport) {
+        let rounds: Vec<Rounding> = (0..self.sites.len())
+            .map(|s| self.site_rounding(s, self.microsteps))
+            .collect();
+        let result = drive_microstep(
+            &self.sites, &self.weights, &self.controller.thresholds,
+            &rounds, acts, grads, self.cfg.block, self.cfg.threads,
+            self.cfg.path, self.kernels, &mut self.cache,
+            &mut self.rates,
+        );
+        self.microsteps += 1;
+        result
+    }
+
+    /// Step boundary (Algorithm 2): fold the microsteps' mean
+    /// executed per-site fallback rates into the threshold controller
+    /// and reset the accumulator — one update per model step across
+    /// all 4·layers + 1 sites. Returns the applied rates (empty when
+    /// no microstep ran since the last call).
+    pub fn end_step(&mut self) -> Vec<f32> {
+        self.rates.flush_into(&mut self.controller)
+    }
+
+    /// Serialize the warm state: config fingerprint, pinned backend,
+    /// microstep counter, full controller state, resident plan keys,
+    /// and (optionally) a measured calibration. Master weights are
+    /// *not* serialized — the quantized halves are derived data that
+    /// [`from_warm_state`](ModelStep::from_warm_state) rebuilds from
+    /// the weights the caller passes in.
+    pub fn warm_state(&self,
+                      cal: Option<&SubstrateCalibration>) -> Json {
+        let keys = Json::Arr(
+            self.cache
+                .keys()
+                .iter()
+                .map(|k| obj(vec![
+                    ("weight_id", Json::Num(k.weight_id as f64)),
+                    ("k", Json::Num(k.k as f64)),
+                    ("n", Json::Num(k.n as f64)),
+                    ("block", Json::Num(k.block as f64)),
+                    ("path", Json::Str(k.path.tag().into())),
+                    ("backend", Json::Str(k.backend.into())),
+                ]))
+                .collect(),
+        );
+        obj(vec![
+            ("kind", Json::Str(WARM_STATE_KIND.into())),
+            ("version", Json::Num(WARM_STATE_VERSION)),
+            ("config", obj(vec![
+                ("layers", Json::Num(self.cfg.layers as f64)),
+                ("d_model", Json::Num(self.cfg.d_model as f64)),
+                ("d_ff", Json::Num(self.cfg.d_ff as f64)),
+                ("glu", Json::Bool(self.cfg.glu)),
+                ("vocab", Json::Num(self.cfg.vocab as f64)),
+                ("tokens", Json::Num(self.cfg.tokens as f64)),
+                ("block", Json::Num(self.cfg.block as f64)),
+                ("path", Json::Str(self.cfg.path.tag().into())),
+                // u64 exceeds the exact-f64 integer range: hex string
+                ("sr_seed",
+                 Json::Str(format!("{:016x}", self.cfg.sr_seed))),
+            ])),
+            ("backend", Json::Str(self.kernels.name.into())),
+            ("microsteps", Json::Num(self.microsteps as f64)),
+            ("controller", self.controller.to_json()),
+            ("plan_keys", keys),
+            ("calibration", match cal {
+                Some(c) => c.to_json(),
+                None => Json::Null,
+            }),
+        ])
+    }
+
+    /// [`warm_state`](ModelStep::warm_state) straight to a file.
+    pub fn save_warm_state(&self, path: &str,
+                           cal: Option<&SubstrateCalibration>)
+                           -> Result<(), String> {
+        self.warm_state(cal).to_file(path)
+    }
+
+    /// Rebuild a driver from a warm-state JSON and the master
+    /// weights: validates the config fingerprint (restoring against
+    /// a different model is an error, not silent corruption),
+    /// restores the controller (θ vector + Algorithm 2 counters) and
+    /// the microstep counter, re-pins the recorded backend when this
+    /// host has it (a `PALLAS_KERNEL` override always wins, and a
+    /// host without the backend falls back to normal selection),
+    /// and **prewarms** the cache — both weight halves of every site
+    /// are quantized and packed up front, so the first microstep
+    /// hits on all `2 × sites` lookups and is bit-identical to the
+    /// microstep the saved process would have run next. Returns the
+    /// embedded calibration alongside, when one was saved.
+    pub fn from_warm_state(cfg: ModelStepConfig, weights: Vec<Mat>,
+                           state: &Json)
+                           -> Result<(ModelStep,
+                                      Option<SubstrateCalibration>),
+                                     String> {
+        if state.get("kind").and_then(|v| v.as_str())
+            != Some(WARM_STATE_KIND)
+        {
+            return Err("warm state: wrong or missing 'kind'".into());
+        }
+        if state.get("version").and_then(|v| v.as_f64())
+            != Some(WARM_STATE_VERSION)
+        {
+            return Err("warm state: unsupported version".into());
+        }
+        let sc = state
+            .get("config")
+            .ok_or("warm state: missing 'config'")?;
+        let field = |k: &str| {
+            sc.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| format!("warm state: missing '{k}'"))
+        };
+        let saved_seed = sc
+            .get("sr_seed")
+            .and_then(|v| v.as_str())
+            .and_then(|s| u64::from_str_radix(s, 16).ok())
+            .ok_or("warm state: missing 'sr_seed'")?;
+        let saved_path = sc
+            .get("path")
+            .and_then(|v| v.as_str())
+            .and_then(DataPath::from_tag)
+            .ok_or("warm state: missing 'path'")?;
+        let fingerprint_ok = field("layers")? == cfg.layers
+            && field("d_model")? == cfg.d_model
+            && field("d_ff")? == cfg.d_ff
+            && sc.get("glu").and_then(|v| v.as_bool())
+                == Some(cfg.glu)
+            && field("vocab")? == cfg.vocab
+            && field("tokens")? == cfg.tokens
+            && field("block")? == cfg.block
+            && saved_path == cfg.path
+            && saved_seed == cfg.sr_seed;
+        if !fingerprint_ok {
+            return Err(format!(
+                "warm state: config fingerprint mismatch (saved for \
+                 a different model than layers={} d_model={} d_ff={} \
+                 glu={} vocab={} tokens={} block={} path={} \
+                 sr_seed={:016x})",
+                cfg.layers, cfg.d_model, cfg.d_ff, cfg.glu, cfg.vocab,
+                cfg.tokens, cfg.block, cfg.path.tag(), cfg.sr_seed
+            ));
+        }
+        let controller = ThresholdController::from_json(
+            state
+                .get("controller")
+                .ok_or("warm state: missing 'controller'")?,
+        )?;
+        let microsteps = state
+            .get("microsteps")
+            .and_then(|v| v.as_usize())
+            .ok_or("warm state: missing 'microsteps'")?;
+        let mut ms = ModelStep::new(cfg, weights);
+        if controller.thresholds.len() != ms.sites.len() {
+            return Err(format!(
+                "warm state: {} thresholds for {} sites",
+                controller.thresholds.len(),
+                ms.sites.len()
+            ));
+        }
+        ms.controller = controller;
+        ms.microsteps = microsteps;
+        // Re-pin the recorded backend when this host has it — unless
+        // a PALLAS_KERNEL override is in force, which always wins: a
+        // restore that silently out-pinned the override would
+        // invalidate scalar-forced CI legs and calibration runs (the
+        // exact hazard `kernels::parse_override` hard-errors to
+        // prevent). All backends are bit-identical, so this only
+        // affects speed, never results.
+        if kernels::env_override().is_none() {
+            if let Some(k) = state
+                .get("backend")
+                .and_then(|v| v.as_str())
+                .and_then(kernels::by_name)
+            {
+                ms.kernels = k;
+            }
+        }
+        // Validate the recorded keys against this model's expected
+        // working set (backend is advisory — a cross-host restore
+        // legitimately re-pins), then prewarm every site.
+        if let Some(keys) = state.get("plan_keys").and_then(|v| v.as_arr())
+        {
+            for kj in keys {
+                let id = kj
+                    .get("weight_id")
+                    .and_then(|v| v.as_usize())
+                    .ok_or("warm state: bad plan key")?;
+                let site = id / 2;
+                if site >= ms.sites.len() {
+                    return Err(format!(
+                        "warm state: plan key for unknown site {site}"
+                    ));
+                }
+                let l = &ms.sites[site];
+                let (ek, en) = if id % 2 == 0 {
+                    (l.k, l.n)
+                } else {
+                    (l.n, l.k)
+                };
+                let (k, n, block) = (
+                    kj.get("k").and_then(|v| v.as_usize()),
+                    kj.get("n").and_then(|v| v.as_usize()),
+                    kj.get("block").and_then(|v| v.as_usize()),
+                );
+                if (k, n, block)
+                    != (Some(ek), Some(en), Some(ms.cfg.block))
+                {
+                    return Err(format!(
+                        "warm state: plan key shape mismatch for \
+                         site {site} ({})",
+                        l.name
+                    ));
+                }
+            }
+        }
+        // Parse the embedded calibration before the prewarm: every
+        // validation fails fast, and the expensive full-model
+        // quantization/packing only runs once the whole file is known
+        // good.
+        let cal = match state.get("calibration") {
+            None | Some(Json::Null) => None,
+            Some(j) => Some(SubstrateCalibration::from_json(j)?),
+        };
+        ms.prewarm();
+        Ok((ms, cal))
+    }
+
+    /// Quantize and pack both weight halves of every site into the
+    /// cache (misses now so the microsteps only hit).
+    fn prewarm(&mut self) {
+        let (threads, block, path) =
+            (self.cfg.threads, self.cfg.block, self.cfg.path);
+        let kn = self.kernels;
+        let weights = &self.weights;
+        let cache = &mut self.cache;
+        for (s, l) in self.sites.iter().enumerate() {
+            for transposed in [false, true] {
+                let (k, n) = if transposed {
+                    (l.n, l.k)
+                } else {
+                    (l.k, l.n)
+                };
+                cache.get_or_build_with(
+                    PlanKey {
+                        weight_id: 2 * s as u64 + transposed as u64,
+                        k,
+                        n,
+                        block,
+                        path,
+                        backend: kn.name,
+                    },
+                    || build_weight_plan(&weights[s], transposed,
+                                         block, threads, path, kn),
+                );
+            }
+        }
     }
 }
 
@@ -747,6 +1484,7 @@ mod tests {
         let mut ls = small_step(1);
         ls.controller_mut().thresholds.fill(20.0);
         let (acts, grads) = synth_microbatch(ls.sites(), 9, 200.0);
+        let sr_base = ls.config().sr_seed;
         let (outs, rep) = ls.microstep(&acts, &grads);
         assert_eq!(outs.len(), 4);
         assert!(rep.flops > 0.0);
@@ -759,15 +1497,18 @@ mod tests {
                 block_quant(w, 16, INT8_LEVELS, Rounding::Nearest);
             let y = fallback_gemm_path(&fx, &qw, &fx.u, 1, path);
             assert_eq!(outs[i].y.data, y.data, "fwd {}", l.name);
+            // dY rides the (microstep, site)-seeded SR stream
             let qdy = block_quant(&grads[i], 16, INT8_LEVELS,
-                                  Rounding::Nearest);
+                                  Rounding::Stochastic(grad_sr_seed(
+                                      sr_base, 0, i)));
             let qwt = block_quant(&w.transpose(), 16, INT8_LEVELS,
                                   Rounding::Nearest);
             let dx = block_gemm_path(&qdy, &qwt, 1, path);
             assert_eq!(outs[i].dx.data, dx.data, "dX {}", l.name);
-            let qxt = block_quant(&acts[i].transpose(), 16,
-                                  INT8_LEVELS, Rounding::Nearest);
-            let dw = block_gemm_path(&qxt, &qdy, 1, path);
+            // dW's Xᵀ operand rides the fallback path at the same θ
+            let fxt = fallback_quant(&acts[i].transpose(), 20.0, 16,
+                                     INT8_LEVELS, Criterion::AbsMax);
+            let dw = fallback_gemm_path(&fxt, &qdy, &fxt.u, 1, path);
             assert_eq!(outs[i].dw.data, dw.data, "dW {}", l.name);
             assert_eq!((outs[i].y.rows, outs[i].y.cols), (l.m, l.n));
             assert_eq!((outs[i].dx.rows, outs[i].dx.cols),
@@ -824,6 +1565,345 @@ mod tests {
         let before = ls.controller().thresholds.clone();
         assert!(ls.end_step().is_empty());
         assert_eq!(ls.controller().thresholds, before);
+    }
+
+    #[test]
+    fn undersized_cache_thrashes_with_zero_hits() {
+        // Pins the previously-silent failure mode: a cache smaller
+        // than the working set keeps producing correct results while
+        // every single lookup misses — the only signal is the stats.
+        let mut cache = PlanCache::new(2);
+        let keys: Vec<PlanKey> =
+            (0..4).map(|i| key(i, 16, 16, 16)).collect();
+        for _round in 0..3 {
+            for k in &keys {
+                cache.get_or_build_with(*k, || {
+                    weight_plan(16, 16, 16, k.weight_id)
+                });
+            }
+        }
+        let s = cache.stats();
+        assert_eq!(s.hits, 0, "working set 4 > capacity 2: no lookup \
+                   can ever hit");
+        assert_eq!(s.misses, 12);
+        assert_eq!(s.insertions, 12);
+        assert_eq!(s.evictions, 10);
+        assert!(s.thrashing(), "stats {s:?} must flag thrash");
+        // healthy control: capacity that fits the working set
+        let mut ok = PlanCache::new(4);
+        for _round in 0..3 {
+            for k in &keys {
+                ok.get_or_build_with(*k, || {
+                    weight_plan(16, 16, 16, k.weight_id)
+                });
+            }
+        }
+        let s = ok.stats();
+        assert_eq!(s.hits, 8);
+        assert_eq!(s.evictions, 0);
+        assert!(!s.thrashing(), "stats {s:?} must not flag thrash");
+    }
+
+    #[test]
+    fn windowed_stats_catch_thrash_after_a_warm_phase() {
+        // Lifetime counters hide thrash that starts late: after a
+        // long healthy phase the accumulated hit rate stays high
+        // even once every new lookup misses. `since` deltas are the
+        // windowed remedy.
+        let mut cache = PlanCache::new(4);
+        let warm: Vec<PlanKey> =
+            (0..4).map(|i| key(i, 16, 16, 16)).collect();
+        for _round in 0..10 {
+            for k in &warm {
+                cache.get_or_build_with(*k, || {
+                    weight_plan(16, 16, 16, k.weight_id)
+                });
+            }
+        }
+        let snapshot = cache.stats();
+        assert!(!snapshot.thrashing());
+        // the working set changes and outgrows capacity (e.g. new
+        // shapes → new weight ids): cyclic access over 6 fresh keys
+        // on a 4-entry LRU misses every time
+        let grown: Vec<PlanKey> =
+            (10..16).map(|i| key(i, 16, 16, 16)).collect();
+        for _round in 0..3 {
+            for k in &grown {
+                cache.get_or_build_with(*k, || {
+                    weight_plan(16, 16, 16, k.weight_id)
+                });
+            }
+        }
+        let lifetime = cache.stats();
+        assert!(!lifetime.thrashing(),
+                "lifetime counters are blind to late-onset thrash \
+                 ({lifetime:?})");
+        let window = lifetime.since(&snapshot);
+        assert_eq!(window.hits, 0);
+        assert_eq!(window.misses, 18);
+        assert!(window.thrashing(),
+                "windowed stats must flag it ({window:?})");
+    }
+
+    #[test]
+    #[should_panic(expected = "below the layer's working set")]
+    fn layer_step_rejects_undersized_cache() {
+        let mut cfg = LayerStepConfig::new(32, 48, 24, 16);
+        cfg.cache_capacity = 7; // working set is 8
+        LayerStep::with_random_weights(cfg, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "below the model's working set")]
+    fn model_step_rejects_undersized_cache() {
+        let mut cfg = ModelStepConfig::new(2, 32, 48, 64, 16, 16);
+        cfg.cache_capacity = cfg.working_set() - 1;
+        ModelStep::with_random_weights(cfg, 1);
+    }
+
+    #[test]
+    fn grad_quantization_is_unbiased_under_sr_biased_under_nearest() {
+        // dY designed so nearest rounding is maximally biased: one
+        // 127.0 anchor pins the block scale to exactly 1.0, every
+        // other entry sits at 0.3 — nearest sends them all to 0
+        // (per-entry bias −0.3), stochastic rounding draws 1 with
+        // probability 0.3 (unbiased).
+        let mut dy = Mat::zeros(16, 16);
+        dy.data.fill(0.3);
+        dy.data[0] = 127.0;
+        let qn = block_quant(&dy, 16, INT8_LEVELS, Rounding::Nearest);
+        assert_eq!(qn.scale[0], 1.0);
+        let dn = qn.dequant();
+        let mean_err_nearest = dy
+            .data
+            .iter()
+            .zip(&dn.data)
+            .map(|(x, q)| (q - x) as f64)
+            .sum::<f64>()
+            / dy.data.len() as f64;
+        assert!(mean_err_nearest.abs() > 0.25,
+                "nearest must be visibly biased here, got \
+                 {mean_err_nearest}");
+
+        // The same dY through the *gradient path of the pipeline*:
+        // site 1 (attn_out, the square site) gets W = I, which
+        // quantizes exactly, so dX = dequant(q(dY)) element-wise and
+        // the mean of dX over many microsteps estimates E[q(dY)].
+        // The microstep-seeded SR streams must drive that mean to dY
+        // itself.
+        let mut cfg = LayerStepConfig::new(16, 16, 16, 16);
+        cfg.glu = false;
+        cfg.threads = 2;
+        let sites = layer_linears(16, 16, false, 16);
+        let mut rng = Pcg64::new(0xB1A5);
+        let weights: Vec<Mat> = sites
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                if i == 1 {
+                    Mat::from_fn(l.k, l.n, |r, c| {
+                        if r == c { 1.0 } else { 0.0 }
+                    })
+                } else {
+                    Mat::randn(l.k, l.n, 0.05, &mut rng)
+                }
+            })
+            .collect();
+        let mut ls = LayerStep::new(cfg, weights);
+        ls.controller_mut().thresholds.fill(f32::INFINITY);
+        let acts: Vec<Mat> = sites
+            .iter()
+            .map(|l| Mat::randn(l.m, l.k, 1.0, &mut rng))
+            .collect();
+        let grads: Vec<Mat> = sites
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                if i == 1 {
+                    dy.clone()
+                } else {
+                    Mat::randn(l.m, l.n, 1.0, &mut rng)
+                }
+            })
+            .collect();
+        let trials = 300usize;
+        let mut acc = vec![0.0f64; 256];
+        let mut first: Option<Vec<f32>> = None;
+        let mut saw_fresh_draws = false;
+        for _ in 0..trials {
+            let (outs, _) = ls.microstep(&acts, &grads);
+            match &first {
+                None => first = Some(outs[1].dx.data.clone()),
+                Some(f) => {
+                    saw_fresh_draws |= *f != outs[1].dx.data;
+                }
+            }
+            for (a, v) in acc.iter_mut().zip(&outs[1].dx.data) {
+                *a += *v as f64;
+            }
+        }
+        assert!(saw_fresh_draws,
+                "SR must draw fresh per microstep, not repeat one");
+        for (i, (a, v)) in acc.iter().zip(&dy.data).enumerate() {
+            if i == 0 {
+                continue; // the exact 127.0 anchor
+            }
+            let mean = a / trials as f64;
+            let err = (mean - *v as f64).abs();
+            assert!(err < 0.2,
+                    "dY[{i}]: SR mean {mean} vs {v} (|bias| {err} — \
+                     nearest would sit at 0.3)");
+        }
+    }
+
+    #[test]
+    fn dw_routes_transposed_activation_through_fallback() {
+        // The dW bugfix: Xᵀ must carry X's per-block outlier
+        // handling. Exact i64 oracle + u-mask transposition check +
+        // the reported backward rate.
+        let mut ls = small_step(1);
+        let (acts, grads) = synth_microbatch(ls.sites(), 33, 250.0);
+        // θ from a probe at a moderate rate so fallback is active
+        let thetas: Vec<f32> = acts
+            .iter()
+            .map(|x| {
+                let probe = fallback_quant(x, f32::INFINITY, 16,
+                                           INT8_LEVELS,
+                                           Criterion::AbsMax);
+                theta_for_rate(&probe.metric, 0.3)
+            })
+            .collect();
+        ls.controller_mut().thresholds.copy_from_slice(&thetas);
+        let sr_base = ls.config().sr_seed;
+        let (outs, rep) = ls.microstep(&acts, &grads);
+        let mut any_bwd_fallback = false;
+        for (i, l) in ls.sites().iter().enumerate() {
+            let fx = fallback_quant(&acts[i], thetas[i], 16,
+                                    INT8_LEVELS, Criterion::AbsMax);
+            let fxt = fallback_quant(&acts[i].transpose(), thetas[i],
+                                     16, INT8_LEVELS,
+                                     Criterion::AbsMax);
+            // AbsMax is symmetric under block transposition, so the
+            // backward reuses exactly the forward's block decisions
+            let (rb, cb) = (fx.base.rb(), fx.base.cb());
+            for bi in 0..cb {
+                for bj in 0..rb {
+                    assert_eq!(fxt.u[bi * rb + bj],
+                               fx.u[bj * cb + bi],
+                               "u-mask transposition {} ({bi},{bj})",
+                               l.name);
+                }
+            }
+            // exact i64 fallback oracle for dW
+            let qdy = block_quant(&grads[i], 16, INT8_LEVELS,
+                                  Rounding::Stochastic(grad_sr_seed(
+                                      sr_base, 0, i)));
+            let oracle = crate::gemm::int8::fallback_gemm_reference(
+                &fxt, &qdy, &fxt.u);
+            assert_eq!(outs[i].dw.data, oracle.data,
+                       "dW vs i64 oracle at {}", l.name);
+            // executed backward rate is reported per site
+            let want = fxt.fallback_rate();
+            assert!((rep.sites[i].bwd_fallback_rate - want).abs()
+                        < 1e-12,
+                    "bwd rate report at {}", l.name);
+            any_bwd_fallback |= want > 0.0;
+            // per-site cache accounting: 2 lookups each, all cold
+            assert_eq!((rep.sites[i].cache_hits,
+                        rep.sites[i].cache_misses), (0, 2));
+        }
+        assert!(any_bwd_fallback,
+                "probe θ at rate 0.3 must trigger backward fallback");
+    }
+
+    fn small_model(threads: usize) -> ModelStep {
+        // 2 layers + head; vocab ≠ every other output dim so the head
+        // exercises a genuinely different shape in the shared cache
+        let mut cfg = ModelStepConfig::new(2, 32, 48, 80, 24, 16);
+        cfg.glu = false;
+        cfg.threads = threads;
+        ModelStep::with_random_weights(cfg, 0x0D31)
+    }
+
+    #[test]
+    fn model_step_shares_one_cache_across_layers_and_head() {
+        let mut ms = small_model(2);
+        let n_sites = ms.sites().len();
+        assert_eq!(n_sites, 9);
+        assert_eq!(ms.sites().last().unwrap().name, "lm_head");
+        let (acts, grads) = synth_microbatch(ms.sites(), 17, 150.0);
+        let (outs, r1) = ms.microstep(&acts, &grads);
+        assert_eq!(outs.len(), n_sites);
+        assert_eq!(r1.cache_misses as usize, 2 * n_sites);
+        assert_eq!(r1.cache_hits, 0);
+        assert_eq!(ms.cache().len(), 2 * n_sites,
+                   "all sites resident in the one shared cache");
+        let (_, r2) = ms.microstep(&acts, &grads);
+        assert_eq!(r2.cache_misses, 0);
+        assert_eq!(r2.cache_hits as usize, 2 * n_sites);
+        // per-site accounting rolls up to per-layer hit rates of 1.0
+        for (s, sr) in r2.sites.iter().enumerate() {
+            assert_eq!((sr.cache_hits, sr.cache_misses), (2, 0),
+                       "site {s}");
+        }
+        assert!(!ms.cache().stats().thrashing());
+        // rates flow per-site into one controller at the step boundary
+        ms.controller_mut().thresholds.fill(1e-3);
+        ms.microstep(&acts, &grads);
+        let applied = ms.end_step();
+        assert_eq!(applied.len(), n_sites);
+        assert!(ms.controller().n_up > 0);
+    }
+
+    #[test]
+    fn model_step_set_weight_invalidates_only_that_site() {
+        let mut ms = small_model(1);
+        let n_sites = ms.sites().len();
+        let (acts, grads) = synth_microbatch(ms.sites(), 19, 150.0);
+        ms.microstep(&acts, &grads);
+        // mutate the LM head weight (the multi-shape entry)
+        let head = n_sites - 1;
+        let (k, n) = (ms.sites()[head].k, ms.sites()[head].n);
+        let mut rng = Pcg64::new(3);
+        ms.set_weight(head, Mat::randn(k, n, 0.05, &mut rng));
+        assert_eq!(ms.cache().len(), 2 * n_sites - 2);
+        let (_, rep) = ms.microstep(&acts, &grads);
+        assert_eq!(rep.cache_misses, 2, "only the head rebuilds");
+        assert_eq!(rep.cache_hits as usize, 2 * (n_sites - 1));
+    }
+
+    #[test]
+    fn warm_state_validates_fingerprint_and_prewarms() {
+        let mut ms = small_model(1);
+        let (acts, grads) = synth_microbatch(ms.sites(), 23, 150.0);
+        ms.microstep(&acts, &grads);
+        let state = ms.warm_state(None);
+        // the serialized text is valid JSON and round-trips
+        let parsed = Json::parse(&state.to_string()).unwrap();
+        assert_eq!(parsed, state);
+        // restore: cache prewarmed, so the very first microstep hits
+        // on every lookup
+        let (mut ms2, cal) = ModelStep::from_warm_state(
+            ms.config().clone(), ms.weights.clone(), &parsed)
+            .unwrap();
+        assert!(cal.is_none());
+        assert_eq!(ms2.microsteps(), 1, "counter rides the state");
+        assert_eq!(ms2.cache().len(), 2 * ms.sites().len());
+        let (_, rep) = ms2.microstep(&acts, &grads);
+        assert_eq!(rep.cache_misses, 0,
+                   "restored process must start at steady state");
+        assert_eq!(rep.cache_hits as usize, 2 * ms.sites().len());
+        // a different model's config must be rejected loudly
+        let mut other = ms.config().clone();
+        other.d_model = 64;
+        let err = ModelStep::from_warm_state(
+            other, ms.weights.clone(), &parsed)
+            .unwrap_err();
+        assert!(err.contains("fingerprint"), "{err}");
+        // garbage input errors instead of panicking
+        assert!(ModelStep::from_warm_state(
+            ms.config().clone(), ms.weights.clone(), &Json::Null)
+            .is_err());
     }
 
     #[test]

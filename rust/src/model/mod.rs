@@ -76,6 +76,30 @@ pub fn layer_linears(d_model: usize, d_ff: usize, glu: bool,
     ]
 }
 
+/// The LM-head linear: `(tokens × d_model) · (d_model × vocab)` — the
+/// largest (and only vocab-shaped) GEMM of a training step, which is
+/// what makes it the multi-shape pressure case for the shared plan
+/// cache in `gemm::pipeline::ModelStep`.
+pub fn lm_head_linear(d_model: usize, vocab: usize,
+                      tokens: usize) -> LinearShape {
+    LinearShape { name: "lm_head", m: tokens, n: vocab, k: d_model }
+}
+
+/// Every linear site of an `n_layers` transformer plus the LM head,
+/// flattened layer-major (layer 0's qkv…mlp_down, …, head last) —
+/// the global site order of `gemm::pipeline::ModelStep`, its
+/// threshold controller, and its rate accumulator.
+pub fn model_linears(n_layers: usize, d_model: usize, d_ff: usize,
+                     glu: bool, vocab: usize,
+                     tokens: usize) -> Vec<LinearShape> {
+    let mut v = Vec::with_capacity(4 * n_layers + 1);
+    for _ in 0..n_layers {
+        v.extend(layer_linears(d_model, d_ff, glu, tokens));
+    }
+    v.push(lm_head_linear(d_model, vocab, tokens));
+    v
+}
+
 /// Matmul FLOPs for one microstep (fwd + bwd = 3 GEMMs per linear site,
 /// 2*M*N*K each), the paper's CAL-FLOPS denominator ("only computation
 /// time is measured"). Attention matmuls are included; softmax/norms are
@@ -195,6 +219,32 @@ mod tests {
         assert_eq!(l.flops(), 2.0 * 8.0 * 6.0 * 4.0);
         assert_eq!(l.microstep_flops(), 3.0 * l.flops());
         assert_eq!(GEMMS_PER_SITE, 3);
+    }
+
+    #[test]
+    fn model_linears_order_and_accounting() {
+        let (layers, d, ff, vocab, toks) = (3usize, 32, 64, 256, 16);
+        let sites = model_linears(layers, d, ff, false, vocab, toks);
+        assert_eq!(sites.len(), 4 * layers + 1);
+        for l in 0..layers {
+            let names: Vec<_> =
+                sites[4 * l..4 * l + 4].iter().map(|s| s.name).collect();
+            assert_eq!(names,
+                       ["qkv", "attn_out", "mlp_in", "mlp_down"]);
+        }
+        let head = sites.last().unwrap();
+        assert_eq!((head.name, head.m, head.n, head.k),
+                   ("lm_head", toks, vocab, d));
+        // flattened flops = layers × per-layer flops + head flops
+        let per_layer: f64 = layer_linears(d, ff, false, toks)
+            .iter()
+            .map(|l| l.microstep_flops())
+            .sum();
+        let total: f64 =
+            sites.iter().map(|l| l.microstep_flops()).sum();
+        let expect = layers as f64 * per_layer
+            + lm_head_linear(d, vocab, toks).microstep_flops();
+        assert!((total - expect).abs() < 1e-6);
     }
 
     #[test]

@@ -92,6 +92,22 @@ impl Json {
         }
     }
 
+    /// Array of numbers → owned `Vec<f64>`; `None` when `self` is not
+    /// an array or any element is not a number.
+    pub fn to_f64_vec(&self) -> Option<Vec<f64>> {
+        self.as_arr()?
+            .iter()
+            .map(|v| v.as_f64())
+            .collect()
+    }
+
+    /// Write the serialized value to `path` (warm-state files, bench
+    /// reports).
+    pub fn to_file(&self, path: &str) -> Result<(), String> {
+        std::fs::write(path, self.to_string())
+            .map_err(|e| format!("write {path}: {e}"))
+    }
+
     // -- writer ----------------------------------------------------------
 
     pub fn to_string(&self) -> String {
@@ -424,5 +440,15 @@ mod tests {
     fn writer_escapes() {
         let j = Json::Str("a\"b\\c\nd".into());
         assert_eq!(j.to_string(), r#""a\"b\\c\nd""#);
+    }
+
+    #[test]
+    fn number_array_accessor() {
+        let j = arr_f64(&[1.0, -2.5, 0.0]);
+        assert_eq!(j.to_f64_vec(), Some(vec![1.0, -2.5, 0.0]));
+        // non-arrays and mixed arrays refuse
+        assert_eq!(Json::Num(1.0).to_f64_vec(), None);
+        let mixed = Json::parse(r#"[1, "x"]"#).unwrap();
+        assert_eq!(mixed.to_f64_vec(), None);
     }
 }

@@ -1,0 +1,232 @@
+//! Property tests for the multi-layer `ModelStep` driver
+//! (`gemm::pipeline`).
+//!
+//! Two contracts under test:
+//!
+//! * **Composition**: a `ModelStep` over N layers + LM head sharing
+//!   one `PlanCache` must be *bit-identical* to N standalone
+//!   `LayerStep`s (built from `ModelStepConfig::layer_config`, which
+//!   namespaces the gradient SR streams per layer) plus a direct
+//!   engine computation of the head — on every microkernel backend
+//!   available on the host and across thread counts. Site
+//!   namespacing, the shared cache, and the per-site θ routing must
+//!   not change a single bit.
+//! * **Warm state**: serialize → restore must put a fresh process at
+//!   steady state — every lookup of its *first* microstep hits, the
+//!   restored θ vector and microstep counter match the saved
+//!   process, and the next microstep's outputs are bit-identical to
+//!   the ones the saved process produces.
+
+use dbfq::costmodel::SubstrateCalibration;
+use dbfq::gemm::{grad_sr_seed, kernels, layer_sr_seed,
+                 site_reference, synth_microbatch, LayerStep,
+                 ModelStep, ModelStepConfig};
+use dbfq::model::model_linears;
+use dbfq::quant::Rounding;
+use dbfq::util::json::Json;
+use dbfq::util::rng::Pcg64;
+use dbfq::util::Mat;
+
+/// 2 layers + head, vocab distinct from every layer dimension so the
+/// head is a genuinely different shape in the shared cache.
+fn model_cfg(threads: usize) -> ModelStepConfig {
+    let mut cfg = ModelStepConfig::new(2, 16, 32, 56, 16, 16);
+    cfg.glu = false;
+    cfg.threads = threads;
+    cfg
+}
+
+fn site_weights(cfg: &ModelStepConfig, seed: u64) -> Vec<Mat> {
+    let sites = model_linears(cfg.layers, cfg.d_model, cfg.d_ff,
+                              cfg.glu, cfg.vocab, cfg.tokens);
+    let mut rng = Pcg64::new(seed);
+    sites
+        .iter()
+        .map(|l| Mat::randn(l.k, l.n, 0.05, &mut rng))
+        .collect()
+}
+
+#[test]
+fn model_step_bit_identical_to_composed_layer_steps_per_backend() {
+    for kn in kernels::available() {
+        for threads in [1usize, 2, 4] {
+            let cfg = model_cfg(threads);
+            let n_sites = cfg.n_sites();
+            let weights = site_weights(&cfg, 0x77);
+            let mut ms = ModelStep::new(cfg.clone(), weights.clone())
+                .with_kernels(kn);
+            // distinct θ per site so any site conflation would be
+            // visible in the fallback masks
+            let thetas: Vec<f32> =
+                (0..n_sites).map(|s| 4.0 + s as f32).collect();
+            ms.controller_mut()
+                .thresholds
+                .copy_from_slice(&thetas);
+            let (acts, grads) =
+                synth_microbatch(ms.sites(), 21, 180.0);
+            let mut layer_steps: Vec<LayerStep> = (0..cfg.layers)
+                .map(|l| {
+                    let mut ls = LayerStep::new(
+                        cfg.layer_config(l),
+                        weights[4 * l..4 * l + 4].to_vec(),
+                    )
+                    .with_kernels(kn);
+                    ls.controller_mut()
+                        .thresholds
+                        .copy_from_slice(&thetas[4 * l..4 * l + 4]);
+                    ls
+                })
+                .collect();
+            for t in 0..2usize {
+                let (mo, rep) = ms.microstep(&acts, &grads);
+                if t == 0 {
+                    assert_eq!(rep.cache_misses as usize,
+                               2 * n_sites);
+                } else {
+                    assert_eq!(rep.cache_misses, 0,
+                               "warm model microstep must hit \
+                                (backend {}, {threads} threads)",
+                               kn.name);
+                    assert_eq!(rep.cache_hits as usize, 2 * n_sites);
+                }
+                // layers vs standalone LayerSteps
+                for (l, ls) in layer_steps.iter_mut().enumerate() {
+                    let (lo, _) = ls.microstep(
+                        &acts[4 * l..4 * l + 4],
+                        &grads[4 * l..4 * l + 4],
+                    );
+                    for (i, b) in lo.iter().enumerate() {
+                        let a = &mo[4 * l + i];
+                        let tag = format!(
+                            "layer {l} site {i} microstep {t} \
+                             backend {} threads {threads}",
+                            kn.name
+                        );
+                        assert_eq!(a.y.data, b.y.data, "y {tag}");
+                        assert_eq!(a.dx.data, b.dx.data, "dx {tag}");
+                        assert_eq!(a.dw.data, b.dw.data, "dw {tag}");
+                    }
+                }
+                // LM head vs the shared cache-free site reference
+                // (its SR stream is "layer `layers`", site 0; the
+                // math's independence is pinned by the direct-engine
+                // and i64-oracle tests in the crate)
+                let h = n_sites - 1;
+                let sr = Rounding::Stochastic(grad_sr_seed(
+                    layer_sr_seed(cfg.sr_seed, cfg.layers), t, 0));
+                let ho = site_reference(
+                    &ms.sites()[h], &weights[h], &acts[h],
+                    &grads[h], thetas[h], sr, cfg.block, threads,
+                    cfg.path, kn,
+                );
+                let tag = format!(
+                    "lm_head microstep {t} backend {} threads \
+                     {threads}",
+                    kn.name
+                );
+                assert_eq!(mo[h].y.data, ho.y.data, "y {tag}");
+                assert_eq!(mo[h].dx.data, ho.dx.data, "dx {tag}");
+                assert_eq!(mo[h].dw.data, ho.dw.data, "dw {tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn warm_state_restore_reaches_steady_state_on_first_microstep() {
+    let cfg = model_cfg(2);
+    let n_sites = cfg.n_sites();
+    let weights = site_weights(&cfg, 0x99);
+    let mut ms = ModelStep::new(cfg.clone(), weights.clone());
+    let (acts, grads) = synth_microbatch(ms.sites(), 31, 180.0);
+    // run one step so the warm state carries *adapted* θ, a non-zero
+    // microstep counter, and a fully resident cache
+    ms.microstep(&acts, &grads);
+    let applied = ms.end_step();
+    assert_eq!(applied.len(), n_sites);
+
+    let cal = SubstrateCalibration {
+        dims: (96, 96, 96),
+        block: 16,
+        threads: 2,
+        dense_gops: 4.0,
+        int8_gops: 9.0,
+        int8_sim_gops: 5.0,
+        fallback: vec![(0.0, 9.0), (0.25, 7.5)],
+        backend: "scalar",
+        per_backend: vec![("scalar", 9.0)],
+    };
+    // full text round trip — what an actual process restart sees
+    let text = ms.warm_state(Some(&cal)).to_string();
+    let parsed = Json::parse(&text).unwrap();
+    let (mut ms2, cal2) = ModelStep::from_warm_state(
+        cfg.clone(), weights.clone(), &parsed)
+        .unwrap();
+    let cal2 = cal2.expect("embedded calibration must survive");
+    assert_eq!(cal2.int8_gops, cal.int8_gops);
+    assert_eq!(cal2.fallback, cal.fallback);
+    assert_eq!(ms2.controller().thresholds,
+               ms.controller().thresholds,
+               "adapted θ must ride the warm state");
+    assert_eq!(ms2.microsteps(), ms.microsteps(),
+               "SR streams must continue, not repeat");
+    assert_eq!(ms2.kernel_backend(), ms.kernel_backend());
+
+    // both processes run "the next microstep": the restored one must
+    // hit on every lookup of its FIRST microstep and agree bitwise
+    // with the saved process
+    let (oa, ra) = ms.microstep(&acts, &grads);
+    let (ob, rb) = ms2.microstep(&acts, &grads);
+    assert_eq!(ra.cache_misses, 0);
+    assert_eq!(rb.cache_misses, 0,
+               "restored process must start at steady state");
+    assert_eq!(rb.cache_hits as usize, 2 * n_sites);
+    for (s, (a, b)) in oa.iter().zip(&ob).enumerate() {
+        assert_eq!(a.y.data, b.y.data, "y[{s}] restored differs");
+        assert_eq!(a.dx.data, b.dx.data, "dx[{s}] restored differs");
+        assert_eq!(a.dw.data, b.dw.data, "dw[{s}] restored differs");
+    }
+}
+
+#[test]
+fn warm_state_restored_plans_bit_identical_to_cold_built() {
+    // A restored (prewarmed) plan and a cold-built one over the same
+    // weights must produce the same bits — per host backend.
+    for kn in kernels::available() {
+        let cfg = model_cfg(1);
+        let weights = site_weights(&cfg, 0x55);
+        let mut saved = ModelStep::new(cfg.clone(), weights.clone())
+            .with_kernels(kn);
+        let (acts, grads) = synth_microbatch(saved.sites(), 41, 180.0);
+        saved.microstep(&acts, &grads);
+        let state =
+            Json::parse(&saved.warm_state(None).to_string()).unwrap();
+        // restore — from_warm_state re-pins the *recorded* backend,
+        // except that a PALLAS_KERNEL env override (the scalar-forced
+        // CI leg) always wins over the recorded pin
+        let (mut restored, _) = ModelStep::from_warm_state(
+            cfg.clone(), weights.clone(), &state)
+            .unwrap();
+        let expect = kernels::env_override()
+            .map(|k| k.name)
+            .unwrap_or(kn.name);
+        assert_eq!(restored.kernel_backend(), expect);
+        // cold-built driver advanced to the same microstep index
+        let mut cold = ModelStep::new(cfg.clone(), weights.clone())
+            .with_kernels(kn);
+        cold.microstep(&acts, &grads);
+        cold.clear_cache();
+        let (oc, rc) = cold.microstep(&acts, &grads);
+        let (or_, rr) = restored.microstep(&acts, &grads);
+        assert!(rc.cache_misses > 0 && rr.cache_misses == 0,
+                "cold rebuilds, restored hits");
+        for (s, (a, b)) in oc.iter().zip(&or_).enumerate() {
+            assert_eq!(a.y.data, b.y.data,
+                       "y[{s}] {} warm vs cold", kn.name);
+            assert_eq!(a.dx.data, b.dx.data,
+                       "dx[{s}] {} warm vs cold", kn.name);
+            assert_eq!(a.dw.data, b.dw.data,
+                       "dw[{s}] {} warm vs cold", kn.name);
+        }
+    }
+}

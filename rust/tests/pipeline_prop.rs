@@ -16,8 +16,8 @@
 use std::sync::Arc;
 
 use dbfq::gemm::{
-    kernels, synth_microbatch, DataPath, GemmPlan, LayerStep,
-    LayerStepConfig, WeightPlan,
+    fallback_gemm_reference, grad_sr_seed, kernels, synth_microbatch,
+    DataPath, GemmPlan, LayerStep, LayerStepConfig, WeightPlan,
 };
 use dbfq::prop_assert;
 use dbfq::quant::{block_quant, fallback_quant, theta_for_rate,
@@ -102,36 +102,111 @@ fn prop_layer_step_cache_and_thread_invariant() {
         let mut ls = LayerStep::with_random_weights(cfg.clone(), seed);
         let (acts, grads) = synth_microbatch(ls.sites(), 7, 150.0);
         let (o1, r1) = ls.microstep(&acts, &grads);
-        // identical inputs again: every weight lookup must hit, and
-        // the cache hit must not change a single bit
+        // identical inputs again: every weight lookup must hit. The
+        // gradient SR streams are seeded per microstep, so the warm
+        // microstep is compared against a *cold rebuild at the same
+        // microstep index* (hit vs miss must not change a single
+        // bit), not against the previous microstep.
         let (o2, r2) = ls.microstep(&acts, &grads);
         prop_assert!(r1.cache_misses == 8 && r1.cache_hits == 0,
                      "cold lookups: {r1:?}");
         prop_assert!(r2.cache_misses == 0 && r2.cache_hits == 8,
                      "warm lookups: {r2:?}");
-        for (i, (a, b)) in o1.iter().zip(&o2).enumerate() {
+        let mut ls_cold =
+            LayerStep::with_random_weights(cfg.clone(), seed);
+        ls_cold.microstep(&acts, &grads);
+        ls_cold.clear_cache();
+        let (o2_cold, r2_cold) = ls_cold.microstep(&acts, &grads);
+        prop_assert!(r2_cold.cache_misses == 8,
+                     "cleared cache must rebuild: {r2_cold:?}");
+        for (i, (a, b)) in o2.iter().zip(&o2_cold).enumerate() {
             prop_assert!(a.y.data == b.y.data, "y[{i}] hit differs");
             prop_assert!(a.dx.data == b.dx.data,
                          "dx[{i}] hit differs");
             prop_assert!(a.dw.data == b.dw.data,
                          "dw[{i}] hit differs");
         }
-        // thread-count invariance: quantization and the engine are
-        // both bitwise thread-invariant, so the whole pipeline is
+        // fresh SR draws per microstep: the warm gradient outputs
+        // must not repeat the cold microstep's bits
+        prop_assert!(o1.iter().zip(&o2).any(|(a, b)| {
+            a.dx.data != b.dx.data
+        }), "gradient SR must advance between microsteps");
+        // thread-count invariance: quantization (per-block SR
+        // streams), the engine, and the pipeline glue are all
+        // bitwise thread-invariant — per microstep index
         for threads in [2usize, 4] {
             let mut cfg_t = cfg.clone();
             cfg_t.threads = threads;
             let mut ls_t =
                 LayerStep::with_random_weights(cfg_t, seed);
-            let (ot, _) = ls_t.microstep(&acts, &grads);
-            for (i, (a, b)) in o1.iter().zip(&ot).enumerate() {
-                prop_assert!(a.y.data == b.y.data,
+            let (ot1, _) = ls_t.microstep(&acts, &grads);
+            let (ot2, _) = ls_t.microstep(&acts, &grads);
+            for (i, ((a1, a2), (b1, b2))) in o1
+                .iter()
+                .zip(&o2)
+                .zip(ot1.iter().zip(&ot2))
+                .enumerate()
+            {
+                prop_assert!(a1.y.data == b1.y.data,
                              "y[{i}] threads={threads}");
-                prop_assert!(a.dx.data == b.dx.data,
+                prop_assert!(a1.dx.data == b1.dx.data,
                              "dx[{i}] threads={threads}");
-                prop_assert!(a.dw.data == b.dw.data,
+                prop_assert!(a1.dw.data == b1.dw.data,
                              "dw[{i}] threads={threads}");
+                prop_assert!(a2.dx.data == b2.dx.data,
+                             "dx[{i}] microstep 2 threads={threads}");
+                prop_assert!(a2.dw.data == b2.dw.data,
+                             "dw[{i}] microstep 2 threads={threads}");
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dw_matches_exact_i64_fallback_oracle() {
+    // The dW bugfix contract: Xᵀ·dY runs Algorithm 1 with Xᵀ's
+    // fallback representation at the site's θ — bit-identical to the
+    // exact i64 reference, at every thread count, with the backward
+    // rate reported per site.
+    forall("pipeline-dw-oracle", 6, |g| {
+        let d_model = 16 * g.usize_in(1, 2);
+        let d_ff = 16 * g.usize_in(2, 3);
+        let tokens = 16 * g.usize_in(1, 2) + g.usize_in(0, 5);
+        let mut cfg = LayerStepConfig::new(d_model, d_ff, tokens, 16);
+        cfg.glu = false;
+        cfg.threads = g.usize_in(1, 4);
+        let mut ls =
+            LayerStep::with_random_weights(cfg.clone(), 0xD0_0E);
+        let (acts, grads) = synth_microbatch(ls.sites(), 13, 220.0);
+        let thetas: Vec<f32> = acts
+            .iter()
+            .map(|x| {
+                let probe = fallback_quant(x, f32::INFINITY, BLOCK,
+                                           INT8_LEVELS,
+                                           Criterion::AbsMax);
+                theta_for_rate(&probe.metric, 0.3)
+            })
+            .collect();
+        ls.controller_mut().thresholds.copy_from_slice(&thetas);
+        let (outs, rep) = ls.microstep(&acts, &grads);
+        for (i, l) in ls.sites().iter().enumerate() {
+            let fxt = fallback_quant(&acts[i].transpose(), thetas[i],
+                                     BLOCK, INT8_LEVELS,
+                                     Criterion::AbsMax);
+            let qdy = block_quant(&grads[i], BLOCK, INT8_LEVELS,
+                                  Rounding::Stochastic(grad_sr_seed(
+                                      cfg.sr_seed, 0, i)));
+            let oracle =
+                fallback_gemm_reference(&fxt, &qdy, &fxt.u);
+            prop_assert!(outs[i].dw.data == oracle.data,
+                         "dW vs i64 oracle at {} ({} threads)",
+                         l.name, cfg.threads);
+            prop_assert!(
+                (rep.sites[i].bwd_fallback_rate
+                 - fxt.fallback_rate()).abs() < 1e-12,
+                "bwd rate report at {}", l.name
+            );
         }
         Ok(())
     });

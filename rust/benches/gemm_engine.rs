@@ -17,13 +17,16 @@
 //!                     training path
 //!
 //! Also sweeps the i8 path across **every microkernel backend** on
-//! the host (scalar / sse2 / avx2 / neon — the `PALLAS_KERNEL`
-//! choices), reports per-backend Gops plus the selected backend and
-//! detected CPU features in the JSON, installs the fastest measured
-//! backend as the process default via the calibration, reports packed
-//! bytes per operand (the 4x B-panel shrink the i8 path buys), and
-//! records the measured `SubstrateCalibration` the cost model
-//! consumes in place of its ad-hoc fallback-overhead constant.
+//! the host (scalar / sse2 / avx2 / avx512vnni / neon — the
+//! `PALLAS_KERNEL` choices), reports per-backend Gops plus the
+//! selected backend and detected CPU features in the JSON, measures
+//! the vectorized-vs-scalar f32 path on the SimF32 plan (the
+//! `f32_simd_vs_scalar` criterion — the v2 re-anchor's payoff),
+//! installs the fastest measured backend as the process default via
+//! the calibration, reports packed bytes per operand (the 4x B-panel
+//! shrink the i8 path buys), and records the measured
+//! `SubstrateCalibration` the cost model consumes in place of its
+//! ad-hoc fallback-overhead constant.
 //!
 //! Set `BENCH_SMOKE=1` for a seconds-long CI smoke run (small dim,
 //! short iterations) that keeps this binary from rotting.
@@ -186,6 +189,31 @@ fn main() {
         ]));
     }
     let simd_vs_scalar = g_backend_best.1 / g_backend_scalar.max(1e-12);
+
+    // -- f32 SIMD vs scalar on the SimF32 path --------------------------
+    // The v2 re-anchor's payoff: the same plan, same bits, with the
+    // runtime FMA dispatch forced onto the scalar mul_add floor vs
+    // left vectorized. (Results are bit-identical by contract — the
+    // kernel tests assert that; this measures the speed gap.)
+    let f32_simd_vs_scalar = {
+        let plan_sim = GemmPlan::new_int8_path(&qa, &qb, nthreads,
+                                               DataPath::SimF32);
+        kernels::set_f32_simd_enabled(false);
+        let g_scalar = measure(dim, target_ms, || {
+            std::hint::black_box(plan_sim.execute());
+        });
+        kernels::set_f32_simd_enabled(true);
+        let g_simd = measure(dim, target_ms, || {
+            std::hint::black_box(plan_sim.execute());
+        });
+        println!(
+            "\nf32 SimF32 path @ {nthreads} threads: vectorized \
+             {g_simd:.2} Gops vs scalar mul_add {g_scalar:.2} Gops = \
+             {:.2}x (target >= 1.0x)",
+            g_simd / g_scalar.max(1e-12)
+        );
+        g_simd / g_scalar.max(1e-12)
+    };
 
     // -- fallback: rate x placement x threads ---------------------------
     let mut seq_gap_worst: f64 = 0.0;
@@ -353,6 +381,7 @@ fn main() {
             ("fallback_i8_vs_sim", Json::Num(fb_i8_vs_sim_nt)),
             ("seq_vs_random_gap_worst", Json::Num(seq_gap_worst)),
             ("simd_vs_scalar", Json::Num(simd_vs_scalar)),
+            ("f32_simd_vs_scalar", Json::Num(f32_simd_vs_scalar)),
         ])),
         ("calibration", obj(vec![
             ("dense_gops", Json::Num(cal.dense_gops)),

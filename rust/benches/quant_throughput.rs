@@ -89,6 +89,18 @@ fn main() {
         record(&mut table, "fallback_quant", "nearest", threads, rate,
                base_1t);
     }
+
+    // the permuted-transpose reuse (pipeline dW path): what replacing
+    // a full re-quantization of xᵀ actually costs per microstep
+    let fx = quant::fallback_quant_threads(&x, 50.0, BLOCK,
+                                           INT8_LEVELS,
+                                           Criterion::AbsMax,
+                                           nthreads);
+    let s = bench(|| {
+        std::hint::black_box(fx.transposed());
+    }, target_ms);
+    let rate = melems / s.median_secs();
+    record(&mut table, "fallback_transposed", "-", 1, rate, rate);
     table.print();
 
     let report = obj(vec![

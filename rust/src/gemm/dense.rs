@@ -7,6 +7,7 @@
 //! bit-identity oracle of `tests/engine_prop.rs`.
 
 use crate::gemm::engine::GemmPlan;
+use crate::gemm::kernels::{fma1_into, fma4_into};
 use crate::util::threadpool::parallel_chunks;
 use crate::util::Mat;
 
@@ -17,10 +18,12 @@ pub fn matmul(a: &Mat, b: &Mat, threads: usize) -> Mat {
     GemmPlan::new_dense(a, b, threads).execute()
 }
 
-/// Retained seed implementation (pre-engine): row panels distributed by
+/// Retained pre-engine implementation: row panels distributed by
 /// contiguous chunking, output rows written through a raw pointer.
-/// Kept as the honest baseline the engine is measured against — do not
-/// "improve" it.
+/// Kept as the honest baseline the engine is measured against. Its
+/// inner kernel follows the **v2 f32 op-order contract** (per-lane
+/// sequential FMA, ascending K — see `gemm::kernels`); the v1 seed
+/// order is retained under test as the bridge oracle.
 pub fn matmul_baseline(a: &Mat, b: &Mat, threads: usize) -> Mat {
     assert_eq!(a.cols, b.rows);
     let (m, k, n) = (a.rows, a.cols, b.cols);
@@ -41,33 +44,29 @@ pub fn matmul_baseline(a: &Mat, b: &Mat, threads: usize) -> Mat {
     c
 }
 
-/// crow += arow * B with 4-element inner unrolling over K. Shared by
-/// the baseline above and the engine's dense single-row path — one
-/// authoritative kernel keeps them bit-identical by construction.
+/// crow += arow * B under the v2 f32 op-order contract (per-lane
+/// sequential FMA over ascending K, vectorized through the shared
+/// `gemm::kernels` primitives). Shared by the baseline above and the
+/// engine's dense single-row path — one authoritative kernel keeps
+/// them bit-identical by construction.
 #[inline]
 pub(crate) fn matvec_row(arow: &[f32], b: &Mat, crow: &mut [f32]) {
     let n = b.cols;
     let k = b.rows;
+    let crow = &mut crow[..n];
     let kk = k & !3;
     for kb in (0..kk).step_by(4) {
-        let a0 = arow[kb];
-        let a1 = arow[kb + 1];
-        let a2 = arow[kb + 2];
-        let a3 = arow[kb + 3];
-        let b0 = &b.data[kb * n..(kb + 1) * n];
-        let b1 = &b.data[(kb + 1) * n..(kb + 2) * n];
-        let b2 = &b.data[(kb + 2) * n..(kb + 3) * n];
-        let b3 = &b.data[(kb + 3) * n..(kb + 4) * n];
-        for j in 0..n {
-            crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
-        }
+        fma4_into(
+            [arow[kb], arow[kb + 1], arow[kb + 2], arow[kb + 3]],
+            &b.data[kb * n..(kb + 1) * n],
+            &b.data[(kb + 1) * n..(kb + 2) * n],
+            &b.data[(kb + 2) * n..(kb + 3) * n],
+            &b.data[(kb + 3) * n..(kb + 4) * n],
+            crow,
+        );
     }
     for kb in kk..k {
-        let av = arow[kb];
-        let brow = &b.data[kb * n..(kb + 1) * n];
-        for j in 0..n {
-            crow[j] += av * brow[j];
-        }
+        fma1_into(arow[kb], &b.data[kb * n..(kb + 1) * n], crow);
     }
 }
 
@@ -122,6 +121,57 @@ mod tests {
         let eye = Mat::from_fn(8, 8, |r, c| (r == c) as u32 as f32);
         let c = matmul(&a, &eye, 1);
         assert_eq!(c.data, a.data);
+    }
+
+    /// The v1 (seed) dense row kernel, retained verbatim as the
+    /// bridge oracle for the v2 re-anchor.
+    fn matvec_row_v1(arow: &[f32], b: &Mat, crow: &mut [f32]) {
+        let n = b.cols;
+        let k = b.rows;
+        let kk = k & !3;
+        for kb in (0..kk).step_by(4) {
+            let a0 = arow[kb];
+            let a1 = arow[kb + 1];
+            let a2 = arow[kb + 2];
+            let a3 = arow[kb + 3];
+            let b0 = &b.data[kb * n..(kb + 1) * n];
+            let b1 = &b.data[(kb + 1) * n..(kb + 2) * n];
+            let b2 = &b.data[(kb + 2) * n..(kb + 3) * n];
+            let b3 = &b.data[(kb + 3) * n..(kb + 4) * n];
+            for j in 0..n {
+                crow[j] +=
+                    a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+            }
+        }
+        for kb in kk..k {
+            let av = arow[kb];
+            let brow = &b.data[kb * n..(kb + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+
+    #[test]
+    fn v2_bridge_bounds_drift_from_v1_order() {
+        // The dense path is the one place the re-anchor genuinely
+        // changes bits (real f32 data leaves the exact-integer
+        // range); the bridge bounds the rounding drift between the
+        // orders.
+        let mut rng = Pcg64::new(0xD2);
+        for (k, n) in [(9usize, 5usize), (16, 16), (65, 17)] {
+            let a = Mat::randn(1, k, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let mut v2 = vec![0.0f32; n];
+            let mut v1 = vec![0.0f32; n];
+            matvec_row(&a.data, &b, &mut v2);
+            matvec_row_v1(&a.data, &b, &mut v1);
+            for j in 0..n {
+                let rel = (v2[j] - v1[j]).abs()
+                    / v1[j].abs().max(1.0);
+                assert!(rel < 1e-5, "drift {rel} at j={j} ({k},{n})");
+            }
+        }
     }
 
     #[test]

@@ -87,22 +87,29 @@
 //! themselves live in [`kernels`](crate::gemm::kernels) behind a
 //! [`Kernels`] vtable chosen **once at plan build** — `PALLAS_KERNEL`
 //! env override → calibration preference → fastest detected backend
-//! (scalar / sse2 / avx2 / neon); [`with_kernels`](GemmPlan::with_kernels)
-//! pins a plan to an explicit backend for tests and calibration.
+//! (scalar / sse2 / avx2 / avx512vnni / neon);
+//! [`with_kernels`](GemmPlan::with_kernels) pins a plan to an
+//! explicit backend for tests and calibration.
 //!
-//! On the f32 (SimF32/dense) kernels the per-element floating-point
-//! operation sequence is kept *identical* to the seed kernels — same
-//! 4-wide K grouping, same `acc` zero-fill, same zero-code skip in the
-//! K remainder, same per-K-block scale-FMA order — so engine outputs
-//! are **bit-identical** to the `*_baseline` implementations for every
-//! thread count and placement (asserted by `tests/engine_prop.rs`).
-//! The i8 kernels accumulate exact integers in i32, so *every* backend
-//! (any lane order, any register blocking) produces the same integer
-//! and the same widened f32 — bit-identity holds per backend, not just
-//! for the scalar floor. The i8 path tiles up to **four** A rows per
-//! loaded B row (the SIMD backends keep a rows × 16-column accumulator
-//! tile in registers); the SimF32 oracle path keeps the seed's row
-//! pairs.
+//! The f32 (SimF32/dense) kernels follow the **v2 op-order contract**
+//! (see `gemm::kernels`): per output lane, one fused multiply-add per
+//! K step in ascending order, vectorized through shared runtime-
+//! dispatched FMA primitives — the same bits on every backend and on
+//! the scalar path. The `*_baseline` implementations share the same
+//! kernels/contract, so engine outputs stay **bit-identical** to them
+//! for every thread count and placement (asserted by
+//! `tests/engine_prop.rs`); the per-K-block scale-FMA order is
+//! likewise shared. On the quantized paths all operands are integer
+//! codes whose block dots stay below 2²⁴, where FP order is
+//! irrelevant — which is what made re-anchoring the dense op order
+//! (v1 → v2, see `docs/ARCHITECTURE.md`) safe for every oracle here.
+//! The i8 kernels accumulate exact integers in i32, so *every*
+//! backend (any lane order, any register blocking) produces the same
+//! integer and the same widened f32 — bit-identity holds per backend,
+//! not just for the scalar floor. The i8 path tiles up to **four** A
+//! rows per loaded B row (the SIMD backends keep a rows × 16-column
+//! accumulator tile in registers); the SimF32 oracle path keeps the
+//! seed's row pairs.
 //!
 //! ## Scheduling policy
 //!
@@ -450,7 +457,7 @@ impl<'a> GemmPlan<'a> {
     }
 
     /// Name of the microkernel backend this plan executes with
-    /// (`scalar`, `sse2`, `avx2`, `neon`, ...).
+    /// (`scalar`, `sse2`, `avx2`, `avx512vnni`, `neon`, ...).
     pub fn kernel_backend(&self) -> &'static str {
         self.kernels.name
     }

@@ -34,38 +34,37 @@ fn codes_to_f32(q: &[i8]) -> Vec<f32> {
     q.iter().map(|&v| v as f32).collect()
 }
 
-/// inner f32 panel: acc[j] = sum_k a[r, k0+k] * b[k0+k, c0+j], 4-unrolled.
+/// inner f32 panel: acc[j] = sum_k a[r, k0+k] * b[k0+k, c0+j], under
+/// the v2 f32 op-order contract (per-lane sequential FMA over
+/// ascending K — see `gemm::kernels`). All inputs here are integer
+/// codes whose block dots stay below 2²⁴, where FMA order is
+/// irrelevant, so this is bit-identical to the v1 seed order *and*
+/// vectorizes — the bridge test below pins that.
 #[inline]
+#[allow(clippy::too_many_arguments)]
 fn block_row_dot_f32(
     af: &[f32], a_stride: usize, r: usize, k0: usize, bs: usize,
     bf: &[f32], b_stride: usize, c0: usize, width: usize,
     acc: &mut [f32],
 ) {
-    acc[..width].fill(0.0);
+    let acc = &mut acc[..width];
+    acc.fill(0.0);
     let arow = &af[r * a_stride + k0..r * a_stride + k0 + bs];
     let kk = bs & !3;
     for k in (0..kk).step_by(4) {
-        let a0 = arow[k];
-        let a1 = arow[k + 1];
-        let a2 = arow[k + 2];
-        let a3 = arow[k + 3];
-        let b0 = &bf[(k0 + k) * b_stride + c0..][..width];
-        let b1 = &bf[(k0 + k + 1) * b_stride + c0..][..width];
-        let b2 = &bf[(k0 + k + 2) * b_stride + c0..][..width];
-        let b3 = &bf[(k0 + k + 3) * b_stride + c0..][..width];
-        for j in 0..width {
-            acc[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
-        }
+        crate::gemm::kernels::fma4_into(
+            [arow[k], arow[k + 1], arow[k + 2], arow[k + 3]],
+            &bf[(k0 + k) * b_stride + c0..][..width],
+            &bf[(k0 + k + 1) * b_stride + c0..][..width],
+            &bf[(k0 + k + 2) * b_stride + c0..][..width],
+            &bf[(k0 + k + 3) * b_stride + c0..][..width],
+            acc,
+        );
     }
     for k in kk..bs {
-        let av = arow[k];
-        if av == 0.0 {
-            continue;
-        }
-        let brow = &bf[(k0 + k) * b_stride + c0..][..width];
-        for j in 0..width {
-            acc[j] += av * brow[j];
-        }
+        crate::gemm::kernels::fma1_into(
+            arow[k], &bf[(k0 + k) * b_stride + c0..][..width], acc,
+        );
     }
 }
 
@@ -434,6 +433,73 @@ mod tests {
                     "{placement:?} threads={threads}"
                 );
             }
+        }
+    }
+
+    /// The v1 (seed) inner panel, retained verbatim as the bridge
+    /// oracle for the v2 re-anchor.
+    #[allow(clippy::too_many_arguments)]
+    fn block_row_dot_f32_v1(
+        af: &[f32], a_stride: usize, r: usize, k0: usize, bs: usize,
+        bf: &[f32], b_stride: usize, c0: usize, width: usize,
+        acc: &mut [f32],
+    ) {
+        acc[..width].fill(0.0);
+        let arow = &af[r * a_stride + k0..r * a_stride + k0 + bs];
+        let kk = bs & !3;
+        for k in (0..kk).step_by(4) {
+            let a0 = arow[k];
+            let a1 = arow[k + 1];
+            let a2 = arow[k + 2];
+            let a3 = arow[k + 3];
+            let b0 = &bf[(k0 + k) * b_stride + c0..][..width];
+            let b1 = &bf[(k0 + k + 1) * b_stride + c0..][..width];
+            let b2 = &bf[(k0 + k + 2) * b_stride + c0..][..width];
+            let b3 = &bf[(k0 + k + 3) * b_stride + c0..][..width];
+            for j in 0..width {
+                acc[j] +=
+                    a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+            }
+        }
+        for k in kk..bs {
+            let av = arow[k];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &bf[(k0 + k) * b_stride + c0..][..width];
+            for j in 0..width {
+                acc[j] += av * brow[j];
+            }
+        }
+    }
+
+    #[test]
+    fn v2_order_bit_identical_to_v1_on_integer_codes() {
+        // On the quantized paths every operand is an integer code and
+        // every partial sum stays below 2²⁴, so the v2 re-anchor must
+        // not move a single bit relative to the seed order — the
+        // strongest possible bridge statement for this file.
+        let mut rng = Pcg64::new(0x1B);
+        for &(bs, width, c0) in
+            &[(16usize, 16usize, 0usize), (17, 9, 16), (64, 16, 32)]
+        {
+            let b_stride = c0 + width + 3;
+            let af: Vec<f32> = (0..2 * bs)
+                .map(|_| ((rng.uniform() * 255.0) as i32 - 127)
+                     .clamp(-127, 127) as f32)
+                .collect();
+            let bf: Vec<f32> = (0..bs * b_stride)
+                .map(|_| ((rng.uniform() * 255.0) as i32 - 127)
+                     .clamp(-127, 127) as f32)
+                .collect();
+            let mut v2 = vec![0.0f32; bs];
+            let mut v1 = vec![0.0f32; bs];
+            block_row_dot_f32(&af, bs, 1, 0, bs, &bf, b_stride, c0,
+                              width, &mut v2);
+            block_row_dot_f32_v1(&af, bs, 1, 0, bs, &bf, b_stride, c0,
+                                 width, &mut v1);
+            assert_eq!(&v2[..width], &v1[..width],
+                       "bs={bs} width={width} c0={c0}");
         }
     }
 

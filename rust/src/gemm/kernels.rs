@@ -10,15 +10,25 @@
 //!   i32 widening (SSE2 is unconditionally present on x86_64).
 //! * `avx2` — 16-wide i16 multiplies (`_mm256_mullo_epi16` +
 //!   sign-extending widens), gated on `is_x86_feature_detected!`.
+//! * `avx512vnni` — 16-column dword dot tiles: `_mm512_dpbusd_epi32`
+//!   consumes **four K codes per lane per instruction** using the
+//!   unsigned-A offset trick (`Σ(a+128)·b = Σa·b + 128·Σb`, with the
+//!   `128·Σb` column sums subtracted once per block). Gated on
+//!   runtime `avx512f` + `avx512bw` + `avx512vnni` detection.
 //! * `neon` — aarch64 baseline SIMD: 8-wide `vmlal_s16`
 //!   multiply-accumulate-long (NEON is unconditionally present on
 //!   aarch64).
 //!
 //! Selection order in [`select`]: the `PALLAS_KERNEL` env override
-//! (`scalar|sse2|avx2|neon`, read once per process) → a backend
-//! installed by calibration ([`set_preferred`], wired up by
+//! (`scalar|sse2|avx2|avx512vnni|neon`, read once per process) → a
+//! backend installed by calibration ([`set_preferred`], wired up by
 //! `SubstrateCalibration::install_fastest_backend`) → the statically
-//! fastest detected backend ([`detect_best`]).
+//! fastest detected backend ([`detect_best`]). A calibrated
+//! preference that is **not available** on the running CPU (a warm
+//! state or calibration file can outlive the host that measured it)
+//! is skipped with a one-shot warning; the env override stays a hard
+//! error on unavailable names, because a forced backend that silently
+//! fell back would invalidate calibration runs and the CI matrix.
 //!
 //! ## Why every backend is bit-identical
 //!
@@ -26,44 +36,65 @@
 //! exact mathematical dot `Σ_k a[k]·b[k]` of i8 codes in i32 (integer
 //! addition is associative, so lane order and blocking cannot change
 //! the value), then hands the same integer to the shared
-//! [`widen_i32`]. The SIMD backends use a narrower intermediate — two
-//! i16 products summed in i16 — which is still exact because
-//! `|a·b| ≤ 127² = 16129` and `2·16129 = 32258 < 2¹⁵`. Overflow of the
-//! i32 accumulator needs `bs ≈ 1.3e5`, far past the f32-exactness
+//! [`widen_i32`]. The SSE2/AVX2/NEON backends use a narrower
+//! intermediate — two i16 products summed in i16 — which is still
+//! exact because `|a·b| ≤ 127² = 16129` and `2·16129 = 32258 < 2¹⁵`.
+//! The VNNI backend offsets A into unsigned range and computes
+//! `Σ(a+128)·b`: each u8×i8 product fits i16 (`|255·128| = 32640 <
+//! 2¹⁵`), `VPDPBUSD` sums four of them into i32 **without
+//! intermediate saturation** (that is the `VPDPBUSDS` variant), and
+//! subtracting the `128·Σb` column-sum correction restores the exact
+//! signed dot — still pure integer arithmetic, so the associativity
+//! argument applies unchanged. Overflow of the i32 accumulator needs
+//! `bs ≈ 6.6e4` even on the offset path, far past the f32-exactness
 //! bound `I8_EXACT_MAX_BS` that gates the i8 data path. Hence all
 //! backends agree bitwise with each other, with the `SimF32` f32
-//! simulation, with the `*_baseline` seed oracles, and with the exact
-//! i64 references — asserted per backend by `tests/engine_prop.rs` and
-//! the kernel-level tests below.
+//! simulation, with the `*_baseline` oracles, and with the exact
+//! i64 references — asserted per backend by `tests/engine_prop.rs`,
+//! `tests/kernel_fuzz.rs`, and the kernel-level tests below.
 //!
-//! The **f32** kernels ([`panel_dot`], [`panel_dot2`], and the dense
-//! slot of the vtable) are shared scalar code on every backend: their
-//! floating-point op order is pinned by bit-compatibility with the
-//! seed baselines (FP addition is *not* associative once sums leave
-//! the exact-integer range), so vectorizing them would break the
-//! oracle contract. The vtable still carries the dense slot so a
-//! future backend can override it once the baselines are re-anchored.
+//! ## The v2 f32 kernel contract
+//!
+//! The **f32** kernels ([`panel_dot`], [`panel_dot2`], the dense slot
+//! of the vtable, and their twins in `gemm::dense` / `gemm::int8`)
+//! follow the **v2 op-order contract**: every output lane `j`
+//! accumulates `acc[j] = fma(a[k], b[k][j], acc[j])` as one fused
+//! multiply-add per K step, in ascending K, with no zero-code skip.
+//! Because the order is *per lane* and every step is a
+//! correctly-rounded IEEE FMA, the same bits fall out of scalar
+//! `f32::mul_add`, AVX2 `_mm256_fmadd_ps`, and NEON `vfmaq_f32` —
+//! vectorization across lanes cannot change a lane's operation
+//! sequence. All f32 kernels route through the shared [`fma4_into`] /
+//! [`fma1_into`] primitives, which dispatch to the widest FMA unit
+//! detected at runtime ([`set_f32_simd_enabled`] forces the scalar
+//! path for benchmarking). This is a deliberate re-anchor of the v1
+//! seed order (4-wide grouped unfused sums with a zero-skip in the K
+//! remainder); the bridge tests in this file and `gemm::dense` bound
+//! the drift, and `docs/ARCHITECTURE.md` § "The f32 baseline
+//! contract" documents the change. On the quantized paths (SimF32,
+//! fallback residuals) all operands are integers and every partial
+//! sum stays below 2²⁴ for `bs ≤ I8_EXACT_MAX_BS`, so v1 and v2
+//! produce identical bits there — only the *dense* f32 path and
+//! oversized-block simulations actually moved.
 //!
 //! ## Zero-code convention
 //!
-//! The i8 kernels process **every** code unconditionally — no
-//! `a == 0` skip anywhere (the seed's scalar K-remainder skipped zero
-//! codes while its unrolled body did not; a zero contributes a zero
-//! term, so integer results are unchanged either way). One uniform
-//! convention keeps the reference semantics identical across backends
-//! and lets the SIMD lanes stay branch-free. The f32 kernels keep the
-//! seed's skip-in-remainder behaviour untouched, again for baseline
-//! bit-compatibility.
+//! All kernels — i8 and f32 — process **every** code unconditionally;
+//! no `a == 0` skip anywhere. (The seed skipped zero codes in some
+//! scalar K remainders; for the integer kernels that was semantically
+//! irrelevant and was dropped first, and the v2 re-anchor dropped the
+//! last f32 instance, so the SIMD lanes stay branch-free everywhere.)
 //!
 //! ## Adding a backend
 //!
-//! The full recipe — including the AVX-512 VNNI walk-through
-//! (`_mm512_dpbusd_epi32` with the unsigned-A offset trick) — lives
-//! in `docs/ARCHITECTURE.md` § "Adding a kernel backend". Short form:
-//! implement the three `DotI8` row tiles so they produce the exact
+//! Implement the three `DotI8` row tiles so they produce the exact
 //! integer block dot in `acci` (any lane order), register the
-//! `static` in [`available`] behind its feature gate, and the
-//! per-backend test/bench sweeps pick it up automatically.
+//! `static` in [`available`] behind its feature gate — ordered by
+//! static speed, fastest last — and the per-backend test/bench sweeps
+//! pick it up automatically. The generic recipe (with AMX as the next
+//! worked example) lives in `docs/ARCHITECTURE.md` § "Adding a kernel
+//! backend"; the landed `avx512vnni` backend in this file is the
+//! reference implementation of an offset-trick ISA.
 //!
 //! [`GemmPlan`]: crate::gemm::engine::GemmPlan
 
@@ -146,6 +177,16 @@ pub static AVX2: Kernels = Kernels {
     widen: widen_i32,
 };
 
+#[cfg(target_arch = "x86_64")]
+pub static AVX512VNNI: Kernels = Kernels {
+    name: "avx512vnni",
+    dot_i8: x86::dot_i8_avx512vnni,
+    dot2_i8: x86::dot2_i8_avx512vnni,
+    dot4_i8: x86::dot4_i8_avx512vnni,
+    dense2: dense_rows2,
+    widen: widen_i32,
+};
+
 #[cfg(target_arch = "aarch64")]
 pub static NEON: Kernels = Kernels {
     name: "neon",
@@ -158,8 +199,8 @@ pub static NEON: Kernels = Kernels {
 
 /// Backends usable on this host, ordered slowest → statically
 /// fastest. `scalar` is always present; SIMD entries appear when the
-/// architecture (and, for AVX2, the runtime CPUID check) provides
-/// their instructions.
+/// architecture (and, for AVX2 / AVX-512 VNNI, the runtime CPUID
+/// checks) provides their instructions.
 pub fn available() -> Vec<&'static Kernels> {
     let mut v: Vec<&'static Kernels> = vec![&SCALAR];
     push_arch_backends(&mut v);
@@ -172,6 +213,12 @@ fn push_arch_backends(v: &mut Vec<&'static Kernels>) {
     v.push(&SSE2);
     if is_x86_feature_detected!("avx2") {
         v.push(&AVX2);
+    }
+    if is_x86_feature_detected!("avx512f")
+        && is_x86_feature_detected!("avx512bw")
+        && is_x86_feature_detected!("avx512vnni")
+    {
+        v.push(&AVX512VNNI);
     }
 }
 
@@ -207,6 +254,12 @@ fn detect_arch_features(f: &mut Vec<&'static str>) {
     }
     if is_x86_feature_detected!("avx512f") {
         f.push("avx512f");
+    }
+    if is_x86_feature_detected!("avx512bw") {
+        f.push("avx512bw");
+    }
+    if is_x86_feature_detected!("avx512vnni") {
+        f.push("avx512vnni");
     }
 }
 
@@ -290,14 +343,37 @@ pub fn env_override() -> Option<&'static Kernels> {
     })
 }
 
+/// Set once the first time [`select`] skips an unavailable calibrated
+/// preference, so the warning fires once per process rather than once
+/// per plan build.
+static PREF_UNAVAILABLE_WARNED: std::sync::atomic::AtomicBool =
+    std::sync::atomic::AtomicBool::new(false);
+
 /// The backend a fresh `GemmPlan` uses: `PALLAS_KERNEL` env override
 /// (read once per process) → calibration preference → static best.
+///
+/// A calibrated preference naming a backend the running CPU does not
+/// provide (calibration files and warm states travel between hosts)
+/// is skipped with a one-shot `stderr` warning instead of an error —
+/// only the explicit env override is a hard failure on unavailable
+/// names ([`parse_override`]).
 pub fn select() -> &'static Kernels {
     if let Some(k) = env_override() {
         return k;
     }
     if let Some(k) = preferred() {
-        return k;
+        if available().iter().any(|a| a.name == k.name) {
+            return k;
+        }
+        let best = detect_best();
+        if !PREF_UNAVAILABLE_WARNED.swap(true, Ordering::Relaxed) {
+            eprintln!(
+                "dbfq: calibrated kernel preference {:?} is not \
+                 available on this CPU; falling back to {:?}",
+                k.name, best.name
+            );
+        }
+        return best;
     }
     detect_best()
 }
@@ -437,48 +513,134 @@ fn dot4_i8_scalar(
 }
 
 // ---------------------------------------------------------------------
-// Shared f32 kernels (NOT per-backend: FP op order is pinned by
-// bit-compatibility with the seed baselines — see module docs)
+// Shared f32 kernels — the v2 op-order contract (see module docs):
+// per-lane sequential FMA in ascending K, no zero-code skip. The
+// [`fma4_into`]/[`fma1_into`] primitives dispatch to the widest FMA
+// unit detected at runtime; every lane's operation sequence is the
+// same on every path, so SIMD and scalar produce identical bits.
 // ---------------------------------------------------------------------
 
+/// Force the f32 kernels onto the scalar `mul_add` path when `false`
+/// (the `f32_simd_vs_scalar` bench criterion and the SIMD≡scalar
+/// bitwise tests flip this); defaults to enabled.
+static F32_SIMD_ENABLED: std::sync::atomic::AtomicBool =
+    std::sync::atomic::AtomicBool::new(true);
+
+/// Enable/disable the vectorized f32 FMA path process-wide. Results
+/// are bit-identical either way (that is the v2 contract); the knob
+/// exists so benches can measure the speedup and tests can assert the
+/// identity.
+pub fn set_f32_simd_enabled(on: bool) {
+    F32_SIMD_ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether the vectorized f32 FMA path is currently enabled.
+pub fn f32_simd_enabled() -> bool {
+    F32_SIMD_ENABLED.load(Ordering::Relaxed)
+}
+
+/// Runtime support for the AVX2+FMA f32 path (AVX2 does **not** imply
+/// FMA — they are separate CPUID bits — so both are checked).
+#[cfg(target_arch = "x86_64")]
+fn f32_fma_supported() -> bool {
+    static DETECTED: OnceLock<bool> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    })
+}
+
+/// `acc[j] = fma(a3, b3[j], fma(a2, b2[j], fma(a1, b1[j],
+/// fma(a0, b0[j], acc[j]))))` for every lane — four sequential fused
+/// steps per lane, the v2 contract's K-unrolled form.
+#[inline]
+pub(crate) fn fma4_into(
+    a: [f32; 4], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32],
+    acc: &mut [f32],
+) {
+    #[cfg(target_arch = "x86_64")]
+    if f32_simd_enabled() && f32_fma_supported() {
+        // Safety: AVX2+FMA runtime-detected just above.
+        unsafe { x86::fma4_avx2(a, b0, b1, b2, b3, acc) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if f32_simd_enabled() {
+        // Safety: NEON (with FMA) is baseline on aarch64.
+        unsafe { arm::fma4_neon(a, b0, b1, b2, b3, acc) };
+        return;
+    }
+    fma4_scalar(a, b0, b1, b2, b3, acc);
+}
+
+/// `acc[j] = fma(av, brow[j], acc[j])` for every lane.
+#[inline]
+pub(crate) fn fma1_into(av: f32, brow: &[f32], acc: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if f32_simd_enabled() && f32_fma_supported() {
+        // Safety: AVX2+FMA runtime-detected just above.
+        unsafe { x86::fma1_avx2(av, brow, acc) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if f32_simd_enabled() {
+        // Safety: NEON (with FMA) is baseline on aarch64.
+        unsafe { arm::fma1_neon(av, brow, acc) };
+        return;
+    }
+    fma1_scalar(av, brow, acc);
+}
+
+/// Scalar reference for [`fma4_into`] — `f32::mul_add` is a single
+/// correctly-rounded IEEE FMA, the same operation the SIMD lanes
+/// perform.
+#[inline]
+fn fma4_scalar(
+    a: [f32; 4], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32],
+    acc: &mut [f32],
+) {
+    for (j, o) in acc.iter_mut().enumerate() {
+        let mut s = *o;
+        s = a[0].mul_add(b0[j], s);
+        s = a[1].mul_add(b1[j], s);
+        s = a[2].mul_add(b2[j], s);
+        s = a[3].mul_add(b3[j], s);
+        *o = s;
+    }
+}
+
+/// Scalar reference for [`fma1_into`].
+#[inline]
+fn fma1_scalar(av: f32, brow: &[f32], acc: &mut [f32]) {
+    for (o, &bv) in acc.iter_mut().zip(brow.iter()) {
+        *o = av.mul_add(bv, *o);
+    }
+}
+
 /// One-row f32 block dot against a contiguous B panel:
-/// `acc[j] = Σ_k a[r, k0+k] · panel[k0+k, j]`, 4-unrolled over K.
-///
-/// Operation order is identical to the seed `block_row_dot_f32`
-/// (same 4-wide grouping, same zero-code skip in the remainder), so
-/// results are bit-identical — only the B addressing changed from
-/// strided to contiguous.
+/// `acc[j] = Σ_k a[r, k0+k] · panel[k0+k, j]` under the v2 op-order
+/// contract (per-lane sequential FMA, ascending K, no zero skip).
 #[inline]
 #[allow(clippy::too_many_arguments)]
 pub fn panel_dot(
     af: &[f32], a_stride: usize, r: usize, k0: usize, bs: usize,
     panel: &[f32], width: usize, acc: &mut [f32],
 ) {
-    acc[..width].fill(0.0);
+    let acc = &mut acc[..width];
+    acc.fill(0.0);
     let arow = &af[r * a_stride + k0..r * a_stride + k0 + bs];
     let kk = bs & !3;
     for k in (0..kk).step_by(4) {
-        let a0 = arow[k];
-        let a1 = arow[k + 1];
-        let a2 = arow[k + 2];
-        let a3 = arow[k + 3];
-        let b0 = &panel[(k0 + k) * width..][..width];
-        let b1 = &panel[(k0 + k + 1) * width..][..width];
-        let b2 = &panel[(k0 + k + 2) * width..][..width];
-        let b3 = &panel[(k0 + k + 3) * width..][..width];
-        for j in 0..width {
-            acc[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
-        }
+        fma4_into(
+            [arow[k], arow[k + 1], arow[k + 2], arow[k + 3]],
+            &panel[(k0 + k) * width..][..width],
+            &panel[(k0 + k + 1) * width..][..width],
+            &panel[(k0 + k + 2) * width..][..width],
+            &panel[(k0 + k + 3) * width..][..width],
+            acc,
+        );
     }
     for k in kk..bs {
-        let av = arow[k];
-        if av == 0.0 {
-            continue;
-        }
-        let brow = &panel[(k0 + k) * width..][..width];
-        for j in 0..width {
-            acc[j] += av * brow[j];
-        }
+        fma1_into(arow[k], &panel[(k0 + k) * width..][..width], acc);
     }
 }
 
@@ -491,84 +653,64 @@ pub fn panel_dot2(
     af: &[f32], a_stride: usize, r: usize, k0: usize, bs: usize,
     panel: &[f32], width: usize, acc0: &mut [f32], acc1: &mut [f32],
 ) {
-    acc0[..width].fill(0.0);
-    acc1[..width].fill(0.0);
+    let acc0 = &mut acc0[..width];
+    let acc1 = &mut acc1[..width];
+    acc0.fill(0.0);
+    acc1.fill(0.0);
     let arow0 = &af[r * a_stride + k0..r * a_stride + k0 + bs];
     let arow1 = &af[(r + 1) * a_stride + k0..(r + 1) * a_stride + k0 + bs];
     let kk = bs & !3;
     for k in (0..kk).step_by(4) {
-        let a00 = arow0[k];
-        let a01 = arow0[k + 1];
-        let a02 = arow0[k + 2];
-        let a03 = arow0[k + 3];
-        let a10 = arow1[k];
-        let a11 = arow1[k + 1];
-        let a12 = arow1[k + 2];
-        let a13 = arow1[k + 3];
         let b0 = &panel[(k0 + k) * width..][..width];
         let b1 = &panel[(k0 + k + 1) * width..][..width];
         let b2 = &panel[(k0 + k + 2) * width..][..width];
         let b3 = &panel[(k0 + k + 3) * width..][..width];
-        for j in 0..width {
-            acc0[j] += a00 * b0[j] + a01 * b1[j] + a02 * b2[j] + a03 * b3[j];
-            acc1[j] += a10 * b0[j] + a11 * b1[j] + a12 * b2[j] + a13 * b3[j];
-        }
+        fma4_into(
+            [arow0[k], arow0[k + 1], arow0[k + 2], arow0[k + 3]],
+            b0, b1, b2, b3, acc0,
+        );
+        fma4_into(
+            [arow1[k], arow1[k + 1], arow1[k + 2], arow1[k + 3]],
+            b0, b1, b2, b3, acc1,
+        );
     }
     for k in kk..bs {
         let brow = &panel[(k0 + k) * width..][..width];
-        let av0 = arow0[k];
-        if av0 != 0.0 {
-            for j in 0..width {
-                acc0[j] += av0 * brow[j];
-            }
-        }
-        let av1 = arow1[k];
-        if av1 != 0.0 {
-            for j in 0..width {
-                acc1[j] += av1 * brow[j];
-            }
-        }
+        fma1_into(arow0[k], brow, acc0);
+        fma1_into(arow1[k], brow, acc1);
     }
 }
 
 /// Dense two-row kernel sharing each loaded B row; per-row operation
 /// order matches `dense::matvec_row` (the single-row kernel, shared
-/// with the baseline) exactly.
+/// with the baseline) exactly — both follow the v2 contract.
 #[inline]
 fn dense_rows2(
     arow0: &[f32], arow1: &[f32], b: &Mat, crow0: &mut [f32], crow1: &mut [f32],
 ) {
     let n = b.cols;
     let k = b.rows;
+    let crow0 = &mut crow0[..n];
+    let crow1 = &mut crow1[..n];
     let kk = k & !3;
     for kb in (0..kk).step_by(4) {
-        let a00 = arow0[kb];
-        let a01 = arow0[kb + 1];
-        let a02 = arow0[kb + 2];
-        let a03 = arow0[kb + 3];
-        let a10 = arow1[kb];
-        let a11 = arow1[kb + 1];
-        let a12 = arow1[kb + 2];
-        let a13 = arow1[kb + 3];
         let b0 = &b.data[kb * n..(kb + 1) * n];
         let b1 = &b.data[(kb + 1) * n..(kb + 2) * n];
         let b2 = &b.data[(kb + 2) * n..(kb + 3) * n];
         let b3 = &b.data[(kb + 3) * n..(kb + 4) * n];
-        for j in 0..n {
-            crow0[j] += a00 * b0[j] + a01 * b1[j] + a02 * b2[j] + a03 * b3[j];
-            crow1[j] += a10 * b0[j] + a11 * b1[j] + a12 * b2[j] + a13 * b3[j];
-        }
+        fma4_into(
+            [arow0[kb], arow0[kb + 1], arow0[kb + 2], arow0[kb + 3]],
+            b0, b1, b2, b3, crow0,
+        );
+        fma4_into(
+            [arow1[kb], arow1[kb + 1], arow1[kb + 2], arow1[kb + 3]],
+            b0, b1, b2, b3, crow1,
+        );
     }
     for kb in kk..k {
-        let av0 = arow0[kb];
-        let av1 = arow1[kb];
         let brow = &b.data[kb * n..(kb + 1) * n];
-        for j in 0..n {
-            crow0[j] += av0 * brow[j];
-        }
-        for j in 0..n {
-            crow1[j] += av1 * brow[j];
-        }
+        fma1_into(arow0[kb], brow, crow0);
+        fma1_into(arow1[kb], brow, crow1);
     }
 }
 
@@ -850,6 +992,272 @@ mod x86 {
     avx2_entry!(dot_i8_avx2, avx2_dot_rows1, 1);
     avx2_entry!(dot2_i8_avx2, avx2_dot_rows2, 2);
     avx2_entry!(dot4_i8_avx2, avx2_dot_rows4, 4);
+
+    // -----------------------------------------------------------------
+    // AVX-512 VNNI: `VPDPBUSD` consumes four K codes per dword lane
+    // per instruction. The instruction wants an *unsigned* left
+    // operand, so A codes are offset by +128 into [0, 255]:
+    //
+    //     Σ_k (a_k + 128) · b_k  =  Σ_k a_k·b_k  +  128 · Σ_k b_k
+    //
+    // One extra VPDPBUSD against an all-ones unsigned vector
+    // accumulates the per-column `Σ b_k` alongside (shared by every A
+    // row of the tile), and `acc − (colsum << 7)` restores the exact
+    // signed dot. Each u8×i8 product fits i16 (|255·128| = 32640 <
+    // 2¹⁵) and VPDPBUSD sums the four products into i32 without
+    // intermediate saturation (unlike VPDPBUSDS), so the whole scheme
+    // is exact integer arithmetic for any i8 codes, including -128.
+    // -----------------------------------------------------------------
+
+    /// Interleave four 16-byte panel rows into one zmm whose dword
+    /// lane `j` holds bytes `[r0[j], r1[j], r2[j], r3[j]]` — the
+    /// K-group layout VPDPBUSD consumes.
+    ///
+    /// Safety: caller must have AVX-512F detected (runtime) and pass
+    /// rows of ≥ 16 valid bytes.
+    #[target_feature(enable = "avx512f")]
+    unsafe fn interleave4x16(
+        r0: __m128i, r1: __m128i, r2: __m128i, r3: __m128i,
+    ) -> __m512i {
+        let t0 = _mm_unpacklo_epi8(r0, r1); // cols 0..8: r0,r1 pairs
+        let t1 = _mm_unpackhi_epi8(r0, r1); // cols 8..16
+        let t2 = _mm_unpacklo_epi8(r2, r3);
+        let t3 = _mm_unpackhi_epi8(r2, r3);
+        let u0 = _mm_unpacklo_epi16(t0, t2); // cols 0..4: r0..r3 dwords
+        let u1 = _mm_unpackhi_epi16(t0, t2); // cols 4..8
+        let u2 = _mm_unpacklo_epi16(t1, t3); // cols 8..12
+        let u3 = _mm_unpackhi_epi16(t1, t3); // cols 12..16
+        let z = _mm512_castsi128_si512(u0);
+        let z = _mm512_inserti32x4::<1>(z, u1);
+        let z = _mm512_inserti32x4::<2>(z, u2);
+        _mm512_inserti32x4::<3>(z, u3)
+    }
+
+    /// Pack 4 consecutive offset-A codes (`a + 128`, zero past the
+    /// block) into one dword for broadcasting.
+    #[inline]
+    fn offset_a_dword(arow: &[i8], k: usize, bs: usize) -> i32 {
+        let byte = |i: usize| {
+            if k + i < bs {
+                (arow[k + i] as i16 + 128) as u8
+            } else {
+                0
+            }
+        };
+        i32::from_le_bytes([byte(0), byte(1), byte(2), byte(3)])
+    }
+
+    /// AVX-512 VNNI row-tile kernel bodies: 16-column dword tiles, K
+    /// consumed four codes at a time. Generated per row count like
+    /// the AVX2 twin.
+    macro_rules! avx512vnni_dot_rows {
+        ($name:ident, $rows:literal) => {
+            /// Safety: caller guarantees the `DotI8` slice contract
+            /// and that avx512f+avx512bw+avx512vnni were
+            /// runtime-detected.
+            #[target_feature(enable = "avx512f,avx512bw,avx512vnni")]
+            #[allow(clippy::too_many_arguments)]
+            unsafe fn $name(
+                qa: &[i8], a_stride: usize, r: usize, k0: usize,
+                bs: usize, panel: &[i8], width: usize,
+                acci: &mut [i32],
+            ) {
+                const ROWS: usize = $rows;
+                let arows: [&[i8]; ROWS] = core::array::from_fn(|t| {
+                    &qa[(r + t) * a_stride + k0
+                        ..(r + t) * a_stride + k0 + bs]
+                });
+                let ones = _mm512_set1_epi8(1);
+                let jj = width & !15;
+                let kk = bs & !3;
+                let mut j = 0usize;
+                while j < jj {
+                    let mut acc = [_mm512_setzero_si512(); ROWS];
+                    let mut colsum = _mm512_setzero_si512();
+                    let mut k = 0usize;
+                    while k < kk {
+                        let b = interleave4x16(
+                            _mm_loadu_si128(
+                                panel.as_ptr().add((k0 + k) * width + j)
+                                    as *const __m128i,
+                            ),
+                            _mm_loadu_si128(
+                                panel
+                                    .as_ptr()
+                                    .add((k0 + k + 1) * width + j)
+                                    as *const __m128i,
+                            ),
+                            _mm_loadu_si128(
+                                panel
+                                    .as_ptr()
+                                    .add((k0 + k + 2) * width + j)
+                                    as *const __m128i,
+                            ),
+                            _mm_loadu_si128(
+                                panel
+                                    .as_ptr()
+                                    .add((k0 + k + 3) * width + j)
+                                    as *const __m128i,
+                            ),
+                        );
+                        colsum = _mm512_dpbusd_epi32(colsum, ones, b);
+                        for t in 0..ROWS {
+                            let a = _mm512_set1_epi32(offset_a_dword(
+                                arows[t], k, bs,
+                            ));
+                            acc[t] = _mm512_dpbusd_epi32(acc[t], a, b);
+                        }
+                        k += 4;
+                    }
+                    if k < bs {
+                        // K remainder (1-3 rows): missing rows load as
+                        // zero, contributing 0 to both the dot and the
+                        // column sum (the offset-A dword zero-pads the
+                        // matching bytes).
+                        let r0 = _mm_loadu_si128(
+                            panel.as_ptr().add((k0 + k) * width + j)
+                                as *const __m128i,
+                        );
+                        let r1 = if k + 1 < bs {
+                            _mm_loadu_si128(
+                                panel
+                                    .as_ptr()
+                                    .add((k0 + k + 1) * width + j)
+                                    as *const __m128i,
+                            )
+                        } else {
+                            _mm_setzero_si128()
+                        };
+                        let r2 = if k + 2 < bs {
+                            _mm_loadu_si128(
+                                panel
+                                    .as_ptr()
+                                    .add((k0 + k + 2) * width + j)
+                                    as *const __m128i,
+                            )
+                        } else {
+                            _mm_setzero_si128()
+                        };
+                        let r3 = _mm_setzero_si128();
+                        let b = interleave4x16(r0, r1, r2, r3);
+                        colsum = _mm512_dpbusd_epi32(colsum, ones, b);
+                        for t in 0..ROWS {
+                            let a = _mm512_set1_epi32(offset_a_dword(
+                                arows[t], k, bs,
+                            ));
+                            acc[t] = _mm512_dpbusd_epi32(acc[t], a, b);
+                        }
+                    }
+                    // acc holds Σ(a+128)·b; subtract 128·Σb per lane.
+                    let corr = _mm512_slli_epi32::<7>(colsum);
+                    for t in 0..ROWS {
+                        _mm512_storeu_si512(
+                            acci.as_mut_ptr().add(t * bs + j)
+                                as *mut __m512i,
+                            _mm512_sub_epi32(acc[t], corr),
+                        );
+                    }
+                    j += 16;
+                }
+                if j < width {
+                    dot_rows_tail(
+                        qa, a_stride, r, k0, bs, panel, width, ROWS, j,
+                        acci,
+                    );
+                }
+            }
+        };
+    }
+
+    avx512vnni_dot_rows!(avx512vnni_dot_rows1, 1);
+    avx512vnni_dot_rows!(avx512vnni_dot_rows2, 2);
+    avx512vnni_dot_rows!(avx512vnni_dot_rows4, 4);
+
+    macro_rules! avx512vnni_entry {
+        ($name:ident, $inner:ident, $rows:literal) => {
+            #[allow(clippy::too_many_arguments)]
+            pub(super) fn $name(
+                qa: &[i8], a_stride: usize, r: usize, k0: usize,
+                bs: usize, panel: &[i8], width: usize,
+                acci: &mut [i32], acc: &mut [f32],
+            ) {
+                // Safety: slice geometry is the DotI8 contract; the
+                // avx512vnni entries are only reachable through the
+                // AVX512VNNI vtable, which `available()` gates on
+                // runtime detection of all three features.
+                unsafe {
+                    $inner(qa, a_stride, r, k0, bs, panel, width, acci)
+                }
+                widen_rows(super::AVX512VNNI.widen, $rows, bs, width,
+                           acci, acc);
+            }
+        };
+    }
+
+    avx512vnni_entry!(dot_i8_avx512vnni, avx512vnni_dot_rows1, 1);
+    avx512vnni_entry!(dot2_i8_avx512vnni, avx512vnni_dot_rows2, 2);
+    avx512vnni_entry!(dot4_i8_avx512vnni, avx512vnni_dot_rows4, 4);
+
+    // -----------------------------------------------------------------
+    // f32 FMA primitives (v2 contract): 8-lane `_mm256_fmadd_ps`
+    // bodies with a scalar `mul_add` tail — every lane performs the
+    // same sequence of correctly-rounded fused operations as the
+    // scalar reference, so results are bit-identical.
+    // -----------------------------------------------------------------
+
+    /// Safety: caller must have runtime-detected AVX2 **and** FMA
+    /// (separate CPUID bits), and pass `b0..b3` of ≥ `acc.len()`.
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn fma4_avx2(
+        a: [f32; 4], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32],
+        acc: &mut [f32],
+    ) {
+        let n = acc.len();
+        let a0 = _mm256_set1_ps(a[0]);
+        let a1 = _mm256_set1_ps(a[1]);
+        let a2 = _mm256_set1_ps(a[2]);
+        let a3 = _mm256_set1_ps(a[3]);
+        let mut j = 0usize;
+        while j + 8 <= n {
+            let mut s = _mm256_loadu_ps(acc.as_ptr().add(j));
+            s = _mm256_fmadd_ps(a0, _mm256_loadu_ps(b0.as_ptr().add(j)), s);
+            s = _mm256_fmadd_ps(a1, _mm256_loadu_ps(b1.as_ptr().add(j)), s);
+            s = _mm256_fmadd_ps(a2, _mm256_loadu_ps(b2.as_ptr().add(j)), s);
+            s = _mm256_fmadd_ps(a3, _mm256_loadu_ps(b3.as_ptr().add(j)), s);
+            _mm256_storeu_ps(acc.as_mut_ptr().add(j), s);
+            j += 8;
+        }
+        while j < n {
+            let mut s = acc[j];
+            s = a[0].mul_add(b0[j], s);
+            s = a[1].mul_add(b1[j], s);
+            s = a[2].mul_add(b2[j], s);
+            s = a[3].mul_add(b3[j], s);
+            acc[j] = s;
+            j += 1;
+        }
+    }
+
+    /// Safety: see [`fma4_avx2`].
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn fma1_avx2(av: f32, brow: &[f32], acc: &mut [f32]) {
+        let n = acc.len();
+        let a = _mm256_set1_ps(av);
+        let mut j = 0usize;
+        while j + 8 <= n {
+            let s = _mm256_fmadd_ps(
+                a,
+                _mm256_loadu_ps(brow.as_ptr().add(j)),
+                _mm256_loadu_ps(acc.as_ptr().add(j)),
+            );
+            _mm256_storeu_ps(acc.as_mut_ptr().add(j), s);
+            j += 8;
+        }
+        while j < n {
+            acc[j] = av.mul_add(brow[j], acc[j]);
+            j += 1;
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -928,6 +1336,64 @@ mod arm {
     vtable_entry!(dot_i8_neon, 1);
     vtable_entry!(dot2_i8_neon, 2);
     vtable_entry!(dot4_i8_neon, 4);
+
+    // -----------------------------------------------------------------
+    // f32 FMA primitives (v2 contract): 4-lane `vfmaq_f32` bodies with
+    // a scalar `mul_add` tail — same per-lane fused op sequence as the
+    // scalar reference, so results are bit-identical.
+    // -----------------------------------------------------------------
+
+    /// Safety: caller must pass `b0..b3` of ≥ `acc.len()`. NEON (with
+    /// fused FMA) is baseline on aarch64.
+    pub(super) unsafe fn fma4_neon(
+        a: [f32; 4], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32],
+        acc: &mut [f32],
+    ) {
+        let n = acc.len();
+        let a0 = vdupq_n_f32(a[0]);
+        let a1 = vdupq_n_f32(a[1]);
+        let a2 = vdupq_n_f32(a[2]);
+        let a3 = vdupq_n_f32(a[3]);
+        let mut j = 0usize;
+        while j + 4 <= n {
+            let mut s = vld1q_f32(acc.as_ptr().add(j));
+            s = vfmaq_f32(s, a0, vld1q_f32(b0.as_ptr().add(j)));
+            s = vfmaq_f32(s, a1, vld1q_f32(b1.as_ptr().add(j)));
+            s = vfmaq_f32(s, a2, vld1q_f32(b2.as_ptr().add(j)));
+            s = vfmaq_f32(s, a3, vld1q_f32(b3.as_ptr().add(j)));
+            vst1q_f32(acc.as_mut_ptr().add(j), s);
+            j += 4;
+        }
+        while j < n {
+            let mut s = acc[j];
+            s = a[0].mul_add(b0[j], s);
+            s = a[1].mul_add(b1[j], s);
+            s = a[2].mul_add(b2[j], s);
+            s = a[3].mul_add(b3[j], s);
+            acc[j] = s;
+            j += 1;
+        }
+    }
+
+    /// Safety: see [`fma4_neon`].
+    pub(super) unsafe fn fma1_neon(av: f32, brow: &[f32], acc: &mut [f32]) {
+        let n = acc.len();
+        let a = vdupq_n_f32(av);
+        let mut j = 0usize;
+        while j + 4 <= n {
+            let s = vfmaq_f32(
+                vld1q_f32(acc.as_ptr().add(j)),
+                a,
+                vld1q_f32(brow.as_ptr().add(j)),
+            );
+            vst1q_f32(acc.as_mut_ptr().add(j), s);
+            j += 4;
+        }
+        while j < n {
+            acc[j] = av.mul_add(brow[j], acc[j]);
+            j += 1;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1099,6 +1565,191 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn offset_correction_exact_at_code_extremes() {
+        // The VNNI scheme computes Σ(a+128)·b − 128·Σb. Drive the
+        // offset and the column-sum correction to their extremes:
+        // A at the −128-adjacent end (offset byte 1) and at +127
+        // (offset byte 255), B saturated at ±127 so Σb is as large as
+        // it gets. Every backend must still reproduce the exact i64
+        // dot — including K remainders (bs % 4 ≠ 0) and sub-16 column
+        // tails, which exercise the zero-padded interleave rows.
+        for &(alo, ahi) in &[(-127i8, -127i8), (127, 127), (-127, 127)] {
+            for &bv in &[-127i8, 127] {
+                for &bs in &[4usize, 7, 16, 37, 128] {
+                    for &width in &[1usize, 4, 15, 16] {
+                        if width > bs {
+                            continue;
+                        }
+                        let qa: Vec<i8> = (0..4 * bs)
+                            .map(|i| if i % 2 == 0 { alo } else { ahi })
+                            .collect();
+                        let mut panel = vec![bv; bs * width];
+                        for (i, v) in panel.iter_mut().enumerate() {
+                            if i % 3 == 0 {
+                                *v = -bv;
+                            }
+                        }
+                        let want =
+                            ref_dot(&qa, bs, 0, 0, bs, &panel, width, 4);
+                        for kn in available() {
+                            let mut acci = vec![i32::MIN; 4 * bs];
+                            let mut acc = vec![f32::NAN; 4 * bs];
+                            (kn.dot4_i8)(
+                                &qa, bs, 0, 0, bs, &panel, width,
+                                &mut acci, &mut acc,
+                            );
+                            for t in 0..4 {
+                                for j in 0..width {
+                                    assert_eq!(
+                                        acci[t * bs + j] as i64,
+                                        want[t * width + j],
+                                        "{} a=({alo},{ahi}) b={bv} \
+                                         bs={bs} width={width} t={t} \
+                                         j={j}",
+                                        kn.name
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unavailable_preference_falls_back_to_detected() {
+        // A calibrated preference can name a backend the running CPU
+        // does not provide (warm states travel between hosts): select
+        // must fall back to the detected best, not panic — only the
+        // env override is a hard error.
+        static GHOST: Kernels = Kernels {
+            name: "test-unavailable-isa",
+            dot_i8: dot_i8_scalar,
+            dot2_i8: dot2_i8_scalar,
+            dot4_i8: dot4_i8_scalar,
+            dense2: dense_rows2,
+            widen: widen_i32,
+        };
+        let _g = PREFERRED_TEST_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let before = select();
+        set_preferred(&GHOST);
+        if std::env::var("PALLAS_KERNEL").map_or(true, |v| v.is_empty()) {
+            assert_eq!(select().name, detect_best().name,
+                       "unavailable preference must fall back");
+        }
+        set_preferred(before);
+        assert_eq!(select().name, before.name);
+    }
+
+    fn rand_f32(n: usize, rng: &mut Pcg64) -> Vec<f32> {
+        (0..n).map(|_| (rng.uniform() as f32 - 0.5) * 4.0).collect()
+    }
+
+    #[test]
+    fn f32_simd_bit_identical_to_scalar_mul_add() {
+        // The v2 contract's load-bearing property: the vectorized FMA
+        // path and the scalar mul_add path produce the same bits on
+        // arbitrary (non-integer) data, because every lane performs
+        // the same sequence of correctly-rounded fused ops.
+        let mut rng = Pcg64::new(0xF3A);
+        for &(bs, width) in &[(5usize, 3usize), (16, 16), (33, 19),
+                              (64, 31)] {
+            let af = rand_f32(2 * bs, &mut rng);
+            let panel = rand_f32(bs * width, &mut rng);
+            let mut simd0 = vec![0.0f32; bs];
+            let mut simd1 = vec![0.0f32; bs];
+            let mut sc0 = vec![0.0f32; bs];
+            let mut sc1 = vec![0.0f32; bs];
+            let prev = f32_simd_enabled();
+            set_f32_simd_enabled(true);
+            panel_dot2(&af, bs, 0, 0, bs, &panel, width, &mut simd0,
+                       &mut simd1);
+            set_f32_simd_enabled(false);
+            panel_dot2(&af, bs, 0, 0, bs, &panel, width, &mut sc0,
+                       &mut sc1);
+            set_f32_simd_enabled(prev);
+            assert_eq!(simd0, sc0, "row0 bs={bs} width={width}");
+            assert_eq!(simd1, sc1, "row1 bs={bs} width={width}");
+        }
+    }
+
+    /// The v1 (seed) f32 op order, kept verbatim for the bridge test:
+    /// 4-wide grouped unfused sums with a zero-code skip in the K
+    /// remainder.
+    #[allow(clippy::too_many_arguments)]
+    fn panel_dot_v1(
+        af: &[f32], a_stride: usize, r: usize, k0: usize, bs: usize,
+        panel: &[f32], width: usize, acc: &mut [f32],
+    ) {
+        acc[..width].fill(0.0);
+        let arow = &af[r * a_stride + k0..r * a_stride + k0 + bs];
+        let kk = bs & !3;
+        for k in (0..kk).step_by(4) {
+            let a0 = arow[k];
+            let a1 = arow[k + 1];
+            let a2 = arow[k + 2];
+            let a3 = arow[k + 3];
+            let b0 = &panel[(k0 + k) * width..][..width];
+            let b1 = &panel[(k0 + k + 1) * width..][..width];
+            let b2 = &panel[(k0 + k + 2) * width..][..width];
+            let b3 = &panel[(k0 + k + 3) * width..][..width];
+            for j in 0..width {
+                acc[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j]
+                    + a3 * b3[j];
+            }
+        }
+        for k in kk..bs {
+            let av = arow[k];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &panel[(k0 + k) * width..][..width];
+            for j in 0..width {
+                acc[j] += av * brow[j];
+            }
+        }
+    }
+
+    #[test]
+    fn v2_bridge_bounds_drift_from_v1_order() {
+        // The re-anchor is a deliberate contract change; this bridge
+        // bounds the drift. On arbitrary f32 data the two orders may
+        // differ by rounding only (tight relative tolerance); on
+        // integer-code-valued data within the 2²⁴ exact range they
+        // must agree bit-for-bit — which is why the quantized SimF32 /
+        // residual paths did not move under the re-anchor.
+        let mut rng = Pcg64::new(0xB21D);
+        for &(bs, width) in &[(16usize, 16usize), (33, 19), (64, 32)] {
+            let af = rand_f32(bs, &mut rng);
+            let panel = rand_f32(bs * width, &mut rng);
+            let mut v2 = vec![0.0f32; bs];
+            let mut v1 = vec![0.0f32; bs];
+            panel_dot(&af, bs, 0, 0, bs, &panel, width, &mut v2);
+            panel_dot_v1(&af, bs, 0, 0, bs, &panel, width, &mut v1);
+            for j in 0..width {
+                let denom = v1[j].abs().max(1.0);
+                let rel = (v2[j] - v1[j]).abs() / denom;
+                assert!(rel < 1e-5,
+                        "drift {rel} at j={j} bs={bs} width={width}");
+            }
+            // integer-code-valued data: both orders are exact
+            let qa = rand_i8(bs, &mut rng);
+            let qp = rand_i8(bs * width, &mut rng);
+            let afi: Vec<f32> =
+                qa.iter().map(|&v| v as f32).collect();
+            let pfi: Vec<f32> =
+                qp.iter().map(|&v| v as f32).collect();
+            panel_dot(&afi, bs, 0, 0, bs, &pfi, width, &mut v2);
+            panel_dot_v1(&afi, bs, 0, 0, bs, &pfi, width, &mut v1);
+            assert_eq!(&v2[..width], &v1[..width],
+                       "integer-exact range bs={bs} width={width}");
         }
     }
 

@@ -16,19 +16,22 @@
 //! [`Kernels`] vtable — the CPU stand-in for the int8-dot tensor-core
 //! units the paper's 1.57x speedup rides on. Backends: `scalar`
 //! (portable floor, the seed's 4-unrolled loops), `sse2` / `avx2`
-//! (x86_64, exact i16-pair multiplies widened to i32), and `neon`
-//! (aarch64 `vmlal_s16`). Selection happens once per plan build:
-//! `PALLAS_KERNEL=scalar|sse2|avx2|neon` env override → the backend
-//! calibration measured fastest
+//! (x86_64, exact i16-pair multiplies widened to i32), `avx512vnni`
+//! (x86_64, `VPDPBUSD` dword dot tiles with the unsigned-A offset
+//! trick), and `neon` (aarch64 `vmlal_s16`). Selection happens once
+//! per plan build: `PALLAS_KERNEL=scalar|sse2|avx2|avx512vnni|neon`
+//! env override → the backend calibration measured fastest
 //! (`SubstrateCalibration::install_fastest_backend`) → the fastest
 //! detected one. Integer accumulation makes every backend
-//! bit-identical to the scalar floor, the f32 simulation, the seed
+//! bit-identical to the scalar floor, the f32 simulation, the
 //! `*_baseline` oracles, and the exact i64 references for
 //! `bs ≤ I8_EXACT_MAX_BS` — `tests/engine_prop.rs` asserts this per
-//! backend. To add one (AVX-512 VNNI next), follow the recipe in
-//! `docs/ARCHITECTURE.md` § "Adding a kernel backend": implement the
-//! three `DotI8` row tiles, register the static in `available()`, and
-//! the test/bench sweeps pick it up automatically.
+//! backend. The f32 kernels follow the v2 op-order contract
+//! (per-lane sequential FMA, vectorized AVX2/NEON with a bit-equal
+//! scalar floor — see `kernels`). To add a backend (AMX next), follow
+//! the recipe in `docs/ARCHITECTURE.md` § "Adding a kernel backend":
+//! implement the three `DotI8` row tiles, register the static in
+//! `available()`, and the test/bench sweeps pick it up automatically.
 //!
 //! ## Layer-step pipeline
 //!

@@ -16,8 +16,8 @@
 //!     = q(W) + packed panels   ──►     rounding — unbiased grads)
 //!       + pinned backend            fwd  Y  = X·W    (cached W)
 //!    built on miss, owned           bwd  dX = dY·Wᵀ  (cached Wᵀ)
-//!    across steps, LRU-evicted      bwd  dW = Xᵀ·dY  (fresh; Xᵀ on
-//!                                       the fallback path at θ_site)
+//!    across steps, LRU-evicted      bwd  dW = Xᵀ·dY  (fresh plan;
+//!                                       Xᵀ = permuted forward quant)
 //!                                   record executed fallback rates
 //!   RateAccumulator ──────────►   ThresholdController (Alg 2) at
 //!    per-site means               the step boundary: θ adapts from
@@ -40,10 +40,14 @@
 //!   same outlier-bearing activation as the forward; quantizing Xᵀ
 //!   with plain nearest INT8 silently drops the per-block fallback
 //!   exactly where the paper (and Jetfire) say it matters. Xᵀ rides
-//!   the fallback path at the site's θ — its block decisions are the
-//!   transpose of the forward's (AbsMax is symmetric under block
-//!   transposition), and the executed backward rate is reported per
-//!   site ([`SiteReport::bwd_fallback_rate`]).
+//!   the fallback path at the site's θ — and because AbsMax is
+//!   symmetric under block transposition, its quantization is
+//!   obtained by *permuting* the forward's
+//!   ([`FallbackQuant::transposed`](crate::quant::FallbackQuant::transposed)),
+//!   bit-identical to re-running
+//!   Algorithm 1 on xᵀ at zero quantization cost. The executed
+//!   backward rate is reported per site
+//!   ([`SiteReport::bwd_fallback_rate`]).
 //!
 //! [`ModelStep`] scales the same loop from one layer to a whole
 //! N-layer model + LM head sharing **one** `PlanCache`, and adds
@@ -54,9 +58,11 @@
 //! What is packed **once** (cache hit = zero quantization/packing
 //! work): the weight codes, their column panels for the plan's
 //! [`DataPath`], and the transposed-weight twin for `dX`. What is
-//! rebuilt **per call**: the activation fallback quant, the gradient
-//! quant, and the `dW` plan whose operands both change every
-//! microstep. `quant::quant_work_counters` makes the split observable
+//! rebuilt **per call**: the activation fallback quant (whose
+//! permutation also serves as dW's Xᵀ operand — two quantization
+//! passes per site per microstep, not three), the gradient quant,
+//! and the `dW` plan whose operands both change every microstep.
+//! `quant::quant_work_counters` makes the split observable
 //! — the cache-hit regression tests and `benches/layer_step.rs` lean
 //! on it.
 //!
@@ -473,17 +479,16 @@ fn run_site(
     let dx = wpt.plan_int8(&qdy, threads).execute();
     // dW = Xᵀ·dY: both operands change every microstep, so this plan
     // is legitimately fresh (qdy serves as the A operand of dX above
-    // and the B operand here — one quantization, two roles). Xᵀ goes
-    // through fallback quantization at the same θ as the forward:
-    // its AbsMax block metrics are the transpose of X's, so the
-    // outlier blocks the forward protected stay protected in the
-    // weight gradient. (The codes themselves are laid out transposed,
-    // which is why the forward's quantization cannot be reused
-    // directly — only its block *decisions* carry over, and they do
-    // so automatically through the symmetric metric.)
-    let xt = x.transpose();
-    let fxt = fallback_quant_threads(&xt, theta, block, INT8_LEVELS,
-                                     Criterion::AbsMax, threads);
+    // and the B operand here — one quantization, two roles). Xᵀ's
+    // fallback quantization is the *permutation* of the forward's:
+    // under AbsMax every per-block quantity (absmax, scales, nearest
+    // codes, the u decision at θ) is symmetric under transposition,
+    // so `transposed()` is bit-identical to re-running Algorithm 1 on
+    // xᵀ — the outlier blocks the forward protected stay protected in
+    // the weight gradient, at zero extra quantization cost
+    // (`dw_routes_transposed_activation_through_fallback` pins the
+    // identity against a fresh re-quantization).
+    let fxt = fx.transposed();
     let dw = GemmPlan::new_fallback_path(&fxt, &qdy, &fxt.u, threads,
                                          path)
         .with_kernels(kn)
@@ -1453,10 +1458,11 @@ mod tests {
     #[test]
     fn cache_hit_skips_weight_requantization() {
         // Regression via the thread-local work counters: the second
-        // microstep must do only per-call quantization (activation,
-        // gradient, Xᵀ — 3 per site) and one panel pack (dY as the
-        // dW B-operand); the weight halves (2 quants + 2 packs per
-        // site) happen exactly once.
+        // microstep must do only per-call quantization (activation +
+        // gradient — 2 per site; dW's Xᵀ is a permutation of the
+        // activation quant, not a pass) and one panel pack (dY as
+        // the dW B-operand); the weight halves (2 quants + 2 packs
+        // per site) happen exactly once.
         let mut ls = small_step(2);
         let n_sites = ls.sites().len();
         let (acts, grads) = synth_microbatch(ls.sites(), 5, 150.0);
@@ -1465,15 +1471,15 @@ mod tests {
         let (q1, p1) = quant_work_counters();
         assert_eq!(r1.cache_misses as usize, 2 * n_sites);
         assert_eq!(r1.cache_hits, 0);
-        assert_eq!((q1 - q0) as usize, 5 * n_sites,
-                   "cold microstep: 3 per-call + 2 weight quants/site");
+        assert_eq!((q1 - q0) as usize, 4 * n_sites,
+                   "cold microstep: 2 per-call + 2 weight quants/site");
         assert_eq!((p1 - p0) as usize, 3 * n_sites,
                    "cold microstep: W, Wᵀ and dY packs per site");
         let (_, r2) = ls.microstep(&acts, &grads);
         let (q2, p2) = quant_work_counters();
         assert_eq!(r2.cache_misses, 0);
         assert_eq!(r2.cache_hits as usize, 2 * n_sites);
-        assert_eq!((q2 - q1) as usize, 3 * n_sites,
+        assert_eq!((q2 - q1) as usize, 2 * n_sites,
                    "warm microstep must not re-quantize weights");
         assert_eq!((p2 - p1) as usize, n_sites,
                    "warm microstep packs only the fresh dY operand");
@@ -1760,7 +1766,9 @@ mod tests {
     fn dw_routes_transposed_activation_through_fallback() {
         // The dW bugfix: Xᵀ must carry X's per-block outlier
         // handling. Exact i64 oracle + u-mask transposition check +
-        // the reported backward rate.
+        // the reported backward rate. The oracle quantizes xᵀ from
+        // scratch, so this also pins `fx.transposed()` (the
+        // pipeline's permuted reuse) against a fresh Algorithm 1 run.
         let mut ls = small_step(1);
         let (acts, grads) = synth_microbatch(ls.sites(), 33, 250.0);
         // θ from a probe at a moderate rate so fallback is active

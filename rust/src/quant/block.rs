@@ -286,6 +286,56 @@ impl BlockQuant {
             .clone()
     }
 
+    /// The transposed quantization, built by **permuting** the stored
+    /// codes and per-block grids instead of re-running quantization on
+    /// `xᵀ`.
+    ///
+    /// For [`Rounding::Nearest`] this is *bit-identical* to
+    /// `block_quant(&x.transpose(), ..)`: per-block absmax (a max over
+    /// the same elements) and scale are symmetric under transposition,
+    /// padding is symmetric (`prows`/`pcols` swap), and nearest
+    /// rounding is elementwise-deterministic. Stochastically-rounded
+    /// quantizations do **not** transpose this way (per-block RNG
+    /// streams are indexed by block position), so callers on the SR
+    /// path must re-quantize.
+    ///
+    /// Deliberately does *not* bump the quantization work counter —
+    /// this is a permutation, not a quantization pass — which is what
+    /// makes the saving visible to the plan-cache counter tests. The
+    /// packed-view caches start empty (panel layouts do not permute).
+    pub fn transposed(&self) -> BlockQuant {
+        let (tprows, tpcols) = (self.pcols, self.prows);
+        let mut q = vec![0i8; self.q.len()];
+        for r in 0..self.prows {
+            let row = &self.q[r * self.pcols..(r + 1) * self.pcols];
+            for (c, &v) in row.iter().enumerate() {
+                q[c * tpcols + r] = v;
+            }
+        }
+        let (rb, cb) = (self.rb(), self.cb());
+        let mut scale = vec![1.0f32; rb * cb];
+        let mut absmax = vec![0.0f32; rb * cb];
+        for br in 0..rb {
+            for bc in 0..cb {
+                scale[bc * rb + br] = self.scale[br * cb + bc];
+                absmax[bc * rb + br] = self.absmax[br * cb + bc];
+            }
+        }
+        BlockQuant {
+            rows: self.cols,
+            cols: self.rows,
+            block: self.block,
+            prows: tprows,
+            pcols: tpcols,
+            q,
+            scale,
+            absmax,
+            f32_cache: OnceLock::new(),
+            panel_cache: OnceLock::new(),
+            i8_panel_cache: OnceLock::new(),
+        }
+    }
+
     /// Whether the f32 code copy has been materialized. The Int8 data
     /// path must leave this `false` (the 4x resident-set saving); the
     /// SimF32 oracles build it lazily on demand.
@@ -615,6 +665,31 @@ mod tests {
         }
         assert_eq!(4 * pi.bytes(), p.bytes());
         assert!(Arc::ptr_eq(&pi, &bq.col_panels_i8()));
+    }
+
+    #[test]
+    fn transposed_bit_identical_to_requantized_transpose() {
+        // Pin the permutation against the ground truth: a fresh
+        // Nearest quantization of xᵀ — including a non-multiple-of-
+        // block shape so the padding swap is exercised.
+        for (rows, cols) in [(32usize, 32usize), (40, 23), (17, 49)] {
+            let x = randmat(rows, cols, 31 + rows as u64);
+            let bq = block_quant(&x, 16, INT8_LEVELS, Rounding::Nearest);
+            let (q0, p0) = quant_work_counters();
+            let bt = bq.transposed();
+            let (q1, p1) = quant_work_counters();
+            assert_eq!((q1 - q0, p1 - p0), (0, 0),
+                       "a permutation must not count as quant work");
+            let fresh = block_quant(&x.transpose(), 16, INT8_LEVELS,
+                                    Rounding::Nearest);
+            assert_eq!(bt.rows, fresh.rows);
+            assert_eq!(bt.cols, fresh.cols);
+            assert_eq!(bt.prows, fresh.prows);
+            assert_eq!(bt.pcols, fresh.pcols);
+            assert_eq!(bt.q, fresh.q, "({rows},{cols}) codes");
+            assert_eq!(bt.scale, fresh.scale);
+            assert_eq!(bt.absmax, fresh.absmax);
+        }
     }
 
     #[test]

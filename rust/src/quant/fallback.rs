@@ -94,6 +94,62 @@ impl FallbackQuant {
     pub fn residual_f32_built(&self) -> bool {
         self.rf32_cache.get().is_some()
     }
+
+    /// The transposed fallback quantization, built by **permuting**
+    /// the stored codes and per-block grids instead of re-running
+    /// Algorithm 1 on `xᵀ`.
+    ///
+    /// Under [`Criterion::AbsMax`] (the pipeline's criterion) this is
+    /// *bit-identical* to `fallback_quant(&x.transpose(), ..)`: the
+    /// base quantization transposes exactly (see
+    /// [`BlockQuant::transposed`]), the residual `rmax` is a max over
+    /// the same elements, `safe_scale` and the elementwise
+    /// nearest-rounded residual codes are deterministic, and the
+    /// AbsMax metric *is* the base absmax — order-independent. The
+    /// `L1`/`L1Rel` metrics are f64 sums whose accumulation order
+    /// follows the element sweep, so a transposed re-quantization can
+    /// differ from the permuted metric in the last bits there (the
+    /// `u` decision can then flip only for blocks sitting exactly on
+    /// θ); callers needing bit-identity on those criteria must
+    /// re-quantize.
+    ///
+    /// Like `BlockQuant::transposed`, this bumps **no** quantization
+    /// work counter — it is a permutation, not a quantization pass —
+    /// which is how the pipeline's counter tests see the saving. The
+    /// residual f32 cache starts empty.
+    pub fn transposed(&self) -> FallbackQuant {
+        let base = self.base.transposed();
+        // Residual codes share base.q's padded layout; permute them
+        // with the same loop.
+        let (prows, pcols) = (self.base.prows, self.base.pcols);
+        let tpcols = prows;
+        let mut rq = vec![0i8; self.rq.len()];
+        for r in 0..prows {
+            let row = &self.rq[r * pcols..(r + 1) * pcols];
+            for (c, &v) in row.iter().enumerate() {
+                rq[c * tpcols + r] = v;
+            }
+        }
+        let (rb, cb) = (self.base.rb(), self.base.cb());
+        let mut rscale = vec![1.0f32; rb * cb];
+        let mut u = vec![false; rb * cb];
+        let mut metric = vec![0.0f32; rb * cb];
+        for br in 0..rb {
+            for bc in 0..cb {
+                rscale[bc * rb + br] = self.rscale[br * cb + bc];
+                u[bc * rb + br] = self.u[br * cb + bc];
+                metric[bc * rb + br] = self.metric[br * cb + bc];
+            }
+        }
+        FallbackQuant {
+            base,
+            rq,
+            rscale,
+            u,
+            metric,
+            rf32_cache: OnceLock::new(),
+        }
+    }
 }
 
 /// Residual-quantize one block row: metric sweep, fallback decision,
@@ -374,6 +430,39 @@ mod tests {
         // determinism
         assert_eq!(theta_for_rate(&metrics, 0.3).to_bits(),
                    theta_for_rate(&metrics, 0.3).to_bits());
+    }
+
+    #[test]
+    fn transposed_bit_identical_to_requantized_transpose() {
+        // Pin for the pipeline's dW optimization: permuting the
+        // forward activation quantization must equal re-running
+        // Algorithm 1 on xᵀ bit for bit (AbsMax criterion), without
+        // registering any quantization work.
+        use crate::quant::block::quant_work_counters;
+        for (rows, cols, theta) in
+            [(32usize, 32usize, 30.0f32), (40, 23, 20.0), (17, 49, -1.0)]
+        {
+            let x = outlier_mat(rows, cols, 0xF1, 6, 200.0);
+            let fx = fallback_quant(&x, theta, 16, INT8_LEVELS,
+                                    Criterion::AbsMax);
+            let before = quant_work_counters();
+            let ft = fx.transposed();
+            let after = quant_work_counters();
+            assert_eq!(before, after,
+                       "transposed() must not count as quant work");
+            let fresh = fallback_quant(&x.transpose(), theta, 16,
+                                       INT8_LEVELS, Criterion::AbsMax);
+            assert_eq!(ft.base.rows, fresh.base.rows);
+            assert_eq!(ft.base.cols, fresh.base.cols);
+            assert_eq!(ft.base.q, fresh.base.q, "({rows},{cols})");
+            assert_eq!(ft.base.scale, fresh.base.scale);
+            assert_eq!(ft.base.absmax, fresh.base.absmax);
+            assert_eq!(ft.rq, fresh.rq, "({rows},{cols})");
+            assert_eq!(ft.rscale, fresh.rscale);
+            assert_eq!(ft.u, fresh.u);
+            assert_eq!(ft.metric, fresh.metric);
+            assert!(!ft.residual_f32_built());
+        }
     }
 
     #[test]

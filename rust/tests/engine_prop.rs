@@ -16,8 +16,9 @@
 //! backend available on the host** (`kernels::available()`, the same
 //! set the `PALLAS_KERNEL` override can force), over block sizes that
 //! are not multiples of any SIMD width and shapes with odd column
-//! tails — so scalar, sse2, avx2 and neon all face the i64 oracles
-//! directly.
+//! tails — so scalar, sse2, avx2, avx512vnni and neon all face the
+//! i64 oracles directly. (Longer, hostile-shape sweeps live in the
+//! nightly `kernel_fuzz` differential fuzzer.)
 
 use dbfq::gemm::kernels;
 use dbfq::gemm::{

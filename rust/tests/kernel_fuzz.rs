@@ -1,0 +1,306 @@
+//! Randomized differential fuzzer: every microkernel backend on the
+//! host vs the exact i64 oracles, over hostile shapes.
+//!
+//! The per-commit property suites (`engine_prop.rs` etc.) run a fixed
+//! number of cases; this binary instead runs **as many random cases
+//! as fit a wall-clock budget**, libLISA-style: generate a random
+//! configuration, run it through every backend (`kernels::available()`
+//! — the same set `PALLAS_KERNEL` can force), and demand bit-identity
+//! with the exact integer reference. Disagreement of any backend with
+//! the oracle — or of two backends with each other — is a bug by the
+//! engine's contract.
+//!
+//! Deliberately hostile inputs:
+//! * prime K / width / N (every SIMD j-tail and K-remainder path),
+//! * block size at the `I8_EXACT_MAX_BS` exactness boundary,
+//! * saturated ±127 codes (the worst case for the sse2/avx2 i16-pair
+//!   scheme and the avx512vnni unsigned-offset correction),
+//! * zero-heavy codes and all-fallback u-masks.
+//!
+//! Knobs (env):
+//! * `DBFQ_FUZZ_SEED` — base seed (default fixed); every failure
+//!   message carries the case seed for replay.
+//! * `DBFQ_FUZZ_SECS` — wall-clock budget per fuzz test (default 1.5,
+//!   so the suite stays cheap in PR CI; the nightly workflow sets
+//!   300).
+
+use std::time::{Duration, Instant};
+
+use dbfq::gemm::kernels::{self, Kernels};
+use dbfq::gemm::{
+    block_gemm_reference, fallback_gemm_reference, DataPath, GemmPlan,
+    I8_EXACT_MAX_BS,
+};
+use dbfq::quant::{block_quant, fallback_quant, Criterion, Rounding,
+                  INT8_LEVELS};
+use dbfq::util::rng::Pcg64;
+use dbfq::util::Mat;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn budget() -> Duration {
+    Duration::from_secs_f64(env_f64("DBFQ_FUZZ_SECS", 1.5))
+}
+
+fn base_seed() -> u64 {
+    env_u64("DBFQ_FUZZ_SEED", 0xF0_22_5EED_2026)
+}
+
+/// Code-generation regime for one case.
+#[derive(Clone, Copy, Debug)]
+enum Regime {
+    /// uniform codes in [-127, 127]
+    Uniform,
+    /// every code ±127 (saturation / offset-correction worst case)
+    Saturated,
+    /// mostly zero, a few ±127 spikes
+    Sparse,
+}
+
+fn pick_regime(rng: &mut Pcg64) -> Regime {
+    match rng.below(4) {
+        0 => Regime::Saturated,
+        1 => Regime::Sparse,
+        _ => Regime::Uniform,
+    }
+}
+
+fn rand_codes(n: usize, regime: Regime, rng: &mut Pcg64) -> Vec<i8> {
+    (0..n)
+        .map(|_| match regime {
+            Regime::Uniform => (rng.below(255) as i32 - 127) as i8,
+            Regime::Saturated => {
+                if rng.below(2) == 0 { 127 } else { -127 }
+            }
+            Regime::Sparse => match rng.below(8) {
+                0 => 127,
+                1 => -127,
+                _ => 0,
+            },
+        })
+        .collect()
+}
+
+/// f32 data built from raw codes. When a block contains a ±127
+/// element its absmax is 127, the scale is 1, and every code
+/// round-trips exactly (the Saturated regime guarantees this);
+/// otherwise quantization re-derives codes — equally fine for a
+/// differential test, which only needs *some* valid quantization.
+fn mat_from_codes(rows: usize, cols: usize, codes: &[i8]) -> Mat {
+    Mat::from_vec(rows, cols,
+                  codes.iter().map(|&c| c as f32).collect())
+}
+
+/// Exact i64 reference for a `rows`-row dot tile, mirroring the
+/// kernel calling convention (`panel[(k0 + k) * width + j]`).
+#[allow(clippy::too_many_arguments)]
+fn ref_dot(
+    qa: &[i8], a_stride: usize, r: usize, k0: usize, bs: usize,
+    panel: &[i8], width: usize, rows: usize,
+) -> Vec<i64> {
+    let mut out = vec![0i64; rows * width];
+    for t in 0..rows {
+        let arow = &qa[(r + t) * a_stride + k0..];
+        for j in 0..width {
+            let mut s = 0i64;
+            for k in 0..bs {
+                s += arow[k] as i64
+                    * panel[(k0 + k) * width + j] as i64;
+            }
+            out[t * width + j] = s;
+        }
+    }
+    out
+}
+
+/// One random kernel-level case: raw codes through every backend's
+/// dot1/dot2/dot4 tiles vs the i64 reference.
+fn fuzz_dot_case(case_seed: u64, backends: &[&'static Kernels]) {
+    let mut rng = Pcg64::new(case_seed);
+    // hostile block sizes: tiny, prime, SIMD-misaligned, large
+    let bs = [1usize, 2, 3, 4, 5, 7, 8, 12, 13, 16, 17, 31, 37, 61,
+              64, 101, 128, 251][rng.below(18)];
+    // width ≤ bs is the engine contract; primes + SIMD tails
+    let width = 1 + rng.below(bs.min(67));
+    let k0 = bs * rng.below(3);
+    let a_stride = k0 + bs + rng.below(5);
+    let rows = 4; // dot4 needs 4 rows; reuse for all tiles
+    let r = rng.below(2);
+    let regime = pick_regime(&mut rng);
+    let qa = rand_codes((r + rows) * a_stride, regime, &mut rng);
+    let panel = rand_codes((k0 + bs) * width, regime, &mut rng);
+    let want = ref_dot(&qa, a_stride, r, k0, bs, &panel, width, rows);
+
+    for &kn in backends {
+        for (tile_rows, dot) in
+            [(1usize, kn.dot_i8), (2, kn.dot2_i8), (4, kn.dot4_i8)]
+        {
+            // row t's results land bs apart in both workspaces
+            let mut acci = vec![0i32; tile_rows * bs];
+            let mut acc = vec![0.0f32; tile_rows * bs];
+            dot(&qa, a_stride, r, k0, bs, &panel, width, &mut acci,
+                &mut acc);
+            for t in 0..tile_rows {
+                for j in 0..width {
+                    let w = want[t * width + j];
+                    let got = acci[t * bs + j];
+                    assert_eq!(
+                        got as i64, w,
+                        "backend {} dot{tile_rows} acci \
+                         seed={case_seed:#x} bs={bs} width={width} \
+                         k0={k0} regime={regime:?} t={t} j={j}",
+                        kn.name
+                    );
+                    let gotf = acc[t * bs + j];
+                    assert_eq!(
+                        gotf.to_bits(), (w as f32).to_bits(),
+                        "backend {} dot{tile_rows} widen \
+                         seed={case_seed:#x} bs={bs} width={width} \
+                         t={t} j={j}",
+                        kn.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fuzz_dot_tiles_vs_i64_reference() {
+    let backends = kernels::available();
+    let seed = base_seed();
+    let deadline = Instant::now() + budget();
+    let mut cases = 0u64;
+    while Instant::now() < deadline {
+        fuzz_dot_case(seed.wrapping_add(cases), &backends);
+        cases += 1;
+    }
+    println!(
+        "kernel_fuzz dot tiles: {cases} cases, seed {seed:#x}, \
+         backends {:?}",
+        backends.iter().map(|k| k.name).collect::<Vec<_>>()
+    );
+    assert!(cases > 0);
+}
+
+/// One random engine-level case: quantized matrices through
+/// `GemmPlan` (both int8 and fallback precisions, true-i8 path) on
+/// every backend vs the exact references.
+fn fuzz_engine_case(case_seed: u64, backends: &[&'static Kernels]) {
+    let mut rng = Pcg64::new(case_seed);
+    let bs = [3usize, 5, 7, 13, 16, 17, 31][rng.below(7)];
+    // prime-heavy dims with occasional exact multiples
+    let dim = |rng: &mut Pcg64, bs: usize| match rng.below(4) {
+        0 => [7usize, 13, 23, 41, 53][rng.below(5)],
+        1 => bs * (1 + rng.below(3)),
+        _ => 1 + rng.below(3 * bs),
+    };
+    let (m, k, n) = (dim(&mut rng, bs), dim(&mut rng, bs),
+                    dim(&mut rng, bs));
+    let regime = pick_regime(&mut rng);
+    let a = mat_from_codes(m, k, &rand_codes(m * k, regime, &mut rng));
+    let b = mat_from_codes(k, n, &rand_codes(k * n, regime, &mut rng));
+    let qa = block_quant(&a, bs, INT8_LEVELS, Rounding::Nearest);
+    let qb = block_quant(&b, bs, INT8_LEVELS, Rounding::Nearest);
+    let c_ref = block_gemm_reference(&qa, &qb);
+    // all-fallback vs no-fallback vs random masks
+    let theta = match rng.below(3) {
+        0 => -1.0,
+        1 => f32::INFINITY,
+        _ => 0.0, // AbsMax metric > 0 wherever the block is nonzero
+    };
+    let fa = fallback_quant(&a, theta, bs, INT8_LEVELS,
+                            Criterion::AbsMax);
+    let f_ref = fallback_gemm_reference(&fa, &qb, &fa.u);
+    let threads = 1 + rng.below(4);
+    for &kn in backends {
+        let c = GemmPlan::new_int8_path(&qa, &qb, threads,
+                                        DataPath::Int8)
+            .with_kernels(kn)
+            .execute();
+        assert_eq!(
+            c.data, c_ref.data,
+            "backend {} int8 vs i64 oracle seed={case_seed:#x} \
+             ({m},{k},{n}) bs={bs} regime={regime:?} \
+             threads={threads}",
+            kn.name
+        );
+        let f = GemmPlan::new_fallback_path(&fa, &qb, &fa.u, threads,
+                                            DataPath::Int8)
+            .with_kernels(kn)
+            .execute();
+        assert_eq!(
+            f.data, f_ref.data,
+            "backend {} fallback vs i64 oracle seed={case_seed:#x} \
+             ({m},{k},{n}) bs={bs} theta={theta} regime={regime:?} \
+             threads={threads}",
+            kn.name
+        );
+    }
+}
+
+#[test]
+fn fuzz_engine_paths_vs_i64_oracle() {
+    let backends = kernels::available();
+    let seed = base_seed() ^ 0x5EC0_0DD;
+    let deadline = Instant::now() + budget();
+    let mut cases = 0u64;
+    while Instant::now() < deadline {
+        fuzz_engine_case(seed.wrapping_add(cases), &backends);
+        cases += 1;
+    }
+    println!(
+        "kernel_fuzz engine paths: {cases} cases, seed {seed:#x}"
+    );
+    assert!(cases > 0);
+}
+
+#[test]
+fn fuzz_boundary_block_size_saturated() {
+    // The exactness cliff edge: bs = I8_EXACT_MAX_BS with every code
+    // saturated puts each block dot at 1040 · 127² = 16 774 160, just
+    // under 2²⁴ — one more element would break f32 exactness, so any
+    // backend widening or correction error shows up here first. Run a
+    // small fixed number of cases (the matrices are K = 1040 wide).
+    let backends = kernels::available();
+    let bs = I8_EXACT_MAX_BS;
+    let seed = base_seed() ^ 0xB0_0D;
+    for case in 0..3u64 {
+        let mut rng = Pcg64::new(seed.wrapping_add(case));
+        let (m, n) = (1 + rng.below(4), 1 + rng.below(6));
+        let k = bs;
+        let a = mat_from_codes(
+            m, k, &rand_codes(m * k, Regime::Saturated, &mut rng));
+        let b = mat_from_codes(
+            k, n, &rand_codes(k * n, Regime::Saturated, &mut rng));
+        let qa = block_quant(&a, bs, INT8_LEVELS, Rounding::Nearest);
+        let qb = block_quant(&b, bs, INT8_LEVELS, Rounding::Nearest);
+        let c_ref = block_gemm_reference(&qa, &qb);
+        for &kn in &backends {
+            for threads in [1usize, 3] {
+                let c = GemmPlan::new_int8_path(&qa, &qb, threads,
+                                                DataPath::Int8)
+                    .with_kernels(kn)
+                    .execute();
+                assert_eq!(
+                    c.data, c_ref.data,
+                    "backend {} at bs={bs} saturated case={case} \
+                     threads={threads}",
+                    kn.name
+                );
+            }
+        }
+    }
+}

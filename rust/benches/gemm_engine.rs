@@ -24,9 +24,12 @@
 //! `f32_simd_vs_scalar` criterion — the v2 re-anchor's payoff),
 //! installs the fastest measured backend as the process default via
 //! the calibration, reports packed bytes per operand (the 4x B-panel
-//! shrink the i8 path buys), and records the measured
+//! shrink the i8 path buys), records the measured
 //! `SubstrateCalibration` the cost model consumes in place of its
-//! ad-hoc fallback-overhead constant.
+//! ad-hoc fallback-overhead constant, and measures the dispatch
+//! overhead of the persistent worker pool vs per-call scoped threads
+//! on a small-m GEMM (the `dispatch_overhead` fields — PR 7's
+//! payoff).
 //!
 //! Set `BENCH_SMOKE=1` for a seconds-long CI smoke run (small dim,
 //! short iterations) that keeps this binary from rotting.
@@ -36,6 +39,7 @@ use dbfq::gemm::{self, kernels, DataPath, GemmPlan, Placement};
 use dbfq::quant::{self, Criterion, Rounding, INT8_LEVELS};
 use dbfq::util::bench::{bench, gops, Table};
 use dbfq::util::json::{obj, Json};
+use dbfq::util::pool;
 use dbfq::util::rng::Pcg64;
 use dbfq::util::threadpool::default_threads;
 use dbfq::util::Mat;
@@ -215,6 +219,54 @@ fn main() {
         g_simd / g_scalar.max(1e-12)
     };
 
+    // -- dispatch overhead: small-m GEMM, pool vs scoped ----------------
+    // The persistent pool's payoff case: a GEMM too small to amortize
+    // per-call thread spawns. The plan and the output buffer are both
+    // reused across calls (`execute_into`), so the only difference
+    // between the two runs is the dispatch mechanism — parked pool
+    // workers vs a fresh `std::thread::scope` per call.
+    let (dispatch_obj, dispatch_ratio) = {
+        let db = 32usize.min(BLOCK);
+        let (dm, dk, dn) = (32usize, 128usize, 128usize);
+        let mut drng = Pcg64::new(0xD15);
+        let sa = Mat::randn(dm, dk, 1.0, &mut drng);
+        let sb = Mat::randn(dk, dn, 1.0, &mut drng);
+        let qsa = quant::block_quant(&sa, db, INT8_LEVELS,
+                                     Rounding::Nearest);
+        let qsb = quant::block_quant(&sb, db, INT8_LEVELS,
+                                     Rounding::Nearest);
+        let plan = GemmPlan::new_int8(&qsa, &qsb, nthreads);
+        let mut out = Mat::zeros(0, 0);
+        pool::set_pool_enabled(true);
+        plan.execute_into(&mut out); // warm pool + workspaces
+        let pooled_us = bench(|| plan.execute_into(&mut out),
+                              target_ms)
+            .median_secs() * 1e6;
+        pool::set_pool_enabled(false);
+        plan.execute_into(&mut out);
+        let scoped_us = bench(|| plan.execute_into(&mut out),
+                              target_ms)
+            .median_secs() * 1e6;
+        pool::set_pool_enabled(true);
+        let ratio = scoped_us / pooled_us.max(1e-9);
+        println!(
+            "\ndispatch overhead ({dm}x{dk}x{dn} i8, {nthreads} \
+             threads): pooled {pooled_us:.1} us vs scoped \
+             {scoped_us:.1} us = {ratio:.2}x (target: pooled < \
+             scoped)"
+        );
+        (obj(vec![
+            ("m", Json::Num(dm as f64)),
+            ("n", Json::Num(dn as f64)),
+            ("k", Json::Num(dk as f64)),
+            ("block", Json::Num(db as f64)),
+            ("threads", Json::Num(nthreads as f64)),
+            ("pooled_us", Json::Num(pooled_us)),
+            ("scoped_us", Json::Num(scoped_us)),
+            ("scoped_over_pooled", Json::Num(ratio)),
+        ]), ratio)
+    };
+
     // -- fallback: rate x placement x threads ---------------------------
     let mut seq_gap_worst: f64 = 0.0;
     let mut fb_i8_vs_sim_nt = 0.0;
@@ -375,6 +427,7 @@ fn main() {
             ("a_codes_f32", Json::Num(a_codes_f32 as f64)),
             ("a_codes_i8", Json::Num(a_codes_i8 as f64)),
         ])),
+        ("dispatch_overhead", dispatch_obj),
         ("criteria", obj(vec![
             ("int8_engine_vs_seed_1t", Json::Num(int8_speedup_1t)),
             ("int8_i8_vs_sim", Json::Num(int8_i8_vs_sim_nt)),
@@ -382,6 +435,8 @@ fn main() {
             ("seq_vs_random_gap_worst", Json::Num(seq_gap_worst)),
             ("simd_vs_scalar", Json::Num(simd_vs_scalar)),
             ("f32_simd_vs_scalar", Json::Num(f32_simd_vs_scalar)),
+            ("dispatch_scoped_over_pooled",
+             Json::Num(dispatch_ratio)),
         ])),
         ("calibration", obj(vec![
             ("dense_gops", Json::Num(cal.dense_gops)),

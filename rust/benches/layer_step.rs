@@ -15,6 +15,10 @@
 //!                repack per site per microstep (the pre-pipeline
 //!                behaviour).
 //!
+//! Both loops run through `microstep_in_place`, the zero-allocation
+//! steady-state path that reuses the driver's output arena and the
+//! persistent worker pool (`util::pool`).
+//!
 //! Emits `BENCH_layer_step.json` (schema in `docs/BENCHMARKS.md`)
 //! with per-microstep times, cached-vs-uncached Gops, per-microstep
 //! cache hit rates (must be 1.0 from the 2nd microstep on), the
@@ -86,8 +90,8 @@ fn main() {
     for _ in 0..microsteps {
         ls.clear_cache();
         let t = Instant::now();
-        let (outs, _) = ls.microstep(&acts, &grads);
-        std::hint::black_box(outs);
+        ls.microstep_in_place(&acts, &grads);
+        std::hint::black_box(ls.outputs());
         uncached_ms.push(t.elapsed().as_secs_f64() * 1e3);
     }
     let (qu1, pu1) = quant_work_counters();
@@ -106,8 +110,8 @@ fn main() {
     let mut rates = Vec::new();
     for s in 0..microsteps {
         let t = Instant::now();
-        let (outs, rep) = ls.microstep(&acts, &grads);
-        std::hint::black_box(outs);
+        let rep = ls.microstep_in_place(&acts, &grads);
+        std::hint::black_box(ls.outputs());
         cached_ms.push(t.elapsed().as_secs_f64() * 1e3);
         let lookups = rep.cache_hits + rep.cache_misses;
         per_microstep.push((rep.cache_hits, rep.cache_misses));

@@ -19,6 +19,14 @@
 //! microstep is bit-identical to composed per-layer `LayerStep`s
 //! plus a direct engine computation of the head.
 //!
+//! The timed loops run through `microstep_in_place` — the PR 7
+//! zero-allocation steady-state path that reuses the driver's output
+//! arena — and a dispatch-overhead phase re-times the warm microstep
+//! with the persistent worker pool force-disabled (per-call scoped
+//! threads), recording the pool's latency win plus the runtime work
+//! counters (`dispatch_overhead` fields: steady-state thread spawns
+//! and workspace growths per microstep, expected 0 when pooled).
+//!
 //! Emits `BENCH_model_step.json` (schema in `docs/BENCHMARKS.md`).
 //! Set `BENCH_SMOKE=1` for a seconds-long CI smoke run.
 
@@ -33,6 +41,7 @@ use dbfq::quant::{fallback_quant, quant_work_counters,
                   theta_for_rate, Criterion, Rounding, INT8_LEVELS};
 use dbfq::util::bench::Table;
 use dbfq::util::json::{obj, Json};
+use dbfq::util::pool;
 use dbfq::util::rng::Pcg64;
 use dbfq::util::threadpool::default_threads;
 use dbfq::util::Mat;
@@ -113,8 +122,8 @@ fn main() {
     for _ in 0..microsteps {
         ms.clear_cache();
         let t = Instant::now();
-        let (outs, _) = ms.microstep(&acts, &grads);
-        std::hint::black_box(outs);
+        ms.microstep_in_place(&acts, &grads);
+        std::hint::black_box(ms.outputs());
         cold_ms.push(t.elapsed().as_secs_f64() * 1e3);
     }
     let (qc1, pc1) = quant_work_counters();
@@ -134,8 +143,8 @@ fn main() {
     let mut last_rep = None;
     for s in 0..microsteps {
         let t = Instant::now();
-        let (outs, rep) = ms.microstep(&acts, &grads);
-        std::hint::black_box(outs);
+        let rep = ms.microstep_in_place(&acts, &grads);
+        std::hint::black_box(ms.outputs());
         cached_ms.push(t.elapsed().as_secs_f64() * 1e3);
         assert_eq!((rep.cache_hits + rep.cache_misses) as usize,
                    2 * n_sites);
@@ -253,6 +262,40 @@ fn main() {
         backend_checks.push((kn.name, identical));
     }
 
+    // -- dispatch overhead: warm microstep, pool vs scoped -----------
+    // Same warm driver, same buffers (`microstep_in_place`): the
+    // only difference between the two runs is whether the engine
+    // dispatches onto the persistent worker pool or spawns a fresh
+    // `std::thread::scope` per GEMM. The runtime work counters are
+    // sampled alongside: a warm pooled microstep must run with zero
+    // thread spawns and zero workspace growths (the hard assertion
+    // lives in `tests/pool_prop.rs`; here the rate is recorded).
+    let disp_iters = if smoke { 3 } else { 5 };
+    pool::set_pool_enabled(true);
+    ms.microstep_in_place(&acts, &grads); // settle pool workspaces
+    let (ds0, dw0) = pool::work_counters();
+    let mut pooled_step_ms = Vec::with_capacity(disp_iters);
+    for _ in 0..disp_iters {
+        let t = Instant::now();
+        ms.microstep_in_place(&acts, &grads);
+        pooled_step_ms.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let (ds1, dw1) = pool::work_counters();
+    let steady_spawns = (ds1 - ds0) as f64 / disp_iters as f64;
+    let steady_ws = (dw1 - dw0) as f64 / disp_iters as f64;
+    pool::set_pool_enabled(false);
+    ms.microstep_in_place(&acts, &grads);
+    let mut scoped_step_ms = Vec::with_capacity(disp_iters);
+    for _ in 0..disp_iters {
+        let t = Instant::now();
+        ms.microstep_in_place(&acts, &grads);
+        scoped_step_ms.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    pool::set_pool_enabled(true);
+    let pooled_steady = median(&pooled_step_ms);
+    let scoped_steady = median(&scoped_step_ms);
+    let dispatch_ratio = scoped_steady / pooled_steady.max(1e-9);
+
     // -- summaries ----------------------------------------------------
     let cold_steady = median(&cold_ms);
     let cached_steady = median(&cached_ms[1..]);
@@ -363,6 +406,13 @@ fn main() {
          (measured {cached_steady:.1} ms), 4090 projection \
          {proj_ms:.3} ms"
     );
+    println!(
+        "dispatch: pooled {pooled_steady:.1} ms vs scoped \
+         {scoped_steady:.1} ms = {dispatch_ratio:.2}x (target: \
+         pooled < scoped); steady-state spawns/microstep \
+         {steady_spawns:.1}, workspace growths/microstep \
+         {steady_ws:.1} (target 0)"
+    );
 
     let report = obj(vec![
         ("bench", Json::Str("model_step".into())),
@@ -454,9 +504,20 @@ fn main() {
                 ]))
                 .collect(),
         )),
+        ("dispatch_overhead", obj(vec![
+            ("pooled_steady_ms", Json::Num(pooled_steady)),
+            ("scoped_steady_ms", Json::Num(scoped_steady)),
+            ("scoped_over_pooled", Json::Num(dispatch_ratio)),
+            ("steady_spawns_per_microstep",
+             Json::Num(steady_spawns)),
+            ("steady_ws_allocs_per_microstep",
+             Json::Num(steady_ws)),
+        ])),
         ("criteria", obj(vec![
             ("cached_vs_cold", Json::Num(speedup)),
             ("warm_hit_rate", Json::Num(warm_hit_rate)),
+            ("dispatch_scoped_over_pooled",
+             Json::Num(dispatch_ratio)),
             ("warm_restored_first_hit_rate",
              Json::Num(first_hit_rate)),
             ("warm_restored_bit_identical",

@@ -132,10 +132,12 @@
 //! front and each worker takes ownership of its panels — no `AtomicPtr`
 //! hand-rolling, no aliasing, borrow-checked by construction.
 
+use std::cell::RefCell;
 use std::sync::Arc;
 
 use crate::gemm::kernels::{self, panel_dot, panel_dot2, DotI8, Kernels};
 use crate::quant::{BlockQuant, FallbackQuant, PanelPack, PanelPackI8};
+use crate::util::pool::{self, ScopeJob};
 use crate::util::threadpool::weighted_buckets;
 use crate::util::Mat;
 
@@ -262,7 +264,9 @@ fn sched_rows_for(bs: usize) -> usize {
 pub struct GemmPlan<'a> {
     mode: Precision,
     path: DataPath,
-    threads: usize,
+    /// effective worker count (requested threads clamped to the
+    /// sub-panel count at build time)
+    eff_threads: usize,
     m: usize,
     n: usize,
     k: usize,
@@ -276,10 +280,62 @@ pub struct GemmPlan<'a> {
     nbk: usize,
     /// per-sub-panel schedule weight (∝ expected cost)
     weights: Vec<f64>,
+    /// LPT sub-panel→worker assignment, computed once at build
+    /// (weights and thread count are fixed then) and replayed by every
+    /// execute — the schedule is part of the plan, not the call
+    buckets: Vec<Vec<usize>>,
     kernel: Kernel<'a>,
     /// microkernel backend (selected once at build; see
     /// [`kernels::select`])
     kernels: &'static Kernels,
+}
+
+/// Effective worker count and LPT bucket assignment for a weight
+/// vector — cached on the plan so `execute`/`execute_into` and
+/// `schedule_makespan` never re-run LPT per call.
+fn schedule(weights: &[f64], threads: usize)
+            -> (usize, Vec<Vec<usize>>) {
+    let eff = threads.clamp(1, weights.len().max(1));
+    (eff, weighted_buckets(weights, eff))
+}
+
+thread_local! {
+    /// Per-thread persistent engine workspace (the `acc`/`acci`
+    /// accumulator rows), reused across executes so steady-state
+    /// GEMMs allocate nothing. The kernels overwrite (never
+    /// accumulate into) these rows, so dirty reuse is safe.
+    static ENGINE_WS: RefCell<(Vec<f32>, Vec<i32>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// Borrow the calling thread's persistent accumulator workspace,
+/// growing it if this plan needs more than any prior plan did on this
+/// thread. Returns the number of buffer growths (0 in steady state)
+/// so callers can book them via [`pool::note_ws_allocs`].
+fn with_engine_workspace<F>(acc_len: usize, acci_len: usize, f: F)
+                            -> u64
+where
+    F: FnOnce(&mut [f32], &mut [i32]),
+{
+    ENGINE_WS.with(|ws| {
+        let mut ws = ws.borrow_mut();
+        let (acc, acci) = &mut *ws;
+        let mut grew = 0u64;
+        if acc.len() < acc_len {
+            if acc.capacity() < acc_len {
+                grew += 1;
+            }
+            acc.resize(acc_len, 0.0);
+        }
+        if acci.len() < acci_len {
+            if acci.capacity() < acci_len {
+                grew += 1;
+            }
+            acci.resize(acci_len, 0);
+        }
+        f(&mut acc[..acc_len], &mut acci[..acci_len]);
+        grew
+    })
 }
 
 impl<'a> GemmPlan<'a> {
@@ -289,17 +345,18 @@ impl<'a> GemmPlan<'a> {
         assert_eq!(a.cols, b.rows, "inner dims");
         let (m, n, k) = (a.rows, b.cols, a.cols);
         let rbp = m.div_ceil(DENSE_PANEL_ROWS).max(1);
-        let weights = (0..rbp)
+        let weights: Vec<f64> = (0..rbp)
             .map(|ci| {
                 let rows = DENSE_PANEL_ROWS
                     .min(m.saturating_sub(ci * DENSE_PANEL_ROWS));
                 rows as f64
             })
             .collect();
+        let (eff_threads, buckets) = schedule(&weights, threads);
         GemmPlan {
             mode: Precision::Dense,
             path: DataPath::SimF32,
-            threads,
+            eff_threads,
             m,
             n,
             k,
@@ -308,6 +365,7 @@ impl<'a> GemmPlan<'a> {
             kb: 0,
             nbk: 0,
             weights,
+            buckets,
             kernel: Kernel::Dense { a, b },
             kernels: kernels::select(),
         }
@@ -329,12 +387,13 @@ impl<'a> GemmPlan<'a> {
         assert_eq!(a.block, b.block, "block size");
         let (kb, nbk) = (a.cb(), b.cb());
         let sched = sched_rows_for(a.block);
-        let weights = (0..a.rows.div_ceil(sched))
+        let weights: Vec<f64> = (0..a.rows.div_ceil(sched))
             .map(|ci| {
                 let rows = sched.min(a.rows - ci * sched);
                 (rows * kb) as f64
             })
             .collect();
+        let (eff_threads, buckets) = schedule(&weights, threads);
         let kernel = match path {
             DataPath::SimF32 => Kernel::Sim {
                 af: a.codes_f32(),
@@ -356,7 +415,7 @@ impl<'a> GemmPlan<'a> {
         GemmPlan {
             mode: Precision::Int8Block,
             path,
-            threads,
+            eff_threads,
             m: a.rows,
             n: b.cols,
             k: a.cols,
@@ -365,6 +424,7 @@ impl<'a> GemmPlan<'a> {
             kb,
             nbk,
             weights,
+            buckets,
             kernel,
             kernels: kernels::select(),
         }
@@ -394,7 +454,7 @@ impl<'a> GemmPlan<'a> {
         // Fallback-aware weights: a residual block doubles that
         // K-step's work for every row of its block row (Fig 8c cost
         // model); each sub-panel inherits its block row's cost.
-        let weights = (0..a.rows.div_ceil(sched))
+        let weights: Vec<f64> = (0..a.rows.div_ceil(sched))
             .map(|ci| {
                 let rows = sched.min(a.rows - ci * sched);
                 let bi = ci * sched / a.block;
@@ -405,6 +465,7 @@ impl<'a> GemmPlan<'a> {
                 (rows * (kb + fb)) as f64
             })
             .collect();
+        let (eff_threads, buckets) = schedule(&weights, threads);
         let kernel = match path {
             DataPath::SimF32 => Kernel::Sim {
                 af: a.codes_f32(),
@@ -434,7 +495,7 @@ impl<'a> GemmPlan<'a> {
         GemmPlan {
             mode: Precision::Fallback,
             path,
-            threads,
+            eff_threads,
             m: a.rows,
             n: b.cols,
             k: a.cols,
@@ -443,6 +504,7 @@ impl<'a> GemmPlan<'a> {
             kb,
             nbk,
             weights,
+            buckets,
             kernel,
             kernels: kernels::select(),
         }
@@ -484,14 +546,14 @@ impl<'a> GemmPlan<'a> {
     }
 
     /// Total scheduled work in weight units, and the makespan the LPT
-    /// schedule achieves for this plan's thread count. The ratio is a
-    /// load-balance factor; currently consumed by tests only (the cost
-    /// model uses measured throughput via `SubstrateCalibration`).
+    /// schedule achieves for this plan's thread count — both read from
+    /// the schedule cached at build. The ratio is a load-balance
+    /// factor; currently consumed by tests only (the cost model uses
+    /// measured throughput via `SubstrateCalibration`).
     pub fn schedule_makespan(&self) -> (f64, f64) {
         let total: f64 = self.weights.iter().sum();
-        let threads = self.threads.clamp(1, self.weights.len().max(1));
-        let buckets = weighted_buckets(&self.weights, threads);
-        let makespan = buckets
+        let makespan = self
+            .buckets
             .iter()
             .map(|b| b.iter().map(|&i| self.weights[i]).sum::<f64>())
             .fold(0.0f64, f64::max);
@@ -499,11 +561,27 @@ impl<'a> GemmPlan<'a> {
     }
 
     /// Run the plan: allocate C, split it into disjoint row panels,
-    /// schedule panels across threads, run the microkernels.
+    /// replay the cached schedule, run the microkernels. Thin wrapper
+    /// over [`execute_into`](Self::execute_into) for callers that want
+    /// an owned output.
     pub fn execute(&self) -> Mat {
-        let mut c = Mat::zeros(self.m, self.n);
+        let mut c = Mat::zeros(0, 0);
+        self.execute_into(&mut c);
+        c
+    }
+
+    /// Run the plan into a caller-owned output, reusing `c`'s backing
+    /// buffer when its capacity allows — the steady-state path: with a
+    /// warm output buffer and warm per-thread workspaces this performs
+    /// **zero** heap allocations and (through the pool) zero thread
+    /// spawns. Buffer growths (output or workspace) are booked on the
+    /// calling thread's [`pool::work_counters`].
+    pub fn execute_into(&self, c: &mut Mat) {
+        if c.reset_to(self.m, self.n) {
+            pool::note_ws_allocs(1);
+        }
         if self.m == 0 || self.n == 0 || self.k == 0 {
-            return c;
+            return;
         }
         // Split C into disjoint &mut sub-panel slices (no AtomicPtr):
         // every sub-panel is `sched_rows * n` long except a shorter
@@ -516,44 +594,41 @@ impl<'a> GemmPlan<'a> {
             .map(Some)
             .collect();
         debug_assert_eq!(slots.len(), self.weights.len());
-        let threads = self.threads.clamp(1, slots.len());
-        if threads <= 1 {
-            let mut acc = vec![0.0f32; self.acc_len()];
-            let mut acci = vec![0i32; self.acci_len()];
-            for slot in slots.iter_mut() {
-                let (bi, crows) = slot.take().unwrap();
-                self.run_panel(bi, crows, &mut acc, &mut acci);
-            }
+        let (al, il) = (self.acc_len(), self.acci_len());
+        if self.eff_threads <= 1 {
+            let grew = with_engine_workspace(al, il, |acc, acci| {
+                for slot in slots.iter_mut() {
+                    let (bi, crows) = slot.take().unwrap();
+                    self.run_panel(bi, crows, acc, acci);
+                }
+            });
+            pool::note_ws_allocs(grew);
         } else {
-            let buckets = weighted_buckets(&self.weights, threads);
-            let mut work: Vec<Vec<(usize, &mut [f32])>> =
-                Vec::with_capacity(buckets.len());
-            for bucket in &buckets {
+            // Replay the cached LPT assignment: bucket b's panels run
+            // on one worker in ascending order, exactly as scheduled
+            // at build — placement never changes results, but keeping
+            // it fixed makes pool and scoped dispatch trivially
+            // bit-identical.
+            let mut tasks: Vec<ScopeJob<'_>> =
+                Vec::with_capacity(self.buckets.len());
+            for bucket in &self.buckets {
+                if bucket.is_empty() {
+                    continue;
+                }
                 let mut list = Vec::with_capacity(bucket.len());
                 for &bi in bucket {
                     list.push(slots[bi].take().unwrap());
                 }
-                work.push(list);
-            }
-            std::thread::scope(|s| {
-                for bucket in work {
-                    if bucket.is_empty() {
-                        continue;
-                    }
-                    s.spawn(move || {
-                        // One reusable workspace per worker; nothing
-                        // allocates inside the panel loops.
-                        let mut acc = vec![0.0f32; self.acc_len()];
-                        let mut acci = vec![0i32; self.acci_len()];
-                        for (bi, crows) in bucket {
-                            self.run_panel(bi, crows, &mut acc,
-                                           &mut acci);
+                tasks.push(Box::new(move || {
+                    with_engine_workspace(al, il, |acc, acci| {
+                        for (bi, crows) in list {
+                            self.run_panel(bi, crows, acc, acci);
                         }
-                    });
-                }
-            });
+                    })
+                }));
+            }
+            pool::note_ws_allocs(pool::run_scoped(tasks));
         }
-        c
     }
 
     /// f32 workspace length: four accumulator rows — the i8 backends
@@ -927,6 +1002,26 @@ mod tests {
             let ct = GemmPlan::new_int8(&qa, &qb, threads).execute();
             assert_eq!(c1.data, ct.data, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn execute_into_reuses_output_and_workspace() {
+        let (a, b) = mats(48, 33, 40, 41);
+        let qa = block_quant(&a, 16, INT8_LEVELS, Rounding::Nearest);
+        let qb = block_quant(&b, 16, INT8_LEVELS, Rounding::Nearest);
+        // threads=1 executes inline on this thread, so the
+        // thread-local workspace counter delta is deterministic.
+        let plan = GemmPlan::new_int8(&qa, &qb, 1);
+        let oracle = plan.execute();
+        let mut c = Mat::zeros(0, 0);
+        plan.execute_into(&mut c);
+        assert_eq!(c.data, oracle.data);
+        // Warm repeat: same bits, zero output/workspace growths.
+        let (_, ws0) = pool::work_counters();
+        plan.execute_into(&mut c);
+        let (_, ws1) = pool::work_counters();
+        assert_eq!(c.data, oracle.data);
+        assert_eq!(ws1, ws0, "warm execute_into must not allocate");
     }
 
     #[test]

@@ -380,6 +380,19 @@ pub struct SiteOutputs {
     pub dw: Mat,
 }
 
+impl SiteOutputs {
+    /// Empty (capacity-less) output slot; the engine's
+    /// `execute_into` grows each matrix on first use and reuses the
+    /// buffers on every microstep after (the drivers' site arena).
+    pub fn empty() -> SiteOutputs {
+        SiteOutputs {
+            y: Mat::zeros(0, 0),
+            dx: Mat::zeros(0, 0),
+            dw: Mat::zeros(0, 0),
+        }
+    }
+}
+
 /// Per-site record of one microstep.
 #[derive(Debug, Clone)]
 pub struct SiteReport {
@@ -431,7 +444,9 @@ fn build_weight_plan(w: &Mat, transposed: bool, block: usize,
 /// One site's three GEMMs for one microstep — the shared core of
 /// [`LayerStep::microstep`] and [`ModelStep::microstep`] (factored
 /// out so multi-layer drivers are bit-identical to composed
-/// single-layer ones by construction). Returns the outputs plus the
+/// single-layer ones by construction). Writes the outputs into the
+/// caller's reusable `out` slot (warm buffers are reused in place —
+/// the engine's `execute_into` steady state) and returns the
 /// executed forward and backward fallback rates.
 ///
 /// `id_base` is `2 · global site index`: the cache keys of this
@@ -441,7 +456,8 @@ fn run_site(
     l: &LinearShape, w: &Mat, x: &Mat, dy: &Mat, theta: f32,
     sr: Rounding, id_base: u64, block: usize, threads: usize,
     path: DataPath, kn: &'static Kernels, cache: &mut PlanCache,
-) -> (SiteOutputs, f64, f64) {
+    out: &mut SiteOutputs,
+) -> (f64, f64) {
     assert_eq!((x.rows, x.cols), (l.m, l.k),
                "activation shape for site {}", l.name);
     assert_eq!((dy.rows, dy.cols), (l.m, l.n),
@@ -475,8 +491,8 @@ fn run_site(
         },
         || build_weight_plan(w, true, block, threads, path, kn),
     );
-    let y = wp.plan_fallback(&fx, &fx.u, threads).execute();
-    let dx = wpt.plan_int8(&qdy, threads).execute();
+    wp.plan_fallback(&fx, &fx.u, threads).execute_into(&mut out.y);
+    wpt.plan_int8(&qdy, threads).execute_into(&mut out.dx);
     // dW = Xᵀ·dY: both operands change every microstep, so this plan
     // is legitimately fresh (qdy serves as the A operand of dX above
     // and the B operand here — one quantization, two roles). Xᵀ's
@@ -489,13 +505,10 @@ fn run_site(
     // (`dw_routes_transposed_activation_through_fallback` pins the
     // identity against a fresh re-quantization).
     let fxt = fx.transposed();
-    let dw = GemmPlan::new_fallback_path(&fxt, &qdy, &fxt.u, threads,
-                                         path)
+    GemmPlan::new_fallback_path(&fxt, &qdy, &fxt.u, threads, path)
         .with_kernels(kn)
-        .execute();
-    let (fwd_rate, bwd_rate) = (fx.fallback_rate(),
-                                fxt.fallback_rate());
-    (SiteOutputs { y, dx, dw }, fwd_rate, bwd_rate)
+        .execute_into(&mut out.dw);
+    (fx.fallback_rate(), fxt.fallback_rate())
 }
 
 /// Cache-free reference computation of one site's three GEMMs —
@@ -514,9 +527,10 @@ pub fn site_reference(
     kn: &'static Kernels,
 ) -> SiteOutputs {
     let mut cache = PlanCache::new(2);
+    let mut out = SiteOutputs::empty();
     run_site(l, w, x, dy, theta, sr, 0, block, threads, path, kn,
-             &mut cache)
-        .0
+             &mut cache, &mut out);
+    out
 }
 
 /// Shared microstep core of [`LayerStep`] and [`ModelStep`]: run
@@ -527,28 +541,36 @@ pub fn site_reference(
 /// into the accumulator. One body for both drivers is what makes
 /// "ModelStep ≡ composed LayerSteps" hold by construction — only the
 /// per-site `Rounding` derivation differs between the callers.
+///
+/// `arena` is the driver's site-keyed output store: slot `i` holds
+/// site `i`'s three output matrices and is rewritten in place each
+/// microstep, so warm buffers are reused instead of reallocated.
 #[allow(clippy::too_many_arguments)]
 fn drive_microstep(
     sites: &[LinearShape], weights: &[Mat], thresholds: &[f32],
     rounds: &[Rounding], acts: &[Mat], grads: &[Mat], block: usize,
     threads: usize, path: DataPath, kn: &'static Kernels,
     cache: &mut PlanCache, rates: &mut RateAccumulator,
-) -> (Vec<SiteOutputs>, StepReport) {
+    arena: &mut Vec<SiteOutputs>,
+) -> StepReport {
     assert_eq!(acts.len(), sites.len(), "one act per site");
     assert_eq!(grads.len(), sites.len(), "one grad per site");
+    arena.truncate(sites.len());
+    while arena.len() < sites.len() {
+        arena.push(SiteOutputs::empty());
+    }
     let start = cache.stats();
-    let mut outs = Vec::with_capacity(sites.len());
     let mut site_reports = Vec::with_capacity(sites.len());
     let mut executed = vec![0.0f64; sites.len()];
     for (i, l) in sites.iter().enumerate() {
         let s0 = cache.stats();
-        let (out, fwd_rate, bwd_rate) = run_site(
+        let (fwd_rate, bwd_rate) = run_site(
             l, &weights[i], &acts[i], &grads[i], thresholds[i],
             rounds[i], 2 * i as u64, block, threads, path, kn, cache,
+            &mut arena[i],
         );
         let s1 = cache.stats();
         executed[i] = fwd_rate;
-        outs.push(out);
         site_reports.push(SiteReport {
             name: l.name,
             fallback_rate: fwd_rate,
@@ -561,13 +583,12 @@ fn drive_microstep(
     rates.record(&executed);
     let end = cache.stats();
     let flops = site_reports.iter().map(|s| s.flops).sum();
-    let report = StepReport {
+    StepReport {
         sites: site_reports,
         cache_hits: end.hits - start.hits,
         cache_misses: end.misses - start.misses,
         flops,
-    };
-    (outs, report)
+    }
 }
 
 /// Drives the four linear sites of one transformer layer
@@ -591,6 +612,9 @@ pub struct LayerStep {
     rates: RateAccumulator,
     kernels: &'static Kernels,
     microsteps: usize,
+    /// site-keyed output arena, reused across microsteps (see
+    /// [`microstep_in_place`](LayerStep::microstep_in_place))
+    arena: Vec<SiteOutputs>,
 }
 
 impl LayerStep {
@@ -631,6 +655,7 @@ impl LayerStep {
             rates,
             kernels: kernels::select(),
             microsteps: 0,
+            arena: Vec::new(),
             cfg,
         }
     }
@@ -718,18 +743,37 @@ impl LayerStep {
     /// (tokens × n) per site `i`.
     pub fn microstep(&mut self, acts: &[Mat],
                      grads: &[Mat]) -> (Vec<SiteOutputs>, StepReport) {
+        let report = self.microstep_in_place(acts, grads);
+        (std::mem::take(&mut self.arena), report)
+    }
+
+    /// [`microstep`](LayerStep::microstep) without handing the
+    /// outputs over: results land in the driver's site-keyed arena
+    /// (read via [`outputs`](LayerStep::outputs)) and their buffers
+    /// are reused on the next call — the zero-allocation steady-state
+    /// path.
+    pub fn microstep_in_place(&mut self, acts: &[Mat],
+                              grads: &[Mat]) -> StepReport {
         let rounds: Vec<Rounding> = (0..self.sites.len())
             .map(|i| Rounding::Stochastic(grad_sr_seed(
                 self.cfg.sr_seed, self.microsteps, i)))
             .collect();
-        let result = drive_microstep(
+        let report = drive_microstep(
             &self.sites, &self.weights, &self.controller.thresholds,
             &rounds, acts, grads, self.cfg.block, self.cfg.threads,
             self.cfg.path, self.kernels, &mut self.cache,
-            &mut self.rates,
+            &mut self.rates, &mut self.arena,
         );
         self.microsteps += 1;
-        result
+        report
+    }
+
+    /// The last microstep's per-site outputs (empty before the first
+    /// [`microstep_in_place`](LayerStep::microstep_in_place), and
+    /// after any [`microstep`](LayerStep::microstep) — that variant
+    /// moves the arena out to the caller).
+    pub fn outputs(&self) -> &[SiteOutputs] {
+        &self.arena
     }
 
     /// Step boundary (Algorithm 2): fold the microsteps' mean
@@ -864,6 +908,9 @@ pub struct ModelStep {
     rates: RateAccumulator,
     kernels: &'static Kernels,
     microsteps: usize,
+    /// site-keyed output arena, reused across microsteps (see
+    /// [`microstep_in_place`](ModelStep::microstep_in_place))
+    arena: Vec<SiteOutputs>,
 }
 
 impl ModelStep {
@@ -902,6 +949,7 @@ impl ModelStep {
             rates,
             kernels: kernels::select(),
             microsteps: 0,
+            arena: Vec::new(),
             cfg,
         }
     }
@@ -998,17 +1046,38 @@ impl ModelStep {
     /// `s`.
     pub fn microstep(&mut self, acts: &[Mat],
                      grads: &[Mat]) -> (Vec<SiteOutputs>, StepReport) {
+        let report = self.microstep_in_place(acts, grads);
+        (std::mem::take(&mut self.arena), report)
+    }
+
+    /// [`microstep`](ModelStep::microstep) without handing the
+    /// outputs over: results land in the driver's site-keyed arena
+    /// (read via [`outputs`](ModelStep::outputs)) and their buffers
+    /// are reused on the next call. With a warm plan cache this is
+    /// the zero-allocation steady-state path: no thread spawns, no
+    /// engine workspace growth, no output allocation (pinned by
+    /// `tests/pool_prop.rs` via [`crate::util::pool::work_counters`]).
+    pub fn microstep_in_place(&mut self, acts: &[Mat],
+                              grads: &[Mat]) -> StepReport {
         let rounds: Vec<Rounding> = (0..self.sites.len())
             .map(|s| self.site_rounding(s, self.microsteps))
             .collect();
-        let result = drive_microstep(
+        let report = drive_microstep(
             &self.sites, &self.weights, &self.controller.thresholds,
             &rounds, acts, grads, self.cfg.block, self.cfg.threads,
             self.cfg.path, self.kernels, &mut self.cache,
-            &mut self.rates,
+            &mut self.rates, &mut self.arena,
         );
         self.microsteps += 1;
-        result
+        report
+    }
+
+    /// The last microstep's per-site outputs (empty before the first
+    /// [`microstep_in_place`](ModelStep::microstep_in_place), and
+    /// after any [`microstep`](ModelStep::microstep) — that variant
+    /// moves the arena out to the caller).
+    pub fn outputs(&self) -> &[SiteOutputs] {
+        &self.arena
     }
 
     /// Step boundary (Algorithm 2): fold the microsteps' mean
@@ -1522,6 +1591,30 @@ mod tests {
             assert_eq!((outs[i].dw.rows, outs[i].dw.cols),
                        (l.k, l.n));
         }
+    }
+
+    #[test]
+    fn microstep_in_place_matches_owned_variant() {
+        // The arena path must be bit-identical to the owned variant
+        // even when its warm buffers are being rewritten in place.
+        let mut a = small_step(2);
+        let mut b = small_step(2);
+        let (acts, grads) = synth_microbatch(a.sites(), 13, 150.0);
+        for step in 0..3 {
+            let (outs, ra) = a.microstep(&acts, &grads);
+            let rb = b.microstep_in_place(&acts, &grads);
+            let held = b.outputs();
+            assert_eq!(outs.len(), held.len());
+            for (o, h) in outs.iter().zip(held) {
+                assert_eq!(o.y.data, h.y.data, "y step {step}");
+                assert_eq!(o.dx.data, h.dx.data, "dx step {step}");
+                assert_eq!(o.dw.data, h.dw.data, "dw step {step}");
+            }
+            assert_eq!(ra.cache_misses, rb.cache_misses);
+            assert_eq!(ra.cache_hits, rb.cache_hits);
+        }
+        // the owned variant moves the arena out to the caller
+        assert!(a.outputs().is_empty());
     }
 
     #[test]

@@ -433,10 +433,12 @@ fn quant_block_row(
 }
 
 /// Quantize with per-(B x B)-block absmax scaling. Runs on
-/// [`default_threads`] workers; see [`block_quant_threads`] for
-/// explicit control. Results are bitwise thread-count-independent:
-/// each block row owns disjoint output slices and stochastic rounding
-/// draws from per-block RNG streams.
+/// [`default_threads`] workers dispatched through the persistent
+/// runtime ([`crate::util::pool`] via [`parallel_items`] — no
+/// per-call thread spawns); see [`block_quant_threads`] for explicit
+/// control. Results are bitwise thread-count-independent: each block
+/// row owns disjoint output slices and stochastic rounding draws
+/// from per-block RNG streams.
 pub fn block_quant(x: &Mat, block: usize, levels: f32,
                    rounding: Rounding) -> BlockQuant {
     block_quant_threads(x, block, levels, rounding, default_threads())

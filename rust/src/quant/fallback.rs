@@ -212,9 +212,10 @@ fn fallback_block_row(
 }
 
 /// Two-step fallback quantization of `x` with threshold `theta`. Runs
-/// on [`default_threads`] workers; see [`fallback_quant_threads`].
-/// Bitwise thread-count-independent (no RNG; disjoint block-row
-/// outputs).
+/// on [`default_threads`] workers dispatched through the persistent
+/// runtime ([`crate::util::pool`] via [`parallel_items`] — no
+/// per-call thread spawns); see [`fallback_quant_threads`]. Bitwise
+/// thread-count-independent (no RNG; disjoint block-row outputs).
 pub fn fallback_quant(x: &Mat, theta: f32, block: usize, levels: f32,
                       criterion: Criterion) -> FallbackQuant {
     fallback_quant_threads(x, theta, block, levels, criterion,

@@ -5,6 +5,7 @@
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod testing;
 pub mod threadpool;
@@ -21,6 +22,22 @@ pub struct Mat {
 impl Mat {
     pub fn zeros(rows: usize, cols: usize) -> Mat {
         Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Reshape to `rows × cols`, zero-filled, reusing the existing
+    /// backing buffer when its capacity allows. Returns whether the
+    /// buffer had to grow (i.e. whether this call allocated) — the
+    /// engine's `execute_into` reports that through the runtime's
+    /// workspace-allocation counter, so steady-state reuse is
+    /// observable (`util::pool::work_counters`).
+    pub fn reset_to(&mut self, rows: usize, cols: usize) -> bool {
+        let need = rows * cols;
+        let grew = self.data.capacity() < need;
+        self.data.clear();
+        self.data.resize(need, 0.0);
+        self.rows = rows;
+        self.cols = cols;
+        grew
     }
 
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
@@ -98,5 +115,17 @@ mod tests {
     fn frob_norm() {
         let m = Mat::from_vec(1, 2, vec![3.0, 4.0]);
         assert!((m.frob_norm() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reset_to_reuses_capacity_and_zeroes() {
+        let mut m = Mat::from_vec(2, 3, vec![1.0; 6]);
+        assert!(!m.reset_to(3, 2), "same size must not grow");
+        assert_eq!((m.rows, m.cols), (3, 2));
+        assert!(m.data.iter().all(|&x| x == 0.0));
+        let mut small = Mat::zeros(0, 0);
+        assert!(small.reset_to(2, 2), "growing is an allocation");
+        assert!(!small.reset_to(1, 1), "shrinking reuses");
+        assert_eq!(small.data.len(), 1);
     }
 }

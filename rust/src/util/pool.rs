@@ -1,0 +1,639 @@
+//! # Persistent execution runtime
+//!
+//! A lazily-initialized, process-wide pool of parked worker threads
+//! with a **scoped-borrow** submit API — the replacement for the
+//! per-call `std::thread::scope` dispatch the GEMM engine and the
+//! quant constructors used to pay on every call (spawn + join of
+//! fresh OS threads, ≈3·(4L+1) times per `ModelStep` microstep).
+//! Callers hand [`run_scoped`] a batch of closures that may borrow
+//! stack data; the call blocks until every closure has run, so the
+//! borrows never outlive the submitting frame — the same lifetime
+//! contract as `thread::scope`, without the thread churn.
+//!
+//! ## Scoped-borrow safety argument
+//!
+//! Jobs are lifetime-erased (`'env` → `'static`) before they enter
+//! the shared queue — the one `unsafe` in this module. Soundness
+//! rests on three properties, each enforced structurally:
+//!
+//! 1. **Submission always joins.** [`run_scoped`] blocks on a
+//!    completion latch counting down to zero; the private
+//!    `ScopeHandle` also waits in `Drop`, so even a panic on the
+//!    submitting thread cannot unwind past live borrows.
+//! 2. **Workers always count down.** Each job runs under
+//!    `catch_unwind`; panic or not, the latch decrements, so the
+//!    submitter cannot deadlock on a panicked job (the payload is
+//!    re-raised on the submitting thread after the join).
+//! 3. **Queued jobs always run.** The global pool never shuts down,
+//!    and dedicated pools drain their queue before their workers
+//!    exit (and `Drop` can only run once no `scope` borrow is live).
+//!
+//! ## Bit-identity
+//!
+//! The pool changes *where* closures run, never *what* they compute:
+//! callers keep the exact same work partition (the engine's LPT
+//! bucket → job mapping, the helpers' chunk boundaries) and each job
+//! processes its units in the same order as the scoped-thread path.
+//! Every output range is written by exactly one job with the same
+//! deterministic instruction stream, so pool-vs-scoped outputs are
+//! bit-identical by construction (`tests/pool_prop.rs` pins this per
+//! backend, data path, and thread count).
+//!
+//! ## Control surface
+//!
+//! * `PALLAS_THREADS=<n>` — overrides
+//!   [`default_threads`](crate::util::threadpool::default_threads)
+//!   (plan/driver worker counts and the pool size). Invalid values
+//!   are a hard error, mirroring `PALLAS_KERNEL`.
+//! * `PALLAS_POOL=off` — escape hatch: [`run_scoped`] falls back to
+//!   the historical `thread::scope` spawn-per-call path (`on` and
+//!   unset mean pooled; anything else is a hard error).
+//!   [`set_pool_enabled`] toggles the same flag at runtime for
+//!   A/B benches and the pool-vs-scoped identity tests.
+//!
+//! Re-entrancy: a job that submits again (nested data parallelism)
+//! runs the nested batch **inline** on its worker instead of queueing
+//! and waiting — a worker waiting on its own pool would deadlock a
+//! single-worker pool. Concurrent submitters (e.g. `cargo test`'s
+//! parallel test threads) interleave safely: jobs carry their own
+//! latch, so scopes never observe each other.
+//!
+//! ## Work counters
+//!
+//! [`work_counters`] extends the `quant_work_counters` pattern to the
+//! runtime: per-thread counts of OS threads spawned and engine
+//! workspace/output allocations, attributed to the *submitting*
+//! thread (worker-side workspace growth is summed per scope through
+//! the jobs' `u64` return values and booked on the caller). The
+//! steady-state regression in `tests/pool_prop.rs` asserts both stay
+//! at zero across warm `ModelStep` microsteps.
+
+use std::any::Any;
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// One schedulable unit of a scoped submit: runs to completion and
+/// returns a metric (the engine reports workspace growths; plain
+/// data-parallel helpers return 0). Metrics are summed per scope and
+/// returned to the submitter.
+pub type ScopeJob<'env> = Box<dyn FnOnce() -> u64 + Send + 'env>;
+
+type StaticJob = Box<dyn FnOnce() -> u64 + Send + 'static>;
+
+thread_local! {
+    static IN_WORKER: Cell<bool> = const { Cell::new(false) };
+    static THREAD_SPAWNS: Cell<u64> = const { Cell::new(0) };
+    static WS_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// `(thread_spawns, workspace_allocs)` attributed to the calling
+/// thread — the runtime's `quant_work_counters` twin. Spawns count
+/// OS threads created on this thread's behalf (pool construction,
+/// `PALLAS_POOL=off` scoped fallbacks); workspace allocs count
+/// engine `acc`/`acci` growths and GEMM output-buffer growths (see
+/// `GemmPlan::execute_into`). Monotonic; diff around a region to
+/// measure it. Steady-state microsteps must add zero to both.
+pub fn work_counters() -> (u64, u64) {
+    (THREAD_SPAWNS.with(|c| c.get()), WS_ALLOCS.with(|c| c.get()))
+}
+
+pub(crate) fn note_spawns(n: u64) {
+    if n > 0 {
+        THREAD_SPAWNS.with(|c| c.set(c.get() + n));
+    }
+}
+
+pub(crate) fn note_ws_allocs(n: u64) {
+    if n > 0 {
+        WS_ALLOCS.with(|c| c.set(c.get() + n));
+    }
+}
+
+/// Whether the current thread is a pool worker (nested submits from
+/// here run inline — see the module docs on re-entrancy).
+pub fn in_worker() -> bool {
+    IN_WORKER.with(|w| w.get())
+}
+
+/// Parse a `PALLAS_THREADS` value: `None`/empty → no override, a
+/// positive integer → that worker count. Anything else is a hard
+/// error (same contract as `kernels::parse_override` — a typo must
+/// not silently fall back and invalidate a pinned run).
+pub fn parse_threads_override(val: Option<&str>) -> Option<usize> {
+    match val {
+        None | Some("") => None,
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if n >= 1 => Some(n),
+            _ => panic!(
+                "PALLAS_THREADS={s:?} is not a positive worker-thread \
+                 count"
+            ),
+        },
+    }
+}
+
+static ENV_THREADS: OnceLock<Option<usize>> = OnceLock::new();
+
+/// The `PALLAS_THREADS` override, read once per process.
+pub fn env_threads() -> Option<usize> {
+    *ENV_THREADS.get_or_init(|| {
+        parse_threads_override(
+            std::env::var("PALLAS_THREADS").ok().as_deref(),
+        )
+    })
+}
+
+/// Parse a `PALLAS_POOL` value: `None`/empty → no override (pooled),
+/// `"on"`/`"off"` → forced. Anything else is a hard error.
+pub fn parse_pool_override(val: Option<&str>) -> Option<bool> {
+    match val {
+        None | Some("") => None,
+        Some("on") => Some(true),
+        Some("off") => Some(false),
+        Some(s) => panic!(
+            "PALLAS_POOL={s:?} is not a valid pool mode (expected \
+             \"on\" or \"off\")"
+        ),
+    }
+}
+
+static POOL_ENABLED: OnceLock<AtomicBool> = OnceLock::new();
+
+fn enabled_flag() -> &'static AtomicBool {
+    POOL_ENABLED.get_or_init(|| {
+        let on = parse_pool_override(
+            std::env::var("PALLAS_POOL").ok().as_deref(),
+        )
+        .unwrap_or(true);
+        AtomicBool::new(on)
+    })
+}
+
+/// Whether [`run_scoped`] routes through the persistent pool
+/// (default) or the `thread::scope` fallback (`PALLAS_POOL=off` or
+/// [`set_pool_enabled`]`(false)`).
+pub fn pool_enabled() -> bool {
+    enabled_flag().load(Ordering::Relaxed)
+}
+
+/// Runtime toggle of the pooled path — the A/B knob behind the
+/// dispatch-overhead benches and the pool-vs-scoped identity tests.
+/// Both paths are bit-identical; this only changes dispatch cost.
+/// Tests toggling it must serialize on their own lock and restore
+/// the previous value.
+pub fn set_pool_enabled(on: bool) {
+    enabled_flag().store(on, Ordering::Relaxed);
+}
+
+struct ScopeState {
+    left: Mutex<usize>,
+    done: Condvar,
+    metric: AtomicU64,
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+impl ScopeState {
+    fn new(n: usize) -> ScopeState {
+        ScopeState {
+            left: Mutex::new(n),
+            done: Condvar::new(),
+            metric: AtomicU64::new(0),
+            panic: Mutex::new(None),
+        }
+    }
+
+    fn finish_one(&self) {
+        let mut left = self.left.lock().unwrap();
+        *left -= 1;
+        if *left == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut left = self.left.lock().unwrap();
+        while *left > 0 {
+            left = self.done.wait(left).unwrap();
+        }
+    }
+}
+
+struct Task {
+    job: StaticJob,
+    scope: Arc<ScopeState>,
+}
+
+struct PoolState {
+    queue: VecDeque<Task>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    work: Condvar,
+}
+
+/// An in-flight scoped submit. Joining returns the summed job
+/// metrics and re-raises the first job panic; dropping without
+/// joining still blocks until every job finished (the lifetime
+/// erasure's backstop — see the module docs).
+struct ScopeHandle {
+    state: Arc<ScopeState>,
+}
+
+impl ScopeHandle {
+    fn join(self) -> u64 {
+        self.state.wait();
+        if let Some(p) = self.state.panic.lock().unwrap().take() {
+            resume_unwind(p);
+        }
+        self.state.metric.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for ScopeHandle {
+    fn drop(&mut self) {
+        // Idempotent: join() already waited by the time it drops.
+        self.state.wait();
+    }
+}
+
+/// A fixed set of parked worker threads executing scoped job
+/// batches. One process-wide instance serves all callers (see
+/// [`global`]); dedicated instances exist for tests
+/// (oversubscription, shutdown).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: usize,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers.max(1)` parked threads (counted into
+    /// [`work_counters`] on the calling thread).
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                queue: VecDeque::new(),
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("dbfq-pool-{i}"))
+                    .spawn(move || worker_main(sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        note_spawns(workers as u64);
+        WorkerPool { shared, workers, handles }
+    }
+
+    /// Worker thread count.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run every job and block until all completed; returns the
+    /// summed metrics and re-raises the first job panic. Jobs may
+    /// borrow the submitting frame — this call outlives them by
+    /// construction. More jobs than workers is fine (they queue).
+    pub fn scope(&self, tasks: Vec<ScopeJob<'_>>) -> u64 {
+        if tasks.is_empty() {
+            return 0;
+        }
+        self.submit(tasks).join()
+    }
+
+    /// Enqueue the batch and return its latch. Private: a leaked
+    /// handle would be unsound-by-leak, so only the joining wrappers
+    /// in this module may hold one.
+    fn submit<'env>(&self, tasks: Vec<ScopeJob<'env>>) -> ScopeHandle {
+        let state = Arc::new(ScopeState::new(tasks.len()));
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            for job in tasks {
+                // SAFETY: the job's `'env` borrows stay valid until
+                // the scope latch reaches zero, and every path out of
+                // this module (join, handle drop, run_scoped unwind)
+                // waits on that latch first; workers always decrement
+                // it, panic or not. See the module-level safety
+                // argument.
+                let job: StaticJob = unsafe {
+                    std::mem::transmute::<ScopeJob<'env>, StaticJob>(
+                        job,
+                    )
+                };
+                st.queue.push_back(Task {
+                    job,
+                    scope: Arc::clone(&state),
+                });
+            }
+        }
+        self.shared.work.notify_all();
+        ScopeHandle { state }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_main(shared: Arc<Shared>) {
+    IN_WORKER.with(|w| w.set(true));
+    loop {
+        let task = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(t) = st.queue.pop_front() {
+                    break t;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        let Task { job, scope } = task;
+        match catch_unwind(AssertUnwindSafe(job)) {
+            Ok(m) => {
+                scope.metric.fetch_add(m, Ordering::Relaxed);
+            }
+            Err(p) => {
+                let mut slot = scope.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(p);
+                }
+            }
+        }
+        scope.finish_one();
+    }
+}
+
+static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// The process-wide pool, created on first pooled submit. Sized
+/// `default_threads() - 1` because the submitting thread always runs
+/// one job of its batch inline (see [`run_scoped`]) — a `W`-job
+/// scope gets exactly `W`-way parallelism with no oversubscription.
+/// Lives until process exit; under `cargo test` the parked workers
+/// are shared by every concurrently running test.
+pub fn global() -> &'static WorkerPool {
+    GLOBAL.get_or_init(|| {
+        let n = crate::util::threadpool::default_threads();
+        WorkerPool::new(n.saturating_sub(1))
+    })
+}
+
+/// Run a batch of scoped jobs to completion and return their summed
+/// metrics — the one dispatch point behind `parallel_chunks` /
+/// `parallel_items` / `parallel_map` and `GemmPlan::execute`.
+///
+/// Dispatch policy, in order:
+/// * 0 or 1 jobs → inline on the caller (no dispatch at all);
+/// * on a pool worker → all inline (nested-submit re-entrancy);
+/// * pool disabled → `thread::scope`, one spawned thread per job
+///   (bit-identical; the historical path, kept as the
+///   `PALLAS_POOL=off` escape hatch);
+/// * otherwise → the last job runs inline on the caller while the
+///   [`global`] pool executes the rest.
+pub fn run_scoped(mut tasks: Vec<ScopeJob<'_>>) -> u64 {
+    match tasks.len() {
+        0 => 0,
+        1 => tasks.pop().unwrap()(),
+        _ if in_worker() => tasks.into_iter().map(|j| j()).sum(),
+        _ if !pool_enabled() => scoped_fallback(tasks),
+        _ => {
+            let local_job = tasks.pop().unwrap();
+            let handle = global().submit(tasks);
+            // The local job must not unwind before the join — its
+            // panic is held until the pooled jobs (which may borrow
+            // the same frame) are done.
+            let local = catch_unwind(AssertUnwindSafe(local_job));
+            let pooled =
+                catch_unwind(AssertUnwindSafe(|| handle.join()));
+            match (local, pooled) {
+                (Ok(a), Ok(b)) => a + b,
+                (Err(p), _) | (Ok(_), Err(p)) => resume_unwind(p),
+            }
+        }
+    }
+}
+
+/// The pre-pool dispatch path: one fresh OS thread per job via
+/// `std::thread::scope` (spawns are counted). Panics propagate on
+/// the scope join, exactly as before.
+fn scoped_fallback(tasks: Vec<ScopeJob<'_>>) -> u64 {
+    note_spawns(tasks.len() as u64);
+    let metric = AtomicU64::new(0);
+    std::thread::scope(|s| {
+        for job in tasks {
+            let m = &metric;
+            s.spawn(move || {
+                m.fetch_add(job(), Ordering::Relaxed);
+            });
+        }
+    });
+    metric.into_inner()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn jobs_marking(
+        flags: &[AtomicUsize],
+    ) -> Vec<ScopeJob<'_>> {
+        flags
+            .iter()
+            .map(|f| {
+                Box::new(move || {
+                    f.fetch_add(1, Ordering::Relaxed);
+                    1u64
+                }) as ScopeJob<'_>
+            })
+            .collect()
+    }
+
+    #[test]
+    fn scope_runs_every_job_and_sums_metrics() {
+        let pool = WorkerPool::new(2);
+        let flags: Vec<AtomicUsize> =
+            (0..16).map(|_| AtomicUsize::new(0)).collect();
+        // 16 jobs on 2 workers: oversubscribed batches queue and
+        // drain; each runs exactly once.
+        let sum = pool.scope(jobs_marking(&flags));
+        assert_eq!(sum, 16);
+        assert!(flags
+            .iter()
+            .all(|f| f.load(Ordering::Relaxed) == 1));
+        assert_eq!(pool.workers(), 2);
+        // empty scope is a no-op
+        assert_eq!(pool.scope(Vec::new()), 0);
+    }
+
+    #[test]
+    fn scope_jobs_borrow_stack_data() {
+        let pool = WorkerPool::new(3);
+        let mut out = vec![0u32; 60];
+        {
+            let jobs: Vec<ScopeJob<'_>> = out
+                .chunks_mut(20)
+                .enumerate()
+                .map(|(i, chunk)| {
+                    Box::new(move || {
+                        for (j, v) in chunk.iter_mut().enumerate() {
+                            *v = (i * 20 + j) as u32;
+                        }
+                        0u64
+                    }) as ScopeJob<'_>
+                })
+                .collect();
+            pool.scope(jobs);
+        }
+        assert_eq!(out, (0u32..60).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn run_scoped_single_job_runs_inline() {
+        let (spawns0, _) = work_counters();
+        let here = std::thread::current().id();
+        let ran = AtomicUsize::new(0);
+        run_scoped(vec![Box::new(|| {
+            assert_eq!(std::thread::current().id(), here);
+            ran.fetch_add(1, Ordering::Relaxed);
+            0
+        })]);
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+        let (spawns1, _) = work_counters();
+        assert_eq!(spawns1, spawns0, "single job must not dispatch");
+    }
+
+    #[test]
+    fn nested_submit_runs_inline_on_workers() {
+        let pool = WorkerPool::new(1);
+        let hits = AtomicUsize::new(0);
+        let jobs: Vec<ScopeJob<'_>> = (0..2)
+            .map(|_| {
+                let h = &hits;
+                Box::new(move || {
+                    assert!(in_worker());
+                    // A nested run_scoped on a 1-worker pool would
+                    // deadlock if it queued; it must run inline.
+                    let nested: Vec<ScopeJob<'_>> = (0..3)
+                        .map(|_| {
+                            Box::new(move || {
+                                h.fetch_add(1, Ordering::Relaxed);
+                                0u64
+                            }) as ScopeJob<'_>
+                        })
+                        .collect();
+                    run_scoped(nested);
+                    0u64
+                }) as ScopeJob<'_>
+            })
+            .collect();
+        pool.scope(jobs);
+        assert_eq!(hits.load(Ordering::Relaxed), 6);
+        assert!(!in_worker(), "flag is worker-local");
+    }
+
+    #[test]
+    fn job_panic_propagates_to_submitter() {
+        let pool = WorkerPool::new(2);
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            let jobs: Vec<ScopeJob<'_>> = vec![
+                Box::new(|| 0u64),
+                Box::new(|| panic!("job boom")),
+                Box::new(|| 0u64),
+            ];
+            pool.scope(jobs);
+        }))
+        .expect_err("panic must cross the scope");
+        let msg = err
+            .downcast_ref::<&str>()
+            .copied()
+            .unwrap_or_default();
+        assert_eq!(msg, "job boom");
+        // the pool survives a panicked job
+        assert_eq!(pool.scope(vec![Box::new(|| 7u64)]), 7);
+    }
+
+    #[test]
+    fn scoped_fallback_counts_spawns_and_sums() {
+        let (spawns0, _) = work_counters();
+        let sum = scoped_fallback(vec![
+            Box::new(|| 2u64),
+            Box::new(|| 3u64),
+        ]);
+        assert_eq!(sum, 5);
+        let (spawns1, _) = work_counters();
+        assert_eq!(spawns1 - spawns0, 2);
+    }
+
+    #[test]
+    fn drop_joins_workers_after_draining() {
+        let flags: Vec<AtomicUsize> =
+            (0..32).map(|_| AtomicUsize::new(0)).collect();
+        {
+            let pool = WorkerPool::new(2);
+            pool.scope(jobs_marking(&flags));
+        } // Drop: shutdown + join must not lose queued work
+        assert!(flags
+            .iter()
+            .all(|f| f.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn threads_override_parses_or_panics() {
+        assert_eq!(parse_threads_override(None), None);
+        assert_eq!(parse_threads_override(Some("")), None);
+        assert_eq!(parse_threads_override(Some("4")), Some(4));
+        for bad in ["0", "-1", "lots", "4.5"] {
+            let r = catch_unwind(|| parse_threads_override(Some(bad)));
+            assert!(r.is_err(), "{bad:?} must hard-error");
+        }
+    }
+
+    #[test]
+    fn pool_override_parses_or_panics() {
+        assert_eq!(parse_pool_override(None), None);
+        assert_eq!(parse_pool_override(Some("")), None);
+        assert_eq!(parse_pool_override(Some("on")), Some(true));
+        assert_eq!(parse_pool_override(Some("off")), Some(false));
+        let r = catch_unwind(|| parse_pool_override(Some("maybe")));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn ws_alloc_counter_is_thread_local_and_monotone() {
+        let (_, ws0) = work_counters();
+        note_ws_allocs(3);
+        note_ws_allocs(0);
+        let (_, ws1) = work_counters();
+        assert_eq!(ws1 - ws0, 3);
+        std::thread::spawn(|| {
+            let (_, ws) = work_counters();
+            assert_eq!(ws, 0, "fresh thread starts at zero");
+        })
+        .join()
+        .unwrap();
+    }
+}

@@ -1,12 +1,23 @@
 //! Scoped data-parallel helpers (no `rayon` offline).
 //!
-//! `parallel_chunks` splits an index range across worker threads using
-//! `std::thread::scope`. On single-core hosts (like this testbed) it
-//! degrades to a serial loop with zero thread overhead; the GEMM hot
-//! paths call through here so multi-core machines scale transparently.
+//! `parallel_chunks` splits an index range across worker threads and
+//! dispatches through the persistent runtime in [`crate::util::pool`]
+//! (parked workers, `thread::scope` only as the `PALLAS_POOL=off`
+//! fallback). On single-core hosts (like this testbed) it degrades to
+//! a serial loop with zero dispatch overhead; the GEMM hot paths call
+//! through here so multi-core machines scale transparently. Chunk
+//! boundaries are `n.div_ceil(threads)`-sized regardless of dispatch
+//! path, so results never depend on where the chunks run.
 
-/// Number of worker threads to use (cores, capped).
+use crate::util::pool::{self, ScopeJob};
+
+/// Number of worker threads to use: the `PALLAS_THREADS` override
+/// when set (hard error on invalid values — see
+/// [`pool::parse_threads_override`]), else cores, capped.
 pub fn default_threads() -> usize {
+    if let Some(n) = pool::env_threads() {
+        return n;
+    }
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)
@@ -30,17 +41,18 @@ where
         return;
     }
     let chunk = n.div_ceil(threads);
-    std::thread::scope(|s| {
-        for t in 0..threads {
-            let start = t * chunk;
-            let end = ((t + 1) * chunk).min(n);
-            if start >= end {
-                break;
-            }
-            let fr = &f;
-            s.spawn(move || fr(start, end));
-        }
-    });
+    let fr = &f;
+    let tasks: Vec<ScopeJob<'_>> = (0..threads)
+        .map(|t| (t * chunk, ((t + 1) * chunk).min(n)))
+        .take_while(|&(start, end)| start < end)
+        .map(|(start, end)| {
+            Box::new(move || {
+                fr(start, end);
+                0u64
+            }) as ScopeJob<'_>
+        })
+        .collect();
+    pool::run_scoped(tasks);
 }
 
 /// Partition `weights.len()` items into at most `threads` buckets with
@@ -85,42 +97,70 @@ pub fn weighted_buckets(weights: &[f64], threads: usize) -> Vec<Vec<usize>> {
 }
 
 /// Distribute owned work items across threads: `f(i, item)` runs
-/// exactly once per item, with the index range split by
-/// [`parallel_chunks`]. Items are handed out *by value*, which lets
-/// callers pre-split disjoint `&mut` output regions (e.g. with
-/// `chunks_mut`) and move each into its worker — borrow-checked
-/// data-parallel writes with no `unsafe` and no aliasing. The quant
-/// constructors use this to parallelize block-row quantization.
+/// exactly once per item, in ascending index order within each chunk,
+/// with the index range split exactly like [`parallel_chunks`]. Each
+/// worker receives a contiguous **owned run** of items (the input is
+/// split with `Vec::split_off` and the runs moved into the jobs) —
+/// no per-item locking, no aliasing, no `unsafe`. Items are handed
+/// out *by value*, which lets callers pre-split disjoint `&mut`
+/// output regions (e.g. with `chunks_mut`) and move each into its
+/// worker. The quant constructors use this to parallelize block-row
+/// quantization.
 pub fn parallel_items<T, F>(items: Vec<T>, threads: usize, f: F)
 where
     T: Send,
     F: Fn(usize, T) + Sync,
 {
-    let slots: Vec<std::sync::Mutex<Option<T>>> = items
-        .into_iter()
-        .map(|t| std::sync::Mutex::new(Some(t)))
-        .collect();
-    parallel_chunks(slots.len(), threads, |a, b| {
-        for (i, slot) in slots.iter().enumerate().take(b).skip(a) {
-            let item = slot.lock().unwrap().take().unwrap();
+    let n = items.len();
+    if n == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, n);
+    if threads <= 1 {
+        for (i, item) in items.into_iter().enumerate() {
             f(i, item);
         }
-    });
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    let fr = &f;
+    let mut tasks: Vec<ScopeJob<'_>> = Vec::with_capacity(threads);
+    let mut rest = items;
+    let mut base = 0usize;
+    while !rest.is_empty() {
+        let take = chunk.min(rest.len());
+        let tail = rest.split_off(take);
+        let run = std::mem::replace(&mut rest, tail);
+        tasks.push(Box::new(move || {
+            for (j, item) in run.into_iter().enumerate() {
+                fr(base + j, item);
+            }
+            0u64
+        }));
+        base += take;
+    }
+    pool::run_scoped(tasks);
 }
 
-/// Map `f` over `0..n`, collecting results in index order.
+/// Map `f` over `0..n`, collecting results in index order. Built on
+/// [`parallel_items`] over disjoint `chunks_mut` runs of the output
+/// — lock-free like the other helpers.
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send + Default + Clone,
     F: Fn(usize) -> T + Sync,
 {
     let mut out = vec![T::default(); n];
+    if n == 0 {
+        return out;
+    }
+    let chunk = n.div_ceil(threads.clamp(1, n));
     {
-        let slots: Vec<std::sync::Mutex<&mut T>> =
-            out.iter_mut().map(std::sync::Mutex::new).collect();
-        parallel_chunks(n, threads, |a, b| {
-            for i in a..b {
-                **slots[i].lock().unwrap() = f(i);
+        let items: Vec<(usize, &mut [T])> =
+            out.chunks_mut(chunk).enumerate().collect();
+        parallel_items(items, threads, |_, (ci, run)| {
+            for (j, v) in run.iter_mut().enumerate() {
+                *v = f(ci * chunk + j);
             }
         });
     }

@@ -1,0 +1,260 @@
+//! Cross-layer properties of the persistent worker-pool runtime
+//! (`util::pool`).
+//!
+//! The contract under test: pooled dispatch must be **bit-identical**
+//! to the scoped-thread fallback at every layer — direct engine
+//! plans, the pipeline site runner, and the multi-layer `ModelStep`
+//! driver — for every microkernel backend available on the host,
+//! both data paths, and 1/2/4 threads. The runtime must also survive
+//! nested submits (engine calls issued from inside pool workers run
+//! inline instead of deadlocking) and oversubscription (more
+//! concurrent plans than workers), and a warm `ModelStep` microstep
+//! must be allocation-free: zero thread spawns and zero engine
+//! workspace/output growths, observed through
+//! `util::pool::work_counters`.
+//!
+//! Tests that flip the process-global pool flag serialize on one
+//! mutex (and restore the previous value on drop), so `cargo test`'s
+//! concurrent test threads never observe a half-toggled runtime.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use dbfq::gemm::{kernels, site_reference, synth_microbatch,
+                 DataPath, GemmPlan, ModelStep, ModelStepConfig};
+use dbfq::model::layer_linears;
+use dbfq::quant::{block_quant, fallback_quant, Criterion, Rounding,
+                  INT8_LEVELS};
+use dbfq::util::pool;
+use dbfq::util::rng::Pcg64;
+use dbfq::util::threadpool::parallel_map;
+use dbfq::util::Mat;
+
+const BLOCK: usize = 16;
+const THREADS: [usize; 3] = [1, 2, 4];
+
+/// Serializes every test that reads-and-toggles the process-global
+/// pool flag; restores the entry value on drop (also on panic).
+struct PoolFlagGuard {
+    _lock: MutexGuard<'static, ()>,
+    prev: bool,
+}
+
+impl PoolFlagGuard {
+    fn hold() -> PoolFlagGuard {
+        static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+        let lock = LOCK
+            .get_or_init(|| Mutex::new(()))
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        PoolFlagGuard { _lock: lock, prev: pool::pool_enabled() }
+    }
+}
+
+impl Drop for PoolFlagGuard {
+    fn drop(&mut self) {
+        pool::set_pool_enabled(self.prev);
+    }
+}
+
+/// Outlier-bearing operands: `a` carries planted spikes so the
+/// fallback plan really has residual blocks to schedule.
+fn operands(seed: u64) -> (Mat, Mat) {
+    let mut rng = Pcg64::new(seed);
+    let mut a = Mat::randn(48, 33, 1.0, &mut rng);
+    for i in 0..10 {
+        let n = a.data.len();
+        a.data[i * 131 % n] = 260.0;
+    }
+    let b = Mat::randn(33, 40, 1.0, &mut rng);
+    (a, b)
+}
+
+#[test]
+fn pool_vs_scoped_bit_identity_engine() {
+    let _guard = PoolFlagGuard::hold();
+    let (a, b) = operands(0xB00);
+    let qa = block_quant(&a, BLOCK, INT8_LEVELS, Rounding::Nearest);
+    let qb = block_quant(&b, BLOCK, INT8_LEVELS, Rounding::Nearest);
+    let fa = fallback_quant(&a, 40.0, BLOCK, INT8_LEVELS,
+                            Criterion::AbsMax);
+    assert!(fa.fallback_rate() > 0.0, "outliers must trigger fallback");
+    for kn in kernels::available() {
+        for path in [DataPath::Int8, DataPath::SimF32] {
+            for threads in THREADS {
+                let int8 =
+                    GemmPlan::new_int8_path(&qa, &qb, threads, path)
+                        .with_kernels(kn);
+                let fb = GemmPlan::new_fallback_path(
+                    &fa, &qb, &fa.u, threads, path)
+                    .with_kernels(kn);
+                pool::set_pool_enabled(true);
+                let ci_pool = int8.execute();
+                let cf_pool = fb.execute();
+                pool::set_pool_enabled(false);
+                let ci_scope = int8.execute();
+                let cf_scope = fb.execute();
+                let tag = format!("backend {} path {} threads \
+                                   {threads}",
+                                  kn.name, path.tag());
+                assert_eq!(ci_pool.data, ci_scope.data, "int8 {tag}");
+                assert_eq!(cf_pool.data, cf_scope.data,
+                           "fallback {tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pool_vs_scoped_bit_identity_site() {
+    let _guard = PoolFlagGuard::hold();
+    let sites = layer_linears(16, 32, false, 16);
+    let l = &sites[0];
+    let mut rng = Pcg64::new(0x517E);
+    let w = Mat::randn(l.k, l.n, 0.05, &mut rng);
+    let (acts, grads) = synth_microbatch(&sites[..1], 23, 180.0);
+    let sr = Rounding::Stochastic(0xDECAF);
+    for kn in kernels::available() {
+        for path in [DataPath::Int8, DataPath::SimF32] {
+            for threads in THREADS {
+                pool::set_pool_enabled(true);
+                let on = site_reference(
+                    l, &w, &acts[0], &grads[0], 8.0, sr, BLOCK,
+                    threads, path, kn,
+                );
+                pool::set_pool_enabled(false);
+                let off = site_reference(
+                    l, &w, &acts[0], &grads[0], 8.0, sr, BLOCK,
+                    threads, path, kn,
+                );
+                let tag = format!("backend {} path {} threads \
+                                   {threads}",
+                                  kn.name, path.tag());
+                assert_eq!(on.y.data, off.y.data, "y {tag}");
+                assert_eq!(on.dx.data, off.dx.data, "dx {tag}");
+                assert_eq!(on.dw.data, off.dw.data, "dw {tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pool_vs_scoped_bit_identity_model_step() {
+    let _guard = PoolFlagGuard::hold();
+    for kn in kernels::available() {
+        for path in [DataPath::Int8, DataPath::SimF32] {
+            for threads in THREADS {
+                let mut cfg =
+                    ModelStepConfig::new(1, 16, 32, 40, 16, BLOCK);
+                cfg.glu = false;
+                cfg.threads = threads;
+                cfg.path = path;
+                let mut on =
+                    ModelStep::with_random_weights(cfg.clone(), 0x99)
+                        .with_kernels(kn);
+                let mut off =
+                    ModelStep::with_random_weights(cfg, 0x99)
+                        .with_kernels(kn);
+                let (acts, grads) =
+                    synth_microbatch(on.sites(), 17, 180.0);
+                for t in 0..2usize {
+                    pool::set_pool_enabled(true);
+                    let (mo, _) = on.microstep(&acts, &grads);
+                    pool::set_pool_enabled(false);
+                    let (so, _) = off.microstep(&acts, &grads);
+                    for (s, (x, y)) in
+                        mo.iter().zip(&so).enumerate()
+                    {
+                        let tag = format!(
+                            "site {s} microstep {t} backend {} path \
+                             {} threads {threads}",
+                            kn.name,
+                            path.tag()
+                        );
+                        assert_eq!(x.y.data, y.y.data, "y {tag}");
+                        assert_eq!(x.dx.data, y.dx.data, "dx {tag}");
+                        assert_eq!(x.dw.data, y.dw.data, "dw {tag}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn nested_engine_calls_inside_pool_jobs_run_inline() {
+    // Plans executed from inside pool workers (nested submits) must
+    // run inline — no deadlock even when every worker is busy — and
+    // still produce the canonical bits.
+    let (a, b) = operands(0x4E57);
+    let qa = block_quant(&a, BLOCK, INT8_LEVELS, Rounding::Nearest);
+    let qb = block_quant(&b, BLOCK, INT8_LEVELS, Rounding::Nearest);
+    let reference = GemmPlan::new_int8(&qa, &qb, 1).execute();
+    let plan = GemmPlan::new_int8(&qa, &qb, 4);
+    let outs: Vec<Vec<f32>> =
+        parallel_map(8, 8, |_| plan.execute().data);
+    for (i, o) in outs.iter().enumerate() {
+        assert_eq!(o, &reference.data, "nested execute {i}");
+    }
+}
+
+#[test]
+fn oversubscription_smoke() {
+    // More concurrent submitters than pool workers: eight OS threads
+    // each repeatedly execute a 4-way plan against the one global
+    // pool. Everything must complete (queueing, no lost jobs) with
+    // the canonical bits.
+    let (a, b) = operands(0x0BE5);
+    let qa = block_quant(&a, BLOCK, INT8_LEVELS, Rounding::Nearest);
+    let qb = block_quant(&b, BLOCK, INT8_LEVELS, Rounding::Nearest);
+    let reference = GemmPlan::new_int8(&qa, &qb, 1).execute();
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            s.spawn(|| {
+                for _ in 0..4 {
+                    let plan = GemmPlan::new_int8(&qa, &qb, 4);
+                    assert_eq!(plan.execute().data, reference.data);
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn model_step_steady_state_is_allocation_free() {
+    let _guard = PoolFlagGuard::hold();
+    if !pool::pool_enabled() {
+        // PALLAS_POOL=off leg: scoped dispatch legitimately spawns
+        // per call — the zero-alloc guarantee is pool-only.
+        return;
+    }
+    let mut cfg = ModelStepConfig::new(1, 16, 32, 40, 16, BLOCK);
+    cfg.glu = false;
+    let mut ms = ModelStep::with_random_weights(cfg, 0xAB);
+    let (acts, grads) = synth_microbatch(ms.sites(), 11, 180.0);
+    // Warm until quiescent: the pool's task→worker assignment is
+    // nondeterministic, so a worker may meet its first i8 panel (and
+    // grow its thread-local workspace) several microsteps in.
+    let mut quiet = false;
+    for _ in 0..12 {
+        let (s0, w0) = pool::work_counters();
+        ms.microstep_in_place(&acts, &grads);
+        let (s1, w1) = pool::work_counters();
+        if s1 == s0 && w1 == w0 {
+            quiet = true;
+            break;
+        }
+    }
+    assert!(quiet, "never reached the allocation-free steady state");
+    for step in 0..2 {
+        let (s0, w0) = pool::work_counters();
+        let rep = ms.microstep_in_place(&acts, &grads);
+        let (s1, w1) = pool::work_counters();
+        assert_eq!(rep.cache_misses, 0,
+                   "steady-state microstep must hit (step {step})");
+        assert_eq!(s1 - s0, 0,
+                   "steady-state thread spawns (step {step})");
+        assert_eq!(w1 - w0, 0,
+                   "steady-state workspace/output allocs \
+                    (step {step})");
+    }
+}

@@ -26,10 +26,14 @@
 //! the calibration, reports packed bytes per operand (the 4x B-panel
 //! shrink the i8 path buys), records the measured
 //! `SubstrateCalibration` the cost model consumes in place of its
-//! ad-hoc fallback-overhead constant, and measures the dispatch
+//! ad-hoc fallback-overhead constant, measures the dispatch
 //! overhead of the persistent worker pool vs per-call scoped threads
 //! on a small-m GEMM (the `dispatch_overhead` fields — PR 7's
-//! payoff).
+//! payoff), A/Bs the vectorized i32→f32 widening slot (the
+//! `widen_simd_vs_scalar` criterion), and sweeps the i8 plan across
+//! shard counts S = 1/2/4 (the `shard_scaling` fields +
+//! `shard_s2_vs_s1` criterion — sharding is bit-neutral, so this is
+//! pure perf trajectory).
 //!
 //! Set `BENCH_SMOKE=1` for a seconds-long CI smoke run (small dim,
 //! short iterations) that keeps this binary from rotting.
@@ -218,6 +222,69 @@ fn main() {
         );
         g_simd / g_scalar.max(1e-12)
     };
+
+    // -- widen SIMD vs scalar on the Int8 path --------------------------
+    // The vectorized i32→f32 widening slot (per-lane cvt, bit-equal to
+    // the scalar floor by the correctly-rounded-conversion argument).
+    // Widening is a small share of the i8 inner loop, so this mostly
+    // confirms the slot doesn't regress; debug builds route to scalar
+    // either way, so measure in release only.
+    let widen_simd_vs_scalar = {
+        let plan_i8 = GemmPlan::new_int8_path(&qa, &qb, nthreads,
+                                              DataPath::Int8);
+        kernels::set_widen_simd_enabled(false);
+        let g_scalar = measure(dim, target_ms, || {
+            std::hint::black_box(plan_i8.execute());
+        });
+        kernels::set_widen_simd_enabled(true);
+        let g_simd = measure(dim, target_ms, || {
+            std::hint::black_box(plan_i8.execute());
+        });
+        println!(
+            "\nwiden (i32→f32) @ {nthreads} threads: vectorized \
+             {g_simd:.2} Gops vs scalar {g_scalar:.2} Gops = \
+             {:.2}x (target >= 1.0x on wide panels)",
+            g_simd / g_scalar.max(1e-12)
+        );
+        g_simd / g_scalar.max(1e-12)
+    };
+
+    // -- shard scaling: i8 plan at S = 1 / 2 / 4 ------------------------
+    // Per-shard LPT schedules with worker-affinity hints; bit-identical
+    // output by contract (tests/shard_prop.rs), so this sweep records
+    // what sharding costs or buys on this host's topology.
+    let mut shard_rows = Vec::new();
+    let mut shard_s2_over_s1 = 0.0f64;
+    {
+        let mut g_s1 = 0.0f64;
+        for shards in [1usize, 2, 4] {
+            let plan = GemmPlan::new_int8_path(&qa, &qb, nthreads,
+                                               DataPath::Int8)
+                .with_shards(shards);
+            let g = measure(dim, target_ms, || {
+                std::hint::black_box(plan.execute());
+            });
+            if shards == 1 {
+                g_s1 = g;
+            }
+            if shards == 2 {
+                shard_s2_over_s1 = g / g_s1.max(1e-12);
+            }
+            println!(
+                "shard scaling @ {nthreads} threads: S={shards} \
+                 (effective {}) {g:.2} Gops = {:.2}x S=1",
+                plan.shard_count(), g / g_s1.max(1e-12)
+            );
+            shard_rows.push(obj(vec![
+                ("shards", Json::Num(shards as f64)),
+                ("shards_effective",
+                 Json::Num(plan.shard_count() as f64)),
+                ("threads", Json::Num(nthreads as f64)),
+                ("gops_plan_i8", Json::Num(g)),
+                ("vs_s1", Json::Num(g / g_s1.max(1e-12))),
+            ]));
+        }
+    }
 
     // -- dispatch overhead: small-m GEMM, pool vs scoped ----------------
     // The persistent pool's payoff case: a GEMM too small to amortize
@@ -428,6 +495,7 @@ fn main() {
             ("a_codes_i8", Json::Num(a_codes_i8 as f64)),
         ])),
         ("dispatch_overhead", dispatch_obj),
+        ("shard_scaling", Json::Arr(shard_rows)),
         ("criteria", obj(vec![
             ("int8_engine_vs_seed_1t", Json::Num(int8_speedup_1t)),
             ("int8_i8_vs_sim", Json::Num(int8_i8_vs_sim_nt)),
@@ -435,6 +503,9 @@ fn main() {
             ("seq_vs_random_gap_worst", Json::Num(seq_gap_worst)),
             ("simd_vs_scalar", Json::Num(simd_vs_scalar)),
             ("f32_simd_vs_scalar", Json::Num(f32_simd_vs_scalar)),
+            ("widen_simd_vs_scalar",
+             Json::Num(widen_simd_vs_scalar)),
+            ("shard_s2_vs_s1", Json::Num(shard_s2_over_s1)),
             ("dispatch_scoped_over_pooled",
              Json::Num(dispatch_ratio)),
         ])),

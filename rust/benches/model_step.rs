@@ -26,6 +26,9 @@
 //! threads), recording the pool's latency win plus the runtime work
 //! counters (`dispatch_overhead` fields: steady-state thread spawns
 //! and workspace growths per microstep, expected 0 when pooled).
+//! A shard-scaling phase re-times the warm microstep at S = 1 / 2 /
+//! auto (`PALLAS_SHARDS`) — the `shard_scaling` fields and criterion
+//! (S=auto over S=1 warm throughput; sharding is bit-neutral).
 //!
 //! Emits `BENCH_model_step.json` (schema in `docs/BENCHMARKS.md`).
 //! Set `BENCH_SMOKE=1` for a seconds-long CI smoke run.
@@ -296,6 +299,50 @@ fn main() {
     let scoped_steady = median(&scoped_step_ms);
     let dispatch_ratio = scoped_steady / pooled_steady.max(1e-9);
 
+    // -- shard scaling: warm microstep at S = 1 / 2 / auto -----------
+    // Sharding is bit-neutral (tests/shard_prop.rs), so this phase is
+    // pure perf trajectory: a fresh warm driver per shard count, the
+    // same inputs and θ, timing the zero-alloc steady-state path.
+    // "auto" is the PALLAS_SHARDS knob value the configs default to.
+    let shard_auto = pool::default_shards();
+    let mut shard_rows = Vec::new();
+    let mut shard_gops_s1 = 0.0f64;
+    let mut shard_gops_auto = 0.0f64;
+    for shards in [1usize, 2, shard_auto] {
+        let mut scfg = cfg.clone();
+        scfg.shards = shards;
+        let mut sms = ModelStep::new(scfg, weights.clone());
+        sms.controller_mut().thresholds.copy_from_slice(&thetas);
+        sms.microstep_in_place(&acts, &grads); // cold build
+        sms.microstep_in_place(&acts, &grads); // settle workspaces
+        let mut times = Vec::with_capacity(disp_iters);
+        for _ in 0..disp_iters {
+            let t = Instant::now();
+            sms.microstep_in_place(&acts, &grads);
+            times.push(t.elapsed().as_secs_f64() * 1e3);
+        }
+        let steady = median(&times);
+        let g = flops / (steady / 1e3) / 1e9;
+        if shards == 1 {
+            shard_gops_s1 = g;
+        }
+        if shards == shard_auto {
+            shard_gops_auto = g;
+        }
+        shard_rows.push(obj(vec![
+            ("shards", Json::Num(shards as f64)),
+            ("auto", Json::Bool(shards == shard_auto)),
+            ("steady_ms", Json::Num(steady)),
+            ("gops", Json::Num(g)),
+        ]));
+    }
+    let shard_scaling = shard_gops_auto / shard_gops_s1.max(1e-12);
+    println!(
+        "shard scaling (warm microstep): S=1 {shard_gops_s1:.2} Gops \
+         vs S=auto({shard_auto}) {shard_gops_auto:.2} Gops = \
+         {shard_scaling:.2}x"
+    );
+
     // -- summaries ----------------------------------------------------
     let cold_steady = median(&cold_ms);
     let cached_steady = median(&cached_ms[1..]);
@@ -513,8 +560,13 @@ fn main() {
             ("steady_ws_allocs_per_microstep",
              Json::Num(steady_ws)),
         ])),
+        ("shard_scaling", obj(vec![
+            ("auto_shards", Json::Num(shard_auto as f64)),
+            ("per_shards", Json::Arr(shard_rows)),
+        ])),
         ("criteria", obj(vec![
             ("cached_vs_cold", Json::Num(speedup)),
+            ("shard_scaling", Json::Num(shard_scaling)),
             ("warm_hit_rate", Json::Num(warm_hit_rate)),
             ("dispatch_scoped_over_pooled",
              Json::Num(dispatch_ratio)),

@@ -576,9 +576,94 @@ fn static_backend_name(s: &str) -> Option<&'static str> {
         .find(|&n| n == s)
 }
 
+/// Projected LPT makespan (in weight units) of a per-row-sub-panel
+/// weight vector under the engine's sharded scheduling policy.
+/// `weights` are the fallback-weighted row-chunk costs (what
+/// `GemmPlan::panel_weights` exposes); `panels` is the number of
+/// column panels the shards slice (`nbk`). The thread budget is split
+/// round-robin across `shards` (each shard keeping at least one
+/// thread), `weighted_buckets` runs per shard over the shared
+/// row-chunk costs, each shard's bucket maximum is scaled by its
+/// contiguous share of the column panels, and the projection is the
+/// max over shards. `shards <= 1` reduces exactly to the flat LPT
+/// makespan — same clamping, same tie-breaks — so this is a strict
+/// generalization of the unsharded projection.
+///
+/// This mirrors `GemmPlan::schedule_makespan` without needing packed
+/// operands, so the cost model can ask "does sharding this layer's
+/// panel set cost schedule balance?" before any plan is built.
+pub fn sharded_makespan(weights: &[f64], threads: usize,
+                        shards: usize, panels: usize) -> f64 {
+    use crate::util::threadpool::weighted_buckets;
+    let bucket_span = |b: &Vec<usize>| {
+        b.iter().map(|&i| weights[i]).sum::<f64>()
+    };
+    let shards = shards.max(1).min(panels.max(1));
+    if shards <= 1 {
+        return weighted_buckets(weights, threads)
+            .iter()
+            .map(bucket_span)
+            .fold(0.0f64, f64::max);
+    }
+    let eff = threads.clamp(1, weights.len().max(1));
+    let base = eff / shards;
+    let extra = eff % shards;
+    (0..shards)
+        .map(|si| {
+            let t = (base + usize::from(si < extra))
+                .clamp(1, weights.len().max(1));
+            let lo = si * panels / shards;
+            let hi = (si + 1) * panels / shards;
+            let frac = (hi - lo) as f64 / panels.max(1) as f64;
+            weighted_buckets(weights, t)
+                .iter()
+                .map(bucket_span)
+                .fold(0.0f64, f64::max)
+                * frac
+        })
+        .fold(0.0f64, f64::max)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn sharded_makespan_s1_matches_flat_lpt() {
+        let w = [1.0, 260.0, 2.0, 260.0, 1.5, 3.0];
+        for threads in [1usize, 2, 4, 8] {
+            let flat = crate::util::threadpool::weighted_buckets(&w, threads)
+                .iter()
+                .map(|b| b.iter().map(|&i| w[i]).sum::<f64>())
+                .fold(0.0f64, f64::max);
+            let s1 = sharded_makespan(&w, threads, 1, 4);
+            assert_eq!(s1.to_bits(), flat.to_bits(),
+                       "S=1 must be the flat projection (threads={threads})");
+        }
+    }
+
+    #[test]
+    fn sharded_makespan_is_bounded_and_clamps() {
+        let w = [1.0, 260.0, 2.0, 260.0, 1.5, 3.0];
+        let total: f64 = w.iter().sum();
+        for threads in [1usize, 2, 4] {
+            for shards in [1usize, 2, 3, 4, 16] {
+                let m = sharded_makespan(&w, threads, shards, 4);
+                assert!(m > 0.0 && m <= total + 1e-9,
+                        "makespan {m} outside (0, {total}] at \
+                         threads={threads} shards={shards}");
+            }
+        }
+        // Uniform row chunks, 2 shards x 2 threads each: every shard
+        // splits the 4 chunks over 2 buckets (span 4.0) and covers
+        // half the column panels -> projection total/4.
+        let u = [2.0; 4];
+        let m = sharded_makespan(&u, 4, 2, 2);
+        assert!((m - 2.0).abs() < 1e-12, "expected 8.0/4, got {m}");
+        // zero panels / zero chunks never divide by zero
+        assert_eq!(sharded_makespan(&[], 4, 3, 0), 0.0);
+        assert_eq!(sharded_makespan(&[], 4, 3, 4), 0.0);
+    }
 
     #[test]
     fn int8_faster_than_bf16_at_large_sizes() {

@@ -131,6 +131,23 @@
 //! Output safety: C is split into disjoint `&mut` row-panel slices up
 //! front and each worker takes ownership of its panels — no `AtomicPtr`
 //! hand-rolling, no aliasing, borrow-checked by construction.
+//!
+//! ## Sharded execution
+//!
+//! At `shards > 1` (the `PALLAS_SHARDS` knob, or
+//! [`with_shards`](GemmPlan::with_shards)) the column panels split
+//! into S contiguous shards, each with its own LPT schedule over a
+//! share of the thread budget and a stable worker-affinity base, so a
+//! shard's packed panels are touched by the same pool workers every
+//! microstep. Each shard owns a disjoint column range of C — the
+//! forward/dX/dW GEMMs all shard N, so no inter-shard reduction ever
+//! runs; a future K-split would use the deterministic fixed-shape
+//! tree reduction in [`kernels::widen_reduce_i32`]. Sharding is
+//! bit-neutral: the panel loops are `bj`-outermost and each C element
+//! is touched only during its own `bj` iteration, so restricting a
+//! worker to a `bj` range preserves every element's exact FP op
+//! sequence (asserted across S × threads × backends × paths by
+//! `tests/shard_prop.rs`).
 
 use std::cell::RefCell;
 use std::sync::Arc;
@@ -284,10 +301,62 @@ pub struct GemmPlan<'a> {
     /// (weights and thread count are fixed then) and replayed by every
     /// execute — the schedule is part of the plan, not the call
     buckets: Vec<Vec<usize>>,
+    /// effective shard count: requested shards clamped to the column
+    /// panel count (1 for dense plans — the dense kernel streams
+    /// whole B rows, not column panels, so there is nothing to shard)
+    shards: usize,
+    /// per-shard schedules (empty when `shards == 1`, where the flat
+    /// `buckets` path runs unchanged)
+    shard_scheds: Vec<ShardSched>,
     kernel: Kernel<'a>,
     /// microkernel backend (selected once at build; see
     /// [`kernels::select`])
     kernels: &'static Kernels,
+}
+
+/// One shard of a sharded plan: a contiguous range of column panels,
+/// its own LPT bucket assignment over the same sub-panel weights, and
+/// the first worker index its jobs are hinted at (stable per plan, so
+/// a shard's panels are touched by the same pool workers every
+/// microstep — best-effort locality, never a correctness dependence).
+struct ShardSched {
+    /// first column panel (inclusive)
+    bj_lo: usize,
+    /// last column panel (exclusive)
+    bj_hi: usize,
+    /// worker-affinity base: shard jobs are hinted at
+    /// `worker_base + bucket_index`
+    worker_base: usize,
+    /// LPT sub-panel→worker assignment for this shard's thread share
+    buckets: Vec<Vec<usize>>,
+}
+
+/// Build the per-shard schedules: `nbk` column panels split into
+/// `shards` contiguous ranges, `eff_threads` workers split as evenly
+/// as possible among shards (each shard gets at least one), and LPT
+/// run per shard over the shared sub-panel weights. The weights are
+/// column-independent (a sub-panel costs `rows · (kb + fb)` whatever
+/// its columns), so the same weight vector drives every shard's LPT.
+fn build_shard_scheds(
+    weights: &[f64], eff_threads: usize, shards: usize, nbk: usize,
+) -> Vec<ShardSched> {
+    let base = eff_threads / shards;
+    let extra = eff_threads % shards;
+    let mut worker_base = 0usize;
+    (0..shards)
+        .map(|si| {
+            let t = (base + usize::from(si < extra))
+                .clamp(1, weights.len().max(1));
+            let sched = ShardSched {
+                bj_lo: si * nbk / shards,
+                bj_hi: (si + 1) * nbk / shards,
+                worker_base,
+                buckets: weighted_buckets(weights, t),
+            };
+            worker_base += t;
+            sched
+        })
+        .collect()
 }
 
 /// Effective worker count and LPT bucket assignment for a weight
@@ -366,9 +435,12 @@ impl<'a> GemmPlan<'a> {
             nbk: 0,
             weights,
             buckets,
+            shards: 1,
+            shard_scheds: Vec::new(),
             kernel: Kernel::Dense { a, b },
             kernels: kernels::select(),
         }
+        .with_shards(pool::default_shards())
     }
 
     /// Plan an INT8 block GEMM (paper Eq. 1) on the default data path
@@ -425,9 +497,12 @@ impl<'a> GemmPlan<'a> {
             nbk,
             weights,
             buckets,
+            shards: 1,
+            shard_scheds: Vec::new(),
             kernel,
             kernels: kernels::select(),
         }
+        .with_shards(pool::default_shards())
     }
 
     /// Plan a mixed-precision fallback GEMM (paper Algorithm 1) on the
@@ -505,9 +580,12 @@ impl<'a> GemmPlan<'a> {
             nbk,
             weights,
             buckets,
+            shards: 1,
+            shard_scheds: Vec::new(),
             kernel,
             kernels: kernels::select(),
         }
+        .with_shards(pool::default_shards())
     }
 
     /// Pin this plan to an explicit microkernel backend (tests,
@@ -516,6 +594,40 @@ impl<'a> GemmPlan<'a> {
     pub fn with_kernels(mut self, k: &'static Kernels) -> GemmPlan<'a> {
         self.kernels = k;
         self
+    }
+
+    /// Re-shard this plan: split its column panels into `shards`
+    /// contiguous ranges, each with its own per-shard LPT schedule and
+    /// stable worker-affinity base. Constructors default the count
+    /// from [`pool::default_shards`] (the `PALLAS_SHARDS` knob);
+    /// tests and benches override it here to A/B in-process without
+    /// touching the environment.
+    ///
+    /// The request is clamped to the column-panel count, and dense
+    /// plans always stay at 1 (the dense kernel streams whole B rows,
+    /// not column panels). Sharding never changes results: each shard
+    /// runs the same `bj`-ascending/`bk`-ascending loops over its own
+    /// disjoint columns of C, so every output element sees exactly the
+    /// FP op sequence of the unsharded plan.
+    pub fn with_shards(mut self, shards: usize) -> GemmPlan<'a> {
+        let s_eff = match self.mode {
+            Precision::Dense => 1,
+            _ => shards.max(1).min(self.nbk.max(1)),
+        };
+        self.shards = s_eff;
+        self.shard_scheds = if s_eff <= 1 {
+            Vec::new()
+        } else {
+            build_shard_scheds(&self.weights, self.eff_threads, s_eff,
+                               self.nbk)
+        };
+        self
+    }
+
+    /// Effective shard count (after clamping; 1 means the flat
+    /// schedule runs unchanged).
+    pub fn shard_count(&self) -> usize {
+        self.shards
     }
 
     /// Name of the microkernel backend this plan executes with
@@ -550,13 +662,29 @@ impl<'a> GemmPlan<'a> {
     /// the schedule cached at build. The ratio is a load-balance
     /// factor; currently consumed by tests only (the cost model uses
     /// measured throughput via `SubstrateCalibration`).
+    /// At `shards > 1` the makespan is the max over shards of each
+    /// shard's LPT makespan scaled by its panel share — a sub-panel's
+    /// weight covers all `nbk` column panels, but a shard only runs
+    /// `bj_hi - bj_lo` of them (approximate: panel widths are treated
+    /// as uniform, which only the tail panel violates).
     pub fn schedule_makespan(&self) -> (f64, f64) {
         let total: f64 = self.weights.iter().sum();
-        let makespan = self
-            .buckets
-            .iter()
-            .map(|b| b.iter().map(|&i| self.weights[i]).sum::<f64>())
-            .fold(0.0f64, f64::max);
+        let bucket_span = |b: &Vec<usize>| {
+            b.iter().map(|&i| self.weights[i]).sum::<f64>()
+        };
+        let makespan = if self.shards <= 1 {
+            self.buckets.iter().map(bucket_span).fold(0.0f64, f64::max)
+        } else {
+            self.shard_scheds
+                .iter()
+                .map(|s| {
+                    let frac = (s.bj_hi - s.bj_lo) as f64
+                        / self.nbk.max(1) as f64;
+                    s.buckets.iter().map(bucket_span)
+                        .fold(0.0f64, f64::max) * frac
+                })
+                .fold(0.0f64, f64::max)
+        };
         (total, makespan)
     }
 
@@ -581,6 +709,10 @@ impl<'a> GemmPlan<'a> {
             pool::note_ws_allocs(1);
         }
         if self.m == 0 || self.n == 0 || self.k == 0 {
+            return;
+        }
+        if self.shards > 1 && self.eff_threads > 1 {
+            self.execute_sharded(c);
             return;
         }
         // Split C into disjoint &mut sub-panel slices (no AtomicPtr):
@@ -628,6 +760,260 @@ impl<'a> GemmPlan<'a> {
                 }));
             }
             pool::note_ws_allocs(pool::run_scoped(tasks));
+        }
+    }
+
+    /// Sharded execute: each shard owns a contiguous column range of C
+    /// (`[bj_lo·bs, bj_hi·bs)`), so every C row is split at the shard
+    /// boundaries with chained `split_at_mut` — disjointness stays
+    /// borrow-checked, no aliasing, no reduction needed on this path.
+    /// One job per (shard, bucket) replays that shard's cached LPT
+    /// assignment and is hinted at worker `worker_base + bucket` via
+    /// [`pool::run_scoped_hinted`], so a shard's panels are touched by
+    /// the same workers every microstep (locality only — results never
+    /// depend on placement).
+    ///
+    /// Bit-identity with the flat path: the panel loops are
+    /// `bj`-outermost, and a C element in column panel `bj` is only
+    /// touched during iteration `bj` (with `bk` ascending inside), so
+    /// restricting a job to a `bj` sub-range changes no element's FP
+    /// op sequence.
+    fn execute_sharded(&self, c: &mut Mat) {
+        let scheds = &self.shard_scheds;
+        let ns = scheds.len();
+        let (al, il) = (self.acc_len(), self.acci_len());
+        // slots[ci][si]: shard si's per-row column segments of
+        // sub-panel ci, taken by the (shard, bucket) job that runs it.
+        let mut slots: Vec<Vec<Option<Vec<&mut [f32]>>>> =
+            Vec::with_capacity(self.weights.len());
+        for chunk in c.data.chunks_mut(self.sched_rows * self.n) {
+            let mut per_shard: Vec<Vec<&mut [f32]>> =
+                (0..ns).map(|_| Vec::new()).collect();
+            for row in chunk.chunks_mut(self.n) {
+                let mut rest = row;
+                let mut col = 0usize;
+                for (si, sch) in scheds.iter().enumerate() {
+                    let hi = (sch.bj_hi * self.bs).min(self.n);
+                    let (seg, r) = rest.split_at_mut(hi - col);
+                    per_shard[si].push(seg);
+                    col = hi;
+                    rest = r;
+                }
+                debug_assert!(rest.is_empty());
+            }
+            slots.push(per_shard.into_iter().map(Some).collect());
+        }
+        debug_assert_eq!(slots.len(), self.weights.len());
+        let mut tasks: Vec<(usize, ScopeJob<'_>)> = Vec::new();
+        for (si, sch) in scheds.iter().enumerate() {
+            let (bj_lo, bj_hi) = (sch.bj_lo, sch.bj_hi);
+            for (bix, bucket) in sch.buckets.iter().enumerate() {
+                if bucket.is_empty() {
+                    continue;
+                }
+                let mut list = Vec::with_capacity(bucket.len());
+                for &ci in bucket {
+                    list.push((ci, slots[ci][si].take().unwrap()));
+                }
+                tasks.push((
+                    sch.worker_base + bix,
+                    Box::new(move || {
+                        with_engine_workspace(al, il, |acc, acci| {
+                            for (ci, mut segs) in list {
+                                self.run_panel_shard(
+                                    ci, bj_lo, bj_hi, &mut segs, acc,
+                                    acci,
+                                );
+                            }
+                        })
+                    }),
+                ));
+            }
+        }
+        pool::note_ws_allocs(pool::run_scoped_hinted(tasks));
+    }
+
+    /// Shard-range twin of [`run_panel`](Self::run_panel): compute the
+    /// column panels `bj_lo..bj_hi` of sub-panel `ci`. `segs[r]` is
+    /// row `r`'s slice of C covering exactly this shard's columns
+    /// (local offset of panel `bj` is `(bj - bj_lo) · bs`).
+    fn run_panel_shard(&self, ci: usize, bj_lo: usize, bj_hi: usize,
+                       segs: &mut [&mut [f32]], acc: &mut [f32],
+                       acci: &mut [i32]) {
+        let rows = segs.len();
+        let r_lo = ci * self.sched_rows;
+        let bi = r_lo / self.bs;
+        match &self.kernel {
+            Kernel::Dense { .. } => {
+                unreachable!("dense plans are never sharded")
+            }
+            Kernel::Sim { af, a_pcols, a_scale, bp, b_scale, resid } => {
+                self.run_panel_sim_shard(
+                    bi, r_lo, bj_lo, bj_hi, segs, rows, acc, af,
+                    *a_pcols, a_scale, bp, b_scale, resid.as_ref(),
+                );
+            }
+            Kernel::I8 { qa, a_pcols, a_scale, bp, b_scale, resid } => {
+                self.run_panel_i8_shard(
+                    bi, r_lo, bj_lo, bj_hi, segs, rows, acc, acci, qa,
+                    *a_pcols, a_scale, bp, b_scale, resid.as_ref(),
+                );
+            }
+        }
+    }
+
+    /// [`run_panel_sim`](Self::run_panel_sim) restricted to panels
+    /// `bj_lo..bj_hi`, writing through per-row shard segments. Same
+    /// loop bodies, same row pairing, same per-`bk` scale-FMA order —
+    /// bit-identical per element to the flat path.
+    #[allow(clippy::too_many_arguments)]
+    fn run_panel_sim_shard(
+        &self, bi: usize, r_lo: usize, bj_lo: usize, bj_hi: usize,
+        segs: &mut [&mut [f32]], rows: usize, acc: &mut [f32],
+        af: &[f32], a_pcols: usize, a_scale: &[f32], bp: &PanelPack,
+        b_scale: &[f32], resid: Option<&Resid<'_>>,
+    ) {
+        let bs = self.bs;
+        let (acc0, acc1) = acc.split_at_mut(bs);
+        for bj in bj_lo..bj_hi {
+            let width = bp.widths[bj];
+            let c_lo = (bj - bj_lo) * bs;
+            let panel = bp.panel(bj);
+            let mut rl = 0usize;
+            while rl < rows {
+                let pair = rl + 1 < rows;
+                if pair {
+                    for bk in 0..self.kb {
+                        let sa = a_scale[bi * self.kb + bk];
+                        let sb = b_scale[bk * self.nbk + bj];
+                        panel_dot2(
+                            af, a_pcols, r_lo + rl, bk * bs, bs,
+                            panel, width, acc0, acc1,
+                        );
+                        let w = sa * sb;
+                        scale_add(&mut segs[rl][c_lo..c_lo + width],
+                                  acc0, width, w);
+                        scale_add(&mut segs[rl + 1][c_lo..c_lo + width],
+                                  acc1, width, w);
+                        if let Some(res) = resid {
+                            // Algorithm 1 lines 13-16: residual work
+                            // really skipped when u = 0.
+                            if res.u[bi * self.kb + bk] {
+                                let rs = res.r_scale[bi * self.kb + bk];
+                                panel_dot2(
+                                    &res.rf, a_pcols, r_lo + rl,
+                                    bk * bs, bs, panel, width, acc0,
+                                    acc1,
+                                );
+                                let rw = rs * sb;
+                                scale_add(
+                                    &mut segs[rl][c_lo..c_lo + width],
+                                    acc0, width, rw,
+                                );
+                                scale_add(
+                                    &mut segs[rl + 1]
+                                        [c_lo..c_lo + width],
+                                    acc1, width, rw,
+                                );
+                            }
+                        }
+                    }
+                    rl += 2;
+                } else {
+                    for bk in 0..self.kb {
+                        let sa = a_scale[bi * self.kb + bk];
+                        let sb = b_scale[bk * self.nbk + bj];
+                        panel_dot(
+                            af, a_pcols, r_lo + rl, bk * bs, bs,
+                            panel, width, acc0,
+                        );
+                        let w = sa * sb;
+                        scale_add(&mut segs[rl][c_lo..c_lo + width],
+                                  acc0, width, w);
+                        if let Some(res) = resid {
+                            if res.u[bi * self.kb + bk] {
+                                let rs = res.r_scale[bi * self.kb + bk];
+                                panel_dot(
+                                    &res.rf, a_pcols, r_lo + rl,
+                                    bk * bs, bs, panel, width, acc0,
+                                );
+                                let rw = rs * sb;
+                                scale_add(
+                                    &mut segs[rl][c_lo..c_lo + width],
+                                    acc0, width, rw,
+                                );
+                            }
+                        }
+                    }
+                    rl += 1;
+                }
+            }
+        }
+    }
+
+    /// [`run_panel_i8`](Self::run_panel_i8) restricted to panels
+    /// `bj_lo..bj_hi`, writing through per-row shard segments. The
+    /// integer block dots are exact, so tiling and sharding cannot
+    /// change the widened value; the scale-FMA order per element is
+    /// the flat path's.
+    #[allow(clippy::too_many_arguments)]
+    fn run_panel_i8_shard(
+        &self, bi: usize, r_lo: usize, bj_lo: usize, bj_hi: usize,
+        segs: &mut [&mut [f32]], rows: usize, acc: &mut [f32],
+        acci: &mut [i32], qa: &[i8], a_pcols: usize, a_scale: &[f32],
+        bp: &PanelPackI8, b_scale: &[f32],
+        resid: Option<&ResidI8<'_>>,
+    ) {
+        let bs = self.bs;
+        let kn = self.kernels;
+        for bj in bj_lo..bj_hi {
+            let width = bp.widths[bj];
+            let c_lo = (bj - bj_lo) * bs;
+            let panel = bp.panel(bj);
+            let mut rl = 0usize;
+            while rl < rows {
+                let left = rows - rl;
+                let (tile, dot): (usize, DotI8) = if left >= 4 {
+                    (4, kn.dot4_i8)
+                } else if left >= 2 {
+                    (2, kn.dot2_i8)
+                } else {
+                    (1, kn.dot_i8)
+                };
+                for bk in 0..self.kb {
+                    let sa = a_scale[bi * self.kb + bk];
+                    let sb = b_scale[bk * self.nbk + bj];
+                    dot(
+                        qa, a_pcols, r_lo + rl, bk * bs, bs, panel,
+                        width, acci, acc,
+                    );
+                    let w = sa * sb;
+                    for t in 0..tile {
+                        let crow =
+                            &mut segs[rl + t][c_lo..][..width];
+                        scale_add(crow, &acc[t * bs..], width, w);
+                    }
+                    if let Some(res) = resid {
+                        // Algorithm 1 lines 13-16: residual work
+                        // really skipped when u = 0.
+                        if res.u[bi * self.kb + bk] {
+                            let rs = res.r_scale[bi * self.kb + bk];
+                            dot(
+                                res.rq, a_pcols, r_lo + rl, bk * bs,
+                                bs, panel, width, acci, acc,
+                            );
+                            let rw = rs * sb;
+                            for t in 0..tile {
+                                let crow = &mut segs[rl + t][c_lo..]
+                                    [..width];
+                                scale_add(crow, &acc[t * bs..], width,
+                                          rw);
+                            }
+                        }
+                    }
+                }
+                rl += tile;
+            }
         }
     }
 
@@ -879,6 +1265,9 @@ pub struct WeightPlan {
     qb: Arc<BlockQuant>,
     path: DataPath,
     kernels: &'static Kernels,
+    /// requested shard count inherited by every derived plan (each
+    /// plan clamps it to its own panel count)
+    shards: usize,
 }
 
 impl WeightPlan {
@@ -894,7 +1283,12 @@ impl WeightPlan {
                 qb.col_panels_i8();
             }
         }
-        WeightPlan { qb, path, kernels: kernels::select() }
+        WeightPlan {
+            qb,
+            path,
+            kernels: kernels::select(),
+            shards: pool::default_shards(),
+        }
     }
 
     /// Pin derived plans to an explicit microkernel backend (default:
@@ -902,6 +1296,21 @@ impl WeightPlan {
     pub fn with_kernels(mut self, k: &'static Kernels) -> WeightPlan {
         self.kernels = k;
         self
+    }
+
+    /// Shard count every derived plan is built with (default: the
+    /// `PALLAS_SHARDS` knob via [`pool::default_shards`]). Sharding
+    /// never changes derived-plan results — see
+    /// [`GemmPlan::with_shards`].
+    pub fn with_shards(mut self, shards: usize) -> WeightPlan {
+        self.shards = shards.max(1);
+        self
+    }
+
+    /// The shard count derived plans inherit (before per-plan
+    /// clamping).
+    pub fn shard_count(&self) -> usize {
+        self.shards
     }
 
     /// The cached quantized weight operand.
@@ -943,6 +1352,7 @@ impl WeightPlan {
                          threads: usize) -> GemmPlan<'p> {
         GemmPlan::new_int8_path(a, self.qb.as_ref(), threads, self.path)
             .with_kernels(self.kernels)
+            .with_shards(self.shards)
     }
 
     /// Plan a fallback GEMM (Algorithm 1) against the cached weight
@@ -954,6 +1364,7 @@ impl WeightPlan {
         GemmPlan::new_fallback_path(fa, self.qb.as_ref(), u, threads,
                                     self.path)
             .with_kernels(self.kernels)
+            .with_shards(self.shards)
     }
 }
 
@@ -1255,6 +1666,112 @@ mod tests {
         let plan = wp_scalar.plan_int8(&qa, 1);
         assert_eq!(plan.kernel_backend(), "scalar");
         assert_eq!(plan.execute().data, c_wp.data);
+    }
+
+    #[test]
+    fn sharded_plans_agree_bitwise_with_flat() {
+        // Sharding must never change bits: sweep S × threads × paths
+        // on a fallback GEMM (residual path included) against the
+        // S=1 single-thread oracle. 40 output cols / block 16 → 3
+        // column panels, so S=4 also exercises the clamp.
+        let mut rng = Pcg64::new(71);
+        let mut a = Mat::randn(48, 32, 1.0, &mut rng);
+        for i in 0..10 {
+            a.data[i * 113 % a.data.len()] = 260.0;
+        }
+        let b = Mat::randn(32, 40, 1.0, &mut rng);
+        let fa = fallback_quant(&a, 40.0, 16, INT8_LEVELS,
+                                Criterion::AbsMax);
+        let qb = block_quant(&b, 16, INT8_LEVELS, Rounding::Nearest);
+        for path in [DataPath::Int8, DataPath::SimF32] {
+            let oracle = GemmPlan::new_fallback_path(&fa, &qb, &fa.u,
+                                                     1, path)
+                .with_shards(1)
+                .execute();
+            for s in [1usize, 2, 3, 4] {
+                for threads in [1usize, 2, 4] {
+                    let plan = GemmPlan::new_fallback_path(
+                        &fa, &qb, &fa.u, threads, path)
+                        .with_shards(s);
+                    assert!(plan.shard_count() <= 3);
+                    assert_eq!(
+                        plan.execute().data, oracle.data,
+                        "path={path:?} shards={s} threads={threads}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_int8_plan_matches_exact_reference() {
+        let (a, b) = mats(33, 32, 40, 77);
+        let qa = block_quant(&a, 16, INT8_LEVELS, Rounding::Nearest);
+        let qb = block_quant(&b, 16, INT8_LEVELS, Rounding::Nearest);
+        let c_ref = crate::gemm::int8::block_gemm_reference(&qa, &qb);
+        for s in [2usize, 3] {
+            let c = GemmPlan::new_int8_path(&qa, &qb, 4,
+                                            DataPath::Int8)
+                .with_shards(s)
+                .execute();
+            assert_eq!(c.data, c_ref.data, "shards={s}");
+        }
+    }
+
+    #[test]
+    fn shard_count_clamps_to_panels_and_dense_ignores_it() {
+        let (a, b) = mats(32, 32, 40, 83);
+        let qa = block_quant(&a, 16, INT8_LEVELS, Rounding::Nearest);
+        let qb = block_quant(&b, 16, INT8_LEVELS, Rounding::Nearest);
+        // 40 cols / block 16 → 3 panels: requests past that clamp
+        let plan = GemmPlan::new_int8(&qa, &qb, 2).with_shards(8);
+        assert_eq!(plan.shard_count(), 3);
+        assert_eq!(GemmPlan::new_int8(&qa, &qb, 2).with_shards(0)
+                       .shard_count(), 1);
+        // dense plans stream whole B rows — nothing to shard
+        let dense = GemmPlan::new_dense(&a, &b, 2).with_shards(4);
+        assert_eq!(dense.shard_count(), 1);
+    }
+
+    #[test]
+    fn sharded_makespan_stays_within_flat_total() {
+        let mut rng = Pcg64::new(91);
+        let mut a = Mat::randn(64, 64, 1.0, &mut rng);
+        for i in 0..12 {
+            a.data[i * 97 % a.data.len()] = 300.0;
+        }
+        let b = Mat::randn(64, 32, 1.0, &mut rng);
+        let fa = fallback_quant(&a, 50.0, 16, INT8_LEVELS,
+                                Criterion::AbsMax);
+        let qb = block_quant(&b, 16, INT8_LEVELS, Rounding::Nearest);
+        let flat = GemmPlan::new_fallback(&fa, &qb, &fa.u, 4)
+            .with_shards(1);
+        let sharded = GemmPlan::new_fallback(&fa, &qb, &fa.u, 4)
+            .with_shards(2);
+        let (total_f, mk_f) = flat.schedule_makespan();
+        let (total_s, mk_s) = sharded.schedule_makespan();
+        assert_eq!(total_f, total_s, "total work is shard-invariant");
+        assert!(mk_s > 0.0 && mk_s <= total_s + 1e-9);
+        assert!(mk_f > 0.0 && mk_f <= total_f + 1e-9);
+    }
+
+    #[test]
+    fn weight_plan_shard_config_survives_into_derived_plans() {
+        let (a, w) = mats(32, 32, 40, 97);
+        let qa = block_quant(&a, 16, INT8_LEVELS, Rounding::Nearest);
+        let qw = Arc::new(block_quant(&w, 16, INT8_LEVELS,
+                                      Rounding::Nearest));
+        let wp = WeightPlan::new(qw.clone(), DataPath::Int8)
+            .with_shards(2);
+        assert_eq!(wp.shard_count(), 2);
+        let plan = wp.plan_int8(&qa, 4);
+        assert_eq!(plan.shard_count(), 2);
+        // derived sharded plan ≡ direct flat plan, bitwise
+        let c_flat = GemmPlan::new_int8_path(&qa, qw.as_ref(), 1,
+                                             DataPath::Int8)
+            .with_shards(1)
+            .execute();
+        assert_eq!(plan.execute().data, c_flat.data);
     }
 
     #[test]

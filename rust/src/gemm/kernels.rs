@@ -136,9 +136,15 @@ pub struct Kernels {
     pub dot2_i8: DotI8,
     pub dot4_i8: DotI8,
     pub dense2: Dense2,
-    /// i32 → f32 widening the backend's dot kernels funnel through
-    /// (all current backends install the checked [`widen_i32`]; a
-    /// backend with a vectorized widening overrides it here)
+    /// i32 → f32 widening the backend's dot kernels funnel through.
+    /// `scalar`/`sse2` install the checked [`widen_i32`]; the
+    /// AVX2/VNNI and NEON backends install vectorized variants that
+    /// are bit-identical because the hardware i32→f32 conversion is a
+    /// per-lane correctly-rounded unary op — the same rounding as
+    /// `v as f32` — so lane count cannot change any output
+    /// ([`set_widen_simd_enabled`] forces the scalar floor for the
+    /// `widen_simd_vs_scalar` bench criterion; debug builds always
+    /// take the scalar floor so its overflow guard keeps firing).
     pub widen: Widen,
 }
 
@@ -174,7 +180,7 @@ pub static AVX2: Kernels = Kernels {
     dot2_i8: x86::dot2_i8_avx2,
     dot4_i8: x86::dot4_i8_avx2,
     dense2: dense_rows2,
-    widen: widen_i32,
+    widen: widen_i32_avx2,
 };
 
 #[cfg(target_arch = "x86_64")]
@@ -184,7 +190,7 @@ pub static AVX512VNNI: Kernels = Kernels {
     dot2_i8: x86::dot2_i8_avx512vnni,
     dot4_i8: x86::dot4_i8_avx512vnni,
     dense2: dense_rows2,
-    widen: widen_i32,
+    widen: widen_i32_avx2,
 };
 
 #[cfg(target_arch = "aarch64")]
@@ -194,7 +200,7 @@ pub static NEON: Kernels = Kernels {
     dot2_i8: arm::dot2_i8_neon,
     dot4_i8: arm::dot4_i8_neon,
     dense2: dense_rows2,
-    widen: widen_i32,
+    widen: widen_i32_neon,
 };
 
 /// Backends usable on this host, ordered slowest → statically
@@ -410,6 +416,98 @@ fn widen_rows(
 ) {
     for t in 0..rows {
         widen(&acci[t * bs..], &mut acc[t * bs..], width);
+    }
+}
+
+/// Force the vectorized `widen` vtable entries onto the scalar
+/// [`widen_i32`] floor when `false` (the `widen_simd_vs_scalar`
+/// bench criterion and the widen identity test flip this); defaults
+/// to enabled. Mirrors [`set_f32_simd_enabled`].
+static WIDEN_SIMD_ENABLED: std::sync::atomic::AtomicBool =
+    std::sync::atomic::AtomicBool::new(true);
+
+/// Enable/disable the vectorized i32→f32 widening process-wide.
+/// Results are bit-identical either way (hardware `cvt` rounds each
+/// lane exactly like `v as f32`); the knob exists so benches can
+/// measure the speedup and tests can assert the identity.
+pub fn set_widen_simd_enabled(on: bool) {
+    WIDEN_SIMD_ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether the vectorized widening path is currently enabled.
+pub fn widen_simd_enabled() -> bool {
+    WIDEN_SIMD_ENABLED.load(Ordering::Relaxed)
+}
+
+/// AVX2 widening entry installed in the `avx2`/`avx512vnni` vtables.
+/// Debug builds route to the scalar floor so [`widen_i32`]'s
+/// overflow guard keeps firing; release builds convert 8 lanes per
+/// `vcvtdq2ps` — per-lane correctly-rounded, identical bits to
+/// `v as f32` for every i32.
+#[cfg(target_arch = "x86_64")]
+pub fn widen_i32_avx2(acci: &[i32], acc: &mut [f32], width: usize) {
+    if cfg!(debug_assertions) || !widen_simd_enabled() {
+        return widen_i32(acci, acc, width);
+    }
+    // Safety: only installed in vtables `available()` gates on
+    // runtime AVX2 (or AVX-512) detection.
+    unsafe { x86::widen_avx2(acci, acc, width) }
+}
+
+/// NEON widening entry installed in the `neon` vtable; see
+/// [`widen_i32_avx2`] for the debug-build and rounding contract.
+#[cfg(target_arch = "aarch64")]
+pub fn widen_i32_neon(acci: &[i32], acc: &mut [f32], width: usize) {
+    if cfg!(debug_assertions) || !widen_simd_enabled() {
+        return widen_i32(acci, acc, width);
+    }
+    // Safety: NEON is baseline on aarch64.
+    unsafe { arm::widen_neon(acci, acc, width) }
+}
+
+/// Deterministic widening reduction for split-K execution: combine
+/// per-split i32 partial dots into the final f32 row, bit-identical
+/// for every split count × thread count × backend.
+///
+/// Each output element is reduced over `parts` through a **fixed
+/// pairwise tree whose shape depends only on `parts.len()`**, summing
+/// in i64. For integer partials the tree shape is provably irrelevant
+/// (integer addition is associative — any order yields the same
+/// exact sum), so determinism is unconditional; the fixed shape is
+/// the contract a future floating-point-partial variant inherits,
+/// where order *would* matter. The single i64→f32 conversion at the
+/// root is the same correctly-rounded op as [`widen_i32`], with the
+/// same debug-build guard on the f32-exact range.
+///
+/// The engine's forward/dX/dW shards split **N**, never K, so no
+/// execution path reduces today; the hook (and `tests/shard_prop.rs`)
+/// pin the contract the first K-split will rely on.
+pub fn widen_reduce_i32(
+    parts: &[&[i32]], acc: &mut [f32], width: usize,
+) {
+    assert!(
+        !parts.is_empty(),
+        "widen_reduce_i32 needs at least one partial"
+    );
+    fn tree(parts: &[&[i32]], j: usize) -> i64 {
+        match parts.len() {
+            1 => parts[0][j] as i64,
+            n => {
+                let mid = n.div_ceil(2);
+                tree(&parts[..mid], j) + tree(&parts[mid..], j)
+            }
+        }
+    }
+    for (j, o) in acc[..width].iter_mut().enumerate() {
+        let s = tree(parts, j);
+        debug_assert!(
+            s.unsigned_abs() <= 1 << 24,
+            "reduced block dot {} exceeds the f32-exact range \
+             (only bs <= {} is bit-exact; use DataPath::SimF32)",
+            s,
+            crate::gemm::engine::I8_EXACT_MAX_BS
+        );
+        *o = s as f32;
     }
 }
 
@@ -1198,6 +1296,32 @@ mod x86 {
     avx512vnni_entry!(dot2_i8_avx512vnni, avx512vnni_dot_rows2, 2);
     avx512vnni_entry!(dot4_i8_avx512vnni, avx512vnni_dot_rows4, 4);
 
+    /// 8-lane i32→f32 widening (`vcvtdq2ps`) with a scalar tail.
+    /// Bit-identical to [`super::widen_i32`]: the conversion is a
+    /// per-lane correctly-rounded unary op — exactly what `v as f32`
+    /// performs — so vector width cannot change any output.
+    ///
+    /// Safety: caller must have runtime-detected AVX2.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn widen_avx2(
+        acci: &[i32], acc: &mut [f32], width: usize,
+    ) {
+        let mut j = 0usize;
+        while j + 8 <= width {
+            _mm256_storeu_ps(
+                acc.as_mut_ptr().add(j),
+                _mm256_cvtepi32_ps(_mm256_loadu_si256(
+                    acci.as_ptr().add(j) as *const __m256i,
+                )),
+            );
+            j += 8;
+        }
+        while j < width {
+            acc[j] = acci[j] as f32;
+            j += 1;
+        }
+    }
+
     // -----------------------------------------------------------------
     // f32 FMA primitives (v2 contract): 8-lane `_mm256_fmadd_ps`
     // bodies with a scalar `mul_add` tail — every lane performs the
@@ -1336,6 +1460,28 @@ mod arm {
     vtable_entry!(dot_i8_neon, 1);
     vtable_entry!(dot2_i8_neon, 2);
     vtable_entry!(dot4_i8_neon, 4);
+
+    /// 4-lane i32→f32 widening (`vcvtq_f32_s32`) with a scalar tail —
+    /// per-lane correctly-rounded, identical bits to `v as f32`; see
+    /// the AVX2 twin.
+    ///
+    /// Safety: NEON is baseline on aarch64.
+    pub(super) unsafe fn widen_neon(
+        acci: &[i32], acc: &mut [f32], width: usize,
+    ) {
+        let mut j = 0usize;
+        while j + 4 <= width {
+            vst1q_f32(
+                acc.as_mut_ptr().add(j),
+                vcvtq_f32_s32(vld1q_s32(acci.as_ptr().add(j))),
+            );
+            j += 4;
+        }
+        while j < width {
+            acc[j] = acci[j] as f32;
+            j += 1;
+        }
+    }
 
     // -----------------------------------------------------------------
     // f32 FMA primitives (v2 contract): 4-lane `vfmaq_f32` bodies with
@@ -1751,6 +1897,97 @@ mod tests {
             assert_eq!(&v2[..width], &v1[..width],
                        "integer-exact range bs={bs} width={width}");
         }
+    }
+
+    #[test]
+    fn widen_simd_bit_identical_to_scalar_on_every_backend() {
+        // Every backend's `widen` vtable slot must reproduce the
+        // scalar floor bit-for-bit across awkward widths (vector
+        // chunks + tails), with the vectorized path both enabled and
+        // forced off. Values span the f32-exact range the engine
+        // guarantees (|v| ≤ 2²⁴).
+        let mut rng = Pcg64::new(0x51D3);
+        for &width in &[1usize, 3, 4, 7, 8, 9, 15, 16, 17, 31, 64] {
+            let acci: Vec<i32> = (0..width)
+                .map(|_| {
+                    ((rng.uniform() - 0.5) * 2.0 * ((1 << 24) as f64))
+                        as i32
+                })
+                .collect();
+            let mut want = vec![f32::NAN; width];
+            widen_i32(&acci, &mut want, width);
+            for kn in available() {
+                for on in [true, false] {
+                    let prev = widen_simd_enabled();
+                    set_widen_simd_enabled(on);
+                    let mut got = vec![f32::NAN; width];
+                    (kn.widen)(&acci, &mut got, width);
+                    set_widen_simd_enabled(prev);
+                    assert_eq!(
+                        got, want,
+                        "{} widen width={width} simd={on}",
+                        kn.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn widen_reduce_matches_sequential_i64_sum() {
+        // The deterministic tree reduction must equal the plain
+        // sequential i64 sum (associativity makes every integer
+        // order equal) and must not depend on how the same numbers
+        // are partitioned into parts.
+        let mut rng = Pcg64::new(0xED0C);
+        for &width in &[1usize, 5, 16, 33] {
+            for &nparts in &[1usize, 2, 3, 4, 7] {
+                let parts: Vec<Vec<i32>> = (0..nparts)
+                    .map(|_| {
+                        (0..width)
+                            .map(|_| {
+                                ((rng.uniform() - 0.5) * 65536.0)
+                                    as i32
+                            })
+                            .collect()
+                    })
+                    .collect();
+                let refs: Vec<&[i32]> =
+                    parts.iter().map(|p| p.as_slice()).collect();
+                let mut got = vec![f32::NAN; width];
+                widen_reduce_i32(&refs, &mut got, width);
+                for j in 0..width {
+                    let want: i64 = parts
+                        .iter()
+                        .map(|p| p[j] as i64)
+                        .sum();
+                    assert_eq!(
+                        got[j],
+                        want as f32,
+                        "width={width} nparts={nparts} j={j}"
+                    );
+                }
+            }
+        }
+        // single part degenerates to widen_i32
+        let one = [7i32, -3, 1 << 20];
+        let mut got = [f32::NAN; 3];
+        let mut want = [f32::NAN; 3];
+        widen_reduce_i32(&[&one], &mut got, 3);
+        widen_i32(&one, &mut want, 3);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "exceeds the f32-exact range")]
+    fn widen_reduce_guard_fires_past_exactness_bound() {
+        // Partials may be individually in range while their sum is
+        // not — the root guard must catch that case.
+        let a = [1 << 24];
+        let b = [1 << 24];
+        let mut acc = [0.0f32];
+        widen_reduce_i32(&[&a, &b], &mut acc, 1);
     }
 
     #[test]

@@ -50,6 +50,19 @@
 //! `benches/model_step.rs` track the cached / cold / warm-restored
 //! gains.
 //!
+//! ## Sharded execution
+//!
+//! Plans can additionally slice their packed column panels into S
+//! contiguous shards (`PALLAS_SHARDS`, or
+//! [`WeightPlan::with_shards`] / `GemmPlan::with_shards`): LPT
+//! scheduling runs per shard over the shared row-chunk costs, each
+//! shard's buckets are hinted onto a stable subset of pool workers
+//! (locality only — correctness never depends on placement), and
+//! because every shard owns a disjoint column range of C the output
+//! is bitwise identical to the flat engine for every
+//! S × thread-count × backend combination (`tests/shard_prop.rs`
+//! sweeps this). See `docs/ARCHITECTURE.md` § "Sharded execution".
+//!
 //! These kernels give *measured* cost structure on this testbed (group
 //! size vs dequant overhead, fallback rate vs extra work, placement vs
 //! load balance); `costmodel` projects the same structure onto the

@@ -83,6 +83,7 @@ use crate::model::{layer_linears, model_linears, LinearShape};
 use crate::quant::{block_quant_threads, fallback_quant_threads,
                    Criterion, Rounding, INT8_LEVELS};
 use crate::util::json::{obj, Json};
+use crate::util::pool::default_shards;
 use crate::util::rng::{Pcg64, SplitMix64};
 use crate::util::threadpool::default_threads;
 use crate::util::Mat;
@@ -152,6 +153,11 @@ pub struct PlanKey {
     pub path: DataPath,
     /// microkernel backend name pinned at build
     pub backend: &'static str,
+    /// shard count derived plans are built with (`PALLAS_SHARDS`):
+    /// sharding is bit-neutral, but the per-shard LPT schedules and
+    /// worker-affinity bases differ, so plans cached under one shard
+    /// config must not serve another
+    pub shards: usize,
 }
 
 /// Lifetime counters of a [`PlanCache`].
@@ -310,6 +316,7 @@ impl PlanCache {
         assert_eq!(wp.weight().block, key.block, "block size vs key");
         assert_eq!(wp.data_path(), key.path, "data path vs key");
         assert_eq!(wp.kernel_backend(), key.backend, "backend vs key");
+        assert_eq!(wp.shard_count(), key.shards, "shard count vs key");
         if self.map.len() >= self.cap {
             let victim = self
                 .map
@@ -350,6 +357,10 @@ pub struct LayerStepConfig {
     /// [`grad_sr_seed`]); two drivers with equal seeds, weights, and
     /// inputs produce bit-identical gradients
     pub sr_seed: u64,
+    /// shard count every plan is built with (default: the
+    /// `PALLAS_SHARDS` knob) — bit-neutral, see
+    /// [`GemmPlan::with_shards`]
+    pub shards: usize,
 }
 
 impl LayerStepConfig {
@@ -365,6 +376,7 @@ impl LayerStepConfig {
             path: DataPath::auto_for(block),
             cache_capacity: 16,
             sr_seed: GRAD_SR_SEED,
+            shards: default_shards(),
         }
     }
 }
@@ -430,7 +442,8 @@ pub struct StepReport {
 /// byte-identical plans.
 fn build_weight_plan(w: &Mat, transposed: bool, block: usize,
                      threads: usize, path: DataPath,
-                     kn: &'static Kernels) -> WeightPlan {
+                     kn: &'static Kernels, shards: usize)
+                     -> WeightPlan {
     let q = if transposed {
         block_quant_threads(&w.transpose(), block, INT8_LEVELS,
                             Rounding::Nearest, threads)
@@ -438,7 +451,9 @@ fn build_weight_plan(w: &Mat, transposed: bool, block: usize,
         block_quant_threads(w, block, INT8_LEVELS, Rounding::Nearest,
                             threads)
     };
-    WeightPlan::new(Arc::new(q), path).with_kernels(kn)
+    WeightPlan::new(Arc::new(q), path)
+        .with_kernels(kn)
+        .with_shards(shards)
 }
 
 /// One site's three GEMMs for one microstep — the shared core of
@@ -455,8 +470,8 @@ fn build_weight_plan(w: &Mat, transposed: bool, block: usize,
 fn run_site(
     l: &LinearShape, w: &Mat, x: &Mat, dy: &Mat, theta: f32,
     sr: Rounding, id_base: u64, block: usize, threads: usize,
-    path: DataPath, kn: &'static Kernels, cache: &mut PlanCache,
-    out: &mut SiteOutputs,
+    path: DataPath, kn: &'static Kernels, shards: usize,
+    cache: &mut PlanCache, out: &mut SiteOutputs,
 ) -> (f64, f64) {
     assert_eq!((x.rows, x.cols), (l.m, l.k),
                "activation shape for site {}", l.name);
@@ -477,8 +492,10 @@ fn run_site(
             block,
             path,
             backend: kn.name,
+            shards,
         },
-        || build_weight_plan(w, false, block, threads, path, kn),
+        || build_weight_plan(w, false, block, threads, path, kn,
+                             shards),
     );
     let wpt = cache.get_or_build_with(
         PlanKey {
@@ -488,8 +505,10 @@ fn run_site(
             block,
             path,
             backend: kn.name,
+            shards,
         },
-        || build_weight_plan(w, true, block, threads, path, kn),
+        || build_weight_plan(w, true, block, threads, path, kn,
+                             shards),
     );
     wp.plan_fallback(&fx, &fx.u, threads).execute_into(&mut out.y);
     wpt.plan_int8(&qdy, threads).execute_into(&mut out.dx);
@@ -507,6 +526,7 @@ fn run_site(
     let fxt = fx.transposed();
     GemmPlan::new_fallback_path(&fxt, &qdy, &fxt.u, threads, path)
         .with_kernels(kn)
+        .with_shards(shards)
         .execute_into(&mut out.dw);
     (fx.fallback_rate(), fxt.fallback_rate())
 }
@@ -529,7 +549,7 @@ pub fn site_reference(
     let mut cache = PlanCache::new(2);
     let mut out = SiteOutputs::empty();
     run_site(l, w, x, dy, theta, sr, 0, block, threads, path, kn,
-             &mut cache, &mut out);
+             default_shards(), &mut cache, &mut out);
     out
 }
 
@@ -550,8 +570,8 @@ fn drive_microstep(
     sites: &[LinearShape], weights: &[Mat], thresholds: &[f32],
     rounds: &[Rounding], acts: &[Mat], grads: &[Mat], block: usize,
     threads: usize, path: DataPath, kn: &'static Kernels,
-    cache: &mut PlanCache, rates: &mut RateAccumulator,
-    arena: &mut Vec<SiteOutputs>,
+    shards: usize, cache: &mut PlanCache,
+    rates: &mut RateAccumulator, arena: &mut Vec<SiteOutputs>,
 ) -> StepReport {
     assert_eq!(acts.len(), sites.len(), "one act per site");
     assert_eq!(grads.len(), sites.len(), "one grad per site");
@@ -566,8 +586,8 @@ fn drive_microstep(
         let s0 = cache.stats();
         let (fwd_rate, bwd_rate) = run_site(
             l, &weights[i], &acts[i], &grads[i], thresholds[i],
-            rounds[i], 2 * i as u64, block, threads, path, kn, cache,
-            &mut arena[i],
+            rounds[i], 2 * i as u64, block, threads, path, kn, shards,
+            cache, &mut arena[i],
         );
         let s1 = cache.stats();
         executed[i] = fwd_rate;
@@ -761,8 +781,8 @@ impl LayerStep {
         let report = drive_microstep(
             &self.sites, &self.weights, &self.controller.thresholds,
             &rounds, acts, grads, self.cfg.block, self.cfg.threads,
-            self.cfg.path, self.kernels, &mut self.cache,
-            &mut self.rates, &mut self.arena,
+            self.cfg.path, self.kernels, self.cfg.shards,
+            &mut self.cache, &mut self.rates, &mut self.arena,
         );
         self.microsteps += 1;
         report
@@ -812,6 +832,10 @@ pub struct ModelStepConfig {
     /// [`layer_sr_seed`]`(sr_seed, l)` so each layer matches a
     /// standalone [`LayerStep`] seeded that way
     pub sr_seed: u64,
+    /// shard count every plan is built with (default: the
+    /// `PALLAS_SHARDS` knob) — bit-neutral, see
+    /// [`GemmPlan::with_shards`]
+    pub shards: usize,
 }
 
 impl ModelStepConfig {
@@ -831,6 +855,7 @@ impl ModelStepConfig {
             path: DataPath::auto_for(block),
             cache_capacity: 0,
             sr_seed: GRAD_SR_SEED,
+            shards: default_shards(),
         };
         cfg.cache_capacity = cfg.working_set();
         cfg
@@ -859,6 +884,7 @@ impl ModelStepConfig {
         c.threads = self.threads;
         c.path = self.path;
         c.sr_seed = layer_sr_seed(self.sr_seed, layer);
+        c.shards = self.shards;
         c
     }
 }
@@ -1065,8 +1091,8 @@ impl ModelStep {
         let report = drive_microstep(
             &self.sites, &self.weights, &self.controller.thresholds,
             &rounds, acts, grads, self.cfg.block, self.cfg.threads,
-            self.cfg.path, self.kernels, &mut self.cache,
-            &mut self.rates, &mut self.arena,
+            self.cfg.path, self.kernels, self.cfg.shards,
+            &mut self.cache, &mut self.rates, &mut self.arena,
         );
         self.microsteps += 1;
         report
@@ -1108,6 +1134,7 @@ impl ModelStep {
                     ("block", Json::Num(k.block as f64)),
                     ("path", Json::Str(k.path.tag().into())),
                     ("backend", Json::Str(k.backend.into())),
+                    ("shards", Json::Num(k.shards as f64)),
                 ]))
                 .collect(),
         );
@@ -1126,6 +1153,7 @@ impl ModelStep {
                 // u64 exceeds the exact-f64 integer range: hex string
                 ("sr_seed",
                  Json::Str(format!("{:016x}", self.cfg.sr_seed))),
+                ("shards", Json::Num(self.cfg.shards as f64)),
             ])),
             ("backend", Json::Str(self.kernels.name.into())),
             ("microsteps", Json::Num(self.microsteps as f64)),
@@ -1208,6 +1236,25 @@ impl ModelStep {
                  sr_seed={:016x})",
                 cfg.layers, cfg.d_model, cfg.d_ff, cfg.glu, cfg.vocab,
                 cfg.tokens, cfg.block, cfg.path.tag(), cfg.sr_seed
+            ));
+        }
+        // Shard config mismatch is rejected loudly, mirroring the
+        // backend re-pin rules: sharding is bit-neutral, but the plan
+        // keys embed it, so a silent mismatch would make every prewarm
+        // entry miss on the first microstep — the exact silent-thrash
+        // hazard warm state exists to prevent. Files from before the
+        // field existed restored at shards = 1.
+        let saved_shards = match sc.get("shards") {
+            None => 1,
+            Some(v) => v.as_usize().ok_or(
+                "warm state: malformed 'shards'")?,
+        };
+        if saved_shards != cfg.shards {
+            return Err(format!(
+                "warm state: recorded shard count {saved_shards} \
+                 differs from the live config's {} (set PALLAS_SHARDS \
+                 to match or re-save the warm state)",
+                cfg.shards
             ));
         }
         let controller = ThresholdController::from_json(
@@ -1298,8 +1345,9 @@ impl ModelStep {
     /// Quantize and pack both weight halves of every site into the
     /// cache (misses now so the microsteps only hit).
     fn prewarm(&mut self) {
-        let (threads, block, path) =
-            (self.cfg.threads, self.cfg.block, self.cfg.path);
+        let (threads, block, path, shards) =
+            (self.cfg.threads, self.cfg.block, self.cfg.path,
+             self.cfg.shards);
         let kn = self.kernels;
         let weights = &self.weights;
         let cache = &mut self.cache;
@@ -1318,9 +1366,11 @@ impl ModelStep {
                         block,
                         path,
                         backend: kn.name,
+                        shards,
                     },
                     || build_weight_plan(&weights[s], transposed,
-                                         block, threads, path, kn),
+                                         block, threads, path, kn,
+                                         shards),
                 );
             }
         }
@@ -1374,6 +1424,7 @@ mod tests {
             DataPath::Int8,
         )
         .with_kernels(&kernels::SCALAR)
+        .with_shards(1)
     }
 
     fn key(id: u64, k: usize, n: usize, block: usize) -> PlanKey {
@@ -1384,6 +1435,7 @@ mod tests {
             block,
             path: DataPath::Int8,
             backend: "scalar",
+            shards: 1,
         }
     }
 
@@ -1452,6 +1504,7 @@ mod tests {
                 DataPath::SimF32,
             )
             .with_kernels(&kernels::SCALAR)
+            .with_shards(1)
         });
         assert_eq!(cache.len(), 3);
         // a second backend (when the host has one) is a fourth entry
@@ -1469,6 +1522,7 @@ mod tests {
                     DataPath::Int8,
                 )
                 .with_kernels(kn)
+                .with_shards(1)
             });
             assert_eq!(c.kernel_backend(), kn.name);
             assert_eq!(cache.len(), 4);
@@ -2005,6 +2059,41 @@ mod tests {
         assert!(ModelStep::from_warm_state(
             ms.config().clone(), ms.weights.clone(), &Json::Null)
             .is_err());
+    }
+
+    #[test]
+    fn warm_state_rejects_shard_count_mismatch() {
+        // Satellite: a snapshot saved under one shard config must not
+        // silently restore under another — the plan keys embed the
+        // shard count, so every prewarmed entry would miss.
+        let mut ms = small_model(1);
+        let (acts, grads) = synth_microbatch(ms.sites(), 29, 150.0);
+        ms.microstep(&acts, &grads);
+        let state = ms.warm_state(None);
+        let mut other = ms.config().clone();
+        other.shards = ms.config().shards + 1;
+        let err = ModelStep::from_warm_state(
+            other, ms.weights.clone(), &state)
+            .unwrap_err();
+        assert!(err.contains("shard"), "{err}");
+        // matching shard config restores fine (covered in depth by
+        // warm_state_validates_fingerprint_and_prewarms); a pre-shard
+        // file (no 'shards' field) restores only at shards = 1
+        let mut cfg1 = ms.config().clone();
+        cfg1.shards = 1;
+        let mut legacy = ModelStep::new(cfg1.clone(),
+                                        ms.weights.clone())
+            .warm_state(None);
+        if let Json::Obj(fields) = &mut legacy {
+            if let Some(Json::Obj(cf)) = fields.get_mut("config") {
+                cf.remove("shards");
+            }
+        }
+        let restored = ModelStep::from_warm_state(
+            cfg1, ms.weights.clone(), &legacy);
+        assert!(restored.is_ok(),
+                "missing 'shards' must default to 1: {:?}",
+                restored.err());
     }
 
     #[test]

@@ -50,6 +50,11 @@
 //!   unset mean pooled; anything else is a hard error).
 //!   [`set_pool_enabled`] toggles the same flag at runtime for
 //!   A/B benches and the pool-vs-scoped identity tests.
+//! * `PALLAS_SHARDS=<n>` — default shard count for sharded GEMM
+//!   execution ([`default_shards`]); the engine splits each plan's
+//!   column panels into `n` contiguous shards and schedules each
+//!   shard on a stable subset of workers via [`run_scoped_hinted`].
+//!   Invalid values are a hard error; unset/empty means 1 (flat).
 //!
 //! Re-entrancy: a job that submits again (nested data parallelism)
 //! runs the nested batch **inline** on its worker instead of queueing
@@ -146,6 +151,43 @@ pub fn env_threads() -> Option<usize> {
     })
 }
 
+/// Parse a `PALLAS_SHARDS` value: `None`/empty → no override, a
+/// positive integer → that shard count. Anything else is a hard
+/// error (same contract as [`parse_threads_override`] — a typo must
+/// not silently fall back and invalidate a pinned run).
+pub fn parse_shards_override(val: Option<&str>) -> Option<usize> {
+    match val {
+        None | Some("") => None,
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if n >= 1 => Some(n),
+            _ => panic!(
+                "PALLAS_SHARDS={s:?} is not a positive shard count"
+            ),
+        },
+    }
+}
+
+static ENV_SHARDS: OnceLock<Option<usize>> = OnceLock::new();
+
+/// The `PALLAS_SHARDS` override, read once per process.
+pub fn env_shards() -> Option<usize> {
+    *ENV_SHARDS.get_or_init(|| {
+        parse_shards_override(
+            std::env::var("PALLAS_SHARDS").ok().as_deref(),
+        )
+    })
+}
+
+/// The shard count new plans and drivers default to: the
+/// `PALLAS_SHARDS` override, else 1 (auto). There is no portable
+/// offline socket/CCD topology probe, so "auto" is the flat
+/// single-shard schedule until an explicit override asks for more —
+/// sharded and unsharded execution are bit-identical either way
+/// (`tests/shard_prop.rs`), so the knob is purely a locality lever.
+pub fn default_shards() -> usize {
+    env_shards().unwrap_or(1)
+}
+
 /// Parse a `PALLAS_POOL` value: `None`/empty → no override (pooled),
 /// `"on"`/`"off"` → forced. Anything else is a hard error.
 pub fn parse_pool_override(val: Option<&str>) -> Option<bool> {
@@ -224,6 +266,13 @@ impl ScopeState {
 struct Task {
     job: StaticJob,
     scope: Arc<ScopeState>,
+    /// Preferred worker (reduced modulo the pool size): the sharded
+    /// engine tags each shard's jobs with a stable worker index so a
+    /// shard's packed panels are touched by the same threads every
+    /// microstep (cache/NUMA locality). Purely best-effort — any
+    /// worker may take any task, so placement never gates progress
+    /// and correctness never depends on it.
+    hint: Option<usize>,
 }
 
 struct PoolState {
@@ -288,7 +337,7 @@ impl WorkerPool {
                 let sh = Arc::clone(&shared);
                 std::thread::Builder::new()
                     .name(format!("dbfq-pool-{i}"))
-                    .spawn(move || worker_main(sh))
+                    .spawn(move || worker_main(sh, i, workers))
                     .expect("spawn pool worker")
             })
             .collect();
@@ -309,17 +358,36 @@ impl WorkerPool {
         if tasks.is_empty() {
             return 0;
         }
-        self.submit(tasks).join()
+        self.submit(tasks.into_iter().map(|j| (None, j)).collect())
+            .join()
+    }
+
+    /// [`scope`](WorkerPool::scope) with a preferred-worker hint per
+    /// job (see [`Task::hint`]): a worker takes the first queued task
+    /// hinted at it before falling back to FIFO order. Best-effort
+    /// only — results and completion are identical to `scope`.
+    pub fn scope_hinted(
+        &self, tasks: Vec<(usize, ScopeJob<'_>)>,
+    ) -> u64 {
+        if tasks.is_empty() {
+            return 0;
+        }
+        self.submit(
+            tasks.into_iter().map(|(h, j)| (Some(h), j)).collect(),
+        )
+        .join()
     }
 
     /// Enqueue the batch and return its latch. Private: a leaked
     /// handle would be unsound-by-leak, so only the joining wrappers
     /// in this module may hold one.
-    fn submit<'env>(&self, tasks: Vec<ScopeJob<'env>>) -> ScopeHandle {
+    fn submit<'env>(
+        &self, tasks: Vec<(Option<usize>, ScopeJob<'env>)>,
+    ) -> ScopeHandle {
         let state = Arc::new(ScopeState::new(tasks.len()));
         {
             let mut st = self.shared.state.lock().unwrap();
-            for job in tasks {
+            for (hint, job) in tasks {
                 // SAFETY: the job's `'env` borrows stay valid until
                 // the scope latch reaches zero, and every path out of
                 // this module (join, handle drop, run_scoped unwind)
@@ -334,6 +402,7 @@ impl WorkerPool {
                 st.queue.push_back(Task {
                     job,
                     scope: Arc::clone(&state),
+                    hint,
                 });
             }
         }
@@ -355,13 +424,30 @@ impl Drop for WorkerPool {
     }
 }
 
-fn worker_main(shared: Arc<Shared>) {
+/// Pull the next task for worker `me` of `nworkers`: the first task
+/// hinted at this worker if one is queued, else plain FIFO. A task
+/// hinted elsewhere is still taken when nothing matches — hints bias
+/// placement, they never park a worker while work is queued.
+fn pick_task(
+    queue: &mut VecDeque<Task>, me: usize, nworkers: usize,
+) -> Option<Task> {
+    let mine = queue.iter().position(|t| {
+        t.hint.is_some_and(|h| h % nworkers == me)
+    });
+    match mine {
+        Some(i) => queue.remove(i),
+        None => queue.pop_front(),
+    }
+}
+
+fn worker_main(shared: Arc<Shared>, me: usize, nworkers: usize) {
     IN_WORKER.with(|w| w.set(true));
     loop {
         let task = {
             let mut st = shared.state.lock().unwrap();
             loop {
-                if let Some(t) = st.queue.pop_front() {
+                if let Some(t) = pick_task(&mut st.queue, me, nworkers)
+                {
                     break t;
                 }
                 if st.shutdown {
@@ -370,7 +456,7 @@ fn worker_main(shared: Arc<Shared>) {
                 st = shared.work.wait(st).unwrap();
             }
         };
-        let Task { job, scope } = task;
+        let Task { job, scope, hint: _ } = task;
         match catch_unwind(AssertUnwindSafe(job)) {
             Ok(m) => {
                 scope.metric.fetch_add(m, Ordering::Relaxed);
@@ -421,10 +507,47 @@ pub fn run_scoped(mut tasks: Vec<ScopeJob<'_>>) -> u64 {
         _ if !pool_enabled() => scoped_fallback(tasks),
         _ => {
             let local_job = tasks.pop().unwrap();
-            let handle = global().submit(tasks);
+            let handle = global()
+                .submit(tasks.into_iter().map(|j| (None, j)).collect());
             // The local job must not unwind before the join — its
             // panic is held until the pooled jobs (which may borrow
             // the same frame) are done.
+            let local = catch_unwind(AssertUnwindSafe(local_job));
+            let pooled =
+                catch_unwind(AssertUnwindSafe(|| handle.join()));
+            match (local, pooled) {
+                (Ok(a), Ok(b)) => a + b,
+                (Err(p), _) | (Ok(_), Err(p)) => resume_unwind(p),
+            }
+        }
+    }
+}
+
+/// [`run_scoped`] with a preferred-worker hint per job — the sharded
+/// engine's dispatch point. Identical dispatch policy and results;
+/// hints only bias which parked worker picks which job (and are
+/// dropped entirely on the inline / `thread::scope` fallback paths,
+/// where there are no persistent workers to pin to).
+pub fn run_scoped_hinted(
+    mut tasks: Vec<(usize, ScopeJob<'_>)>,
+) -> u64 {
+    match tasks.len() {
+        0 => 0,
+        1 => tasks.pop().unwrap().1(),
+        _ if in_worker() => {
+            tasks.into_iter().map(|(_, j)| j()).sum()
+        }
+        _ if !pool_enabled() => scoped_fallback(
+            tasks.into_iter().map(|(_, j)| j).collect(),
+        ),
+        _ => {
+            let (_, local_job) = tasks.pop().unwrap();
+            let handle = global().submit(
+                tasks
+                    .into_iter()
+                    .map(|(h, j)| (Some(h), j))
+                    .collect(),
+            );
             let local = catch_unwind(AssertUnwindSafe(local_job));
             let pooled =
                 catch_unwind(AssertUnwindSafe(|| handle.join()));
@@ -610,6 +733,98 @@ mod tests {
             let r = catch_unwind(|| parse_threads_override(Some(bad)));
             assert!(r.is_err(), "{bad:?} must hard-error");
         }
+    }
+
+    #[test]
+    fn shards_override_parses_or_panics() {
+        assert_eq!(parse_shards_override(None), None);
+        assert_eq!(parse_shards_override(Some("")), None);
+        assert_eq!(parse_shards_override(Some("2")), Some(2));
+        for bad in ["0", "-1", "many", "1.5"] {
+            let r = catch_unwind(|| parse_shards_override(Some(bad)));
+            assert!(r.is_err(), "{bad:?} must hard-error");
+        }
+        // default_shards is env-driven; absent an override it is 1
+        if std::env::var("PALLAS_SHARDS").map_or(true, |v| v.is_empty())
+        {
+            assert_eq!(default_shards(), 1);
+        } else {
+            assert_eq!(default_shards(), env_shards().unwrap());
+        }
+    }
+
+    #[test]
+    fn pick_task_prefers_hinted_then_fifo() {
+        fn task(hint: Option<usize>) -> Task {
+            Task {
+                job: Box::new(|| 0u64),
+                scope: Arc::new(ScopeState::new(1)),
+                hint,
+            }
+        }
+        // hinted-to-me (modulo pool size) beats FIFO order
+        let mut q: VecDeque<Task> = VecDeque::new();
+        q.push_back(task(Some(0)));
+        q.push_back(task(Some(5))); // 5 % 4 == 1
+        q.push_back(task(None));
+        let t = pick_task(&mut q, 1, 4).unwrap();
+        assert_eq!(t.hint, Some(5));
+        // nothing hinted at me: plain FIFO, hints never strand work
+        let t = pick_task(&mut q, 1, 4).unwrap();
+        assert_eq!(t.hint, Some(0));
+        let t = pick_task(&mut q, 1, 4).unwrap();
+        assert_eq!(t.hint, None);
+        assert!(pick_task(&mut q, 1, 4).is_none());
+    }
+
+    #[test]
+    fn hinted_scope_runs_every_job_and_sums_metrics() {
+        let pool = WorkerPool::new(2);
+        let flags: Vec<AtomicUsize> =
+            (0..16).map(|_| AtomicUsize::new(0)).collect();
+        // hints far beyond the worker count reduce modulo pool size;
+        // every job still runs exactly once
+        let jobs: Vec<(usize, ScopeJob<'_>)> = flags
+            .iter()
+            .enumerate()
+            .map(|(i, f)| {
+                (
+                    i * 7,
+                    Box::new(move || {
+                        f.fetch_add(1, Ordering::Relaxed);
+                        1u64
+                    }) as ScopeJob<'_>,
+                )
+            })
+            .collect();
+        assert_eq!(pool.scope_hinted(jobs), 16);
+        assert!(flags
+            .iter()
+            .all(|f| f.load(Ordering::Relaxed) == 1));
+        assert_eq!(pool.scope_hinted(Vec::new()), 0);
+    }
+
+    #[test]
+    fn run_scoped_hinted_matches_run_scoped_on_every_path() {
+        // single job: inline
+        let here = std::thread::current().id();
+        let (spawns0, _) = work_counters();
+        let got = run_scoped_hinted(vec![(3, Box::new(|| {
+            assert_eq!(std::thread::current().id(), here);
+            5u64
+        }))]);
+        assert_eq!(got, 5);
+        let (spawns1, _) = work_counters();
+        assert_eq!(spawns1, spawns0, "single job must not dispatch");
+        // multi-job: sums metrics like run_scoped (pooled or not)
+        let sum = run_scoped_hinted(
+            (0..6)
+                .map(|i| {
+                    (i, Box::new(move || i as u64) as ScopeJob<'_>)
+                })
+                .collect(),
+        );
+        assert_eq!(sum, 15);
     }
 
     #[test]

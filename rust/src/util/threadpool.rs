@@ -64,7 +64,12 @@ where
 /// ties pick the lower bucket index; each bucket's item list is
 /// returned sorted ascending (cache-friendly sweep order). The GEMM
 /// engine uses this to balance fallback-heavy C row panels (paper
-/// Fig 8c, Sequential placement) across workers.
+/// Fig 8c, Sequential placement) across workers. Under sharded
+/// execution (`PALLAS_SHARDS`) the engine calls this once *per shard*
+/// with that shard's slice of the thread budget — the weights are
+/// column-independent, so every shard balances the same row-chunk
+/// costs over its own worker subset (`costmodel::sharded_makespan`
+/// projects the resulting makespan without building a plan).
 pub fn weighted_buckets(weights: &[f64], threads: usize) -> Vec<Vec<usize>> {
     let n = weights.len();
     let threads = threads.clamp(1, n.max(1));

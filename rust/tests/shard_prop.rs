@@ -1,0 +1,373 @@
+//! Cross-layer properties of sharded GEMM execution (`PALLAS_SHARDS`,
+//! `WeightPlan::with_shards`, per-shard LPT scheduling).
+//!
+//! The contract under test: sharding is **bit-neutral**. Splitting a
+//! plan's column panels into S contiguous shards — each with its own
+//! LPT bucket schedule and worker-affinity hints — must produce output
+//! bitwise identical to the flat S=1 engine for every
+//! S × backend × thread-count × data-path combination, at every layer
+//! of the stack (direct engine plans, `LayerStep`, `ModelStep`), and
+//! across a warm-state save/restore at S>1. The sharded paths also
+//! stay pinned to the exact i64 oracles where those already apply.
+//! The deterministic fixed-shape widening reduction
+//! (`kernels::widen_reduce_i32`, the hook future K-splits will sum
+//! partials through) is checked against exact i64 accumulation.
+
+use dbfq::gemm::{block_gemm_reference, fallback_gemm_reference,
+                 kernels, synth_microbatch, DataPath, GemmPlan,
+                 LayerStep, LayerStepConfig, ModelStep,
+                 ModelStepConfig, WeightPlan};
+use dbfq::quant::{block_quant, fallback_quant, Criterion, Rounding,
+                  INT8_LEVELS};
+use dbfq::util::rng::Pcg64;
+use dbfq::util::Mat;
+
+const BLOCK: usize = 16;
+const THREADS: [usize; 3] = [1, 2, 4];
+const SHARDS: [usize; 4] = [1, 2, 3, 4];
+
+/// Outlier-bearing operands: `a` carries planted spikes so the
+/// fallback plan has residual blocks to schedule, and the panel
+/// count (40 cols / 16 block = 3 panels) exercises uneven shard
+/// splits at S ∈ {2, 3} and clamping at S = 4.
+fn operands(seed: u64) -> (Mat, Mat) {
+    let mut rng = Pcg64::new(seed);
+    let mut a = Mat::randn(48, 33, 1.0, &mut rng);
+    for i in 0..10 {
+        let n = a.data.len();
+        a.data[i * 131 % n] = 260.0;
+    }
+    let b = Mat::randn(33, 40, 1.0, &mut rng);
+    (a, b)
+}
+
+#[test]
+fn sharded_engine_matches_flat_and_exact_oracles() {
+    let (a, b) = operands(0x5A4D);
+    let qa = block_quant(&a, BLOCK, INT8_LEVELS, Rounding::Nearest);
+    let qb = block_quant(&b, BLOCK, INT8_LEVELS, Rounding::Nearest);
+    let fa = fallback_quant(&a, 40.0, BLOCK, INT8_LEVELS,
+                            Criterion::AbsMax);
+    assert!(fa.fallback_rate() > 0.0, "outliers must trigger fallback");
+    // exact i64 oracles (bs = 16 ≤ I8_EXACT_MAX_BS)
+    let exact_i8 = block_gemm_reference(&qa, &qb);
+    let exact_fb = fallback_gemm_reference(&fa, &qb, &fa.u);
+    // flat engine reference: one thread, one shard
+    let flat_i8 = GemmPlan::new_int8_path(&qa, &qb, 1, DataPath::Int8)
+        .with_shards(1)
+        .execute();
+    let flat_fb = GemmPlan::new_fallback_path(
+        &fa, &qb, &fa.u, 1, DataPath::Int8)
+        .with_shards(1)
+        .execute();
+    assert_eq!(flat_i8.data, exact_i8.data, "flat int8 vs i64 oracle");
+    assert_eq!(flat_fb.data, exact_fb.data,
+               "flat fallback vs i64 oracle");
+    for kn in kernels::available() {
+        for path in [DataPath::Int8, DataPath::SimF32] {
+            for threads in THREADS {
+                for shards in SHARDS {
+                    let ci = GemmPlan::new_int8_path(
+                        &qa, &qb, threads, path)
+                        .with_kernels(kn)
+                        .with_shards(shards)
+                        .execute();
+                    let cf = GemmPlan::new_fallback_path(
+                        &fa, &qb, &fa.u, threads, path)
+                        .with_kernels(kn)
+                        .with_shards(shards)
+                        .execute();
+                    let tag = format!(
+                        "backend {} path {} threads {threads} \
+                         shards {shards}",
+                        kn.name, path.tag());
+                    assert_eq!(ci.data, flat_i8.data, "int8 {tag}");
+                    assert_eq!(cf.data, flat_fb.data,
+                               "fallback {tag}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_weight_plans_match_flat_at_engine_level() {
+    // The cached-weight entry point: sharding configured on the
+    // WeightPlan must flow into every derived GemmPlan and stay
+    // bit-neutral on both the int8 and fallback halves.
+    let (a, b) = operands(0x77E1);
+    let qa = block_quant(&a, BLOCK, INT8_LEVELS, Rounding::Nearest);
+    let qb = std::sync::Arc::new(
+        block_quant(&b, BLOCK, INT8_LEVELS, Rounding::Nearest));
+    let fa = fallback_quant(&a, 40.0, BLOCK, INT8_LEVELS,
+                            Criterion::AbsMax);
+    for kn in kernels::available() {
+        for path in [DataPath::Int8, DataPath::SimF32] {
+            let wp_flat = WeightPlan::new(qb.clone(), path)
+                .with_kernels(kn)
+                .with_shards(1);
+            let ref_i8 = wp_flat.plan_int8(&qa, 1).execute();
+            let ref_fb =
+                wp_flat.plan_fallback(&fa, &fa.u, 1).execute();
+            for threads in THREADS {
+                for shards in SHARDS {
+                    let wp = WeightPlan::new(qb.clone(), path)
+                        .with_kernels(kn)
+                        .with_shards(shards);
+                    assert_eq!(wp.shard_count(), shards);
+                    let ci = wp.plan_int8(&qa, threads).execute();
+                    let cf = wp.plan_fallback(&fa, &fa.u, threads)
+                        .execute();
+                    let tag = format!(
+                        "backend {} path {} threads {threads} \
+                         shards {shards}",
+                        kn.name, path.tag());
+                    assert_eq!(ci.data, ref_i8.data, "int8 {tag}");
+                    assert_eq!(cf.data, ref_fb.data,
+                               "fallback {tag}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_layer_step_matches_flat() {
+    for kn in kernels::available() {
+        for path in [DataPath::Int8, DataPath::SimF32] {
+            // flat reference driver: threads 1, shards 1
+            let mut cfg = LayerStepConfig::new(16, 32, 16, BLOCK);
+            cfg.glu = false;
+            cfg.threads = 1;
+            cfg.shards = 1;
+            cfg.path = path;
+            let mut rf = LayerStep::with_random_weights(cfg, 0x1A7)
+                .with_kernels(kn);
+            let (acts, grads) = synth_microbatch(rf.sites(), 19,
+                                                 180.0);
+            let (ref_outs, _) = rf.microstep(&acts, &grads);
+            for threads in THREADS {
+                for shards in SHARDS {
+                    let mut cfg =
+                        LayerStepConfig::new(16, 32, 16, BLOCK);
+                    cfg.glu = false;
+                    cfg.threads = threads;
+                    cfg.shards = shards;
+                    cfg.path = path;
+                    let mut ls =
+                        LayerStep::with_random_weights(cfg, 0x1A7)
+                            .with_kernels(kn);
+                    let (outs, _) = ls.microstep(&acts, &grads);
+                    for (s, (x, y)) in
+                        outs.iter().zip(&ref_outs).enumerate()
+                    {
+                        let tag = format!(
+                            "site {s} backend {} path {} threads \
+                             {threads} shards {shards}",
+                            kn.name, path.tag());
+                        assert_eq!(x.y.data, y.y.data, "y {tag}");
+                        assert_eq!(x.dx.data, y.dx.data, "dx {tag}");
+                        assert_eq!(x.dw.data, y.dw.data, "dw {tag}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_model_step_matches_flat() {
+    for kn in kernels::available() {
+        for path in [DataPath::Int8, DataPath::SimF32] {
+            let mut cfg = ModelStepConfig::new(1, 16, 32, 40, 16,
+                                               BLOCK);
+            cfg.glu = false;
+            cfg.threads = 1;
+            cfg.shards = 1;
+            cfg.path = path;
+            let mut rf = ModelStep::with_random_weights(cfg, 0x99)
+                .with_kernels(kn);
+            let (acts, grads) = synth_microbatch(rf.sites(), 17,
+                                                 180.0);
+            // two microsteps: cold build + warm cache-hit path
+            let mut ref_outs = Vec::new();
+            for _ in 0..2 {
+                let (o, _) = rf.microstep(&acts, &grads);
+                ref_outs.push(o);
+            }
+            for threads in THREADS {
+                for shards in SHARDS {
+                    let mut cfg = ModelStepConfig::new(1, 16, 32, 40,
+                                                       16, BLOCK);
+                    cfg.glu = false;
+                    cfg.threads = threads;
+                    cfg.shards = shards;
+                    cfg.path = path;
+                    let mut ms =
+                        ModelStep::with_random_weights(cfg, 0x99)
+                            .with_kernels(kn);
+                    for (t, refs) in ref_outs.iter().enumerate() {
+                        let (outs, _) = ms.microstep(&acts, &grads);
+                        for (s, (x, y)) in
+                            outs.iter().zip(refs).enumerate()
+                        {
+                            let tag = format!(
+                                "site {s} microstep {t} backend {} \
+                                 path {} threads {threads} shards \
+                                 {shards}",
+                                kn.name, path.tag());
+                            assert_eq!(x.y.data, y.y.data,
+                                       "y {tag}");
+                            assert_eq!(x.dx.data, y.dx.data,
+                                       "dx {tag}");
+                            assert_eq!(x.dw.data, y.dw.data,
+                                       "dw {tag}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn warm_state_round_trips_at_multiple_shards() {
+    // Save under S=2, restore under S=2: the restored process's next
+    // microstep must hit on every lookup and reproduce the exact
+    // bits the saved process would have produced. A restore under a
+    // different S must fail loudly (not silently mis-shard).
+    let mut cfg = ModelStepConfig::new(1, 16, 32, 40, 16, BLOCK);
+    cfg.glu = false;
+    cfg.threads = 2;
+    cfg.shards = 2;
+    let shapes = ModelStep::with_random_weights(cfg.clone(), 0xD0);
+    let weights: Vec<Mat> = shapes
+        .sites()
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            let mut rng = Pcg64::new(0xD0 ^ (i as u64) << 17);
+            Mat::randn(l.k, l.n, 0.05, &mut rng)
+        })
+        .collect();
+    // the randn driver only supplied the site shapes; drive a step
+    // from the known weights
+    let mut ms = ModelStep::new(cfg.clone(), weights.clone());
+    let (acts, grads) = synth_microbatch(ms.sites(), 13, 180.0);
+    ms.microstep(&acts, &grads);
+    let state = ms.warm_state(None);
+    let (mut restored, _) =
+        ModelStep::from_warm_state(cfg.clone(), weights.clone(),
+                                   &state)
+            .expect("same-shard restore must succeed");
+    assert_eq!(restored.microsteps(), 1);
+    let (cont, rep_c) = ms.microstep(&acts, &grads);
+    let (rest, rep_r) = restored.microstep(&acts, &grads);
+    assert_eq!(rep_r.cache_misses, 0,
+               "restored process must start at steady state");
+    assert_eq!(rep_c.cache_misses, 0);
+    for (s, (x, y)) in cont.iter().zip(&rest).enumerate() {
+        assert_eq!(x.y.data, y.y.data, "y site {s}");
+        assert_eq!(x.dx.data, y.dx.data, "dx site {s}");
+        assert_eq!(x.dw.data, y.dw.data, "dw site {s}");
+    }
+    // and the restored bits equal the flat S=1 engine's
+    let mut flat_cfg = cfg.clone();
+    flat_cfg.shards = 1;
+    flat_cfg.threads = 1;
+    let mut flat = ModelStep::new(flat_cfg, weights.clone());
+    flat.microstep(&acts, &grads);
+    let (flat_outs, _) = flat.microstep(&acts, &grads);
+    for (s, (x, y)) in rest.iter().zip(&flat_outs).enumerate() {
+        assert_eq!(x.y.data, y.y.data, "restored vs flat y site {s}");
+    }
+    // shard-count mismatch: loud error mentioning the shard config
+    let mut other = cfg.clone();
+    other.shards = 3;
+    let err =
+        ModelStep::from_warm_state(other, weights, &state)
+            .unwrap_err();
+    assert!(err.contains("shard"), "{err}");
+}
+
+#[test]
+fn widen_reduce_is_exact_and_shape_deterministic() {
+    // The deterministic widening reduction: bit-identical to exact
+    // i64 accumulation (within the f32-exact range) regardless of
+    // how many partials feed it, and a single partial reduces to the
+    // plain widen of that partial.
+    let mut rng = Pcg64::new(0x5EED);
+    let width = 37usize;
+    let stride = 40usize; // padded rows, like real accumulators
+    let parts: Vec<Vec<i32>> = (0..5)
+        .map(|_| {
+            (0..stride)
+                .map(|_| (rng.next_u64() % 20001) as i32 - 10000)
+                .collect()
+        })
+        .collect();
+    let views: Vec<&[i32]> =
+        parts.iter().map(|p| p.as_slice()).collect();
+    let mut acc = vec![0.0f32; stride];
+    kernels::widen_reduce_i32(&views, &mut acc, width);
+    for j in 0..width {
+        let exact: i64 =
+            parts.iter().map(|p| p[j] as i64).sum();
+        assert_eq!(acc[j].to_bits(), (exact as f32).to_bits(),
+                   "lane {j}");
+    }
+    // lanes past `width` untouched
+    for (j, &v) in acc.iter().enumerate().skip(width) {
+        assert_eq!(v, 0.0, "lane {j} must be untouched");
+    }
+    // one partial == plain widen
+    let mut one = vec![0.0f32; stride];
+    kernels::widen_reduce_i32(&views[..1], &mut one, width);
+    for j in 0..width {
+        assert_eq!(one[j].to_bits(),
+                   (parts[0][j] as f32).to_bits(),
+                   "single-partial lane {j}");
+    }
+    // every prefix count produces the same bits as exact i64 —
+    // the tree shape is fixed by the partial count alone, so any
+    // future K-split fan-in stays deterministic
+    for n in 2..=5usize {
+        let mut accn = vec![0.0f32; stride];
+        kernels::widen_reduce_i32(&views[..n], &mut accn, width);
+        for j in 0..width {
+            let exact: i64 =
+                parts[..n].iter().map(|p| p[j] as i64).sum();
+            assert_eq!(accn[j].to_bits(),
+                       (exact as f32).to_bits(),
+                       "n {n} lane {j}");
+        }
+    }
+}
+
+#[test]
+fn widen_simd_toggle_is_bit_neutral() {
+    // The vectorized widen vtable slot must produce the scalar
+    // floor's exact bits through a real sharded plan on every
+    // backend (release builds take the SIMD path; debug builds route
+    // to scalar either way — same bits by construction).
+    let (a, b) = operands(0xF00D);
+    let qa = block_quant(&a, BLOCK, INT8_LEVELS, Rounding::Nearest);
+    let qb = block_quant(&b, BLOCK, INT8_LEVELS, Rounding::Nearest);
+    let prev = kernels::widen_simd_enabled();
+    for kn in kernels::available() {
+        for shards in [1usize, 2] {
+            let plan = GemmPlan::new_int8_path(&qa, &qb, 2,
+                                               DataPath::Int8)
+                .with_kernels(kn)
+                .with_shards(shards);
+            kernels::set_widen_simd_enabled(true);
+            let on = plan.execute();
+            kernels::set_widen_simd_enabled(false);
+            let off = plan.execute();
+            kernels::set_widen_simd_enabled(prev);
+            assert_eq!(on.data, off.data,
+                       "widen SIMD toggle backend {} shards {shards}",
+                       kn.name);
+        }
+    }
+}

@@ -1,0 +1,303 @@
+//! End-to-end training loop: optimizer + data loader + loss over the
+//! quantized substrate, at CPU toy scale.
+//!
+//! Three phases:
+//!
+//! * `pretrain` — Fig-7b-style trend: the same synthetic-corpus run
+//!   on the quantized engine (`Int8` + dynamic fallback) and on the
+//!   exact dense-f32 reference; loss curves, held-out eval loss
+//!   before/after, and the final-loss gap between the two. Also
+//!   times the quantized step and compares it against the cost
+//!   model's `substrate_train_step_secs` projection (measured
+//!   calibration + the optimizer's per-param flops).
+//! * `finetune` — Table-2-style trend: fresh runs on the arithmetic
+//!   task, quantized vs exact, scored by `answer_span_loss` on a
+//!   held-out batch before and after training.
+//! * `checkpoint` — save at the midpoint, restore through JSON text,
+//!   run the remainder, and record whether the resumed loss curve is
+//!   bit-identical to the uninterrupted one.
+//!
+//! Emits `BENCH_train_loop.json` (schema in `docs/BENCHMARKS.md`).
+//! Set `BENCH_SMOKE=1` for a seconds-long CI smoke run;
+//! `DBFQ_BENCH_STEPS=N` overrides the pretrain step count.
+
+use std::time::Instant;
+
+use dbfq::coordinator::LrSchedule;
+use dbfq::costmodel::SubstrateCalibration;
+use dbfq::data::{answer_span_loss, Corpus, Task};
+use dbfq::train::{Loader, TokenBatch, TrainLoop, TrainLoopConfig};
+use dbfq::util::json::{arr_f64, obj, Json};
+
+const VOCAB: usize = 64;
+const SEQ: usize = 8;
+
+fn median(xs: &[f64]) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[v.len() / 2]
+}
+
+fn base_cfg(steps: usize, exact: bool) -> TrainLoopConfig {
+    let mut cfg = TrainLoopConfig::new(1, 32, 48, VOCAB, 4, SEQ, 16);
+    cfg.lr = LrSchedule { peak: 5e-3, warmup: 10, total: steps };
+    cfg.exact = exact;
+    cfg
+}
+
+/// Mean held-out loss over deterministic non-overlapping windows.
+fn eval_corpus_loss(tl: &TrainLoop, corpus: &Corpus) -> f64 {
+    let batches = corpus.eval_batches(4, SEQ, 4);
+    let mut sum = 0.0;
+    for b in &batches {
+        let tb = TokenBatch {
+            tokens: b.clone(),
+            batch: 4,
+            seq: SEQ,
+            spans: None,
+        };
+        sum += tl.eval_loss(&tb);
+    }
+    sum / batches.len() as f64
+}
+
+/// Answer-span loss on a held-out finetune batch (stream position
+/// far past anything training touches).
+fn eval_span_loss(tl: &TrainLoop, loader: &Loader) -> f64 {
+    let tb = loader.batch_at(1 << 20);
+    let per_token = tl.eval_per_token(&tb);
+    answer_span_loss(&per_token, tb.batch, tb.seq,
+                     tb.spans.as_ref().unwrap())
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let steps = std::env::var("DBFQ_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(if smoke { 40 } else { 200 });
+    let ft_steps = if smoke { 25 } else { 120 };
+
+    println!("\n================================================");
+    println!(
+        "train loop: 1 layer d=32 ff=48 vocab={VOCAB} batch=4 \
+         seq={SEQ} block=16; pretrain {steps} steps, finetune \
+         {ft_steps} steps"
+    );
+    println!("================================================");
+
+    // -- pretrain: quantized vs exact --------------------------------
+    let corpus = Corpus::synthetic(2000, VOCAB, 13);
+    let pretrain_run = |exact: bool| {
+        let cfg = base_cfg(steps, exact);
+        let loader =
+            Loader::pretrain(corpus.clone(), 4, SEQ, 71);
+        let mut tl = TrainLoop::new(cfg, loader);
+        let eval0 = eval_corpus_loss(&tl, &corpus);
+        let mut losses = Vec::with_capacity(steps);
+        let mut rates = Vec::with_capacity(steps);
+        let mut step_ms = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let t = Instant::now();
+            let st = tl.step_once();
+            step_ms.push(t.elapsed().as_secs_f64() * 1e3);
+            losses.push(st.loss);
+            rates.push(st.fallback_rate);
+        }
+        let eval1 = eval_corpus_loss(&tl, &corpus);
+        (tl, losses, rates, step_ms, eval0, eval1)
+    };
+    let (q_tl, q_losses, q_rates, q_step_ms, q_eval0, q_eval1) =
+        pretrain_run(false);
+    let (_e_tl, e_losses, _, _, e_eval0, e_eval1) =
+        pretrain_run(true);
+    let tail = |v: &[f64]| -> f64 {
+        let n = v.len().min(10);
+        v[v.len() - n..].iter().sum::<f64>() / n as f64
+    };
+    let head = |v: &[f64]| -> f64 {
+        let n = v.len().min(10);
+        v[..n].iter().sum::<f64>() / n as f64
+    };
+    let (q_first, q_last) = (head(&q_losses), tail(&q_losses));
+    let (e_first, e_last) = (head(&e_losses), tail(&e_losses));
+    let final_gap = (q_last - e_last).abs();
+    let mean_rate =
+        q_rates.iter().sum::<f64>() / q_rates.len().max(1) as f64;
+    println!(
+        "pretrain quantized: train {q_first:.3} -> {q_last:.3}, \
+         eval {q_eval0:.3} -> {q_eval1:.3}, mean fallback rate \
+         {mean_rate:.3}"
+    );
+    println!(
+        "pretrain exact:     train {e_first:.3} -> {e_last:.3}, \
+         eval {e_eval0:.3} -> {e_eval1:.3}; final-loss gap \
+         {final_gap:.3}"
+    );
+
+    // Step-time projection from a measured calibration: GEMM
+    // substrate estimate + optimizer elementwise cost.
+    let cfg = q_tl.config();
+    let cal_dim = if smoke { 96 } else { 256 };
+    let cal = SubstrateCalibration::measure(
+        cal_dim, cfg.block.min(cal_dim), cfg.threads);
+    let proj_ms = cal.substrate_train_step_secs(
+        cfg.layers, cfg.d_model, cfg.d_ff, false, cfg.vocab,
+        cfg.tokens(), mean_rate, cfg.accum,
+        q_tl.optimizer().flops_per_param()) * 1e3;
+    let measured_ms = median(&q_step_ms);
+    println!(
+        "step time: measured {measured_ms:.2} ms vs substrate \
+         projection {proj_ms:.2} ms"
+    );
+
+    // -- finetune: answer-span loss before/after ---------------------
+    let finetune_run = |exact: bool| {
+        let mut cfg = base_cfg(ft_steps, exact);
+        cfg.seq = 16;
+        cfg.lr = LrSchedule { peak: 3e-3, warmup: 5,
+                              total: ft_steps };
+        let loader =
+            Loader::finetune(Task::Arithmetic, VOCAB, 4, 16, 77);
+        let mut tl = TrainLoop::new(cfg, loader);
+        let before = eval_span_loss(&tl, tl.loader());
+        let losses: Vec<f64> = tl
+            .run(ft_steps)
+            .iter()
+            .map(|s| s.loss)
+            .collect();
+        let after = eval_span_loss(&tl, tl.loader());
+        (losses, before, after)
+    };
+    let (qf_losses, qf_before, qf_after) = finetune_run(false);
+    let (ef_losses, ef_before, ef_after) = finetune_run(true);
+    println!(
+        "finetune span loss: quantized {qf_before:.3} -> \
+         {qf_after:.3}, exact {ef_before:.3} -> {ef_after:.3}"
+    );
+
+    // -- checkpoint: mid-run save/restore bit-identity ---------------
+    let ck_steps = if smoke { 12 } else { 30 };
+    let half = ck_steps / 2;
+    let ck_cfg = || base_cfg(ck_steps, false);
+    let ck_loader =
+        || Loader::pretrain(corpus.clone(), 4, SEQ, 99);
+    let mut straight = TrainLoop::new(ck_cfg(), ck_loader());
+    let full: Vec<u64> = straight
+        .run(ck_steps)
+        .iter()
+        .map(|s| s.loss.to_bits())
+        .collect();
+    let mut first = TrainLoop::new(ck_cfg(), ck_loader());
+    let mut rejoined: Vec<u64> = first
+        .run(half)
+        .iter()
+        .map(|s| s.loss.to_bits())
+        .collect();
+    let state_text = first.checkpoint().to_string();
+    let parsed = Json::parse(&state_text)
+        .expect("checkpoint must serialize to valid JSON");
+    let mut resumed =
+        TrainLoop::from_checkpoint(ck_cfg(), ck_loader(), &parsed)
+            .expect("checkpoint restore");
+    rejoined.extend(
+        resumed
+            .run(ck_steps - half)
+            .iter()
+            .map(|s| s.loss.to_bits()),
+    );
+    let ck_identical = rejoined == full;
+    assert!(ck_identical,
+            "resumed run must be bit-identical to the \
+             uninterrupted one");
+    println!(
+        "checkpoint: {half}+{} steps bit-identical to {ck_steps} \
+         straight ({} byte state)",
+        ck_steps - half,
+        state_text.len()
+    );
+
+    // -- report -------------------------------------------------------
+    let report = obj(vec![
+        ("bench", Json::Str("train_loop".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("config", obj(vec![
+            ("layers", Json::Num(cfg.layers as f64)),
+            ("d_model", Json::Num(cfg.d_model as f64)),
+            ("d_ff", Json::Num(cfg.d_ff as f64)),
+            ("vocab", Json::Num(cfg.vocab as f64)),
+            ("batch", Json::Num(cfg.batch as f64)),
+            ("seq", Json::Num(cfg.seq as f64)),
+            ("block", Json::Num(cfg.block as f64)),
+            ("threads", Json::Num(cfg.threads as f64)),
+            ("accum", Json::Num(cfg.accum as f64)),
+            ("steps", Json::Num(steps as f64)),
+            ("optimizer",
+             Json::Str(q_tl.optimizer().name().into())),
+            ("kernel_backend",
+             Json::Str(q_tl.model()
+                 .map(|m| m.kernel_backend())
+                 .unwrap_or("exact")
+                 .into())),
+        ])),
+        ("pretrain", obj(vec![
+            ("quantized", obj(vec![
+                ("loss", arr_f64(&q_losses)),
+                ("train_first", Json::Num(q_first)),
+                ("train_last", Json::Num(q_last)),
+                ("eval_before", Json::Num(q_eval0)),
+                ("eval_after", Json::Num(q_eval1)),
+                ("mean_fallback_rate", Json::Num(mean_rate)),
+            ])),
+            ("exact", obj(vec![
+                ("loss", arr_f64(&e_losses)),
+                ("train_first", Json::Num(e_first)),
+                ("train_last", Json::Num(e_last)),
+                ("eval_before", Json::Num(e_eval0)),
+                ("eval_after", Json::Num(e_eval1)),
+            ])),
+            ("final_loss_gap", Json::Num(final_gap)),
+            ("step_ms_median", Json::Num(measured_ms)),
+            ("projected_step_ms", Json::Num(proj_ms)),
+        ])),
+        ("finetune", obj(vec![
+            ("task", Json::Str("arithmetic".into())),
+            ("steps", Json::Num(ft_steps as f64)),
+            ("quantized", obj(vec![
+                ("loss", arr_f64(&qf_losses)),
+                ("span_loss_before", Json::Num(qf_before)),
+                ("span_loss_after", Json::Num(qf_after)),
+            ])),
+            ("exact", obj(vec![
+                ("loss", arr_f64(&ef_losses)),
+                ("span_loss_before", Json::Num(ef_before)),
+                ("span_loss_after", Json::Num(ef_after)),
+            ])),
+        ])),
+        ("checkpoint", obj(vec![
+            ("steps", Json::Num(ck_steps as f64)),
+            ("split_at", Json::Num(half as f64)),
+            ("state_bytes", Json::Num(state_text.len() as f64)),
+            ("bit_identical", Json::Bool(ck_identical)),
+        ])),
+        ("criteria", obj(vec![
+            // Both engines must actually learn…
+            ("quantized_train_delta",
+             Json::Num(q_first - q_last)),
+            ("exact_train_delta", Json::Num(e_first - e_last)),
+            // …and land near each other (Fig-7b trend; exactly 0 is
+            // not expected — SR quantization noise is real).
+            ("final_loss_gap", Json::Num(final_gap)),
+            ("finetune_span_delta_quantized",
+             Json::Num(qf_before - qf_after)),
+            ("finetune_span_delta_exact",
+             Json::Num(ef_before - ef_after)),
+            ("checkpoint_bit_identical",
+             Json::Bool(ck_identical)),
+        ])),
+    ]);
+    report
+        .to_file("BENCH_train_loop.json")
+        .expect("write BENCH_train_loop.json");
+    println!("\nwrote BENCH_train_loop.json");
+}

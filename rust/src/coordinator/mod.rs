@@ -363,47 +363,10 @@ impl<'rt> Trainer<'rt> {
         // Validate the header fully BEFORE touching self — an error
         // return must leave the trainer exactly as it was, never with
         // the rejected checkpoint's params half-applied.
-        //
-        // A missing header is tolerated (raw-params checkpoints), and
-        // so is an unparseable one — with a loud warning: checkpoints
-        // from before the controller field wrote bare `inf` tokens
-        // for disabled-controller baselines (invalid JSON), and their
-        // params are perfectly intact. Aborting the resume over the
-        // header would turn a recoverable situation into a hard stop;
-        // losing the controller only costs the Algorithm 2
-        // re-adaptation transient. A header without the `controller`
-        // field likewise predates it.
-        let hdr_path = format!("{path}.json");
-        let mut controller = None;
-        if std::path::Path::new(&hdr_path).exists() {
-            match crate::util::json::Json::parse_file(&hdr_path) {
-                Ok(hdr) => {
-                    if let Some(cj) = hdr.get("controller") {
-                        let c = ThresholdController::from_json(cj)
-                            .map_err(|e| anyhow!(
-                                "checkpoint controller: {e}"))?;
-                        if c.thresholds.len()
-                            != self.controller.thresholds.len()
-                        {
-                            return Err(anyhow!(
-                                "checkpoint controller has {} sites, \
-                                 model has {}",
-                                c.thresholds.len(),
-                                self.controller.thresholds.len()
-                            ));
-                        }
-                        controller = Some(c);
-                    }
-                }
-                Err(e) => {
-                    eprintln!(
-                        "warning: checkpoint header {hdr_path} is \
-                         unreadable ({e}); loading params only — \
-                         the threshold controller re-adapts"
-                    );
-                }
-            }
-        }
+        let controller = load_checkpoint_controller(
+            &format!("{path}.json"),
+            self.controller.thresholds.len(),
+        )?;
         for (i, chunk) in raw.chunks_exact(4).enumerate() {
             self.params[i] =
                 f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
@@ -412,6 +375,58 @@ impl<'rt> Trainer<'rt> {
             self.controller = c;
         }
         Ok(())
+    }
+}
+
+/// Parse a checkpoint JSON header and extract its Algorithm 2
+/// controller, applying the legacy-degradation policy
+/// `Trainer::load_checkpoint` has carried since the controller field
+/// was introduced (factored out so the policy is unit-testable
+/// without a live runtime):
+///
+/// * missing header file → `Ok(None)` — raw-params checkpoints are
+///   fine, the live controller keeps its state and re-adapts;
+/// * unreadable header → `Ok(None)` **with a loud warning**:
+///   checkpoints from before the controller field wrote bare `inf`
+///   tokens for disabled-controller baselines (invalid JSON) and
+///   their params are perfectly intact — aborting the resume would
+///   turn a recoverable situation into a hard stop, while losing the
+///   controller only costs the re-adaptation transient. A parseable
+///   header *without* the field likewise predates it → `Ok(None)`;
+/// * a controller that is present but malformed, or sized for a
+///   different model than `expected_sites` → `Err` before any state
+///   is touched — that is corruption, not legacy.
+pub fn load_checkpoint_controller(hdr_path: &str,
+                                  expected_sites: usize)
+                                  -> Result<Option<ThresholdController>>
+{
+    if !std::path::Path::new(hdr_path).exists() {
+        return Ok(None);
+    }
+    match crate::util::json::Json::parse_file(hdr_path) {
+        Ok(hdr) => match hdr.get("controller") {
+            Some(cj) => {
+                let c = ThresholdController::from_json(cj)
+                    .map_err(|e| anyhow!("checkpoint controller: {e}"))?;
+                if c.thresholds.len() != expected_sites {
+                    return Err(anyhow!(
+                        "checkpoint controller has {} sites, model \
+                         has {expected_sites}",
+                        c.thresholds.len()
+                    ));
+                }
+                Ok(Some(c))
+            }
+            None => Ok(None),
+        },
+        Err(e) => {
+            eprintln!(
+                "warning: checkpoint header {hdr_path} is unreadable \
+                 ({e}); loading params only — the threshold \
+                 controller re-adapts"
+            );
+            Ok(None)
+        }
     }
 }
 
@@ -445,5 +460,62 @@ mod tests {
         let q = QScalars::bits(8, 8, 4);
         assert_eq!(q.levels_x, 127.0);
         assert_eq!(q.levels_dy, 7.0);
+    }
+
+    fn tmp_hdr(tag: &str, contents: &str) -> String {
+        let p = std::env::temp_dir().join(format!(
+            "dbfq_ckpt_hdr_{tag}_{}.json",
+            std::process::id()
+        ));
+        std::fs::write(&p, contents).unwrap();
+        p.to_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn checkpoint_header_degradation_policy() {
+        // Missing file: params-only load, no error.
+        let missing = std::env::temp_dir()
+            .join("dbfq_no_such_header.json");
+        assert!(load_checkpoint_controller(
+            missing.to_str().unwrap(), 4)
+            .unwrap()
+            .is_none());
+
+        // Valid header with a matching controller: restored.
+        let c = ThresholdController::paper_default(4);
+        let hdr = crate::util::json::obj(vec![
+            ("step", crate::util::json::Json::Num(7.0)),
+            ("controller", c.to_json()),
+        ]);
+        let p = tmp_hdr("valid", &hdr.to_string());
+        let got = load_checkpoint_controller(&p, 4).unwrap().unwrap();
+        assert_eq!(got.thresholds, c.thresholds);
+        // ...but sized for a different model: a loud error, never a
+        // silently mismatched controller.
+        let err = load_checkpoint_controller(&p, 9).unwrap_err();
+        assert!(err.to_string().contains("sites"), "{err}");
+        std::fs::remove_file(&p).ok();
+
+        // Legacy pre-controller headers wrote bare `inf` tokens —
+        // invalid JSON. Policy (since the controller field landed):
+        // warn + params-only, NOT an error.
+        let p = tmp_hdr("legacy", r#"{"thresholds": [inf, inf]}"#);
+        assert!(load_checkpoint_controller(&p, 4)
+            .unwrap()
+            .is_none());
+        std::fs::remove_file(&p).ok();
+
+        // A parseable header without the field predates it: None.
+        let p = tmp_hdr("nofield", r#"{"step": 3}"#);
+        assert!(load_checkpoint_controller(&p, 4)
+            .unwrap()
+            .is_none());
+        std::fs::remove_file(&p).ok();
+
+        // A malformed controller value is corruption, not legacy.
+        let p = tmp_hdr("malformed", r#"{"controller": "oops"}"#);
+        let err = load_checkpoint_controller(&p, 4).unwrap_err();
+        assert!(err.to_string().contains("controller"), "{err}");
+        std::fs::remove_file(&p).ok();
     }
 }

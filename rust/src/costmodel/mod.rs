@@ -433,6 +433,35 @@ impl SubstrateCalibration {
             + (2.0 * fwd * (1.0 + rate * slope) + fwd) / flops_per_sec
     }
 
+    /// CPU-substrate estimate of one full optimizer **training
+    /// step**: `accum` gradient-accumulation microsteps
+    /// ([`substrate_model_step_secs`]) plus the optimizer's
+    /// elementwise update over every quantized-site parameter
+    /// ([`crate::model::model_param_count`]) priced at the measured
+    /// dense-f32 throughput — `opt_flops_per_param` is the update
+    /// rule's per-parameter op count
+    /// ([`crate::train::Optimizer::flops_per_param`]). This is the
+    /// cost model's first end-to-end ground-truth hook:
+    /// `benches/train_loop.rs` reports its measured per-step seconds
+    /// next to this projection.
+    ///
+    /// [`substrate_model_step_secs`]: SubstrateCalibration::substrate_model_step_secs
+    #[allow(clippy::too_many_arguments)]
+    pub fn substrate_train_step_secs(&self, layers: usize,
+                                     d_model: usize, d_ff: usize,
+                                     glu: bool, vocab: usize,
+                                     tokens: usize, rate: f64,
+                                     accum: usize,
+                                     opt_flops_per_param: f64) -> f64 {
+        let params = crate::model::model_param_count(
+            layers, d_model, d_ff, glu, vocab) as f64;
+        let dense_per_sec = self.dense_gops.max(1e-12) * 1e9;
+        accum as f64
+            * self.substrate_model_step_secs(layers, d_model, d_ff,
+                                             glu, vocab, tokens, rate)
+            + params * opt_flops_per_param / dense_per_sec
+    }
+
     /// Serialize the measured numbers (warm-state files, reports) so a
     /// fresh process can consume calibrated projections — and install
     /// the calibrated backend — without re-measuring.
@@ -859,6 +888,31 @@ mod tests {
         // fallback rate costs time in both projections
         assert!(cal.substrate_model_step_secs(3, 1024, 4096, false,
                                               32000, 2048, 0.2) > s);
+    }
+
+    #[test]
+    fn train_step_projection_adds_optimizer_cost() {
+        let cal = hand_cal();
+        let micro = cal.substrate_model_step_secs(3, 1024, 4096,
+                                                  false, 32000, 2048,
+                                                  0.0);
+        let one = cal.substrate_train_step_secs(3, 1024, 4096, false,
+                                                32000, 2048, 0.0, 1,
+                                                12.0);
+        // optimizer update rides on top of the microstep...
+        assert!(one > micro);
+        let params = crate::model::model_param_count(3, 1024, 4096,
+                                                     false, 32000)
+            as f64;
+        let expect = micro + params * 12.0 / (5.0 * 1e9);
+        assert!((one - expect).abs() / expect < 1e-9);
+        // ...and accumulation microsteps compose linearly while the
+        // update is paid once per step
+        let four = cal.substrate_train_step_secs(3, 1024, 4096, false,
+                                                 32000, 2048, 0.0, 4,
+                                                 12.0);
+        assert!((four - (4.0 * micro + (one - micro))).abs() / four
+                < 1e-9);
     }
 
     #[test]

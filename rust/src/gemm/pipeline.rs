@@ -81,7 +81,7 @@ use crate::gemm::engine::{DataPath, GemmPlan, WeightPlan};
 use crate::gemm::kernels::{self, Kernels};
 use crate::model::{layer_linears, model_linears, LinearShape};
 use crate::quant::{block_quant_threads, fallback_quant_threads,
-                   Criterion, Rounding, INT8_LEVELS};
+                   Criterion, FallbackQuant, Rounding, INT8_LEVELS};
 use crate::util::json::{obj, Json};
 use crate::util::pool::default_shards;
 use crate::util::rng::{Pcg64, SplitMix64};
@@ -456,34 +456,26 @@ fn build_weight_plan(w: &Mat, transposed: bool, block: usize,
         .with_shards(shards)
 }
 
-/// One site's three GEMMs for one microstep — the shared core of
-/// [`LayerStep::microstep`] and [`ModelStep::microstep`] (factored
-/// out so multi-layer drivers are bit-identical to composed
-/// single-layer ones by construction). Writes the outputs into the
-/// caller's reusable `out` slot (warm buffers are reused in place —
-/// the engine's `execute_into` steady state) and returns the
-/// executed forward and backward fallback rates.
+/// Forward half of one site's microstep: quantize the activation
+/// (fallback at θ — nearest rounding; the forward has no bias
+/// accumulation hazard), look up or build the cached W half, and
+/// execute `Y = X·W` into the caller's slot. Returns the activation
+/// quantization — the backward half consumes it twice (its
+/// permutation is dW's Xᵀ operand).
 ///
 /// `id_base` is `2 · global site index`: the cache keys of this
 /// site's W and Wᵀ halves are `id_base` and `id_base + 1`.
 #[allow(clippy::too_many_arguments)]
-fn run_site(
-    l: &LinearShape, w: &Mat, x: &Mat, dy: &Mat, theta: f32,
-    sr: Rounding, id_base: u64, block: usize, threads: usize,
-    path: DataPath, kn: &'static Kernels, shards: usize,
-    cache: &mut PlanCache, out: &mut SiteOutputs,
-) -> (f64, f64) {
+fn run_site_forward(
+    l: &LinearShape, w: &Mat, x: &Mat, theta: f32, id_base: u64,
+    block: usize, threads: usize, path: DataPath,
+    kn: &'static Kernels, shards: usize, cache: &mut PlanCache,
+    out: &mut SiteOutputs,
+) -> FallbackQuant {
     assert_eq!((x.rows, x.cols), (l.m, l.k),
                "activation shape for site {}", l.name);
-    assert_eq!((dy.rows, dy.cols), (l.m, l.n),
-               "gradient shape for site {}", l.name);
-    // per-call half: activation (fallback at θ) + gradient (int8,
-    // stochastic rounding — nearest would bias every element of dW
-    // and dX the same way each microstep)
     let fx = fallback_quant_threads(x, theta, block, INT8_LEVELS,
                                     Criterion::AbsMax, threads);
-    let qdy = block_quant_threads(dy, block, INT8_LEVELS, sr, threads);
-    // cached halves: W for the forward, Wᵀ for dX
     let wp = cache.get_or_build_with(
         PlanKey {
             weight_id: id_base,
@@ -497,6 +489,35 @@ fn run_site(
         || build_weight_plan(w, false, block, threads, path, kn,
                              shards),
     );
+    wp.plan_fallback(&fx, &fx.u, threads).execute_into(&mut out.y);
+    fx
+}
+
+/// Backward half of one site's microstep: quantize dY (int8,
+/// stochastic rounding — nearest would bias every element of dW and
+/// dX the same way each microstep), execute `dX = dY·Wᵀ` through the
+/// cached Wᵀ half, and `dW = Xᵀ·dY` through a legitimately fresh
+/// plan (both operands change every microstep; qdy serves as the A
+/// operand of dX and the B operand of dW — one quantization, two
+/// roles). Xᵀ's fallback quantization is the *permutation* of the
+/// forward's `fx`: under AbsMax every per-block quantity (absmax,
+/// scales, nearest codes, the u decision at θ) is symmetric under
+/// transposition, so `transposed()` is bit-identical to re-running
+/// Algorithm 1 on xᵀ — the outlier blocks the forward protected stay
+/// protected in the weight gradient, at zero extra quantization cost
+/// (`dw_routes_transposed_activation_through_fallback` pins the
+/// identity against a fresh re-quantization). Returns the executed
+/// backward fallback rate.
+#[allow(clippy::too_many_arguments)]
+fn run_site_backward(
+    l: &LinearShape, w: &Mat, fx: &FallbackQuant, dy: &Mat,
+    sr: Rounding, id_base: u64, block: usize, threads: usize,
+    path: DataPath, kn: &'static Kernels, shards: usize,
+    cache: &mut PlanCache, out: &mut SiteOutputs,
+) -> f64 {
+    assert_eq!((dy.rows, dy.cols), (l.m, l.n),
+               "gradient shape for site {}", l.name);
+    let qdy = block_quant_threads(dy, block, INT8_LEVELS, sr, threads);
     let wpt = cache.get_or_build_with(
         PlanKey {
             weight_id: id_base + 1,
@@ -510,25 +531,38 @@ fn run_site(
         || build_weight_plan(w, true, block, threads, path, kn,
                              shards),
     );
-    wp.plan_fallback(&fx, &fx.u, threads).execute_into(&mut out.y);
     wpt.plan_int8(&qdy, threads).execute_into(&mut out.dx);
-    // dW = Xᵀ·dY: both operands change every microstep, so this plan
-    // is legitimately fresh (qdy serves as the A operand of dX above
-    // and the B operand here — one quantization, two roles). Xᵀ's
-    // fallback quantization is the *permutation* of the forward's:
-    // under AbsMax every per-block quantity (absmax, scales, nearest
-    // codes, the u decision at θ) is symmetric under transposition,
-    // so `transposed()` is bit-identical to re-running Algorithm 1 on
-    // xᵀ — the outlier blocks the forward protected stay protected in
-    // the weight gradient, at zero extra quantization cost
-    // (`dw_routes_transposed_activation_through_fallback` pins the
-    // identity against a fresh re-quantization).
     let fxt = fx.transposed();
     GemmPlan::new_fallback_path(&fxt, &qdy, &fxt.u, threads, path)
         .with_kernels(kn)
         .with_shards(shards)
         .execute_into(&mut out.dw);
-    (fx.fallback_rate(), fxt.fallback_rate())
+    fxt.fallback_rate()
+}
+
+/// One site's three GEMMs for one microstep — the shared core of
+/// [`LayerStep::microstep`] and [`ModelStep::microstep`] (factored
+/// out so multi-layer drivers are bit-identical to composed
+/// single-layer ones by construction), now itself the composition of
+/// [`run_site_forward`] and [`run_site_backward`] so the sequential
+/// split API ([`ModelStep::forward_site`] /
+/// [`ModelStep::backward_site`]) is bit-identical to the batch
+/// microstep by the same argument. Writes the outputs into the
+/// caller's reusable `out` slot (warm buffers are reused in place —
+/// the engine's `execute_into` steady state) and returns the
+/// executed forward and backward fallback rates.
+#[allow(clippy::too_many_arguments)]
+fn run_site(
+    l: &LinearShape, w: &Mat, x: &Mat, dy: &Mat, theta: f32,
+    sr: Rounding, id_base: u64, block: usize, threads: usize,
+    path: DataPath, kn: &'static Kernels, shards: usize,
+    cache: &mut PlanCache, out: &mut SiteOutputs,
+) -> (f64, f64) {
+    let fx = run_site_forward(l, w, x, theta, id_base, block, threads,
+                              path, kn, shards, cache, out);
+    let bwd = run_site_backward(l, w, &fx, dy, sr, id_base, block,
+                                threads, path, kn, shards, cache, out);
+    (fx.fallback_rate(), bwd)
 }
 
 /// Cache-free reference computation of one site's three GEMMs —
@@ -937,6 +971,23 @@ pub struct ModelStep {
     /// site-keyed output arena, reused across microsteps (see
     /// [`microstep_in_place`](ModelStep::microstep_in_place))
     arena: Vec<SiteOutputs>,
+    /// in-flight split-microstep state, one slot per site (see
+    /// [`forward_site`](ModelStep::forward_site))
+    pending: Vec<Option<PendingSite>>,
+}
+
+/// Split-microstep bookkeeping for one site between its
+/// [`forward_site`](ModelStep::forward_site) and the end of the
+/// microstep: the forward's activation quantization (consumed by the
+/// backward — its permutation is dW's Xᵀ operand) plus the per-site
+/// accounting the batch path would have collected in one go.
+struct PendingSite {
+    fx: FallbackQuant,
+    fwd_rate: f64,
+    bwd_rate: f64,
+    hits: u64,
+    misses: u64,
+    bwd_done: bool,
 }
 
 impl ModelStep {
@@ -967,6 +1018,7 @@ impl ModelStep {
             ThresholdController::paper_default(sites.len());
         let rates = RateAccumulator::new(sites.len());
         let cache = PlanCache::new(cfg.cache_capacity);
+        let pending = sites.iter().map(|_| None).collect();
         ModelStep {
             sites,
             weights,
@@ -976,6 +1028,7 @@ impl ModelStep {
             kernels: kernels::select(),
             microsteps: 0,
             arena: Vec::new(),
+            pending,
             cfg,
         }
     }
@@ -1043,13 +1096,31 @@ impl ModelStep {
     /// Replace global site `site`'s master weight (optimizer-update
     /// path) and invalidate its two cached halves; every other site
     /// keeps hitting.
+    ///
+    /// Panics if a split microstep is in flight: mutating a weight
+    /// between a site's [`forward_site`](ModelStep::forward_site) and
+    /// [`backward_site`](ModelStep::backward_site) would run the
+    /// backward GEMMs against a different W than the forward —
+    /// silent gradient corruption, not a supported cadence.
     pub fn set_weight(&mut self, site: usize, w: Mat) {
+        assert!(
+            !self.split_in_flight(),
+            "set_weight during a split microstep: finish_microstep \
+             first"
+        );
         let l = &self.sites[site];
         assert_eq!((w.rows, w.cols), (l.k, l.n),
                    "weight shape for site {}", l.name);
         self.weights[site] = w;
         self.cache.invalidate_weight(2 * site as u64);
         self.cache.invalidate_weight(2 * site as u64 + 1);
+    }
+
+    /// Whether any site has run [`forward_site`](
+    /// ModelStep::forward_site) without the enclosing microstep being
+    /// closed by [`finish_microstep`](ModelStep::finish_microstep).
+    fn split_in_flight(&self) -> bool {
+        self.pending.iter().any(|p| p.is_some())
     }
 
     /// The gradient SR rounding of global site `s` at microstep `t`:
@@ -1085,6 +1156,11 @@ impl ModelStep {
     /// `tests/pool_prop.rs` via [`crate::util::pool::work_counters`]).
     pub fn microstep_in_place(&mut self, acts: &[Mat],
                               grads: &[Mat]) -> StepReport {
+        assert!(
+            !self.split_in_flight(),
+            "batch microstep during a split microstep: \
+             finish_microstep first"
+        );
         let rounds: Vec<Rounding> = (0..self.sites.len())
             .map(|s| self.site_rounding(s, self.microsteps))
             .collect();
@@ -1104,6 +1180,142 @@ impl ModelStep {
     /// moves the arena out to the caller).
     pub fn outputs(&self) -> &[SiteOutputs] {
         &self.arena
+    }
+
+    /// Sequential forward of one site inside a **split microstep** —
+    /// the training-loop cadence, where site `s+1`'s activation is
+    /// computed *from* site `s`'s output and the batch
+    /// [`microstep`](ModelStep::microstep) (all activations known up
+    /// front) cannot be used. Runs exactly the batch path's forward
+    /// half ([`run_site_forward`]) against the shared cache and
+    /// returns a copy of `Y = X·W` (the arena keeps the original —
+    /// [`outputs`](ModelStep::outputs) — so warm buffers are still
+    /// reused in place).
+    ///
+    /// Protocol: call `forward_site` once per site (any order), then
+    /// [`backward_site`](ModelStep::backward_site) once per site (any
+    /// order — training uses reverse), then
+    /// [`finish_microstep`](ModelStep::finish_microstep). Gradient SR
+    /// streams are derived from (microstep, site), not call order, so
+    /// a split microstep is bit-identical to the batch microstep over
+    /// the same tensors — `split_microstep_matches_batch_microstep`
+    /// pins it.
+    pub fn forward_site(&mut self, site: usize, x: &Mat) -> Mat {
+        assert!(site < self.sites.len(), "unknown site {site}");
+        assert!(
+            self.pending[site].is_none(),
+            "forward_site called twice for site {site} in one \
+             microstep"
+        );
+        self.arena.truncate(self.sites.len());
+        while self.arena.len() < self.sites.len() {
+            self.arena.push(SiteOutputs::empty());
+        }
+        let theta = self.controller.thresholds[site];
+        let s0 = self.cache.stats();
+        let l = &self.sites[site];
+        let fx = run_site_forward(
+            l, &self.weights[site], x, theta, 2 * site as u64,
+            self.cfg.block, self.cfg.threads, self.cfg.path,
+            self.kernels, self.cfg.shards, &mut self.cache,
+            &mut self.arena[site],
+        );
+        let s1 = self.cache.stats();
+        let fwd_rate = fx.fallback_rate();
+        self.pending[site] = Some(PendingSite {
+            fx,
+            fwd_rate,
+            bwd_rate: 0.0,
+            hits: s1.hits - s0.hits,
+            misses: s1.misses - s0.misses,
+            bwd_done: false,
+        });
+        self.arena[site].y.clone()
+    }
+
+    /// Sequential backward of one site inside a split microstep: runs
+    /// exactly the batch path's backward half ([`run_site_backward`])
+    /// — `dX = dY·Wᵀ` through the cached Wᵀ half, `dW = Xᵀ·dY`
+    /// against the permutation of the forward's activation
+    /// quantization — and returns a copy of `dX` (the chained
+    /// upstream gradient; `dW` stays in the arena for the optimizer
+    /// to read via [`outputs`](ModelStep::outputs)). The gradient SR
+    /// stream is the site's (microstep, site) stream regardless of
+    /// call order. Panics without a prior
+    /// [`forward_site`](ModelStep::forward_site) for this site.
+    pub fn backward_site(&mut self, site: usize, dy: &Mat) -> Mat {
+        assert!(site < self.sites.len(), "unknown site {site}");
+        let sr = self.site_rounding(site, self.microsteps);
+        let s0 = self.cache.stats();
+        let l = &self.sites[site];
+        let p = self.pending[site].as_mut().unwrap_or_else(|| {
+            panic!("backward_site without forward_site for site \
+                    {site}")
+        });
+        assert!(
+            !p.bwd_done,
+            "backward_site called twice for site {site} in one \
+             microstep"
+        );
+        let bwd_rate = run_site_backward(
+            l, &self.weights[site], &p.fx, dy, sr, 2 * site as u64,
+            self.cfg.block, self.cfg.threads, self.cfg.path,
+            self.kernels, self.cfg.shards, &mut self.cache,
+            &mut self.arena[site],
+        );
+        let s1 = self.cache.stats();
+        p.bwd_rate = bwd_rate;
+        p.bwd_done = true;
+        p.hits += s1.hits - s0.hits;
+        p.misses += s1.misses - s0.misses;
+        self.arena[site].dx.clone()
+    }
+
+    /// Close a split microstep: assert every site ran its forward and
+    /// backward, assemble the same [`StepReport`] the batch
+    /// [`microstep`](ModelStep::microstep) would have produced,
+    /// record the executed forward rates into the Algorithm 2
+    /// accumulator, and advance the microstep counter (the SR-stream
+    /// clock). After this call [`set_weight`](ModelStep::set_weight)
+    /// is legal again and the next microstep — split or batch —
+    /// begins fresh.
+    pub fn finish_microstep(&mut self) -> StepReport {
+        let mut site_reports = Vec::with_capacity(self.sites.len());
+        let mut executed = vec![0.0f64; self.sites.len()];
+        let mut hits = 0u64;
+        let mut misses = 0u64;
+        for (i, l) in self.sites.iter().enumerate() {
+            let p = self.pending[i].take().unwrap_or_else(|| {
+                panic!("finish_microstep: site {i} ({}) never ran \
+                        forward_site", l.name)
+            });
+            assert!(
+                p.bwd_done,
+                "finish_microstep: site {i} ({}) never ran \
+                 backward_site",
+                l.name
+            );
+            executed[i] = p.fwd_rate;
+            hits += p.hits;
+            misses += p.misses;
+            site_reports.push(SiteReport {
+                name: l.name,
+                fallback_rate: p.fwd_rate,
+                bwd_fallback_rate: p.bwd_rate,
+                cache_hits: p.hits,
+                cache_misses: p.misses,
+                flops: l.microstep_flops(),
+            });
+        }
+        self.rates.record(&executed);
+        self.microsteps += 1;
+        let flops = site_reports.iter().map(|s| s.flops).sum();
+        StepReport {
+            sites: site_reports,
+            cache_hits: hits,
+            cache_misses: misses,
+            flops,
+        }
     }
 
     /// Step boundary (Algorithm 2): fold the microsteps' mean
@@ -2008,6 +2220,68 @@ mod tests {
         let applied = ms.end_step();
         assert_eq!(applied.len(), n_sites);
         assert!(ms.controller().n_up > 0);
+    }
+
+    #[test]
+    fn split_microstep_matches_batch_microstep() {
+        // The training loop feeds sites sequentially (forward in
+        // site order, backward in reverse — layer l+1's activation
+        // depends on layer l's output); the batch microstep sees all
+        // tensors at once. Same tensors in → byte-identical outputs,
+        // accounting, SR streams, and controller evolution: the SR
+        // seed is derived from (microstep, site), never call order.
+        let mut a = small_model(2);
+        let mut b = small_model(2);
+        let n = a.sites().len();
+        for step in 0..3u64 {
+            let (acts, grads) =
+                synth_microbatch(a.sites(), 100 + step, 150.0);
+            let ra = a.microstep_in_place(&acts, &grads);
+            for s in 0..n {
+                let y = b.forward_site(s, &acts[s]);
+                assert_eq!(y.data, a.outputs()[s].y.data,
+                           "fwd site {s} step {step}");
+            }
+            for s in (0..n).rev() {
+                let dx = b.backward_site(s, &grads[s]);
+                assert_eq!(dx.data, a.outputs()[s].dx.data,
+                           "bwd site {s} step {step}");
+            }
+            let rb = b.finish_microstep();
+            assert_eq!(ra.cache_hits, rb.cache_hits);
+            assert_eq!(ra.cache_misses, rb.cache_misses);
+            for s in 0..n {
+                assert_eq!(a.outputs()[s].dw.data,
+                           b.outputs()[s].dw.data,
+                           "dw site {s} step {step}");
+                assert_eq!(ra.sites[s].fallback_rate.to_bits(),
+                           rb.sites[s].fallback_rate.to_bits());
+                assert_eq!(ra.sites[s].bwd_fallback_rate.to_bits(),
+                           rb.sites[s].bwd_fallback_rate.to_bits());
+            }
+            assert_eq!(a.end_step(), b.end_step());
+            assert_eq!(a.controller().thresholds,
+                       b.controller().thresholds);
+        }
+        assert_eq!(a.microsteps(), b.microsteps());
+    }
+
+    #[test]
+    #[should_panic(expected = "backward_site without forward_site")]
+    fn split_backward_without_forward_panics() {
+        let mut ms = small_model(1);
+        let (_, grads) = synth_microbatch(ms.sites(), 1, 150.0);
+        ms.backward_site(0, &grads[0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "set_weight during a split microstep")]
+    fn split_set_weight_mid_microstep_panics() {
+        let mut ms = small_model(1);
+        let (acts, _) = synth_microbatch(ms.sites(), 2, 150.0);
+        ms.forward_site(0, &acts[0]);
+        let (k, n) = (ms.sites()[0].k, ms.sites()[0].n);
+        ms.set_weight(0, Mat::zeros(k, n));
     }
 
     #[test]

@@ -41,4 +41,5 @@ pub mod model;
 pub mod outlier;
 pub mod quant;
 pub mod runtime;
+pub mod train;
 pub mod util;

@@ -100,6 +100,20 @@ pub fn model_linears(n_layers: usize, d_model: usize, d_ff: usize,
     v
 }
 
+/// Trainable parameters of the quantized-linear sites of an
+/// `n_layers` model + LM head — exactly the weights an optimizer
+/// updates through `gemm::pipeline::ModelStep::set_weight` (embedding
+/// and norms are not quantized sites and are excluded). The cost
+/// model's `substrate_train_step_secs` prices the optimizer's
+/// elementwise update over this count.
+pub fn model_param_count(n_layers: usize, d_model: usize, d_ff: usize,
+                         glu: bool, vocab: usize) -> usize {
+    model_linears(n_layers, d_model, d_ff, glu, vocab, 1)
+        .iter()
+        .map(|l| l.k * l.n)
+        .sum()
+}
+
 /// Matmul FLOPs for one microstep (fwd + bwd = 3 GEMMs per linear site,
 /// 2*M*N*K each), the paper's CAL-FLOPS denominator ("only computation
 /// time is measured"). Attention matmuls are included; softmax/norms are
@@ -245,6 +259,25 @@ mod tests {
         let expect = layers as f64 * per_layer
             + lm_head_linear(d, vocab, toks).microstep_flops();
         assert!((total - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn param_count_matches_site_shapes() {
+        let (layers, d, ff, vocab) = (2usize, 32, 48, 80);
+        // per layer: qkv d·3d + attn_out d·d + mlp_in d·ff +
+        // mlp_down ff·d; head d·vocab
+        let per_layer = d * 3 * d + d * d + d * ff + ff * d;
+        assert_eq!(model_param_count(layers, d, ff, false, vocab),
+                   layers * per_layer + d * vocab);
+        // glu doubles the mlp_in output dim
+        assert_eq!(model_param_count(1, d, ff, true, vocab),
+                   d * 3 * d + d * d + d * 2 * ff + ff * d + d * vocab);
+        // independent of tokens by construction (m never enters)
+        let a = model_linears(2, d, ff, false, vocab, 1);
+        let b = model_linears(2, d, ff, false, vocab, 999);
+        let pa: usize = a.iter().map(|l| l.k * l.n).sum();
+        let pb: usize = b.iter().map(|l| l.k * l.n).sum();
+        assert_eq!(pa, pb);
     }
 
     #[test]

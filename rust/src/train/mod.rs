@@ -1,0 +1,1061 @@
+//! End-to-end training loop over the quantized GEMM substrate:
+//! optimizer + data loader + loss, driving [`ModelStep`] through its
+//! split-microstep API.
+//!
+//! The model is a deliberately small surrogate transformer whose
+//! *every* matmul runs through the quantized engine while everything
+//! else stays exactly reproducible elementwise f32:
+//!
+//! * fixed (untrained) token embedding, regenerated from
+//!   `init_seed` on restore rather than checkpointed,
+//! * identity attention — the "attention output" is the V third of
+//!   the qkv projection, so the site shapes and data flow match a
+//!   real block without a softmax in the training path,
+//! * ReLU MLP (`glu = false`) and plain residual adds,
+//! * masked stable softmax cross-entropy at the LM head; finetune
+//!   batches mask the loss to their answer spans
+//!   ([`answer_span_loss`] convention: the loss of predicting the
+//!   token at `pos` lives at `pos - 1`).
+//!
+//! Backward seeds the chain with `dLogits` at the `lm_head` site and
+//! walks the layers in reverse, merging residual gradients — each
+//! site's three GEMMs (Y, dX, dW) are the engine's, so a training
+//! step is bit-identical across kernel backends, thread counts, and
+//! shard configs, and the `Int8` data path is bit-identical to its
+//! `SimF32` simulation (`tests/train_prop.rs` pins all of it).
+//!
+//! [`Engine::Exact`] swaps every site GEMM for the dense f32 engine
+//! ([`crate::gemm::matmul`], also thread-invariant) — the reference
+//! run the convergence-gap assertions and the evaluation path use.
+//!
+//! ## Checkpoints
+//!
+//! [`TrainLoop::checkpoint`] is format [`TRAIN_STATE_VERSION`] = 2
+//! (kind [`TRAIN_STATE_KIND`]): master weights (f32-lossless f64
+//! arrays), optimizer state, loader `(seed, cursor)`, and the
+//! embedded [`ModelStep::warm_state`]. Version 1 was the bare
+//! optimizer-less warm state of the pre-train-loop era; it cannot
+//! resume an optimizer run, so restore rejects anything but an exact
+//! kind + version match with a loud error. A resumed run continues
+//! bit-identically to the uninterrupted one.
+//!
+//! [`answer_span_loss`]: crate::data::answer_span_loss
+//! [`ModelStep`]: crate::gemm::ModelStep
+
+mod loader;
+mod optimizer;
+
+pub use loader::{BatchSource, Loader, TokenBatch};
+pub use optimizer::{optimizer_from_json, Adam, Optimizer,
+                    SgdMomentum};
+
+use crate::coordinator::{LrSchedule, MetricsLog};
+use crate::gemm::kernels::Kernels;
+use crate::gemm::{matmul, DataPath, ModelStep, ModelStepConfig,
+                  StepReport};
+use crate::model::{model_linears, LinearShape};
+use crate::quant::quant_work_counters;
+use crate::util::json::{arr_f64, obj, Json};
+use crate::util::rng::Pcg64;
+use crate::util::Mat;
+
+/// `kind` tag of the training checkpoint format.
+pub const TRAIN_STATE_KIND: &str = "dbfq_train_checkpoint";
+
+/// Current training checkpoint version. History: **1** — bare
+/// [`ModelStep::warm_state`] with no optimizer/loader section
+/// (pre-train-loop); **2** — adds optimizer state, loader cursor,
+/// and master weights. v1 files cannot resume an optimizer run, so
+/// [`TrainLoop::from_checkpoint`] rejects them loudly instead of
+/// resuming with silently reset optimizer moments.
+pub const TRAIN_STATE_VERSION: f64 = 2.0;
+
+/// Configuration of a [`TrainLoop`].
+#[derive(Debug, Clone)]
+pub struct TrainLoopConfig {
+    pub layers: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    /// sequences per microbatch
+    pub batch: usize,
+    /// tokens per sequence (each window carries `seq + 1` tokens)
+    pub seq: usize,
+    pub block: usize,
+    pub threads: usize,
+    pub shards: usize,
+    pub path: DataPath,
+    pub lr: LrSchedule,
+    /// global-norm gradient clip; `0` disables
+    pub grad_clip: f64,
+    /// microbatches accumulated per optimizer step (≥ 1). With > 1,
+    /// microsteps 2.. of a step re-run against unchanged weights, so
+    /// the plan cache hits — the steady-state regime the cache
+    /// exists for even under full per-step weight mutation.
+    pub accum: usize,
+    pub sr_seed: u64,
+    /// seeds the fixed embedding and the weight init
+    pub init_seed: u64,
+    /// run the exact dense-f32 reference engine instead of the
+    /// quantized substrate
+    pub exact: bool,
+}
+
+impl TrainLoopConfig {
+    pub fn new(layers: usize, d_model: usize, d_ff: usize,
+               vocab: usize, batch: usize, seq: usize,
+               block: usize) -> TrainLoopConfig {
+        let ms = ModelStepConfig::new(layers, d_model, d_ff, vocab,
+                                      batch * seq, block);
+        TrainLoopConfig {
+            layers,
+            d_model,
+            d_ff,
+            vocab,
+            batch,
+            seq,
+            block,
+            threads: ms.threads,
+            shards: ms.shards,
+            path: ms.path,
+            lr: LrSchedule { peak: 5e-3, warmup: 10, total: 0 },
+            grad_clip: 1.0,
+            accum: 1,
+            sr_seed: ms.sr_seed,
+            init_seed: 0x7A11,
+            exact: false,
+        }
+    }
+
+    /// Activation rows per microstep.
+    pub fn tokens(&self) -> usize {
+        self.batch * self.seq
+    }
+
+    pub fn n_sites(&self) -> usize {
+        4 * self.layers + 1
+    }
+
+    /// The [`ModelStepConfig`] of the quantized engine: always
+    /// `glu = false` (the surrogate MLP is ReLU).
+    pub fn model_config(&self) -> ModelStepConfig {
+        let mut ms = ModelStepConfig::new(
+            self.layers, self.d_model, self.d_ff, self.vocab,
+            self.tokens(), self.block);
+        ms.glu = false;
+        ms.threads = self.threads;
+        ms.shards = self.shards;
+        ms.path = self.path;
+        ms.sr_seed = self.sr_seed;
+        ms
+    }
+}
+
+/// Which GEMM substrate a [`TrainLoop`] runs on.
+pub enum Engine {
+    /// the quantized plan/execute engine with dynamic fallback
+    Quantized(ModelStep),
+    /// dense f32 reference ([`crate::gemm::matmul`])
+    Exact,
+}
+
+/// One optimizer step's telemetry.
+#[derive(Debug, Clone)]
+pub struct StepStats {
+    pub step: usize,
+    /// masked mean loss, averaged over the step's microbatches
+    pub loss: f64,
+    /// pre-clip global gradient norm
+    pub grad_norm: f64,
+    pub lr: f64,
+    /// mean executed forward fallback rate across sites and
+    /// microbatches (0 on the exact engine)
+    pub fallback_rate: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// thread-global quantization-call / panel-pack deltas over the
+    /// step ([`quant_work_counters`]); exact only at `threads = 1`,
+    /// where all quantization runs on the calling thread
+    pub quants: u64,
+    pub packs: u64,
+}
+
+/// Deterministic end-to-end training driver; see the module docs.
+pub struct TrainLoop {
+    cfg: TrainLoopConfig,
+    sites: Vec<LinearShape>,
+    /// master weights, mirrored into the engine via `set_weight`
+    weights: Vec<Mat>,
+    /// fixed token embedding (vocab × d_model), never trained
+    embed: Mat,
+    engine: Engine,
+    opt: Box<dyn Optimizer>,
+    loader: Loader,
+    step: usize,
+    history: Vec<StepStats>,
+    log: Option<MetricsLog>,
+}
+
+/// Forward intermediates one microbatch's backward needs.
+struct Trace {
+    /// per-site input activation (for the exact engine's dW; the
+    /// quantized engine keeps its own quantized copy internally)
+    xs: Vec<Mat>,
+    /// per-layer pre-ReLU MLP activation (for the ReLU mask)
+    hs: Vec<Mat>,
+    logits: Mat,
+}
+
+fn add_into(a: &mut Mat, b: &Mat) {
+    assert_eq!(a.data.len(), b.data.len());
+    for (x, y) in a.data.iter_mut().zip(&b.data) {
+        *x += y;
+    }
+}
+
+/// Columns `c0..c1` of `m` as a fresh matrix.
+fn take_cols(m: &Mat, c0: usize, c1: usize) -> Mat {
+    Mat::from_fn(m.rows, c1 - c0, |r, c| m.row(r)[c0 + c])
+}
+
+/// `src` placed at column offset `c0` of a (rows × cols) zero
+/// matrix.
+fn scatter_cols(src: &Mat, cols: usize, c0: usize) -> Mat {
+    let mut out = Mat::zeros(src.rows, cols);
+    for r in 0..src.rows {
+        let dst = &mut out.data[r * cols + c0..];
+        dst[..src.cols].copy_from_slice(src.row(r));
+    }
+    out
+}
+
+fn relu(m: &Mat) -> Mat {
+    let mut out = m.clone();
+    for v in &mut out.data {
+        *v = v.max(0.0);
+    }
+    out
+}
+
+fn relu_bwd(d: &Mat, pre: &Mat) -> Mat {
+    let mut out = d.clone();
+    for (v, &h) in out.data.iter_mut().zip(&pre.data) {
+        if h <= 0.0 {
+            *v = 0.0;
+        }
+    }
+    out
+}
+
+/// Split a `(batch, seq + 1)` window batch into inputs (positions
+/// `..seq`) and next-token targets (positions `1..`).
+fn split_window(tb: &TokenBatch) -> (Vec<i32>, Vec<i32>) {
+    let (b, s) = (tb.batch, tb.seq);
+    assert_eq!(tb.tokens.len(), b * (s + 1));
+    let mut inputs = Vec::with_capacity(b * s);
+    let mut targets = Vec::with_capacity(b * s);
+    for row in tb.tokens.chunks_exact(s + 1) {
+        inputs.extend_from_slice(&row[..s]);
+        targets.extend_from_slice(&row[1..]);
+    }
+    (inputs, targets)
+}
+
+/// Per-position loss weights (batch·seq, aligned with the flattened
+/// activation rows): all-ones for pretrain batches, answer-span
+/// indicator for finetune batches — span position `pos` marks slot
+/// `pos - 1`, matching [`crate::data::answer_span_loss`].
+fn loss_mask(tb: &TokenBatch) -> Vec<f32> {
+    let (b, s) = (tb.batch, tb.seq);
+    match &tb.spans {
+        None => vec![1.0; b * s],
+        Some(spans) => {
+            let mut mask = vec![0.0; b * s];
+            for (i, span) in spans.iter().enumerate().take(b) {
+                for pos in span.clone() {
+                    if (1..=s).contains(&pos) {
+                        mask[i * s + (pos - 1)] = 1.0;
+                    }
+                }
+            }
+            mask
+        }
+    }
+}
+
+/// Stable masked softmax cross-entropy.
+///
+/// Returns the weighted mean loss, the unmasked per-position losses
+/// (the [`crate::data::answer_span_loss`] input), and `dLoss/dLogits`
+/// with the mask and `1/Σmask` folded in. All-zero mask → loss 0 and
+/// zero gradient (a finetune batch whose spans all fell out of the
+/// window must be a no-op, not a NaN).
+fn softmax_ce(logits: &Mat, targets: &[i32], mask: &[f32])
+              -> (f64, Vec<f32>, Mat) {
+    let (rows, vocab) = (logits.rows, logits.cols);
+    assert_eq!(targets.len(), rows);
+    assert_eq!(mask.len(), rows);
+    let wsum: f64 = mask.iter().map(|&w| w as f64).sum();
+    let mut per_token = Vec::with_capacity(rows);
+    let mut dlogits = Mat::zeros(rows, vocab);
+    let mut loss = 0.0f64;
+    for r in 0..rows {
+        let z = logits.row(r);
+        let t = targets[r] as usize;
+        assert!(t < vocab, "target {t} outside vocab {vocab}");
+        let zmax = z.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let sumexp: f64 =
+            z.iter().map(|&v| ((v - zmax) as f64).exp()).sum();
+        let lse = sumexp.ln();
+        let l = (lse - (z[t] - zmax) as f64) as f32;
+        per_token.push(l);
+        if wsum > 0.0 && mask[r] > 0.0 {
+            let w = mask[r] as f64 / wsum;
+            loss += w * l as f64;
+            for (c, &v) in z.iter().enumerate() {
+                let p = ((v - zmax) as f64).exp() / sumexp;
+                let onehot = if c == t { 1.0 } else { 0.0 };
+                dlogits.data[r * vocab + c] =
+                    (w * (p - onehot)) as f32;
+            }
+        }
+    }
+    (loss, per_token, dlogits)
+}
+
+impl TrainLoop {
+    /// Build a fresh run: embedding first (σ = 1), then per-site
+    /// weights at σ = 1/√k, all from one `init_seed` stream — the
+    /// draw order is part of the checkpoint contract (restore
+    /// regenerates the embedding from the same stream).
+    pub fn new(cfg: TrainLoopConfig, loader: Loader) -> TrainLoop {
+        assert_eq!(loader.batch_size(), cfg.batch,
+                   "loader batch size vs config");
+        assert_eq!(loader.seq(), cfg.seq, "loader seq vs config");
+        assert_eq!(loader.vocab(), cfg.vocab,
+                   "loader vocab vs config");
+        assert!(cfg.accum >= 1, "accum must be >= 1");
+        let sites = model_linears(cfg.layers, cfg.d_model, cfg.d_ff,
+                                  false, cfg.vocab, cfg.tokens());
+        let mut rng = Pcg64::new(cfg.init_seed);
+        let embed =
+            Mat::randn(cfg.vocab, cfg.d_model, 1.0, &mut rng);
+        let weights: Vec<Mat> = sites
+            .iter()
+            .map(|l| {
+                let sigma = 1.0 / (l.k as f32).sqrt();
+                Mat::randn(l.k, l.n, sigma, &mut rng)
+            })
+            .collect();
+        let engine = if cfg.exact {
+            Engine::Exact
+        } else {
+            Engine::Quantized(ModelStep::new(cfg.model_config(),
+                                             weights.clone()))
+        };
+        let opt = Box::new(Adam::new(sites.len()));
+        TrainLoop {
+            cfg,
+            sites,
+            weights,
+            embed,
+            engine,
+            opt,
+            loader,
+            step: 0,
+            history: Vec::new(),
+            log: None,
+        }
+    }
+
+    /// Replace the optimizer (before any steps were taken).
+    pub fn with_optimizer(mut self,
+                          opt: Box<dyn Optimizer>) -> TrainLoop {
+        assert_eq!(self.step, 0,
+                   "with_optimizer after training started");
+        self.opt = opt;
+        self
+    }
+
+    /// Pin a specific kernel backend on the quantized engine
+    /// (no-op on [`Engine::Exact`]).
+    pub fn with_kernels(mut self, k: &'static Kernels) -> TrainLoop {
+        self.engine = match self.engine {
+            Engine::Quantized(ms) => {
+                Engine::Quantized(ms.with_kernels(k))
+            }
+            e => e,
+        };
+        self
+    }
+
+    /// Attach a [`MetricsLog`]; every step logs loss, grad norm,
+    /// lr, fallback rate, and cache stats. A write failure warns
+    /// once and detaches the log (training never aborts on
+    /// telemetry).
+    pub fn attach_log(&mut self, log: MetricsLog) {
+        self.log = Some(log);
+    }
+
+    pub fn config(&self) -> &TrainLoopConfig {
+        &self.cfg
+    }
+
+    pub fn sites(&self) -> &[LinearShape] {
+        &self.sites
+    }
+
+    pub fn weights(&self) -> &[Mat] {
+        &self.weights
+    }
+
+    pub fn step(&self) -> usize {
+        self.step
+    }
+
+    pub fn history(&self) -> &[StepStats] {
+        &self.history
+    }
+
+    pub fn loader(&self) -> &Loader {
+        &self.loader
+    }
+
+    pub fn optimizer(&self) -> &dyn Optimizer {
+        self.opt.as_ref()
+    }
+
+    /// The quantized engine, when this run has one.
+    pub fn model(&self) -> Option<&ModelStep> {
+        match &self.engine {
+            Engine::Quantized(ms) => Some(ms),
+            Engine::Exact => None,
+        }
+    }
+
+    pub fn model_mut(&mut self) -> Option<&mut ModelStep> {
+        match &mut self.engine {
+            Engine::Quantized(ms) => Some(ms),
+            Engine::Exact => None,
+        }
+    }
+
+    /// Exact-f32 forward over one window batch using the master
+    /// weights (never the quantized engine — evaluation must not
+    /// touch engine state mid-step): per-position losses, the
+    /// [`crate::data::answer_span_loss`] input.
+    pub fn eval_per_token(&self, tb: &TokenBatch) -> Vec<f32> {
+        let (inputs, targets) = split_window(tb);
+        let trace = self.exact_forward(&inputs);
+        let mask = vec![1.0; targets.len()];
+        let (_, per_token, _) =
+            softmax_ce(&trace.logits, &targets, &mask);
+        per_token
+    }
+
+    /// Masked mean evaluation loss of one window batch (exact-f32
+    /// forward; finetune batches mask to their answer spans).
+    pub fn eval_loss(&self, tb: &TokenBatch) -> f64 {
+        let (inputs, targets) = split_window(tb);
+        let trace = self.exact_forward(&inputs);
+        let mask = loss_mask(tb);
+        let (loss, _, _) =
+            softmax_ce(&trace.logits, &targets, &mask);
+        loss
+    }
+
+    /// Embedding lookup: one activation row per flattened position.
+    fn embed_rows(&self, inputs: &[i32]) -> Mat {
+        Mat::from_fn(inputs.len(), self.cfg.d_model, |r, c| {
+            let t = inputs[r] as usize;
+            assert!(t < self.cfg.vocab,
+                    "token {t} outside vocab {}", self.cfg.vocab);
+            self.embed.row(t)[c]
+        })
+    }
+
+    /// One exact dense-f32 forward pass, tracing what backward
+    /// needs.
+    fn exact_forward(&self, inputs: &[i32]) -> Trace {
+        let d = self.cfg.d_model;
+        let th = self.cfg.threads;
+        let mut xs = Vec::with_capacity(self.sites.len());
+        let mut hs = Vec::with_capacity(self.cfg.layers);
+        let mut x = self.embed_rows(inputs);
+        for layer in 0..self.cfg.layers {
+            let base = 4 * layer;
+            xs.push(x.clone());
+            let qkv = matmul(&x, &self.weights[base], th);
+            let v = take_cols(&qkv, 2 * d, 3 * d);
+            xs.push(v.clone());
+            let attn = matmul(&v, &self.weights[base + 1], th);
+            add_into(&mut x, &attn);
+            xs.push(x.clone());
+            let h = matmul(&x, &self.weights[base + 2], th);
+            let a = relu(&h);
+            hs.push(h);
+            xs.push(a.clone());
+            let m = matmul(&a, &self.weights[base + 3], th);
+            add_into(&mut x, &m);
+        }
+        xs.push(x.clone());
+        let logits = matmul(&x, &self.weights[4 * self.cfg.layers],
+                            th);
+        Trace { xs, hs, logits }
+    }
+
+    /// Exact backward matching [`exact_forward`](Self::exact_forward)
+    /// — accumulates per-site `dW = Xᵀ·dY` into `dws`.
+    fn exact_backward(&self, trace: &Trace, dlogits: &Mat,
+                      dws: &mut [Mat]) {
+        let d = self.cfg.d_model;
+        let th = self.cfg.threads;
+        let head = 4 * self.cfg.layers;
+        let site_bwd = |site: usize, dy: &Mat, dws: &mut [Mat]| {
+            add_into(&mut dws[site],
+                     &matmul(&trace.xs[site].transpose(), dy, th));
+            matmul(dy, &self.weights[site].transpose(), th)
+        };
+        let mut dx = site_bwd(head, dlogits, dws);
+        for layer in (0..self.cfg.layers).rev() {
+            let base = 4 * layer;
+            let da = site_bwd(base + 3, &dx, dws);
+            let dh = relu_bwd(&da, &trace.hs[layer]);
+            add_into(&mut dx, &site_bwd(base + 2, &dh, dws));
+            let dv = site_bwd(base + 1, &dx, dws);
+            let dqkv = scatter_cols(&dv, 3 * d, 2 * d);
+            add_into(&mut dx, &site_bwd(base, &dqkv, dws));
+        }
+    }
+
+    /// One microbatch through whichever engine this run has:
+    /// forward, loss, backward, `dW` accumulation into `dws`.
+    /// Returns the masked loss and (on the quantized engine) the
+    /// microstep report.
+    fn microbatch(&mut self, tb: &TokenBatch, dws: &mut [Mat])
+                  -> (f64, Option<StepReport>) {
+        let (inputs, targets) = split_window(tb);
+        let mask = loss_mask(tb);
+        if matches!(self.engine, Engine::Exact) {
+            let trace = self.exact_forward(&inputs);
+            let (loss, _, dlogits) =
+                softmax_ce(&trace.logits, &targets, &mask);
+            self.exact_backward(&trace, &dlogits, dws);
+            (loss, None)
+        } else {
+            let (loss, report) = self
+                .quantized_microbatch(&inputs, &targets, &mask,
+                                      dws);
+            (loss, Some(report))
+        }
+    }
+
+    /// The quantized twin of exact forward/backward, through
+    /// [`ModelStep`]'s split-microstep API: interleaved
+    /// `forward_site` calls, the loss at the head, then
+    /// `backward_site` in reverse with residual merging, closed by
+    /// `finish_microstep`.
+    fn quantized_microbatch(&mut self, inputs: &[i32],
+                            targets: &[i32], mask: &[f32],
+                            dws: &mut [Mat])
+                            -> (f64, StepReport) {
+        let d = self.cfg.d_model;
+        let layers = self.cfg.layers;
+        let head = 4 * layers;
+        let mut x = self.embed_rows(inputs);
+        let ms = match &mut self.engine {
+            Engine::Quantized(ms) => ms,
+            Engine::Exact => unreachable!("quantized microbatch"),
+        };
+        let mut hs = Vec::with_capacity(layers);
+        for layer in 0..layers {
+            let base = 4 * layer;
+            let qkv = ms.forward_site(base, &x);
+            let v = take_cols(&qkv, 2 * d, 3 * d);
+            let attn = ms.forward_site(base + 1, &v);
+            add_into(&mut x, &attn);
+            let h = ms.forward_site(base + 2, &x);
+            let a = relu(&h);
+            hs.push(h);
+            let m = ms.forward_site(base + 3, &a);
+            add_into(&mut x, &m);
+        }
+        let logits = ms.forward_site(head, &x);
+        let (loss, _, dlogits) = softmax_ce(&logits, targets, mask);
+        let mut dx = ms.backward_site(head, &dlogits);
+        for layer in (0..layers).rev() {
+            let base = 4 * layer;
+            let da = ms.backward_site(base + 3, &dx);
+            let dh = relu_bwd(&da, &hs[layer]);
+            add_into(&mut dx, &ms.backward_site(base + 2, &dh));
+            let dv = ms.backward_site(base + 1, &dx);
+            let dqkv = scatter_cols(&dv, 3 * d, 2 * d);
+            add_into(&mut dx, &ms.backward_site(base, &dqkv));
+        }
+        let report = ms.finish_microstep();
+        for (acc, out) in dws.iter_mut().zip(ms.outputs()) {
+            add_into(acc, &out.dw);
+        }
+        (loss, report)
+    }
+
+    /// One optimizer step: `accum` microbatches, gradient
+    /// averaging, global-norm clip, threshold-controller step,
+    /// optimizer update, weight write-back into the engine.
+    pub fn step_once(&mut self) -> StepStats {
+        let lr = self.cfg.lr.lr_at(self.step);
+        let (q0, p0) = quant_work_counters();
+        let mut dws: Vec<Mat> = self
+            .sites
+            .iter()
+            .map(|l| Mat::zeros(l.k, l.n))
+            .collect();
+        let mut loss_sum = 0.0f64;
+        let mut fb_sum = 0.0f64;
+        let mut fb_n = 0usize;
+        let (mut hits, mut misses) = (0u64, 0u64);
+        for _ in 0..self.cfg.accum {
+            let tb = self.loader.next_batch();
+            let (loss, report) = self.microbatch(&tb, &mut dws);
+            loss_sum += loss;
+            if let Some(rep) = report {
+                hits += rep.cache_hits;
+                misses += rep.cache_misses;
+                for s in &rep.sites {
+                    fb_sum += s.fallback_rate;
+                    fb_n += 1;
+                }
+            }
+        }
+        let inv = 1.0 / self.cfg.accum as f32;
+        let mut sq = 0.0f64;
+        for dw in &mut dws {
+            for v in &mut dw.data {
+                *v *= inv;
+                sq += (*v as f64) * (*v as f64);
+            }
+        }
+        let grad_norm = sq.sqrt();
+        if self.cfg.grad_clip > 0.0 && grad_norm > self.cfg.grad_clip
+        {
+            let scale = (self.cfg.grad_clip / grad_norm) as f32;
+            for dw in &mut dws {
+                for v in &mut dw.data {
+                    *v *= scale;
+                }
+            }
+        }
+        if let Engine::Quantized(ms) = &mut self.engine {
+            ms.end_step();
+        }
+        self.opt.begin_step();
+        for (s, dw) in dws.iter().enumerate() {
+            self.opt.update(s, &mut self.weights[s], dw, lr as f32);
+            if let Engine::Quantized(ms) = &mut self.engine {
+                ms.set_weight(s, self.weights[s].clone());
+            }
+        }
+        let (q1, p1) = quant_work_counters();
+        let stats = StepStats {
+            step: self.step,
+            loss: loss_sum / self.cfg.accum as f64,
+            grad_norm,
+            lr,
+            fallback_rate: if fb_n == 0 {
+                0.0
+            } else {
+                fb_sum / fb_n as f64
+            },
+            cache_hits: hits,
+            cache_misses: misses,
+            quants: q1.wrapping_sub(q0),
+            packs: p1.wrapping_sub(p0),
+        };
+        let mut log_failed = false;
+        if let Some(log) = &mut self.log {
+            log_failed = log
+                .log(stats.step, &[
+                    ("loss", stats.loss),
+                    ("grad_norm", stats.grad_norm),
+                    ("lr", stats.lr),
+                    ("fallback_rate", stats.fallback_rate),
+                    ("cache_hits", stats.cache_hits as f64),
+                    ("cache_misses", stats.cache_misses as f64),
+                ])
+                .is_err();
+        }
+        if log_failed {
+            eprintln!("train: metrics log write failed — \
+                       detaching the log");
+            self.log = None;
+        }
+        self.step += 1;
+        self.history.push(stats.clone());
+        stats
+    }
+
+    /// Run `steps` optimizer steps; returns their stats.
+    pub fn run(&mut self, steps: usize) -> Vec<StepStats> {
+        (0..steps).map(|_| self.step_once()).collect()
+    }
+
+    /// Serialize the full resumable state — see the module docs for
+    /// the format. The corpus/task itself is not serialized: the
+    /// caller rebuilds the [`Loader`] and
+    /// [`from_checkpoint`](Self::from_checkpoint) checks its seed.
+    pub fn checkpoint(&self) -> Json {
+        let weights = Json::Arr(
+            self.weights
+                .iter()
+                .map(|w| {
+                    let v: Vec<f64> = w
+                        .data
+                        .iter()
+                        .map(|&x| x as f64)
+                        .collect();
+                    arr_f64(&v)
+                })
+                .collect(),
+        );
+        obj(vec![
+            ("kind", Json::Str(TRAIN_STATE_KIND.into())),
+            ("version", Json::Num(TRAIN_STATE_VERSION)),
+            ("step", Json::Num(self.step as f64)),
+            ("config", obj(vec![
+                ("layers", Json::Num(self.cfg.layers as f64)),
+                ("d_model", Json::Num(self.cfg.d_model as f64)),
+                ("d_ff", Json::Num(self.cfg.d_ff as f64)),
+                ("vocab", Json::Num(self.cfg.vocab as f64)),
+                ("batch", Json::Num(self.cfg.batch as f64)),
+                ("seq", Json::Num(self.cfg.seq as f64)),
+                ("block", Json::Num(self.cfg.block as f64)),
+                ("accum", Json::Num(self.cfg.accum as f64)),
+                ("init_seed",
+                 Json::Str(format!("{:016x}", self.cfg.init_seed))),
+                ("exact", Json::Bool(self.cfg.exact)),
+            ])),
+            ("loader", obj(vec![
+                ("seed",
+                 Json::Str(format!("{:016x}", self.loader.seed()))),
+                ("cursor", Json::Num(self.loader.cursor() as f64)),
+            ])),
+            ("optimizer", self.opt.to_json()),
+            ("weights", weights),
+            ("warm_state", match &self.engine {
+                Engine::Quantized(ms) => ms.warm_state(None),
+                Engine::Exact => Json::Null,
+            }),
+        ])
+    }
+
+    /// [`checkpoint`](Self::checkpoint) straight to a file.
+    pub fn save_checkpoint(&self, path: &str)
+                           -> Result<(), String> {
+        self.checkpoint().to_file(path)
+    }
+
+    /// Restore a run. Strict on purpose: wrong `kind`, any version
+    /// other than [`TRAIN_STATE_VERSION`] (v1 files have no
+    /// optimizer state to resume from), a config fingerprint
+    /// mismatch, or a loader whose seed differs from the saved one
+    /// all fail loudly. The resumed run continues bit-identically
+    /// to the uninterrupted original.
+    pub fn from_checkpoint(cfg: TrainLoopConfig, mut loader: Loader,
+                           state: &Json)
+                           -> Result<TrainLoop, String> {
+        if state.get("kind").and_then(|v| v.as_str())
+            != Some(TRAIN_STATE_KIND)
+        {
+            return Err(
+                "train checkpoint: wrong or missing 'kind'".into());
+        }
+        let version =
+            state.get("version").and_then(|v| v.as_f64());
+        if version != Some(TRAIN_STATE_VERSION) {
+            return Err(format!(
+                "train checkpoint: unsupported version {version:?} \
+                 (this build reads only version \
+                 {TRAIN_STATE_VERSION}; version 1 files predate \
+                 optimizer state and cannot resume a run)"
+            ));
+        }
+        let sc = state
+            .get("config")
+            .ok_or("train checkpoint: missing 'config'")?;
+        let field = |k: &str| {
+            sc.get(k).and_then(|v| v.as_usize()).ok_or_else(|| {
+                format!("train checkpoint: missing '{k}'")
+            })
+        };
+        let saved_init = sc
+            .get("init_seed")
+            .and_then(|v| v.as_str())
+            .and_then(|s| u64::from_str_radix(s, 16).ok())
+            .ok_or("train checkpoint: missing 'init_seed'")?;
+        let fingerprint_ok = field("layers")? == cfg.layers
+            && field("d_model")? == cfg.d_model
+            && field("d_ff")? == cfg.d_ff
+            && field("vocab")? == cfg.vocab
+            && field("batch")? == cfg.batch
+            && field("seq")? == cfg.seq
+            && field("block")? == cfg.block
+            && field("accum")? == cfg.accum
+            && saved_init == cfg.init_seed
+            && sc.get("exact").and_then(|v| v.as_bool())
+                == Some(cfg.exact);
+        if !fingerprint_ok {
+            return Err("train checkpoint: config fingerprint \
+                        mismatch (saved for a different run)"
+                .into());
+        }
+        let lc = state
+            .get("loader")
+            .ok_or("train checkpoint: missing 'loader'")?;
+        let saved_seed = lc
+            .get("seed")
+            .and_then(|v| v.as_str())
+            .and_then(|s| u64::from_str_radix(s, 16).ok())
+            .ok_or("train checkpoint: missing loader 'seed'")?;
+        if loader.seed() != saved_seed {
+            return Err(format!(
+                "train checkpoint: loader seed {:016x} differs \
+                 from the saved stream's {saved_seed:016x}",
+                loader.seed()
+            ));
+        }
+        let cursor = lc
+            .get("cursor")
+            .and_then(|v| v.as_usize())
+            .ok_or("train checkpoint: missing loader 'cursor'")?;
+        loader.seek(cursor as u64);
+        let sites = model_linears(cfg.layers, cfg.d_model, cfg.d_ff,
+                                  false, cfg.vocab, cfg.tokens());
+        let warr = state
+            .get("weights")
+            .and_then(|v| v.as_arr())
+            .ok_or("train checkpoint: missing 'weights'")?;
+        if warr.len() != sites.len() {
+            return Err(format!(
+                "train checkpoint: {} weight matrices for {} sites",
+                warr.len(),
+                sites.len()
+            ));
+        }
+        let mut weights = Vec::with_capacity(sites.len());
+        for (l, wj) in sites.iter().zip(warr) {
+            let v = wj.to_f64_vec().ok_or(
+                "train checkpoint: malformed weight matrix")?;
+            if v.len() != l.k * l.n {
+                return Err(format!(
+                    "train checkpoint: site {} weight has {} \
+                     values, expected {}",
+                    l.name,
+                    v.len(),
+                    l.k * l.n
+                ));
+            }
+            weights.push(Mat::from_vec(
+                l.k, l.n,
+                v.iter().map(|&x| x as f32).collect()));
+        }
+        let opt = optimizer_from_json(
+            state
+                .get("optimizer")
+                .ok_or("train checkpoint: missing 'optimizer'")?,
+            sites.len())?;
+        let engine = if cfg.exact {
+            Engine::Exact
+        } else {
+            let ws = state
+                .get("warm_state")
+                .ok_or("train checkpoint: missing 'warm_state'")?;
+            let (ms, _) = ModelStep::from_warm_state(
+                cfg.model_config(), weights.clone(), ws)?;
+            Engine::Quantized(ms)
+        };
+        let step = state
+            .get("step")
+            .and_then(|v| v.as_usize())
+            .ok_or("train checkpoint: missing 'step'")?;
+        // The embedding is derived data: regenerate it from the
+        // init stream exactly as `new` drew it.
+        let mut rng = Pcg64::new(cfg.init_seed);
+        let embed =
+            Mat::randn(cfg.vocab, cfg.d_model, 1.0, &mut rng);
+        Ok(TrainLoop {
+            cfg,
+            sites,
+            weights,
+            embed,
+            engine,
+            opt,
+            loader,
+            step,
+            history: Vec::new(),
+            log: None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Corpus;
+
+    fn tiny_cfg() -> TrainLoopConfig {
+        let mut cfg = TrainLoopConfig::new(1, 32, 48, 64, 2, 8, 16);
+        cfg.threads = 1;
+        cfg
+    }
+
+    fn tiny_loader(seed: u64) -> Loader {
+        Loader::pretrain(Corpus::synthetic(400, 64, 11), 2, 8, seed)
+    }
+
+    #[test]
+    fn loss_starts_near_uniform_and_steps_run() {
+        let mut tl = TrainLoop::new(tiny_cfg(), tiny_loader(3));
+        let tb = tl.loader().batch_at(0);
+        let l0 = tl.eval_loss(&tb);
+        // Random weights ≈ uniform predictions: ln(64) ≈ 4.16.
+        assert!((l0 - (64.0f64).ln()).abs() < 1.0, "initial {l0}");
+        let stats = tl.run(2);
+        assert_eq!(stats.len(), 2);
+        assert_eq!(tl.step(), 2);
+        assert!(stats[0].loss.is_finite());
+        assert!(stats[0].grad_norm > 0.0);
+        assert_eq!(tl.loader().cursor(), 2);
+        assert_eq!(tl.history().len(), 2);
+    }
+
+    #[test]
+    fn exact_and_quantized_agree_on_first_loss_scale() {
+        // Not bit-equal (different arithmetic) but the same model:
+        // microbatch losses must be close at init where quantization
+        // error is the only difference.
+        let mut cfg = tiny_cfg();
+        let mut q = TrainLoop::new(cfg.clone(), tiny_loader(5));
+        cfg.exact = true;
+        let mut e = TrainLoop::new(cfg, tiny_loader(5));
+        let sq = q.step_once();
+        let se = e.step_once();
+        assert!((sq.loss - se.loss).abs() < 0.5,
+                "quantized {} vs exact {}", sq.loss, se.loss);
+        assert_eq!(se.fallback_rate, 0.0);
+        assert_eq!(se.cache_hits + se.cache_misses, 0);
+    }
+
+    #[test]
+    fn finetune_masked_loss_ignores_context_positions() {
+        let cfg = tiny_cfg();
+        let loader = Loader::finetune(crate::data::Task::Arithmetic,
+                                      64, 2, 8, 9);
+        let tl = TrainLoop::new(cfg, loader);
+        let tb = tl.loader().batch_at(0);
+        let mask = loss_mask(&tb);
+        assert_eq!(mask.len(), 2 * 8);
+        let spans = tb.spans.as_ref().unwrap();
+        let marked: f32 = mask.iter().sum();
+        let expect: usize = spans
+            .iter()
+            .map(|s| {
+                s.clone().filter(|p| (1..=8).contains(p)).count()
+            })
+            .sum();
+        assert_eq!(marked as usize, expect);
+        assert!(tl.eval_loss(&tb).is_finite());
+    }
+
+    #[test]
+    fn softmax_ce_gradient_matches_finite_difference() {
+        let mut rng = Pcg64::new(77);
+        let logits = Mat::randn(3, 5, 1.0, &mut rng);
+        let targets = [1i32, 4, 0];
+        let mask = [1.0f32, 0.0, 1.0];
+        let (l0, per_token, d) =
+            softmax_ce(&logits, &targets, &mask);
+        assert_eq!(per_token.len(), 3);
+        // Masked row contributes no gradient.
+        assert!(d.row(1).iter().all(|&v| v == 0.0));
+        let eps = 1e-3f32;
+        for (r, c) in [(0usize, 1usize), (0, 3), (2, 0), (2, 4)] {
+            let mut bumped = logits.clone();
+            bumped.data[r * 5 + c] += eps;
+            let (l1, _, _) = softmax_ce(&bumped, &targets, &mask);
+            let fd = (l1 - l0) / eps as f64;
+            let an = d.data[r * 5 + c] as f64;
+            assert!((fd - an).abs() < 1e-3,
+                    "d[{r}][{c}]: fd {fd} vs {an}");
+        }
+        // Degenerate all-zero mask: loss 0, gradient 0.
+        let (lz, _, dz) =
+            softmax_ce(&logits, &targets, &[0.0, 0.0, 0.0]);
+        assert_eq!(lz, 0.0);
+        assert!(dz.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_through_json_text() {
+        let mut tl = TrainLoop::new(tiny_cfg(), tiny_loader(21));
+        tl.run(3);
+        let ck = tl.checkpoint();
+        let parsed = Json::parse(&ck.to_string()).unwrap();
+        let tr = TrainLoop::from_checkpoint(
+            tiny_cfg(), tiny_loader(21), &parsed)
+            .unwrap();
+        assert_eq!(tr.step(), 3);
+        assert_eq!(tr.loader().cursor(), 3);
+        for (a, b) in tl.weights().iter().zip(tr.weights()) {
+            assert_eq!(a.data, b.data);
+        }
+        assert_eq!(tl.embed.data, tr.embed.data);
+    }
+
+    #[test]
+    fn from_checkpoint_rejects_wrong_kind_and_version() {
+        let mut tl = TrainLoop::new(tiny_cfg(), tiny_loader(2));
+        tl.run(1);
+        let ck = tl.checkpoint();
+        // Wrong kind: a bare v1 warm-state file is not a training
+        // checkpoint.
+        let warm = tl.model().unwrap().warm_state(None);
+        let err = TrainLoop::from_checkpoint(
+            tiny_cfg(), tiny_loader(2), &warm)
+            .unwrap_err();
+        assert!(err.contains("kind"), "{err}");
+        // Version 1 of the train format: rejected with a message
+        // that names the version problem.
+        let mut fields = match ck.clone() {
+            Json::Obj(f) => f,
+            _ => unreachable!(),
+        };
+        fields.insert("version".to_string(), Json::Num(1.0));
+        let err = TrainLoop::from_checkpoint(
+            tiny_cfg(), tiny_loader(2), &Json::Obj(fields))
+            .unwrap_err();
+        assert!(err.contains("version"), "{err}");
+        // Loader seed mismatch is loud, not a silently different
+        // data stream.
+        let err = TrainLoop::from_checkpoint(
+            tiny_cfg(), tiny_loader(99), &ck)
+            .unwrap_err();
+        assert!(err.contains("seed"), "{err}");
+        // Config fingerprint mismatch.
+        let mut other = tiny_cfg();
+        other.d_ff = 32;
+        let err = TrainLoop::from_checkpoint(
+            other, tiny_loader(2), &ck)
+            .unwrap_err();
+        assert!(err.contains("fingerprint"), "{err}");
+    }
+
+    #[test]
+    fn metrics_log_collects_series() {
+        let mut tl = TrainLoop::new(tiny_cfg(), tiny_loader(4));
+        tl.attach_log(MetricsLog::new("train_test", None).unwrap());
+        tl.run(2);
+        let log = tl.log.as_ref().unwrap();
+        assert_eq!(log.series["loss"].count, 2);
+        assert_eq!(log.series["grad_norm"].count, 2);
+    }
+}

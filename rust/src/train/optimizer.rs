@@ -1,0 +1,370 @@
+//! Optimizers updating [`ModelStep`] weights through the
+//! `set_weight` → `invalidate_weight` cadence.
+//!
+//! Both rules run **sequential f32 elementwise** math — no threading,
+//! no reduction-order freedom — so a training step is bit-identical
+//! across kernel backends, thread counts, and shard configs by
+//! construction (the GEMM engine already guarantees it for the
+//! gradients coming in). State serializes losslessly: every f32
+//! roundtrips exactly through the JSON `f64` numbers, which is what
+//! makes a restored run continue bit-for-bit
+//! (`tests/train_prop.rs::checkpoint_restore_resumes_bit_identical`).
+//!
+//! [`ModelStep`]: crate::gemm::ModelStep
+
+use crate::util::json::{arr_f64, obj, Json};
+use crate::util::Mat;
+
+/// One weight-update rule over the per-site weight matrices of a
+/// model. Implementations lazily size their per-site state on first
+/// update (sites have different shapes) and must be deterministic and
+/// sequential — see the module docs.
+pub trait Optimizer {
+    /// Serialization tag (`kind` field) and display name.
+    fn name(&self) -> &'static str;
+
+    /// Called once at the start of each optimizer step, before the
+    /// per-site updates — Adam's bias-correction clock. Default:
+    /// no-op.
+    fn begin_step(&mut self) {}
+
+    /// Apply one update for site `site`: `w` is the (k × n) master
+    /// weight, `dw` the same-shaped gradient, `lr` this step's
+    /// learning rate.
+    fn update(&mut self, site: usize, w: &mut Mat, dw: &Mat, lr: f32);
+
+    /// f32 ops per parameter per update — the cost model's price tag
+    /// (`SubstrateCalibration::substrate_train_step_secs`).
+    fn flops_per_param(&self) -> f64;
+
+    /// Full state (kind tag + hyperparameters + per-site buffers),
+    /// losslessly restorable via [`optimizer_from_json`].
+    fn to_json(&self) -> Json;
+}
+
+fn state_to_json(state: &[Vec<f32>]) -> Json {
+    Json::Arr(
+        state
+            .iter()
+            .map(|s| {
+                let v: Vec<f64> =
+                    s.iter().map(|&x| x as f64).collect();
+                arr_f64(&v)
+            })
+            .collect(),
+    )
+}
+
+fn state_from_json(j: &Json, n_sites: usize, what: &str)
+                   -> Result<Vec<Vec<f32>>, String> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| format!("optimizer: malformed '{what}'"))?;
+    if arr.len() != n_sites {
+        return Err(format!(
+            "optimizer: '{what}' has {} sites, model has {n_sites}",
+            arr.len()
+        ));
+    }
+    arr.iter()
+        .map(|s| {
+            s.to_f64_vec()
+                .map(|v| v.iter().map(|&x| x as f32).collect())
+                .ok_or_else(|| {
+                    format!("optimizer: malformed '{what}' entry")
+                })
+        })
+        .collect()
+}
+
+/// SGD with classical momentum: `v ← μ·v + g`, `w ← w − lr·v`.
+pub struct SgdMomentum {
+    pub momentum: f32,
+    /// per-site velocity, sized lazily on first update
+    vel: Vec<Vec<f32>>,
+}
+
+impl SgdMomentum {
+    pub fn new(n_sites: usize, momentum: f32) -> SgdMomentum {
+        SgdMomentum { momentum, vel: vec![Vec::new(); n_sites] }
+    }
+}
+
+impl Optimizer for SgdMomentum {
+    fn name(&self) -> &'static str {
+        "sgd_momentum"
+    }
+
+    fn update(&mut self, site: usize, w: &mut Mat, dw: &Mat,
+              lr: f32) {
+        assert_eq!((w.rows, w.cols), (dw.rows, dw.cols),
+                   "gradient shape for site {site}");
+        let mu = self.momentum;
+        let v = &mut self.vel[site];
+        if v.is_empty() {
+            v.resize(w.data.len(), 0.0);
+        }
+        assert_eq!(v.len(), w.data.len(),
+                   "velocity shape for site {site}");
+        for ((wi, vi), &g) in
+            w.data.iter_mut().zip(v.iter_mut()).zip(&dw.data)
+        {
+            *vi = mu * *vi + g;
+            *wi -= lr * *vi;
+        }
+    }
+
+    fn flops_per_param(&self) -> f64 {
+        4.0
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("kind", Json::Str(self.name().into())),
+            ("momentum", Json::Num(self.momentum as f64)),
+            ("vel", state_to_json(&self.vel)),
+        ])
+    }
+}
+
+/// Adam (Kingma & Ba) with bias correction. The timestep advances in
+/// [`begin_step`](Optimizer::begin_step) — once per optimizer step,
+/// not once per site — so every site of a step shares one
+/// bias-correction factor.
+pub struct Adam {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    t: u64,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    /// Standard hyperparameters: β₁ = 0.9, β₂ = 0.999, ε = 1e-8.
+    pub fn new(n_sites: usize) -> Adam {
+        Adam::with_hyper(n_sites, 0.9, 0.999, 1e-8)
+    }
+
+    pub fn with_hyper(n_sites: usize, beta1: f32, beta2: f32,
+                      eps: f32) -> Adam {
+        Adam {
+            beta1,
+            beta2,
+            eps,
+            t: 0,
+            m: vec![Vec::new(); n_sites],
+            v: vec![Vec::new(); n_sites],
+        }
+    }
+
+    /// Optimizer steps taken (the bias-correction clock).
+    pub fn timestep(&self) -> u64 {
+        self.t
+    }
+}
+
+impl Optimizer for Adam {
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+
+    fn begin_step(&mut self) {
+        self.t += 1;
+    }
+
+    fn update(&mut self, site: usize, w: &mut Mat, dw: &Mat,
+              lr: f32) {
+        assert!(self.t > 0, "Adam::update before begin_step");
+        assert_eq!((w.rows, w.cols), (dw.rows, dw.cols),
+                   "gradient shape for site {site}");
+        let (b1, b2, eps) = (self.beta1, self.beta2, self.eps);
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        let m = &mut self.m[site];
+        let v = &mut self.v[site];
+        if m.is_empty() {
+            m.resize(w.data.len(), 0.0);
+            v.resize(w.data.len(), 0.0);
+        }
+        assert_eq!(m.len(), w.data.len(),
+                   "moment shape for site {site}");
+        for (((wi, mi), vi), &g) in w
+            .data
+            .iter_mut()
+            .zip(m.iter_mut())
+            .zip(v.iter_mut())
+            .zip(&dw.data)
+        {
+            *mi = b1 * *mi + (1.0 - b1) * g;
+            *vi = b2 * *vi + (1.0 - b2) * g * g;
+            let mhat = *mi / bc1;
+            let vhat = *vi / bc2;
+            *wi -= lr * mhat / (vhat.sqrt() + eps);
+        }
+    }
+
+    fn flops_per_param(&self) -> f64 {
+        12.0
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("kind", Json::Str(self.name().into())),
+            ("beta1", Json::Num(self.beta1 as f64)),
+            ("beta2", Json::Num(self.beta2 as f64)),
+            ("eps", Json::Num(self.eps as f64)),
+            ("t", Json::Num(self.t as f64)),
+            ("m", state_to_json(&self.m)),
+            ("v", state_to_json(&self.v)),
+        ])
+    }
+}
+
+/// Rebuild an optimizer from its [`Optimizer::to_json`] state. The
+/// per-site buffer count must match `n_sites`; every scalar restores
+/// bit-exactly (f32 → JSON f64 → f32 is lossless).
+pub fn optimizer_from_json(j: &Json, n_sites: usize)
+                           -> Result<Box<dyn Optimizer>, String> {
+    let num = |k: &str| {
+        j.get(k)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("optimizer: missing '{k}'"))
+    };
+    match j.get("kind").and_then(|v| v.as_str()) {
+        Some("sgd_momentum") => {
+            let momentum = num("momentum")? as f32;
+            let vel = state_from_json(
+                j.get("vel").ok_or("optimizer: missing 'vel'")?,
+                n_sites, "vel")?;
+            Ok(Box::new(SgdMomentum { momentum, vel }))
+        }
+        Some("adam") => {
+            let (beta1, beta2, eps) = (num("beta1")? as f32,
+                                       num("beta2")? as f32,
+                                       num("eps")? as f32);
+            let t = num("t")? as u64;
+            let m = state_from_json(
+                j.get("m").ok_or("optimizer: missing 'm'")?,
+                n_sites, "m")?;
+            let v = state_from_json(
+                j.get("v").ok_or("optimizer: missing 'v'")?,
+                n_sites, "v")?;
+            Ok(Box::new(Adam { beta1, beta2, eps, t, m, v }))
+        }
+        Some(k) => Err(format!("optimizer: unknown kind '{k}'")),
+        None => Err("optimizer: missing 'kind'".into()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(rows: usize, cols: usize, vals: &[f32]) -> Mat {
+        Mat::from_vec(rows, cols, vals.to_vec())
+    }
+
+    #[test]
+    fn sgd_momentum_matches_hand_computation() {
+        let mut opt = SgdMomentum::new(1, 0.5);
+        let mut w = mat(1, 2, &[1.0, -1.0]);
+        let g = mat(1, 2, &[0.5, 0.25]);
+        opt.begin_step();
+        opt.update(0, &mut w, &g, 0.1);
+        // v = g, w -= 0.1*v
+        assert_eq!(w.data, vec![1.0 - 0.05, -1.0 - 0.025]);
+        opt.begin_step();
+        opt.update(0, &mut w, &g, 0.1);
+        // v = 0.5*g + g = 1.5g
+        assert_eq!(w.data[0], 1.0 - 0.05 - 0.1 * 0.75);
+    }
+
+    #[test]
+    fn adam_first_step_is_signed_lr() {
+        // With bias correction, step 1 moves each weight by
+        // ~lr·sign(g) regardless of gradient magnitude.
+        let mut opt = Adam::new(1);
+        let mut w = mat(1, 3, &[0.0, 0.0, 0.0]);
+        let g = mat(1, 3, &[0.3, -7.0, 1e-3]);
+        opt.begin_step();
+        opt.update(0, &mut w, &g, 0.01);
+        assert_eq!(opt.timestep(), 1);
+        for (wi, gi) in w.data.iter().zip(&g.data) {
+            let step = wi / -gi.signum();
+            assert!((step - 0.01).abs() < 1e-3,
+                    "step {step} for g {gi}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "before begin_step")]
+    fn adam_update_requires_begin_step() {
+        let mut opt = Adam::new(1);
+        let mut w = mat(1, 1, &[0.0]);
+        let g = mat(1, 1, &[1.0]);
+        opt.update(0, &mut w, &g, 0.01);
+    }
+
+    /// Serialize mid-run, restore, and require the restored optimizer
+    /// to produce bit-identical weight trajectories from there on —
+    /// the property checkpointing leans on.
+    #[test]
+    fn json_roundtrip_continues_bit_identical() {
+        let makes: [fn() -> Box<dyn Optimizer>; 2] = [
+            || Box::new(Adam::new(2)),
+            || Box::new(SgdMomentum::new(2, 0.9)),
+        ];
+        for make in makes {
+            let mut a = make();
+            let mut w1 = mat(2, 2, &[0.1, -0.2, 0.3, -0.4]);
+            let mut w2 = w1.clone();
+            let g = mat(2, 2, &[0.01, 0.02, -0.03, 0.04]);
+            for _ in 0..3 {
+                a.begin_step();
+                a.update(0, &mut w1, &g, 0.05);
+                a.update(1, &mut w2, &g, 0.05);
+            }
+            let state = a.to_json();
+            let text = state.to_string();
+            let parsed =
+                crate::util::json::Json::parse(&text).unwrap();
+            let mut b = optimizer_from_json(&parsed, 2).unwrap();
+            assert_eq!(b.name(), a.name());
+            let (mut wa1, mut wb1) = (w1.clone(), w1.clone());
+            let (mut wa2, mut wb2) = (w2.clone(), w2.clone());
+            for _ in 0..3 {
+                a.begin_step();
+                b.begin_step();
+                a.update(0, &mut wa1, &g, 0.05);
+                b.update(0, &mut wb1, &g, 0.05);
+                a.update(1, &mut wa2, &g, 0.05);
+                b.update(1, &mut wb2, &g, 0.05);
+            }
+            assert_eq!(wa1.data, wb1.data);
+            assert_eq!(wa2.data, wb2.data);
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_state() {
+        use crate::util::json::{obj, Json};
+        // unknown kind
+        let j = obj(vec![("kind", Json::Str("lion".into()))]);
+        assert!(optimizer_from_json(&j, 1)
+            .unwrap_err()
+            .contains("unknown kind"));
+        // missing kind
+        assert!(optimizer_from_json(&Json::Null, 1)
+            .unwrap_err()
+            .contains("kind"));
+        // site-count mismatch
+        let mut opt = Adam::new(3);
+        let mut w = mat(1, 1, &[0.0]);
+        opt.begin_step();
+        opt.update(0, &mut w, &mat(1, 1, &[1.0]), 0.1);
+        let err =
+            optimizer_from_json(&opt.to_json(), 5).unwrap_err();
+        assert!(err.contains("sites"), "{err}");
+    }
+}

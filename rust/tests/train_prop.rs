@@ -1,0 +1,205 @@
+//! End-to-end training-loop properties: bit-reproducibility of the
+//! loss curve across every kernel backend, thread count, and shard
+//! config; checkpoint restore continuing bit-identically; plan-cache
+//! behavior under full per-step weight mutation; and the
+//! paper-trend convergence of the quantized run against the exact
+//! dense-f32 reference.
+
+use dbfq::coordinator::LrSchedule;
+use dbfq::data::Corpus;
+use dbfq::gemm::{kernels, DataPath};
+use dbfq::train::{Loader, TrainLoop, TrainLoopConfig};
+use dbfq::util::json::Json;
+
+const VOCAB: usize = 64;
+const BATCH: usize = 2;
+const SEQ: usize = 8;
+
+fn small_cfg() -> TrainLoopConfig {
+    let mut cfg =
+        TrainLoopConfig::new(1, 32, 48, VOCAB, BATCH, SEQ, 16);
+    cfg.threads = 1;
+    cfg.shards = 1;
+    cfg
+}
+
+fn small_loader(seed: u64) -> Loader {
+    Loader::pretrain(Corpus::synthetic(600, VOCAB, 13), BATCH, SEQ,
+                     seed)
+}
+
+fn loss_bits(tl: &mut TrainLoop, steps: usize) -> Vec<u64> {
+    tl.run(steps).iter().map(|s| s.loss.to_bits()).collect()
+}
+
+fn weight_bits(tl: &TrainLoop) -> Vec<u32> {
+    tl.weights()
+        .iter()
+        .flat_map(|w| w.data.iter().map(|v| v.to_bits()))
+        .collect()
+}
+
+/// The tentpole determinism claim: the whole training trajectory —
+/// not just one GEMM — is byte-identical across every available
+/// kernel backend, thread count, and shard count.
+#[test]
+fn loss_curve_bit_identical_across_backends_threads_shards() {
+    let steps = 6;
+    let mut reference: Option<(Vec<u64>, Vec<u32>)> = None;
+    for kn in kernels::available() {
+        for threads in [1usize, 2, 4] {
+            for shards in [1usize, 2] {
+                let mut cfg = small_cfg();
+                cfg.threads = threads;
+                cfg.shards = shards;
+                let mut tl =
+                    TrainLoop::new(cfg, small_loader(17))
+                        .with_kernels(kn);
+                let curve = loss_bits(&mut tl, steps);
+                let weights = weight_bits(&tl);
+                match &reference {
+                    None => {
+                        reference = Some((curve, weights));
+                    }
+                    Some((c0, w0)) => {
+                        assert_eq!(&curve, c0,
+                                   "loss curve diverged: backend \
+                                    {} threads {threads} shards \
+                                    {shards}", kn.name);
+                        assert_eq!(&weights, w0,
+                                   "weights diverged: backend {} \
+                                    threads {threads} shards \
+                                    {shards}", kn.name);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The true-int8 data path is bit-identical to its f32 simulation
+/// for the entire training run — the gap the ISSUE bounds is
+/// exactly zero by the engine's exactness argument (block sizes ≤
+/// 1040 keep every i8 partial sum in f32's exact-integer range).
+#[test]
+fn int8_and_simf32_training_runs_are_bitwise_equal() {
+    let mk = |path: DataPath| {
+        let mut cfg = small_cfg();
+        cfg.path = path;
+        let mut tl = TrainLoop::new(cfg, small_loader(23));
+        (loss_bits(&mut tl, 6), weight_bits(&tl))
+    };
+    let (ci, wi) = mk(DataPath::Int8);
+    let (cs, ws) = mk(DataPath::SimF32);
+    assert_eq!(ci, cs, "Int8 vs SimF32 loss curves");
+    assert_eq!(wi, ws, "Int8 vs SimF32 final weights");
+}
+
+/// Save at step 10, restore into a fresh process-alike, run 10 more:
+/// every loss bit and weight bit matches the uninterrupted 20-step
+/// run. (Cache *stats* differ — restore prewarms where the original
+/// missed — but plans rebuilt from the same weights are
+/// byte-identical, so outputs cannot.)
+#[test]
+fn checkpoint_restore_resumes_bit_identical() {
+    let mut straight = TrainLoop::new(small_cfg(), small_loader(31));
+    let full: Vec<u64> = loss_bits(&mut straight, 20);
+
+    let mut first = TrainLoop::new(small_cfg(), small_loader(31));
+    let head: Vec<u64> = loss_bits(&mut first, 10);
+    let state = first.checkpoint();
+    // Through text, as a real save/load would go.
+    let parsed = Json::parse(&state.to_string()).unwrap();
+    let mut resumed = TrainLoop::from_checkpoint(
+        small_cfg(), small_loader(31), &parsed)
+        .unwrap();
+    assert_eq!(resumed.step(), 10);
+    let tail: Vec<u64> = loss_bits(&mut resumed, 10);
+
+    let mut rejoined = head;
+    rejoined.extend(tail);
+    assert_eq!(rejoined, full, "restored run diverged");
+    assert_eq!(weight_bits(&resumed), weight_bits(&straight));
+    let (a, b) = (resumed.model().unwrap(),
+                  straight.model().unwrap());
+    assert_eq!(a.microsteps(), b.microsteps());
+    assert_eq!(a.controller().thresholds, b.controller().thresholds);
+}
+
+/// Plan-cache behavior under the training loop's full per-step
+/// weight mutation, with gradient accumulation making the cache
+/// earn its keep: every step's first microbatch rebuilds both
+/// weight halves of every site (2S misses), the second hits all of
+/// them (2S hits), and the quant/pack counters account for exactly
+/// that — no stale plans, no thrashing, no silent extra work.
+#[test]
+fn cache_under_per_step_weight_mutation() {
+    let mut cfg = small_cfg();
+    cfg.accum = 2;
+    cfg.threads = 1; // counters are per-thread exact only inline
+    let s = cfg.n_sites() as u64;
+    let mut tl = TrainLoop::new(cfg.clone(), small_loader(41));
+    let mut twin = TrainLoop::new(cfg, small_loader(41));
+    for step in 0..8 {
+        // The twin rebuilds every plan from scratch each step: if a
+        // stale plan ever survived `set_weight`, the curves would
+        // split here.
+        twin.model_mut().unwrap().clear_cache();
+        let st = tl.step_once();
+        let sw = twin.step_once();
+        assert_eq!(st.loss.to_bits(), sw.loss.to_bits(),
+                   "cached vs cache-cleared run at step {step}");
+        assert_eq!(st.cache_misses, 2 * s, "step {step} misses");
+        assert_eq!(st.cache_hits, 2 * s, "step {step} hits");
+        // Cold microbatch: 4 quants (X, dY, W, Wᵀ) + 3 packs per
+        // site; warm: 2 quants + 1 pack.
+        assert_eq!(st.quants, 6 * s, "step {step} quant calls");
+        assert_eq!(st.packs, 4 * s, "step {step} panel packs");
+        let cache = tl.model().unwrap().cache();
+        assert!(cache.len() <= cache.capacity());
+        assert!(!cache.stats().thrashing(),
+                "cache thrashing at step {step}");
+    }
+    assert_eq!(weight_bits(&tl), weight_bits(&twin));
+}
+
+/// The convergence harness (Fig-7b trend at CPU toy scale): 200
+/// synthetic-pretrain steps must actually learn — final loss well
+/// under the ~ln(64) ≈ 4.16 random-init loss — on both engines, and
+/// the quantized run must land within a bounded gap of the exact
+/// dense-f32 reference.
+#[test]
+fn pretrain_converges_and_tracks_exact_reference() {
+    let steps = 200;
+    let run = |exact: bool| {
+        let mut cfg = TrainLoopConfig::new(
+            1, 32, 48, VOCAB, 4, SEQ, 16);
+        cfg.threads = 1;
+        cfg.exact = exact;
+        cfg.lr = LrSchedule { peak: 5e-3, warmup: 10,
+                              total: steps };
+        let loader = Loader::pretrain(
+            Corpus::synthetic(2000, VOCAB, 13), 4, SEQ, 71);
+        let mut tl = TrainLoop::new(cfg, loader);
+        let stats = tl.run(steps);
+        let first: f64 = stats[..10]
+            .iter()
+            .map(|s| s.loss)
+            .sum::<f64>() / 10.0;
+        let last: f64 = stats[steps - 10..]
+            .iter()
+            .map(|s| s.loss)
+            .sum::<f64>() / 10.0;
+        (first, last)
+    };
+    let (q_first, q_last) = run(false);
+    let (e_first, e_last) = run(true);
+    assert!(q_last < q_first - 0.3,
+            "quantized run failed to converge: {q_first} -> \
+             {q_last}");
+    assert!(e_last < e_first - 0.3,
+            "exact run failed to converge: {e_first} -> {e_last}");
+    assert!((q_last - e_last).abs() < 0.75,
+            "quantized final loss {q_last} strayed from exact \
+             {e_last}");
+}

@@ -1,45 +1,97 @@
-//! Fig 5(a): gradient cosine when X / W / ∇Y are quantized to various
-//! bit-widths individually — showing X dominates the gradient error
-//! (with SR on ∇Y), which motivates fallback on X only.
+//! Fig 5(a): gradient fidelity per precision-lattice rung — the
+//! GEMM sites of one GLU transformer layer run through the *real*
+//! engine data paths (`SimF32` / `Int8` / `Int4`, with and without
+//! block-level fallback) instead of simulated bit-widths, with SR on
+//! ∇Y throughout (§5.1). The paper shape this reproduces: plain INT4
+//! visibly hurts the gradient, the staged Int4→Int8→f32 ladder on
+//! the outlier blocks recovers it, and INT8 (± binary fallback)
+//! stays near-exact.
 
 #[path = "common.rs"]
 mod common;
 
-use dbfq::coordinator::QScalars;
+use dbfq::gemm::{grad_sr_seed, kernels, matmul, site_reference,
+                 synth_microbatch, DataPath, GRAD_SR_SEED};
+use dbfq::model::layer_linears;
+use dbfq::quant::Rounding;
 use dbfq::util::bench::Table;
+use dbfq::util::rng::Pcg64;
+use dbfq::util::Mat;
+
+const BLOCK: usize = 16;
+const THREADS: usize = 2;
+const TOKENS: usize = 64;
 
 fn main() {
-    common::banner("Fig 5a — per-tensor bit-width grad CosSim",
-                   "Fig 5(a), §5.1: X's quantization error dominates \
-                    when ∇Y uses stochastic rounding");
-    let rt = common::runtime();
-    let probe = common::Probe::new(&rt, "probe", 5);
-    let gref = probe.reference_grads();
+    common::banner(
+        "Fig 5a — gradient CosSim per lattice rung",
+        "Fig 5(a), §5.1: activation outliers dominate the gradient \
+         error at low bits; dynamic block-level fallback recovers it");
+    let kn = kernels::select();
+    let sites = layer_linears(32, 64, true, TOKENS);
+    // outlier-bearing activations/gradients (the GLU gate site is
+    // where the paper's extreme outliers live)
+    let (acts, grads) = synth_microbatch(&sites, 5, 200.0);
+    let weights: Vec<Mat> = sites
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            let mut rng = Pcg64::new(0xF16_5A ^ (i as u64) << 11);
+            Mat::randn(l.k, l.n, 0.05, &mut rng)
+        })
+        .collect();
+    // exact dense references, concatenated across sites
+    let mut dw_ref = Vec::new();
+    let mut dx_ref = Vec::new();
+    for (i, _) in sites.iter().enumerate() {
+        dw_ref.extend_from_slice(
+            &matmul(&acts[i].transpose(), &grads[i], THREADS).data);
+        dx_ref.extend_from_slice(
+            &matmul(&grads[i], &weights[i].transpose(), THREADS)
+                .data);
+    }
 
-    let mut t = Table::new(&["tensor", "bits", "CosSim"]);
-    for bits in [4u32, 6, 8] {
-        for (name, which) in [("X", 0usize), ("W", 1), ("dY", 2)] {
-            let mut qs = QScalars::lossless();
-            qs.sr_dy = 1.0; // paper default: SR on gradients
-            let lv = (1u32 << (bits - 1)) as f32 - 1.0;
-            match which {
-                0 => qs.levels_x = lv,
-                1 => qs.levels_w = lv,
-                _ => qs.levels_dy = lv,
-            }
-            let (_, g, _) = probe.grads(&qs, f32::INFINITY, 1);
-            t.row(&[
-                name.into(),
-                bits.to_string(),
-                format!("{:.5}", common::cos(&g, &gref)),
-            ]);
+    // θ = ∞ pins every block on the rung's base precision; θ = 8
+    // promotes the planted outlier blocks (binary fallback on the
+    // i8 rungs, the staged I8/f32 tiers on Int4 — the outliers
+    // exceed θ·κ and land on the exact-f32 tier).
+    let cases: [(DataPath, f32, &str); 5] = [
+        (DataPath::SimF32, f32::INFINITY, "sim_f32"),
+        (DataPath::Int8, f32::INFINITY, "int8, no fallback"),
+        (DataPath::Int8, 8.0, "int8 + fallback"),
+        (DataPath::Int4, f32::INFINITY, "int4, no ladder"),
+        (DataPath::Int4, 8.0, "int4 + staged ladder"),
+    ];
+    let mut t = Table::new(&["data path", "θ (X)", "CosSim dW",
+                             "CosSim dX"]);
+    for (path, theta, label) in cases {
+        let mut dw = Vec::new();
+        let mut dx = Vec::new();
+        for (i, l) in sites.iter().enumerate() {
+            let sr = Rounding::Stochastic(
+                grad_sr_seed(GRAD_SR_SEED, 0, i));
+            let out = site_reference(l, &weights[i], &acts[i],
+                                     &grads[i], theta, sr, BLOCK,
+                                     THREADS, path, kn);
+            dw.extend_from_slice(&out.dw.data);
+            dx.extend_from_slice(&out.dx.data);
         }
+        t.row(&[
+            label.into(),
+            if theta.is_infinite() { "∞".into() }
+            else { format!("{theta}") },
+            format!("{:.5}", common::cos(&dw, &dw_ref)),
+            format!("{:.5}", common::cos(&dx, &dx_ref)),
+        ]);
     }
     t.print();
-    println!("\npaper shape: with SR on ∇Y, X's (or, here, the \
-              outlier-carrying tensor's) deterministic quantization \
-              error dominates at low bits while SR keeps ∇Y unbiased. \
-              NOTE: this testbed injects outliers via weight rows (no \
-              trillion-token training run), so W shares X's burden; in \
-              the paper the outliers live in activations only.");
+    println!("\npaper shape: with SR on ∇Y everywhere, the int4 rung \
+              without fallback loses the most gradient fidelity (the \
+              outlier blocks smear whole quantization groups), the \
+              staged ladder recovers nearly all of it by promoting \
+              only the hot blocks, and both int8 rows stay \
+              near-exact — the block-level-fallback motivation of \
+              Fig 5(a) on real engine data paths. dX rides plain \
+              base quantization of dY per §5.1 (SR, no fallback), so \
+              its column moves with the rung's bit-width alone.");
 }

@@ -39,7 +39,7 @@ use dbfq::costmodel::{rtx4090, SubstrateCalibration};
 use dbfq::gemm::{grad_sr_seed, kernels, layer_sr_seed,
                  site_reference, synth_microbatch, Kernels,
                  LayerStep, ModelStep, ModelStepConfig, SiteOutputs};
-use dbfq::model::{model_linears, LinearShape};
+use dbfq::model::{model_linears, sites_per_layer, LinearShape};
 use dbfq::quant::{fallback_quant, quant_work_counters,
                   theta_for_rate, Criterion, Rounding, INT8_LEVELS};
 use dbfq::util::bench::Table;
@@ -360,11 +360,12 @@ fn main() {
             "lm_head".into()
         }
     };
+    let spl = sites_per_layer(cfg.glu);
     let group_sites = |l: usize| {
         if l < layers {
-            4 * l..4 * l + 4
+            spl * l..spl * (l + 1)
         } else {
-            4 * layers..n_sites
+            spl * layers..n_sites
         }
     };
     let mut per_layer = Vec::new();

@@ -1,7 +1,7 @@
 //! End-to-end training loop: optimizer + data loader + loss over the
 //! quantized substrate, at CPU toy scale.
 //!
-//! Three phases:
+//! Four phases:
 //!
 //! * `pretrain` — Fig-7b-style trend: the same synthetic-corpus run
 //!   on the quantized engine (`Int8` + dynamic fallback) and on the
@@ -16,6 +16,11 @@
 //! * `checkpoint` — save at the midpoint, restore through JSON text,
 //!   run the remainder, and record whether the resumed loss curve is
 //!   bit-identical to the uninterrupted one.
+//! * `glu` — the SwiGLU surrogate (5 quantized sites per layer) on
+//!   the live data path (`PALLAS_PATH` selects the lattice rung)
+//!   with outlier telemetry on: loss curve, per-tier fallback
+//!   rates, and the summed per-block activation-magnitude
+//!   histogram.
 //!
 //! Emits `BENCH_train_loop.json` (schema in `docs/BENCHMARKS.md`).
 //! Set `BENCH_SMOKE=1` for a seconds-long CI smoke run;
@@ -217,6 +222,47 @@ fn main() {
         state_text.len()
     );
 
+    // -- GLU surrogate + lattice telemetry ----------------------------
+    // The SwiGLU model (5 quantized sites per layer) on the live
+    // data path with outlier telemetry on: per-tier fallback rates
+    // and the per-block activation-magnitude histogram, summed over
+    // the run.
+    let glu_steps = if smoke { 10 } else { 40 };
+    let mut glu_cfg = base_cfg(glu_steps, false);
+    glu_cfg.glu = true;
+    glu_cfg.telemetry = true;
+    let mut glu_tl = TrainLoop::new(
+        glu_cfg, Loader::pretrain(corpus.clone(), 4, SEQ, 171));
+    let glu_stats = glu_tl.run(glu_steps);
+    let glu_losses: Vec<f64> =
+        glu_stats.iter().map(|s| s.loss).collect();
+    let glu_rate = glu_stats.iter()
+        .map(|s| s.fallback_rate)
+        .sum::<f64>() / glu_steps as f64;
+    let glu_rate_f32 = glu_stats.iter()
+        .map(|s| s.fallback_rate_f32)
+        .sum::<f64>() / glu_steps as f64;
+    let mut glu_hist: Vec<u64> = Vec::new();
+    for s in &glu_stats {
+        if let Some(h) = &s.outlier_hist {
+            if glu_hist.is_empty() {
+                glu_hist = vec![0; h.len()];
+            }
+            for (a, &v) in glu_hist.iter_mut().zip(h) {
+                *a += v;
+            }
+        }
+    }
+    let (glu_first, glu_last) =
+        (head(&glu_losses), tail(&glu_losses));
+    println!(
+        "glu pretrain ({} path): train {glu_first:.3} -> \
+         {glu_last:.3}, tier rates i8+={glu_rate:.3} \
+         f32={glu_rate_f32:.3}, {} histogram counts",
+        glu_tl.config().path.tag(),
+        glu_hist.iter().sum::<u64>()
+    );
+
     // -- report -------------------------------------------------------
     let report = obj(vec![
         ("bench", Json::Str("train_loop".into())),
@@ -230,6 +276,7 @@ fn main() {
             ("seq", Json::Num(cfg.seq as f64)),
             ("block", Json::Num(cfg.block as f64)),
             ("threads", Json::Num(cfg.threads as f64)),
+            ("path", Json::Str(cfg.path.tag().into())),
             ("accum", Json::Num(cfg.accum as f64)),
             ("steps", Json::Num(steps as f64)),
             ("optimizer",
@@ -280,6 +327,27 @@ fn main() {
             ("state_bytes", Json::Num(state_text.len() as f64)),
             ("bit_identical", Json::Bool(ck_identical)),
         ])),
+        ("glu", obj(vec![
+            ("steps", Json::Num(glu_steps as f64)),
+            ("path",
+             Json::Str(glu_tl.config().path.tag().into())),
+            ("loss", arr_f64(&glu_losses)),
+            ("train_first", Json::Num(glu_first)),
+            ("train_last", Json::Num(glu_last)),
+            // per-tier executed promotion rates: the binary
+            // fallback rate on Int8/SimF32, tier >= Int8 and the
+            // f32 remainder on the Int4 lattice
+            ("tier_rates", obj(vec![
+                ("i8_or_fallback", Json::Num(glu_rate)),
+                ("f32", Json::Num(glu_rate_f32)),
+            ])),
+            // per-block AbsMax histogram, f32-exponent bins
+            // (bin b = exponent b - 8), summed over the run
+            ("outlier_histogram", Json::Arr(
+                glu_hist.iter()
+                    .map(|&v| Json::Num(v as f64))
+                    .collect())),
+        ])),
         ("criteria", obj(vec![
             // Both engines must actually learn…
             ("quantized_train_delta",
@@ -292,6 +360,8 @@ fn main() {
              Json::Num(qf_before - qf_after)),
             ("finetune_span_delta_exact",
              Json::Num(ef_before - ef_after)),
+            ("glu_train_delta",
+             Json::Num(glu_first - glu_last)),
             ("checkpoint_bit_identical",
              Json::Bool(ck_identical)),
         ])),

@@ -35,6 +35,14 @@
 //!   codes, zero-copy), i8 column-panel B, and `panel_dot*_i8`
 //!   kernels accumulating in **i32**, widened to f32 once per K-block
 //!   before the shared per-block scale-FMA.
+//! * `Int4` — the precision lattice's bottom rung: i8-stored A codes
+//!   in [-7, 7], **nibble-packed** B column panels, `dot*_i4`
+//!   kernels. Never auto-selected. [`GemmPlan::new_staged`] runs the
+//!   per-block Int4→Int8→f32 ladder on this path: every block's INT4
+//!   base, plus an i8 residual through the same nibble panels where
+//!   the threshold promotes, plus an exact f32 remainder against B's
+//!   f32 code panels where it promotes again — exact within
+//!   [`I4_EXACT_MAX_BS`] (the i8-residual × i4-panel bound).
 //!
 //! Both paths are **bit-identical** to each other and to the
 //! `*_baseline` oracles whenever `bs ≤ `[`I8_EXACT_MAX_BS`]: every
@@ -150,10 +158,12 @@
 //! `tests/shard_prop.rs`).
 
 use std::cell::RefCell;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
-use crate::gemm::kernels::{self, panel_dot, panel_dot2, DotI8, Kernels};
-use crate::quant::{BlockQuant, FallbackQuant, PanelPack, PanelPackI8};
+use crate::gemm::kernels::{self, panel_dot, panel_dot2, DotI4, DotI8,
+                           Kernels};
+use crate::quant::{BlockQuant, FallbackQuant, PanelPack, PanelPackI4,
+                   PanelPackI8, StagedQuant};
 use crate::util::pool::{self, ScopeJob};
 use crate::util::threadpool::weighted_buckets;
 use crate::util::Mat;
@@ -181,6 +191,12 @@ pub enum DataPath {
     SimF32,
     /// i8 operands, i8×i8→i32 kernels, one exact widening per K-block
     Int8,
+    /// the precision lattice's lowest rung: nibble-packed i4 B
+    /// panels, i8-stored A codes in [-7, 7], `dot*_i4` kernels. Never
+    /// auto-selected — opt in per plan, per config, or via
+    /// `PALLAS_PATH=int4`. Staged per-block Int4→Int8→f32 fallback
+    /// rides this path through [`GemmPlan::new_staged`].
+    Int4,
 }
 
 /// Largest quantization block size for which the i8 path is bit-exact
@@ -189,9 +205,21 @@ pub enum DataPath {
 /// `floor(2²⁴ / 127²) = 1040` — all paper block sizes (32–256) qualify.
 pub const I8_EXACT_MAX_BS: usize = (1 << 24) / (127 * 127);
 
+/// Largest block size for which the Int4 path is bit-exact. The
+/// binding bound comes from the **staged** ladder, whose INT8-tier
+/// residual streams i8 codes (≤ 127) against the i4 panels (≤ 7):
+/// every partial sum is ≤ `bs · 127 · 7`, which must stay within
+/// f32's exact-integer range 2²⁴ → `floor(2²⁴ / 889) = 18872`. A pure
+/// i4×i4 GEMM is exact even further (`2²⁴ / 49`), so one bound covers
+/// both uses. Far above every paper block size — the i8 bound
+/// [`I8_EXACT_MAX_BS`] is always the tighter constraint when both
+/// paths run in one model.
+pub const I4_EXACT_MAX_BS: usize = (1 << 24) / (127 * 7);
+
 impl DataPath {
     /// Default path for a block size: true i8 inside the exactness
-    /// bound, the f32 simulation beyond it.
+    /// bound, the f32 simulation beyond it. `Int4` is never chosen
+    /// automatically — the lattice's bottom rung is opt-in.
     pub fn auto_for(bs: usize) -> DataPath {
         if bs <= I8_EXACT_MAX_BS {
             DataPath::Int8
@@ -205,6 +233,7 @@ impl DataPath {
         match self {
             DataPath::SimF32 => "sim_f32",
             DataPath::Int8 => "int8",
+            DataPath::Int4 => "int4",
         }
     }
 
@@ -213,9 +242,50 @@ impl DataPath {
         match s {
             "sim_f32" => Some(DataPath::SimF32),
             "int8" => Some(DataPath::Int8),
+            "int4" => Some(DataPath::Int4),
             _ => None,
         }
     }
+}
+
+/// Parse a `PALLAS_PATH`-style override. Unset or empty means "no
+/// override"; anything else must be a valid [`DataPath::tag`] —
+/// mistyping a data path silently falling back to the default would
+/// invalidate whole benchmark runs, so an unknown tag is a hard error
+/// (same contract as `PALLAS_KERNEL`).
+pub fn parse_path_override(val: Option<&str>) -> Option<DataPath> {
+    match val {
+        None | Some("") => None,
+        Some(s) => match DataPath::from_tag(s) {
+            Some(p) => Some(p),
+            None => panic!(
+                "PALLAS_PATH={s:?} is not a data path tag \
+                 (expected sim_f32, int8, or int4)"
+            ),
+        },
+    }
+}
+
+/// The `PALLAS_PATH` env override, read once per process.
+static ENV_PATH: OnceLock<Option<DataPath>> = OnceLock::new();
+
+/// The `PALLAS_PATH` env override, if one is in force (parsed once
+/// per process; an unknown tag hard-panics via
+/// [`parse_path_override`]). Config constructors consult this so one
+/// env var re-paths every plan a test binary builds.
+pub fn env_path() -> Option<DataPath> {
+    *ENV_PATH.get_or_init(|| {
+        parse_path_override(std::env::var("PALLAS_PATH").ok().as_deref())
+    })
+}
+
+/// The data path pipeline/train configs start from: the `PALLAS_PATH`
+/// env override if set, else [`DataPath::Int8`]. Explicit config
+/// fields and builder calls still win — this only seeds defaults, so
+/// the CI matrix can flip a whole test binary onto the Int4 rung with
+/// one env var.
+pub fn default_path() -> DataPath {
+    env_path().unwrap_or(DataPath::Int8)
 }
 
 /// Residual operand of a SimF32 fallback plan.
@@ -231,6 +301,27 @@ struct ResidI8<'a> {
     rq: &'a [i8],
     r_scale: &'a [f32],
     u: &'a [bool],
+}
+
+/// Staged residual operands of an Int4 lattice plan (borrowed from a
+/// [`StagedQuant`]): the INT8-tier residual codes stream through the
+/// *same* `dot*_i4` kernels against the same nibble panels (their
+/// products stay ≤ 127·7, inside the bound), and the f32-tier raw
+/// remainder runs `panel_dot*` against B's f32 code panels — weighted
+/// by `sb` alone, since the remainder is already in input units.
+struct ResidStaged<'a> {
+    rq: &'a [i8],
+    r_scale: &'a [f32],
+    /// blocks at INT8 tier or above (promote past θ)
+    u8m: &'a [bool],
+    /// exact f32 remainder `x − deq4 − rq·rs` (padded A layout)
+    r2: &'a [f32],
+    /// blocks at the f32 tier (promote past κ·θ)
+    uf: &'a [bool],
+    /// B's f32 code panels for the f32 tier; `None` when no block is
+    /// promoted that far (keeps the 4x-bigger cache unbuilt — the
+    /// common case)
+    bpf: Option<Arc<PanelPack>>,
 }
 
 /// Mode-specific packed operands.
@@ -256,6 +347,17 @@ enum Kernel<'a> {
         bp: Arc<PanelPackI8>,
         b_scale: &'a [f32],
         resid: Option<ResidI8<'a>>,
+    },
+    /// Int4 data path: i8-stored A codes in [-7, 7], nibble-packed B
+    /// panels, `dot*_i4` kernels. With `resid`, the staged
+    /// Int4→Int8→f32 ladder of `quant::staged`.
+    I4 {
+        qa: &'a [i8],
+        a_pcols: usize,
+        a_scale: &'a [f32],
+        bp: Arc<PanelPackI4>,
+        b_scale: &'a [f32],
+        resid: Option<ResidStaged<'a>>,
     },
 }
 
@@ -483,6 +585,19 @@ impl<'a> GemmPlan<'a> {
                 b_scale: &b.scale,
                 resid: None,
             },
+            // Both operands must carry codes in [-7, 7] (quantize at
+            // INT4_LEVELS) — the engine streams the stored i8 A codes
+            // as-is and cannot verify the range; out-of-range codes
+            // only trip the debug overflow guard once a block dot
+            // leaves the exact range.
+            DataPath::Int4 => Kernel::I4 {
+                qa: &a.q,
+                a_pcols: a.pcols,
+                a_scale: &a.scale,
+                bp: b.col_panels_i4(),
+                b_scale: &b.scale,
+                resid: None,
+            },
         };
         GemmPlan {
             mode: Precision::Int8Block,
@@ -566,10 +681,94 @@ impl<'a> GemmPlan<'a> {
                     u,
                 }),
             },
+            DataPath::Int4 => panic!(
+                "fallback on the Int4 path is the staged ladder: \
+                 quantize with quant::staged_quant and plan with \
+                 GemmPlan::new_staged / WeightPlan::plan_staged"
+            ),
         };
         GemmPlan {
             mode: Precision::Fallback,
             path,
+            eff_threads,
+            m: a.rows,
+            n: b.cols,
+            k: a.cols,
+            sched_rows: sched,
+            bs: a.block,
+            kb,
+            nbk,
+            weights,
+            buckets,
+            shards: 1,
+            shard_scheds: Vec::new(),
+            kernel,
+            kernels: kernels::select(),
+        }
+        .with_shards(pool::default_shards())
+    }
+
+    /// Plan a staged Int4→Int8→f32 lattice GEMM (Algorithm 1
+    /// generalized to three rungs): every block streams its INT4 base
+    /// codes; blocks the Algorithm-2 threshold promoted to the INT8
+    /// tier add their i8 residual through the *same* nibble panels;
+    /// blocks past `κ·θ` additionally add their exact f32 remainder
+    /// against B's f32 code panels. All three terms are deterministic
+    /// across backends, thread counts, and shards: the two integer
+    /// dots are exact within [`I4_EXACT_MAX_BS`], and the f32 term
+    /// runs the v2 FMA-contract `panel_dot*` kernels.
+    ///
+    /// The B operand must carry codes in [-7, 7] (quantized at
+    /// `INT4_LEVELS`); the staged A side guarantees its own ranges by
+    /// construction.
+    pub fn new_staged(sa: &'a StagedQuant, b: &'a BlockQuant,
+                      threads: usize) -> GemmPlan<'a> {
+        let a = &sa.base;
+        assert_eq!(a.cols, b.rows, "inner dims");
+        assert_eq!(a.block, b.block, "block size");
+        let (kb, nbk) = (a.cb(), b.cb());
+        let sched = sched_rows_for(a.block);
+        // Lattice-aware weights: each promotion tier adds one more
+        // block-dot pass over that K-step for every row of its block
+        // row, so an F32-tier block costs ~3x an I4-tier one.
+        let weights: Vec<f64> = (0..a.rows.div_ceil(sched))
+            .map(|ci| {
+                let rows = sched.min(a.rows - ci * sched);
+                let bi = ci * sched / a.block;
+                let fb: usize = (bi * kb..(bi + 1) * kb)
+                    .map(|i| {
+                        sa.u8_mask[i] as usize + sa.uf_mask[i] as usize
+                    })
+                    .sum();
+                (rows * (kb + fb)) as f64
+            })
+            .collect();
+        let (eff_threads, buckets) = schedule(&weights, threads);
+        // Only build B's 4x-bigger f32 panel cache when some block
+        // actually reached the f32 tier this microstep.
+        let bpf = if sa.uf_mask.iter().any(|&u| u) {
+            Some(b.col_panels())
+        } else {
+            None
+        };
+        let kernel = Kernel::I4 {
+            qa: &a.q,
+            a_pcols: a.pcols,
+            a_scale: &a.scale,
+            bp: b.col_panels_i4(),
+            b_scale: &b.scale,
+            resid: Some(ResidStaged {
+                rq: &sa.rq,
+                r_scale: &sa.rscale,
+                u8m: &sa.u8_mask,
+                r2: &sa.r2,
+                uf: &sa.uf_mask,
+                bpf,
+            }),
+        };
+        GemmPlan {
+            mode: Precision::Fallback,
+            path: DataPath::Int4,
             eff_threads,
             m: a.rows,
             n: b.cols,
@@ -859,6 +1058,12 @@ impl<'a> GemmPlan<'a> {
                     *a_pcols, a_scale, bp, b_scale, resid.as_ref(),
                 );
             }
+            Kernel::I4 { qa, a_pcols, a_scale, bp, b_scale, resid } => {
+                self.run_panel_i4_shard(
+                    bi, r_lo, bj_lo, bj_hi, segs, rows, acc, acci, qa,
+                    *a_pcols, a_scale, bp, b_scale, resid.as_ref(),
+                );
+            }
         }
     }
 
@@ -1017,6 +1222,88 @@ impl<'a> GemmPlan<'a> {
         }
     }
 
+    /// [`run_panel_i4`](Self::run_panel_i4) restricted to panels
+    /// `bj_lo..bj_hi`, writing through per-row shard segments. Same
+    /// fixed term order (base / i8 residual / f32 remainder) per
+    /// element — bit-identical to the flat path.
+    #[allow(clippy::too_many_arguments)]
+    fn run_panel_i4_shard(
+        &self, bi: usize, r_lo: usize, bj_lo: usize, bj_hi: usize,
+        segs: &mut [&mut [f32]], rows: usize, acc: &mut [f32],
+        acci: &mut [i32], qa: &[i8], a_pcols: usize, a_scale: &[f32],
+        bp: &PanelPackI4, b_scale: &[f32],
+        resid: Option<&ResidStaged<'_>>,
+    ) {
+        let bs = self.bs;
+        let kn = self.kernels;
+        for bj in bj_lo..bj_hi {
+            let width = bp.widths[bj];
+            let c_lo = (bj - bj_lo) * bs;
+            let panel = bp.panel(bj);
+            let fpanel = resid
+                .and_then(|r| r.bpf.as_deref())
+                .map(|p| p.panel(bj));
+            let mut rl = 0usize;
+            while rl < rows {
+                let left = rows - rl;
+                let (tile, dot): (usize, DotI4) = if left >= 4 {
+                    (4, kn.dot4_i4)
+                } else if left >= 2 {
+                    (2, kn.dot2_i4)
+                } else {
+                    (1, kn.dot_i4)
+                };
+                for bk in 0..self.kb {
+                    let sa = a_scale[bi * self.kb + bk];
+                    let sb = b_scale[bk * self.nbk + bj];
+                    dot(
+                        qa, a_pcols, r_lo + rl, bk * bs, bs, panel,
+                        width, acci, acc,
+                    );
+                    let w = sa * sb;
+                    for t in 0..tile {
+                        let crow =
+                            &mut segs[rl + t][c_lo..][..width];
+                        scale_add(crow, &acc[t * bs..], width, w);
+                    }
+                    if let Some(res) = resid {
+                        if res.u8m[bi * self.kb + bk] {
+                            let rs = res.r_scale[bi * self.kb + bk];
+                            dot(
+                                res.rq, a_pcols, r_lo + rl, bk * bs,
+                                bs, panel, width, acci, acc,
+                            );
+                            let rw = rs * sb;
+                            for t in 0..tile {
+                                let crow = &mut segs[rl + t][c_lo..]
+                                    [..width];
+                                scale_add(crow, &acc[t * bs..], width,
+                                          rw);
+                            }
+                        }
+                        if res.uf[bi * self.kb + bk] {
+                            let fp = fpanel.expect(
+                                "f32 panels packed when any block \
+                                 reaches the f32 tier",
+                            );
+                            for t in 0..tile {
+                                panel_dot(
+                                    res.r2, a_pcols, r_lo + rl + t,
+                                    bk * bs, bs, fp, width,
+                                    &mut acc[..bs],
+                                );
+                                let crow = &mut segs[rl + t][c_lo..]
+                                    [..width];
+                                scale_add(crow, &acc[..bs], width, sb);
+                            }
+                        }
+                    }
+                }
+                rl += tile;
+            }
+        }
+    }
+
     /// f32 workspace length: four accumulator rows — the i8 backends
     /// tile up to four A rows (row `t` at offset `t·bs`), the SimF32
     /// kernels use the first two, the dense kernel accumulates into C
@@ -1028,12 +1315,12 @@ impl<'a> GemmPlan<'a> {
         }
     }
 
-    /// i32 workspace length: the i8 path additionally carries four
-    /// integer accumulator rows (widened into the f32 rows once per
-    /// K-block).
+    /// i32 workspace length: the integer paths additionally carry
+    /// four integer accumulator rows (widened into the f32 rows once
+    /// per K-block).
     fn acci_len(&self) -> usize {
         match &self.kernel {
-            Kernel::I8 { .. } => 4 * self.bs,
+            Kernel::I8 { .. } | Kernel::I4 { .. } => 4 * self.bs,
             _ => 0,
         }
     }
@@ -1084,6 +1371,14 @@ impl<'a> GemmPlan<'a> {
                 let r_lo = ci * self.sched_rows;
                 let bi = r_lo / self.bs;
                 self.run_panel_i8(
+                    bi, r_lo, crows, rows, acc, acci, qa, *a_pcols,
+                    a_scale, bp, b_scale, resid.as_ref(),
+                );
+            }
+            Kernel::I4 { qa, a_pcols, a_scale, bp, b_scale, resid } => {
+                let r_lo = ci * self.sched_rows;
+                let bi = r_lo / self.bs;
+                self.run_panel_i4(
                     bi, r_lo, crows, rows, acc, acci, qa, *a_pcols,
                     a_scale, bp, b_scale, resid.as_ref(),
                 );
@@ -1236,6 +1531,97 @@ impl<'a> GemmPlan<'a> {
             }
         }
     }
+
+    /// Int4-path twin of [`run_panel_i8`](Self::run_panel_i8) running
+    /// the staged lattice. Term order per C element and K-block is
+    /// fixed — INT4 base dot, then (where `u8m` promotes) the INT8
+    /// residual through the *same* `dot*_i4` kernels and nibble
+    /// panels, then (where `uf` promotes) the exact f32 remainder via
+    /// the v2-contract `panel_dot` against B's f32 code panels,
+    /// weighted by `sb` alone. The two integer dots are exact for
+    /// `bs ≤ I4_EXACT_MAX_BS` and the f32 term's op order is
+    /// backend-invariant, so outputs are bit-identical across
+    /// backends, tilings, thread counts, and shards.
+    #[allow(clippy::too_many_arguments)]
+    fn run_panel_i4(
+        &self, bi: usize, r_lo: usize, crows: &mut [f32], rows: usize,
+        acc: &mut [f32], acci: &mut [i32], qa: &[i8], a_pcols: usize,
+        a_scale: &[f32], bp: &PanelPackI4, b_scale: &[f32],
+        resid: Option<&ResidStaged<'_>>,
+    ) {
+        let bs = self.bs;
+        let kn = self.kernels;
+        for bj in 0..self.nbk {
+            let width = bp.widths[bj];
+            let c_lo = bj * bs;
+            let panel = bp.panel(bj);
+            let fpanel = resid
+                .and_then(|r| r.bpf.as_deref())
+                .map(|p| p.panel(bj));
+            let mut rl = 0usize;
+            while rl < rows {
+                let left = rows - rl;
+                let (tile, dot): (usize, DotI4) = if left >= 4 {
+                    (4, kn.dot4_i4)
+                } else if left >= 2 {
+                    (2, kn.dot2_i4)
+                } else {
+                    (1, kn.dot_i4)
+                };
+                for bk in 0..self.kb {
+                    let sa = a_scale[bi * self.kb + bk];
+                    let sb = b_scale[bk * self.nbk + bj];
+                    dot(
+                        qa, a_pcols, r_lo + rl, bk * bs, bs, panel,
+                        width, acci, acc,
+                    );
+                    let w = sa * sb;
+                    for t in 0..tile {
+                        let crow = &mut crows[(rl + t) * self.n + c_lo
+                                              ..][..width];
+                        scale_add(crow, &acc[t * bs..], width, w);
+                    }
+                    if let Some(res) = resid {
+                        // staged ladder: residual work really skipped
+                        // for blocks that stayed at the INT4 tier
+                        if res.u8m[bi * self.kb + bk] {
+                            let rs = res.r_scale[bi * self.kb + bk];
+                            dot(
+                                res.rq, a_pcols, r_lo + rl, bk * bs,
+                                bs, panel, width, acci, acc,
+                            );
+                            let rw = rs * sb;
+                            for t in 0..tile {
+                                let crow =
+                                    &mut crows[(rl + t) * self.n + c_lo
+                                               ..][..width];
+                                scale_add(crow, &acc[t * bs..], width,
+                                          rw);
+                            }
+                        }
+                        if res.uf[bi * self.kb + bk] {
+                            let fp = fpanel.expect(
+                                "f32 panels packed when any block \
+                                 reaches the f32 tier",
+                            );
+                            for t in 0..tile {
+                                panel_dot(
+                                    res.r2, a_pcols, r_lo + rl + t,
+                                    bk * bs, bs, fp, width,
+                                    &mut acc[..bs],
+                                );
+                                let crow =
+                                    &mut crows[(rl + t) * self.n + c_lo
+                                               ..][..width];
+                                scale_add(crow, &acc[..bs], width, sb);
+                            }
+                        }
+                    }
+                }
+                rl += tile;
+            }
+        }
+    }
 }
 
 /// The cacheable **weight half** of a GEMM plan: the B operand's
@@ -1281,6 +1667,13 @@ impl WeightPlan {
             }
             DataPath::Int8 => {
                 qb.col_panels_i8();
+            }
+            // Only the nibble panels are packed eagerly; the f32
+            // panels the staged ladder's f32 tier reads are built
+            // lazily by the first plan whose mask actually promotes a
+            // block that far (see GemmPlan::new_staged).
+            DataPath::Int4 => {
+                qb.col_panels_i4();
             }
         }
         WeightPlan {
@@ -1342,6 +1735,10 @@ impl WeightPlan {
         let panels = match self.path {
             DataPath::SimF32 => self.qb.col_panels().bytes(),
             DataPath::Int8 => self.qb.col_panels_i8().bytes(),
+            // eager footprint only — a lazily built f32-tier panel
+            // cache is not counted (it exists only after a microstep
+            // promoted a block to the f32 tier)
+            DataPath::Int4 => self.qb.col_panels_i4().bytes(),
         };
         self.qb.bytes() + panels
     }
@@ -1366,6 +1763,16 @@ impl WeightPlan {
             .with_kernels(self.kernels)
             .with_shards(self.shards)
     }
+
+    /// Plan a staged Int4→Int8→f32 lattice GEMM against the cached
+    /// weight half (which must have been built for
+    /// [`DataPath::Int4`], so the nibble panels are already packed).
+    pub fn plan_staged<'p>(&'p self, sa: &'p StagedQuant,
+                           threads: usize) -> GemmPlan<'p> {
+        GemmPlan::new_staged(sa, self.qb.as_ref(), threads)
+            .with_kernels(self.kernels)
+            .with_shards(self.shards)
+    }
 }
 
 /// `crow[j] += acc[j] * w` — the per-K-block scale-FMA of Eq. 1.
@@ -1380,8 +1787,8 @@ fn scale_add(crow: &mut [f32], acc: &[f32], width: usize, w: f32) {
 mod tests {
     use super::*;
     use crate::gemm::int8::{remap_placement, Placement};
-    use crate::quant::{block_quant, fallback_quant, Criterion, Rounding,
-                       INT8_LEVELS};
+    use crate::quant::{block_quant, fallback_quant, staged_quant,
+                       Criterion, Rounding, INT4_LEVELS, INT8_LEVELS};
     use crate::util::rng::Pcg64;
 
     fn mats(m: usize, k: usize, n: usize, seed: u64) -> (Mat, Mat) {
@@ -1776,11 +2183,219 @@ mod tests {
 
     #[test]
     fn data_path_tags_roundtrip() {
-        for p in [DataPath::SimF32, DataPath::Int8] {
+        for p in [DataPath::SimF32, DataPath::Int8, DataPath::Int4] {
             assert_eq!(DataPath::from_tag(p.tag()), Some(p));
         }
         assert_eq!(DataPath::from_tag("Int8"), None, "tags are stable \
                    lowercase names, not Debug output");
+    }
+
+    #[test]
+    fn path_override_parses_or_is_absent() {
+        assert_eq!(parse_path_override(None), None);
+        assert_eq!(parse_path_override(Some("")), None);
+        assert_eq!(parse_path_override(Some("sim_f32")),
+                   Some(DataPath::SimF32));
+        assert_eq!(parse_path_override(Some("int8")),
+                   Some(DataPath::Int8));
+        assert_eq!(parse_path_override(Some("int4")),
+                   Some(DataPath::Int4));
+    }
+
+    #[test]
+    #[should_panic(expected = "not a data path tag")]
+    fn path_override_rejects_unknown_tag() {
+        parse_path_override(Some("fp4"));
+    }
+
+    #[test]
+    fn int4_path_agrees_with_simf32_and_reference() {
+        // Both operands quantized at INT4_LEVELS: the nibble path,
+        // the f32 simulation of the same codes, and the exact i64
+        // reference must agree bitwise, for every thread count.
+        let (a, b) = mats(48, 33, 40, 201);
+        let qa = block_quant(&a, 16, INT4_LEVELS, Rounding::Nearest);
+        let qb = block_quant(&b, 16, INT4_LEVELS, Rounding::Nearest);
+        let c_ref = crate::gemm::int4::int4_gemm_reference(&qa, &qb);
+        let c_sim =
+            GemmPlan::new_int8_path(&qa, &qb, 2, DataPath::SimF32)
+                .execute();
+        assert_eq!(c_sim.data, c_ref.data);
+        for threads in [1usize, 2, 4] {
+            let plan = GemmPlan::new_int8_path(&qa, &qb, threads,
+                                               DataPath::Int4);
+            assert_eq!(plan.data_path(), DataPath::Int4);
+            assert_eq!(plan.precision(), Precision::Int8Block);
+            assert_eq!(plan.execute().data, c_ref.data,
+                       "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn int4_path_skips_wider_caches() {
+        // Memory contract, lattice edition: an Int4 plan packs only
+        // the nibble panels — no i8 panels, no f32 codes or panels.
+        let (a, b) = mats(32, 32, 32, 203);
+        let qa = block_quant(&a, 16, INT4_LEVELS, Rounding::Nearest);
+        let qb = block_quant(&b, 16, INT4_LEVELS, Rounding::Nearest);
+        GemmPlan::new_int8_path(&qa, &qb, 2, DataPath::Int4).execute();
+        assert!(qb.i4_panels_built());
+        assert!(!qb.i8_panels_built(), "i8 panels materialized");
+        assert!(!qb.f32_panels_built(), "f32 panels materialized");
+        assert!(!qa.f32_codes_built(), "A f32 codes materialized");
+    }
+
+    /// Outlier-bearing operands for the staged tests: every tier of
+    /// the ladder must be populated at θ = 2.
+    fn staged_operands(seed: u64) -> (Mat, Mat) {
+        let mut rng = Pcg64::new(seed);
+        let mut a = Mat::randn(48, 32, 1.0, &mut rng);
+        for i in 0..10 {
+            // moderate outliers → INT8 tier
+            a.data[(i * 113 + 7) % a.data.len()] = 3.0;
+            // extreme outliers → f32 tier (past κ·θ = 8)
+            a.data[(i * 131 + 3) % a.data.len()] = 40.0;
+        }
+        let b = Mat::randn(32, 40, 1.0, &mut rng);
+        (a, b)
+    }
+
+    #[test]
+    fn staged_plan_matches_reference_across_threads_and_shards() {
+        let (a, b) = staged_operands(205);
+        let sa = staged_quant(&a, 2.0, 16);
+        assert!(sa.rate_i8() > 0.0 && sa.rate_f32() > 0.0,
+                "ladder not exercised: i8 {} f32 {}",
+                sa.rate_i8(), sa.rate_f32());
+        let qb = block_quant(&b, 16, INT4_LEVELS, Rounding::Nearest);
+        let c_ref =
+            crate::gemm::int4::staged_gemm_reference(&sa, &qb);
+        for threads in [1usize, 2, 4] {
+            for shards in [1usize, 2] {
+                let plan = GemmPlan::new_staged(&sa, &qb, threads)
+                    .with_shards(shards);
+                assert_eq!(plan.precision(), Precision::Fallback);
+                assert_eq!(plan.data_path(), DataPath::Int4);
+                assert_eq!(
+                    plan.execute().data, c_ref.data,
+                    "threads={threads} shards={shards}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn staged_backends_agree_bitwise() {
+        let (a, b) = staged_operands(207);
+        let sa = staged_quant(&a, 2.0, 16);
+        let qb = block_quant(&b, 16, INT4_LEVELS, Rounding::Nearest);
+        let c_scalar = GemmPlan::new_staged(&sa, &qb, 2)
+            .with_kernels(&crate::gemm::kernels::SCALAR)
+            .execute();
+        for &kn in &crate::gemm::kernels::available() {
+            let c = GemmPlan::new_staged(&sa, &qb, 2)
+                .with_kernels(kn)
+                .execute();
+            assert_eq!(c.data, c_scalar.data, "backend {}", kn.name);
+        }
+    }
+
+    #[test]
+    fn staged_plan_defers_f32_panels_until_promoted() {
+        // θ = ∞ keeps every block at the INT4 tier: no residual
+        // terms, no f32 panel build — and the plan is bit-identical
+        // to the pure Int4 plan over the base codes.
+        let (a, b) = staged_operands(209);
+        let sa = staged_quant(&a, f32::INFINITY, 16);
+        assert_eq!(sa.rate_i8(), 0.0);
+        let qb = block_quant(&b, 16, INT4_LEVELS, Rounding::Nearest);
+        let c = GemmPlan::new_staged(&sa, &qb, 2).execute();
+        assert!(!qb.f32_panels_built(),
+                "f32 panels built with nothing promoted");
+        let c_pure =
+            GemmPlan::new_int8_path(&sa.base, &qb, 2, DataPath::Int4)
+                .execute();
+        assert_eq!(c.data, c_pure.data);
+        // θ < 0 promotes everything to the f32 tier: the staged
+        // result reproduces the dequantized-A product exactly (base +
+        // residual + remainder telescope to x itself).
+        let sf = staged_quant(&a, -1.0, 16);
+        assert_eq!(sf.rate_f32(), 1.0);
+        let cf = GemmPlan::new_staged(&sf, &qb, 2).execute();
+        assert!(qb.f32_panels_built());
+        let cf_ref =
+            crate::gemm::int4::staged_gemm_reference(&sf, &qb);
+        assert_eq!(cf.data, cf_ref.data);
+    }
+
+    #[test]
+    fn staged_weights_reflect_tier_masks() {
+        let (a, b) = staged_operands(211);
+        let sa = staged_quant(&a, 2.0, 16);
+        let qb = block_quant(&b, 16, INT4_LEVELS, Rounding::Nearest);
+        let plan = GemmPlan::new_staged(&sa, &qb, 2);
+        let w = plan.panel_weights();
+        let flat = GemmPlan::new_int8_path(&sa.base, &qb, 2,
+                                           DataPath::Int4);
+        let promoted: usize = sa.u8_mask.iter()
+            .chain(sa.uf_mask.iter())
+            .filter(|&&x| x)
+            .count();
+        assert!(promoted > 0);
+        let total: f64 = w.iter().sum();
+        let base_total: f64 = flat.panel_weights().iter().sum();
+        assert!(total > base_total,
+                "promotion must add schedule weight");
+    }
+
+    #[test]
+    fn weight_plan_plan_staged_matches_direct() {
+        let (a, b) = staged_operands(213);
+        let sa = staged_quant(&a, 2.0, 16);
+        let qw = Arc::new(block_quant(&b, 16, INT4_LEVELS,
+                                      Rounding::Nearest));
+        let wp = WeightPlan::new(qw.clone(), DataPath::Int4);
+        assert!(qw.i4_panels_built(), "nibble panels not eager");
+        assert_eq!(wp.packed_bytes(),
+                   qw.bytes() + qw.col_panels_i4().bytes());
+        let c_wp = wp.plan_staged(&sa, 2).execute();
+        let c_direct = GemmPlan::new_staged(&sa, qw.as_ref(), 2)
+            .execute();
+        assert_eq!(c_wp.data, c_direct.data);
+        // plain Int4 derivation shares the same packed panels
+        let c_base = wp.plan_int8(&sa.base, 2).execute();
+        let c_base_direct = GemmPlan::new_int8_path(
+            &sa.base, qw.as_ref(), 2, DataPath::Int4)
+            .execute();
+        assert_eq!(c_base.data, c_base_direct.data);
+    }
+
+    #[test]
+    fn i4_exactness_bound_is_tight() {
+        // bs · 127 · 7 ≤ 2²⁴ exactly at the bound, violated past it.
+        assert_eq!(I4_EXACT_MAX_BS, (1 << 24) / 889);
+        assert!(I4_EXACT_MAX_BS * 127 * 7 <= 1 << 24);
+        assert!((I4_EXACT_MAX_BS + 1) * 127 * 7 > 1 << 24);
+        assert!(I4_EXACT_MAX_BS > I8_EXACT_MAX_BS,
+                "i4 products are smaller, so the bound is looser");
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "exceeds the f32-exact range")]
+    fn i4_overflow_guard_fires_past_exactness_bound() {
+        // The engine cannot verify code ranges: stream saturated i8 A
+        // codes (the staged residual's worst case) against saturated
+        // i4 panels one past the bound — the shared widening guard
+        // must catch the lost bits.
+        let bs = I4_EXACT_MAX_BS + 1;
+        let a = Mat::from_vec(1, bs, vec![127.0f32; bs]);
+        let b = Mat::from_vec(bs, 1, vec![7.0f32; bs]);
+        let qa = block_quant(&a, bs, INT8_LEVELS, Rounding::Nearest);
+        let qb = block_quant(&b, bs, INT4_LEVELS, Rounding::Nearest);
+        assert!(qa.q[..bs].iter().all(|&q| q == 127));
+        assert!((0..bs).all(|k| qb.q[k * qb.pcols] == 7));
+        GemmPlan::new_int8_path(&qa, &qb, 1, DataPath::Int4).execute();
     }
 
     #[test]

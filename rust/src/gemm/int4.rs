@@ -1,0 +1,146 @@
+//! Exact references for the INT4 data path and the staged
+//! Int4→Int8→f32 precision lattice.
+//!
+//! Same role as the `*_reference` oracles in [`super::int8`]: i64
+//! block dots (exact for any block size), widened to f32 once per
+//! K-block, then the engine's per-block scale-FMA order — so within
+//! [`engine::I4_EXACT_MAX_BS`](super::I4_EXACT_MAX_BS) the engine
+//! must match these **bitwise** on every backend, thread count, and
+//! shard count. The f32-tier term of the staged reference replays the
+//! v2 kernel contract (one `mul_add` per K step, ascending, over the
+//! full padded block range) so even that term is bit-identical to the
+//! `panel_dot` kernels.
+
+use crate::quant::{BlockQuant, StagedQuant};
+use crate::util::Mat;
+
+/// Exact-integer reference for an INT4 block GEMM: both operands
+/// carry codes in [-7, 7] (quantized at `INT4_LEVELS`), accumulated
+/// in i64 per K-block. Bit-identical to
+/// `GemmPlan::new_int8_path(.., DataPath::Int4)` — the engine reads
+/// the same codes through the nibble panels — and to the SimF32 path
+/// over the same operands.
+pub fn int4_gemm_reference(a: &BlockQuant, b: &BlockQuant) -> Mat {
+    let bs = a.block;
+    let (m, n) = (a.rows, b.cols);
+    let kb = a.cb();
+    let nbk = b.cb();
+    let mut c = Mat::zeros(m, n);
+    for r in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for bk in 0..kb {
+                let mut iacc = 0i64;
+                for k in bk * bs..((bk + 1) * bs).min(a.cols) {
+                    iacc += a.q[r * a.pcols + k] as i64
+                        * b.q[k * b.pcols + j] as i64;
+                }
+                acc += iacc as f32
+                    * (a.scale[(r / bs) * kb + bk]
+                       * b.scale[bk * nbk + j / bs]);
+            }
+            c.data[r * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// Exact reference for the staged lattice GEMM
+/// (`GemmPlan::new_staged`): per K-block, the INT4 base dot, then the
+/// INT8 residual dot where `u8_mask` promotes, then the f32 remainder
+/// where `uf_mask` promotes — the engine's exact term order. The two
+/// integer dots accumulate in i64; the f32 term chains one `mul_add`
+/// per K step over the **full padded** block range, exactly as
+/// `panel_dot` streams the zero-padded panels, so the bits agree even
+/// through the padding.
+pub fn staged_gemm_reference(sa: &StagedQuant, b: &BlockQuant) -> Mat {
+    let a = &sa.base;
+    let bs = a.block;
+    let (m, n) = (a.rows, b.cols);
+    let kb = a.cb();
+    let nbk = b.cb();
+    let mut c = Mat::zeros(m, n);
+    for r in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for bk in 0..kb {
+                let bi = (r / bs) * kb + bk;
+                let sb = b.scale[bk * nbk + j / bs];
+                let mut base_i = 0i64;
+                let mut res_i = 0i64;
+                for k in bk * bs..((bk + 1) * bs).min(a.cols) {
+                    let bq = b.q[k * b.pcols + j] as i64;
+                    base_i += a.q[r * a.pcols + k] as i64 * bq;
+                    res_i += sa.rq[r * a.pcols + k] as i64 * bq;
+                }
+                acc += base_i as f32 * (a.scale[bi] * sb);
+                if sa.u8_mask[bi] {
+                    acc += res_i as f32 * (sa.rscale[bi] * sb);
+                }
+                if sa.uf_mask[bi] {
+                    let mut s = 0.0f32;
+                    for k in bk * bs..(bk + 1) * bs {
+                        s = sa.r2[r * a.pcols + k].mul_add(
+                            b.q[k * b.pcols + j] as f32, s);
+                    }
+                    acc += s * sb;
+                }
+            }
+            c.data[r * n + j] = acc;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::metrics::rel_err;
+    use crate::quant::{block_quant, staged_quant, Rounding,
+                       INT4_LEVELS};
+    use crate::util::rng::Pcg64;
+
+    fn mats(m: usize, k: usize, n: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Pcg64::new(seed);
+        (Mat::randn(m, k, 1.0, &mut rng),
+         Mat::randn(k, n, 1.0, &mut rng))
+    }
+
+    #[test]
+    fn int4_reference_approximates_dense() {
+        // sanity anchor: 4-bit quantization is coarse but not broken
+        let (a, b) = mats(32, 48, 24, 7);
+        let qa = block_quant(&a, 16, INT4_LEVELS, Rounding::Nearest);
+        let qb = block_quant(&b, 16, INT4_LEVELS, Rounding::Nearest);
+        let c = int4_gemm_reference(&qa, &qb);
+        let exact = crate::gemm::dense::matmul_naive(&a, &b);
+        let re = rel_err(&exact.data, &c.data);
+        assert!(re < 0.2, "rel err {re}");
+    }
+
+    #[test]
+    fn staged_reference_tracks_dequant_product() {
+        // The staged ladder's reference must agree with the dense
+        // product of the dequantized operands to f32 roundoff: every
+        // term it adds is exactly a block of dequant(A)·dequant(B).
+        let mut rng = Pcg64::new(11);
+        let mut a = Mat::randn(32, 48, 1.0, &mut rng);
+        for i in 0..9 {
+            a.data[i * 131 % a.data.len()] = 40.0 * (i as f32 - 4.0);
+        }
+        let b = Mat::randn(48, 24, 1.0, &mut rng);
+        let sa = staged_quant(&a, 2.0, 16);
+        assert!(sa.rate_i8() > 0.0, "no promoted blocks");
+        let qb = block_quant(&b, 16, INT4_LEVELS, Rounding::Nearest);
+        let c = staged_gemm_reference(&sa, &qb);
+        let da = sa.dequant();
+        let db = qb.dequant();
+        let exact = crate::gemm::dense::matmul_naive(&da, &db);
+        let re = rel_err(&exact.data, &c.data);
+        // residual tiers shrink the error far below the pure-i4 level
+        let pure = int4_gemm_reference(&sa.base, &qb);
+        let re4 = rel_err(&exact.data, &pure.data);
+        assert!(re < re4, "staged {re} not better than pure i4 {re4}");
+        assert!(re < 0.05, "rel err {re}");
+    }
+}

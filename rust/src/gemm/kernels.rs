@@ -88,10 +88,12 @@
 //! ## Adding a backend
 //!
 //! Implement the three `DotI8` row tiles so they produce the exact
-//! integer block dot in `acci` (any lane order), register the
-//! `static` in [`available`] behind its feature gate — ordered by
-//! static speed, fastest last — and the per-backend test/bench sweeps
-//! pick it up automatically. The generic recipe (with AMX as the next
+//! integer block dot in `acci` (any lane order), point the three
+//! `DotI4` slots at `unpack_i4_entry!`-style delegates (or a native
+//! nibble kernel — any exact-integer scheme is bit-identical by
+//! construction), register the `static` in [`available`] behind its
+//! feature gate — ordered by static speed, fastest last — and the
+//! per-backend test/bench sweeps pick it up automatically. The generic recipe (with AMX as the next
 //! worked example) lives in `docs/ARCHITECTURE.md` § "Adding a kernel
 //! backend"; the landed `avx512vnni` backend in this file is the
 //! reference implementation of an offset-trick ISA.
@@ -118,6 +120,27 @@ pub type DotI8 = fn(
     acc: &mut [f32],
 );
 
+/// One-row block dot against a **nibble-packed INT4 panel**
+/// ([`PanelPackI4`]): same contract as [`DotI8`], but `panel` holds
+/// `width` codes per K row packed two per byte (`width.div_ceil(2)`
+/// bytes per row, low nibble = even column, sign-extended two's
+/// complement). The A side stays plain i8 — that is what lets the
+/// staged fallback stream i8 *residual* codes through the same
+/// kernels against the same packed B half.
+///
+/// [`PanelPackI4`]: crate::quant::PanelPackI4
+pub type DotI4 = fn(
+    qa: &[i8],
+    a_stride: usize,
+    r: usize,
+    k0: usize,
+    bs: usize,
+    panel: &[u8],
+    width: usize,
+    acci: &mut [i32],
+    acc: &mut [f32],
+);
+
 /// Dense two-row f32 kernel (rows share each loaded B row).
 pub type Dense2 =
     fn(arow0: &[f32], arow1: &[f32], b: &Mat, crow0: &mut [f32], crow1: &mut [f32]);
@@ -135,6 +158,14 @@ pub struct Kernels {
     pub dot_i8: DotI8,
     pub dot2_i8: DotI8,
     pub dot4_i8: DotI8,
+    /// INT4 row tiles ([`DotI4`]): the scalar backend decodes nibbles
+    /// in place; every SIMD backend unpacks the packed block into a
+    /// thread-local i8 scratch once per (tile, K-block) and delegates
+    /// to its own `dot*_i8` — exact integers either way, so the
+    /// bit-identity argument above carries over unchanged.
+    pub dot_i4: DotI4,
+    pub dot2_i4: DotI4,
+    pub dot4_i4: DotI4,
     pub dense2: Dense2,
     /// i32 → f32 widening the backend's dot kernels funnel through.
     /// `scalar`/`sse2` install the checked [`widen_i32`]; the
@@ -159,6 +190,9 @@ pub static SCALAR: Kernels = Kernels {
     dot_i8: dot_i8_scalar,
     dot2_i8: dot2_i8_scalar,
     dot4_i8: dot4_i8_scalar,
+    dot_i4: dot_i4_scalar,
+    dot2_i4: dot2_i4_scalar,
+    dot4_i4: dot4_i4_scalar,
     dense2: dense_rows2,
     widen: widen_i32,
 };
@@ -169,6 +203,9 @@ pub static SSE2: Kernels = Kernels {
     dot_i8: x86::dot_i8_sse2,
     dot2_i8: x86::dot2_i8_sse2,
     dot4_i8: x86::dot4_i8_sse2,
+    dot_i4: dot_i4_sse2,
+    dot2_i4: dot2_i4_sse2,
+    dot4_i4: dot4_i4_sse2,
     dense2: dense_rows2,
     widen: widen_i32,
 };
@@ -179,6 +216,9 @@ pub static AVX2: Kernels = Kernels {
     dot_i8: x86::dot_i8_avx2,
     dot2_i8: x86::dot2_i8_avx2,
     dot4_i8: x86::dot4_i8_avx2,
+    dot_i4: dot_i4_avx2,
+    dot2_i4: dot2_i4_avx2,
+    dot4_i4: dot4_i4_avx2,
     dense2: dense_rows2,
     widen: widen_i32_avx2,
 };
@@ -189,6 +229,9 @@ pub static AVX512VNNI: Kernels = Kernels {
     dot_i8: x86::dot_i8_avx512vnni,
     dot2_i8: x86::dot2_i8_avx512vnni,
     dot4_i8: x86::dot4_i8_avx512vnni,
+    dot_i4: dot_i4_avx512vnni,
+    dot2_i4: dot2_i4_avx512vnni,
+    dot4_i4: dot4_i4_avx512vnni,
     dense2: dense_rows2,
     widen: widen_i32_avx2,
 };
@@ -199,6 +242,9 @@ pub static NEON: Kernels = Kernels {
     dot_i8: arm::dot_i8_neon,
     dot2_i8: arm::dot2_i8_neon,
     dot4_i8: arm::dot4_i8_neon,
+    dot_i4: dot_i4_neon,
+    dot2_i4: dot2_i4_neon,
+    dot4_i4: dot4_i4_neon,
     dense2: dense_rows2,
     widen: widen_i32_neon,
 };
@@ -609,6 +655,157 @@ fn dot4_i8_scalar(
     dot2_i8_scalar(qa, a_stride, r, k0, bs, panel, width, acci01, acc01);
     dot2_i8_scalar(qa, a_stride, r + 2, k0, bs, panel, width, acci23, acc23);
 }
+
+// ---------------------------------------------------------------------
+// INT4 (nibble-packed) kernels. The scalar backend is the mandatory
+// portable floor: it sign-extends each nibble in place. The SIMD
+// backends reuse their i8 machinery: the packed K-block is unpacked
+// once into a thread-local i8 scratch (amortized over the whole row
+// tile × column width) and the backend's own `dot*_i8` runs on it —
+// exact integer arithmetic both ways, so every backend produces the
+// identical i32 block dot, and the shared `widen` slot the identical
+// f32. Codes are in [-7, 7] (|a·b| ≤ 127·7 = 889 even with i8
+// residual codes on the A side), far inside every intermediate bound
+// the i8 scheme already proves.
+// ---------------------------------------------------------------------
+
+/// Sign-extend the `j`-th code of a nibble-packed row (`brow` holds
+/// `width.div_ceil(2)` bytes; low nibble = even column).
+#[inline(always)]
+fn nibble_at(brow: &[u8], j: usize) -> i8 {
+    let b = brow[j >> 1];
+    if j & 1 == 0 {
+        ((b << 4) as i8) >> 4
+    } else {
+        (b as i8) >> 4
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dot_i4_scalar(
+    qa: &[i8], a_stride: usize, r: usize, k0: usize, bs: usize,
+    panel: &[u8], width: usize, acci: &mut [i32], acc: &mut [f32],
+) {
+    acci[..width].fill(0);
+    let rw = width.div_ceil(2);
+    let arow = &qa[r * a_stride + k0..r * a_stride + k0 + bs];
+    for (k, &a) in arow.iter().enumerate() {
+        // No zero-code skip (module-level convention).
+        let av = a as i32;
+        let brow = &panel[(k0 + k) * rw..][..rw];
+        for j in 0..width {
+            acci[j] += av * nibble_at(brow, j) as i32;
+        }
+    }
+    (SCALAR.widen)(acci, acc, width);
+}
+
+/// Scalar 2-row i4 tile = two 1-row tiles (the floor optimizes for
+/// clarity; the unpack-delegating SIMD entries own the fast path).
+#[allow(clippy::too_many_arguments)]
+fn dot2_i4_scalar(
+    qa: &[i8], a_stride: usize, r: usize, k0: usize, bs: usize,
+    panel: &[u8], width: usize, acci: &mut [i32], acc: &mut [f32],
+) {
+    let (acci0, acci1) = acci.split_at_mut(bs);
+    let (acc0, acc1) = acc.split_at_mut(bs);
+    dot_i4_scalar(qa, a_stride, r, k0, bs, panel, width, acci0, acc0);
+    dot_i4_scalar(qa, a_stride, r + 1, k0, bs, panel, width, acci1, acc1);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dot4_i4_scalar(
+    qa: &[i8], a_stride: usize, r: usize, k0: usize, bs: usize,
+    panel: &[u8], width: usize, acci: &mut [i32], acc: &mut [f32],
+) {
+    let (acci01, acci23) = acci.split_at_mut(2 * bs);
+    let (acc01, acc23) = acc.split_at_mut(2 * bs);
+    dot2_i4_scalar(qa, a_stride, r, k0, bs, panel, width, acci01, acc01);
+    dot2_i4_scalar(qa, a_stride, r + 2, k0, bs, panel, width, acci23, acc23);
+}
+
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+std::thread_local! {
+    /// Per-thread i8 scratch the SIMD i4 entries unpack nibble panels
+    /// into. Deliberately separate from the engine's workspace
+    /// thread-local — the unpack happens *inside* a kernel call, while
+    /// the engine workspace is already mutably borrowed.
+    static I4_UNPACK: std::cell::RefCell<Vec<i8>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// Unpack rows `k0..k0+bs` of a nibble panel into `out` at the plain
+/// i8 panel layout (`out[(k0+k)*width + j]`), so a delegated `DotI8`
+/// call with the **same** `k0` reads exactly the decoded codes. Rows
+/// below `k0` are left untouched (never read by the delegate).
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+fn unpack_i4_rows(
+    panel: &[u8], k0: usize, bs: usize, width: usize, out: &mut Vec<i8>,
+) {
+    let rw = width.div_ceil(2);
+    let need = (k0 + bs) * width;
+    if out.len() < need {
+        out.resize(need, 0);
+    }
+    for k in 0..bs {
+        let src = &panel[(k0 + k) * rw..][..rw];
+        let dst = &mut out[(k0 + k) * width..][..width];
+        let even = width & !1;
+        for j in (0..even).step_by(2) {
+            let b = src[j >> 1];
+            dst[j] = (b << 4) as i8 >> 4;
+            dst[j + 1] = (b as i8) >> 4;
+        }
+        if even < width {
+            dst[even] = (src[even >> 1] << 4) as i8 >> 4;
+        }
+    }
+}
+
+/// Generate an i4 vtable entry that unpacks to i8 scratch and
+/// delegates to the named i8 kernel of the same backend.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+macro_rules! unpack_i4_entry {
+    ($name:ident, $delegate:path) => {
+        #[allow(clippy::too_many_arguments)]
+        fn $name(
+            qa: &[i8], a_stride: usize, r: usize, k0: usize, bs: usize,
+            panel: &[u8], width: usize, acci: &mut [i32],
+            acc: &mut [f32],
+        ) {
+            I4_UNPACK.with(|ws| {
+                let mut ws = ws.borrow_mut();
+                unpack_i4_rows(panel, k0, bs, width, &mut ws);
+                $delegate(qa, a_stride, r, k0, bs, &ws, width, acci, acc);
+            });
+        }
+    };
+}
+
+#[cfg(target_arch = "x86_64")]
+unpack_i4_entry!(dot_i4_sse2, x86::dot_i8_sse2);
+#[cfg(target_arch = "x86_64")]
+unpack_i4_entry!(dot2_i4_sse2, x86::dot2_i8_sse2);
+#[cfg(target_arch = "x86_64")]
+unpack_i4_entry!(dot4_i4_sse2, x86::dot4_i8_sse2);
+#[cfg(target_arch = "x86_64")]
+unpack_i4_entry!(dot_i4_avx2, x86::dot_i8_avx2);
+#[cfg(target_arch = "x86_64")]
+unpack_i4_entry!(dot2_i4_avx2, x86::dot2_i8_avx2);
+#[cfg(target_arch = "x86_64")]
+unpack_i4_entry!(dot4_i4_avx2, x86::dot4_i8_avx2);
+#[cfg(target_arch = "x86_64")]
+unpack_i4_entry!(dot_i4_avx512vnni, x86::dot_i8_avx512vnni);
+#[cfg(target_arch = "x86_64")]
+unpack_i4_entry!(dot2_i4_avx512vnni, x86::dot2_i8_avx512vnni);
+#[cfg(target_arch = "x86_64")]
+unpack_i4_entry!(dot4_i4_avx512vnni, x86::dot4_i8_avx512vnni);
+#[cfg(target_arch = "aarch64")]
+unpack_i4_entry!(dot_i4_neon, arm::dot_i8_neon);
+#[cfg(target_arch = "aarch64")]
+unpack_i4_entry!(dot2_i4_neon, arm::dot2_i8_neon);
+#[cfg(target_arch = "aarch64")]
+unpack_i4_entry!(dot4_i4_neon, arm::dot4_i8_neon);
 
 // ---------------------------------------------------------------------
 // Shared f32 kernels — the v2 op-order contract (see module docs):
@@ -1778,6 +1975,9 @@ mod tests {
             dot_i8: dot_i8_scalar,
             dot2_i8: dot2_i8_scalar,
             dot4_i8: dot4_i8_scalar,
+            dot_i4: dot_i4_scalar,
+            dot2_i4: dot2_i4_scalar,
+            dot4_i4: dot4_i4_scalar,
             dense2: dense_rows2,
             widen: widen_i32,
         };
@@ -1988,6 +2188,170 @@ mod tests {
         let b = [1 << 24];
         let mut acc = [0.0f32];
         widen_reduce_i32(&[&a, &b], &mut acc, 1);
+    }
+
+    /// Exact i64 reference for a `rows`-row **nibble-panel** block dot
+    /// (the kernel-level face of the INT4 oracle).
+    #[allow(clippy::too_many_arguments)]
+    fn ref_dot_i4(
+        qa: &[i8], a_stride: usize, r: usize, k0: usize, bs: usize,
+        panel: &[u8], width: usize, rows: usize,
+    ) -> Vec<i64> {
+        let rw = width.div_ceil(2);
+        let mut out = vec![0i64; rows * width];
+        for t in 0..rows {
+            let arow = &qa[(r + t) * a_stride + k0..];
+            for j in 0..width {
+                let mut s = 0i64;
+                for k in 0..bs {
+                    s += arow[k] as i64
+                        * nibble_at(&panel[(k0 + k) * rw..][..rw], j)
+                            as i64;
+                }
+                out[t * width + j] = s;
+            }
+        }
+        out
+    }
+
+    fn rand_nibble_panel(
+        prows: usize, width: usize, rng: &mut Pcg64,
+    ) -> Vec<u8> {
+        let rw = width.div_ceil(2);
+        let mut p = vec![0u8; prows * rw];
+        for k in 0..prows {
+            for j in 0..width {
+                let code =
+                    ((rng.uniform() * 15.0) as i32 - 7).clamp(-7, 7) as i8;
+                let b = &mut p[k * rw + (j >> 1)];
+                if j & 1 == 0 {
+                    *b = (*b & 0xF0) | (code as u8 & 0x0F);
+                } else {
+                    *b = (*b & 0x0F) | ((code as u8 & 0x0F) << 4);
+                }
+            }
+        }
+        p
+    }
+
+    /// INT4 twin of the i8 load-bearing sweep: every backend × row
+    /// tile × awkward geometry — including **odd widths**, where the
+    /// final high nibble of each packed row is padding — must
+    /// reproduce the exact i64 nibble dot. A runs both as i4-range
+    /// codes and as full-range i8 codes (the staged path streams i8
+    /// residuals through these kernels).
+    #[test]
+    fn all_backends_match_i64_nibble_reference() {
+        let mut rng = Pcg64::new(0x14D0);
+        for &bs in &[1usize, 2, 3, 5, 8, 15, 16, 17, 24, 33, 64] {
+            for &width in &[1usize, 2, 5, 7, 8, 9, 15, 16, 17, 31, 33] {
+                if width > bs {
+                    continue;
+                }
+                for &k0 in &[0usize, bs] {
+                    let prows = k0 + bs;
+                    let a_stride = prows;
+                    for a_full_range in [false, true] {
+                        let qa: Vec<i8> = if a_full_range {
+                            rand_i8(4 * a_stride, &mut rng)
+                        } else {
+                            (0..4 * a_stride)
+                                .map(|_| {
+                                    ((rng.uniform() * 15.0) as i32 - 7)
+                                        .clamp(-7, 7)
+                                        as i8
+                                })
+                                .collect()
+                        };
+                        let panel =
+                            rand_nibble_panel(prows, width, &mut rng);
+                        let want = ref_dot_i4(
+                            &qa, a_stride, 0, k0, bs, &panel, width, 4,
+                        );
+                        for kn in available() {
+                            let mut acci = vec![i32::MIN; 4 * bs];
+                            let mut acc = vec![f32::NAN; 4 * bs];
+                            for (rows, dot) in [
+                                (1usize, kn.dot_i4),
+                                (2, kn.dot2_i4),
+                                (4, kn.dot4_i4),
+                            ] {
+                                acci.fill(i32::MIN);
+                                acc.fill(f32::NAN);
+                                dot(
+                                    &qa, a_stride, 0, k0, bs, &panel,
+                                    width, &mut acci, &mut acc,
+                                );
+                                for t in 0..rows {
+                                    for j in 0..width {
+                                        let w = want[t * width + j];
+                                        assert_eq!(
+                                            acci[t * bs + j] as i64,
+                                            w,
+                                            "{} i4 rows={rows} bs={bs} \
+                                             width={width} k0={k0} \
+                                             full={a_full_range} t={t} \
+                                             j={j}",
+                                            kn.name
+                                        );
+                                        assert_eq!(
+                                            acc[t * bs + j],
+                                            w as f32,
+                                            "{} i4 widen rows={rows} \
+                                             bs={bs} width={width}",
+                                            kn.name
+                                        );
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn i4_saturated_codes_stay_exact_on_every_backend() {
+        // All-(±7) nibbles against saturated i8 A codes (the staged
+        // residual extreme): |partial| grows as 889·k — still exact
+        // i32 integers at the widest paper block size.
+        for &bs in &[128usize, 256] {
+            let width = 15; // odd: exercises the padding nibble
+            let qa = vec![127i8; 4 * bs];
+            let rw = width.div_ceil(2);
+            let mut panel = vec![0u8; bs * rw];
+            for k in 0..bs {
+                for j in 0..width {
+                    let code = if (k + j) % 2 == 0 { 7i8 } else { -7 };
+                    let b = &mut panel[k * rw + (j >> 1)];
+                    if j & 1 == 0 {
+                        *b = (*b & 0xF0) | (code as u8 & 0x0F);
+                    } else {
+                        *b = (*b & 0x0F) | ((code as u8 & 0x0F) << 4);
+                    }
+                }
+            }
+            let want = ref_dot_i4(&qa, bs, 0, 0, bs, &panel, width, 4);
+            for kn in available() {
+                let mut acci = vec![0i32; 4 * bs];
+                let mut acc = vec![0.0f32; 4 * bs];
+                (kn.dot4_i4)(
+                    &qa, bs, 0, 0, bs, &panel, width, &mut acci,
+                    &mut acc,
+                );
+                for t in 0..4 {
+                    for j in 0..width {
+                        assert_eq!(
+                            acci[t * bs + j] as i64,
+                            want[t * width + j],
+                            "{} i4 bs={bs} t={t} j={j}",
+                            kn.name
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

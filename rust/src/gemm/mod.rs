@@ -8,7 +8,12 @@
 //! `*_baseline` oracles/benchmark baselines. The int8 modes default to
 //! the true i8 data path ([`DataPath::Int8`]: i8 panel packs, i32
 //! block accumulation — bit-identical to the f32 simulation for all
-//! paper block sizes); `*_path` wrappers expose the knob.
+//! paper block sizes); `*_path` wrappers expose the knob. The
+//! precision lattice adds an opt-in [`DataPath::Int4`] bottom rung
+//! (nibble panels, `dot*_i4` kernels) with a staged per-block
+//! Int4→Int8→f32 fallback ladder ([`GemmPlan::new_staged`] over
+//! `quant::staged_quant`), exact against the i64 references in
+//! [`int4`] within [`I4_EXACT_MAX_BS`].
 //!
 //! ## Microkernel backends
 //!
@@ -71,23 +76,27 @@
 
 pub mod dense;
 pub mod engine;
+pub mod int4;
 pub mod int8;
 pub mod kernels;
 pub mod pipeline;
 
 pub use dense::{matmul, matmul_baseline, matmul_naive};
-pub use engine::{DataPath, GemmPlan, Precision, WeightPlan,
-                 I8_EXACT_MAX_BS};
+pub use engine::{default_path, env_path, parse_path_override,
+                 DataPath, GemmPlan, Precision, WeightPlan,
+                 I4_EXACT_MAX_BS, I8_EXACT_MAX_BS};
 pub use kernels::{cpu_features, Kernels};
+pub use int4::{int4_gemm_reference, staged_gemm_reference};
 pub use int8::{block_gemm, block_gemm_baseline, block_gemm_path,
                block_gemm_reference, fallback_gemm,
                fallback_gemm_baseline, fallback_gemm_path,
                fallback_gemm_reference, remap_placement, Placement};
-pub use pipeline::{grad_sr_seed, layer_sr_seed, site_reference,
-                   synth_microbatch, CacheStats, LayerStep,
-                   LayerStepConfig, ModelStep, ModelStepConfig,
-                   PlanCache, PlanKey, SiteOutputs, SiteReport,
-                   StepReport, GRAD_SR_SEED};
+pub use pipeline::{grad_sr_seed, layer_sr_seed, metric_histogram,
+                   site_reference, synth_microbatch, CacheStats,
+                   LayerStep, LayerStepConfig, ModelStep,
+                   ModelStepConfig, PlanCache, PlanKey, SiteOutputs,
+                   SiteReport, StepReport, GRAD_SR_SEED,
+                   OUTLIER_HIST_BINS};
 
 use crate::quant::{block_quant, fallback_quant, Criterion, Rounding,
                    INT8_LEVELS};

@@ -10,8 +10,9 @@
 //!   step boundary                 microstep (many per step)
 //!   ─────────────                 ─────────────────────────
 //!   PlanCache                       per site (qkv, attn_out,
-//!    key: (weight id, shape,        mlp_in, mlp_down, lm_head):
-//!         data path, backend)        quantize X (fallback, θ_site)
+//!    key: (weight id, shape,        mlp_gate, mlp_up, mlp_down,
+//!         data path, backend)       lm_head):
+//!    value: WeightPlan                quantize X (fallback, θ_site)
 //!    value: WeightPlan               quantize dY (int8, stochastic
 //!     = q(W) + packed panels   ──►     rounding — unbiased grads)
 //!       + pinned backend            fwd  Y  = X·W    (cached W)
@@ -77,11 +78,13 @@ use std::sync::Arc;
 
 use crate::coordinator::{RateAccumulator, ThresholdController};
 use crate::costmodel::SubstrateCalibration;
-use crate::gemm::engine::{DataPath, GemmPlan, WeightPlan};
+use crate::gemm::engine::{env_path, DataPath, GemmPlan, WeightPlan};
 use crate::gemm::kernels::{self, Kernels};
-use crate::model::{layer_linears, model_linears, LinearShape};
+use crate::model::{layer_linears, model_linears, sites_per_layer,
+                   LinearShape};
 use crate::quant::{block_quant_threads, fallback_quant_threads,
-                   Criterion, FallbackQuant, Rounding, INT8_LEVELS};
+                   staged_quant_threads, Criterion, FallbackQuant,
+                   Rounding, StagedQuant, INT4_LEVELS, INT8_LEVELS};
 use crate::util::json::{obj, Json};
 use crate::util::pool::default_shards;
 use crate::util::rng::{Pcg64, SplitMix64};
@@ -339,17 +342,25 @@ impl PlanCache {
 pub struct LayerStepConfig {
     pub d_model: usize,
     pub d_ff: usize,
-    /// GLU MLP (doubles `mlp_in`'s output features)
+    /// GLU MLP: splits the MLP input projection into the `mlp_gate`
+    /// and `mlp_up` sites (see
+    /// [`sites_per_layer`](crate::model::sites_per_layer))
     pub glu: bool,
     /// tokens per microstep (rows of every activation)
     pub tokens: usize,
     /// quantization block size
     pub block: usize,
     pub threads: usize,
-    /// data path all plans run ([`DataPath::auto_for`] by default)
+    /// data path all plans run (the `PALLAS_PATH` override when set,
+    /// else [`DataPath::auto_for`])
     pub path: DataPath,
-    /// plan-cache capacity (a layer needs 8 entries: 2 weight halves
-    /// × 4 sites; the default leaves headroom for shape churn).
+    /// opt-in outlier telemetry: when set, every microstep attaches
+    /// the per-block AbsMax histogram of each site's forward
+    /// activation to its [`SiteReport`] ([`metric_histogram`])
+    pub telemetry: bool,
+    /// plan-cache capacity (a layer needs 2 weight halves ×
+    /// [`sites_per_layer`] entries — 8 plain, 10 under `glu`; the
+    /// default leaves headroom for shape churn).
     /// Validated at construction: below the working set the cache
     /// would silently thrash every microstep.
     pub cache_capacity: usize,
@@ -373,7 +384,9 @@ impl LayerStepConfig {
             tokens,
             block,
             threads: default_threads(),
-            path: DataPath::auto_for(block),
+            path: env_path()
+                .unwrap_or_else(|| DataPath::auto_for(block)),
+            telemetry: false,
             cache_capacity: 16,
             sr_seed: GRAD_SR_SEED,
             shards: default_shards(),
@@ -409,12 +422,24 @@ impl SiteOutputs {
 #[derive(Debug, Clone)]
 pub struct SiteReport {
     pub name: &'static str,
-    /// fallback rate the forward GEMM actually executed with
+    /// fallback rate the forward GEMM actually executed with: blocks
+    /// promoted past the path's base precision (two-level blocks on
+    /// the binary Int8 fallback, tier ≥ I8 on the staged Int4 ladder)
     pub fallback_rate: f64,
     /// fallback rate the backward `dW` GEMM executed with (Xᵀ on the
     /// fallback path at the same θ — block decisions are the
     /// transpose of the forward's)
     pub bwd_fallback_rate: f64,
+    /// f32-tier rate of the forward GEMM (staged Int4 ladder only;
+    /// always 0 on the binary-fallback paths, which have no third
+    /// rung)
+    pub fallback_rate_f32: f64,
+    /// f32-tier rate of the backward `dW` GEMM
+    pub bwd_fallback_rate_f32: f64,
+    /// per-block AbsMax histogram of the forward activation
+    /// ([`metric_histogram`]) — present when the driver's `telemetry`
+    /// config flag is on, `None` otherwise (zero cost when off)
+    pub outlier_hist: Option<Vec<u64>>,
     /// weight-plan cache lookups this site hit / missed (2 lookups
     /// per site per microstep: W and Wᵀ) — lets multi-layer drivers
     /// report per-layer hit rates
@@ -435,20 +460,101 @@ pub struct StepReport {
     pub flops: f64,
 }
 
+/// Quantization levels of the per-call (activation/gradient) and
+/// weight grids on `path`: nibble codes on the Int4 rung — the
+/// weight panels are nibble-packed and the gradient operand streams
+/// through the `dot*_i4` kernels — i8 codes everywhere else.
+fn levels_for(path: DataPath) -> f32 {
+    match path {
+        DataPath::Int4 => INT4_LEVELS,
+        _ => INT8_LEVELS,
+    }
+}
+
+/// Bin count of the outlier-telemetry histograms: power-of-two
+/// magnitude buckets, bin `i` counting blocks whose AbsMax has
+/// `floor(log2) = i − 8` (so bin 0 collects everything at or below
+/// 2⁻⁸ and bin 15 everything at or above 2⁷).
+pub const OUTLIER_HIST_BINS: usize = 16;
+
+/// Histogram of per-block AbsMax magnitudes over
+/// [`OUTLIER_HIST_BINS`] fixed power-of-two bins — the opt-in
+/// outlier telemetry every site attaches to its [`SiteReport`] when
+/// the driver's `telemetry` flag is set. Binning reads the f32
+/// exponent field directly (no float `log`), so the histogram is
+/// bit-deterministic across platforms and libm versions.
+pub fn metric_histogram(metric: &[f32]) -> Vec<u64> {
+    let mut h = vec![0u64; OUTLIER_HIST_BINS];
+    for &m in metric {
+        let e = if m > 0.0 {
+            ((m.to_bits() >> 23) & 0xff) as i32 - 127
+        } else {
+            i32::MIN // all-zero blocks land in the bottom bin
+        };
+        let bin = e.saturating_add(8)
+            .clamp(0, OUTLIER_HIST_BINS as i32 - 1);
+        h[bin as usize] += 1;
+    }
+    h
+}
+
+/// The forward's activation quantization on whichever lattice rung
+/// the plan runs: Algorithm 1's two-level quant (SimF32/Int8 paths)
+/// or the staged Int4→Int8→f32 ladder (Int4 path). The backward
+/// consumes it twice — its permutation is dW's Xᵀ operand — so the
+/// variants share one lifecycle.
+enum ActQuant {
+    Fallback(FallbackQuant),
+    Staged(StagedQuant),
+}
+
+impl ActQuant {
+    /// Executed fallback rate the Algorithm-2 controller sees: the
+    /// fraction of blocks promoted past the path's base precision
+    /// (two-level blocks on the binary fallback, tier ≥ I8 on the
+    /// staged ladder — same band semantics either way).
+    fn fallback_rate(&self) -> f64 {
+        match self {
+            ActQuant::Fallback(f) => f.fallback_rate(),
+            ActQuant::Staged(s) => s.rate_i8(),
+        }
+    }
+
+    /// Fraction of blocks promoted to the f32 tier (0 off the staged
+    /// ladder — the binary fallback has no third rung).
+    fn f32_rate(&self) -> f64 {
+        match self {
+            ActQuant::Fallback(_) => 0.0,
+            ActQuant::Staged(s) => s.rate_f32(),
+        }
+    }
+
+    /// Per-block AbsMax selection metric — the outlier-telemetry
+    /// histogram source.
+    fn metric(&self) -> &[f32] {
+        match self {
+            ActQuant::Fallback(f) => &f.metric,
+            ActQuant::Staged(s) => &s.metric,
+        }
+    }
+}
+
 /// Build the cacheable weight half of one site: quantize the master
 /// weight (or its transpose, for the `dX` role) with nearest rounding
-/// and eagerly pack its column panels for `path`. Shared by the
+/// at the path's levels ([`levels_for`] — nibble codes on Int4) and
+/// eagerly pack its column panels for `path`. Shared by the
 /// microstep miss path and the warm-state prewarm so both produce
 /// byte-identical plans.
 fn build_weight_plan(w: &Mat, transposed: bool, block: usize,
                      threads: usize, path: DataPath,
                      kn: &'static Kernels, shards: usize)
                      -> WeightPlan {
+    let levels = levels_for(path);
     let q = if transposed {
-        block_quant_threads(&w.transpose(), block, INT8_LEVELS,
+        block_quant_threads(&w.transpose(), block, levels,
                             Rounding::Nearest, threads)
     } else {
-        block_quant_threads(w, block, INT8_LEVELS, Rounding::Nearest,
+        block_quant_threads(w, block, levels, Rounding::Nearest,
                             threads)
     };
     WeightPlan::new(Arc::new(q), path)
@@ -456,12 +562,13 @@ fn build_weight_plan(w: &Mat, transposed: bool, block: usize,
         .with_shards(shards)
 }
 
-/// Forward half of one site's microstep: quantize the activation
-/// (fallback at θ — nearest rounding; the forward has no bias
-/// accumulation hazard), look up or build the cached W half, and
-/// execute `Y = X·W` into the caller's slot. Returns the activation
-/// quantization — the backward half consumes it twice (its
-/// permutation is dW's Xᵀ operand).
+/// Forward half of one site's microstep: quantize the activation at
+/// the site's θ — the binary fallback quant on the SimF32/Int8 paths,
+/// the staged Int4→Int8→f32 ladder on Int4 (both nearest-rounded;
+/// the forward has no bias accumulation hazard) — look up or build
+/// the cached W half, and execute `Y = X·W` into the caller's slot.
+/// Returns the activation quantization — the backward half consumes
+/// it twice (its permutation is dW's Xᵀ operand).
 ///
 /// `id_base` is `2 · global site index`: the cache keys of this
 /// site's W and Wᵀ halves are `id_base` and `id_base + 1`.
@@ -471,11 +578,9 @@ fn run_site_forward(
     block: usize, threads: usize, path: DataPath,
     kn: &'static Kernels, shards: usize, cache: &mut PlanCache,
     out: &mut SiteOutputs,
-) -> FallbackQuant {
+) -> ActQuant {
     assert_eq!((x.rows, x.cols), (l.m, l.k),
                "activation shape for site {}", l.name);
-    let fx = fallback_quant_threads(x, theta, block, INT8_LEVELS,
-                                    Criterion::AbsMax, threads);
     let wp = cache.get_or_build_with(
         PlanKey {
             weight_id: id_base,
@@ -489,35 +594,51 @@ fn run_site_forward(
         || build_weight_plan(w, false, block, threads, path, kn,
                              shards),
     );
-    wp.plan_fallback(&fx, &fx.u, threads).execute_into(&mut out.y);
-    fx
+    match path {
+        DataPath::Int4 => {
+            let sx = staged_quant_threads(x, theta, block, threads);
+            wp.plan_staged(&sx, threads).execute_into(&mut out.y);
+            ActQuant::Staged(sx)
+        }
+        _ => {
+            let fx = fallback_quant_threads(x, theta, block,
+                                            INT8_LEVELS,
+                                            Criterion::AbsMax,
+                                            threads);
+            wp.plan_fallback(&fx, &fx.u, threads)
+                .execute_into(&mut out.y);
+            ActQuant::Fallback(fx)
+        }
+    }
 }
 
-/// Backward half of one site's microstep: quantize dY (int8,
-/// stochastic rounding — nearest would bias every element of dW and
-/// dX the same way each microstep), execute `dX = dY·Wᵀ` through the
-/// cached Wᵀ half, and `dW = Xᵀ·dY` through a legitimately fresh
-/// plan (both operands change every microstep; qdy serves as the A
-/// operand of dX and the B operand of dW — one quantization, two
-/// roles). Xᵀ's fallback quantization is the *permutation* of the
-/// forward's `fx`: under AbsMax every per-block quantity (absmax,
-/// scales, nearest codes, the u decision at θ) is symmetric under
-/// transposition, so `transposed()` is bit-identical to re-running
-/// Algorithm 1 on xᵀ — the outlier blocks the forward protected stay
-/// protected in the weight gradient, at zero extra quantization cost
+/// Backward half of one site's microstep: quantize dY at the path's
+/// levels with stochastic rounding (nearest would bias every element
+/// of dW and dX the same way each microstep), execute `dX = dY·Wᵀ`
+/// through the cached Wᵀ half, and `dW = Xᵀ·dY` through a
+/// legitimately fresh plan (both operands change every microstep;
+/// qdy serves as the A operand of dX and the B operand of dW — one
+/// quantization, two roles). Xᵀ's quantization is the *permutation*
+/// of the forward's: under AbsMax every per-block quantity (absmax,
+/// scales, nearest codes, the tier decisions at θ) is symmetric
+/// under transposition, so `transposed()` is bit-identical to
+/// re-running Algorithm 1 — or the staged ladder — on xᵀ. The
+/// outlier blocks the forward protected stay protected in the weight
+/// gradient, at zero extra quantization cost
 /// (`dw_routes_transposed_activation_through_fallback` pins the
 /// identity against a fresh re-quantization). Returns the executed
-/// backward fallback rate.
+/// backward (fallback, f32-tier) rates.
 #[allow(clippy::too_many_arguments)]
 fn run_site_backward(
-    l: &LinearShape, w: &Mat, fx: &FallbackQuant, dy: &Mat,
+    l: &LinearShape, w: &Mat, fx: &ActQuant, dy: &Mat,
     sr: Rounding, id_base: u64, block: usize, threads: usize,
     path: DataPath, kn: &'static Kernels, shards: usize,
     cache: &mut PlanCache, out: &mut SiteOutputs,
-) -> f64 {
+) -> (f64, f64) {
     assert_eq!((dy.rows, dy.cols), (l.m, l.n),
                "gradient shape for site {}", l.name);
-    let qdy = block_quant_threads(dy, block, INT8_LEVELS, sr, threads);
+    let qdy = block_quant_threads(dy, block, levels_for(path), sr,
+                                  threads);
     let wpt = cache.get_or_build_with(
         PlanKey {
             weight_id: id_base + 1,
@@ -532,12 +653,25 @@ fn run_site_backward(
                              shards),
     );
     wpt.plan_int8(&qdy, threads).execute_into(&mut out.dx);
-    let fxt = fx.transposed();
-    GemmPlan::new_fallback_path(&fxt, &qdy, &fxt.u, threads, path)
-        .with_kernels(kn)
-        .with_shards(shards)
-        .execute_into(&mut out.dw);
-    fxt.fallback_rate()
+    match fx {
+        ActQuant::Fallback(f) => {
+            let fxt = f.transposed();
+            GemmPlan::new_fallback_path(&fxt, &qdy, &fxt.u, threads,
+                                        path)
+                .with_kernels(kn)
+                .with_shards(shards)
+                .execute_into(&mut out.dw);
+            (fxt.fallback_rate(), 0.0)
+        }
+        ActQuant::Staged(s) => {
+            let sxt = s.transposed();
+            GemmPlan::new_staged(&sxt, &qdy, threads)
+                .with_kernels(kn)
+                .with_shards(shards)
+                .execute_into(&mut out.dw);
+            (sxt.rate_i8(), sxt.rate_f32())
+        }
+    }
 }
 
 /// One site's three GEMMs for one microstep — the shared core of
@@ -551,18 +685,36 @@ fn run_site_backward(
 /// caller's reusable `out` slot (warm buffers are reused in place —
 /// the engine's `execute_into` steady state) and returns the
 /// executed forward and backward fallback rates.
+/// The per-tier rates (and optional telemetry histogram) one site
+/// executed with during one microstep.
+struct SiteRates {
+    fwd: f64,
+    fwd_f32: f64,
+    bwd: f64,
+    bwd_f32: f64,
+    hist: Option<Vec<u64>>,
+}
+
 #[allow(clippy::too_many_arguments)]
 fn run_site(
     l: &LinearShape, w: &Mat, x: &Mat, dy: &Mat, theta: f32,
     sr: Rounding, id_base: u64, block: usize, threads: usize,
     path: DataPath, kn: &'static Kernels, shards: usize,
-    cache: &mut PlanCache, out: &mut SiteOutputs,
-) -> (f64, f64) {
+    telemetry: bool, cache: &mut PlanCache, out: &mut SiteOutputs,
+) -> SiteRates {
     let fx = run_site_forward(l, w, x, theta, id_base, block, threads,
                               path, kn, shards, cache, out);
-    let bwd = run_site_backward(l, w, &fx, dy, sr, id_base, block,
-                                threads, path, kn, shards, cache, out);
-    (fx.fallback_rate(), bwd)
+    let hist = telemetry.then(|| metric_histogram(fx.metric()));
+    let (bwd, bwd_f32) = run_site_backward(
+        l, w, &fx, dy, sr, id_base, block, threads, path, kn, shards,
+        cache, out);
+    SiteRates {
+        fwd: fx.fallback_rate(),
+        fwd_f32: fx.f32_rate(),
+        bwd,
+        bwd_f32,
+        hist,
+    }
 }
 
 /// Cache-free reference computation of one site's three GEMMs —
@@ -583,7 +735,7 @@ pub fn site_reference(
     let mut cache = PlanCache::new(2);
     let mut out = SiteOutputs::empty();
     run_site(l, w, x, dy, theta, sr, 0, block, threads, path, kn,
-             default_shards(), &mut cache, &mut out);
+             default_shards(), false, &mut cache, &mut out);
     out
 }
 
@@ -604,7 +756,7 @@ fn drive_microstep(
     sites: &[LinearShape], weights: &[Mat], thresholds: &[f32],
     rounds: &[Rounding], acts: &[Mat], grads: &[Mat], block: usize,
     threads: usize, path: DataPath, kn: &'static Kernels,
-    shards: usize, cache: &mut PlanCache,
+    shards: usize, telemetry: bool, cache: &mut PlanCache,
     rates: &mut RateAccumulator, arena: &mut Vec<SiteOutputs>,
 ) -> StepReport {
     assert_eq!(acts.len(), sites.len(), "one act per site");
@@ -618,17 +770,20 @@ fn drive_microstep(
     let mut executed = vec![0.0f64; sites.len()];
     for (i, l) in sites.iter().enumerate() {
         let s0 = cache.stats();
-        let (fwd_rate, bwd_rate) = run_site(
+        let r = run_site(
             l, &weights[i], &acts[i], &grads[i], thresholds[i],
             rounds[i], 2 * i as u64, block, threads, path, kn, shards,
-            cache, &mut arena[i],
+            telemetry, cache, &mut arena[i],
         );
         let s1 = cache.stats();
-        executed[i] = fwd_rate;
+        executed[i] = r.fwd;
         site_reports.push(SiteReport {
             name: l.name,
-            fallback_rate: fwd_rate,
-            bwd_fallback_rate: bwd_rate,
+            fallback_rate: r.fwd,
+            bwd_fallback_rate: r.bwd,
+            fallback_rate_f32: r.fwd_f32,
+            bwd_fallback_rate_f32: r.bwd_f32,
+            outlier_hist: r.hist,
             cache_hits: s1.hits - s0.hits,
             cache_misses: s1.misses - s0.misses,
             flops: l.microstep_flops(),
@@ -673,7 +828,8 @@ pub struct LayerStep {
 
 impl LayerStep {
     /// `weights[i]` must be the (k × n) matrix of site `i` in
-    /// [`layer_linears`] order (qkv, attn_out, mlp_in, mlp_down).
+    /// [`layer_linears`] order (qkv, attn_out, then mlp_in/mlp_down
+    /// plain or mlp_gate/mlp_up/mlp_down under `glu`).
     ///
     /// Panics when `cfg.cache_capacity` is below the layer's working
     /// set of `2 × sites` weight halves: an undersized cache would
@@ -816,7 +972,8 @@ impl LayerStep {
             &self.sites, &self.weights, &self.controller.thresholds,
             &rounds, acts, grads, self.cfg.block, self.cfg.threads,
             self.cfg.path, self.kernels, self.cfg.shards,
-            &mut self.cache, &mut self.rates, &mut self.arena,
+            self.cfg.telemetry, &mut self.cache, &mut self.rates,
+            &mut self.arena,
         );
         self.microsteps += 1;
         report
@@ -842,11 +999,13 @@ impl LayerStep {
 /// Configuration of a [`ModelStep`] driver.
 #[derive(Debug, Clone)]
 pub struct ModelStepConfig {
-    /// transformer layers (4 linear sites each)
+    /// transformer layers ([`sites_per_layer`] linear sites each)
     pub layers: usize,
     pub d_model: usize,
     pub d_ff: usize,
-    /// GLU MLP (doubles `mlp_in`'s output features)
+    /// GLU MLP: splits the MLP input projection into the `mlp_gate`
+    /// and `mlp_up` sites — 5 sites per layer instead of 4, each
+    /// with its own Algorithm-2 threshold
     pub glu: bool,
     /// LM-head output features — the (d_model × vocab) head weight is
     /// the multi-shape pressure case of the shared plan cache
@@ -856,8 +1015,11 @@ pub struct ModelStepConfig {
     /// quantization block size
     pub block: usize,
     pub threads: usize,
-    /// data path all plans run ([`DataPath::auto_for`] by default)
+    /// data path all plans run (the `PALLAS_PATH` override when set,
+    /// else [`DataPath::auto_for`])
     pub path: DataPath,
+    /// opt-in outlier telemetry (see [`LayerStepConfig::telemetry`])
+    pub telemetry: bool,
     /// shared plan-cache capacity; validated ≥
     /// [`working_set`](ModelStepConfig::working_set) at construction
     /// (defaults to exactly that)
@@ -886,7 +1048,9 @@ impl ModelStepConfig {
             tokens,
             block,
             threads: default_threads(),
-            path: DataPath::auto_for(block),
+            path: env_path()
+                .unwrap_or_else(|| DataPath::auto_for(block)),
+            telemetry: false,
             cache_capacity: 0,
             sr_seed: GRAD_SR_SEED,
             shards: default_shards(),
@@ -895,9 +1059,10 @@ impl ModelStepConfig {
         cfg
     }
 
-    /// Linear sites of the whole model: 4 per layer + the LM head.
+    /// Linear sites of the whole model: [`sites_per_layer`] per layer
+    /// (4, or 5 with the GLU gate/up split) + the LM head.
     pub fn n_sites(&self) -> usize {
-        4 * self.layers + 1
+        sites_per_layer(self.glu) * self.layers + 1
     }
 
     /// Plan-cache working set: 2 weight halves (W, Wᵀ) per site.
@@ -917,14 +1082,19 @@ impl ModelStepConfig {
         c.glu = self.glu;
         c.threads = self.threads;
         c.path = self.path;
+        c.telemetry = self.telemetry;
         c.sr_seed = layer_sr_seed(self.sr_seed, layer);
         c.shards = self.shards;
         c
     }
 }
 
-/// Version tag of the warm-state JSON format.
-const WARM_STATE_VERSION: f64 = 1.0;
+/// Version tag of the warm-state JSON format. v2 added the top-level
+/// `format` record (the precision lattice rung the cached plans were
+/// packed for); v1 files predate the lattice and are rejected with a
+/// dedicated error — their plan keys cannot name a format, so a
+/// silent restore could serve i8-packed panels to an Int4 run.
+const WARM_STATE_VERSION: f64 = 2.0;
 const WARM_STATE_KIND: &str = "dbfq_model_step_warm_state";
 
 /// Drives every linear site of an N-layer transformer + LM head
@@ -934,9 +1104,11 @@ const WARM_STATE_KIND: &str = "dbfq_model_step_warm_state";
 /// global site index (`2·site + transposed`), so layers never
 /// conflate even when shape-identical, and the (d_model × vocab)
 /// LM-head plans exercise real multi-shape pressure in the same
-/// cache. One [`ThresholdController`] holds a θ per site (4·layers +
-/// 1) and one [`RateAccumulator`] per model step feeds it executed
-/// rates at [`end_step`](ModelStep::end_step).
+/// cache. One [`ThresholdController`] holds a θ per site
+/// ([`sites_per_layer`]`·layers + 1` — the GLU gate and up
+/// projections each get their own) and one [`RateAccumulator`] per
+/// model step feeds it executed rates at
+/// [`end_step`](ModelStep::end_step).
 ///
 /// Per site the microstep math is [`LayerStep`]'s, by construction
 /// (both call the same private site runner): layer `l` of a
@@ -982,9 +1154,12 @@ pub struct ModelStep {
 /// backward — its permutation is dW's Xᵀ operand) plus the per-site
 /// accounting the batch path would have collected in one go.
 struct PendingSite {
-    fx: FallbackQuant,
+    fx: ActQuant,
     fwd_rate: f64,
+    fwd_f32_rate: f64,
     bwd_rate: f64,
+    bwd_f32_rate: f64,
+    hist: Option<Vec<u64>>,
     hits: u64,
     misses: u64,
     bwd_done: bool,
@@ -1126,10 +1301,12 @@ impl ModelStep {
     /// The gradient SR rounding of global site `s` at microstep `t`:
     /// layer-namespaced so layer `l` matches a standalone
     /// [`LayerStep`] seeded [`layer_sr_seed`]`(sr_seed, l)` (the LM
-    /// head is "layer" `layers`, site 0 of its stream).
+    /// head is "layer" `layers`, site 0 of its stream). The per-layer
+    /// stride is [`sites_per_layer`] — 5 under the GLU gate/up split.
     fn site_rounding(&self, s: usize, t: usize) -> Rounding {
-        let (layer, local) = if s < 4 * self.cfg.layers {
-            (s / 4, s % 4)
+        let spl = sites_per_layer(self.cfg.glu);
+        let (layer, local) = if s < spl * self.cfg.layers {
+            (s / spl, s % spl)
         } else {
             (self.cfg.layers, 0)
         };
@@ -1168,7 +1345,8 @@ impl ModelStep {
             &self.sites, &self.weights, &self.controller.thresholds,
             &rounds, acts, grads, self.cfg.block, self.cfg.threads,
             self.cfg.path, self.kernels, self.cfg.shards,
-            &mut self.cache, &mut self.rates, &mut self.arena,
+            self.cfg.telemetry, &mut self.cache, &mut self.rates,
+            &mut self.arena,
         );
         self.microsteps += 1;
         report
@@ -1222,10 +1400,16 @@ impl ModelStep {
         );
         let s1 = self.cache.stats();
         let fwd_rate = fx.fallback_rate();
+        let fwd_f32_rate = fx.f32_rate();
+        let hist = self.cfg.telemetry
+            .then(|| metric_histogram(fx.metric()));
         self.pending[site] = Some(PendingSite {
             fx,
             fwd_rate,
+            fwd_f32_rate,
             bwd_rate: 0.0,
+            bwd_f32_rate: 0.0,
+            hist,
             hits: s1.hits - s0.hits,
             misses: s1.misses - s0.misses,
             bwd_done: false,
@@ -1257,7 +1441,7 @@ impl ModelStep {
             "backward_site called twice for site {site} in one \
              microstep"
         );
-        let bwd_rate = run_site_backward(
+        let (bwd_rate, bwd_f32_rate) = run_site_backward(
             l, &self.weights[site], &p.fx, dy, sr, 2 * site as u64,
             self.cfg.block, self.cfg.threads, self.cfg.path,
             self.kernels, self.cfg.shards, &mut self.cache,
@@ -1265,6 +1449,7 @@ impl ModelStep {
         );
         let s1 = self.cache.stats();
         p.bwd_rate = bwd_rate;
+        p.bwd_f32_rate = bwd_f32_rate;
         p.bwd_done = true;
         p.hits += s1.hits - s0.hits;
         p.misses += s1.misses - s0.misses;
@@ -1302,6 +1487,9 @@ impl ModelStep {
                 name: l.name,
                 fallback_rate: p.fwd_rate,
                 bwd_fallback_rate: p.bwd_rate,
+                fallback_rate_f32: p.fwd_f32_rate,
+                bwd_fallback_rate_f32: p.bwd_f32_rate,
+                outlier_hist: p.hist,
                 cache_hits: p.hits,
                 cache_misses: p.misses,
                 flops: l.microstep_flops(),
@@ -1321,8 +1509,9 @@ impl ModelStep {
     /// Step boundary (Algorithm 2): fold the microsteps' mean
     /// executed per-site fallback rates into the threshold controller
     /// and reset the accumulator — one update per model step across
-    /// all 4·layers + 1 sites. Returns the applied rates (empty when
-    /// no microstep ran since the last call).
+    /// all [`sites_per_layer`]`·layers + 1` sites. Returns the
+    /// applied rates (empty when no microstep ran since the last
+    /// call).
     pub fn end_step(&mut self) -> Vec<f32> {
         self.rates.flush_into(&mut self.controller)
     }
@@ -1353,6 +1542,10 @@ impl ModelStep {
         obj(vec![
             ("kind", Json::Str(WARM_STATE_KIND.into())),
             ("version", Json::Num(WARM_STATE_VERSION)),
+            // the precision-lattice rung every cached plan was packed
+            // for — validated before anything else config-shaped on
+            // restore, with its own loud error path
+            ("format", Json::Str(self.cfg.path.tag().into())),
             ("config", obj(vec![
                 ("layers", Json::Num(self.cfg.layers as f64)),
                 ("d_model", Json::Num(self.cfg.d_model as f64)),
@@ -1407,10 +1600,45 @@ impl ModelStep {
         {
             return Err("warm state: wrong or missing 'kind'".into());
         }
-        if state.get("version").and_then(|v| v.as_f64())
-            != Some(WARM_STATE_VERSION)
-        {
-            return Err("warm state: unsupported version".into());
+        match state.get("version").and_then(|v| v.as_f64()) {
+            Some(v) if v == WARM_STATE_VERSION => {}
+            Some(v) if v < WARM_STATE_VERSION => {
+                return Err(format!(
+                    "warm state: version {v} is a pre-lattice \
+                     snapshot (no precision-format record); re-save \
+                     the warm state with this build"
+                ));
+            }
+            _ => {
+                return Err("warm state: unsupported version".into());
+            }
+        }
+        // The precision format is validated before the config
+        // fingerprint so a lattice mismatch gets its dedicated
+        // error: the plan keys embed the format, and every prewarmed
+        // entry would miss (or worse, i8 panels would be rebuilt for
+        // an Int4 run) if it restored silently.
+        let fmt = match state.get("format").and_then(|v| v.as_str()) {
+            None => {
+                return Err(
+                    "warm state: missing 'format' — a pre-lattice \
+                     snapshot cannot be restored; re-save the warm \
+                     state with this build"
+                        .into(),
+                );
+            }
+            Some(s) => DataPath::from_tag(s).ok_or_else(|| {
+                format!("warm state: unknown precision format {s:?}")
+            })?,
+        };
+        if fmt != cfg.path {
+            return Err(format!(
+                "warm state: recorded precision format '{}' differs \
+                 from the live config's '{}' (set PALLAS_PATH to \
+                 match or re-save the warm state)",
+                fmt.tag(),
+                cfg.path.tag()
+            ));
         }
         let sc = state
             .get("config")
@@ -2392,5 +2620,183 @@ mod tests {
             assert!(s.fallback_rate < 0.8,
                     "site {} rate {}", s.name, s.fallback_rate);
         }
+    }
+
+    #[test]
+    fn int4_microstep_matches_i64_oracles() {
+        // The lattice path end-to-end: forward on the staged
+        // Int4→Int8→f32 ladder, dX on pure nibble codes, dW on the
+        // transposed ladder — each bit-identical to the exact i64
+        // references in `gemm::int4` (bs = 16 is far inside
+        // `I4_EXACT_MAX_BS`).
+        use crate::gemm::{int4_gemm_reference, staged_gemm_reference};
+        use crate::quant::staged_quant;
+        for threads in [1usize, 2] {
+            let mut cfg = LayerStepConfig::new(32, 48, 24, 16);
+            cfg.glu = false;
+            cfg.threads = threads;
+            cfg.path = DataPath::Int4;
+            let mut ls = LayerStep::with_random_weights(cfg, 0xD06);
+            let theta = 2.0f32;
+            ls.controller_mut().thresholds.fill(theta);
+            let (acts, grads) = synth_microbatch(ls.sites(), 9, 200.0);
+            let sr_base = ls.config().sr_seed;
+            let (outs, rep) = ls.microstep(&acts, &grads);
+            let mut any_promoted = false;
+            for (i, l) in ls.sites().iter().enumerate() {
+                let w = &ls.weights[i];
+                let sx = staged_quant(&acts[i], theta, 16);
+                let qw = block_quant(w, 16, INT4_LEVELS,
+                                     Rounding::Nearest);
+                let y = staged_gemm_reference(&sx, &qw);
+                assert_eq!(outs[i].y.data, y.data,
+                           "fwd {} t{threads}", l.name);
+                // dY rides the (microstep, site)-seeded SR stream,
+                // quantized at the lattice's nibble levels
+                let qdy = block_quant(
+                    &grads[i], 16, INT4_LEVELS,
+                    Rounding::Stochastic(grad_sr_seed(sr_base, 0, i)));
+                let qwt = block_quant(&w.transpose(), 16, INT4_LEVELS,
+                                      Rounding::Nearest);
+                let dx = int4_gemm_reference(&qdy, &qwt);
+                assert_eq!(outs[i].dx.data, dx.data,
+                           "dX {} t{threads}", l.name);
+                // dW's Xᵀ operand is the transposed staged ladder
+                let sxt = sx.transposed();
+                let dw = staged_gemm_reference(&sxt, &qdy);
+                assert_eq!(outs[i].dw.data, dw.data,
+                           "dW {} t{threads}", l.name);
+                // per-tier rates surface on the report
+                assert_eq!(rep.sites[i].fallback_rate.to_bits(),
+                           sx.rate_i8().to_bits(), "rate {}", l.name);
+                assert_eq!(rep.sites[i].fallback_rate_f32.to_bits(),
+                           sx.rate_f32().to_bits(),
+                           "f32 rate {}", l.name);
+                assert_eq!(rep.sites[i].bwd_fallback_rate.to_bits(),
+                           sxt.rate_i8().to_bits(),
+                           "bwd rate {}", l.name);
+                any_promoted |= sx.rate_i8() > 0.0;
+            }
+            assert!(any_promoted,
+                    "outlier batch must promote some blocks past Int4");
+        }
+    }
+
+    #[test]
+    fn telemetry_attaches_outlier_histograms() {
+        let mut cfg = LayerStepConfig::new(32, 48, 24, 16);
+        cfg.glu = false;
+        cfg.telemetry = true;
+        let mut ls = LayerStep::with_random_weights(cfg, 0xD06);
+        let (acts, grads) = synth_microbatch(ls.sites(), 7, 150.0);
+        let (_, rep) = ls.microstep(&acts, &grads);
+        for (i, s) in rep.sites.iter().enumerate() {
+            let h = s.outlier_hist.as_ref()
+                .expect("telemetry on => histogram attached");
+            assert_eq!(h.len(), OUTLIER_HIST_BINS);
+            // one count per activation block, whatever the tier
+            let blocks = fallback_quant(&acts[i], f32::INFINITY, 16,
+                                        INT8_LEVELS, Criterion::AbsMax)
+                .metric
+                .len();
+            assert_eq!(h.iter().sum::<u64>() as usize, blocks,
+                       "site {i}");
+        }
+        // off by default: the reports carry no histograms
+        let mut off = small_step(1);
+        let (acts, grads) = synth_microbatch(off.sites(), 7, 150.0);
+        let (_, rep) = off.microstep(&acts, &grads);
+        assert!(rep.sites.iter().all(|s| s.outlier_hist.is_none()));
+        // binning anchors: pure f32-exponent bins, bit-deterministic
+        let h = metric_histogram(&[0.0, 0.5, 1.0, 3.0, 1e30]);
+        assert_eq!(h.iter().sum::<u64>(), 5);
+        assert_eq!((h[0], h[7], h[8], h[9], h[15]), (1, 1, 1, 1, 1));
+    }
+
+    #[test]
+    fn glu_model_runs_five_sites_per_layer() {
+        let mut cfg = ModelStepConfig::new(2, 32, 48, 80, 24, 16);
+        cfg.glu = true;
+        assert_eq!(cfg.n_sites(), 11);
+        let mut ms = ModelStep::with_random_weights(cfg, 0x610);
+        let names: Vec<&str> =
+            ms.sites().iter().map(|l| l.name).collect();
+        assert_eq!(&names[..5],
+                   &["qkv", "attn_out", "mlp_gate", "mlp_up",
+                     "mlp_down"]);
+        assert_eq!(names[10], "lm_head");
+        let (acts, grads) = synth_microbatch(ms.sites(), 31, 150.0);
+        let (outs, rep) = ms.microstep(&acts, &grads);
+        assert_eq!(outs.len(), 11);
+        assert_eq!(rep.cache_misses as usize, 2 * 11);
+        assert_eq!(ms.cache().len(), 2 * 11,
+                   "gate and up share a shape but not a weight id");
+        // warm state round-trips the 5-site fingerprint and prewarms
+        let state = ms.warm_state(None);
+        let (mut ms2, _) = ModelStep::from_warm_state(
+            ms.config().clone(), ms.weights.clone(), &state)
+            .unwrap();
+        let (_, r2) = ms2.microstep(&acts, &grads);
+        assert_eq!(r2.cache_misses, 0);
+        assert_eq!(r2.cache_hits as usize, 2 * 11);
+        // a plain-MLP config must not restore a GLU snapshot
+        let mut plain = ms.config().clone();
+        plain.glu = false;
+        let err = ModelStep::from_warm_state(
+            plain,
+            ms.weights[..9].to_vec(),
+            &state)
+            .unwrap_err();
+        assert!(err.contains("fingerprint"), "{err}");
+    }
+
+    #[test]
+    fn warm_state_rejects_format_mismatch_and_pre_lattice_files() {
+        // Satellite: the precision-format record. A snapshot from a
+        // different rung of the lattice, an unknown tag, or a
+        // pre-lattice file (no record / old version) must all fail
+        // loudly instead of silently restoring onto the wrong path.
+        let mut ms = small_model(1);
+        let (acts, grads) = synth_microbatch(ms.sites(), 37, 150.0);
+        ms.microstep(&acts, &grads);
+        let state = ms.warm_state(None);
+        let cfg = ms.config().clone();
+        let restore = |st: &Json| {
+            ModelStep::from_warm_state(cfg.clone(),
+                                       ms.weights.clone(), st)
+        };
+        // recorded under a different precision format
+        let other = if cfg.path == DataPath::Int4 { "int8" }
+                    else { "int4" };
+        let mut wrong = state.clone();
+        if let Json::Obj(f) = &mut wrong {
+            f.insert("format".into(), Json::Str(other.into()));
+        }
+        let err = restore(&wrong).unwrap_err();
+        assert!(err.contains("precision format")
+                && err.contains("PALLAS_PATH"), "{err}");
+        // an unrecognized tag is a corrupt file, not a default
+        let mut junk = state.clone();
+        if let Json::Obj(f) = &mut junk {
+            f.insert("format".into(), Json::Str("int2".into()));
+        }
+        let err = restore(&junk).unwrap_err();
+        assert!(err.contains("unknown precision format"), "{err}");
+        // pre-lattice snapshot: the record is missing entirely
+        let mut missing = state.clone();
+        if let Json::Obj(f) = &mut missing {
+            f.remove("format");
+        }
+        let err = restore(&missing).unwrap_err();
+        assert!(err.contains("pre-lattice"), "{err}");
+        // pre-lattice snapshot: old version number
+        let mut old = state.clone();
+        if let Json::Obj(f) = &mut old {
+            f.insert("version".into(), Json::Num(1.0));
+        }
+        let err = restore(&old).unwrap_err();
+        assert!(err.contains("pre-lattice"), "{err}");
+        // the untouched snapshot still restores
+        assert!(restore(&state).is_ok());
     }
 }

@@ -64,16 +64,44 @@ impl LinearShape {
     }
 }
 
-/// The four linear sites of one layer (+ LM head handled separately).
+/// Quantized linear sites per transformer layer: 4 for the plain MLP
+/// (`qkv`, `attn_out`, `mlp_in`, `mlp_down`), 5 for the GLU MLP —
+/// the gate and up projections of `silu(X·W_gate) ⊙ (X·W_up)` are
+/// separate GEMM sites with their own fallback thresholds, because
+/// the gate activation is where the paper's extreme GLU outliers
+/// live (§4.1) and a shared θ would conflate two very different
+/// magnitude distributions.
+pub fn sites_per_layer(glu: bool) -> usize {
+    if glu { 5 } else { 4 }
+}
+
+/// The linear sites of one layer (+ LM head handled separately):
+/// [`sites_per_layer`] entries. With `glu` the MLP input projection
+/// splits into `mlp_gate` and `mlp_up` (each `d_model → d_ff`, same
+/// total parameters as the fused `2·d_ff` projection) so each half
+/// carries its own Algorithm-2 threshold.
 pub fn layer_linears(d_model: usize, d_ff: usize, glu: bool,
                      tokens: usize) -> Vec<LinearShape> {
-    let mlp_out = if glu { 2 * d_ff } else { d_ff };
-    vec![
+    let mut v = vec![
         LinearShape { name: "qkv", m: tokens, n: 3 * d_model, k: d_model },
         LinearShape { name: "attn_out", m: tokens, n: d_model, k: d_model },
-        LinearShape { name: "mlp_in", m: tokens, n: mlp_out, k: d_model },
-        LinearShape { name: "mlp_down", m: tokens, n: d_model, k: d_ff },
-    ]
+    ];
+    if glu {
+        v.push(LinearShape {
+            name: "mlp_gate", m: tokens, n: d_ff, k: d_model,
+        });
+        v.push(LinearShape {
+            name: "mlp_up", m: tokens, n: d_ff, k: d_model,
+        });
+    } else {
+        v.push(LinearShape {
+            name: "mlp_in", m: tokens, n: d_ff, k: d_model,
+        });
+    }
+    v.push(LinearShape {
+        name: "mlp_down", m: tokens, n: d_model, k: d_ff,
+    });
+    v
 }
 
 /// The LM-head linear: `(tokens × d_model) · (d_model × vocab)` — the
@@ -92,7 +120,8 @@ pub fn lm_head_linear(d_model: usize, vocab: usize,
 pub fn model_linears(n_layers: usize, d_model: usize, d_ff: usize,
                      glu: bool, vocab: usize,
                      tokens: usize) -> Vec<LinearShape> {
-    let mut v = Vec::with_capacity(4 * n_layers + 1);
+    let mut v =
+        Vec::with_capacity(sites_per_layer(glu) * n_layers + 1);
     for _ in 0..n_layers {
         v.extend(layer_linears(d_model, d_ff, glu, tokens));
     }
@@ -259,6 +288,41 @@ mod tests {
         let expect = layers as f64 * per_layer
             + lm_head_linear(d, vocab, toks).microstep_flops();
         assert!((total - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn glu_layers_split_the_mlp_input_into_gate_and_up() {
+        let (d, ff, toks) = (32usize, 48, 16);
+        assert_eq!(sites_per_layer(false), 4);
+        assert_eq!(sites_per_layer(true), 5);
+        let sites = layer_linears(d, ff, true, toks);
+        assert_eq!(sites.len(), sites_per_layer(true));
+        let names: Vec<_> = sites.iter().map(|s| s.name).collect();
+        assert_eq!(names, ["qkv", "attn_out", "mlp_gate", "mlp_up",
+                           "mlp_down"]);
+        for l in &sites[2..4] {
+            assert_eq!((l.m, l.n, l.k), (toks, ff, d),
+                       "{} shape", l.name);
+        }
+        // the split conserves parameters and GEMM flops vs the fused
+        // 2·d_ff projection (gate + up = one d→2ff matrix, halved)
+        let plain = layer_linears(d, ff, false, toks);
+        let pg: usize = sites.iter().map(|l| l.k * l.n).sum();
+        let pp: usize = plain.iter().map(|l| l.k * l.n).sum();
+        assert_eq!(pg, pp + d * ff,
+                   "glu adds exactly one d_model x d_ff projection");
+        let fg: f64 = sites.iter().map(|l| l.flops()).sum();
+        let fused = 2.0 * toks as f64 * (2 * ff) as f64 * d as f64;
+        let fp: f64 = plain.iter().map(|l| l.flops()).sum::<f64>()
+            - 2.0 * toks as f64 * ff as f64 * d as f64
+            + fused;
+        assert!((fg - fp).abs() < 1e-9,
+                "gate+up flops must equal the fused projection");
+        // the global layout follows: 5·layers + 1 sites under glu
+        let m = model_linears(2, d, ff, true, 80, toks);
+        assert_eq!(m.len(), 2 * sites_per_layer(true) + 1);
+        assert_eq!(m[7].name, "mlp_gate");
+        assert_eq!(m.last().unwrap().name, "lm_head");
     }
 
     #[test]

@@ -18,6 +18,15 @@ use crate::util::Mat;
 
 pub const INT8_LEVELS: f32 = 127.0;
 
+/// Symmetric 4-bit code range: codes live in `[-7, 7]` (the nibble
+/// value `-8` is deliberately unused so the range stays symmetric,
+/// mirroring the i8 convention of `[-127, 127]`). Quantizing with
+/// these levels through [`block_quant`] produces a [`BlockQuant`]
+/// whose stored `i8` codes are all 4-bit-representable — the
+/// `DataPath::Int4` engine path streams them through nibble-packed
+/// panels ([`PanelPackI4`]).
+pub const INT4_LEVELS: f32 = 7.0;
+
 thread_local! {
     static QUANT_CALLS: Cell<u64> = const { Cell::new(0) };
     static PANEL_PACKS: Cell<u64> = const { Cell::new(0) };
@@ -125,6 +134,70 @@ impl PanelPackI8 {
     }
 }
 
+/// Column-panel-contiguous **nibble-packed** view of 4-bit codes —
+/// the B-operand layout of the GEMM engine's `DataPath::Int4` path.
+/// Same panel geometry as [`PanelPackI8`], but each panel *row* of
+/// `width` codes is packed into `width.div_ceil(2)` bytes: byte `j`
+/// of a row holds code `2j` in its **low** nibble and code `2j+1` in
+/// its **high** nibble (two's-complement 4-bit; an odd row width
+/// leaves the final high nibble zero). Rows therefore stay
+/// byte-aligned for every panel width, and a packed row is decoded
+/// with two shifts per byte: `lo = ((b << 4) as i8) >> 4`,
+/// `hi = (b as i8) >> 4`.
+///
+/// Codes must come from an [`INT4_LEVELS`] quantization (range
+/// `[-7, 7]`); packing debug-asserts the range, because a silent
+/// nibble truncation of an 8-bit code would corrupt results without
+/// any error.
+#[derive(Debug, Clone)]
+pub struct PanelPackI4 {
+    /// panel (block) size the pack was built for
+    pub block: usize,
+    /// logical (unpadded) column count
+    pub cols: usize,
+    /// padded row count — rows stored per panel
+    pub prows: usize,
+    /// offset of panel `bj` in `data` (bytes)
+    pub starts: Vec<usize>,
+    /// logical width of panel `bj` (codes, not bytes)
+    pub widths: Vec<usize>,
+    /// packed nibbles, panel-major; row `k` of panel `bj` occupies
+    /// `widths[bj].div_ceil(2)` bytes
+    pub data: Vec<u8>,
+}
+
+impl PanelPackI4 {
+    /// Bytes per packed row of panel `bj`.
+    #[inline]
+    pub fn row_bytes(&self, bj: usize) -> usize {
+        self.widths[bj].div_ceil(2)
+    }
+
+    /// The contiguous packed rows of panel `bj`
+    /// (`prows * row_bytes(bj)` bytes).
+    #[inline]
+    pub fn panel(&self, bj: usize) -> &[u8] {
+        let rw = self.row_bytes(bj);
+        &self.data[self.starts[bj]..self.starts[bj] + self.prows * rw]
+    }
+
+    /// Resident bytes of the packed codes (two codes per byte).
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Pack two 4-bit codes into one byte (`lo` in the low nibble).
+#[inline]
+fn pack_nibbles(lo: i8, hi: i8) -> u8 {
+    debug_assert!(
+        (-7..=7).contains(&lo) && (-7..=7).contains(&hi),
+        "nibble-packing codes outside [-7, 7] (lo={lo} hi={hi}) — \
+         operand was not quantized with INT4_LEVELS"
+    );
+    (lo as u8 & 0x0F) | ((hi as u8 & 0x0F) << 4)
+}
+
 /// Column-panel packing shared by the f32 and i8 views: walk panels
 /// left to right, copy each panel's `prows` rows contiguously, apply
 /// `conv` per code. Returns `(starts, widths, data)`.
@@ -184,6 +257,9 @@ pub struct BlockQuant {
     panel_cache: OnceLock<Arc<PanelPack>>,
     /// lazily cached i8 column-panel pack of `q` (Int8 path)
     i8_panel_cache: OnceLock<Arc<PanelPackI8>>,
+    /// lazily cached nibble-packed column panels of `q` (Int4 path;
+    /// only valid for INT4_LEVELS quantizations)
+    i4_panel_cache: OnceLock<Arc<PanelPackI4>>,
 }
 
 impl BlockQuant {
@@ -286,6 +362,50 @@ impl BlockQuant {
             .clone()
     }
 
+    /// Cached **nibble-packed** column panels of the codes — the
+    /// B-operand layout of the engine's `DataPath::Int4` path (see
+    /// [`PanelPackI4`]). Built on first use; half the bytes of
+    /// [`col_panels_i8`](BlockQuant::col_panels_i8). Valid only when
+    /// the operand was quantized with [`INT4_LEVELS`] (codes in
+    /// `[-7, 7]`) — packing debug-asserts the range.
+    pub fn col_panels_i4(&self) -> Arc<PanelPackI4> {
+        self.i4_panel_cache
+            .get_or_init(|| {
+                PANEL_PACKS.with(|c| c.set(c.get() + 1));
+                let cb = self.pcols / self.block;
+                let mut starts = Vec::with_capacity(cb);
+                let mut widths = Vec::with_capacity(cb);
+                let mut data: Vec<u8> = Vec::new();
+                for bj in 0..cb {
+                    let c_lo = bj * self.block;
+                    let c_hi = ((bj + 1) * self.block).min(self.cols);
+                    let width = c_hi - c_lo;
+                    let rw = width.div_ceil(2);
+                    starts.push(data.len());
+                    widths.push(width);
+                    for k in 0..self.prows {
+                        let row =
+                            &self.q[k * self.pcols + c_lo..k * self.pcols + c_hi];
+                        for b in 0..rw {
+                            let lo = row[2 * b];
+                            let hi =
+                                if 2 * b + 1 < width { row[2 * b + 1] } else { 0 };
+                            data.push(pack_nibbles(lo, hi));
+                        }
+                    }
+                }
+                Arc::new(PanelPackI4 {
+                    block: self.block,
+                    cols: self.cols,
+                    prows: self.prows,
+                    starts,
+                    widths,
+                    data,
+                })
+            })
+            .clone()
+    }
+
     /// The transposed quantization, built by **permuting** the stored
     /// codes and per-block grids instead of re-running quantization on
     /// `xᵀ`.
@@ -333,6 +453,7 @@ impl BlockQuant {
             f32_cache: OnceLock::new(),
             panel_cache: OnceLock::new(),
             i8_panel_cache: OnceLock::new(),
+            i4_panel_cache: OnceLock::new(),
         }
     }
 
@@ -351,6 +472,11 @@ impl BlockQuant {
     /// Whether the i8 column-panel pack has been materialized.
     pub fn i8_panels_built(&self) -> bool {
         self.i8_panel_cache.get().is_some()
+    }
+
+    /// Whether the nibble-packed column panels have been materialized.
+    pub fn i4_panels_built(&self) -> bool {
+        self.i4_panel_cache.get().is_some()
     }
 }
 
@@ -483,6 +609,7 @@ pub fn block_quant_threads(x: &Mat, block: usize, levels: f32,
         f32_cache: OnceLock::new(),
         panel_cache: OnceLock::new(),
         i8_panel_cache: OnceLock::new(),
+        i4_panel_cache: OnceLock::new(),
     }
 }
 
@@ -667,6 +794,71 @@ mod tests {
         }
         assert_eq!(4 * pi.bytes(), p.bytes());
         assert!(Arc::ptr_eq(&pi, &bq.col_panels_i8()));
+    }
+
+    #[test]
+    fn int4_codes_in_range_and_nibble_pack_roundtrips() {
+        // Odd widths included so the zero-filled final high nibble and
+        // the byte-aligned row stride are both exercised.
+        for (rows, cols) in [(32usize, 32usize), (40, 41), (17, 23)] {
+            let x = randmat(rows, cols, 77 + cols as u64);
+            let bq = block_quant(&x, 16, INT4_LEVELS, Rounding::Nearest);
+            assert!(bq.q.iter().all(|&q| (-7..=7).contains(&(q as i32))));
+            let p4 = bq.col_panels_i4();
+            assert_eq!(p4.widths.len(), bq.cb());
+            assert_eq!(p4.widths.iter().sum::<usize>(), bq.cols);
+            for bj in 0..bq.cb() {
+                let panel = p4.panel(bj);
+                let (c_lo, w) = (bj * bq.block, p4.widths[bj]);
+                let rw = p4.row_bytes(bj);
+                assert_eq!(panel.len(), bq.prows * rw);
+                for k in 0..bq.prows {
+                    for j in 0..w {
+                        let byte = panel[k * rw + j / 2];
+                        let code = if j % 2 == 0 {
+                            ((byte << 4) as i8) >> 4
+                        } else {
+                            (byte as i8) >> 4
+                        };
+                        assert_eq!(code,
+                                   bq.q[k * bq.pcols + c_lo + j],
+                                   "panel {bj} row {k} col {j}");
+                    }
+                    if w % 2 == 1 {
+                        // odd width: final high nibble must be zero
+                        assert_eq!(panel[k * rw + rw - 1] >> 4, 0);
+                    }
+                }
+            }
+            // cached — same allocation, and exactly one pack counted
+            let (_, p0) = quant_work_counters();
+            assert!(Arc::ptr_eq(&p4, &bq.col_panels_i4()));
+            let (_, p1) = quant_work_counters();
+            assert_eq!(p1 - p0, 0);
+            // half the i8 pack's bytes (up to odd-width rounding)
+            let pi8 = bq.col_panels_i8();
+            assert!(p4.bytes() <= pi8.bytes() / 2 + bq.prows * bq.cb());
+        }
+    }
+
+    #[test]
+    fn int4_stochastic_rounding_unbiased() {
+        let x = randmat(16, 16, 21);
+        let mut acc = vec![0.0f64; 256];
+        let trials = 400;
+        for t in 0..trials {
+            let bq = block_quant(&x, 16, INT4_LEVELS,
+                                 Rounding::Stochastic(2000 + t));
+            let d = bq.dequant();
+            for (a, v) in acc.iter_mut().zip(&d.data) {
+                *a += *v as f64;
+            }
+        }
+        let scale = x.abs_max() / 7.0;
+        let tol = 5.0 * scale as f64 / (trials as f64).sqrt();
+        for (a, v) in acc.iter().zip(&x.data) {
+            assert!((a / trials as f64 - *v as f64).abs() < tol + 1e-6);
+        }
     }
 
     #[test]

@@ -10,11 +10,15 @@ pub mod fallback;
 pub mod granularity;
 pub mod group;
 pub mod metrics;
+pub mod staged;
 
 pub use block::{block_quant, block_quant_threads, int16_block_quant,
                 quant_work_counters, BlockQuant, PanelPack,
-                PanelPackI8, Rounding, INT8_LEVELS};
+                PanelPackI4, PanelPackI8, Rounding, INT4_LEVELS,
+                INT8_LEVELS};
 pub use fallback::{fallback_quant, fallback_quant_threads,
                    theta_for_rate, Criterion, FallbackQuant};
+pub use staged::{staged_quant, staged_quant_threads, StagedQuant,
+                 Tier, STAGED_F32_KAPPA};
 pub use granularity::{granular_quant, switchback_matmul, Granularity};
 pub use group::{group_quant, levels_for_bits, GroupQuant};

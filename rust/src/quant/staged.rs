@@ -1,0 +1,398 @@
+//! Staged Int4 → Int8 → f32 fallback quantization — the precision
+//! lattice's activation-side representation (`DataPath::Int4`).
+//!
+//! The paper's Algorithm 1 picks, per block, between one INT8 pass and
+//! a two-pass INT8 fallback. On the INT4 data path the same machinery
+//! drives a three-tier ladder instead:
+//!
+//! * **Tier I4** (metric ≤ θ): the block is represented by its INT4
+//!   base codes alone.
+//! * **Tier I8** (metric > θ): an INT8 residual `Q8(G − Q4(G))` rides
+//!   along — the block's effective precision is INT4 + INT8, i.e. the
+//!   Jetfire-style INT8 tier.
+//! * **Tier F32** (metric > κ·θ, `κ =` [`STAGED_F32_KAPPA`]): the
+//!   exact f32 remainder `G − Q4(G) − Q8(…)` is *also* carried, so the
+//!   block participates at (f32) full precision — the "fall all the
+//!   way back" rung for the extreme GLU-activation outliers the paper
+//!   is about.
+//!
+//! The selection metric is the per-block **AbsMax** (the paper-default
+//! criterion — free from the base quantization's first sweep, and the
+//! only criterion whose transposed quantization is an exact
+//! permutation; see [`FallbackQuant::transposed`] for the argument).
+//! θ comes from the same Algorithm-2 delay controller that drives the
+//! binary fallback: the executed **I8-tier rate** (`metric > θ`) is
+//! what the pipeline reports back, so the controller's band semantics
+//! are unchanged; κ is a fixed multiplier, not a second control loop.
+//!
+//! Residual and remainder grids are computed for *every* block (like
+//! [`FallbackQuant`], whose `rq` also spans all blocks) — the tier
+//! masks gate *execution*, not construction, which keeps construction
+//! bitwise thread-count-invariant and makes
+//! [`transposed`](StagedQuant::transposed) a pure permutation.
+//!
+//! [`FallbackQuant`]: super::fallback::FallbackQuant
+//! [`FallbackQuant::transposed`]: super::fallback::FallbackQuant::transposed
+
+use crate::util::threadpool::{default_threads, parallel_items};
+use crate::util::Mat;
+
+use super::block::{block_quant_threads, safe_scale, BlockQuant,
+                   Rounding, INT4_LEVELS, INT8_LEVELS};
+
+/// Fixed multiplier on θ for the f32 tier: a block whose AbsMax
+/// exceeds `κ·θ` is too hot even for the INT8 residual and carries
+/// its exact f32 remainder instead. One knob (θ) stays under
+/// Algorithm-2 control; κ is deliberately constant so the staged
+/// ladder adds no second feedback loop.
+pub const STAGED_F32_KAPPA: f32 = 4.0;
+
+/// Per-block precision tier of a staged quantization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// INT4 base codes only.
+    I4,
+    /// base + INT8 residual.
+    I8,
+    /// base + INT8 residual + exact f32 remainder.
+    F32,
+}
+
+/// Staged three-tier quantization of an activation operand (A side of
+/// the GEMM). The base is an [`INT4_LEVELS`] [`BlockQuant`]; `rq`
+/// holds the INT8 residual codes, `r2` the f32 second remainder, both
+/// in the base's padded row-major layout. `u8_mask` / `uf_mask` gate
+/// the residual / remainder terms per block at execution time.
+///
+/// Like [`BlockQuant`], treat the struct as frozen after construction
+/// — the engine borrows the grids zero-copy across plan executions.
+#[derive(Debug, Clone)]
+pub struct StagedQuant {
+    pub base: BlockQuant,
+    /// INT8 residual codes of `x − dequant(base)` (all blocks)
+    pub rq: Vec<i8>,
+    pub rscale: Vec<f32>,
+    /// exact f32 remainder `x − dequant(base) − rq·rscale` (all
+    /// blocks, padded layout; zero in the padding)
+    pub r2: Vec<f32>,
+    /// per-block tier (row-block-major grid, like `base.scale`)
+    pub tier: Vec<Tier>,
+    /// AbsMax selection metric per block (= `base.absmax`)
+    pub metric: Vec<f32>,
+    /// tier ≥ I8 (the Algorithm-2-visible fallback decision)
+    pub u8_mask: Vec<bool>,
+    /// tier = F32
+    pub uf_mask: Vec<bool>,
+}
+
+impl StagedQuant {
+    /// Fraction of blocks promoted past the INT4 base (tier ≥ I8) —
+    /// the rate the delay controller sees.
+    pub fn rate_i8(&self) -> f64 {
+        if self.u8_mask.is_empty() {
+            return 0.0;
+        }
+        self.u8_mask.iter().filter(|&&b| b).count() as f64
+            / self.u8_mask.len() as f64
+    }
+
+    /// Fraction of blocks promoted all the way to f32 (tier = F32).
+    pub fn rate_f32(&self) -> f64 {
+        if self.uf_mask.is_empty() {
+            return 0.0;
+        }
+        self.uf_mask.iter().filter(|&&b| b).count() as f64
+            / self.uf_mask.len() as f64
+    }
+
+    /// Dequantize: base + u8·residual + uf·remainder.
+    pub fn dequant(&self) -> Mat {
+        let b = self.base.block;
+        let cb = self.base.cb();
+        let mut m = self.base.dequant();
+        for r in 0..m.rows {
+            for c in 0..m.cols {
+                let bi = (r / b) * cb + c / b;
+                let pc = r * self.base.pcols + c;
+                if self.u8_mask[bi] {
+                    m.data[r * m.cols + c] +=
+                        self.rq[pc] as f32 * self.rscale[bi];
+                }
+                if self.uf_mask[bi] {
+                    m.data[r * m.cols + c] += self.r2[pc];
+                }
+            }
+        }
+        m
+    }
+
+    /// The transposed staged quantization, built by **permuting** the
+    /// stored grids instead of re-running the ladder on `xᵀ` — the dW
+    /// path's zero-cost reuse, mirroring
+    /// [`FallbackQuant::transposed`](super::fallback::FallbackQuant::transposed).
+    ///
+    /// Bit-identical to `staged_quant(&x.transpose(), ..)` because
+    /// every per-block quantity here is either an elementwise map or a
+    /// max over the same elements (the base is Nearest-rounded, the
+    /// AbsMax metric is the base absmax, and both tier comparisons are
+    /// per-block scalars) — there is no order-sensitive accumulation
+    /// anywhere in the ladder. Bumps no quantization work counter.
+    pub fn transposed(&self) -> StagedQuant {
+        let base = self.base.transposed();
+        let (prows, pcols) = (self.base.prows, self.base.pcols);
+        let tpcols = prows;
+        let mut rq = vec![0i8; self.rq.len()];
+        let mut r2 = vec![0.0f32; self.r2.len()];
+        for r in 0..prows {
+            for c in 0..pcols {
+                rq[c * tpcols + r] = self.rq[r * pcols + c];
+                r2[c * tpcols + r] = self.r2[r * pcols + c];
+            }
+        }
+        let (rb, cb) = (self.base.rb(), self.base.cb());
+        let mut rscale = vec![1.0f32; rb * cb];
+        let mut tier = vec![Tier::I4; rb * cb];
+        let mut metric = vec![0.0f32; rb * cb];
+        let mut u8_mask = vec![false; rb * cb];
+        let mut uf_mask = vec![false; rb * cb];
+        for br in 0..rb {
+            for bc in 0..cb {
+                let (src, dst) = (br * cb + bc, bc * rb + br);
+                rscale[dst] = self.rscale[src];
+                tier[dst] = self.tier[src];
+                metric[dst] = self.metric[src];
+                u8_mask[dst] = self.u8_mask[src];
+                uf_mask[dst] = self.uf_mask[src];
+            }
+        }
+        StagedQuant { base, rq, rscale, r2, tier, metric, u8_mask, uf_mask }
+    }
+}
+
+/// Residual-ladder pass for one block row: tier decision from the base
+/// AbsMax, INT8 residual codes, exact f32 remainder.
+#[allow(clippy::too_many_arguments)]
+fn staged_block_row(
+    x: &Mat, base: &BlockQuant, theta: f32, block: usize, br: usize,
+    rqrow: &mut [i8], srow: &mut [f32], r2row: &mut [f32],
+    trow: &mut [Tier], mrow: &mut [f32], u8row: &mut [bool],
+    ufrow: &mut [bool],
+) {
+    let cb = srow.len();
+    let r0 = br * block;
+    let r1 = (r0 + block).min(x.rows);
+    for bc in 0..cb {
+        let bi = br * cb + bc;
+        let c0 = bc * block;
+        let c1 = (c0 + block).min(x.cols);
+        let s = base.scale[bi];
+        let am = base.absmax[bi];
+        mrow[bc] = am;
+        // κ·θ with θ = +∞ must stay +∞ (fallback disabled), and any
+        // finite θ scales; NaN never arises from the controller.
+        let t = if am > theta * STAGED_F32_KAPPA {
+            Tier::F32
+        } else if am > theta {
+            Tier::I8
+        } else {
+            Tier::I4
+        };
+        trow[bc] = t;
+        u8row[bc] = t != Tier::I4;
+        ufrow[bc] = t == Tier::F32;
+        // INT8 residual of the INT4 base (one sweep for rmax)
+        let mut rmax = 0.0f32;
+        for r in r0..r1 {
+            for c in c0..c1 {
+                let deq = base.q[r * base.pcols + c] as f32 * s;
+                rmax = rmax.max((x.at(r, c) - deq).abs());
+            }
+        }
+        let rs = safe_scale(rmax, INT8_LEVELS);
+        srow[bc] = rs;
+        let inv = 1.0 / rs;
+        for r in r0..r1 {
+            for c in c0..c1 {
+                let deq = base.q[r * base.pcols + c] as f32 * s;
+                let resid = x.at(r, c) - deq;
+                let code = (resid * inv)
+                    .round_ties_even()
+                    .clamp(-INT8_LEVELS, INT8_LEVELS)
+                    as i8;
+                rqrow[(r - r0) * base.pcols + c] = code;
+                // exact f32 remainder after both integer tiers
+                r2row[(r - r0) * base.pcols + c] =
+                    resid - code as f32 * rs;
+            }
+        }
+    }
+}
+
+/// Staged three-tier quantization of `x` with threshold `theta` (the
+/// INT8 promotion threshold; the f32 tier triggers at
+/// `theta ·`[`STAGED_F32_KAPPA`]). The INT4 base is Nearest-rounded —
+/// like [`fallback_quant`](super::fallback::fallback_quant)'s base —
+/// so the dW path can reuse the forward's quantization by permutation.
+/// Runs on [`default_threads`] workers.
+pub fn staged_quant(x: &Mat, theta: f32, block: usize) -> StagedQuant {
+    staged_quant_threads(x, theta, block, default_threads())
+}
+
+/// [`staged_quant`] with an explicit worker count (block rows are the
+/// parallel unit). Bitwise thread-count-invariant: no RNG, disjoint
+/// block-row outputs.
+pub fn staged_quant_threads(x: &Mat, theta: f32, block: usize,
+                            threads: usize) -> StagedQuant {
+    let base = block_quant_threads(x, block, INT4_LEVELS,
+                                   Rounding::Nearest, threads);
+    let (rb, cb) = (base.rb(), base.cb());
+    let mut rq = vec![0i8; base.q.len()];
+    let mut rscale = vec![1.0f32; rb * cb];
+    let mut r2 = vec![0.0f32; base.q.len()];
+    let mut tier = vec![Tier::I4; rb * cb];
+    let mut metric = vec![0.0f32; rb * cb];
+    let mut u8_mask = vec![false; rb * cb];
+    let mut uf_mask = vec![false; rb * cb];
+
+    if rb > 0 && cb > 0 {
+        let items: Vec<_> = rq
+            .chunks_mut(block * base.pcols)
+            .zip(rscale.chunks_mut(cb))
+            .zip(r2.chunks_mut(block * base.pcols))
+            .zip(tier.chunks_mut(cb))
+            .zip(metric.chunks_mut(cb))
+            .zip(u8_mask.chunks_mut(cb))
+            .zip(uf_mask.chunks_mut(cb))
+            .collect();
+        parallel_items(
+            items, threads,
+            |br, ((((((rqrow, srow), r2row), trow), mrow), u8row),
+                  ufrow)| {
+                staged_block_row(
+                    x, &base, theta, block, br, rqrow, srow, r2row,
+                    trow, mrow, u8row, ufrow,
+                );
+            },
+        );
+    }
+    StagedQuant { base, rq, rscale, r2, tier, metric, u8_mask, uf_mask }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::metrics::rmse;
+    use crate::util::rng::Pcg64;
+
+    fn outlier_mat(rows: usize, cols: usize, seed: u64, n_out: usize,
+                   mag: f32) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let mut m = Mat::randn(rows, cols, 1.0, &mut rng);
+        for _ in 0..n_out {
+            let i = rng.below(m.data.len());
+            let jitter = 1.0 + rng.uniform_f32();
+            m.data[i] = mag * jitter
+                * if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+        }
+        m
+    }
+
+    #[test]
+    fn tiers_follow_theta_and_kappa() {
+        let x = outlier_mat(64, 64, 1, 6, 100.0);
+        let sq = staged_quant(&x, 3.0, 16);
+        for (bi, &t) in sq.tier.iter().enumerate() {
+            let am = sq.metric[bi];
+            let want = if am > 3.0 * STAGED_F32_KAPPA {
+                Tier::F32
+            } else if am > 3.0 {
+                Tier::I8
+            } else {
+                Tier::I4
+            };
+            assert_eq!(t, want, "block {bi} absmax {am}");
+            assert_eq!(sq.u8_mask[bi], t != Tier::I4);
+            assert_eq!(sq.uf_mask[bi], t == Tier::F32);
+        }
+        // θ = +∞ disables every promotion (κ·∞ = ∞)
+        let off = staged_quant(&x, f32::INFINITY, 16);
+        assert_eq!(off.rate_i8(), 0.0);
+        assert_eq!(off.rate_f32(), 0.0);
+        // θ < 0 promotes everything to F32
+        let all = staged_quant(&x, -1.0, 16);
+        assert_eq!(all.rate_f32(), 1.0);
+    }
+
+    #[test]
+    fn each_tier_tightens_the_error() {
+        let x = outlier_mat(64, 64, 2, 8, 300.0);
+        // all-I4 vs all-I8 vs all-F32 representations of the same data
+        let i4 = staged_quant(&x, f32::INFINITY, 16);
+        let e4 = rmse(&i4.dequant().data, &x.data);
+        let mut i8t = staged_quant(&x, f32::INFINITY, 16);
+        i8t.u8_mask.iter_mut().for_each(|u| *u = true);
+        let e8 = rmse(&i8t.dequant().data, &x.data);
+        let f32t = staged_quant(&x, -1.0, 16);
+        let ef = rmse(&f32t.dequant().data, &x.data);
+        assert!(e8 < e4 * 0.2, "e8={e8} e4={e4}");
+        assert!(ef < e8 * 0.2, "ef={ef} e8={e8}");
+        // the f32 tier is the exact remainder: near-lossless
+        assert!(ef < 1e-4, "ef={ef}");
+    }
+
+    #[test]
+    fn transposed_bit_identical_to_requantized_transpose() {
+        use crate::quant::block::quant_work_counters;
+        for (rows, cols, theta) in
+            [(32usize, 32usize, 30.0f32), (40, 23, 3.0), (17, 49, -1.0)]
+        {
+            let x = outlier_mat(rows, cols, 0xA7, 6, 200.0);
+            let sq = staged_quant(&x, theta, 16);
+            let before = quant_work_counters();
+            let st = sq.transposed();
+            let after = quant_work_counters();
+            assert_eq!(before, after,
+                       "transposed() must not count as quant work");
+            let fresh = staged_quant(&x.transpose(), theta, 16);
+            assert_eq!(st.base.q, fresh.base.q, "({rows},{cols})");
+            assert_eq!(st.base.scale, fresh.base.scale);
+            assert_eq!(st.rq, fresh.rq);
+            assert_eq!(st.rscale, fresh.rscale);
+            assert_eq!(
+                st.r2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                fresh.r2.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+            assert_eq!(st.tier, fresh.tier);
+            assert_eq!(st.u8_mask, fresh.u8_mask);
+            assert_eq!(st.uf_mask, fresh.uf_mask);
+        }
+    }
+
+    #[test]
+    fn parallel_staged_thread_count_invariant() {
+        let x = outlier_mat(70, 55, 8, 12, 250.0);
+        let s1 = staged_quant_threads(&x, 3.0, 16, 1);
+        for threads in [2usize, 4, 7] {
+            let st = staged_quant_threads(&x, 3.0, 16, threads);
+            assert_eq!(s1.base.q, st.base.q, "threads={threads}");
+            assert_eq!(s1.rq, st.rq);
+            assert_eq!(s1.rscale, st.rscale);
+            assert_eq!(
+                s1.r2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                st.r2.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+            assert_eq!(s1.tier, st.tier);
+        }
+    }
+
+    #[test]
+    fn base_codes_are_nibble_range() {
+        let x = outlier_mat(48, 48, 9, 5, 150.0);
+        let sq = staged_quant(&x, 2.0, 16);
+        assert!(sq.base.q.iter()
+            .all(|&q| (-7..=7).contains(&(q as i32))));
+        // and the nibble pack of the base is buildable
+        let p4 = sq.base.col_panels_i4();
+        assert_eq!(p4.widths.iter().sum::<usize>(), sq.base.cols);
+    }
+}

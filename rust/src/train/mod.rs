@@ -11,7 +11,10 @@
 //! * identity attention — the "attention output" is the V third of
 //!   the qkv projection, so the site shapes and data flow match a
 //!   real block without a softmax in the training path,
-//! * ReLU MLP (`glu = false`) and plain residual adds,
+//! * ReLU MLP by default, or a SwiGLU MLP under `glu = true` —
+//!   gate ⊙ up through the separate `mlp_gate` / `mlp_up` sites,
+//!   each with its own fallback threshold — and plain residual
+//!   adds,
 //! * masked stable softmax cross-entropy at the LM head; finetune
 //!   batches mask the loss to their answer spans
 //!   ([`answer_span_loss`] convention: the loss of predicting the
@@ -30,14 +33,16 @@
 //!
 //! ## Checkpoints
 //!
-//! [`TrainLoop::checkpoint`] is format [`TRAIN_STATE_VERSION`] = 2
+//! [`TrainLoop::checkpoint`] is format [`TRAIN_STATE_VERSION`] = 3
 //! (kind [`TRAIN_STATE_KIND`]): master weights (f32-lossless f64
-//! arrays), optimizer state, loader `(seed, cursor)`, and the
+//! arrays), optimizer state, loader `(seed, cursor)`, the run's
+//! precision-format record (`format`, the [`DataPath`] tag), and the
 //! embedded [`ModelStep::warm_state`]. Version 1 was the bare
-//! optimizer-less warm state of the pre-train-loop era; it cannot
-//! resume an optimizer run, so restore rejects anything but an exact
-//! kind + version match with a loud error. A resumed run continues
-//! bit-identically to the uninterrupted one.
+//! optimizer-less warm state of the pre-train-loop era; version 2
+//! predates the precision lattice and carries no format record —
+//! both are pre-lattice snapshots, so restore rejects anything but
+//! an exact kind + version + format match with a loud error. A
+//! resumed run continues bit-identically to the uninterrupted one.
 //!
 //! [`answer_span_loss`]: crate::data::answer_span_loss
 //! [`ModelStep`]: crate::gemm::ModelStep
@@ -52,8 +57,8 @@ pub use optimizer::{optimizer_from_json, Adam, Optimizer,
 use crate::coordinator::{LrSchedule, MetricsLog};
 use crate::gemm::kernels::Kernels;
 use crate::gemm::{matmul, DataPath, ModelStep, ModelStepConfig,
-                  StepReport};
-use crate::model::{model_linears, LinearShape};
+                  StepReport, OUTLIER_HIST_BINS};
+use crate::model::{model_linears, sites_per_layer, LinearShape};
 use crate::quant::quant_work_counters;
 use crate::util::json::{arr_f64, obj, Json};
 use crate::util::rng::Pcg64;
@@ -65,10 +70,25 @@ pub const TRAIN_STATE_KIND: &str = "dbfq_train_checkpoint";
 /// Current training checkpoint version. History: **1** — bare
 /// [`ModelStep::warm_state`] with no optimizer/loader section
 /// (pre-train-loop); **2** — adds optimizer state, loader cursor,
-/// and master weights. v1 files cannot resume an optimizer run, so
-/// [`TrainLoop::from_checkpoint`] rejects them loudly instead of
-/// resuming with silently reset optimizer moments.
-pub const TRAIN_STATE_VERSION: f64 = 2.0;
+/// and master weights; **3** — adds the precision-format record
+/// (`format`) and the `glu` fingerprint field. v1 files cannot
+/// resume an optimizer run and v2 files cannot say which rung of
+/// the precision lattice produced them, so
+/// [`TrainLoop::from_checkpoint`] rejects both loudly instead of
+/// resuming onto silently different arithmetic.
+pub const TRAIN_STATE_VERSION: f64 = 3.0;
+
+/// Metric-log key per outlier-histogram bin: bin `b` counts blocks
+/// whose AbsMax metric has f32 exponent `b − 8` (see
+/// [`crate::gemm::metric_histogram`]).
+const HIST_KEYS: [&str; OUTLIER_HIST_BINS] = [
+    "outlier_hist_00", "outlier_hist_01", "outlier_hist_02",
+    "outlier_hist_03", "outlier_hist_04", "outlier_hist_05",
+    "outlier_hist_06", "outlier_hist_07", "outlier_hist_08",
+    "outlier_hist_09", "outlier_hist_10", "outlier_hist_11",
+    "outlier_hist_12", "outlier_hist_13", "outlier_hist_14",
+    "outlier_hist_15",
+];
 
 /// Configuration of a [`TrainLoop`].
 #[derive(Debug, Clone)]
@@ -85,6 +105,13 @@ pub struct TrainLoopConfig {
     pub threads: usize,
     pub shards: usize,
     pub path: DataPath,
+    /// SwiGLU MLP through the split `mlp_gate` / `mlp_up` sites
+    /// (5 quantized sites per layer) instead of the ReLU MLP (4)
+    pub glu: bool,
+    /// opt-in outlier telemetry: per-block activation-magnitude
+    /// histograms per site per step, streamed through the metrics
+    /// log and summed into [`StepStats::outlier_hist`]
+    pub telemetry: bool,
     pub lr: LrSchedule,
     /// global-norm gradient clip; `0` disables
     pub grad_clip: f64,
@@ -118,6 +145,8 @@ impl TrainLoopConfig {
             threads: ms.threads,
             shards: ms.shards,
             path: ms.path,
+            glu: false,
+            telemetry: false,
             lr: LrSchedule { peak: 5e-3, warmup: 10, total: 0 },
             grad_clip: 1.0,
             accum: 1,
@@ -133,16 +162,17 @@ impl TrainLoopConfig {
     }
 
     pub fn n_sites(&self) -> usize {
-        4 * self.layers + 1
+        sites_per_layer(self.glu) * self.layers + 1
     }
 
-    /// The [`ModelStepConfig`] of the quantized engine: always
-    /// `glu = false` (the surrogate MLP is ReLU).
+    /// The [`ModelStepConfig`] of the quantized engine, mirroring
+    /// this config's MLP flavor, data path, and telemetry knobs.
     pub fn model_config(&self) -> ModelStepConfig {
         let mut ms = ModelStepConfig::new(
             self.layers, self.d_model, self.d_ff, self.vocab,
             self.tokens(), self.block);
-        ms.glu = false;
+        ms.glu = self.glu;
+        ms.telemetry = self.telemetry;
         ms.threads = self.threads;
         ms.shards = self.shards;
         ms.path = self.path;
@@ -169,8 +199,15 @@ pub struct StepStats {
     pub grad_norm: f64,
     pub lr: f64,
     /// mean executed forward fallback rate across sites and
-    /// microbatches (0 on the exact engine)
+    /// microbatches (0 on the exact engine). On the Int4 lattice
+    /// this is the tier ≥ Int8 promotion rate.
     pub fallback_rate: f64,
+    /// mean f32-tier promotion rate (0 off the Int4 lattice)
+    pub fallback_rate_f32: f64,
+    /// per-block activation-magnitude histogram, summed over sites
+    /// and microbatches ([`crate::gemm::metric_histogram`] bins);
+    /// present only when the config's `telemetry` knob is on
+    pub outlier_hist: Option<Vec<u64>>,
     pub cache_hits: u64,
     pub cache_misses: u64,
     /// thread-global quantization-call / panel-pack deltas over the
@@ -201,8 +238,13 @@ struct Trace {
     /// per-site input activation (for the exact engine's dW; the
     /// quantized engine keeps its own quantized copy internally)
     xs: Vec<Mat>,
-    /// per-layer pre-ReLU MLP activation (for the ReLU mask)
+    /// per-layer pre-ReLU MLP activation (for the ReLU mask;
+    /// empty under `glu`)
     hs: Vec<Mat>,
+    /// per-layer pre-activation gate projection (SwiGLU only)
+    gs: Vec<Mat>,
+    /// per-layer up projection (SwiGLU only)
+    us: Vec<Mat>,
     logits: Mat,
 }
 
@@ -245,6 +287,36 @@ fn relu_bwd(d: &Mat, pre: &Mat) -> Mat {
         }
     }
     out
+}
+
+fn sigmoid(v: f32) -> f32 {
+    1.0 / (1.0 + (-v).exp())
+}
+
+/// SwiGLU mix: `silu(g) ⊙ u`, elementwise over same-shape matrices.
+fn glu_mix(g: &Mat, u: &Mat) -> Mat {
+    assert_eq!((g.rows, g.cols), (u.rows, u.cols));
+    let mut out = g.clone();
+    for (v, &uu) in out.data.iter_mut().zip(&u.data) {
+        *v = *v * sigmoid(*v) * uu;
+    }
+    out
+}
+
+/// Backward of [`glu_mix`]: `(dGate, dUp)` from the downstream
+/// gradient `da` and the saved pre-activation gate / up projections.
+/// `silu'(g) = σ(g)·(1 + g·(1 − σ(g)))`.
+fn glu_bwd(da: &Mat, g: &Mat, u: &Mat) -> (Mat, Mat) {
+    let mut dgate = da.clone();
+    let mut dup = da.clone();
+    for i in 0..da.data.len() {
+        let gv = g.data[i];
+        let s = sigmoid(gv);
+        dup.data[i] = da.data[i] * gv * s;
+        dgate.data[i] =
+            da.data[i] * u.data[i] * (s * (1.0 + gv * (1.0 - s)));
+    }
+    (dgate, dup)
 }
 
 /// Split a `(batch, seq + 1)` window batch into inputs (positions
@@ -336,7 +408,7 @@ impl TrainLoop {
                    "loader vocab vs config");
         assert!(cfg.accum >= 1, "accum must be >= 1");
         let sites = model_linears(cfg.layers, cfg.d_model, cfg.d_ff,
-                                  false, cfg.vocab, cfg.tokens());
+                                  cfg.glu, cfg.vocab, cfg.tokens());
         let mut rng = Pcg64::new(cfg.init_seed);
         let embed =
             Mat::randn(cfg.vocab, cfg.d_model, 1.0, &mut rng);
@@ -479,29 +551,47 @@ impl TrainLoop {
     fn exact_forward(&self, inputs: &[i32]) -> Trace {
         let d = self.cfg.d_model;
         let th = self.cfg.threads;
+        let spl = sites_per_layer(self.cfg.glu);
         let mut xs = Vec::with_capacity(self.sites.len());
         let mut hs = Vec::with_capacity(self.cfg.layers);
+        let mut gs = Vec::with_capacity(self.cfg.layers);
+        let mut us = Vec::with_capacity(self.cfg.layers);
         let mut x = self.embed_rows(inputs);
         for layer in 0..self.cfg.layers {
-            let base = 4 * layer;
+            let base = spl * layer;
             xs.push(x.clone());
             let qkv = matmul(&x, &self.weights[base], th);
             let v = take_cols(&qkv, 2 * d, 3 * d);
             xs.push(v.clone());
             let attn = matmul(&v, &self.weights[base + 1], th);
             add_into(&mut x, &attn);
-            xs.push(x.clone());
-            let h = matmul(&x, &self.weights[base + 2], th);
-            let a = relu(&h);
-            hs.push(h);
-            xs.push(a.clone());
-            let m = matmul(&a, &self.weights[base + 3], th);
-            add_into(&mut x, &m);
+            if self.cfg.glu {
+                // mlp_gate and mlp_up both read the post-attention
+                // residual stream
+                xs.push(x.clone());
+                xs.push(x.clone());
+                let g = matmul(&x, &self.weights[base + 2], th);
+                let u = matmul(&x, &self.weights[base + 3], th);
+                let a = glu_mix(&g, &u);
+                gs.push(g);
+                us.push(u);
+                xs.push(a.clone());
+                let m = matmul(&a, &self.weights[base + 4], th);
+                add_into(&mut x, &m);
+            } else {
+                xs.push(x.clone());
+                let h = matmul(&x, &self.weights[base + 2], th);
+                let a = relu(&h);
+                hs.push(h);
+                xs.push(a.clone());
+                let m = matmul(&a, &self.weights[base + 3], th);
+                add_into(&mut x, &m);
+            }
         }
         xs.push(x.clone());
-        let logits = matmul(&x, &self.weights[4 * self.cfg.layers],
+        let logits = matmul(&x, &self.weights[spl * self.cfg.layers],
                             th);
-        Trace { xs, hs, logits }
+        Trace { xs, hs, gs, us, logits }
     }
 
     /// Exact backward matching [`exact_forward`](Self::exact_forward)
@@ -510,7 +600,8 @@ impl TrainLoop {
                       dws: &mut [Mat]) {
         let d = self.cfg.d_model;
         let th = self.cfg.threads;
-        let head = 4 * self.cfg.layers;
+        let spl = sites_per_layer(self.cfg.glu);
+        let head = spl * self.cfg.layers;
         let site_bwd = |site: usize, dy: &Mat, dws: &mut [Mat]| {
             add_into(&mut dws[site],
                      &matmul(&trace.xs[site].transpose(), dy, th));
@@ -518,10 +609,18 @@ impl TrainLoop {
         };
         let mut dx = site_bwd(head, dlogits, dws);
         for layer in (0..self.cfg.layers).rev() {
-            let base = 4 * layer;
-            let da = site_bwd(base + 3, &dx, dws);
-            let dh = relu_bwd(&da, &trace.hs[layer]);
-            add_into(&mut dx, &site_bwd(base + 2, &dh, dws));
+            let base = spl * layer;
+            if self.cfg.glu {
+                let da = site_bwd(base + 4, &dx, dws);
+                let (dgate, dup) =
+                    glu_bwd(&da, &trace.gs[layer], &trace.us[layer]);
+                add_into(&mut dx, &site_bwd(base + 3, &dup, dws));
+                add_into(&mut dx, &site_bwd(base + 2, &dgate, dws));
+            } else {
+                let da = site_bwd(base + 3, &dx, dws);
+                let dh = relu_bwd(&da, &trace.hs[layer]);
+                add_into(&mut dx, &site_bwd(base + 2, &dh, dws));
+            }
             let dv = site_bwd(base + 1, &dx, dws);
             let dqkv = scatter_cols(&dv, 3 * d, 2 * d);
             add_into(&mut dx, &site_bwd(base, &dqkv, dws));
@@ -561,33 +660,54 @@ impl TrainLoop {
                             -> (f64, StepReport) {
         let d = self.cfg.d_model;
         let layers = self.cfg.layers;
-        let head = 4 * layers;
+        let glu = self.cfg.glu;
+        let spl = sites_per_layer(glu);
+        let head = spl * layers;
         let mut x = self.embed_rows(inputs);
         let ms = match &mut self.engine {
             Engine::Quantized(ms) => ms,
             Engine::Exact => unreachable!("quantized microbatch"),
         };
         let mut hs = Vec::with_capacity(layers);
+        let mut gus = Vec::with_capacity(layers);
         for layer in 0..layers {
-            let base = 4 * layer;
+            let base = spl * layer;
             let qkv = ms.forward_site(base, &x);
             let v = take_cols(&qkv, 2 * d, 3 * d);
             let attn = ms.forward_site(base + 1, &v);
             add_into(&mut x, &attn);
-            let h = ms.forward_site(base + 2, &x);
-            let a = relu(&h);
-            hs.push(h);
-            let m = ms.forward_site(base + 3, &a);
-            add_into(&mut x, &m);
+            if glu {
+                let g = ms.forward_site(base + 2, &x);
+                let u = ms.forward_site(base + 3, &x);
+                let a = glu_mix(&g, &u);
+                gus.push((g, u));
+                let m = ms.forward_site(base + 4, &a);
+                add_into(&mut x, &m);
+            } else {
+                let h = ms.forward_site(base + 2, &x);
+                let a = relu(&h);
+                hs.push(h);
+                let m = ms.forward_site(base + 3, &a);
+                add_into(&mut x, &m);
+            }
         }
         let logits = ms.forward_site(head, &x);
         let (loss, _, dlogits) = softmax_ce(&logits, targets, mask);
         let mut dx = ms.backward_site(head, &dlogits);
         for layer in (0..layers).rev() {
-            let base = 4 * layer;
-            let da = ms.backward_site(base + 3, &dx);
-            let dh = relu_bwd(&da, &hs[layer]);
-            add_into(&mut dx, &ms.backward_site(base + 2, &dh));
+            let base = spl * layer;
+            if glu {
+                let da = ms.backward_site(base + 4, &dx);
+                let (g, u) = &gus[layer];
+                let (dgate, dup) = glu_bwd(&da, g, u);
+                add_into(&mut dx, &ms.backward_site(base + 3, &dup));
+                add_into(&mut dx,
+                         &ms.backward_site(base + 2, &dgate));
+            } else {
+                let da = ms.backward_site(base + 3, &dx);
+                let dh = relu_bwd(&da, &hs[layer]);
+                add_into(&mut dx, &ms.backward_site(base + 2, &dh));
+            }
             let dv = ms.backward_site(base + 1, &dx);
             let dqkv = scatter_cols(&dv, 3 * d, 2 * d);
             add_into(&mut dx, &ms.backward_site(base, &dqkv));
@@ -612,7 +732,9 @@ impl TrainLoop {
             .collect();
         let mut loss_sum = 0.0f64;
         let mut fb_sum = 0.0f64;
+        let mut fb32_sum = 0.0f64;
         let mut fb_n = 0usize;
+        let mut hist: Option<Vec<u64>> = None;
         let (mut hits, mut misses) = (0u64, 0u64);
         for _ in 0..self.cfg.accum {
             let tb = self.loader.next_batch();
@@ -623,7 +745,16 @@ impl TrainLoop {
                 misses += rep.cache_misses;
                 for s in &rep.sites {
                     fb_sum += s.fallback_rate;
+                    fb32_sum += s.fallback_rate_f32;
                     fb_n += 1;
+                    if let Some(h) = &s.outlier_hist {
+                        let acc = hist.get_or_insert_with(|| {
+                            vec![0u64; h.len()]
+                        });
+                        for (a, &v) in acc.iter_mut().zip(h) {
+                            *a += v;
+                        }
+                    }
                 }
             }
         }
@@ -666,6 +797,12 @@ impl TrainLoop {
             } else {
                 fb_sum / fb_n as f64
             },
+            fallback_rate_f32: if fb_n == 0 {
+                0.0
+            } else {
+                fb32_sum / fb_n as f64
+            },
+            outlier_hist: hist,
             cache_hits: hits,
             cache_misses: misses,
             quants: q1.wrapping_sub(q0),
@@ -673,16 +810,21 @@ impl TrainLoop {
         };
         let mut log_failed = false;
         if let Some(log) = &mut self.log {
-            log_failed = log
-                .log(stats.step, &[
-                    ("loss", stats.loss),
-                    ("grad_norm", stats.grad_norm),
-                    ("lr", stats.lr),
-                    ("fallback_rate", stats.fallback_rate),
-                    ("cache_hits", stats.cache_hits as f64),
-                    ("cache_misses", stats.cache_misses as f64),
-                ])
-                .is_err();
+            let mut kv = vec![
+                ("loss", stats.loss),
+                ("grad_norm", stats.grad_norm),
+                ("lr", stats.lr),
+                ("fallback_rate", stats.fallback_rate),
+                ("fallback_rate_f32", stats.fallback_rate_f32),
+                ("cache_hits", stats.cache_hits as f64),
+                ("cache_misses", stats.cache_misses as f64),
+            ];
+            if let Some(h) = &stats.outlier_hist {
+                for (i, &v) in h.iter().enumerate() {
+                    kv.push((HIST_KEYS[i], v as f64));
+                }
+            }
+            log_failed = log.log(stats.step, &kv).is_err();
         }
         if log_failed {
             eprintln!("train: metrics log write failed — \
@@ -720,6 +862,9 @@ impl TrainLoop {
         obj(vec![
             ("kind", Json::Str(TRAIN_STATE_KIND.into())),
             ("version", Json::Num(TRAIN_STATE_VERSION)),
+            // the precision-format record: which rung of the lattice
+            // produced this run's arithmetic
+            ("format", Json::Str(self.cfg.path.tag().into())),
             ("step", Json::Num(self.step as f64)),
             ("config", obj(vec![
                 ("layers", Json::Num(self.cfg.layers as f64)),
@@ -729,6 +874,7 @@ impl TrainLoop {
                 ("batch", Json::Num(self.cfg.batch as f64)),
                 ("seq", Json::Num(self.cfg.seq as f64)),
                 ("block", Json::Num(self.cfg.block as f64)),
+                ("glu", Json::Bool(self.cfg.glu)),
                 ("accum", Json::Num(self.cfg.accum as f64)),
                 ("init_seed",
                  Json::Str(format!("{:016x}", self.cfg.init_seed))),
@@ -755,11 +901,13 @@ impl TrainLoop {
     }
 
     /// Restore a run. Strict on purpose: wrong `kind`, any version
-    /// other than [`TRAIN_STATE_VERSION`] (v1 files have no
-    /// optimizer state to resume from), a config fingerprint
-    /// mismatch, or a loader whose seed differs from the saved one
-    /// all fail loudly. The resumed run continues bit-identically
-    /// to the uninterrupted original.
+    /// other than [`TRAIN_STATE_VERSION`] (older files are
+    /// pre-lattice snapshots — v1 additionally has no optimizer
+    /// state to resume from), a missing / unknown / mismatched
+    /// precision-format record, a config fingerprint mismatch, or a
+    /// loader whose seed differs from the saved one all fail
+    /// loudly. The resumed run continues bit-identically to the
+    /// uninterrupted original.
     pub fn from_checkpoint(cfg: TrainLoopConfig, mut loader: Loader,
                            state: &Json)
                            -> Result<TrainLoop, String> {
@@ -771,12 +919,50 @@ impl TrainLoop {
         }
         let version =
             state.get("version").and_then(|v| v.as_f64());
-        if version != Some(TRAIN_STATE_VERSION) {
+        match version {
+            Some(v) if v == TRAIN_STATE_VERSION => {}
+            Some(v) if v < TRAIN_STATE_VERSION => {
+                return Err(format!(
+                    "train checkpoint: version {v} is a pre-lattice \
+                     snapshot (no precision-format record; v1 also \
+                     predates optimizer state) — this build reads \
+                     only version {TRAIN_STATE_VERSION}; re-save \
+                     the checkpoint with this build"
+                ));
+            }
+            _ => {
+                return Err(format!(
+                    "train checkpoint: unsupported version \
+                     {version:?} (this build reads only version \
+                     {TRAIN_STATE_VERSION})"
+                ));
+            }
+        }
+        let fmt = match state.get("format").and_then(|v| v.as_str())
+        {
+            None => {
+                return Err(
+                    "train checkpoint: missing 'format' — a \
+                     pre-lattice snapshot cannot say which rung of \
+                     the precision lattice produced it; re-save the \
+                     checkpoint with this build"
+                        .into(),
+                );
+            }
+            Some(s) => DataPath::from_tag(s).ok_or_else(|| {
+                format!(
+                    "train checkpoint: unknown precision format \
+                     {s:?}"
+                )
+            })?,
+        };
+        if fmt != cfg.path {
             return Err(format!(
-                "train checkpoint: unsupported version {version:?} \
-                 (this build reads only version \
-                 {TRAIN_STATE_VERSION}; version 1 files predate \
-                 optimizer state and cannot resume a run)"
+                "train checkpoint: recorded precision format '{}' \
+                 differs from the live config's '{}' (set \
+                 PALLAS_PATH to match or re-save the checkpoint)",
+                fmt.tag(),
+                cfg.path.tag()
             ));
         }
         let sc = state
@@ -799,6 +985,8 @@ impl TrainLoop {
             && field("batch")? == cfg.batch
             && field("seq")? == cfg.seq
             && field("block")? == cfg.block
+            && sc.get("glu").and_then(|v| v.as_bool())
+                == Some(cfg.glu)
             && field("accum")? == cfg.accum
             && saved_init == cfg.init_seed
             && sc.get("exact").and_then(|v| v.as_bool())
@@ -829,7 +1017,7 @@ impl TrainLoop {
             .ok_or("train checkpoint: missing loader 'cursor'")?;
         loader.seek(cursor as u64);
         let sites = model_linears(cfg.layers, cfg.d_model, cfg.d_ff,
-                                  false, cfg.vocab, cfg.tokens());
+                                  cfg.glu, cfg.vocab, cfg.tokens());
         let warr = state
             .get("weights")
             .and_then(|v| v.as_arr())
@@ -1057,5 +1245,112 @@ mod tests {
         let log = tl.log.as_ref().unwrap();
         assert_eq!(log.series["loss"].count, 2);
         assert_eq!(log.series["grad_norm"].count, 2);
+    }
+
+    #[test]
+    fn glu_quantized_and_exact_agree_at_init() {
+        // The SwiGLU surrogate trains through both engines with the
+        // same model: losses must be close at init, where
+        // quantization error is the only difference, and the GLU
+        // checkpoint must round-trip but reject a plain-MLP config.
+        let mut cfg = tiny_cfg();
+        cfg.glu = true;
+        assert_eq!(cfg.n_sites(), 6);
+        let mut q = TrainLoop::new(cfg.clone(), tiny_loader(5));
+        let mut ecfg = cfg.clone();
+        ecfg.exact = true;
+        let mut e = TrainLoop::new(ecfg, tiny_loader(5));
+        let sq = q.step_once();
+        let se = e.step_once();
+        assert!((sq.loss - se.loss).abs() < 0.5,
+                "quantized {} vs exact {}", sq.loss, se.loss);
+        assert!(sq.grad_norm > 0.0 && se.grad_norm > 0.0);
+        q.run(1);
+        let ck = q.checkpoint();
+        let tr = TrainLoop::from_checkpoint(
+            cfg.clone(), tiny_loader(5), &ck)
+            .unwrap();
+        assert_eq!(tr.step(), 2);
+        for (a, b) in q.weights().iter().zip(tr.weights()) {
+            assert_eq!(a.data, b.data);
+        }
+        let err = TrainLoop::from_checkpoint(
+            tiny_cfg(), tiny_loader(5), &ck)
+            .unwrap_err();
+        assert!(err.contains("fingerprint"), "{err}");
+    }
+
+    #[test]
+    fn telemetry_streams_tier_rates_and_histograms() {
+        let mut cfg = tiny_cfg();
+        cfg.telemetry = true;
+        let path = cfg.path;
+        let mut tl = TrainLoop::new(cfg, tiny_loader(4));
+        tl.attach_log(
+            MetricsLog::new("train_telemetry", None).unwrap());
+        let stats = tl.step_once();
+        let h = stats.outlier_hist.as_ref()
+            .expect("telemetry on => histogram present");
+        assert_eq!(h.len(), OUTLIER_HIST_BINS);
+        assert!(h.iter().sum::<u64>() > 0);
+        if path != DataPath::Int4 {
+            assert_eq!(stats.fallback_rate_f32, 0.0,
+                       "binary fallback has no f32 tier");
+        }
+        let log = tl.log.as_ref().unwrap();
+        assert_eq!(log.series["fallback_rate_f32"].count, 1);
+        let bins = (0..OUTLIER_HIST_BINS)
+            .filter(|&i| log.series.contains_key(HIST_KEYS[i]))
+            .count();
+        assert_eq!(bins, OUTLIER_HIST_BINS,
+                   "every histogram bin streams through the log");
+        // off by default: no histogram, no per-bin series
+        let mut plain = TrainLoop::new(tiny_cfg(), tiny_loader(4));
+        assert!(plain.step_once().outlier_hist.is_none());
+    }
+
+    #[test]
+    fn from_checkpoint_rejects_format_mismatch_and_pre_lattice() {
+        // Satellite: the training checkpoint carries the
+        // precision-format record; wrong rung, unknown tag, and
+        // pre-lattice files (missing record / old version) all fail
+        // loudly.
+        let mut tl = TrainLoop::new(tiny_cfg(), tiny_loader(8));
+        tl.run(1);
+        let ck = tl.checkpoint();
+        let cfg = tiny_cfg();
+        let restore = |st: &Json| {
+            TrainLoop::from_checkpoint(cfg.clone(), tiny_loader(8),
+                                       st)
+        };
+        let other = if cfg.path == DataPath::Int4 { "int8" }
+                    else { "int4" };
+        let mut wrong = ck.clone();
+        if let Json::Obj(f) = &mut wrong {
+            f.insert("format".into(), Json::Str(other.into()));
+        }
+        let err = restore(&wrong).unwrap_err();
+        assert!(err.contains("precision format")
+                && err.contains("PALLAS_PATH"), "{err}");
+        let mut junk = ck.clone();
+        if let Json::Obj(f) = &mut junk {
+            f.insert("format".into(), Json::Str("int2".into()));
+        }
+        let err = restore(&junk).unwrap_err();
+        assert!(err.contains("unknown precision format"), "{err}");
+        let mut missing = ck.clone();
+        if let Json::Obj(f) = &mut missing {
+            f.remove("format");
+        }
+        let err = restore(&missing).unwrap_err();
+        assert!(err.contains("pre-lattice"), "{err}");
+        let mut old = ck.clone();
+        if let Json::Obj(f) = &mut old {
+            f.insert("version".into(), Json::Num(2.0));
+        }
+        let err = restore(&old).unwrap_err();
+        assert!(err.contains("pre-lattice"), "{err}");
+        // the untouched checkpoint still restores
+        assert!(restore(&ck).is_ok());
     }
 }

@@ -15,7 +15,11 @@
 //! * block size at the `I8_EXACT_MAX_BS` exactness boundary,
 //! * saturated ±127 codes (the worst case for the sse2/avx2 i16-pair
 //!   scheme and the avx512vnni unsigned-offset correction),
-//! * zero-heavy codes and all-fallback u-masks.
+//! * zero-heavy codes and all-fallback u-masks,
+//! * nibble-packed i4 panels against full-range i8 codes on the A
+//!   side (the staged ladder's residual contract), odd widths (the
+//!   half-byte tail of the pack), and block size at the
+//!   `I4_EXACT_MAX_BS` nibble exactness boundary.
 //!
 //! Knobs (env):
 //! * `DBFQ_FUZZ_SEED` — base seed (default fixed); every failure
@@ -28,11 +32,12 @@ use std::time::{Duration, Instant};
 
 use dbfq::gemm::kernels::{self, Kernels};
 use dbfq::gemm::{
-    block_gemm_reference, fallback_gemm_reference, DataPath, GemmPlan,
+    block_gemm_reference, fallback_gemm_reference, int4_gemm_reference,
+    staged_gemm_reference, DataPath, GemmPlan, I4_EXACT_MAX_BS,
     I8_EXACT_MAX_BS,
 };
-use dbfq::quant::{block_quant, fallback_quant, Criterion, Rounding,
-                  INT8_LEVELS};
+use dbfq::quant::{block_quant, fallback_quant, staged_quant,
+                  Criterion, Rounding, INT4_LEVELS, INT8_LEVELS};
 use dbfq::util::rng::Pcg64;
 use dbfq::util::Mat;
 
@@ -300,6 +305,230 @@ fn fuzz_boundary_block_size_saturated() {
                      threads={threads}",
                     kn.name
                 );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// INT4 (nibble-packed) fuzzing
+// ---------------------------------------------------------------------
+
+/// Nibble codes in [-7, 7] per regime.
+fn rand_nibbles(n: usize, regime: Regime, rng: &mut Pcg64) -> Vec<i8> {
+    (0..n)
+        .map(|_| match regime {
+            Regime::Uniform => (rng.below(15) as i32 - 7) as i8,
+            Regime::Saturated => {
+                if rng.below(2) == 0 { 7 } else { -7 }
+            }
+            Regime::Sparse => match rng.below(8) {
+                0 => 7,
+                1 => -7,
+                _ => 0,
+            },
+        })
+        .collect()
+}
+
+/// Pack per-`(k, j)` codes (`codes[k * width + j]`) into the nibble
+/// panel layout the `dot*_i4` kernels read: row stride
+/// `width.div_ceil(2)`, low nibble = even column.
+fn pack_nibble_panel(codes: &[i8], k_rows: usize,
+                     width: usize) -> Vec<u8> {
+    let rw = width.div_ceil(2);
+    let mut out = vec![0u8; k_rows * rw];
+    for k in 0..k_rows {
+        for j in 0..width {
+            let c = (codes[k * width + j] as u8) & 0x0f;
+            let b = &mut out[k * rw + (j >> 1)];
+            *b |= if j & 1 == 0 { c } else { c << 4 };
+        }
+    }
+    out
+}
+
+/// One random i4 kernel-level case: a nibble-packed panel against
+/// **full i8-range** A codes (the staged ladder runs residual codes
+/// up to ±127 through the same tiles) on every backend's
+/// dot1/dot2/dot4 i4 slots vs the i64 reference over the unpacked
+/// codes.
+fn fuzz_i4_dot_case(case_seed: u64, backends: &[&'static Kernels]) {
+    let mut rng = Pcg64::new(case_seed);
+    let bs = [1usize, 2, 3, 4, 5, 7, 8, 12, 13, 16, 17, 31, 37, 61,
+              64, 101, 128, 251][rng.below(18)];
+    // odd widths matter here: they leave a half-empty tail byte
+    let width = 1 + rng.below(bs.min(67));
+    let k0 = bs * rng.below(3);
+    let a_stride = k0 + bs + rng.below(5);
+    let rows = 4;
+    let r = rng.below(2);
+    let regime = pick_regime(&mut rng);
+    let qa = rand_codes((r + rows) * a_stride, regime, &mut rng);
+    let codes = rand_nibbles((k0 + bs) * width, regime, &mut rng);
+    let panel = pack_nibble_panel(&codes, k0 + bs, width);
+    let want = ref_dot(&qa, a_stride, r, k0, bs, &codes, width, rows);
+
+    for &kn in backends {
+        for (tile_rows, dot) in
+            [(1usize, kn.dot_i4), (2, kn.dot2_i4), (4, kn.dot4_i4)]
+        {
+            let mut acci = vec![0i32; tile_rows * bs];
+            let mut acc = vec![0.0f32; tile_rows * bs];
+            dot(&qa, a_stride, r, k0, bs, &panel, width, &mut acci,
+                &mut acc);
+            for t in 0..tile_rows {
+                for j in 0..width {
+                    let w = want[t * width + j];
+                    assert_eq!(
+                        acci[t * bs + j] as i64, w,
+                        "backend {} i4 dot{tile_rows} acci \
+                         seed={case_seed:#x} bs={bs} width={width} \
+                         k0={k0} regime={regime:?} t={t} j={j}",
+                        kn.name
+                    );
+                    assert_eq!(
+                        acc[t * bs + j].to_bits(),
+                        (w as f32).to_bits(),
+                        "backend {} i4 dot{tile_rows} widen \
+                         seed={case_seed:#x} bs={bs} width={width} \
+                         t={t} j={j}",
+                        kn.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fuzz_i4_dot_tiles_vs_i64_reference() {
+    let backends = kernels::available();
+    let seed = base_seed() ^ 0x14_14;
+    let deadline = Instant::now() + budget();
+    let mut cases = 0u64;
+    while Instant::now() < deadline {
+        fuzz_i4_dot_case(seed.wrapping_add(cases), &backends);
+        cases += 1;
+    }
+    println!(
+        "kernel_fuzz i4 dot tiles: {cases} cases, seed {seed:#x}"
+    );
+    assert!(cases > 0);
+}
+
+/// One random i4 engine-level case: quantized matrices through the
+/// `DataPath::Int4` plan and the staged Int4→Int8→f32 ladder on
+/// every backend vs the exact i64 nibble references.
+fn fuzz_i4_engine_case(case_seed: u64, backends: &[&'static Kernels]) {
+    let mut rng = Pcg64::new(case_seed);
+    let bs = [3usize, 5, 7, 13, 16, 17, 31][rng.below(7)];
+    let dim = |rng: &mut Pcg64, bs: usize| match rng.below(4) {
+        0 => [7usize, 13, 23, 41, 53][rng.below(5)],
+        1 => bs * (1 + rng.below(3)),
+        _ => 1 + rng.below(3 * bs),
+    };
+    let (m, k, n) = (dim(&mut rng, bs), dim(&mut rng, bs),
+                    dim(&mut rng, bs));
+    let regime = pick_regime(&mut rng);
+    let a = mat_from_codes(m, k,
+                           &rand_nibbles(m * k, regime, &mut rng));
+    let b = mat_from_codes(k, n,
+                           &rand_nibbles(k * n, regime, &mut rng));
+    let qa = block_quant(&a, bs, INT4_LEVELS, Rounding::Nearest);
+    let qb = block_quant(&b, bs, INT4_LEVELS, Rounding::Nearest);
+    let c_ref = int4_gemm_reference(&qa, &qb);
+    // all-I4, mixed tiers, all-f32
+    let theta = match rng.below(3) {
+        0 => f32::INFINITY,
+        1 => -1.0,
+        _ => 5.0, // nibble-valued data: absmax ≤ 7, so ladder mixes
+    };
+    let sa = staged_quant(&a, theta, bs);
+    let s_ref = staged_gemm_reference(&sa, &qb);
+    let threads = 1 + rng.below(4);
+    for &kn in backends {
+        let c = GemmPlan::new_int8_path(&qa, &qb, threads,
+                                        DataPath::Int4)
+            .with_kernels(kn)
+            .execute();
+        assert_eq!(
+            c.data, c_ref.data,
+            "backend {} int4 vs i64 oracle seed={case_seed:#x} \
+             ({m},{k},{n}) bs={bs} regime={regime:?} \
+             threads={threads}",
+            kn.name
+        );
+        let s = GemmPlan::new_staged(&sa, &qb, threads)
+            .with_kernels(kn)
+            .execute();
+        assert_eq!(
+            s.data, s_ref.data,
+            "backend {} staged vs i64 oracle seed={case_seed:#x} \
+             ({m},{k},{n}) bs={bs} theta={theta} regime={regime:?} \
+             threads={threads}",
+            kn.name
+        );
+    }
+}
+
+#[test]
+fn fuzz_i4_engine_paths_vs_i64_oracle() {
+    let backends = kernels::available();
+    let seed = base_seed() ^ 0x57A6_ED;
+    let deadline = Instant::now() + budget();
+    let mut cases = 0u64;
+    while Instant::now() < deadline {
+        fuzz_i4_engine_case(seed.wrapping_add(cases), &backends);
+        cases += 1;
+    }
+    println!(
+        "kernel_fuzz i4 engine paths: {cases} cases, seed {seed:#x}"
+    );
+    assert!(cases > 0);
+}
+
+#[test]
+fn fuzz_i4_boundary_block_size_saturated() {
+    // The nibble exactness cliff edge: bs = I4_EXACT_MAX_BS with
+    // ±127 A codes (the staged residual worst case) against ±7
+    // panel codes puts each block dot at 18 872 · 127 · 7 =
+    // 16 777 208, just under 2²⁴ — one more element would break f32
+    // exactness in the widen. Kernel-level (a K that wide never
+    // appears as an engine block in the suites), few fixed cases.
+    let backends = kernels::available();
+    let bs = I4_EXACT_MAX_BS;
+    let seed = base_seed() ^ 0x14_B0_0D;
+    for case in 0..2u64 {
+        let mut rng = Pcg64::new(seed.wrapping_add(case));
+        let width = 1 + rng.below(6);
+        let qa = rand_codes(4 * bs, Regime::Saturated, &mut rng);
+        let codes = rand_nibbles(bs * width, Regime::Saturated,
+                                 &mut rng);
+        let panel = pack_nibble_panel(&codes, bs, width);
+        let want = ref_dot(&qa, bs, 0, 0, bs, &codes, width, 4);
+        for &kn in &backends {
+            let mut acci = vec![0i32; 4 * bs];
+            let mut acc = vec![0.0f32; 4 * bs];
+            (kn.dot4_i4)(&qa, bs, 0, 0, bs, &panel, width, &mut acci,
+                         &mut acc);
+            for t in 0..4 {
+                for j in 0..width {
+                    let w = want[t * width + j];
+                    assert_eq!(
+                        acci[t * bs + j] as i64, w,
+                        "backend {} i4 boundary acci case={case} \
+                         t={t} j={j}",
+                        kn.name
+                    );
+                    assert_eq!(
+                        acc[t * bs + j].to_bits(),
+                        (w as f32).to_bits(),
+                        "backend {} i4 boundary widen case={case} \
+                         t={t} j={j}",
+                        kn.name
+                    );
+                }
             }
         }
     }

@@ -1,0 +1,441 @@
+//! Cross-layer properties of the precision lattice
+//! (`DataPath::Int4`, the staged Int4→Int8→f32 fallback ladder, and
+//! the GLU activation sites).
+//!
+//! The contract under test: every rung of the lattice is **exact**
+//! against its i64 integer oracle within the paper block sizes
+//! (`bs ≤ I4_EXACT_MAX_BS` for nibble codes), and the staged ladder
+//! is **bit-neutral** to execution geometry — the same bits come out
+//! of every backend × thread-count × shard-count combination, at
+//! every layer of the stack (direct engine plans, cached
+//! `WeightPlan`s, `LayerStep`, `ModelStep`, and a full `TrainLoop`
+//! over the GLU surrogate), and across a warm-state save/restore.
+//! Every config here pins `cfg.path` explicitly, so the suite is
+//! stable under any `PALLAS_PATH` override (the CI int4 leg runs
+//! exactly this file under `PALLAS_PATH=int4`).
+
+use std::sync::Arc;
+
+use dbfq::data::Corpus;
+use dbfq::gemm::{grad_sr_seed, int4_gemm_reference, kernels,
+                 layer_sr_seed, site_reference,
+                 staged_gemm_reference, synth_microbatch, DataPath,
+                 GemmPlan, LayerStep, LayerStepConfig, ModelStep,
+                 ModelStepConfig, WeightPlan, I4_EXACT_MAX_BS};
+use dbfq::model::sites_per_layer;
+use dbfq::quant::{block_quant, staged_quant, Rounding, INT4_LEVELS};
+use dbfq::train::{Loader, TrainLoop, TrainLoopConfig};
+use dbfq::util::rng::Pcg64;
+use dbfq::util::Mat;
+
+const BLOCK: usize = 16;
+const THREADS: [usize; 3] = [1, 2, 4];
+const SHARDS: [usize; 2] = [1, 2];
+const PATHS: [DataPath; 3] =
+    [DataPath::Int4, DataPath::Int8, DataPath::SimF32];
+
+/// Outlier-bearing operands for the plain Int4 data path: spikes so
+/// nibble saturation is exercised, 40 cols / 16 block = 3 panels so
+/// S = 2 splits unevenly.
+fn operands(seed: u64) -> (Mat, Mat) {
+    let mut rng = Pcg64::new(seed);
+    let mut a = Mat::randn(48, 33, 1.0, &mut rng);
+    for i in 0..10 {
+        let n = a.data.len();
+        a.data[i * 131 % n] = 260.0;
+    }
+    let b = Mat::randn(33, 40, 1.0, &mut rng);
+    (a, b)
+}
+
+/// Operands for the staged ladder: two spike magnitudes so a single
+/// θ = 40 pins blocks on all three tiers (quiet → I4, 60-spikes →
+/// I8, 260-spikes → f32 via the κ = 4 promotion rule).
+fn staged_operands(seed: u64) -> (Mat, Mat) {
+    let mut rng = Pcg64::new(seed);
+    let mut a = Mat::randn(48, 33, 1.0, &mut rng);
+    let n = a.data.len();
+    for i in 0..10 {
+        a.data[i * 131 % n] = 260.0;
+        a.data[(i * 197 + 5) % n] = 60.0;
+    }
+    let b = Mat::randn(33, 40, 1.0, &mut rng);
+    (a, b)
+}
+
+#[test]
+fn int4_engine_matches_i64_oracle_everywhere() {
+    assert!(BLOCK <= I4_EXACT_MAX_BS,
+            "fixture block must sit inside the exactness bound");
+    let (a, b) = operands(0x14A7);
+    let qa = block_quant(&a, BLOCK, INT4_LEVELS, Rounding::Nearest);
+    let qb = block_quant(&b, BLOCK, INT4_LEVELS, Rounding::Nearest);
+    let exact = int4_gemm_reference(&qa, &qb);
+    for kn in kernels::available() {
+        for threads in THREADS {
+            for shards in SHARDS {
+                let c = GemmPlan::new_int8_path(&qa, &qb, threads,
+                                                DataPath::Int4)
+                    .with_kernels(kn)
+                    .with_shards(shards)
+                    .execute();
+                assert_eq!(
+                    c.data, exact.data,
+                    "int4 backend {} threads {threads} shards \
+                     {shards}",
+                    kn.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn staged_ladder_matches_i64_oracle_everywhere() {
+    let (a, b) = staged_operands(0x57A6);
+    let qb = block_quant(&b, BLOCK, INT4_LEVELS, Rounding::Nearest);
+    // θ sweep: all-I4, genuinely mixed, all-f32
+    for theta in [f32::INFINITY, 40.0, -1.0] {
+        let sa = staged_quant(&a, theta, BLOCK);
+        if theta == 40.0 {
+            // the fixture must exercise all three tiers at once
+            assert!(sa.rate_i8() > 0.0, "no promoted blocks");
+            assert!(sa.rate_i8() < 1.0, "no I4-tier blocks");
+            assert!(sa.rate_f32() > 0.0, "no f32-tier blocks");
+            assert!(sa.rate_i8() > sa.rate_f32(),
+                    "no I8-tier blocks (all promotions went to f32)");
+        }
+        if theta.is_infinite() {
+            assert_eq!(sa.rate_i8(), 0.0, "∞ must pin everything I4");
+        }
+        if theta < 0.0 {
+            assert_eq!(sa.rate_f32(), 1.0,
+                       "negative θ must pin everything f32");
+        }
+        let exact = staged_gemm_reference(&sa, &qb);
+        let qb_arc = Arc::new(qb.clone());
+        for kn in kernels::available() {
+            for threads in THREADS {
+                for shards in SHARDS {
+                    let tag = format!(
+                        "theta {theta} backend {} threads {threads} \
+                         shards {shards}",
+                        kn.name);
+                    let c = GemmPlan::new_staged(&sa, &qb, threads)
+                        .with_kernels(kn)
+                        .with_shards(shards)
+                        .execute();
+                    assert_eq!(c.data, exact.data, "staged {tag}");
+                    // same bits through the cached-weight entry point
+                    let wp =
+                        WeightPlan::new(qb_arc.clone(),
+                                        DataPath::Int4)
+                            .with_kernels(kn)
+                            .with_shards(shards);
+                    let cw = wp.plan_staged(&sa, threads).execute();
+                    assert_eq!(cw.data, exact.data,
+                               "weight-plan staged {tag}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn transposed_staged_ladder_matches_i64_oracle() {
+    // The dW orientation: `StagedQuant::transposed` is a pure
+    // permutation (no re-quantization), so the transposed ladder must
+    // stay pinned to the oracle on its own operand shapes.
+    let (a, _) = staged_operands(0x7D0A);
+    let mut rng = Pcg64::new(0x7D0B);
+    let bt = Mat::randn(48, 24, 1.0, &mut rng);
+    let qbt = block_quant(&bt, BLOCK, INT4_LEVELS, Rounding::Nearest);
+    let sa = staged_quant(&a, 40.0, BLOCK);
+    let sat = sa.transposed();
+    assert!(sat.rate_i8() > 0.0 && sat.rate_f32() > 0.0,
+            "transpose must preserve the tier mix");
+    let exact = staged_gemm_reference(&sat, &qbt);
+    for kn in kernels::available() {
+        for threads in THREADS {
+            for shards in SHARDS {
+                let c = GemmPlan::new_staged(&sat, &qbt, threads)
+                    .with_kernels(kn)
+                    .with_shards(shards)
+                    .execute();
+                assert_eq!(
+                    c.data, exact.data,
+                    "staged-T backend {} threads {threads} shards \
+                     {shards}",
+                    kn.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn lattice_layer_step_bit_identical_across_configs() {
+    for path in PATHS {
+        for glu in [false, true] {
+            // flat reference driver: threads 1, shards 1
+            let mut cfg = LayerStepConfig::new(16, 32, 16, BLOCK);
+            cfg.glu = glu;
+            cfg.threads = 1;
+            cfg.shards = 1;
+            cfg.path = path;
+            let mut rf = LayerStep::with_random_weights(cfg, 0x4A7);
+            let (acts, grads) =
+                synth_microbatch(rf.sites(), 29, 180.0);
+            let (ref_outs, ref_rep) = rf.microstep(&acts, &grads);
+            assert_eq!(ref_outs.len(), sites_per_layer(glu));
+            for kn in kernels::available() {
+                for threads in THREADS {
+                    for shards in SHARDS {
+                        let mut cfg =
+                            LayerStepConfig::new(16, 32, 16, BLOCK);
+                        cfg.glu = glu;
+                        cfg.threads = threads;
+                        cfg.shards = shards;
+                        cfg.path = path;
+                        let mut ls =
+                            LayerStep::with_random_weights(cfg,
+                                                           0x4A7)
+                                .with_kernels(kn);
+                        let (outs, rep) = ls.microstep(&acts,
+                                                       &grads);
+                        for (s, (x, y)) in
+                            outs.iter().zip(&ref_outs).enumerate()
+                        {
+                            let tag = format!(
+                                "site {s} path {} glu {glu} backend \
+                                 {} threads {threads} shards \
+                                 {shards}",
+                                path.tag(), kn.name);
+                            assert_eq!(x.y.data, y.y.data,
+                                       "y {tag}");
+                            assert_eq!(x.dx.data, y.dx.data,
+                                       "dx {tag}");
+                            assert_eq!(x.dw.data, y.dw.data,
+                                       "dw {tag}");
+                        }
+                        // the Algorithm-2-visible rates feed the
+                        // controller — they must be geometry-blind
+                        // too, or thresholds would drift apart
+                        for (s, (x, y)) in rep
+                            .sites
+                            .iter()
+                            .zip(&ref_rep.sites)
+                            .enumerate()
+                        {
+                            assert_eq!(
+                                x.fallback_rate.to_bits(),
+                                y.fallback_rate.to_bits(),
+                                "rate site {s} path {} glu {glu}",
+                                path.tag());
+                            assert_eq!(
+                                x.fallback_rate_f32.to_bits(),
+                                y.fallback_rate_f32.to_bits(),
+                                "f32 rate site {s} path {} glu \
+                                 {glu}",
+                                path.tag());
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn int4_model_step_and_warm_state_bit_identical() {
+    // ModelStep on the lattice floor with the GLU split: flat
+    // reference vs the geometry sweep, then a warm-state round trip
+    // at S = 2 that must resume bit-exactly.
+    let make_cfg = |threads: usize, shards: usize| {
+        let mut cfg = ModelStepConfig::new(1, 16, 32, 40, 16, BLOCK);
+        cfg.glu = true;
+        cfg.threads = threads;
+        cfg.shards = shards;
+        cfg.path = DataPath::Int4;
+        cfg
+    };
+    let mut rf = ModelStep::with_random_weights(make_cfg(1, 1), 0xB4);
+    let (acts, grads) = synth_microbatch(rf.sites(), 31, 180.0);
+    let mut ref_outs = Vec::new();
+    for _ in 0..2 {
+        let (o, _) = rf.microstep(&acts, &grads);
+        ref_outs.push(o);
+    }
+    for kn in kernels::available() {
+        for threads in [1usize, 2] {
+            for shards in SHARDS {
+                let mut ms = ModelStep::with_random_weights(
+                    make_cfg(threads, shards), 0xB4)
+                    .with_kernels(kn);
+                for (t, refs) in ref_outs.iter().enumerate() {
+                    let (outs, _) = ms.microstep(&acts, &grads);
+                    for (s, (x, y)) in
+                        outs.iter().zip(refs).enumerate()
+                    {
+                        let tag = format!(
+                            "site {s} microstep {t} backend {} \
+                             threads {threads} shards {shards}",
+                            kn.name);
+                        assert_eq!(x.y.data, y.y.data, "y {tag}");
+                        assert_eq!(x.dx.data, y.dx.data, "dx {tag}");
+                        assert_eq!(x.dw.data, y.dw.data, "dw {tag}");
+                    }
+                }
+            }
+        }
+    }
+    // warm-state round trip on the Int4 lattice (schema v2 records
+    // the precision format — same-format restore must succeed and
+    // resume at steady state with the exact continued bits)
+    let cfg = make_cfg(2, 2);
+    let shapes = ModelStep::with_random_weights(cfg.clone(), 0xB5);
+    let weights: Vec<Mat> = shapes
+        .sites()
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            let mut rng = Pcg64::new(0xB5 ^ (i as u64) << 17);
+            Mat::randn(l.k, l.n, 0.05, &mut rng)
+        })
+        .collect();
+    let mut ms = ModelStep::new(cfg.clone(), weights.clone());
+    ms.microstep(&acts, &grads);
+    let state = ms.warm_state(None);
+    let (mut restored, _) =
+        ModelStep::from_warm_state(cfg, weights, &state)
+            .expect("same-format Int4 restore must succeed");
+    let (cont, _) = ms.microstep(&acts, &grads);
+    let (rest, rep) = restored.microstep(&acts, &grads);
+    assert_eq!(rep.cache_misses, 0,
+               "restored Int4 process must start at steady state");
+    for (s, (x, y)) in cont.iter().zip(&rest).enumerate() {
+        assert_eq!(x.y.data, y.y.data, "restored y site {s}");
+        assert_eq!(x.dx.data, y.dx.data, "restored dx site {s}");
+        assert_eq!(x.dw.data, y.dw.data, "restored dw site {s}");
+    }
+}
+
+#[test]
+fn glu_model_step_matches_composed_site_references() {
+    // The GLU gate/up sites are ordinary linear sites to the engine:
+    // one glu=true ModelStep microstep must decompose exactly into
+    // per-site `site_reference` calls with the model's layer-
+    // namespaced SR seeds and the θ in effect at the microstep.
+    const THETA: f32 = 3.0;
+    for path in [DataPath::Int4, DataPath::Int8] {
+        let mut cfg = ModelStepConfig::new(2, 16, 32, 40, 16, BLOCK);
+        cfg.glu = true;
+        cfg.threads = 2;
+        cfg.path = path;
+        let spl = sites_per_layer(true);
+        let shapes =
+            ModelStep::with_random_weights(cfg.clone(), 0x61A);
+        let weights: Vec<Mat> = shapes
+            .sites()
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let mut rng = Pcg64::new(0x61A ^ (i as u64) << 9);
+                Mat::randn(l.k, l.n, 0.05, &mut rng)
+            })
+            .collect();
+        for kn in kernels::available() {
+            let mut ms =
+                ModelStep::new(cfg.clone(), weights.clone())
+                    .with_kernels(kn);
+            ms.controller_mut().thresholds.fill(THETA);
+            let (acts, grads) =
+                synth_microbatch(ms.sites(), 37, 180.0);
+            let (outs, _) = ms.microstep(&acts, &grads);
+            assert_eq!(outs.len(), spl * cfg.layers + 1);
+            for (i, l) in ms.sites().iter().enumerate() {
+                // site i's SR stream: layer-namespaced, with the LM
+                // head as "layer" `layers`, site 0 of its stream
+                let (layer, local) = if i < spl * cfg.layers {
+                    (i / spl, i % spl)
+                } else {
+                    (cfg.layers, 0)
+                };
+                let sr = Rounding::Stochastic(grad_sr_seed(
+                    layer_sr_seed(cfg.sr_seed, layer), 0, local));
+                let r = site_reference(l, &weights[i], &acts[i],
+                                       &grads[i], THETA, sr, BLOCK,
+                                       1, path, kn);
+                let tag = format!("site {i} path {} backend {}",
+                                  path.tag(), kn.name);
+                assert_eq!(outs[i].y.data, r.y.data, "y {tag}");
+                assert_eq!(outs[i].dx.data, r.dx.data, "dx {tag}");
+                assert_eq!(outs[i].dw.data, r.dw.data, "dw {tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn glu_train_loop_loss_curve_bit_identical_across_configs() {
+    // End-to-end acceptance: the GLU surrogate trains through
+    // TrainLoop on the lattice, and the whole loss curve (plus the
+    // controller-visible tier rates) is bit-identical across
+    // backend × thread × shard geometry.
+    const STEPS: usize = 2;
+    let corpus = Corpus::synthetic(400, 40, 11);
+    for path in [DataPath::Int4, DataPath::Int8] {
+        let make_cfg = |threads: usize, shards: usize| {
+            let mut cfg =
+                TrainLoopConfig::new(1, 16, 32, 40, 2, 4, BLOCK);
+            cfg.glu = true;
+            cfg.telemetry = true;
+            cfg.threads = threads;
+            cfg.shards = shards;
+            cfg.path = path;
+            cfg
+        };
+        let mut rf = TrainLoop::new(
+            make_cfg(1, 1),
+            Loader::pretrain(corpus.clone(), 2, 4, 77));
+        let ref_stats = rf.run(STEPS);
+        assert!(ref_stats[0].loss.is_finite());
+        let hist = ref_stats[0]
+            .outlier_hist
+            .as_ref()
+            .expect("telemetry must attach histograms");
+        assert!(hist.iter().sum::<u64>() > 0,
+                "histogram must count every block");
+        for kn in kernels::available() {
+            for threads in [1usize, 2] {
+                for shards in SHARDS {
+                    let mut tl = TrainLoop::new(
+                        make_cfg(threads, shards),
+                        Loader::pretrain(corpus.clone(), 2, 4, 77))
+                        .with_kernels(kn);
+                    let stats = tl.run(STEPS);
+                    for (t, (s, r)) in
+                        stats.iter().zip(&ref_stats).enumerate()
+                    {
+                        let tag = format!(
+                            "step {t} path {} backend {} threads \
+                             {threads} shards {shards}",
+                            path.tag(), kn.name);
+                        assert_eq!(s.loss.to_bits(),
+                                   r.loss.to_bits(),
+                                   "loss {tag}");
+                        assert_eq!(s.grad_norm.to_bits(),
+                                   r.grad_norm.to_bits(),
+                                   "grad_norm {tag}");
+                        assert_eq!(s.fallback_rate.to_bits(),
+                                   r.fallback_rate.to_bits(),
+                                   "rate {tag}");
+                        assert_eq!(s.fallback_rate_f32.to_bits(),
+                                   r.fallback_rate_f32.to_bits(),
+                                   "f32 rate {tag}");
+                        assert_eq!(s.outlier_hist, r.outlier_hist,
+                                   "hist {tag}");
+                    }
+                }
+            }
+        }
+    }
+}
